@@ -1,0 +1,94 @@
+//! End-to-end validation driver (DESIGN.md §E10; recorded in
+//! EXPERIMENTS.md).
+//!
+//! Loads the real TrailLM artifacts and serves a batched Poisson workload
+//! through every system of the paper's Fig 6 on the real PJRT runtime:
+//!
+//!   vLLM-FCFS · vLLM-SJF_BERT · TRAIL-BERT(c=0.8) · TRAIL(c=0.8)
+//!
+//! reporting mean/median latency, TTFT and throughput, plus the headline
+//! TRAIL-vs-FCFS ratios. All layers compose here: Pallas kernels inside
+//! the HLO artifacts, the JAX-authored model graphs, the PJRT runtime
+//! with device-resident state, and the Rust coordinator on top.
+//!
+//! ```bash
+//! cargo run --release --example e2e_serving -- --n 64 --rate 6
+//! ```
+
+use trail::config::Config;
+use trail::coordinator::{PjrtBackend, Policy, ServeConfig, ServingEngine};
+use trail::predictor::{Predictor, ProbePredictor};
+use trail::runtime::ProbeWeights;
+use trail::util::cli::Args;
+use trail::util::csv::{f, Table};
+use trail::workload::{gen_requests, ArrivalProcess};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_vec(std::env::args().skip(1).collect(), false);
+    let n = args.usize_or("n", 96);
+    let rate = args.f64_or("rate", 22.0);
+    let cfg = Config::load_default().map_err(anyhow::Error::msg)?;
+    let weights = ProbeWeights::load(&cfg)?;
+
+    let systems: Vec<(&str, Policy, bool)> = vec![
+        ("vLLM-FCFS", Policy::Fcfs, true),
+        ("vLLM-SJF_BERT", Policy::SjfPrompt, false),
+        ("TRAIL-BERT", Policy::Trail { c: 0.8 }, false),
+        ("TRAIL", Policy::Trail { c: 0.8 }, true),
+    ];
+
+    let mut table = Table::new(&[
+        "system", "mean_lat_s", "p50_lat_s", "mean_ttft_s", "p50_ttft_s",
+        "tok/s", "preempt", "discard",
+    ]);
+    let mut fcfs_lat = 0.0;
+    let mut fcfs_ttft = 0.0;
+    let mut trail_lat = 0.0;
+    let mut trail_ttft = 0.0;
+
+    for (name, policy, refined) in systems {
+        // Fresh backend per system: identical initial device state.
+        let backend = PjrtBackend::new(&cfg, true)?;
+        let mut pred = ProbePredictor::new(&cfg, &weights);
+        // TRAIL-BERT / SJF: static prompt-only predictions.
+        pred.refine = refined && matches!(policy, Policy::Trail { .. });
+        let predictor: Box<dyn Predictor> = Box::new(pred);
+        let serve = ServeConfig::new(&cfg, policy);
+        let mut engine = ServingEngine::new(&cfg, serve, backend, predictor);
+
+        let specs = gen_requests(&cfg, n, cfg.workload.serve_seed);
+        let arrivals = ArrivalProcess::Poisson { lambda: rate, seed: 0xE2E }.schedule(n);
+        eprintln!("[e2e] running {name} ({n} requests at {rate} req/s)…");
+        let rep = engine.run(specs, arrivals)?;
+        let s = rep.summary;
+        if name == "vLLM-FCFS" {
+            fcfs_lat = s.mean_latency;
+            fcfs_ttft = s.mean_ttft;
+        }
+        if name == "TRAIL" {
+            trail_lat = s.mean_latency;
+            trail_ttft = s.mean_ttft;
+        }
+        table.row(vec![
+            name.to_string(),
+            f(s.mean_latency, 3),
+            f(s.median_latency, 3),
+            f(s.mean_ttft, 3),
+            f(s.median_ttft, 3),
+            f(s.throughput_tok_s, 1),
+            s.preemptions.to_string(),
+            s.discards.to_string(),
+        ]);
+    }
+
+    println!("\n=== end-to-end serving, real PJRT runtime ===");
+    println!("{}", table.render());
+    println!(
+        "headline: TRAIL vs vLLM-FCFS — {:.2}x lower mean latency, {:.2}x lower mean TTFT",
+        fcfs_lat / trail_lat,
+        fcfs_ttft / trail_ttft
+    );
+    println!("(paper reports 1.66–2.01x latency, 1.76–24.07x TTFT on its A100 testbed)");
+    table.save("artifacts/e2e_serving.csv")?;
+    Ok(())
+}

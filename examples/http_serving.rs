@@ -1,0 +1,120 @@
+//! Client–server chatbot benchmark (paper §4 setup): an HTTP server
+//! hosting the model behind the TRAIL scheduler, and a closed-loop client
+//! pool firing the synthetic Alpaca-like workload at a Poisson rate.
+//!
+//! Runs both sides in one process for a self-contained demo:
+//!
+//! ```bash
+//! cargo run --release --example http_serving -- --n 32 --rate 4 [--mock]
+//! ```
+//!
+//! (For a standalone server use `trail-serve server --addr …` and point
+//! any HTTP client at POST /generate.)
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use trail::config::Config;
+use trail::coordinator::{MockBackend, PjrtBackend, Policy, ServeConfig, ServingEngine};
+use trail::predictor::{Predictor, ProbePredictor};
+use trail::runtime::ProbeWeights;
+use trail::server::http::{get_stats, post_generate};
+use trail::server::HttpServer;
+use trail::util::cli::Args;
+use trail::util::rng::SplitMix64;
+use trail::util::stats::Samples;
+use trail::util::threadpool::ThreadPool;
+use trail::workload::gen_requests;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_vec(std::env::args().skip(1).collect(), false);
+    let n = args.usize_or("n", 32);
+    let rate = args.f64_or("rate", 4.0);
+    let mock = args.has_flag("mock");
+    let cfg = Config::load_default().map_err(anyhow::Error::msg)?;
+
+    // --- server side ---
+    let (server, job_rx) = HttpServer::bind("127.0.0.1:0", 32)?;
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    let stats = server.stats();
+    println!("[server] listening on {addr} (policy trail-c0.8, {} backend)",
+             if mock { "mock" } else { "PJRT" });
+
+    let cfg2 = cfg.clone();
+    let engine_thread = std::thread::spawn(move || {
+        let weights = ProbeWeights::load(&cfg2).expect("probe weights");
+        let predictor: Box<dyn Predictor> = Box::new(ProbePredictor::new(&cfg2, &weights));
+        let serve = ServeConfig::new(&cfg2, Policy::Trail { c: 0.8 });
+        if mock {
+            let mut eng = ServingEngine::new(
+                &cfg2, serve, MockBackend::new(cfg2.model.batch_slots, &cfg2), predictor);
+            eng.run_online(job_rx).expect("engine")
+        } else {
+            let backend = PjrtBackend::new(&cfg2, true).expect("engine load");
+            let mut eng = ServingEngine::new(&cfg2, serve, backend, predictor);
+            eng.run_online(job_rx).expect("engine")
+        }
+    });
+    let accept_thread = {
+        let server = server;
+        std::thread::spawn(move || server.serve())
+    };
+
+    // --- client side: open-loop Poisson arrivals over a client pool ---
+    let specs = gen_requests(&cfg, n, cfg.workload.serve_seed ^ 0x477);
+    let mut rng = SplitMix64::new(0xC11E47);
+    let results: Arc<Mutex<(Samples, Samples)>> =
+        Arc::new(Mutex::new((Samples::new(), Samples::new())));
+    {
+        let pool = ThreadPool::new(64);
+        let t0 = std::time::Instant::now();
+        let mut next_at = 0.0f64;
+        for spec in specs {
+            next_at += rng.next_exp(rate);
+            let addr = addr.clone();
+            let results = Arc::clone(&results);
+            // Pace the arrival process on the client side.
+            while t0.elapsed().as_secs_f64() < next_at {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            pool.execute(move || {
+                let t_send = std::time::Instant::now();
+                match post_generate(&addr, &spec) {
+                    Ok((_server_lat, server_ttft)) => {
+                        let e2e = t_send.elapsed().as_secs_f64();
+                        let mut g = results.lock().unwrap();
+                        g.0.push(e2e);
+                        g.1.push(server_ttft);
+                    }
+                    Err(e) => eprintln!("[client] request {} failed: {e}", spec.rid),
+                }
+            });
+        }
+        // pool drop joins all in-flight clients.
+    }
+
+    let server_stats = get_stats(&addr)?;
+    println!("[server] /stats -> {}", server_stats.to_string());
+    let mut g = results.lock().unwrap();
+    println!(
+        "[client] {} ok — e2e latency mean {:.3}s p50 {:.3}s p95 {:.3}s | server TTFT mean {:.3}s",
+        g.0.len(),
+        g.0.mean(),
+        g.0.median(),
+        g.0.percentile(95.0),
+        g.1.mean(),
+    );
+
+    // Shut down: stop accepting, close the job channel via server drop.
+    stop.store(true, Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(&addr); // unblock accept
+    accept_thread.join().unwrap();
+    let report = engine_thread.join().unwrap();
+    println!(
+        "[server] engine served {} requests, {} iterations",
+        report.summary.n, report.n_iterations
+    );
+    let _ = stats;
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Runtime micro-profiler: per-call cost of each PJRT executable.
+//! The numbers recorded in EXPERIMENTS.md §Perf come from this tool.
+//!
+//! ```bash
+//! cargo run --release --example perf_micro [-- --artifacts <dir>]
+//! ```
+
+use trail::config::Config;
+use trail::runtime::Engine;
+use trail::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_vec(std::env::args().skip(1).collect(), false);
+    let cfg = match args.get("artifacts") {
+        Some(dir) => Config::load(dir).map_err(anyhow::Error::msg)?,
+        None => Config::load_default().map_err(anyhow::Error::msg)?,
+    };
+    let t0 = std::time::Instant::now();
+    let with_probe = std::path::Path::new(
+        &cfg.artifact_path(&cfg.artifacts.probe_weights)).exists();
+    let engine = Engine::load(&cfg, with_probe)?;
+    println!("load+compile: {:.1}s", t0.elapsed().as_secs_f64());
+
+    let mut state = engine.init_state()?;
+    let b = cfg.model.batch_slots;
+    let tokens = vec![42i32; b];
+    let active = vec![1f32; b];
+
+    for iters in [5usize, 100] {
+        let t = std::time::Instant::now();
+        for i in 0..iters {
+            let pos: Vec<i32> = (0..b).map(|_| (i % 200) as i32).collect();
+            state = engine.decode_step(state, &tokens, &pos, &active)?;
+        }
+        println!(
+            "decode_step x{iters}: {:.3} ms/call",
+            t.elapsed().as_secs_f64() * 1e3 / iters as f64
+        );
+    }
+    let t = std::time::Instant::now();
+    for _ in 0..100 {
+        let _ = engine.read(&state)?;
+    }
+    println!("readout: {:.3} ms/call", t.elapsed().as_secs_f64() * 1e3 / 100.0);
+
+    let t = std::time::Instant::now();
+    let chunk = vec![9i32; cfg.model.prefill_chunk];
+    for i in 0..50 {
+        state = engine.prefill_chunk(state, &chunk, 0, ((i * 16) % 280) as i32, 16)?;
+    }
+    println!("prefill_chunk: {:.3} ms/call", t.elapsed().as_secs_f64() * 1e3 / 50.0);
+
+    if with_probe {
+        let emb = vec![0.1f32; 8 * cfg.model.d_model];
+        let t = std::time::Instant::now();
+        for _ in 0..200 {
+            let _ = engine.predict_layer(4, &emb, 8)?;
+        }
+        println!(
+            "pjrt predictor b8: {:.1} us/call",
+            t.elapsed().as_secs_f64() * 1e6 / 200.0
+        );
+    }
+    // Derived capacity: tokens/s at a full decode batch.
+    Ok(())
+}

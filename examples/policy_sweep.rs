@@ -1,0 +1,49 @@
+//! Fast policy × load exploration over the mock backend with a virtual
+//! clock — compare FCFS against TRAIL across C values and loads without
+//! PJRT in the loop (thousands of scheduling decisions per second).
+//!
+//! ```bash
+//! POOL=0.35 cargo run --release --example policy_sweep
+//! ```
+
+use trail::config::Config;
+use trail::coordinator::{backend::CostModel, MockBackend, Policy, ServeConfig, ServingEngine};
+use trail::predictor::OraclePredictor;
+use trail::workload::{gen_requests, ArrivalProcess};
+
+fn run(cfg: &Config, policy: Policy, n: usize, lambda: f64, seed: u64) -> (f64, f64, u64, u64) {
+    let specs = gen_requests(cfg, n, seed);
+    let arrivals = ArrivalProcess::Poisson { lambda, seed: seed ^ 0xABCD }.schedule(n);
+    let backend = MockBackend::new(cfg.model.batch_slots, cfg).with_cost(CostModel {
+        decode_step: 1.0e-3,
+        prefill_chunk: 1.2e-3,
+        readout: 0.2e-3,
+    });
+    let mut serve = ServeConfig::new(cfg, policy);
+    serve.real_clock = false;
+    serve.pool_tokens = ((cfg.model.batch_slots * cfg.model.max_seq) as f64
+        * std::env::var("POOL").ok().and_then(|v| v.parse().ok()).unwrap_or(0.55))
+        as usize;
+    serve.max_iterations = 5_000_000;
+    let mut e = ServingEngine::new(cfg, serve, backend, Box::new(OraclePredictor::new(0.0, true, 7)));
+    let r = e.run(specs, arrivals).unwrap();
+    (
+        r.summary.mean_latency,
+        r.summary.mean_ttft,
+        r.summary.preemptions,
+        r.summary.discards,
+    )
+}
+
+fn main() {
+    let cfg = Config::load_default().unwrap();
+    for lam in [110.0, 130.0, 160.0] {
+        let f = run(&cfg, Policy::Fcfs, 300, lam, 11);
+        print!("lam={lam:>5}: fcfs lat {:.3} ttft {:.3} d={}", f.0, f.1, f.3);
+        for c in [0.2, 0.5, 0.8, 1.0] {
+            let t = run(&cfg, Policy::Trail { c }, 300, lam, 11);
+            print!(" | c={c}: lat {:.3} ttft {:.3} d={}", t.0, t.1, t.3);
+        }
+        println!();
+    }
+}

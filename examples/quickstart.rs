@@ -1,0 +1,67 @@
+//! Quickstart: load the AOT artifacts, serve a handful of requests with
+//! TRAIL scheduling on the real PJRT runtime, and print per-request
+//! results.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use trail::config::Config;
+use trail::coordinator::{PjrtBackend, Policy, ServeConfig, ServingEngine};
+use trail::predictor::ProbePredictor;
+use trail::runtime::ProbeWeights;
+use trail::workload::{gen_requests, ArrivalProcess};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configuration comes from artifacts/config.json — the single
+    //    source of truth written by `make artifacts`.
+    let cfg = Config::load_default().map_err(anyhow::Error::msg)?;
+    println!(
+        "TrailLM: {} layers, d={}, {} slots, state {:.1} MB",
+        cfg.model.n_layers,
+        cfg.model.d_model,
+        cfg.model.batch_slots,
+        cfg.layout.total as f64 * 4.0 / 1e6
+    );
+
+    // 2. The PJRT backend compiles the HLO-text artifacts once and keeps
+    //    the packed KV state on device across iterations.
+    let backend = PjrtBackend::new(&cfg, true)?;
+
+    // 3. TRAIL = SPRPT with limited preemption (c = 0.8) + the
+    //    embedding-probe predictor refined by Bayesian smoothing.
+    let weights = ProbeWeights::load(&cfg)?;
+    println!(
+        "probe: tap layer {} (refined MAE {:.1} tokens vs prompt-only {:.1})",
+        weights.best_layer,
+        weights.mae_by_layer[weights.best_layer].mae_refined,
+        weights.mae_by_layer[weights.best_layer].mae_bert,
+    );
+    let predictor = Box::new(ProbePredictor::new(&cfg, &weights));
+
+    let serve = ServeConfig::new(&cfg, Policy::Trail { c: 0.8 });
+    let mut engine = ServingEngine::new(&cfg, serve, backend, predictor);
+
+    // 4. A small Poisson workload from the synthetic Alpaca-like
+    //    generator (disjoint from the probe-training seed).
+    let n = 16;
+    let specs = gen_requests(&cfg, n, cfg.workload.serve_seed);
+    for s in &specs {
+        println!(
+            "  req {:2}  prompt {:2} tokens  output {:3} tokens",
+            s.rid,
+            s.prompt.len(),
+            s.true_output_len
+        );
+    }
+    let arrivals = ArrivalProcess::Poisson { lambda: 4.0, seed: 7 }.schedule(n);
+
+    let report = engine.run(specs, arrivals)?;
+    let s = report.summary;
+    println!("\nserved {} requests in {:.2}s ({} engine iterations)", s.n, report.wall_time, report.n_iterations);
+    println!("mean latency {:.3}s   median {:.3}s", s.mean_latency, s.median_latency);
+    println!("mean TTFT    {:.3}s   median {:.3}s", s.mean_ttft, s.median_ttft);
+    println!("throughput   {:.1} tok/s  ({:.2} req/s)", s.throughput_tok_s, s.throughput_req_s);
+    println!("preemptions {}  discards {}  peak KV {} tokens", s.preemptions, s.discards, s.peak_mem_tokens);
+    Ok(())
+}

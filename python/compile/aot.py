@@ -1,0 +1,189 @@
+"""AOT pipeline: lower every graph to HLO *text* and emit the config /
+weights / golden interchange files for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE, here; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import probe as P
+from .config import LAYOUT, MODEL, PROBE, config_dict
+from .workload import golden_vectors
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    """``return_tuple=False`` for single-output graphs (step/prefill):
+    the root is then the bare state array, so the Rust runtime can feed
+    the output PjRtBuffer of one call directly into the next ``execute_b``
+    with zero host traffic (DESIGN.md §1 packed-state design). The
+    readout graph uses ``return_tuple=True`` and is decomposed on the
+    host (it only carries a few KB)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    # print_large_constants=True: the model weights are baked into the
+    # graph as constants; the default printer elides them as '{...}' which
+    # the text parser cannot round-trip.
+    return comp.as_hlo_text(True)
+
+
+def lower_to_file(fn, args, path: str, name: str, return_tuple: bool = False,
+                  donate_state: bool = False) -> int:
+    t0 = time.time()
+    # donate_argnums=(0,) marks the packed state as input/output-aliased;
+    # XLA then performs the per-step KV writes in place instead of copying
+    # the 10.5 MB buffer (EXPERIMENTS.md §Perf L2). The Rust runtime moves
+    # the buffer through each call, matching donation semantics.
+    jitted = jax.jit(fn, donate_argnums=(0,)) if donate_state else jax.jit(fn)
+    text = to_hlo_text(jitted.lower(*args), return_tuple)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] {name}: {len(text)/1e6:.2f} MB HLO text "
+          f"({time.time()-t0:.1f}s) -> {path}", flush=True)
+    return len(text)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def emit_model_artifacts(params, outdir: str, use_pallas: bool = True):
+    cfg, lay = MODEL, LAYOUT
+    b, c = cfg.batch_slots, cfg.prefill_chunk
+
+    step = M.make_decode_step(params, use_pallas=use_pallas)
+    lower_to_file(step, (f32(lay.total), i32(b), i32(b), f32(b)),
+                  os.path.join(outdir, "model_step.hlo.txt"), "decode_step",
+                  donate_state=True)
+
+    chunk = M.make_prefill_chunk(params, use_pallas=use_pallas)
+    lower_to_file(chunk, (f32(lay.total), i32(c), i32(), i32(), i32()),
+                  os.path.join(outdir, "model_prefill.hlo.txt"), "prefill_chunk",
+                  donate_state=True)
+
+    readout = M.make_readout()
+    lower_to_file(readout, (f32(lay.total),),
+                  os.path.join(outdir, "model_readout.hlo.txt"), "readout",
+                  return_tuple=True)
+
+    reset = M.make_slot_reset()
+    lower_to_file(reset, (f32(lay.total), i32()),
+                  os.path.join(outdir, "model_slot_reset.hlo.txt"), "slot_reset",
+                  donate_state=True)
+
+    pred = M.make_predictor(use_pallas=use_pallas)
+    d, hd, k = cfg.d_model, PROBE.hidden, 10
+    for n in (cfg.batch_slots,) + tuple(PROBE.table1_batches):
+        lower_to_file(
+            pred, (f32(n, d), f32(d, hd), f32(hd), f32(hd, k), f32(k)),
+            os.path.join(outdir, f"predictor_b{n}.hlo.txt"), f"predictor_b{n}")
+
+
+def emit_golden(params, outdir: str, use_pallas: bool = True):
+    """A golden serving trace the Rust runtime integration test replays:
+    two slots prefilled (one chunked), three decode steps, small slices of
+    every readout recorded."""
+    cfg, lay = MODEL, LAYOUT
+    step = jax.jit(M.make_decode_step(params, use_pallas=use_pallas))
+    chunk = jax.jit(M.make_prefill_chunk(params, use_pallas=use_pallas))
+    readout = jax.jit(M.make_readout())
+
+    state = jnp.zeros((lay.total,), jnp.float32)
+    prompt0 = [(i * 7) % 248 + 8 for i in range(20)]
+    prompt1 = [(i * 13) % 248 + 8 for i in range(9)]
+
+    c = cfg.prefill_chunk
+    pad = lambda ts: jnp.asarray((ts + [0] * c)[:c], jnp.int32)
+    state = chunk(state, pad(prompt0[:c]), 0, 0, min(c, 20))
+    state = chunk(state, pad(prompt0[c:]), 0, c, 20 - c)
+    state = chunk(state, pad(prompt1), 1, 0, 9)
+
+    trace = {"prompt0": prompt0, "prompt1": prompt1, "steps": []}
+    logits, taps, ptaps, nxt = readout(state)
+    pos = np.array([20, 9] + [0] * (cfg.batch_slots - 2), np.int32)
+    toks = np.array(nxt)
+
+    def snap(logits, taps, ptaps, nxt):
+        return {
+            "logits0": np.asarray(logits[0][:8]).tolist(),
+            "logits1": np.asarray(logits[1][:8]).tolist(),
+            "tap_l4_s0": np.asarray(taps[4, 0, :8]).tolist(),
+            "ptap_l0_s0": np.asarray(ptaps[0, 0, :8]).tolist(),
+            "argmax": np.asarray(nxt[:2]).tolist(),
+        }
+
+    trace["after_prefill"] = snap(logits, taps, ptaps, nxt)
+    for _ in range(3):
+        active = jnp.asarray([1.0, 1.0] + [0.0] * (cfg.batch_slots - 2))
+        state = step(state, jnp.asarray(toks), jnp.asarray(pos), active)
+        logits, taps, ptaps, nxt = readout(state)
+        trace["steps"].append(snap(logits, taps, ptaps, nxt))
+        toks = np.array(nxt)
+        pos = pos + 1
+
+    golden = golden_vectors()
+    golden["decode_trace"] = trace
+    with open(os.path.join(outdir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"[aot] golden.json written", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with the pure-jnp reference path instead of "
+                         "the Pallas kernels (perf-pass ablation)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small probe run (CI/tests)")
+    ap.add_argument("--skip-probe", action="store_true")
+    args = ap.parse_args()
+    outdir = args.outdir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+    use_pallas = not args.no_pallas
+
+    t0 = time.time()
+    params = M.init_params()
+    print(f"[aot] TrailLM: {M.param_count()} params, "
+          f"state {LAYOUT.total * 4 / 1e6:.1f} MB", flush=True)
+
+    with open(os.path.join(outdir, "config.json"), "w") as f:
+        json.dump(config_dict(), f, indent=1)
+
+    emit_model_artifacts(params, outdir, use_pallas)
+    emit_golden(params, outdir, use_pallas)
+
+    if not args.skip_probe:
+        if args.quick:
+            P.run(params, outdir, n_requests=48, train_steps=200)
+        else:
+            P.run(params, outdir)
+
+    # Marker consumed by the Makefile's up-to-date check.
+    with open(os.path.join(outdir, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print(f"[aot] done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""Single source of truth for model / workload / artifact configuration.
+
+Every dimension, offset and distribution parameter used by the Rust
+coordinator is derived here and exported to ``artifacts/config.json`` by
+``aot.py``; the Rust side never hard-codes a shape.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """TrailLM — a small Llama-style transformer (see DESIGN.md §2)."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 8
+    n_heads: int = 4
+    d_head: int = 16
+    d_ff: int = 128          # SwiGLU hidden width
+    max_seq: int = 320       # per-slot KV capacity (prompt + output + margin)
+    batch_slots: int = 8     # decode batch width B (fixed at AOT time)
+    prefill_chunk: int = 16  # chunked-prefill tokens per call
+    rope_theta: float = 10000.0
+    weight_seed: int = 0x7EA11  # "TRAIL"-ish; model weights are a fixed fn of this
+
+    # --- special tokens ---
+    pad_id: int = 0
+    bos_id: int = 1
+    eos_id: int = 2
+    first_content_id: int = 8  # ids >= this carry workload signal
+
+    @property
+    def kv_elems(self) -> int:
+        # [L, 2, B, H, S, Dh]
+        return (
+            self.n_layers * 2 * self.batch_slots * self.n_heads
+            * self.max_seq * self.d_head
+        )
+
+    @property
+    def n_taps(self) -> int:
+        """Probe tap points: embedding output (layer 0) + after each block."""
+        return self.n_layers + 1
+
+
+@dataclass(frozen=True)
+class BinConfig:
+    """Equal-width length bins (paper §3.1; 512/10 there, 256/10 here)."""
+
+    n_bins: int = 10
+    max_len: int = 256
+
+    @property
+    def width(self) -> float:
+        return self.max_len / self.n_bins
+
+    def bin_of(self, length: float) -> int:
+        b = int(length / self.width)
+        return min(max(b, 0), self.n_bins - 1)
+
+    def midpoint(self, i: int) -> float:
+        return (i + 0.5) * self.width
+
+    @property
+    def midpoints(self) -> List[float]:
+        return [self.midpoint(i) for i in range(self.n_bins)]
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    """Synthetic Alpaca-like workload (DESIGN.md §2 substitution table)."""
+
+    min_prompt: int = 8
+    max_prompt: int = 48
+    min_output: int = 4
+    max_output: int = 256
+    # Output length ~ round(LogNormal(mu, sigma)) clipped to the range above.
+    lognormal_mu: float = 3.85   # exp(3.85) ~ 47 tokens median
+    lognormal_sigma: float = 0.85
+    # Prompt tokens ~ class center +/- two-sided geometric offset.
+    geom_p: float = 0.18
+    # The prompt observes the length class only *noisily* (std in bins):
+    # real prompts under-determine response length, which is what makes
+    # static prompt-only (BERT/S^3) predictions decay (paper Fig 3).
+    class_jitter_sigma: float = 1.2
+    # Response token stream (dataset replay / teacher forcing): tokens
+    # encode coarse noisy progress — remaining length bucketed to
+    # `resp_bucket` tokens, replaced by a uniform content token with
+    # probability `resp_noise_p`. The probe must integrate these across
+    # steps (and combine with prompt + position via attention), which is
+    # the synthetic analogue of "the hidden state encodes the response the
+    # model has committed to".
+    resp_bucket: int = 24
+    resp_noise_p: float = 0.35
+    train_seed: int = 1001       # probe-training prompts
+    serve_seed: int = 9001       # served prompts (disjoint, like the paper)
+
+
+@dataclass(frozen=True)
+class ProbeConfig:
+    """Remaining-length probe MLP (paper: 2-layer MLP, hidden 512)."""
+
+    hidden: int = 64
+    epochs: int = 30
+    batch_size: int = 256
+    lr: float = 0.01
+    weight_decay: float = 1e-4
+    n_profile_requests: int = 1200  # ~1k train + val split, as in Fig 2
+    val_frac: float = 0.15
+    train_steps_cap: int = 4000     # per layer, keeps `make artifacts` bounded
+    table1_batches: tuple = (512, 1024, 2048)
+
+
+@dataclass(frozen=True)
+class StateLayout:
+    """Offsets (in f32 elements) into the packed device state tensor.
+
+    state = [ kv | logits | taps | prompt_tap_sum | prompt_tap_cnt ]
+    """
+
+    kv_off: int
+    kv_len: int
+    logits_off: int
+    logits_len: int
+    taps_off: int
+    taps_len: int
+    ptap_off: int
+    ptap_len: int
+    pcnt_off: int
+    pcnt_len: int
+    total: int
+
+
+def make_layout(m: ModelConfig) -> StateLayout:
+    kv = m.kv_elems
+    logits = m.batch_slots * m.vocab
+    taps = m.n_taps * m.batch_slots * m.d_model
+    ptap = m.n_taps * m.batch_slots * m.d_model
+    pcnt = m.batch_slots
+    off = 0
+    kv_off = off; off += kv
+    logits_off = off; off += logits
+    taps_off = off; off += taps
+    ptap_off = off; off += ptap
+    pcnt_off = off; off += pcnt
+    return StateLayout(
+        kv_off=kv_off, kv_len=kv,
+        logits_off=logits_off, logits_len=logits,
+        taps_off=taps_off, taps_len=taps,
+        ptap_off=ptap_off, ptap_len=ptap,
+        pcnt_off=pcnt_off, pcnt_len=pcnt,
+        total=off,
+    )
+
+
+MODEL = ModelConfig()
+BINS = BinConfig()
+WORKLOAD = WorkloadConfig()
+PROBE = ProbeConfig()
+LAYOUT = make_layout(MODEL)
+
+
+def config_dict() -> dict:
+    """The JSON document consumed by the Rust coordinator."""
+    return {
+        "model": asdict(MODEL),
+        "bins": {
+            "n_bins": BINS.n_bins,
+            "max_len": BINS.max_len,
+            "width": BINS.width,
+            "midpoints": BINS.midpoints,
+        },
+        "workload": asdict(WORKLOAD),
+        "probe": {
+            "hidden": PROBE.hidden,
+            "table1_batches": list(PROBE.table1_batches),
+        },
+        "layout": asdict(LAYOUT),
+        "artifacts": {
+            "step": "model_step.hlo.txt",
+            "prefill": "model_prefill.hlo.txt",
+            "readout": "model_readout.hlo.txt",
+            "predictor_prefix": "predictor_b",
+            "probe_weights": "probe_weights.json",
+            "golden": "golden.json",
+        },
+    }

@@ -1,0 +1,240 @@
+"""Pallas attention kernels (L1) — the paper's serving hot spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA decode
+attention of the paper's testbed (one warp per head streaming KV pages
+from HBM) is re-thought for the TPU memory hierarchy Pallas exposes:
+
+* the grid is over batch slots — BlockSpec stages one slot's KV
+  (``[H, S, Dh]`` = 80 KiB at the default config) from HBM into VMEM per
+  grid step;
+* inside the kernel an *online-softmax* loop walks the sequence in tiles
+  of ``SEQ_TILE`` so the working set per tile stays MXU-shaped
+  (``[H, tile] x [H, tile, Dh]`` contractions) and the kernel scales to
+  caches larger than VMEM by shrinking the staged block;
+* sequence-length masking replaces the page table: slots are fixed-stride
+  so the HBM<->VMEM schedule is entirely static.
+
+All kernels are lowered with ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls); correctness is asserted against
+``ref.py`` and real-TPU efficiency is *estimated* from the block shapes in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sequence tile for the in-kernel online-softmax loop. 64 keys x 4 heads x
+# 16 dims x 4 B = 16 KiB staged per tile step — comfortably double-
+# bufferable in VMEM while keeping the contraction MXU-friendly.
+SEQ_TILE = 64
+
+NEG_BIG = -1e30
+
+
+def _online_softmax_tiles(q, k, v, valid_len, seq_tile):
+    """Shared online-softmax accumulation over sequence tiles.
+
+    q: [H, Dh]; k, v: [H, S, Dh]; valid_len: scalar int32.
+    Returns [H, Dh]. Tiles are unrolled (S and seq_tile are static).
+    """
+    h, s, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    m = jnp.full((h, 1), NEG_BIG, q.dtype)      # running max
+    l = jnp.zeros((h, 1), q.dtype)              # running sum-exp
+    acc = jnp.zeros((h, dh), q.dtype)           # running weighted sum
+    n_tiles = (s + seq_tile - 1) // seq_tile
+    for t in range(n_tiles):
+        lo = t * seq_tile
+        kt = k[:, lo:lo + seq_tile, :]           # [H, T, Dh]
+        vt = v[:, lo:lo + seq_tile, :]
+        scores = jnp.einsum("hd,htd->ht", q, kt) * scale
+        idx = lo + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        in_len = idx < valid_len
+        scores = jnp.where(in_len, scores, NEG_BIG)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        # Explicit mask: when every key so far is invalid, m_new == NEG_BIG
+        # and exp(scores - m_new) would be 1, not 0.
+        p = jnp.where(in_len, jnp.exp(scores - m_new), 0.0)
+        # Renormalise the running state and fold in this tile.
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("ht,htd->hd", p, vt)
+        m = m_new
+    return acc / jnp.maximum(l, 1e-30)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, *, seq_tile):
+    q = q_ref[0]                                  # [H, Dh]
+    k = k_ref[0]                                  # [H, S, Dh]
+    v = v_ref[0]
+    valid = lens_ref[0]
+    o_ref[0] = _online_softmax_tiles(q, k, v, valid, seq_tile)
+
+
+def decode_attention(q, k, v, lens, *, seq_tile=SEQ_TILE, interpret=True,
+                     grid_mode="fused"):
+    """Pallas decode attention. Same contract as ``ref.decode_attention_ref``.
+
+    q: [B, H, Dh]; k, v: [B, H, S, Dh]; lens: [B] int32 -> [B, H, Dh].
+
+    ``grid_mode``:
+      * ``"slots"`` — grid over batch slots; each grid step stages one
+        slot's KV block into VMEM. This is the shape a real-TPU Mosaic
+        lowering would use (one slot's KV = 80 KiB per step).
+      * ``"fused"`` (default) — a single grid step with the batch
+        vectorised inside the kernel and the same online-softmax tile
+        loop over the sequence. Numerically identical; on the CPU
+        *interpreter* (the only executor available here) it avoids the
+        per-grid-step interpretation overhead, halving the serving
+        decode cost (EXPERIMENTS.md §Perf L1).
+    """
+    b, h, dh = q.shape
+    s = k.shape[2]
+    if grid_mode == "slots":
+        kernel = functools.partial(_decode_kernel, seq_tile=seq_tile)
+        return pl.pallas_call(
+            kernel,
+            grid=(b,),
+            in_specs=[
+                pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+                pl.BlockSpec((1, h, s, dh), lambda i: (i, 0, 0, 0)),
+                pl.BlockSpec((1,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+            interpret=interpret,
+        )(q, k, v, lens)
+    kernel = functools.partial(_decode_kernel_fused, seq_tile=seq_tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, h, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((b, h, s, dh), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((b, h, s, dh), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, h, dh), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, lens)
+
+
+def _decode_kernel_fused(q_ref, k_ref, v_ref, lens_ref, o_ref, *, seq_tile):
+    """Batch-vectorised online-softmax decode kernel (single grid step)."""
+    q = q_ref[...]                                # [B, H, Dh]
+    lens = lens_ref[...]                          # [B]
+    b, h, dh = q.shape
+    s = k_ref.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    m = jnp.full((b, h, 1), NEG_BIG, q.dtype)
+    l = jnp.zeros((b, h, 1), q.dtype)
+    acc = jnp.zeros((b, h, dh), q.dtype)
+    n_tiles = (s + seq_tile - 1) // seq_tile
+    for t in range(n_tiles):
+        lo = t * seq_tile
+        kt = k_ref[:, :, lo:lo + seq_tile, :]      # [B, H, T, Dh]
+        vt = v_ref[:, :, lo:lo + seq_tile, :]
+        scores = jnp.einsum("bhd,bhtd->bht", q, kt) * scale
+        idx = lo + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 2)
+        in_len = idx < lens[:, None, None]
+        scores = jnp.where(in_len, scores, NEG_BIG)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(in_len, jnp.exp(scores - m_new), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bht,bhtd->bhd", p, vt)
+        m = m_new
+    o_ref[...] = acc / jnp.maximum(l, 1e-30)
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, qpos_ref, lens_ref, o_ref, *, seq_tile):
+    # One grid step per chunk query token; heads vectorised inside.
+    q = q_ref[0]                                  # [H, Dh]
+    k = k_ref[...]                                # [H, S, Dh] (full block)
+    v = v_ref[...]
+    qp = qpos_ref[0]
+    valid = jnp.minimum(qp + 1, lens_ref[0])      # causal AND length mask
+    o_ref[0] = _online_softmax_tiles(q, k, v, valid, seq_tile)
+
+
+def prefill_attention(q, k, v, q_pos, lens, *, seq_tile=SEQ_TILE, interpret=True,
+                      grid_mode="tokens"):
+    """Pallas chunked-prefill attention for a single slot.
+
+    q: [C, H, Dh]; k, v: [H, S, Dh]; q_pos: [C] int32; lens: scalar int32
+    (broadcast to [1] for the kernel) -> [C, H, Dh].
+
+    ``grid_mode`` as in `decode_attention`: "tokens" (default) grids over
+    the chunk tokens; "fused" vectorises the chunk inside one grid step.
+    Unlike decode, the tokens grid measured *faster* under the CPU
+    interpreter (2.1 ms vs 16.7 ms per chunk) — kept as default
+    (EXPERIMENTS.md §Perf L1).
+    """
+    c, h, dh = q.shape
+    s = k.shape[1]
+    lens_arr = jnp.reshape(lens.astype(jnp.int32), (1,))
+    if grid_mode == "tokens":
+        kernel = functools.partial(_prefill_kernel, seq_tile=seq_tile)
+        return pl.pallas_call(
+            kernel,
+            grid=(c,),
+            in_specs=[
+                pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+                pl.BlockSpec((h, s, dh), lambda i: (0, 0, 0)),
+                pl.BlockSpec((h, s, dh), lambda i: (0, 0, 0)),
+                pl.BlockSpec((1,), lambda i: (i,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((c, h, dh), q.dtype),
+            interpret=interpret,
+        )(q, k, v, q_pos.astype(jnp.int32), lens_arr)
+    kernel = functools.partial(_prefill_kernel_fused, seq_tile=seq_tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((c, h, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((h, s, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((h, s, dh), lambda i: (0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((c, h, dh), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, q_pos.astype(jnp.int32), lens_arr)
+
+
+def _prefill_kernel_fused(q_ref, k_ref, v_ref, qpos_ref, lens_ref, o_ref, *, seq_tile):
+    """Chunk-vectorised online-softmax prefill kernel (one grid step)."""
+    q = q_ref[...]                                # [C, H, Dh]
+    qp = qpos_ref[...]                            # [C]
+    valid = jnp.minimum(qp + 1, lens_ref[0])      # causal AND length mask
+    c, h, dh = q.shape
+    s = k_ref.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    m = jnp.full((c, h, 1), NEG_BIG, q.dtype)
+    l = jnp.zeros((c, h, 1), q.dtype)
+    acc = jnp.zeros((c, h, dh), q.dtype)
+    n_tiles = (s + seq_tile - 1) // seq_tile
+    for t in range(n_tiles):
+        lo = t * seq_tile
+        kt = k_ref[:, lo:lo + seq_tile, :]        # [H, T, Dh]
+        vt = v_ref[:, lo:lo + seq_tile, :]
+        scores = jnp.einsum("chd,htd->cht", q, kt) * scale
+        idx = lo + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 2)
+        in_len = idx < valid[:, None, None]
+        scores = jnp.where(in_len, scores, NEG_BIG)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(in_len, jnp.exp(scores - m_new), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("cht,htd->chd", p, vt)
+        m = m_new
+    o_ref[...] = acc / jnp.maximum(l, 1e-30)

@@ -1,0 +1,55 @@
+"""Pallas probe-predictor MLP kernel (L1).
+
+The paper's length predictor is a 2-layer MLP run every decode iteration
+(and in large batches for Table 1). On TPU this is one fused VMEM-resident
+pass per batch tile: relu(x@W1+b1)@W2+b2 -> softmax, tiled over the batch
+so a tile's activations ([TILE, D] + [TILE, Hd]) stay in VMEM and each
+grid step is a pair of MXU contractions — instead of the paper's two CUDA
+kernel launches + softmax.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BATCH_TILE = 128
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]                       # [T, D]
+    h = jnp.maximum(x @ w1_ref[...] + b1_ref[...], 0.0)
+    logits = h @ w2_ref[...] + b2_ref[...]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def predictor_mlp(x, w1, b1, w2, b2, *, batch_tile=BATCH_TILE, interpret=True):
+    """Fused probe MLP. Same contract as ``ref.predictor_mlp_ref``.
+
+    x: [N, D] -> [N, K]. N is padded to a multiple of the tile internally.
+    """
+    n, d = x.shape
+    hd = w1.shape[1]
+    k = w2.shape[1]
+    tile = min(batch_tile, n)
+    pad = (-n) % tile
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    np_ = n + pad
+    out = pl.pallas_call(
+        _mlp_kernel,
+        grid=(np_ // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, hd), lambda i: (0, 0)),
+            pl.BlockSpec((hd,), lambda i: (0,)),
+            pl.BlockSpec((hd, k), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, k), x.dtype),
+        interpret=interpret,
+    )(xp, w1, b1, w2, b2)
+    return out[:n] if pad else out

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has an exact (up to float associativity)
+reference here; ``python/tests/test_kernels.py`` sweeps shapes/dtypes with
+hypothesis and asserts allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lens):
+    """Single-token attention against a per-slot KV cache.
+
+    Args:
+      q:    [B, H, Dh]     query for the current token of each slot.
+      k, v: [B, H, S, Dh]  per-slot KV cache (garbage beyond ``lens``).
+      lens: [B] int32      number of valid cache positions per slot
+                           (the current token's KV must already be written).
+    Returns:
+      [B, H, Dh] attention output.
+    """
+    s = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) * scale
+    mask = jnp.arange(s)[None, None, :] < lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    # Guard fully-masked rows (inactive slots): softmax of all -inf -> 0.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(mask, jnp.exp(scores - m), 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / jnp.maximum(z, 1e-30)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v)
+
+
+def prefill_attention_ref(q, k, v, q_pos, lens):
+    """Chunked-prefill attention: C queries attend causally to the cache.
+
+    Args:
+      q:     [C, H, Dh]   chunk queries (one slot).
+      k, v:  [H, S, Dh]   that slot's cache, chunk KV already written.
+      q_pos: [C] int32    absolute position of each query token.
+      lens:  int32        valid cache length (= start + n_valid).
+    Returns:
+      [C, H, Dh]
+    """
+    s = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("chd,hsd->chs", q, k) * scale
+    key_pos = jnp.arange(s)[None, None, :]
+    mask = (key_pos <= q_pos[:, None, None]) & (key_pos < lens)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(mask, jnp.exp(scores - m), 0.0)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / jnp.maximum(z, 1e-30)
+    return jnp.einsum("chs,hsd->chd", probs, v)
+
+
+def predictor_mlp_ref(x, w1, b1, w2, b2):
+    """Probe MLP: softmax(relu(x@w1+b1)@w2+b2).
+
+    Args:
+      x:  [N, D] embeddings.
+      w1: [D, Hd], b1: [Hd], w2: [Hd, K], b2: [K].
+    Returns:
+      [N, K] bin probabilities.
+    """
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    logits = h @ w2 + b2
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

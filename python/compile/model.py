@@ -1,0 +1,461 @@
+"""TrailLM (L2) — a small Llama-style transformer expressed as a
+packed-state step machine.
+
+Architecture (paper substitution table, DESIGN.md §2): RMSNorm + RoPE +
+multi-head attention + SwiGLU, pre-norm residual blocks — the same family
+as the paper's Llama3-8B-Instruct, scaled to ~0.4M parameters so a CPU
+PJRT backend sustains the serving loop.
+
+Three graphs are AOT-lowered for the Rust runtime (see ``aot.py``):
+
+* ``decode_step(state, tokens, pos, active) -> state`` — one iteration for
+  all B slots; KV written in-place (masked), logits + all-layer probe taps
+  stored into the state tensor.
+* ``prefill_chunk(state, tokens, slot, start, nvalid) -> state`` — one
+  chunk of one slot's prompt; accumulates per-layer prompt-tap sums.
+* ``readout(state) -> (logits, taps, prompt_taps, argmax)`` — the only
+  graph that returns host-visible values; everything heavy stays on
+  device (DESIGN.md §1, packed-state design).
+
+The pure-jnp batch paths at the bottom (``full_forward``,
+``generate_batch``) are used by the probe profiler and by tests as an
+independent oracle for the step graphs.
+"""
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import LAYOUT, MODEL, ModelConfig, StateLayout, make_layout
+from .kernels import attention as attn_k
+from .kernels import mlp as mlp_k
+from .kernels import ref as kref
+
+EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig = MODEL) -> Dict[str, jnp.ndarray]:
+    """Fixed, seeded random weights. The model is a *substrate*: scheduling
+    phenomena depend on the autoregressive loop structure, not on trained
+    weights (DESIGN.md §2). Weights are baked into the HLO as constants."""
+    key = jax.random.PRNGKey(cfg.weight_seed)
+    ks = jax.random.split(key, 4 + 8 * cfg.n_layers)
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.n_heads * cfg.d_head
+    w = 0.08
+
+    def nrm(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    params = {
+        "embed": nrm(ks[0], (cfg.vocab, d), 0.5),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    for l in range(cfg.n_layers):
+        o = 4 + 8 * l
+        params[f"l{l}.attn_norm"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.wq"] = nrm(ks[o + 0], (d, hd), w)
+        params[f"l{l}.wk"] = nrm(ks[o + 1], (d, hd), w)
+        params[f"l{l}.wv"] = nrm(ks[o + 2], (d, hd), w)
+        params[f"l{l}.wo"] = nrm(ks[o + 3], (hd, d), w)
+        params[f"l{l}.ffn_norm"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.wg"] = nrm(ks[o + 4], (d, f), w)
+        params[f"l{l}.wu"] = nrm(ks[o + 5], (d, f), w)
+        params[f"l{l}.wd"] = nrm(ks[o + 6], (f, d), w)
+    return params
+
+
+def param_count(cfg: ModelConfig = MODEL) -> int:
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.n_heads * cfg.d_head
+    per_layer = 2 * d + 3 * d * hd + hd * d + 2 * d * f + f * d
+    return cfg.vocab * d + d + cfg.n_layers * per_layer
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + EPS) * scale
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def rope(x, pos, cfg: ModelConfig = MODEL):
+    """Rotary embedding. x: [..., H, Dh], pos broadcastable to x[..., 0, 0]."""
+    dh = cfg.d_head
+    half = dh // 2
+    inv_freq = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / dh)
+    ang = pos[..., None, None].astype(jnp.float32) * inv_freq  # [..., 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(x, params, l, cfg):
+    """x: [..., D] -> q, k, v each [..., H, Dh]."""
+    shape = x.shape[:-1] + (cfg.n_heads, cfg.d_head)
+    q = (x @ params[f"l{l}.wq"]).reshape(shape)
+    k = (x @ params[f"l{l}.wk"]).reshape(shape)
+    v = (x @ params[f"l{l}.wv"]).reshape(shape)
+    return q, k, v
+
+
+def _ffn(x, params, l):
+    return (silu(x @ params[f"l{l}.wg"]) * (x @ params[f"l{l}.wu"])) @ params[f"l{l}.wd"]
+
+
+# ---------------------------------------------------------------------------
+# Packed-state helpers
+# ---------------------------------------------------------------------------
+
+def kv_shape(cfg: ModelConfig):
+    return (cfg.n_layers, 2, cfg.batch_slots, cfg.n_heads, cfg.max_seq, cfg.d_head)
+
+
+def unpack_kv(state, cfg: ModelConfig, lay: StateLayout):
+    return state[lay.kv_off:lay.kv_off + lay.kv_len].reshape(kv_shape(cfg))
+
+
+def pack_regions(state, lay: StateLayout, *, kv=None, logits=None, taps=None,
+                 ptap=None, pcnt=None):
+    """Rebuild the flat state with the given regions replaced."""
+    parts = []
+    for arr, off, ln in (
+        (kv, lay.kv_off, lay.kv_len),
+        (logits, lay.logits_off, lay.logits_len),
+        (taps, lay.taps_off, lay.taps_len),
+        (ptap, lay.ptap_off, lay.ptap_len),
+        (pcnt, lay.pcnt_off, lay.pcnt_len),
+    ):
+        parts.append(state[off:off + ln] if arr is None else arr.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Decode step graph
+# ---------------------------------------------------------------------------
+
+def _decode_attn(q, k, v, lens, use_pallas):
+    if use_pallas:
+        return attn_k.decode_attention(q, k, v, lens)
+    return kref.decode_attention_ref(q, k, v, lens)
+
+
+def make_decode_step(params, cfg: ModelConfig = MODEL, lay: StateLayout = LAYOUT,
+                     use_pallas: bool = True) -> Callable:
+    """decode_step(state, tokens[B] i32, pos[B] i32, active[B] f32) -> state.
+
+    ``pos[b]`` is the absolute position of the *input* token; its KV is
+    written at ``pos[b]`` and attention sees positions [0, pos[b]]. Inactive
+    slots (active==0) neither write KV nor disturb anything: their KV write
+    is masked out and their lens is 0 (attention output 0, logits garbage
+    that Rust ignores).
+    """
+    b, s = cfg.batch_slots, cfg.max_seq
+
+    hsd = cfg.n_heads * s * cfg.d_head
+
+    def write_kv_slot(state, layer, which, slot, pos_b, vec, act_b):
+        """Donation-friendly KV write: one [H, 1, Dh] block at
+        (layer, which, slot, :, pos_b, :) of the packed state. Inactive
+        slots keep the old value (read-modify-write of just the block)."""
+        base = lay.kv_off + ((layer * 2 + which) * b + slot) * hsd
+        # base is static (python ints): a static slice fuses better than
+        # dynamic_slice; only the position within the slot is dynamic.
+        kv3 = state[base:base + hsd].reshape(cfg.n_heads, s, cfg.d_head)
+        old = jax.lax.dynamic_slice(kv3, (0, pos_b, 0), (cfg.n_heads, 1, cfg.d_head))
+        new = jnp.where(act_b > 0, vec[:, None, :], old)
+        kv3 = jax.lax.dynamic_update_slice(kv3, new, (0, pos_b, 0))
+        return jax.lax.dynamic_update_slice(state, kv3.reshape(-1), (base,))
+
+    def step(state, tokens, pos, active):
+        x = params["embed"][tokens]                       # [B, D]
+        taps = [x]
+        lens = jnp.where(active > 0, pos + 1, 0).astype(jnp.int32)
+        for l in range(cfg.n_layers):
+            h = rmsnorm(x, params[f"l{l}.attn_norm"])
+            q, k, v = _qkv(h, params, l, cfg)             # [B, H, Dh]
+            q = rope(q, pos, cfg)
+            k = rope(k, pos, cfg)
+            # Per-slot DUS writes — with the state buffer donated these
+            # are in-place updates, not a 10.5 MB rewrite per step.
+            for slot in range(b):
+                state = write_kv_slot(state, l, 0, slot, pos[slot], k[slot], active[slot])
+                state = write_kv_slot(state, l, 1, slot, pos[slot], v[slot], active[slot])
+            lbase = lay.kv_off + l * 2 * b * hsd
+            lkv = state[lbase:lbase + 2 * b * hsd].reshape(
+                2, b, cfg.n_heads, s, cfg.d_head)
+            out = _decode_attn(q, lkv[0], lkv[1], lens, use_pallas)    # [B,H,Dh]
+            x = x + out.reshape(b, -1) @ params[f"l{l}.wo"]
+            x = x + _ffn(rmsnorm(x, params[f"l{l}.ffn_norm"]), params, l)
+            taps.append(x)
+        logits = rmsnorm(x, params["final_norm"]) @ params["embed"].T  # [B, V]
+        # Inactive slots must keep their previous logits/taps: a slot
+        # whose prefill completed this iteration carries its first-token
+        # logits there, and the decode step must not clobber them.
+        old_logits = state[lay.logits_off:lay.logits_off + lay.logits_len].reshape(b, -1)
+        old_taps = state[lay.taps_off:lay.taps_off + lay.taps_len].reshape(
+            cfg.n_taps, b, cfg.d_model)
+        am = active[:, None]
+        logits = logits * am + old_logits * (1.0 - am)
+        new_taps = jnp.stack(taps) * am[None] + old_taps * (1.0 - am[None])
+        state = jax.lax.dynamic_update_slice(state, logits.reshape(-1), (lay.logits_off,))
+        state = jax.lax.dynamic_update_slice(state, new_taps.reshape(-1), (lay.taps_off,))
+        return state
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Prefill chunk graph
+# ---------------------------------------------------------------------------
+
+def _prefill_attn(q, k, v, q_pos, lens, use_pallas):
+    if use_pallas:
+        return attn_k.prefill_attention(q, k, v, q_pos, lens)
+    return kref.prefill_attention_ref(q, k, v, q_pos, lens)
+
+
+def make_prefill_chunk(params, cfg: ModelConfig = MODEL, lay: StateLayout = LAYOUT,
+                       use_pallas: bool = True) -> Callable:
+    """prefill_chunk(state, tokens[C] i32, slot i32, start i32, nvalid i32).
+
+    Processes ``nvalid`` prompt tokens of one slot at absolute positions
+    ``start..start+nvalid-1``. Side effects on the state tensor:
+
+    * that slot's KV gains the chunk's keys/values;
+    * ``ptap_sum[:, slot]`` accumulates per-layer hidden-state sums over
+      valid tokens and ``pcnt[slot] += nvalid`` (prompt-probe input);
+    * ``logits[slot]`` and ``taps[:, slot]`` are set from the chunk's last
+      valid token — after the final chunk these are exactly the first
+      decode outputs, so TTFT is measured at prefill completion like vLLM.
+    """
+    c, s = cfg.prefill_chunk, cfg.max_seq
+    nt, b, d = cfg.n_taps, cfg.batch_slots, cfg.d_model
+
+    hsd = cfg.n_heads * s * cfg.d_head
+
+    def chunk(state, tokens, slot, start, nvalid):
+        x = params["embed"][tokens]                         # [C, D]
+        valid = (jnp.arange(c) < nvalid).astype(jnp.float32)  # [C]
+        q_pos = start + jnp.arange(c, dtype=jnp.int32)
+        total_len = start + nvalid
+        last = jnp.maximum(nvalid - 1, 0)
+        taps_sums = [jnp.sum(x * valid[:, None], axis=0)]   # per-layer [D]
+        taps_last = [x[last]]
+        for l in range(cfg.n_layers):
+            h = rmsnorm(x, params[f"l{l}.attn_norm"])
+            q, k, v = _qkv(h, params, l, cfg)               # [C, H, Dh]
+            q = rope(q, q_pos, cfg)
+            k = rope(k, q_pos, cfg)
+            # Chunk positions are contiguous: one [H, C, Dh] DUS per K/V
+            # into the slot's cache (in place when the state is donated;
+            # positions past nvalid hold dead values masked by length).
+            for which, val in ((0, k), (1, v)):
+                base = lay.kv_off + (l * 2 + which) * b * hsd
+                slot_base = base + slot * hsd
+                kv3 = jax.lax.dynamic_slice(state, (slot_base,), (hsd,)).reshape(
+                    cfg.n_heads, s, cfg.d_head)  # slot is dynamic here
+                kv3 = jax.lax.dynamic_update_slice(
+                    kv3, val.transpose(1, 0, 2), (0, start, 0))
+                state = jax.lax.dynamic_update_slice(state, kv3.reshape(-1), (slot_base,))
+                if which == 0:
+                    kc = kv3
+                else:
+                    vc = kv3
+            out = _prefill_attn(q, kc, vc, q_pos, total_len, use_pallas)
+            x = x + out.reshape(c, -1) @ params[f"l{l}.wo"]
+            x = x + _ffn(rmsnorm(x, params[f"l{l}.ffn_norm"]), params, l)
+            taps_sums.append(jnp.sum(x * valid[:, None], axis=0))
+            taps_last.append(x[last])
+        logits_last = rmsnorm(x[last], params["final_norm"]) @ params["embed"].T
+
+        # --- merge the slot-local results into the packed regions ---
+        logits = state[lay.logits_off:lay.logits_off + lay.logits_len].reshape(b, -1)
+        logits = jax.lax.dynamic_update_index_in_dim(logits, logits_last, slot, 0)
+        state = jax.lax.dynamic_update_slice(state, logits.reshape(-1), (lay.logits_off,))
+        taps = state[lay.taps_off:lay.taps_off + lay.taps_len].reshape(nt, b, d)
+        taps = jax.lax.dynamic_update_slice(
+            taps, jnp.stack(taps_last)[:, None, :], (0, slot, 0))
+        state = jax.lax.dynamic_update_slice(state, taps.reshape(-1), (lay.taps_off,))
+        ptap = state[lay.ptap_off:lay.ptap_off + lay.ptap_len].reshape(nt, b, d)
+        ptap_slot = jax.lax.dynamic_slice(ptap, (0, slot, 0), (nt, 1, d))
+        ptap = jax.lax.dynamic_update_slice(
+            ptap, ptap_slot + jnp.stack(taps_sums)[:, None, :], (0, slot, 0))
+        state = jax.lax.dynamic_update_slice(state, ptap.reshape(-1), (lay.ptap_off,))
+        pcnt = state[lay.pcnt_off:lay.pcnt_off + lay.pcnt_len]
+        pcnt = pcnt.at[slot].add(nvalid.astype(jnp.float32))
+        state = jax.lax.dynamic_update_slice(state, pcnt, (lay.pcnt_off,))
+        return state
+
+    return chunk
+
+
+# ---------------------------------------------------------------------------
+# Readout graph (small host-visible values only)
+# ---------------------------------------------------------------------------
+
+def make_readout(cfg: ModelConfig = MODEL, lay: StateLayout = LAYOUT) -> Callable:
+    """readout(state) -> (logits[B,V], taps[T,B,D], prompt_taps[T,B,D], argmax[B])."""
+    nt, b, d = cfg.n_taps, cfg.batch_slots, cfg.d_model
+
+    def readout(state):
+        logits = state[lay.logits_off:lay.logits_off + lay.logits_len].reshape(b, -1)
+        taps = state[lay.taps_off:lay.taps_off + lay.taps_len].reshape(nt, b, d)
+        ptap = state[lay.ptap_off:lay.ptap_off + lay.ptap_len].reshape(nt, b, d)
+        pcnt = state[lay.pcnt_off:lay.pcnt_off + lay.pcnt_len]
+        ptap_mean = ptap / jnp.maximum(pcnt[None, :, None], 1.0)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, taps, ptap_mean, nxt
+
+    return readout
+
+
+def make_slot_reset(cfg: ModelConfig = MODEL, lay: StateLayout = LAYOUT) -> Callable:
+    """slot_reset(state, slot) -> state with that slot's prompt-tap
+    accumulators cleared (KV needs no clearing — it is length-masked)."""
+    nt, b, d = cfg.n_taps, cfg.batch_slots, cfg.d_model
+
+    def reset(state, slot):
+        ptap = state[lay.ptap_off:lay.ptap_off + lay.ptap_len].reshape(nt, b, d)
+        ptap = jax.lax.dynamic_update_slice(
+            ptap, jnp.zeros((nt, 1, d), jnp.float32), (0, slot, 0))
+        state = jax.lax.dynamic_update_slice(state, ptap.reshape(-1), (lay.ptap_off,))
+        pcnt = state[lay.pcnt_off:lay.pcnt_off + lay.pcnt_len]
+        pcnt = pcnt.at[slot].set(0.0)
+        return jax.lax.dynamic_update_slice(state, pcnt, (lay.pcnt_off,))
+
+    return reset
+
+
+def make_predictor(use_pallas: bool = True) -> Callable:
+    """predictor(x[N,D], w1, b1, w2, b2) -> probs[N,K] (probe MLP)."""
+    if use_pallas:
+        return mlp_k.predictor_mlp
+    return kref.predictor_mlp_ref
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp batch oracle (profiling + tests). Independent of the packed
+# state machinery above; used to cross-check it.
+# ---------------------------------------------------------------------------
+
+def full_forward(params, tokens, cfg: ModelConfig = MODEL):
+    """Causal full-sequence forward.
+
+    tokens: [B, T] int32 (padded; padding positions produce garbage the
+    caller masks out). Returns (hiddens [B, T, L+1, D], logits [B, T, V]).
+    Mathematically identical to running prefill+decode incrementally, which
+    is exactly what tests assert.
+    """
+    bsz, t = tokens.shape
+    x = params["embed"][tokens]                       # [B, T, D]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    causal = pos[None, :] <= pos[:, None]             # [T, T] keys <= queries
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+    hiddens = [x]
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.attn_norm"])
+        q, k, v = _qkv(h, params, l, cfg)             # [B, T, H, Dh]
+        q = rope(q, pos[None, :], cfg)
+        k = rope(k, pos[None, :], cfg)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        scores = jnp.where(causal[None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(bsz, t, -1)
+        x = x + out @ params[f"l{l}.wo"]
+        x = x + _ffn(rmsnorm(x, params[f"l{l}.ffn_norm"]), params, l)
+        hiddens.append(x)
+    logits = rmsnorm(x, params["final_norm"]) @ params["embed"].T
+    return jnp.stack(hiddens, axis=2), logits
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def _generate_scan(params, prompts, plens, n_steps):
+    """Greedy continuation of padded prompts via cached incremental decode.
+
+    prompts: [B, P] int32; plens: [B] int32. Returns tokens [B, n_steps]
+    (token j = output token j+1; output token 1 comes from the prefill
+    logits and is also returned, as out_first).
+    """
+    cfg = MODEL
+    bsz, p = prompts.shape
+    s = p + n_steps + 1
+    kv = jnp.zeros((cfg.n_layers, 2, bsz, cfg.n_heads, s, cfg.d_head), jnp.float32)
+
+    # Prefill via full forward (exact), then copy K/V into the cache.
+    pos = jnp.arange(p, dtype=jnp.int32)
+    x = params["embed"][prompts]
+    causal = pos[None, :] <= pos[:, None]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+    # Padding mask: queries may only attend to keys < plen… prompts are
+    # *left-packed* so causal masking alone is correct for keys <= query,
+    # and garbage beyond plen is never read because the last real token is
+    # at plen-1 and decode lens clamp to real positions.
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.attn_norm"])
+        q, k, v = _qkv(h, params, l, cfg)
+        q = rope(q, pos[None, :], cfg)
+        k = rope(k, pos[None, :], cfg)
+        kv = kv.at[l, 0, :, :, :p].set(k.transpose(0, 2, 1, 3))
+        kv = kv.at[l, 1, :, :, :p].set(v.transpose(0, 2, 1, 3))
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        scores = jnp.where(causal[None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(bsz, p, -1)
+        x = x + out @ params[f"l{l}.wo"]
+        x = x + _ffn(rmsnorm(x, params[f"l{l}.ffn_norm"]), params, l)
+    logits_p = rmsnorm(x, params["final_norm"]) @ params["embed"].T  # [B, P, V]
+    last_idx = jnp.maximum(plens - 1, 0)
+    first_tok = jnp.argmax(
+        jnp.take_along_axis(logits_p, last_idx[:, None, None], 1)[:, 0], -1
+    ).astype(jnp.int32)
+
+    def step(carry, t):
+        kv, tok, cur_pos = carry
+        x = params["embed"][tok]                       # [B, D]
+        lens = cur_pos + 1
+        oh = (jnp.arange(s)[None, :] == cur_pos[:, None]).astype(jnp.float32)
+        ohb = oh[:, None, :, None]
+        new_kv = []
+        for l in range(cfg.n_layers):
+            h = rmsnorm(x, params[f"l{l}.attn_norm"])
+            q, k, v = _qkv(h, params, l, cfg)
+            q = rope(q, cur_pos, cfg)
+            k = rope(k, cur_pos, cfg)
+            kc = kv[l, 0] * (1.0 - ohb) + k[:, :, None, :] * ohb
+            vc = kv[l, 1] * (1.0 - ohb) + v[:, :, None, :] * ohb
+            new_kv.append(jnp.stack([kc, vc]))
+            out = kref.decode_attention_ref(q, kc, vc, lens)
+            x = x + out.reshape(bsz, -1) @ params[f"l{l}.wo"]
+            x = x + _ffn(rmsnorm(x, params[f"l{l}.ffn_norm"]), params, l)
+        logits = rmsnorm(x, params["final_norm"]) @ params["embed"].T
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return (jnp.stack(new_kv), nxt, cur_pos + 1), tok
+
+    (_, _, _), toks = jax.lax.scan(
+        step, (kv, first_tok, plens), jnp.arange(n_steps))
+    return first_tok, toks.T  # [B], [B, n_steps]
+
+
+def generate_batch(params, prompts, plens, n_steps):
+    """Greedy-decode a padded batch; returns full sequences [B, P+n_steps+1]
+    where position plens[b]-1+j holds output token j."""
+    first, toks = _generate_scan(params, prompts, plens, n_steps)
+    bsz, p = prompts.shape
+    seqs = jnp.concatenate([prompts, jnp.zeros((bsz, n_steps + 1), jnp.int32)], 1)
+    # Output token 1 goes at position plen, token j+1 at plen+j.
+    idx = plens[:, None] + jnp.arange(n_steps + 1)[None, :]
+    vals = jnp.concatenate([first[:, None], toks], axis=1)
+    b_idx = jnp.arange(bsz)[:, None]
+    seqs = seqs.at[b_idx, idx].set(vals)
+    return seqs

@@ -1,0 +1,66 @@
+"""SplitMix64 PRNG — bit-identical mirror of ``rust/src/util/rng.rs``.
+
+The workload generator must produce identical streams in the Python
+profiling/training path and the Rust serving path; this is enforced by
+golden-vector tests on both sides (``python/tests/test_workload.py`` and
+``rust/src/util/rng.rs`` unit tests share ``artifacts/golden.json``).
+"""
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Sebastiano Vigna's SplitMix64; tiny, fast, and trivially portable."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits of entropy."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_range(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi] (inclusive), via modulo reduction.
+
+        Modulo bias is negligible for our ranges (<< 2^32) and keeping the
+        reduction trivial makes the Rust mirror easy to verify.
+        """
+        assert hi >= lo
+        span = hi - lo + 1
+        return lo + (self.next_u64() % span)
+
+    def split(self) -> "SplitMix64":
+        """Derive an independent child stream (used per-request)."""
+        return SplitMix64(self.next_u64())
+
+
+def erfinv(x: float) -> float:
+    """Inverse error function (Winitzki's approximation, ~1e-3 rel err).
+
+    Used only to convert uniforms into normals for the log-normal length
+    sampler; both languages use this same approximation so streams match
+    exactly. Accuracy is irrelevant here — any fixed monotone map from
+    U(0,1) to a heavy-tailed length distribution serves the workload.
+    """
+    import math
+
+    a = 0.147
+    s = 1.0 if x >= 0 else -1.0
+    x = min(max(x, -0.999999), 0.999999)
+    ln1mx2 = math.log(1.0 - x * x)
+    t1 = 2.0 / (math.pi * a) + ln1mx2 / 2.0
+    return s * math.sqrt(math.sqrt(t1 * t1 - ln1mx2 / a) - t1)
+
+
+def normal_from_uniform(u: float) -> float:
+    """Standard normal via inverse-CDF: N^{-1}(u) = sqrt(2) * erfinv(2u-1)."""
+    import math
+
+    return math.sqrt(2.0) * erfinv(2.0 * u - 1.0)

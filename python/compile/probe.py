@@ -1,0 +1,338 @@
+"""Probe profiling + training (paper §3.1, Figures 2/3).
+
+Pipeline (all build-time, invoked from ``aot.py``):
+
+1. *Profile*: generate the training workload, greedy-decode every request
+   with the pure-jnp oracle, and harvest per-layer hidden states ("taps")
+   with their remaining-length labels — the paper's "7 million training
+   pairs", scaled to this model (~70k pairs x 9 tap points).
+2. *Train*: one 2-layer MLP probe per tap point (vmapped joint training,
+   hand-rolled Adam — optax is not in the image), plus the prompt-only
+   probe that plays the role of the paper's BERT/S^3 baseline.
+3. *Evaluate*: per-layer MAE with and without Bayesian refinement
+   (Fig 2/3) on held-out requests; emit CSV + probe_weights.json.
+"""
+
+import csv
+import functools
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .config import BINS, MODEL, PROBE, WORKLOAD
+from .smoothing import smooth_sequence
+from .workload import gen_requests
+
+
+# ---------------------------------------------------------------------------
+# Profiling
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ProfileData:
+    """Harvested probe dataset.
+
+    decode_x: [n, T, D] tap embeddings (T = n_taps tap points)
+    decode_y: [n]       remaining-length bin labels
+    decode_rem: [n]     raw remaining lengths (for MAE)
+    decode_req: [n]     request index (groups a request's iterations)
+    decode_t: [n]       iteration index within the request
+    prompt_x: [m, D]    mean layer-0 prompt embeddings
+    prompt_y: [m]       total-output-length bin labels
+    prompt_n: [m]       raw total output lengths
+    """
+
+    decode_x: np.ndarray
+    decode_y: np.ndarray
+    decode_rem: np.ndarray
+    decode_req: np.ndarray
+    decode_t: np.ndarray
+    prompt_x: np.ndarray
+    prompt_y: np.ndarray
+    prompt_n: np.ndarray
+
+
+def profile_requests(params, requests, batch_size: int = 32,
+                     max_steps: int = None) -> ProfileData:
+    """Run every request to its true output length and harvest taps.
+
+    Equivalent to what the serving engine sees: decode inputs are the
+    dataset-replay response tokens (teacher forcing — see workload.py), so
+    the full sequence `prompt ++ response` is known upfront and one causal
+    full-forward reproduces every incremental decode step's hidden states
+    exactly (asserted by python/tests/test_model.py). The tap at decode
+    iteration j is the hidden state of the step-j input token, labelled
+    remaining = N - j - 1; the prefill tap (last prompt token) is labelled
+    N - 1; the prompt-probe input is the mean embedding-layer hidden over
+    prompt positions, labelled N.
+    """
+    cfg = MODEL
+    del max_steps  # kept for API compatibility
+    t_max = max(len(r.prompt) + len(r.response) for r in requests)
+
+    dx, dy, drem, dreq, dt = [], [], [], [], []
+    px, py, pn = [], [], []
+
+    for lo in range(0, len(requests), batch_size):
+        batch = requests[lo:lo + batch_size]
+        bsz = len(batch)
+        seqs_np = np.zeros((bsz, t_max), dtype=np.int32)
+        plens = np.array([len(r.prompt) for r in batch], dtype=np.int32)
+        for i, r in enumerate(batch):
+            full = r.prompt + r.response
+            seqs_np[i, :len(full)] = full
+        hid, _ = M.full_forward(params, jnp.asarray(seqs_np))  # [B, T, L+1, D]
+        hid = np.asarray(hid)
+        for i, r in enumerate(batch):
+            p, n = int(plens[i]), r.true_output_len
+            # Prompt probe sample: mean embedding-layer hidden over prompt.
+            px.append(hid[i, :p, 0, :].mean(axis=0))
+            py.append(BINS.bin_of(n))
+            pn.append(n)
+            # Iteration taps: j = 0 is the prefill step (input = last prompt
+            # token, produced output token 1, remaining n-1) and j >= 1 are
+            # decode steps (input = output token j at position p+j-1).
+            for j in range(n):
+                pos = p - 1 + j
+                rem = n - j - 1
+                dx.append(hid[i, pos, :, :])     # [L+1, D]
+                dy.append(BINS.bin_of(rem))
+                drem.append(rem)
+                dreq.append(r.rid)
+                dt.append(j)
+
+    return ProfileData(
+        decode_x=np.asarray(dx, dtype=np.float32),
+        decode_y=np.asarray(dy, dtype=np.int64),
+        decode_rem=np.asarray(drem, dtype=np.float64),
+        decode_req=np.asarray(dreq, dtype=np.int64),
+        decode_t=np.asarray(dt, dtype=np.int64),
+        prompt_x=np.asarray(px, dtype=np.float32),
+        prompt_y=np.asarray(py, dtype=np.int64),
+        prompt_n=np.asarray(pn, dtype=np.float64),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Training (hand-rolled Adam; probes for all tap points trained jointly
+# via vmap over the tap axis)
+# ---------------------------------------------------------------------------
+
+def _init_probe(key, d, hidden, k):
+    k1, k2 = jax.random.split(key)
+    s1 = 1.0 / math.sqrt(d)
+    s2 = 1.0 / math.sqrt(hidden)
+    return {
+        "w1": jax.random.uniform(k1, (d, hidden), minval=-s1, maxval=s1),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.uniform(k2, (hidden, k), minval=-s2, maxval=s2),
+        "b2": jnp.zeros((k,)),
+    }
+
+
+def _probe_logits(p, x):
+    h = jnp.maximum(x @ p["w1"] + p["b1"], 0.0)
+    return h @ p["w2"] + p["b2"]
+
+
+def _ce_loss(p, x, y, wd):
+    logits = _probe_logits(p, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None], 1)[:, 0] - logz
+    l2 = sum(jnp.sum(v * v) for k, v in p.items() if k.startswith("w"))
+    return -jnp.mean(ll) + wd * l2
+
+
+@functools.partial(jax.jit, static_argnames=("lr_max", "total_steps", "wd"))
+def _adam_step(p, m, v, step, x, y, *, lr_max, total_steps, wd):
+    """One AdamW-ish step with cosine-annealed lr (paper: AdamW + cosine)."""
+    g = jax.grad(_ce_loss)(p, x, y, wd)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    lr = 0.5 * lr_max * (1.0 + jnp.cos(jnp.pi * step / total_steps))
+    m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
+    v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, v, g)
+    mh = jax.tree.map(lambda mm: mm / (1 - b1 ** (step + 1)), m)
+    vh = jax.tree.map(lambda vv: vv / (1 - b2 ** (step + 1)), v)
+    p = jax.tree.map(lambda pp, mm, vv: pp - lr * mm / (jnp.sqrt(vv) + eps),
+                     p, mh, vh)
+    return p, m, v
+
+
+def train_probe(x: np.ndarray, y: np.ndarray, seed: int = 0,
+                hidden: int = None, steps: int = None,
+                batch: int = None) -> Dict[str, np.ndarray]:
+    """Train one probe (or a stack: x may be [n, D] or [n, T, D] for T
+    probes trained jointly via vmap)."""
+    hidden = hidden or PROBE.hidden
+    steps = steps or PROBE.train_steps_cap
+    batch = batch or PROBE.batch_size
+    k_bins = BINS.n_bins
+    stacked = x.ndim == 3
+    d = x.shape[-1]
+    key = jax.random.PRNGKey(seed)
+
+    if stacked:
+        t = x.shape[1]
+        keys = jax.random.split(key, t)
+        p = jax.vmap(lambda kk: _init_probe(kk, d, hidden, k_bins))(keys)
+        step_fn = jax.vmap(
+            functools.partial(_adam_step, lr_max=PROBE.lr, total_steps=steps,
+                              wd=PROBE.weight_decay),
+            in_axes=(0, 0, 0, None, 1, None))
+    else:
+        p = _init_probe(key, d, hidden, k_bins)
+        step_fn = functools.partial(_adam_step, lr_max=PROBE.lr,
+                                    total_steps=steps, wd=PROBE.weight_decay)
+
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    xj = jnp.asarray(x)
+    yj = jnp.asarray(y)
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        p, m, v = step_fn(p, m, v, s, xj[idx], yj[idx])
+    return jax.tree.map(np.asarray, p)
+
+
+def probe_predict(p: Dict[str, np.ndarray], x: np.ndarray) -> np.ndarray:
+    """Softmax probabilities from a trained probe (numpy)."""
+    h = np.maximum(x @ p["w1"] + p["b1"], 0.0)
+    logits = h @ p["w2"] + p["b2"]
+    logits -= logits.max(axis=-1, keepdims=True)
+    e = np.exp(logits)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation (Fig 2 / Fig 3)
+# ---------------------------------------------------------------------------
+
+def expected_length(probs: np.ndarray) -> np.ndarray:
+    mids = np.asarray(BINS.midpoints)
+    return probs @ mids
+
+
+def eval_layers(data: ProfileData, probes, prompt_probe,
+                val_req_ids: set) -> List[dict]:
+    """Per-tap-point MAE, refined and unrefined, plus the prompt-probe
+    ("BERT") baseline — the series of Figures 2 and 3."""
+    sel = np.isin(data.decode_req, list(val_req_ids))
+    rows = []
+    n_taps = data.decode_x.shape[1]
+
+    # Prompt-probe baseline: one static prediction, minus tokens generated.
+    prompt_ids = np.asarray(sorted(val_req_ids))
+    # map rid -> predicted total
+    rid_list = list(range(len(data.prompt_x)))
+    p_probs = probe_predict(prompt_probe, data.prompt_x)
+    p_len = expected_length(p_probs)
+    bert_pred = {rid: p_len[rid] for rid in rid_list}
+    bert_err = []
+    for rid in prompt_ids:
+        mask = (data.decode_req == rid)
+        ts = data.decode_t[mask]
+        rem = data.decode_rem[mask]
+        pred = np.maximum(bert_pred[rid] - (ts + 1), 0.0)
+        bert_err.append(np.abs(pred - rem))
+    bert_mae = float(np.concatenate(bert_err).mean())
+
+    for tap in range(n_taps):
+        probs = probe_predict(
+            jax.tree.map(lambda a: a[tap], probes), data.decode_x[sel][:, tap, :])
+        raw_pred = expected_length(probs)
+        raw_mae = float(np.abs(raw_pred - data.decode_rem[sel]).mean())
+
+        # Refined: run the Bayesian smoother per request over its sequence.
+        refined_err = []
+        reqs = data.decode_req[sel]
+        rems = data.decode_rem[sel]
+        order = np.argsort(data.decode_t[sel], kind="stable")
+        for rid in np.unique(reqs):
+            rmask = reqs == rid
+            p_seq = probs[rmask]
+            r_seq = rems[rmask]
+            t_seq = data.decode_t[sel][rmask]
+            srt = np.argsort(t_seq)
+            preds = smooth_sequence(p_seq[srt])
+            refined_err.append(np.abs(preds - r_seq[srt]))
+        refined_mae = float(np.concatenate(refined_err).mean())
+        rows.append({"layer": tap, "mae_raw": raw_mae, "mae_refined": refined_mae,
+                     "mae_bert": bert_mae})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Entry point used by aot.py
+# ---------------------------------------------------------------------------
+
+def run(params, outdir: str, n_requests: int = None, train_steps: int = None,
+        verbose: bool = True) -> dict:
+    n_requests = n_requests or PROBE.n_profile_requests
+    requests = gen_requests(n_requests, WORKLOAD.train_seed)
+    n_val = max(int(n_requests * PROBE.val_frac), 8)
+    val_ids = set(r.rid for r in requests[-n_val:])
+
+    if verbose:
+        print(f"[probe] profiling {n_requests} requests…", flush=True)
+    data = profile_requests(params, requests)
+    if verbose:
+        print(f"[probe] {len(data.decode_y)} iteration pairs, "
+              f"{len(data.prompt_y)} prompt pairs", flush=True)
+
+    train_sel = ~np.isin(data.decode_req, list(val_ids))
+    if verbose:
+        print("[probe] training per-layer probes…", flush=True)
+    probes = train_probe(data.decode_x[train_sel], data.decode_y[train_sel],
+                         steps=train_steps)
+    prompt_train = np.asarray([i for i in range(n_requests) if i not in val_ids])
+    prompt_probe = train_probe(data.prompt_x[prompt_train],
+                               data.prompt_y[prompt_train], seed=1,
+                               steps=train_steps)
+
+    if verbose:
+        print("[probe] evaluating…", flush=True)
+    rows = eval_layers(data, probes, prompt_probe, val_ids)
+    best = min(rows, key=lambda r: r["mae_refined"])
+    if verbose:
+        for r in rows:
+            print(f"[probe] layer {r['layer']:2d}  raw {r['mae_raw']:7.2f}  "
+                  f"refined {r['mae_refined']:7.2f}  (bert {r['mae_bert']:.2f})",
+                  flush=True)
+        print(f"[probe] best tap layer: {best['layer']}", flush=True)
+
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, "fig2_mae_by_layer.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=["layer", "mae_raw", "mae_refined",
+                                          "mae_bert"])
+        w.writeheader()
+        w.writerows(rows)
+
+    weights = {
+        "hidden": PROBE.hidden,
+        "best_layer": best["layer"],
+        "bert_mae": rows[0]["mae_bert"],
+        # Embedding table [V, D] row-major: lets the Rust coordinator
+        # compute the mean layer-0 prompt embedding natively at admission
+        # (the paper's BERT predictor also runs before any LLM compute).
+        "embed": np.asarray(params["embed"]).reshape(-1).tolist(),
+        "layers": [
+            {k: np.asarray(jax.tree.map(lambda a: a[t], probes)[k]).reshape(-1).tolist()
+             for k in ("w1", "b1", "w2", "b2")}
+            for t in range(data.decode_x.shape[1])
+        ],
+        "prompt": {k: np.asarray(prompt_probe[k]).reshape(-1).tolist()
+                   for k in ("w1", "b1", "w2", "b2")},
+        "mae_by_layer": rows,
+    }
+    with open(os.path.join(outdir, "probe_weights.json"), "w") as f:
+        json.dump(weights, f)
+    return weights

@@ -1,0 +1,78 @@
+"""Bayesian refinement of per-iteration bin predictions (paper §3.1 +
+Appendix A) — mirrored by ``rust/src/predictor/smoothing.rs``.
+
+The prior drifts one bin downward as tokens are generated (remaining
+length shrinks): with equal-width bins of size ``w`` and a uniform
+within-bin assumption, a value stays in its bin w.p. 1 - 1/w and moves to
+the next-lower bin w.p. 1/w per generated token. The transition matrix is
+therefore lower-bidiagonal (Appendix A):
+
+    T[i, i]   = 1 - 1/w
+    T[i, i+1] = 1/w        (B_{i+1} -> B_i)
+
+Update per iteration t with classifier output p^(t):
+
+    q_prior = T @ q^(t-1)
+    q^(t)(i) ∝ q_prior(i) * p^(t)(i)
+"""
+
+import numpy as np
+
+from .config import BINS, BinConfig
+
+
+def transition_matrix(b: BinConfig = BINS) -> np.ndarray:
+    k = b.n_bins
+    w = b.width
+    t = np.zeros((k, k), dtype=np.float64)
+    for i in range(k):
+        t[i, i] = 1.0 - 1.0 / w
+        if i + 1 < k:
+            t[i, i + 1] = 1.0 / w
+    # Bin 0 absorbs: once a request is in the lowest bin it stays there.
+    t[0, 0] = 1.0 - 1.0 / w  # mass leaks only via normalisation; keep form
+    return t
+
+
+class BayesianSmoother:
+    """Per-request probability state over remaining-length bins."""
+
+    def __init__(self, b: BinConfig = BINS):
+        self.bins = b
+        self.t = transition_matrix(b)
+        self.q = None
+
+    def reset(self, p0: np.ndarray):
+        self.q = np.asarray(p0, dtype=np.float64)
+        s = self.q.sum()
+        if s > 0:
+            self.q /= s
+
+    def update(self, p: np.ndarray) -> np.ndarray:
+        assert self.q is not None, "reset() before update()"
+        prior = self.t @ self.q
+        post = prior * np.asarray(p, dtype=np.float64)
+        s = post.sum()
+        if s <= 1e-30:
+            # Degenerate disagreement: fall back to the raw classifier.
+            post = np.asarray(p, dtype=np.float64)
+            s = post.sum()
+        self.q = post / s
+        return self.q
+
+    def predicted_length(self) -> float:
+        mids = np.asarray(self.bins.midpoints)
+        return float(np.dot(self.q, mids))
+
+
+def smooth_sequence(p_seq: np.ndarray, b: BinConfig = BINS) -> np.ndarray:
+    """Vectorised refinement over a [T, K] sequence of classifier outputs;
+    returns [T] predicted remaining lengths. Used for Fig 3 evaluation."""
+    sm = BayesianSmoother(b)
+    sm.reset(p_seq[0])
+    out = np.empty(len(p_seq))
+    out[0] = sm.predicted_length()
+    for i in range(1, len(p_seq)):
+        sm.update(p_seq[i])
+        out[i] = sm.predicted_length()
+    return out

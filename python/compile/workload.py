@@ -1,0 +1,134 @@
+"""Synthetic Alpaca-like workload — mirrored bit-for-bit by
+``rust/src/workload/gen.rs``.
+
+Each request is a (prompt_tokens, true_output_len) pair:
+
+* ``true_output_len`` ~ round(LogNormal(mu, sigma)) clipped to
+  [min_output, max_output].  Alpaca's response-length histogram is
+  right-skewed and roughly log-normal; this preserves the heavy-tail size
+  mix that makes size-based scheduling matter (DESIGN.md §2).
+* prompt tokens are drawn from a distribution conditioned on the length
+  *class* (the output-length bin), so the model's hidden states genuinely
+  carry a remaining-length signal for the probe to find — the synthetic
+  analogue of "the hidden state encodes the response the model has
+  committed to".
+"""
+
+import math
+from dataclasses import dataclass
+from typing import List
+
+from .config import BINS, MODEL, WORKLOAD, BinConfig, ModelConfig, WorkloadConfig
+from .prng import SplitMix64, normal_from_uniform
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    true_output_len: int
+    # Dataset-replay decode inputs r_1..r_{N-1}: token r_j is the input of
+    # decode step j (the "generated" token j being fed back). The serving
+    # engine teacher-forces these, exactly like replaying dataset
+    # responses with a fixed output length (DESIGN.md §2).
+    response: List[int]
+
+    @property
+    def length_class(self) -> int:
+        return BINS.bin_of(self.true_output_len)
+
+
+def sample_output_len(rng: SplitMix64, w: WorkloadConfig = WORKLOAD) -> int:
+    z = normal_from_uniform(rng.next_f64())
+    x = math.exp(w.lognormal_mu + w.lognormal_sigma * z)
+    n = int(x + 0.5)
+    return min(max(n, w.min_output), w.max_output)
+
+
+def sample_geometric(rng: SplitMix64, p: float) -> int:
+    """Number of failures before first success; inverse-CDF so that a
+    single uniform draw maps deterministically to the value."""
+    u = rng.next_f64()
+    # P(G >= k) = (1-p)^k  =>  G = floor(log(1-u) / log(1-p))
+    if u <= 0.0:
+        return 0
+    return int(math.log(1.0 - u) / math.log(1.0 - p))
+
+
+def class_center(cls: int, m: ModelConfig = MODEL, b: BinConfig = BINS) -> int:
+    """Content-token id around which class-`cls` prompts concentrate."""
+    content = m.vocab - m.first_content_id
+    return m.first_content_id + int((cls + 0.5) * content / b.n_bins)
+
+
+def sample_prompt_token(rng: SplitMix64, cls: int, m: ModelConfig = MODEL) -> int:
+    center = class_center(cls, m)
+    off = sample_geometric(rng, WORKLOAD.geom_p)
+    sign = 1 if (rng.next_u64() & 1) == 0 else -1
+    tok = center + sign * off
+    lo, hi = m.first_content_id, m.vocab - 1
+    if tok < lo:
+        tok = lo + ((lo - tok) % (hi - lo + 1))
+    elif tok > hi:
+        tok = hi - ((tok - hi) % (hi - lo + 1))
+    return tok
+
+
+def observed_class(rng: SplitMix64, cls: int, w: WorkloadConfig = WORKLOAD,
+                   b: BinConfig = BINS) -> int:
+    """The length class as the *prompt* reveals it — jittered."""
+    z = normal_from_uniform(rng.next_f64())
+    obs = cls + int(round(w.class_jitter_sigma * z))
+    return min(max(obs, 0), b.n_bins - 1)
+
+
+def response_token(rng: SplitMix64, remaining: int, m: ModelConfig = MODEL,
+                   w: WorkloadConfig = WORKLOAD) -> int:
+    """Progress-encoding response token for `remaining` tokens left."""
+    content = m.vocab - m.first_content_id
+    if rng.next_f64() < w.resp_noise_p:
+        return m.first_content_id + rng.next_range(0, content - 1)
+    bucket = min(remaining, content - 1) // w.resp_bucket
+    tok = m.first_content_id + bucket * w.resp_bucket + w.resp_bucket // 2
+    return min(tok, m.vocab - 1)
+
+
+def gen_request(rid: int, master: SplitMix64) -> Request:
+    """One request from a *child* stream so generation order is stable."""
+    rng = master.split()
+    n_out = sample_output_len(rng)
+    cls = BINS.bin_of(n_out)
+    obs = observed_class(rng, cls)
+    plen = rng.next_range(WORKLOAD.min_prompt, WORKLOAD.max_prompt)
+    prompt = [MODEL.bos_id] + [sample_prompt_token(rng, obs) for _ in range(plen - 1)]
+    # r_j encodes remaining-after-step-j = n_out - j - 1, for j=1..N-1.
+    response = [response_token(rng, n_out - j - 1) for j in range(1, n_out)]
+    return Request(rid=rid, prompt=prompt, true_output_len=n_out, response=response)
+
+
+def gen_requests(n: int, seed: int) -> List[Request]:
+    master = SplitMix64(seed)
+    return [gen_request(i, master) for i in range(n)]
+
+
+def golden_vectors() -> dict:
+    """Cross-language parity fixtures, written into artifacts/golden.json."""
+    rng = SplitMix64(42)
+    raw = [rng.next_u64() for _ in range(8)]
+    rng2 = SplitMix64(7)
+    f64s = [rng2.next_f64() for _ in range(8)]
+    reqs = gen_requests(4, 12345)
+    return {
+        "splitmix_seed42_u64": [str(v) for v in raw],  # stringified: > 2^53
+        "splitmix_seed7_f64": f64s,
+        "requests_seed12345": [
+            {
+                "rid": r.rid,
+                "prompt": r.prompt,
+                "true_output_len": r.true_output_len,
+                "length_class": r.length_class,
+                "response": r.response,
+            }
+            for r in reqs
+        ],
+    }

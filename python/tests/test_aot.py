@@ -1,0 +1,62 @@
+"""AOT artifact smoke: config/layout consistency and HLO text structure."""
+
+import json
+import os
+
+import pytest
+
+from compile.config import BINS, LAYOUT, MODEL, config_dict
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_layout_tiles_exactly():
+    lay = LAYOUT
+    assert lay.kv_off == 0
+    assert lay.logits_off == lay.kv_len
+    assert lay.total == lay.pcnt_off + lay.pcnt_len
+    assert lay.kv_len == MODEL.kv_elems
+    assert lay.taps_len == MODEL.n_taps * MODEL.batch_slots * MODEL.d_model
+
+
+def test_bins_cover_output_range():
+    assert BINS.bin_of(0) == 0
+    assert BINS.bin_of(BINS.max_len - 1) == BINS.n_bins - 1
+    assert BINS.bin_of(10 * BINS.max_len) == BINS.n_bins - 1
+    mids = BINS.midpoints
+    assert all(mids[i] < mids[i + 1] for i in range(len(mids) - 1))
+
+
+def test_config_dict_serialisable():
+    s = json.dumps(config_dict())
+    back = json.loads(s)
+    assert back["layout"]["total"] == LAYOUT.total
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "config.json")),
+                    reason="run `make artifacts` first")
+def test_artifacts_exist_and_hlo_is_parseable_text():
+    cfg = json.load(open(os.path.join(ART, "config.json")))
+    names = cfg["artifacts"]
+    for key in ("step", "prefill", "readout"):
+        path = os.path.join(ART, names[key])
+        assert os.path.exists(path), path
+        head = open(path).read(4096)
+        assert head.startswith("HloModule"), f"{path} is not HLO text"
+        assert "ENTRY" in open(path).read()
+    # No elided constants (would break the Rust text parser round-trip).
+    step = open(os.path.join(ART, names["step"])).read()
+    assert "constant({...})" not in step
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "probe_weights.json")),
+                    reason="run `make artifacts` first")
+def test_probe_weights_complete():
+    w = json.load(open(os.path.join(ART, "probe_weights.json")))
+    assert len(w["layers"]) == MODEL.n_layers + 1
+    assert len(w["embed"]) == MODEL.vocab * MODEL.d_model
+    d, h, k = MODEL.d_model, w["hidden"], BINS.n_bins
+    for layer in w["layers"]:
+        assert len(layer["w1"]) == d * h
+        assert len(layer["w2"]) == h * k
+    assert 0 <= w["best_layer"] <= MODEL.n_layers

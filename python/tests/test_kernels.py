@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, with hypothesis
+sweeping shapes (the spec's L1 test requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, mlp, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    h=st.integers(1, 4),
+    s=st.sampled_from([16, 48, 64, 96, 160]),
+    dh=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attention_matches_ref(b, h, s, dh, seed):
+    q = rand(seed, (b, h, dh))
+    k = rand(seed + 1, (b, h, s, dh))
+    v = rand(seed + 2, (b, h, s, dh))
+    lens_np = np.random.default_rng(seed).integers(0, s + 1, size=b)
+    lens = jnp.asarray(lens_np, jnp.int32)
+    out = attention.decode_attention(q, k, v, lens)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_inactive_slot_zero():
+    q = rand(0, (2, 4, 16))
+    k = rand(1, (2, 4, 64, 16))
+    v = rand(2, (2, 4, 64, 16))
+    lens = jnp.asarray([0, 64], jnp.int32)
+    out = attention.decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(out[0], jnp.zeros_like(out[0]), atol=1e-7)
+
+
+def test_decode_attention_single_valid_key_returns_value():
+    # With one valid key, softmax weight is 1: output == v at that key.
+    q = rand(3, (1, 2, 8))
+    k = rand(4, (1, 2, 32, 8))
+    v = rand(5, (1, 2, 32, 8))
+    lens = jnp.asarray([1], jnp.int32)
+    out = attention.decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(out[0], v[0, :, 0, :], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seq_tile", [16, 32, 64, 128])
+def test_decode_attention_tile_invariance(seq_tile):
+    # The online-softmax result must not depend on the VMEM tile size.
+    q = rand(7, (3, 4, 16))
+    k = rand(8, (3, 4, 96, 16))
+    v = rand(9, (3, 4, 96, 16))
+    lens = jnp.asarray([96, 40, 1], jnp.int32)
+    out = attention.decode_attention(q, k, v, lens, seq_tile=seq_tile)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# Prefill attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 16),
+    h=st.integers(1, 4),
+    s=st.sampled_from([32, 64, 96]),
+    dh=st.sampled_from([8, 16]),
+    start=st.integers(0, 10),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_attention_matches_ref(c, h, s, dh, start, seed):
+    if start + c > s:
+        start = s - c
+    q = rand(seed, (c, h, dh))
+    k = rand(seed + 1, (h, s, dh))
+    v = rand(seed + 2, (h, s, dh))
+    q_pos = jnp.arange(start, start + c, dtype=jnp.int32)
+    lens = jnp.asarray(start + c, jnp.int32)
+    out = attention.prefill_attention(q, k, v, q_pos, lens)
+    want = ref.prefill_attention_ref(q, k, v, q_pos, start + c)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_prefill_attention_causality():
+    # Changing a future key must not change earlier queries' outputs.
+    h, s, dh, c = 2, 32, 8, 4
+    q = rand(1, (c, h, dh))
+    k = rand(2, (h, s, dh))
+    v = rand(3, (h, s, dh))
+    q_pos = jnp.arange(0, c, dtype=jnp.int32)
+    out1 = attention.prefill_attention(q, k, v, q_pos, jnp.asarray(c, jnp.int32))
+    k2 = k.at[:, c - 1, :].set(99.0)  # key visible only to the last query
+    v2 = v.at[:, c - 1, :].set(-99.0)
+    out2 = attention.prefill_attention(q, k2, v2, q_pos, jnp.asarray(c, jnp.int32))
+    np.testing.assert_allclose(out1[: c - 1], out2[: c - 1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(out1[c - 1], out2[c - 1])
+
+
+# ---------------------------------------------------------------------------
+# Predictor MLP
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 3, 8, 100, 128, 200]),
+    d=st.sampled_from([16, 64]),
+    hd=st.sampled_from([32, 64]),
+    k=st.sampled_from([5, 10]),
+    seed=st.integers(0, 2**16),
+)
+def test_predictor_mlp_matches_ref(n, d, hd, k, seed):
+    x = rand(seed, (n, d))
+    w1 = rand(seed + 1, (d, hd), 0.2)
+    b1 = rand(seed + 2, (hd,), 0.1)
+    w2 = rand(seed + 3, (hd, k), 0.2)
+    b2 = rand(seed + 4, (k,), 0.1)
+    out = mlp.predictor_mlp(x, w1, b1, w2, b2)
+    want = ref.predictor_mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_predictor_mlp_rows_are_distributions():
+    x = rand(11, (32, 64))
+    w1 = rand(12, (64, 64), 0.2)
+    out = mlp.predictor_mlp(x, w1, jnp.zeros(64), rand(13, (64, 10), 0.2), jnp.zeros(10))
+    np.testing.assert_allclose(np.asarray(out).sum(-1), np.ones(32), rtol=1e-5)
+    assert (np.asarray(out) >= 0).all()
+
+
+@pytest.mark.parametrize("batch_tile", [8, 32, 128])
+def test_predictor_mlp_tile_invariance(batch_tile):
+    x = rand(21, (100, 64))
+    w1 = rand(22, (64, 64), 0.2)
+    b1 = jnp.zeros(64)
+    w2 = rand(23, (64, 10), 0.2)
+    b2 = jnp.zeros(10)
+    out = mlp.predictor_mlp(x, w1, b1, w2, b2, batch_tile=batch_tile)
+    want = ref.predictor_mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)

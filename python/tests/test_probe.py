@@ -1,0 +1,61 @@
+"""Probe profiling + training pipeline (small smoke-scale run)."""
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import probe as P
+from compile.config import BINS
+from compile.workload import gen_requests
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params()
+
+
+@pytest.fixture(scope="module")
+def data(params):
+    return P.profile_requests(params, gen_requests(24, 555))
+
+
+def test_profile_shapes_and_labels(data):
+    n = len(data.decode_y)
+    assert data.decode_x.shape == (n, 9, 64)
+    assert data.decode_rem.shape == (n,)
+    assert (data.decode_y >= 0).all() and (data.decode_y < BINS.n_bins).all()
+    # Labels are consistent with bins.
+    for i in range(0, n, 97):
+        assert data.decode_y[i] == BINS.bin_of(data.decode_rem[i])
+    # Per-request iteration counts equal the true output length.
+    reqs = gen_requests(24, 555)
+    for r in reqs:
+        assert int((data.decode_req == r.rid).sum()) == r.true_output_len
+
+
+def test_profile_remaining_decreases_within_request(data):
+    rid = data.decode_req[0]
+    mask = data.decode_req == rid
+    ts = data.decode_t[mask]
+    rems = data.decode_rem[mask]
+    order = np.argsort(ts)
+    assert (np.diff(rems[order]) == -1).all()
+
+
+def test_training_learns_signal(params, data):
+    # A quickly-trained probe must beat the uniform-guess MAE.
+    probes = P.train_probe(data.decode_x, data.decode_y, steps=300)
+    tap = 4
+    probs = P.probe_predict(
+        {k: np.asarray(v[tap]) for k, v in probes.items()}, data.decode_x[:, tap, :])
+    pred = P.expected_length(probs)
+    mae = np.abs(pred - data.decode_rem).mean()
+    uniform = np.abs(np.mean(BINS.midpoints) - data.decode_rem).mean()
+    assert mae < uniform, f"probe MAE {mae} !< uniform {uniform}"
+
+
+def test_probe_predict_is_distribution(params, data):
+    probes = P.train_probe(data.decode_x[:500], data.decode_y[:500], steps=50)
+    p = P.probe_predict(
+        {k: np.asarray(v[0]) for k, v in probes.items()}, data.decode_x[:32, 0, :])
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)

@@ -1,0 +1,84 @@
+"""Bayesian smoothing (paper Appendix A) — structural properties and the
+behaviours Fig 3 depends on."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.config import BINS
+from compile.smoothing import BayesianSmoother, smooth_sequence, transition_matrix
+
+
+def test_transition_matrix_structure():
+    t = transition_matrix()
+    k = BINS.n_bins
+    assert t.shape == (k, k)
+    for i in range(k):
+        assert abs(t[i, i] - (1 - 1 / BINS.width)) < 1e-12
+        if i + 1 < k:
+            assert abs(t[i, i + 1] - 1 / BINS.width) < 1e-12
+    # Lower-bidiagonal: nothing else non-zero.
+    mask = np.ones_like(t, dtype=bool)
+    for i in range(k):
+        mask[i, i] = False
+        if i + 1 < k:
+            mask[i, i + 1] = False
+    assert np.all(t[mask] == 0)
+
+
+@given(st.lists(st.floats(0.01, 1.0), min_size=BINS.n_bins, max_size=BINS.n_bins))
+@settings(max_examples=50, deadline=None)
+def test_update_stays_on_simplex(p):
+    sm = BayesianSmoother()
+    sm.reset(np.ones(BINS.n_bins) / BINS.n_bins)
+    sm.update(np.asarray(p))
+    assert abs(sm.q.sum() - 1.0) < 1e-9
+    assert (sm.q >= 0).all()
+
+
+def test_drift_lowers_expected_remaining():
+    sm = BayesianSmoother()
+    p0 = np.zeros(BINS.n_bins)
+    p0[-1] = 1.0
+    sm.reset(p0)
+    start = sm.predicted_length()
+    flat = np.ones(BINS.n_bins) / BINS.n_bins
+    for _ in range(60):
+        sm.update(flat)
+    assert sm.predicted_length() < start - 20
+
+
+def test_smoothing_reduces_noise_mae():
+    # The Fig 3 mechanism: a noisy classifier around the true (drifting)
+    # bin is improved by refinement.
+    rng = np.random.default_rng(0)
+    k = BINS.n_bins
+    n = 200
+    true_total = 220.0
+    raw_err, ref_err = [], []
+    p_seq = []
+    for t in range(n):
+        remaining = true_total - t
+        true_bin = BINS.bin_of(max(remaining, 0))
+        p = np.full(k, 0.03)
+        p[true_bin] += 0.5
+        noise_bin = rng.integers(0, k)
+        p[noise_bin] += 0.6 * rng.random()
+        p /= p.sum()
+        p_seq.append(p)
+        raw_err.append(abs(p @ np.asarray(BINS.midpoints) - max(remaining, 0)))
+    preds = smooth_sequence(np.asarray(p_seq))
+    for t in range(n):
+        ref_err.append(abs(preds[t] - max(true_total - t, 0)))
+    assert np.mean(ref_err) < np.mean(raw_err)
+
+
+def test_degenerate_disagreement_recovers():
+    sm = BayesianSmoother()
+    q0 = np.zeros(BINS.n_bins)
+    q0[-1] = 1.0
+    sm.reset(q0)
+    p = np.zeros(BINS.n_bins)
+    p[0] = 1.0
+    sm.update(p)
+    assert np.isfinite(sm.q).all()
+    assert abs(sm.q.sum() - 1.0) < 1e-9

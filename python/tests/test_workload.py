@@ -1,0 +1,122 @@
+"""Workload generator: distribution properties + the golden vectors the
+Rust mirror is tested against."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import BINS, MODEL, WORKLOAD
+from compile.prng import SplitMix64, erfinv, normal_from_uniform
+from compile.workload import (
+    Request,
+    gen_requests,
+    golden_vectors,
+    response_token,
+    sample_output_len,
+)
+
+
+def test_splitmix_determinism():
+    a = SplitMix64(42)
+    b = SplitMix64(42)
+    assert [a.next_u64() for _ in range(16)] == [b.next_u64() for _ in range(16)]
+
+
+def test_splitmix_f64_unit_interval():
+    r = SplitMix64(7)
+    xs = [r.next_f64() for _ in range(5000)]
+    assert all(0.0 <= x < 1.0 for x in xs)
+    assert abs(np.mean(xs) - 0.5) < 0.02
+
+
+@given(st.integers(0, 2**64 - 1))
+@settings(max_examples=50, deadline=None)
+def test_splitmix_matches_reference_mixer(seed):
+    # next_u64 must be the standard SplitMix64 finalizer output.
+    r = SplitMix64(seed)
+    got = r.next_u64()
+    s = (seed + 0x9E3779B97F4A7C15) % 2**64
+    z = s
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) % 2**64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) % 2**64
+    assert got == (z ^ (z >> 31)) % 2**64
+
+
+def test_erfinv_accuracy():
+    for x in [-0.9, -0.3, 0.0, 0.4, 0.85]:
+        y = erfinv(x)
+        assert abs(math.erf(y) - x) < 5e-3
+
+
+def test_output_lengths_bounded_and_skewed():
+    rng = SplitMix64(1)
+    lens = [sample_output_len(rng) for _ in range(5000)]
+    assert min(lens) >= WORKLOAD.min_output
+    assert max(lens) <= WORKLOAD.max_output
+    assert np.mean(lens) > np.median(lens)  # heavy right tail
+
+
+def test_requests_structure():
+    reqs = gen_requests(100, 5)
+    for r in reqs:
+        assert r.prompt[0] == MODEL.bos_id
+        assert WORKLOAD.min_prompt <= len(r.prompt) <= WORKLOAD.max_prompt
+        assert len(r.response) == r.true_output_len - 1
+        assert all(MODEL.first_content_id <= t < MODEL.vocab for t in r.response)
+        assert all(0 <= t < MODEL.vocab for t in r.prompt)
+
+
+def test_response_tokens_encode_progress():
+    # With noise off, the response token is a deterministic function of
+    # the remaining-length bucket.
+    rng = SplitMix64(3)
+
+    class NoNoise:
+        resp_noise_p = 0.0
+        resp_bucket = WORKLOAD.resp_bucket
+
+    t_small = response_token(rng, 5, MODEL, NoNoise)
+    t_big = response_token(rng, 200, MODEL, NoNoise)
+    assert t_big > t_small
+
+
+def test_disjoint_seeds_disjoint_requests():
+    a = gen_requests(50, WORKLOAD.train_seed)
+    b = gen_requests(50, WORKLOAD.serve_seed)
+    assert any(x.prompt != y.prompt for x, y in zip(a, b))
+
+
+def test_golden_vectors_stable():
+    g1 = golden_vectors()
+    g2 = golden_vectors()
+    assert g1 == g2
+    assert len(g1["requests_seed12345"]) == 4
+    # u64 goldens round-trip through their string encoding.
+    for s in g1["splitmix_seed42_u64"]:
+        assert int(s) < 2**64
+
+
+def test_generation_is_prefix_stable():
+    # Generating N requests then N+k must agree on the first N.
+    a = gen_requests(10, 77)
+    b = gen_requests(15, 77)
+    for x, y in zip(a, b[:10]):
+        assert x.prompt == y.prompt
+        assert x.true_output_len == y.true_output_len
+        assert x.response == y.response
+
+
+def test_class_signal_monotone_in_prompt():
+    # Mean content-token id grows with the observed class (probe signal).
+    reqs = gen_requests(3000, 13)
+    by_class = {}
+    for r in reqs:
+        cls = BINS.bin_of(r.true_output_len)
+        m = np.mean(r.prompt[1:])
+        by_class.setdefault(cls, []).append(m)
+    keys = sorted(by_class)
+    lo = np.mean(by_class[keys[0]])
+    hi = np.mean(by_class[keys[-1]])
+    assert hi > lo + 15.0

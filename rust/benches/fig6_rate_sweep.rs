@@ -1,0 +1,88 @@
+//! E6 — paper Figure 6: mean/median latency and TTFT as a function of
+//! request rate for the four systems:
+//!
+//!   vLLM-FCFS · vLLM-SJF_BERT · TRAIL-BERT(c=0.8) · TRAIL(c=0.8)
+//!
+//! Real PJRT runtime. Rates are scaled to this stack's capacity
+//! (DESIGN.md §2: queueing behaviour depends on ρ, not absolute rate);
+//! override with TRAIL_BENCH_RATES="1,2,3".
+
+use trail::benchkit::serve_point_with;
+use trail::runtime::Engine;
+use trail::config::Config;
+use trail::coordinator::Policy;
+use trail::util::bench::{banner, scaled, Timer};
+use trail::util::csv::{f, Table};
+use trail::workload::ArrivalProcess;
+
+fn main() {
+    banner("fig6_rate_sweep", "Fig 6 — latency/TTFT vs request rate, 4 systems");
+    let cfg = Config::load_default().expect("run `make artifacts` first");
+    let n = scaled(160);
+    let rates: Vec<f64> = std::env::var("TRAIL_BENCH_RATES")
+        .ok()
+        .map(|v| v.split(',').map(|t| t.trim().parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![16.0, 20.0, 24.0, 28.0]);
+    println!("[{} requests per point; rates {:?} req/s]", n, rates);
+
+    let systems: Vec<(&str, Policy, bool)> = vec![
+        ("vLLM-FCFS", Policy::Fcfs, true),
+        ("vLLM-SJF_BERT", Policy::SjfPrompt, false),
+        ("TRAIL-BERT", Policy::Trail { c: 0.8 }, false),
+        ("TRAIL", Policy::Trail { c: 0.8 }, true),
+    ];
+
+    let mut table = Table::new(&[
+        "system", "rate", "mean_lat_s", "p50_lat_s", "mean_ttft_s", "p50_ttft_s",
+        "tok/s", "preempt", "discard",
+    ]);
+    let mut fcfs_at: Vec<(f64, f64, f64)> = Vec::new();
+    let mut trail_at: Vec<(f64, f64, f64)> = Vec::new();
+    let t0 = Timer::start();
+    let mut pjrt = Engine::load(&cfg, true).expect("engine");
+    for &rate in &rates {
+        for (name, policy, refined) in &systems {
+            let (s, eng) = serve_point_with(
+                &cfg,
+                pjrt,
+                policy.clone(),
+                *refined,
+                n,
+                ArrivalProcess::Poisson { lambda: rate, seed: 0xF16 ^ rate.to_bits() },
+                cfg.workload.serve_seed ^ 0x6,
+            )
+            .expect("serve");
+            pjrt = eng;
+            if *name == "vLLM-FCFS" {
+                fcfs_at.push((rate, s.mean_latency, s.mean_ttft));
+            }
+            if *name == "TRAIL" {
+                trail_at.push((rate, s.mean_latency, s.mean_ttft));
+            }
+            table.row(vec![
+                name.to_string(),
+                f(rate, 1),
+                f(s.mean_latency, 3),
+                f(s.median_latency, 3),
+                f(s.mean_ttft, 3),
+                f(s.median_ttft, 3),
+                f(s.throughput_tok_s, 1),
+                s.preemptions.to_string(),
+                s.discards.to_string(),
+            ]);
+            eprintln!("[fig6] {name} @ {rate}: done ({:.0}s elapsed)", t0.secs());
+        }
+    }
+    println!("{}", table.render());
+    println!("headline ratios (TRAIL vs vLLM-FCFS):");
+    for ((rate, fl, ft), (_, tl, tt)) in fcfs_at.iter().zip(&trail_at) {
+        println!(
+            "  rate {rate:>4.1}: {:.2}x lower mean latency, {:.2}x lower mean TTFT",
+            fl / tl,
+            ft / tt
+        );
+    }
+    println!("(paper: 1.66-2.01x latency, 1.76-24.07x TTFT across its rate range;");
+    println!(" SJF_BERT ≈ FCFS, both TRAIL variants below them, TRAIL lowest)");
+    table.save("artifacts/bench_fig6.csv").unwrap();
+}

@@ -1,0 +1,46 @@
+//! E8 — paper Figure 8 (Appendix D): M/G/1 simulation of SPRPT with
+//! limited preemption — mean response time and peak memory (Σ job age)
+//! across arrival rates and C values, for exponential and perfect
+//! predictors.
+
+use trail::qtheory::{simulate, PredictionModel, SimConfig};
+use trail::util::bench::{banner, scaled};
+use trail::util::csv::{f, Table};
+
+fn main() {
+    banner("fig8_queue_sim", "Fig 8 — response time + peak memory vs λ and C");
+    let jobs = scaled(120_000);
+    println!("[{} jobs per point]", jobs);
+
+    let mut table = Table::new(&[
+        "predictor", "λ", "C", "mean_resp", "peak_mem", "mean_mem", "preemptions",
+    ]);
+    for model in [PredictionModel::Exponential, PredictionModel::Perfect] {
+        for &lambda in &[0.5, 0.7, 0.9] {
+            for &c in &[0.2, 0.5, 0.8, 1.0] {
+                let r = simulate(SimConfig {
+                    lambda,
+                    c,
+                    model,
+                    n_jobs: jobs,
+                    seed: 0xF18,
+                    warmup_frac: 0.1,
+                });
+                table.row(vec![
+                    model.name().to_string(),
+                    f(lambda, 1),
+                    f(c, 1),
+                    f(r.mean_response, 3),
+                    f(r.peak_memory, 1),
+                    f(r.mean_memory, 3),
+                    r.n_preemptions.to_string(),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.render());
+    println!("paper shape (Fig 8): limiting preemption (smaller C) lowers peak");
+    println!("memory substantially while mean response time rises only mildly;");
+    println!("the effect grows with load.");
+    table.save("artifacts/bench_fig8.csv").unwrap();
+}

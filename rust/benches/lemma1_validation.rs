@@ -1,0 +1,71 @@
+//! E9 — Lemma 1 (Appendix C) validation: the SOAP closed form evaluated
+//! by numeric integration vs the exact event-driven simulator, including
+//! the comparison against the paper's *printed* recycled-term bound
+//! (which disagrees with classical SRPT at C=1 — a reproduction finding,
+//! see rust/src/qtheory/soap.rs).
+
+use trail::qtheory::dists::PredictionModel;
+use trail::qtheory::soap::SoapTables;
+use trail::qtheory::{simulate, SimConfig};
+use trail::util::bench::{banner, scaled};
+use trail::util::csv::{f, Table};
+
+fn main() {
+    banner("lemma1_validation", "Lemma 1 closed form vs simulation (App. C)");
+    let jobs = scaled(150_000);
+
+    let mut table = Table::new(&[
+        "predictor", "λ", "C", "E[T] sim", "E[T] lemma1*", "rel err", "B(2): ours vs printed",
+    ]);
+    for &(model, lambda, c) in &[
+        (PredictionModel::Perfect, 0.5, 1.0),
+        (PredictionModel::Perfect, 0.8, 1.0),
+        (PredictionModel::Perfect, 0.7, 0.8),
+        (PredictionModel::Perfect, 0.7, 0.5),
+        (PredictionModel::Exponential, 0.6, 1.0),
+        (PredictionModel::Exponential, 0.6, 0.8),
+    ] {
+        let t = SoapTables::new(lambda, c, model);
+        let theory = t.mean_response_time();
+        let sim = simulate(SimConfig {
+            lambda,
+            c,
+            model,
+            n_jobs: jobs,
+            seed: 0x1E44A1,
+            warmup_frac: 0.1,
+        });
+        let rel = (sim.mean_response - theory).abs() / theory;
+        table.row(vec![
+            model.name().to_string(),
+            f(lambda, 2),
+            f(c, 2),
+            f(sim.mean_response, 3),
+            f(theory, 3),
+            format!("{:.1}%", rel * 100.0),
+            format!("{:.4} / {:.4}", bterm(&t, 2.0), t.b_term_paper(2.0)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("* recycled term evaluated from the rank function (exact at C=1,");
+    println!("  classical Schrage SRPT); the paper's printed lower bound t=r+a0");
+    println!("  underestimates recycled work — shown in the last column.");
+}
+
+fn bterm(t: &SoapTables, r: f64) -> f64 {
+    // b_term is private; reconstruct via response-time decomposition:
+    // E[T(x,r)] with x→0 isolates the waiting term; instead just expose
+    // the paper-vs-ours comparison through b_term_paper and the full
+    // E[T]. For the table we approximate "ours" via the classical value
+    // at C=1 and the corrected two-piece integral otherwise.
+    let c = t.c;
+    if c >= 1.0 {
+        r * r * (-r).exp()
+    } else {
+        let split = r / (1.0 - c);
+        let p1 = r * r * ((-r as f64).exp() - (-split).exp());
+        let p2 = (1.0 - c) * (1.0 - c) * (-split).exp()
+            * (split * split + 2.0 * split + 2.0);
+        p1 + p2
+    }
+}

@@ -1,0 +1,64 @@
+//! E4 — paper Table 1: predictor inference time per sample (TPS) for the
+//! host-CPU path vs the batched accelerator path, batch ∈ {512,1024,2048}.
+//!
+//! Substitution (DESIGN.md §2): the paper compares CPU vs CUDA on its
+//! A100 box; here the "CPU" row is the native-Rust scalar MLP (the
+//! iteration hot path) and the accelerator row is the AOT Pallas-kernel
+//! predictor executable on PJRT.
+
+use trail::config::Config;
+use trail::predictor::NativeMlp;
+use trail::runtime::{Engine, ProbeWeights};
+use trail::util::bench::{banner, scaled, time_ns};
+use trail::util::csv::{f, Table};
+
+fn main() {
+    banner("table1_predictor_tps", "Table 1 — predictor µs/sample, CPU vs accelerator");
+    let cfg = Config::load_default().expect("run `make artifacts` first");
+    let engine = Engine::load(&cfg, true).expect("engine");
+    let weights = ProbeWeights::load(&cfg).expect("probe weights");
+    let layer = weights.best_layer;
+    let d = cfg.model.d_model;
+    let iters = scaled(30);
+
+    let mut table = Table::new(&["device", "batch", "mean (µs)", "std (µs)"]);
+    for &batch in &cfg.table1_batches.clone() {
+        let mut emb = vec![0f32; batch * d];
+        for (i, e) in emb.iter_mut().enumerate() {
+            *e = ((i * 2654435761) % 1000) as f32 / 500.0 - 1.0;
+        }
+
+        // "CPU": native Rust MLP, per-sample loop (no batching effects).
+        let mut native = NativeMlp::new(weights.layers[layer].clone(), d, weights.hidden,
+                                        cfg.bins.n_bins);
+        let mut out = vec![0f32; cfg.bins.n_bins];
+        let (mean_ns, std_ns) = time_ns(3, iters, || {
+            for row in 0..batch {
+                native.forward(&emb[row * d..(row + 1) * d], &mut out);
+                std::hint::black_box(&out);
+            }
+        });
+        table.row(vec![
+            "CPU (native rust)".into(),
+            batch.to_string(),
+            f(mean_ns / 1e3 / batch as f64, 3),
+            f(std_ns / 1e3 / batch as f64, 3),
+        ]);
+
+        // Accelerator: PJRT executable (Pallas predictor kernel).
+        let (mean_ns, std_ns) = time_ns(3, iters, || {
+            let p = engine.predict_layer(layer, &emb, batch).expect("predict");
+            std::hint::black_box(p);
+        });
+        table.row(vec![
+            "XLA/PJRT (pallas)".into(),
+            batch.to_string(),
+            f(mean_ns / 1e3 / batch as f64, 3),
+            f(std_ns / 1e3 / batch as f64, 3),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("paper shape: batched accelerator ~10x faster per sample than CPU,");
+    println!("both improving with batch size.");
+    table.save("artifacts/bench_table1.csv").unwrap();
+}

@@ -1,0 +1,237 @@
+//! Shared harness code for the paper-reproduction benches
+//! (`rust/benches/*`). Lives in the library so the benches stay thin and
+//! the replay logic is unit-testable.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::coordinator::{PjrtBackend, Policy, ServeConfig, ServingEngine};
+use crate::coordinator::metrics::MetricsSummary;
+use crate::predictor::{NativeMlp, Predictor, ProbePredictor, Smoother};
+use crate::runtime::{Engine, ProbeWeights};
+use crate::util::stats::Heatmap;
+use crate::workload::{gen_requests, ArrivalProcess, RequestSpec};
+
+/// Per-tap-point MAE accumulators for the Fig 2/3 evaluation.
+#[derive(Clone, Debug, Default)]
+pub struct LayerMae {
+    pub abs_err_raw: f64,
+    pub abs_err_refined: f64,
+    pub n: u64,
+}
+
+impl LayerMae {
+    pub fn mae_raw(&self) -> f64 {
+        self.abs_err_raw / self.n.max(1) as f64
+    }
+
+    pub fn mae_refined(&self) -> f64 {
+        self.abs_err_refined / self.n.max(1) as f64
+    }
+}
+
+/// Result of replaying a validation workload through the *real* PJRT
+/// engine while evaluating every probe per iteration.
+pub struct ProbeEval {
+    pub layers: Vec<LayerMae>,
+    pub bert_abs_err: f64,
+    pub bert_n: u64,
+    /// truth-bin × pred-bin count matrices (Fig 4).
+    pub heat_refined: Heatmap,
+    pub heat_bert: Heatmap,
+    pub n_requests: usize,
+    pub n_tokens: u64,
+}
+
+impl ProbeEval {
+    pub fn bert_mae(&self) -> f64 {
+        self.bert_abs_err / self.bert_n.max(1) as f64
+    }
+}
+
+/// Replay `n_requests` served requests (teacher-forced, like the serving
+/// engine) through the PJRT runtime, evaluating *all* tap-point probes +
+/// Bayesian refinement + the prompt-only baseline on every iteration.
+/// This regenerates Fig 2/3/4 from the Rust side of the stack.
+pub fn replay_probe_eval(cfg: &Config, n_requests: usize, seed: u64) -> Result<ProbeEval> {
+    let engine = Engine::load(cfg, true)?;
+    let weights: &ProbeWeights = engine.probe.as_ref().unwrap();
+    let n_taps = cfg.model.n_taps;
+    let d = cfg.model.d_model;
+    let k = cfg.bins.n_bins;
+    let b = cfg.model.batch_slots;
+    let mids = &cfg.bins.midpoints;
+
+    let mut mlps: Vec<NativeMlp> = weights
+        .layers
+        .iter()
+        .map(|w| NativeMlp::new(w.clone(), d, weights.hidden, k))
+        .collect();
+    let mut prompt_mlp = NativeMlp::new(weights.prompt.clone(), d, weights.hidden, k);
+
+    let requests = gen_requests(cfg, n_requests, seed);
+    let mut eval = ProbeEval {
+        layers: vec![LayerMae::default(); n_taps],
+        bert_abs_err: 0.0,
+        bert_n: 0,
+        heat_refined: Heatmap::new(k),
+        heat_bert: Heatmap::new(k),
+        n_requests,
+        n_tokens: 0,
+    };
+
+    let mut state = engine.init_state()?;
+    let mut probs = vec![0f32; k];
+
+    // Process requests in waves of B slots.
+    for wave in requests.chunks(b) {
+        // Per-slot prediction state.
+        let mut smoothers: Vec<Vec<Smoother>> = (0..wave.len())
+            .map(|_| (0..n_taps).map(|_| Smoother::new(&cfg.bins)).collect())
+            .collect();
+        let mut bert_totals = vec![0f64; wave.len()];
+
+        // Prefill every slot (chunked).
+        for (slot, spec) in wave.iter().enumerate() {
+            state = engine.slot_reset(state, slot as i32)?;
+            let c = cfg.model.prefill_chunk;
+            let mut start = 0usize;
+            while start < spec.prompt.len() {
+                let nv = (spec.prompt.len() - start).min(c);
+                state = engine.prefill_chunk(
+                    state,
+                    &spec.prompt[start..start + nv],
+                    slot as i32,
+                    start as i32,
+                    nv as i32,
+                )?;
+                start += nv;
+            }
+        }
+        let ro = engine.read(&state)?;
+        for (slot, spec) in wave.iter().enumerate() {
+            // Prompt probe (BERT analogue) from the mean prompt embedding.
+            let emb = ro.prompt_tap(0, slot, d, b);
+            prompt_mlp.forward(emb, &mut probs);
+            for sm in smoothers[slot].iter_mut() {
+                sm.reset(&probs);
+            }
+            bert_totals[slot] = probs
+                .iter()
+                .zip(mids)
+                .map(|(&p, m)| p as f64 * m)
+                .sum::<f64>();
+            // After prefill: 1 token generated, remaining = N - 1.
+            let remaining = spec.true_output_len as f64 - 1.0;
+            let bert_pred = (bert_totals[slot] - 1.0).max(0.0);
+            eval.bert_abs_err += (bert_pred - remaining).abs();
+            eval.bert_n += 1;
+            eval.heat_bert.add(
+                cfg.bins.bin_of(remaining),
+                cfg.bins.bin_of(bert_pred),
+            );
+        }
+
+        // Decode until every request in the wave is done.
+        let max_steps = wave.iter().map(|s| s.true_output_len).max().unwrap_or(1);
+        for step_j in 1..max_steps {
+            let mut tokens = vec![cfg.model.pad_id; b];
+            let mut pos = vec![0i32; b];
+            let mut active = vec![0f32; b];
+            let mut any = false;
+            for (slot, spec) in wave.iter().enumerate() {
+                if step_j < spec.true_output_len {
+                    tokens[slot] = spec.response[step_j - 1];
+                    pos[slot] = (spec.prompt.len() + step_j - 1) as i32;
+                    active[slot] = 1.0;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            state = engine.decode_step(state, &tokens, &pos, &active)?;
+            let ro = engine.read(&state)?;
+            for (slot, spec) in wave.iter().enumerate() {
+                if step_j >= spec.true_output_len {
+                    continue;
+                }
+                let remaining = (spec.true_output_len - step_j - 1) as f64;
+                eval.n_tokens += 1;
+                for tap in 0..n_taps {
+                    let emb = ro.tap(tap, slot, d, b);
+                    mlps[tap].forward(emb, &mut probs);
+                    let raw: f64 = probs
+                        .iter()
+                        .zip(mids)
+                        .map(|(&p, m)| p as f64 * m)
+                        .sum();
+                    let sm = &mut smoothers[slot][tap];
+                    sm.update(&probs);
+                    let refined = sm.predicted_length(mids);
+                    let lm = &mut eval.layers[tap];
+                    lm.abs_err_raw += (raw - remaining).abs();
+                    lm.abs_err_refined += (refined - remaining).abs();
+                    lm.n += 1;
+                    if tap == weights.best_layer {
+                        eval.heat_refined.add(
+                            cfg.bins.bin_of(remaining),
+                            cfg.bins.bin_of(refined),
+                        );
+                    }
+                }
+                // BERT static estimate decays with age.
+                let bert_pred = (bert_totals[slot] - (step_j + 1) as f64).max(0.0);
+                eval.bert_abs_err += (bert_pred - remaining).abs();
+                eval.bert_n += 1;
+                eval.heat_bert.add(
+                    cfg.bins.bin_of(remaining),
+                    cfg.bins.bin_of(bert_pred),
+                );
+            }
+        }
+    }
+    Ok(eval)
+}
+
+/// Run one serving benchmark point on the real PJRT runtime with the
+/// probe predictor. `refined=false` gives the TRAIL-BERT / SJF static
+/// prediction mode.
+pub fn serve_point(
+    cfg: &Config,
+    policy: Policy,
+    refined: bool,
+    n: usize,
+    arrivals: ArrivalProcess,
+    seed: u64,
+) -> Result<MetricsSummary> {
+    let engine = Engine::load(cfg, true)?;
+    let (s, _engine) = serve_point_with(cfg, engine, policy, refined, n, arrivals, seed)?;
+    Ok(s)
+}
+
+/// Like `serve_point` but reuses an already-compiled PJRT engine (fresh
+/// zero state per run) and hands it back — benchmark sweeps compile the
+/// 5 MB HLO once instead of once per point.
+pub fn serve_point_with(
+    cfg: &Config,
+    pjrt: Engine,
+    policy: Policy,
+    refined: bool,
+    n: usize,
+    arrivals: ArrivalProcess,
+    seed: u64,
+) -> Result<(MetricsSummary, Engine)> {
+    let backend = PjrtBackend::from_engine(pjrt)?;
+    let weights = ProbeWeights::load(cfg)?;
+    let mut pred = ProbePredictor::new(cfg, &weights);
+    pred.refine = refined;
+    let predictor: Box<dyn Predictor> = Box::new(pred);
+    let serve = ServeConfig::new(cfg, policy);
+    let mut engine = ServingEngine::new(cfg, serve, backend, predictor);
+    let specs: Vec<RequestSpec> = gen_requests(cfg, n, seed);
+    let sched = arrivals.schedule(n);
+    let rep = engine.run(specs, sched)?;
+    let summary = rep.summary;
+    Ok((summary, engine.into_backend().into_engine()))
+}

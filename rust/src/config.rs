@@ -1,0 +1,214 @@
+//! Runtime configuration, loaded from `artifacts/config.json` (the single
+//! source of truth written by the AOT pipeline — the Rust side never
+//! hard-codes a model shape).
+
+use crate::util::json::{parse_file, Json};
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub batch_slots: usize,
+    pub prefill_chunk: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub first_content_id: i32,
+    pub n_taps: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct BinsConfig {
+    pub n_bins: usize,
+    pub max_len: usize,
+    pub width: f64,
+    pub midpoints: Vec<f64>,
+}
+
+impl BinsConfig {
+    pub fn bin_of(&self, len: f64) -> usize {
+        ((len / self.width) as usize).min(self.n_bins - 1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    pub min_output: usize,
+    pub max_output: usize,
+    pub lognormal_mu: f64,
+    pub lognormal_sigma: f64,
+    pub geom_p: f64,
+    pub class_jitter_sigma: f64,
+    pub resp_bucket: usize,
+    pub resp_noise_p: f64,
+    pub train_seed: u64,
+    pub serve_seed: u64,
+}
+
+/// Offsets (in f32 elements) into the packed device state tensor.
+#[derive(Clone, Debug)]
+pub struct StateLayout {
+    pub kv_off: usize,
+    pub kv_len: usize,
+    pub logits_off: usize,
+    pub logits_len: usize,
+    pub taps_off: usize,
+    pub taps_len: usize,
+    pub ptap_off: usize,
+    pub ptap_len: usize,
+    pub pcnt_off: usize,
+    pub pcnt_len: usize,
+    pub total: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactNames {
+    pub step: String,
+    pub prefill: String,
+    pub readout: String,
+    pub predictor_prefix: String,
+    pub probe_weights: String,
+    pub golden: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub model: ModelConfig,
+    pub bins: BinsConfig,
+    pub workload: WorkloadConfig,
+    pub layout: StateLayout,
+    pub artifacts: ArtifactNames,
+    pub probe_hidden: usize,
+    pub table1_batches: Vec<usize>,
+    /// Directory config.json was loaded from; artifact paths resolve
+    /// relative to it.
+    pub dir: String,
+}
+
+impl Config {
+    pub fn load(dir: &str) -> Result<Config, String> {
+        let path = format!("{dir}/config.json");
+        let j = parse_file(&path)?;
+        Ok(Self::from_json(&j, dir))
+    }
+
+    /// Default location: `artifacts/` under the crate root or cwd.
+    pub fn load_default() -> Result<Config, String> {
+        for dir in ["artifacts", "../artifacts", "../../artifacts"] {
+            if std::path::Path::new(&format!("{dir}/config.json")).exists() {
+                return Self::load(dir);
+            }
+        }
+        Err("artifacts/config.json not found — run `make artifacts`".into())
+    }
+
+    pub fn artifact_path(&self, name: &str) -> String {
+        format!("{}/{}", self.dir, name)
+    }
+
+    fn from_json(j: &Json, dir: &str) -> Config {
+        let m = j.at(&["model"]);
+        let model = ModelConfig {
+            vocab: m.at(&["vocab"]).as_usize(),
+            d_model: m.at(&["d_model"]).as_usize(),
+            n_layers: m.at(&["n_layers"]).as_usize(),
+            n_heads: m.at(&["n_heads"]).as_usize(),
+            d_head: m.at(&["d_head"]).as_usize(),
+            max_seq: m.at(&["max_seq"]).as_usize(),
+            batch_slots: m.at(&["batch_slots"]).as_usize(),
+            prefill_chunk: m.at(&["prefill_chunk"]).as_usize(),
+            pad_id: m.at(&["pad_id"]).as_i64() as i32,
+            bos_id: m.at(&["bos_id"]).as_i64() as i32,
+            eos_id: m.at(&["eos_id"]).as_i64() as i32,
+            first_content_id: m.at(&["first_content_id"]).as_i64() as i32,
+            n_taps: m.at(&["n_layers"]).as_usize() + 1,
+        };
+        let b = j.at(&["bins"]);
+        let bins = BinsConfig {
+            n_bins: b.at(&["n_bins"]).as_usize(),
+            max_len: b.at(&["max_len"]).as_usize(),
+            width: b.at(&["width"]).as_f64(),
+            midpoints: b.at(&["midpoints"]).as_f64_vec(),
+        };
+        let w = j.at(&["workload"]);
+        let workload = WorkloadConfig {
+            min_prompt: w.at(&["min_prompt"]).as_usize(),
+            max_prompt: w.at(&["max_prompt"]).as_usize(),
+            min_output: w.at(&["min_output"]).as_usize(),
+            max_output: w.at(&["max_output"]).as_usize(),
+            lognormal_mu: w.at(&["lognormal_mu"]).as_f64(),
+            lognormal_sigma: w.at(&["lognormal_sigma"]).as_f64(),
+            geom_p: w.at(&["geom_p"]).as_f64(),
+            class_jitter_sigma: w.at(&["class_jitter_sigma"]).as_f64(),
+            resp_bucket: w.at(&["resp_bucket"]).as_usize(),
+            resp_noise_p: w.at(&["resp_noise_p"]).as_f64(),
+            train_seed: w.at(&["train_seed"]).as_i64() as u64,
+            serve_seed: w.at(&["serve_seed"]).as_i64() as u64,
+        };
+        let l = j.at(&["layout"]);
+        let layout = StateLayout {
+            kv_off: l.at(&["kv_off"]).as_usize(),
+            kv_len: l.at(&["kv_len"]).as_usize(),
+            logits_off: l.at(&["logits_off"]).as_usize(),
+            logits_len: l.at(&["logits_len"]).as_usize(),
+            taps_off: l.at(&["taps_off"]).as_usize(),
+            taps_len: l.at(&["taps_len"]).as_usize(),
+            ptap_off: l.at(&["ptap_off"]).as_usize(),
+            ptap_len: l.at(&["ptap_len"]).as_usize(),
+            pcnt_off: l.at(&["pcnt_off"]).as_usize(),
+            pcnt_len: l.at(&["pcnt_len"]).as_usize(),
+            total: l.at(&["total"]).as_usize(),
+        };
+        let a = j.at(&["artifacts"]);
+        let artifacts = ArtifactNames {
+            step: a.at(&["step"]).as_str().to_string(),
+            prefill: a.at(&["prefill"]).as_str().to_string(),
+            readout: a.at(&["readout"]).as_str().to_string(),
+            predictor_prefix: a.at(&["predictor_prefix"]).as_str().to_string(),
+            probe_weights: a.at(&["probe_weights"]).as_str().to_string(),
+            golden: a.at(&["golden"]).as_str().to_string(),
+        };
+        Config {
+            model,
+            bins,
+            workload,
+            layout,
+            artifacts,
+            probe_hidden: j.at(&["probe", "hidden"]).as_usize(),
+            table1_batches: j
+                .at(&["probe", "table1_batches"])
+                .as_i64_vec()
+                .iter()
+                .map(|&x| x as usize)
+                .collect(),
+            dir: dir.to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_artifact_config() {
+        // Requires `make artifacts`; all integration-level tests do.
+        let cfg = Config::load_default().expect("run `make artifacts` first");
+        assert_eq!(cfg.bins.n_bins, cfg.bins.midpoints.len());
+        assert_eq!(
+            cfg.layout.total,
+            cfg.layout.pcnt_off + cfg.layout.pcnt_len
+        );
+        assert_eq!(cfg.model.n_taps, cfg.model.n_layers + 1);
+        assert!((cfg.bins.width - cfg.bins.max_len as f64 / cfg.bins.n_bins as f64).abs() < 1e-9);
+        // Layout regions tile the state exactly.
+        assert_eq!(cfg.layout.logits_off, cfg.layout.kv_off + cfg.layout.kv_len);
+        assert_eq!(cfg.layout.taps_off, cfg.layout.logits_off + cfg.layout.logits_len);
+    }
+}

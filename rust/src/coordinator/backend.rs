@@ -1,0 +1,217 @@
+//! Model-backend abstraction for the serving engine.
+//!
+//! `PjrtBackend` drives the real AOT artifacts through the runtime
+//! (device-resident packed state). `MockBackend` replays the same
+//! interface with synthetic outputs and a configurable per-call cost
+//! model, so every scheduler invariant can be tested (and the fast
+//! virtual-clock benches run) without PJRT in the loop.
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::config::Config;
+use crate::runtime::{Engine, Readout};
+
+/// Virtual cost (seconds) of backend calls — calibrated against the real
+/// engine for the virtual-clock benches; see EXPERIMENTS.md §Perf.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub decode_step: f64,
+    pub prefill_chunk: f64,
+    pub readout: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Defaults in the ballpark of the measured PJRT CPU numbers.
+        Self {
+            decode_step: 2.0e-3,
+            prefill_chunk: 2.5e-3,
+            readout: 0.3e-3,
+        }
+    }
+}
+
+pub trait ModelBackend {
+    fn slots(&self) -> usize;
+
+    fn prefill_chunk(&mut self, slot: usize, tokens: &[i32], start: usize, nvalid: usize)
+        -> Result<()>;
+
+    fn decode_step(&mut self, tokens: &[i32], pos: &[i32], active: &[f32]) -> Result<()>;
+
+    fn read(&mut self) -> Result<Readout>;
+
+    fn slot_reset(&mut self, slot: usize) -> Result<()>;
+
+    /// Virtual cost of the calls made since the previous `take_cost`
+    /// (virtual-clock engines advance time by this; the real-clock engine
+    /// ignores it and uses wall time).
+    fn take_cost(&mut self) -> f64;
+}
+
+// ---------------------------------------------------------------------------
+// PJRT (real) backend
+// ---------------------------------------------------------------------------
+
+pub struct PjrtBackend {
+    pub engine: Engine,
+    state: Option<PjRtBuffer>,
+    cost: CostModel,
+    pending_cost: f64,
+}
+
+impl PjrtBackend {
+    pub fn new(cfg: &Config, with_probe: bool) -> Result<Self> {
+        let engine = Engine::load(cfg, with_probe)?;
+        Self::from_engine(engine)
+    }
+
+    /// Reuse an already-compiled engine (fresh zero state) — avoids
+    /// recompiling the 5 MB HLO between benchmark points.
+    pub fn from_engine(engine: Engine) -> Result<Self> {
+        let state = engine.init_state()?;
+        Ok(Self {
+            engine,
+            state: Some(state),
+            cost: CostModel::default(),
+            pending_cost: 0.0,
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn into_engine(self) -> Engine {
+        self.engine
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn slots(&self) -> usize {
+        self.engine.cfg.model.batch_slots
+    }
+
+    fn prefill_chunk(&mut self, slot: usize, tokens: &[i32], start: usize, nvalid: usize)
+        -> Result<()> {
+        let state = self.state.take().expect("state in flight");
+        let new = self.engine.prefill_chunk(
+            state,
+            tokens,
+            slot as i32,
+            start as i32,
+            nvalid as i32,
+        )?;
+        self.state = Some(new);
+        self.pending_cost += self.cost.prefill_chunk;
+        Ok(())
+    }
+
+    fn decode_step(&mut self, tokens: &[i32], pos: &[i32], active: &[f32]) -> Result<()> {
+        let state = self.state.take().expect("state in flight");
+        let new = self.engine.decode_step(state, tokens, pos, active)?;
+        self.state = Some(new);
+        self.pending_cost += self.cost.decode_step;
+        Ok(())
+    }
+
+    fn read(&mut self) -> Result<Readout> {
+        self.pending_cost += self.cost.readout;
+        self.engine.read(self.state.as_ref().expect("state in flight"))
+    }
+
+    fn slot_reset(&mut self, slot: usize) -> Result<()> {
+        let state = self.state.take().expect("state in flight");
+        let new = self.engine.slot_reset(state, slot as i32)?;
+        self.state = Some(new);
+        Ok(())
+    }
+
+    fn take_cost(&mut self) -> f64 {
+        std::mem::take(&mut self.pending_cost)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock backend (tests + virtual-clock benches)
+// ---------------------------------------------------------------------------
+
+/// Replays the backend contract with synthetic embeddings: tap vectors
+/// are zeros, prompt taps are zeros, argmax returns a fixed content
+/// token. Prediction quality is then supplied by `OraclePredictor` in the
+/// tests — the engine's *scheduling* behaviour is identical.
+pub struct MockBackend {
+    slots: usize,
+    n_taps: usize,
+    d_model: usize,
+    vocab: usize,
+    cost: CostModel,
+    pending_cost: f64,
+    pub n_decode_steps: u64,
+    pub n_prefill_chunks: u64,
+    /// (slot, start, nvalid) log for invariant checks.
+    pub prefill_log: Vec<(usize, usize, usize)>,
+}
+
+impl MockBackend {
+    pub fn new(slots: usize, cfg: &Config) -> Self {
+        Self {
+            slots,
+            n_taps: cfg.model.n_taps,
+            d_model: cfg.model.d_model,
+            vocab: cfg.model.vocab,
+            cost: CostModel::default(),
+            pending_cost: 0.0,
+            n_decode_steps: 0,
+            n_prefill_chunks: 0,
+            prefill_log: Vec::new(),
+        }
+    }
+
+    pub fn with_cost(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+}
+
+impl ModelBackend for MockBackend {
+    fn slots(&self) -> usize {
+        self.slots
+    }
+
+    fn prefill_chunk(&mut self, slot: usize, _tokens: &[i32], start: usize, nvalid: usize)
+        -> Result<()> {
+        self.n_prefill_chunks += 1;
+        self.prefill_log.push((slot, start, nvalid));
+        self.pending_cost += self.cost.prefill_chunk;
+        Ok(())
+    }
+
+    fn decode_step(&mut self, tokens: &[i32], pos: &[i32], active: &[f32]) -> Result<()> {
+        assert_eq!(tokens.len(), self.slots);
+        assert_eq!(pos.len(), self.slots);
+        assert_eq!(active.len(), self.slots);
+        self.n_decode_steps += 1;
+        self.pending_cost += self.cost.decode_step;
+        Ok(())
+    }
+
+    fn read(&mut self) -> Result<Readout> {
+        self.pending_cost += self.cost.readout;
+        Ok(Readout {
+            logits: vec![0.0; self.slots * self.vocab],
+            taps: vec![0.0; self.n_taps * self.slots * self.d_model],
+            prompt_taps: vec![0.0; self.n_taps * self.slots * self.d_model],
+            argmax: vec![8; self.slots],
+        })
+    }
+
+    fn slot_reset(&mut self, _slot: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn take_cost(&mut self) -> f64 {
+        std::mem::take(&mut self.pending_cost)
+    }
+}

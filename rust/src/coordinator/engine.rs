@@ -1,0 +1,587 @@
+//! The iteration-level serving engine (paper Fig 1).
+//!
+//! Every iteration:
+//!
+//! 1. admit arrivals whose time has come;
+//! 2. rank all schedulable requests under the active policy and choose
+//!    the target set (≤ B slots), evicting/discarding under memory
+//!    pressure (paper's recompute OOM mode);
+//! 3. issue up to `prefill_chunks_per_iter` chunked-prefill calls for
+//!    targets still prefilling;
+//! 4. issue one decode step for the ready targets;
+//! 5. read out logits/taps, count tokens (EOS forced at the ground-truth
+//!    length, as in fixed-output-length serving benchmarks), refine
+//!    predictions (probe + Bayesian smoother), finish requests;
+//! 6. advance the clock (wall time, or the backend's virtual cost model).
+//!
+//! Preemption semantics (paper §3.3): a `Running` request pushed out of
+//! the target set stays resident (KV held — `Preempted`); if memory is
+//! needed, the worst-ranked non-locked resident request is *discarded*
+//! (KV dropped, recompute later). Requests older than ⌊C·r⌋ tokens are
+//! locked and cannot be pushed out at all.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::coordinator::backend::ModelBackend;
+use crate::coordinator::kv::KvManager;
+use crate::coordinator::metrics::{Metrics, MetricsSummary};
+use crate::coordinator::policy::Policy;
+use crate::coordinator::request::{Phase, Request};
+use crate::predictor::Predictor;
+use crate::workload::{Arrival, RequestSpec};
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub policy: Policy,
+    /// KV token pool (the "GPU memory" budget). Default: 55% of B·S —
+    /// enough to run full batches of average requests, tight enough that
+    /// preemption hoarding hurts, like the paper's A100 setup.
+    pub pool_tokens: usize,
+    /// Chunked-prefill budget per iteration (chunk calls).
+    pub prefill_chunks_per_iter: usize,
+    /// Eviction hysteresis (tokens): a resident request is discarded for
+    /// a newcomer only when the newcomer's predicted remaining length is
+    /// smaller by at least this margin. Probe predictions are
+    /// bin-granular (width 25.6 tokens); sub-bin differences are noise
+    /// and churning on them wastes recompute (EXPERIMENTS.md §Perf L3).
+    pub evict_margin: f64,
+    /// Use wall time (true) or the backend's virtual cost model (false).
+    pub real_clock: bool,
+    /// Stop after this many iterations (safety valve; 0 = unlimited).
+    pub max_iterations: u64,
+}
+
+impl ServeConfig {
+    pub fn new(cfg: &Config, policy: Policy) -> Self {
+        Self {
+            policy,
+            pool_tokens: cfg.model.batch_slots * cfg.model.max_seq * 55 / 100,
+            prefill_chunks_per_iter: 2,
+            evict_margin: cfg.bins.width / 2.0,
+            real_clock: true,
+            max_iterations: 0,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ServeReport {
+    pub summary: MetricsSummary,
+    pub policy: String,
+    pub predictor: String,
+    pub n_iterations: u64,
+    pub wall_time: f64,
+}
+
+/// A live request submitted through `run_online` (HTTP server path).
+pub struct OnlineJob {
+    pub spec: RequestSpec,
+    pub done: std::sync::mpsc::Sender<OnlineDone>,
+}
+
+/// Completion notification for an `OnlineJob`.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineDone {
+    pub rid: u64,
+    pub latency: f64,
+    pub ttft: f64,
+    pub n_tokens: usize,
+}
+
+pub struct ServingEngine<B: ModelBackend> {
+    cfg: Config,
+    serve: ServeConfig,
+    backend: B,
+    predictor: Box<dyn Predictor>,
+    kv: KvManager,
+    pub metrics: Metrics,
+    /// rids finished, in completion order (run_online notification).
+    finished_rids: Vec<u64>,
+}
+
+impl<B: ModelBackend> ServingEngine<B> {
+    pub fn new(
+        cfg: &Config,
+        serve: ServeConfig,
+        backend: B,
+        predictor: Box<dyn Predictor>,
+    ) -> Self {
+        let kv = KvManager::new(
+            backend.slots(),
+            cfg.model.max_seq,
+            serve.pool_tokens,
+        );
+        Self {
+            cfg: cfg.clone(),
+            serve,
+            backend,
+            predictor,
+            kv,
+            metrics: Metrics::default(),
+            finished_rids: Vec::new(),
+        }
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn into_backend(self) -> B {
+        self.backend
+    }
+
+    /// Serve a full workload; returns when every request has finished.
+    pub fn run(&mut self, specs: Vec<RequestSpec>, arrivals: Vec<Arrival>) -> Result<ServeReport> {
+        assert_eq!(specs.len(), arrivals.len());
+        let mut requests: Vec<Request> = Vec::with_capacity(specs.len());
+        // arrivals sorted by time; specs indexed by arrival.idx.
+        let mut arrival_iter = arrivals.into_iter().peekable();
+        let mut specs: Vec<Option<RequestSpec>> = specs.into_iter().map(Some).collect();
+
+        let wall_start = std::time::Instant::now();
+        let mut now = 0.0f64;
+        let mut n_iter: u64 = 0;
+        let mut n_unfinished = specs.len();
+
+        while n_unfinished > 0 {
+            if self.serve.max_iterations > 0 && n_iter >= self.serve.max_iterations {
+                anyhow::bail!("max_iterations exceeded ({n_iter}) — scheduler stall?");
+            }
+
+            // ---- 1. admission ----
+            while let Some(a) = arrival_iter.peek() {
+                if a.at <= now {
+                    let a = arrival_iter.next().unwrap();
+                    let spec = specs[a.idx].take().expect("double admission");
+                    let mut req = Request::new(spec, a.at, &self.cfg.bins);
+                    self.predictor.init_request(&mut req);
+                    requests.push(req);
+                } else {
+                    break;
+                }
+            }
+
+            // Nothing live? Advance to the next arrival: jump the virtual
+            // clock, or actually wait on the wall clock (jumping a real
+            // clock would stamp first tokens before their arrivals).
+            let any_live = requests.iter().any(|r| r.is_schedulable());
+            if !any_live {
+                match arrival_iter.peek() {
+                    Some(a) => {
+                        if self.serve.real_clock {
+                            let wait = a.at - wall_start.elapsed().as_secs_f64();
+                            if wait > 0.0 {
+                                std::thread::sleep(std::time::Duration::from_secs_f64(
+                                    wait.min(0.02),
+                                ));
+                            }
+                            now = wall_start.elapsed().as_secs_f64();
+                        } else {
+                            now = now.max(a.at);
+                        }
+                        continue;
+                    }
+                    None => break, // all finished
+                }
+            }
+
+            now = self.tick(&mut requests, &wall_start, now, &mut n_unfinished)?;
+            n_iter += 1;
+        }
+
+        let wall = wall_start.elapsed().as_secs_f64();
+        self.metrics.wall_time = if self.serve.real_clock { wall } else { now };
+        self.metrics.n_iterations = n_iter;
+        self.metrics.peak_slots = self.kv.peak_slots;
+        Ok(ServeReport {
+            summary: self.metrics.summary_row(),
+            policy: self.serve.policy.name(),
+            predictor: self.predictor.name().to_string(),
+            n_iterations: n_iter,
+            wall_time: self.metrics.wall_time,
+        })
+    }
+
+    /// Serve from a live channel (the HTTP server path): each `OnlineJob`
+    /// is admitted when received; its completion is signalled back on its
+    /// response channel. Returns when the channel is closed and all
+    /// admitted work has drained. Always uses the real clock.
+    pub fn run_online(
+        &mut self,
+        rx: std::sync::mpsc::Receiver<OnlineJob>,
+    ) -> Result<ServeReport> {
+        let mut requests: Vec<Request> = Vec::new();
+        let mut responders: std::collections::HashMap<u64, std::sync::mpsc::Sender<OnlineDone>> =
+            std::collections::HashMap::new();
+        let wall_start = std::time::Instant::now();
+        let mut now = 0.0f64;
+        let mut n_iter: u64 = 0;
+        let mut n_unfinished = 0usize;
+        let mut open = true;
+
+        loop {
+            // ---- admission (non-blocking drain; block when idle) ----
+            loop {
+                let job = if n_unfinished == 0 && open {
+                    // Idle: block until work arrives or channel closes.
+                    match rx.recv() {
+                        Ok(j) => Some(j),
+                        Err(_) => {
+                            open = false;
+                            None
+                        }
+                    }
+                } else {
+                    match rx.try_recv() {
+                        Ok(j) => Some(j),
+                        Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            None
+                        }
+                    }
+                };
+                let Some(job) = job else { break };
+                now = wall_start.elapsed().as_secs_f64();
+                let mut req = Request::new(job.spec, now, &self.cfg.bins);
+                self.predictor.init_request(&mut req);
+                responders.insert(req.spec.rid, job.done);
+                requests.push(req);
+                n_unfinished += 1;
+            }
+            if n_unfinished == 0 {
+                if !open {
+                    break;
+                }
+                continue;
+            }
+
+            let before = self.finished_rids.len();
+            now = self.tick(&mut requests, &wall_start, now, &mut n_unfinished)?;
+            n_iter += 1;
+            for rid in self.finished_rids.drain(before..).collect::<Vec<_>>() {
+                if let Some(tx) = responders.remove(&rid) {
+                    let r = requests.iter().find(|r| r.spec.rid == rid).unwrap();
+                    let _ = tx.send(OnlineDone {
+                        rid,
+                        latency: r.latency().unwrap_or(0.0),
+                        ttft: r.ttft().unwrap_or(0.0),
+                        n_tokens: r.generated,
+                    });
+                }
+            }
+        }
+
+        self.metrics.wall_time = wall_start.elapsed().as_secs_f64();
+        self.metrics.n_iterations = n_iter;
+        self.metrics.peak_slots = self.kv.peak_slots;
+        Ok(ServeReport {
+            summary: self.metrics.summary_row(),
+            policy: self.serve.policy.name(),
+            predictor: self.predictor.name().to_string(),
+            n_iterations: n_iter,
+            wall_time: self.metrics.wall_time,
+        })
+    }
+
+    /// One engine iteration (steps 2-6 of the loop). Returns the new
+    /// clock value.
+    fn tick(
+        &mut self,
+        requests: &mut Vec<Request>,
+        wall_start: &std::time::Instant,
+        now_in: f64,
+        n_unfinished: &mut usize,
+    ) -> Result<f64> {
+        let mut now = now_in;
+        {
+        // ---- 2. memory pressure, then target-set selection ----
+        self.resolve_oom(requests);
+        let target = self.select_targets(requests);
+
+        // ---- 3. prefill budget ----
+        let mut prefill_done_now: Vec<usize> = Vec::new();
+        let mut budget = self.serve.prefill_chunks_per_iter;
+        for &idx in &target {
+            if budget == 0 {
+                break;
+            }
+            let r = &mut requests[idx];
+            if r.prefill_done() {
+                continue;
+            }
+            let slot = r.slot.expect("target without slot");
+            while budget > 0 && !r.prefill_done() {
+                let tokens = r.prefill_tokens();
+                let start = r.prefilled;
+                let nvalid =
+                    (tokens.len() - start).min(self.cfg.model.prefill_chunk);
+                // Memory discipline: never prefill past the pool —
+                // the request waits until discards/completions make
+                // room (resolve_oom runs each iteration).
+                if !self.kv.fits(nvalid) {
+                    break;
+                }
+                self.backend
+                    .prefill_chunk(slot, &tokens[start..start + nvalid], start, nvalid)?;
+                r.prefilled += nvalid;
+                r.kv_written = r.prefilled;
+                self.kv.charge(slot, r.spec.rid, r.resident_tokens());
+                budget -= 1;
+            }
+            self.kv.charge(slot, r.spec.rid, r.resident_tokens());
+            if r.prefill_done() {
+                prefill_done_now.push(idx);
+            }
+        }
+
+        // ---- 4. decode step ----
+        let b = self.backend.slots();
+        let mut tokens = vec![self.cfg.model.pad_id; b];
+        let mut pos = vec![0i32; b];
+        let mut active = vec![0f32; b];
+        let mut decoding: Vec<usize> = Vec::new();
+        for &idx in &target {
+            let r = &requests[idx];
+            // Ready to decode: fully prefilled *before* this iteration
+            // (requests whose prefill completed now get their first
+            // token from the prefill logits at readout instead).
+            if r.phase == Phase::Running && r.prefill_done() && r.generated >= 1
+                && !prefill_done_now.contains(&idx)
+            {
+                let slot = r.slot.unwrap();
+                tokens[slot] = r.next_decode_token();
+                pos[slot] = r.next_decode_pos() as i32;
+                active[slot] = 1.0;
+                decoding.push(idx);
+            }
+        }
+        if !decoding.is_empty() {
+            self.backend.decode_step(&tokens, &pos, &active)?;
+        }
+
+        // ---- 5. readout + bookkeeping ----
+        if !decoding.is_empty() || !prefill_done_now.is_empty() {
+            let readout = self.backend.read()?;
+
+            // Advance the clock before stamping token times.
+            now = self.advance_clock(wall_start, now);
+
+            for idx in prefill_done_now {
+                let r = &mut requests[idx];
+                let slot = r.slot.unwrap();
+                if r.generated == 0 {
+                    // Initial prefill → first token (TTFT, like vLLM).
+                    r.generated = 1;
+                    r.first_token_at = Some(now);
+                }
+                // Recompute prefill: tokens were already produced;
+                // nothing to stamp.
+                self.kv.charge(slot, r.spec.rid, r.resident_tokens());
+                self.finish_if_done(&mut requests[idx], now, n_unfinished);
+            }
+            for idx in decoding {
+                let r = &mut requests[idx];
+                let slot = r.slot.unwrap();
+                // This step wrote KV at next_decode_pos (pre-increment).
+                r.kv_written = r.kv_written.max(r.next_decode_pos() + 1);
+                r.generated += 1;
+                self.predictor.on_token(r, &readout, slot);
+                self.kv.charge(slot, r.spec.rid, r.resident_tokens());
+                self.finish_if_done(&mut requests[idx], now, n_unfinished);
+            }
+        } else {
+            // Pure-prefill iteration (or idle): still advances time.
+            now = self.advance_clock(wall_start, now);
+        }
+
+        }
+        self.metrics.peak_mem_tokens = self.metrics.peak_mem_tokens.max(self.kv.used_tokens());
+        Ok(now)
+    }
+
+    fn advance_clock(&mut self, wall_start: &std::time::Instant, now: f64) -> f64 {
+        let cost = self.backend.take_cost();
+        if self.serve.real_clock {
+            wall_start.elapsed().as_secs_f64()
+        } else {
+            now + cost
+        }
+    }
+
+    fn finish_if_done(&mut self, r: &mut Request, now: f64, n_unfinished: &mut usize) {
+        if r.done() && r.phase != Phase::Finished {
+            r.finished_at = Some(now);
+            r.phase = Phase::Finished;
+            if let Some(slot) = r.slot.take() {
+                self.kv.free(slot, r.spec.rid);
+            }
+            self.metrics.observe_finish(r);
+            self.finished_rids.push(r.spec.rid);
+            *n_unfinished -= 1;
+        }
+    }
+
+    /// OOM handling (paper §4 setup: "discard jobs and recompute them
+    /// once memory becomes available"): while the resident set exceeds
+    /// the pool, discard the worst-ranked resident — preferring requests
+    /// that are still preemptable; if all are locked, progress still
+    /// requires a victim (vLLM behaves the same way: memory pressure
+    /// overrides priority).
+    fn resolve_oom(&mut self, requests: &mut [Request]) {
+        let policy = self.serve.policy.clone();
+        let c = match policy {
+            Policy::Trail { c } => c,
+            _ => 1.0,
+        };
+        while !self.kv.fits(0) {
+            let resident = |r: &Request| r.slot.is_some() && r.phase != Phase::Finished;
+            let victim = requests
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| resident(r) && r.preemptable(c))
+                .max_by(|(_, a), (_, z)| policy.rank(a).cmp(&policy.rank(z)))
+                .or_else(|| {
+                    requests
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| resident(r))
+                        .max_by(|(_, a), (_, z)| policy.rank(a).cmp(&policy.rank(z)))
+                })
+                .map(|(i, _)| i);
+            let Some(vi) = victim else { break };
+            let r = &mut requests[vi];
+            let slot = r.slot.take().unwrap();
+            self.kv.free(slot, r.spec.rid);
+            r.phase = Phase::Discarded;
+            r.prefilled = 0;
+            r.kv_written = 0;
+            r.n_discards += 1;
+        }
+    }
+
+    /// Rank everything, pick ≤ B targets, allocate slots, evict under
+    /// pressure. Returns indices into `requests`, rank order.
+    fn select_targets(&mut self, requests: &mut [Request]) -> Vec<usize> {
+        let policy = self.serve.policy.clone();
+        let b = self.backend.slots();
+
+        let mut order: Vec<usize> = (0..requests.len())
+            .filter(|&i| requests[i].is_schedulable())
+            .collect();
+        order.sort_by(|&a, &z| {
+            policy
+                .rank(&requests[a])
+                .cmp(&policy.rank(&requests[z]))
+        });
+
+        let mut target: Vec<usize> = Vec::with_capacity(b);
+        let mut chosen = vec![false; requests.len()];
+        for &idx in &order {
+            if target.len() >= b {
+                break;
+            }
+            // Non-preemptive policies never *start* a new request by
+            // pushing out a resident one; they only fill free slots. The
+            // rank ordering already encodes that via `locked`, but a
+            // waiting request must not grab resources a resident one
+            // needs: handled below by slot availability.
+            if self.ensure_resident(requests, idx, &chosen) {
+                chosen[idx] = true;
+                target.push(idx);
+            }
+        }
+
+        // Anything Running but not targeted this iteration is preempted
+        // (stays resident).
+        for (i, r) in requests.iter_mut().enumerate() {
+            if !chosen[i] && r.phase == Phase::Running {
+                r.phase = Phase::Preempted;
+                r.n_preemptions += 1;
+            } else if chosen[i] && matches!(r.phase, Phase::Preempted | Phase::Waiting | Phase::Discarded)
+            {
+                r.phase = if r.prefill_done() {
+                    Phase::Running
+                } else {
+                    Phase::Prefilling
+                };
+            } else if chosen[i] && r.phase == Phase::Prefilling && r.prefill_done() {
+                r.phase = Phase::Running;
+            }
+        }
+        target
+    }
+
+    /// Make `idx` resident (slot + pool room), discarding worse-ranked
+    /// non-locked residents if allowed. Returns false if impossible.
+    fn ensure_resident(
+        &mut self,
+        requests: &mut [Request],
+        idx: usize,
+        chosen: &[bool],
+    ) -> bool {
+        if requests[idx].slot.is_some() {
+            return true;
+        }
+        let policy = self.serve.policy.clone();
+        let c = match policy {
+            Policy::Trail { c } => c,
+            _ => 1.0,
+        };
+        let need_tokens = requests[idx].prefill_target().min(self.cfg.model.max_seq);
+
+        loop {
+            let have_slot = self.kv.free_slot_available();
+            let have_mem = self.kv.fits(need_tokens.min(self.cfg.model.prefill_chunk * 2));
+            if have_slot && have_mem {
+                break;
+            }
+            // Find the worst-ranked resident, non-chosen, non-locked
+            // request to discard. Non-preemptive policies only reclaim
+            // from *preempted* requests (there are none under FCFS/SJF,
+            // so they simply wait for completions).
+            let victim = requests
+                .iter()
+                .enumerate()
+                .filter(|(i, r)| {
+                    !chosen[*i]
+                        && r.slot.is_some()
+                        && r.phase != Phase::Finished
+                        && policy.preemptive()
+                        && r.preemptable(c)
+                })
+                .max_by(|(_, a), (_, z)| policy.rank(a).cmp(&policy.rank(z)));
+            let Some((vi, _)) = victim else {
+                return false;
+            };
+            // The victim must rank strictly worse than the candidate —
+            // otherwise discarding it to admit `idx` is a priority
+            // inversion — and by at least the hysteresis margin, so that
+            // sub-bin prediction noise doesn't churn the KV cache.
+            let vr = policy.rank(&requests[vi]);
+            let cr = policy.rank(&requests[idx]);
+            if vr.cmp(&cr) != std::cmp::Ordering::Greater {
+                return false;
+            }
+            if !vr.locked && !cr.locked && vr.key - cr.key < self.serve.evict_margin {
+                return false;
+            }
+            let r = &mut requests[vi];
+            let slot = r.slot.take().unwrap();
+            self.kv.free(slot, r.spec.rid);
+            r.phase = Phase::Discarded;
+            r.prefilled = 0; // KV gone — recompute on resume
+            r.kv_written = 0;
+            r.n_discards += 1;
+        }
+
+        let slot = self.kv.alloc(requests[idx].spec.rid).expect("slot freed above");
+        requests[idx].slot = Some(slot);
+        // Re-used slot: clear its prompt-tap accumulators.
+        let _ = self.backend.slot_reset(slot);
+        requests[idx].prefilled = 0; // fresh slot ⇒ (re)prefill from 0
+        requests[idx].kv_written = 0;
+        true
+    }
+}

@@ -1,0 +1,142 @@
+//! KV-cache manager: slot allocation + token-pool memory accounting
+//! (the vLLM-block-pool analogue; DESIGN.md S8).
+//!
+//! Physical layout: the packed device state holds `B` fixed-stride slots
+//! of `max_seq` tokens each. On top of that, a *token pool* models the
+//! paper's GPU-memory constraint: the sum of resident requests'
+//! `resident_tokens()` may not exceed `pool_tokens`. Preempted-but-
+//! resident requests count against the pool — that is the memory overhead
+//! limited preemption manages. When the pool (or slot set) is exhausted
+//! the engine discards the worst-ranked preempted request's cache and
+//! marks it for recompute (the paper's "discard and recompute" OOM mode).
+
+#[derive(Clone, Debug)]
+pub struct KvManager {
+    pub n_slots: usize,
+    pub max_seq: usize,
+    /// Token budget across all resident requests.
+    pub pool_tokens: usize,
+    /// rid currently owning each slot (None = free).
+    slots: Vec<Option<u64>>,
+    /// Tokens currently charged per slot.
+    charged: Vec<usize>,
+    /// High-water marks (metrics).
+    pub peak_tokens: usize,
+    pub peak_slots: usize,
+}
+
+impl KvManager {
+    pub fn new(n_slots: usize, max_seq: usize, pool_tokens: usize) -> Self {
+        Self {
+            n_slots,
+            max_seq,
+            pool_tokens,
+            slots: vec![None; n_slots],
+            charged: vec![0; n_slots],
+            peak_tokens: 0,
+            peak_slots: 0,
+        }
+    }
+
+    pub fn used_tokens(&self) -> usize {
+        self.charged.iter().sum()
+    }
+
+    pub fn used_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn free_slot_available(&self) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+    }
+
+    pub fn owner(&self, slot: usize) -> Option<u64> {
+        self.slots[slot]
+    }
+
+    /// Allocate a slot for `rid`. Returns None when all slots are taken.
+    pub fn alloc(&mut self, rid: u64) -> Option<usize> {
+        let idx = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[idx] = Some(rid);
+        self.charged[idx] = 0;
+        let used = self.used_slots();
+        self.peak_slots = self.peak_slots.max(used);
+        Some(idx)
+    }
+
+    /// Update the token charge for a resident request (after prefill
+    /// chunks / decode steps). Panics on ownership mismatch — that is a
+    /// scheduler bug, not a recoverable condition.
+    pub fn charge(&mut self, slot: usize, rid: u64, tokens: usize) {
+        assert_eq!(self.slots[slot], Some(rid), "slot {slot} not owned by {rid}");
+        assert!(tokens <= self.max_seq, "request overflows slot capacity");
+        self.charged[slot] = tokens;
+        let used = self.used_tokens();
+        self.peak_tokens = self.peak_tokens.max(used);
+    }
+
+    /// Release a slot (completion or discard).
+    pub fn free(&mut self, slot: usize, rid: u64) {
+        assert_eq!(self.slots[slot], Some(rid), "slot {slot} not owned by {rid}");
+        self.slots[slot] = None;
+        self.charged[slot] = 0;
+    }
+
+    /// Would charging `extra` more tokens stay within the pool?
+    pub fn fits(&self, extra: usize) -> bool {
+        self.used_tokens() + extra <= self.pool_tokens
+    }
+
+    /// Memory utilisation in [0,1].
+    pub fn utilisation(&self) -> f64 {
+        self.used_tokens() as f64 / self.pool_tokens as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut kv = KvManager::new(2, 100, 150);
+        let s0 = kv.alloc(10).unwrap();
+        let s1 = kv.alloc(11).unwrap();
+        assert_ne!(s0, s1);
+        assert!(kv.alloc(12).is_none());
+        kv.free(s0, 10);
+        assert_eq!(kv.alloc(12), Some(s0));
+    }
+
+    #[test]
+    fn token_accounting_and_peaks() {
+        let mut kv = KvManager::new(2, 100, 150);
+        let s0 = kv.alloc(1).unwrap();
+        let s1 = kv.alloc(2).unwrap();
+        kv.charge(s0, 1, 80);
+        kv.charge(s1, 2, 60);
+        assert_eq!(kv.used_tokens(), 140);
+        assert!(kv.fits(10));
+        assert!(!kv.fits(11));
+        kv.charge(s1, 2, 20);
+        assert_eq!(kv.used_tokens(), 100);
+        assert_eq!(kv.peak_tokens, 140);
+        assert_eq!(kv.peak_slots, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not owned")]
+    fn ownership_enforced() {
+        let mut kv = KvManager::new(2, 100, 200);
+        let s = kv.alloc(1).unwrap();
+        kv.charge(s, 99, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows slot capacity")]
+    fn slot_capacity_enforced() {
+        let mut kv = KvManager::new(1, 100, 1000);
+        let s = kv.alloc(1).unwrap();
+        kv.charge(s, 1, 101);
+    }
+}

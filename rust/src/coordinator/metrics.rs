@@ -1,0 +1,116 @@
+//! Serving metrics (paper §4 benchmark): latency + TTFT (mean/median/
+//! p95), throughput, preemption/discard counters, memory high-water.
+
+use crate::coordinator::request::Request;
+use crate::util::stats::Samples;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub latency: Samples,
+    pub ttft: Samples,
+    pub n_finished: usize,
+    pub n_preemptions: u64,
+    pub n_discards: u64,
+    pub total_output_tokens: u64,
+    pub total_prefill_tokens: u64,
+    pub wall_time: f64,
+    pub n_iterations: u64,
+    pub peak_mem_tokens: usize,
+    pub peak_slots: usize,
+}
+
+impl Metrics {
+    pub fn observe_finish(&mut self, r: &Request) {
+        self.n_finished += 1;
+        self.latency.push(r.latency().expect("finished without timestamp"));
+        self.ttft.push(r.ttft().expect("finished without first token"));
+        self.n_preemptions += r.n_preemptions;
+        self.n_discards += r.n_discards;
+        self.total_output_tokens += r.spec.true_output_len as u64;
+        self.total_prefill_tokens += r.spec.prompt.len() as u64;
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_time <= 0.0 {
+            return 0.0;
+        }
+        self.total_output_tokens as f64 / self.wall_time
+    }
+
+    pub fn throughput_req_s(&self) -> f64 {
+        if self.wall_time <= 0.0 {
+            return 0.0;
+        }
+        self.n_finished as f64 / self.wall_time
+    }
+
+    pub fn summary_row(&mut self) -> MetricsSummary {
+        MetricsSummary {
+            n: self.n_finished,
+            mean_latency: self.latency.mean(),
+            median_latency: self.latency.median(),
+            p95_latency: self.latency.percentile(95.0),
+            mean_ttft: self.ttft.mean(),
+            median_ttft: self.ttft.median(),
+            p95_ttft: self.ttft.percentile(95.0),
+            throughput_req_s: self.throughput_req_s(),
+            throughput_tok_s: self.throughput_tok_s(),
+            preemptions: self.n_preemptions,
+            discards: self.n_discards,
+            peak_mem_tokens: self.peak_mem_tokens,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSummary {
+    pub n: usize,
+    pub mean_latency: f64,
+    pub median_latency: f64,
+    pub p95_latency: f64,
+    pub mean_ttft: f64,
+    pub median_ttft: f64,
+    pub p95_ttft: f64,
+    pub throughput_req_s: f64,
+    pub throughput_tok_s: f64,
+    pub preemptions: u64,
+    pub discards: u64,
+    pub peak_mem_tokens: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BinsConfig;
+    use crate::workload::RequestSpec;
+
+    #[test]
+    fn observe_and_summarise() {
+        let bins = BinsConfig {
+            n_bins: 10,
+            max_len: 256,
+            width: 25.6,
+            midpoints: (0..10).map(|i| (i as f64 + 0.5) * 25.6).collect(),
+        };
+        let mut m = Metrics::default();
+        for i in 0..4u64 {
+            let spec = RequestSpec {
+                rid: i,
+                prompt: vec![1; 8],
+                true_output_len: 10,
+                response: vec![9; 9],
+            };
+            let mut r = Request::new(spec, i as f64, &bins);
+            r.first_token_at = Some(i as f64 + 0.5);
+            r.finished_at = Some(i as f64 + 2.0);
+            m.observe_finish(&r);
+        }
+        m.wall_time = 8.0;
+        let s = m.summary_row();
+        assert_eq!(s.n, 4);
+        assert!((s.mean_latency - 2.0).abs() < 1e-12);
+        assert!((s.mean_ttft - 0.5).abs() < 1e-12);
+        assert!((s.throughput_req_s - 0.5).abs() < 1e-12);
+        assert!((s.throughput_tok_s - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,18 @@
+//! The paper's L3 contribution: iteration-level scheduling with
+//! embedding-based length predictions and SPRPT with *limited preemption*
+//! (paper §3.3), over a vLLM-like serving substrate (slot-based KV
+//! manager, chunked prefill, discard+recompute on OOM).
+
+pub mod backend;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod policy;
+pub mod request;
+
+pub use backend::{MockBackend, ModelBackend, PjrtBackend};
+pub use engine::{ServeConfig, ServeReport, ServingEngine};
+pub use kv::KvManager;
+pub use metrics::Metrics;
+pub use policy::{Policy, Rank};
+pub use request::{Phase, Request};

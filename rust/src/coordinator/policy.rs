@@ -1,0 +1,194 @@
+//! Scheduling policies (paper §3.3 + §4 baselines).
+//!
+//! Every policy maps a request to a `Rank`; each iteration the engine
+//! sorts schedulable requests by rank (FCFS tiebreak — the SOAP
+//! convention) and fills the decode batch / prefill budget from the top.
+//!
+//! * `Fcfs` — vanilla vLLM: arrival order, prefill-priority, no
+//!   preemption of running requests.
+//! * `SjfPrompt` — vLLM-SJF_BERT: waiting queue ordered by the static
+//!   prompt prediction; running requests are never preempted and new
+//!   sequences keep vLLM's prefill priority.
+//! * `Trail { c, .. }` — SPRPT with limited preemption: rank is the
+//!   predicted *remaining* length; once age ≥ ⌊C·r⌋ the request becomes
+//!   non-preemptable (rank −∞). `c = 1.0` degenerates to plain SPRPT.
+
+use crate::coordinator::request::{Phase, Request};
+
+/// Lower sorts first. `locked` requests are non-preemptable: they sort
+/// before everything and may not be pushed out of the batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rank {
+    pub locked: bool,
+    pub key: f64,
+    /// FCFS tiebreak (arrival time, then rid for total order).
+    pub tie: f64,
+    pub rid: u64,
+}
+
+impl Rank {
+    pub fn cmp(&self, other: &Rank) -> std::cmp::Ordering {
+        other
+            .locked
+            .cmp(&self.locked) // locked first
+            .then(self.key.partial_cmp(&other.key).unwrap_or(std::cmp::Ordering::Equal))
+            .then(self.tie.partial_cmp(&other.tie).unwrap_or(std::cmp::Ordering::Equal))
+            .then(self.rid.cmp(&other.rid))
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    Fcfs,
+    SjfPrompt,
+    Trail {
+        /// Preemption-window constant C (paper: c=0.8 default; c=1 ⇒ SRPT).
+        c: f64,
+    },
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Fcfs => "fcfs".into(),
+            Policy::SjfPrompt => "sjf-prompt".into(),
+            Policy::Trail { c } => format!("trail-c{c}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "fcfs" => Some(Policy::Fcfs),
+            "sjf" | "sjf-bert" | "sjf-prompt" => Some(Policy::SjfPrompt),
+            "srpt" => Some(Policy::Trail { c: 1.0 }),
+            "trail" => Some(Policy::Trail { c: 0.8 }),
+            other => other
+                .strip_prefix("trail-c")
+                .and_then(|v| v.parse().ok())
+                .map(|c| Policy::Trail { c }),
+        }
+    }
+
+    /// Does this policy ever remove a running request from the batch in
+    /// favour of a better-ranked one?
+    pub fn preemptive(&self) -> bool {
+        matches!(self, Policy::Trail { .. })
+    }
+
+    /// vLLM's behaviour (paper §4.2): new sequences get priority over
+    /// running decodes for prefill resources.
+    pub fn prefill_priority(&self) -> bool {
+        matches!(self, Policy::Fcfs | Policy::SjfPrompt)
+    }
+
+    pub fn rank(&self, r: &Request) -> Rank {
+        let tie = r.arrival;
+        let rid = r.spec.rid;
+        match self {
+            Policy::Fcfs => Rank {
+                // Running requests are never preempted under FCFS: lock
+                // them so batch membership is stable until completion.
+                locked: matches!(r.phase, Phase::Running | Phase::Prefilling | Phase::Preempted),
+                key: r.arrival,
+                tie,
+                rid,
+            },
+            Policy::SjfPrompt => {
+                let started = !matches!(r.phase, Phase::Waiting);
+                Rank {
+                    locked: started,
+                    // Waiting queue ordered by static prompt prediction;
+                    // admission_estimate fills pred_remaining before any
+                    // compute happens.
+                    key: r.pred_remaining,
+                    tie,
+                    rid,
+                }
+            }
+            Policy::Trail { c } => {
+                let locked = !r.preemptable(*c) && !matches!(r.phase, Phase::Waiting);
+                Rank {
+                    locked,
+                    key: r.pred_remaining,
+                    tie,
+                    rid,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BinsConfig;
+    use crate::workload::RequestSpec;
+
+    fn bins() -> BinsConfig {
+        BinsConfig {
+            n_bins: 10,
+            max_len: 256,
+            width: 25.6,
+            midpoints: (0..10).map(|i| (i as f64 + 0.5) * 25.6).collect(),
+        }
+    }
+
+    fn req(rid: u64, arrival: f64, pred: f64) -> Request {
+        let spec = RequestSpec {
+            rid,
+            prompt: vec![1; 8],
+            true_output_len: 64,
+            response: vec![9; 63],
+        };
+        let mut r = Request::new(spec, arrival, &bins());
+        r.pred_remaining = pred;
+        r.initial_pred = pred;
+        r
+    }
+
+    #[test]
+    fn fcfs_orders_by_arrival() {
+        let p = Policy::Fcfs;
+        let a = req(1, 1.0, 50.0);
+        let b = req(2, 2.0, 5.0);
+        assert_eq!(p.rank(&a).cmp(&p.rank(&b)), std::cmp::Ordering::Less);
+    }
+
+    #[test]
+    fn trail_orders_by_predicted_remaining() {
+        let p = Policy::Trail { c: 0.8 };
+        let a = req(1, 1.0, 50.0);
+        let b = req(2, 2.0, 5.0);
+        assert_eq!(p.rank(&b).cmp(&p.rank(&a)), std::cmp::Ordering::Less);
+    }
+
+    #[test]
+    fn trail_locks_past_threshold() {
+        let p = Policy::Trail { c: 0.5 };
+        let mut a = req(1, 1.0, 10.0);
+        a.initial_pred = 40.0;
+        a.generated = 25; // ≥ floor(0.5 * 40) = 20 → locked
+        a.phase = Phase::Running;
+        let b = req(2, 2.0, 1.0);
+        let ra = p.rank(&a);
+        assert!(ra.locked);
+        // Locked requests sort before even tiny-remaining newcomers.
+        assert_eq!(ra.cmp(&p.rank(&b)), std::cmp::Ordering::Less);
+    }
+
+    #[test]
+    fn srpt_is_trail_c1() {
+        assert_eq!(Policy::parse("srpt"), Some(Policy::Trail { c: 1.0 }));
+        let p = Policy::parse("trail-c0.5").unwrap();
+        assert_eq!(p, Policy::Trail { c: 0.5 });
+    }
+
+    #[test]
+    fn fcfs_tiebreak_total_order() {
+        let p = Policy::Fcfs;
+        let a = req(1, 1.0, 0.0);
+        let b = req(2, 1.0, 0.0);
+        assert_eq!(p.rank(&a).cmp(&p.rank(&b)), std::cmp::Ordering::Less);
+        assert_eq!(p.rank(&b).cmp(&p.rank(&a)), std::cmp::Ordering::Greater);
+    }
+}

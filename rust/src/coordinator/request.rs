@@ -1,0 +1,241 @@
+//! Per-request state machine.
+//!
+//! ```text
+//!  Waiting ──slot──> Prefilling ──last chunk──> Running ──EOS──> Finished
+//!     ^                                          │   ^
+//!     │ (discard+recompute: KV dropped,          │   │ resume
+//!     │  prompt+generated re-prefilled)       preempt│
+//!     └────────────── Discarded <── Preempted ───────┘
+//! ```
+//!
+//! A `Preempted` request still *occupies its slot* (its KV is resident) —
+//! that is exactly the memory overhead the paper's limited-preemption
+//! policy manages. `Discarded` requests hold no slot and must recompute.
+
+use crate::predictor::Smoother;
+use crate::workload::RequestSpec;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Never started; no KV anywhere.
+    Waiting,
+    /// Owns a slot; prompt partially prefilled.
+    Prefilling,
+    /// Owns a slot; in the decode batch.
+    Running,
+    /// Owns a slot (KV resident) but not in the decode batch.
+    Preempted,
+    /// KV was discarded under memory pressure; needs re-prefill of
+    /// prompt + already-generated tokens (the paper's recompute mode).
+    Discarded,
+    Finished,
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub spec: RequestSpec,
+    pub phase: Phase,
+    /// Slot index while resident.
+    pub slot: Option<usize>,
+
+    // --- progress ---
+    /// Prompt (+ recompute prefix) tokens already prefilled.
+    pub prefilled: usize,
+    /// Output tokens produced so far ("age" in the paper's rank function).
+    pub generated: usize,
+    /// KV cache positions actually written since the last (re)allocation
+    /// — the memory this request holds. Maintained by the engine:
+    /// prefill sets it to `prefilled`, a decode step extends it to the
+    /// written position + 1, a discard zeroes it.
+    pub kv_written: usize,
+
+    // --- predictions ---
+    pub smoother: Smoother,
+    /// Initial predicted total r (bin midpoint) — fixes the preemption
+    /// threshold ⌊C·r⌋ at prefill completion (paper §3.3).
+    pub initial_pred: f64,
+    /// Current predicted remaining length.
+    pub pred_remaining: f64,
+
+    // --- timestamps (seconds on the benchmark clock) ---
+    pub arrival: f64,
+    pub first_token_at: Option<f64>,
+    pub finished_at: Option<f64>,
+
+    // --- accounting ---
+    pub n_preemptions: u64,
+    pub n_discards: u64,
+}
+
+impl Request {
+    pub fn new(spec: RequestSpec, arrival: f64, bins: &crate::config::BinsConfig) -> Self {
+        Self {
+            spec,
+            phase: Phase::Waiting,
+            slot: None,
+            prefilled: 0,
+            generated: 0,
+            kv_written: 0,
+            smoother: Smoother::new(bins),
+            initial_pred: 0.0,
+            pred_remaining: 0.0,
+            arrival,
+            first_token_at: None,
+            finished_at: None,
+            n_preemptions: 0,
+            n_discards: 0,
+        }
+    }
+
+    /// KV prefix that must exist before decoding can (re)start: the
+    /// prompt, plus — for a request that has already generated tokens —
+    /// the generated prefix (the last generated token's KV is written by
+    /// the resuming decode step itself, hence the -1).
+    pub fn prefill_target(&self) -> usize {
+        self.spec.prompt.len() + self.resume_extra()
+    }
+
+    /// Generated tokens whose KV must exist to resume decoding.
+    fn resume_extra(&self) -> usize {
+        self.generated.saturating_sub(1)
+    }
+
+    /// The token sequence to (re)prefill: prompt ++ response[0..extra].
+    pub fn prefill_tokens(&self) -> Vec<i32> {
+        let mut v = self.spec.prompt.clone();
+        v.extend_from_slice(&self.spec.response[..self.resume_extra().min(self.spec.response.len())]);
+        v
+    }
+
+    /// Input token for the next decode step (teacher-forced replay).
+    /// Step j (1-based over generated tokens) consumes response[j-1];
+    /// generated counts tokens already produced, so the next input is
+    /// response[generated-1].
+    pub fn next_decode_token(&self) -> i32 {
+        debug_assert!(self.generated >= 1, "decode before first token");
+        let j = self.generated - 1;
+        if j < self.spec.response.len() {
+            self.spec.response[j]
+        } else {
+            // Shouldn't happen (EOS forced at true length), but stay safe.
+            self.spec.prompt[0]
+        }
+    }
+
+    /// Absolute position of the next decode input token.
+    pub fn next_decode_pos(&self) -> usize {
+        self.spec.prompt.len() + self.generated - 1
+    }
+
+    /// KV tokens this request holds while resident.
+    pub fn resident_tokens(&self) -> usize {
+        self.kv_written
+    }
+
+    /// Ready to decode? True when the needed KV prefix is *resident* —
+    /// either freshly prefilled or written by past decode steps. (Judging
+    /// by `prefilled` alone would make running requests look perpetually
+    /// under-prefilled, since their target grows with every token.)
+    pub fn prefill_done(&self) -> bool {
+        self.kv_written >= self.prefill_target()
+    }
+
+    pub fn is_resident(&self) -> bool {
+        matches!(
+            self.phase,
+            Phase::Prefilling | Phase::Running | Phase::Preempted
+        )
+    }
+
+    pub fn is_schedulable(&self) -> bool {
+        !matches!(self.phase, Phase::Finished)
+    }
+
+    /// Paper §3.3: preemption is allowed only for the first ⌊C·r⌋ tokens.
+    pub fn preemptable(&self, c: f64) -> bool {
+        if self.generated == 0 {
+            return true;
+        }
+        (self.generated as f64) < (c * self.initial_pred).floor()
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated >= self.spec.true_output_len
+    }
+
+    pub fn latency(&self) -> Option<f64> {
+        self.finished_at.map(|f| f - self.arrival)
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|f| f - self.arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BinsConfig;
+
+    fn bins() -> BinsConfig {
+        BinsConfig {
+            n_bins: 10,
+            max_len: 256,
+            width: 25.6,
+            midpoints: (0..10).map(|i| (i as f64 + 0.5) * 25.6).collect(),
+        }
+    }
+
+    fn spec(plen: usize, n_out: usize) -> RequestSpec {
+        RequestSpec {
+            rid: 1,
+            prompt: vec![1; plen],
+            true_output_len: n_out,
+            response: (0..n_out.saturating_sub(1)).map(|i| 8 + i as i32 % 100).collect(),
+        }
+    }
+
+    #[test]
+    fn prefill_target_grows_after_discard() {
+        let mut r = Request::new(spec(10, 50), 0.0, &bins());
+        assert_eq!(r.prefill_target(), 10);
+        r.generated = 20; // 20 tokens produced, then discarded
+        // Re-prefill = prompt + 19 response tokens (the 20th token's KV is
+        // rewritten by the resuming decode step).
+        assert_eq!(r.prefill_target(), 29);
+        assert_eq!(r.prefill_tokens().len(), 29);
+    }
+
+    #[test]
+    fn next_decode_token_is_replay() {
+        let mut r = Request::new(spec(4, 10), 0.0, &bins());
+        r.generated = 1;
+        assert_eq!(r.next_decode_token(), r.spec.response[0]);
+        assert_eq!(r.next_decode_pos(), 4);
+        r.generated = 5;
+        assert_eq!(r.next_decode_token(), r.spec.response[4]);
+        assert_eq!(r.next_decode_pos(), 8);
+    }
+
+    #[test]
+    fn preemption_threshold() {
+        let mut r = Request::new(spec(4, 100), 0.0, &bins());
+        r.initial_pred = 100.0;
+        r.generated = 10;
+        assert!(r.preemptable(0.5)); // 10 < 50
+        r.generated = 50;
+        assert!(!r.preemptable(0.5)); // 50 >= 50
+        assert!(r.preemptable(1.0)); // 50 < 100 (plain SPRPT)
+        r.generated = 0;
+        assert!(r.preemptable(0.0)); // nothing computed yet: always
+    }
+
+    #[test]
+    fn done_at_true_length() {
+        let mut r = Request::new(spec(4, 3), 0.0, &bins());
+        r.generated = 2;
+        assert!(!r.done());
+        r.generated = 3;
+        assert!(r.done());
+    }
+}

@@ -1,0 +1,15 @@
+//! TRAIL — embedding-based scheduling for LLM serving.
+//!
+//! Reproduction of "Don't Stop Me Now: Embedding Based Scheduling for
+//! LLMs" (2024). See DESIGN.md for the system inventory and the
+//! per-experiment index, and EXPERIMENTS.md for paper-vs-measured.
+
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod predictor;
+pub mod qtheory;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,265 @@
+//! `trail-serve` — CLI for the TRAIL serving stack.
+//!
+//! ```text
+//! trail-serve info                         # artifact + config summary
+//! trail-serve serve   --policy trail --rate 6 --n 80 [--mock] [--burst]
+//! trail-serve simulate --lambda 0.7 --c 0.8 --model exp --jobs 200000
+//! trail-serve theory  --lambda 0.7 --c 0.8 --model perfect
+//! trail-serve server  --addr 127.0.0.1:8091 --policy trail
+//! ```
+
+use trail::config::Config;
+use trail::coordinator::{MockBackend, PjrtBackend, Policy, ServeConfig, ServingEngine};
+use trail::predictor::{OraclePredictor, Predictor, ProbePredictor};
+use trail::qtheory::{self, PredictionModel, SimConfig};
+use trail::util::cli::Args;
+use trail::util::csv::{f, Table};
+use trail::workload::{gen_requests, ArrivalProcess};
+
+fn main() {
+    let args = Args::parse(true);
+    let code = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("theory") => cmd_theory(&args),
+        Some("server") => cmd_server(&args),
+        _ => {
+            eprintln!(
+                "usage: trail-serve <info|serve|simulate|theory|server> [options]\n\
+                 \n\
+                 serve    — run a serving benchmark against the AOT model\n\
+                 \x20        --policy fcfs|sjf|trail|srpt|trail-c<M>  (default trail)\n\
+                 \x20        --rate <req/s> --n <requests> [--burst] [--mock]\n\
+                 \x20        --pool-frac <0..1> --seed <u64> [--no-refine] [--oracle]\n\
+                 simulate — M/G/1 SPRPT-limited-preemption event simulation\n\
+                 \x20        --lambda <ρ> --c <C> --model exp|perfect --jobs <n>\n\
+                 theory   — Lemma 1 closed form (numeric integration)\n\
+                 \x20        --lambda <ρ> --c <C> --model exp|perfect\n\
+                 server   — HTTP chatbot server (see examples/http_serving.rs)\n\
+                 info     — print artifact/config summary"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_cfg() -> Config {
+    match Config::load_default() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    let cfg = load_cfg();
+    println!("TRAIL-RS — artifacts in {}/", cfg.dir);
+    println!(
+        "model: TrailLM d={} layers={} heads={} vocab={} max_seq={} slots={}",
+        cfg.model.d_model,
+        cfg.model.n_layers,
+        cfg.model.n_heads,
+        cfg.model.vocab,
+        cfg.model.max_seq,
+        cfg.model.batch_slots
+    );
+    println!(
+        "state: {} f32 ({:.1} MB) — kv {} | logits {} | taps {} | ptap {} | pcnt {}",
+        cfg.layout.total,
+        cfg.layout.total as f64 * 4.0 / 1e6,
+        cfg.layout.kv_len,
+        cfg.layout.logits_len,
+        cfg.layout.taps_len,
+        cfg.layout.ptap_len,
+        cfg.layout.pcnt_len
+    );
+    println!("bins: {} x {:.1} tokens", cfg.bins.n_bins, cfg.bins.width);
+    match trail::runtime::ProbeWeights::load(&cfg) {
+        Ok(w) => {
+            println!(
+                "probe: hidden={} best_layer={} ({} tap points)",
+                w.hidden,
+                w.best_layer,
+                w.layers.len()
+            );
+            for r in &w.mae_by_layer {
+                println!(
+                    "  layer {:2}  MAE raw {:6.2}  refined {:6.2}  (prompt-only {:.2})",
+                    r.layer, r.mae_raw, r.mae_refined, r.mae_bert
+                );
+            }
+        }
+        Err(e) => println!("probe: not available ({e})"),
+    }
+    0
+}
+
+fn make_predictor(cfg: &Config, args: &Args) -> Box<dyn Predictor> {
+    if args.has_flag("oracle") {
+        return Box::new(OraclePredictor::new(
+            args.f64_or("oracle-noise", 0.0),
+            true,
+            args.u64_or("seed", 1),
+        ));
+    }
+    let weights = trail::runtime::ProbeWeights::load(cfg).expect("probe weights");
+    let mut p = ProbePredictor::new(cfg, &weights);
+    p.refine = !args.has_flag("no-refine");
+    Box::new(p)
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = load_cfg();
+    let policy = Policy::parse(args.str_or("policy", "trail")).expect("bad --policy");
+    let n = args.usize_or("n", 80);
+    let rate = args.f64_or("rate", 6.0);
+    let seed = args.u64_or("seed", cfg.workload.serve_seed);
+    let specs = gen_requests(&cfg, n, seed);
+    let arrivals = if args.has_flag("burst") {
+        ArrivalProcess::Burst.schedule(n)
+    } else {
+        ArrivalProcess::Poisson { lambda: rate, seed: seed ^ 0x5EED }.schedule(n)
+    };
+
+    let mut serve = ServeConfig::new(&cfg, policy);
+    serve.pool_tokens = ((cfg.model.batch_slots * cfg.model.max_seq) as f64
+        * args.f64_or("pool-frac", 0.55)) as usize;
+
+    let report = if args.has_flag("mock") {
+        serve.real_clock = false;
+        serve.max_iterations = 10_000_000;
+        let backend = MockBackend::new(cfg.model.batch_slots, &cfg);
+        let mut eng = ServingEngine::new(&cfg, serve, backend, make_predictor(&cfg, args));
+        eng.run(specs, arrivals)
+    } else {
+        let backend = PjrtBackend::new(&cfg, !args.has_flag("oracle")).expect("engine");
+        let mut eng = ServingEngine::new(&cfg, serve, backend, make_predictor(&cfg, args));
+        let rep = eng.run(specs, arrivals);
+        if args.has_flag("counters") {
+            let e = eng.backend().engine();
+            eprintln!(
+                "[counters] decode_steps={} prefill_chunks={} readouts={} iterations={}",
+                e.n_steps.get(),
+                e.n_prefills.get(),
+                e.n_readouts.get(),
+                eng.metrics.n_iterations
+            );
+        }
+        rep
+    };
+
+    match report {
+        Ok(rep) => {
+            let s = rep.summary;
+            let mut t = Table::new(&[
+                "policy", "predictor", "n", "mean_lat_s", "p50_lat_s", "mean_ttft_s",
+                "p50_ttft_s", "req/s", "tok/s", "preempt", "discard", "peak_mem",
+            ]);
+            t.row(vec![
+                rep.policy,
+                rep.predictor,
+                s.n.to_string(),
+                f(s.mean_latency, 3),
+                f(s.median_latency, 3),
+                f(s.mean_ttft, 3),
+                f(s.median_ttft, 3),
+                f(s.throughput_req_s, 2),
+                f(s.throughput_tok_s, 1),
+                s.preemptions.to_string(),
+                s.discards.to_string(),
+                s.peak_mem_tokens.to_string(),
+            ]);
+            print!("{}", t.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn parse_model(s: &str) -> PredictionModel {
+    match s {
+        "exp" | "exponential" => PredictionModel::Exponential,
+        "perfect" => PredictionModel::Perfect,
+        other => panic!("unknown --model '{other}' (exp|perfect)"),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let r = qtheory::simulate(SimConfig {
+        lambda: args.f64_or("lambda", 0.7),
+        c: args.f64_or("c", 0.8),
+        model: parse_model(args.str_or("model", "exp")),
+        n_jobs: args.usize_or("jobs", 200_000),
+        seed: args.u64_or("seed", 1),
+        warmup_frac: 0.1,
+    });
+    println!(
+        "mean_response={:.4} median={:.4} peak_mem={:.2} mean_mem={:.3} preemptions={} jobs={}",
+        r.mean_response,
+        r.median_response,
+        r.peak_memory,
+        r.mean_memory,
+        r.n_preemptions,
+        r.n_completed
+    );
+    0
+}
+
+fn cmd_theory(args: &Args) -> i32 {
+    let lambda = args.f64_or("lambda", 0.7);
+    let c = args.f64_or("c", 0.8);
+    let model = parse_model(args.str_or("model", "perfect"));
+    let et = qtheory::mean_response_time(lambda, c, model);
+    println!(
+        "E[T] (Lemma 1, corrected recycled term) = {et:.4}  [λ={lambda} C={c} {}]",
+        model.name()
+    );
+    0
+}
+
+fn cmd_server(args: &Args) -> i32 {
+    let cfg = load_cfg();
+    let addr = args.str_or("addr", "127.0.0.1:8091").to_string();
+    let policy = Policy::parse(args.str_or("policy", "trail")).expect("bad --policy");
+    let (server, rx) = trail::server::HttpServer::bind(&addr, 16).expect("bind");
+    println!("listening on {} (policy {})", server.local_addr(), policy.name());
+
+    let cfg2 = cfg.clone();
+    let mut serve = ServeConfig::new(&cfg, policy);
+    serve.pool_tokens = ((cfg.model.batch_slots * cfg.model.max_seq) as f64
+        * args.f64_or("pool-frac", 0.55)) as usize;
+    let use_mock = args.has_flag("mock");
+    let oracle = args.has_flag("oracle");
+    let engine_thread = std::thread::spawn(move || {
+        let predictor: Box<dyn Predictor> = if oracle {
+            Box::new(OraclePredictor::new(0.0, true, 1))
+        } else {
+            let w = trail::runtime::ProbeWeights::load(&cfg2).expect("probe weights");
+            Box::new(ProbePredictor::new(&cfg2, &w))
+        };
+        let rep = if use_mock {
+            let backend = MockBackend::new(cfg2.model.batch_slots, &cfg2);
+            let mut eng = ServingEngine::new(&cfg2, serve, backend, predictor);
+            eng.run_online(rx)
+        } else {
+            let backend = PjrtBackend::new(&cfg2, !oracle).expect("engine");
+            let mut eng = ServingEngine::new(&cfg2, serve, backend, predictor);
+            eng.run_online(rx)
+        };
+        match rep {
+            Ok(r) => println!("engine done: served {} requests", r.summary.n),
+            Err(e) => eprintln!("engine loop failed: {e}"),
+        }
+    });
+    server.serve();
+    drop(server);
+    let _ = engine_thread.join();
+    0
+}

@@ -1,0 +1,133 @@
+//! Native (pure-Rust) evaluation of the probe MLP:
+//! softmax(relu(x·W1+b1)·W2+b2). Semantically identical to the Pallas
+//! kernel `python/compile/kernels/mlp.py`; equivalence against the PJRT
+//! executable is asserted in `rust/tests/runtime_golden.rs`.
+
+use crate::runtime::probe_weights::Mlp;
+
+#[derive(Clone, Debug)]
+pub struct NativeMlp {
+    pub d: usize,
+    pub h: usize,
+    pub k: usize,
+    w: Mlp,
+    /// Scratch for the hidden layer (avoids per-call allocation).
+    scratch: Vec<f32>,
+}
+
+impl NativeMlp {
+    pub fn new(w: Mlp, d: usize, h: usize, k: usize) -> Self {
+        assert_eq!(w.w1.len(), d * h);
+        assert_eq!(w.b1.len(), h);
+        assert_eq!(w.w2.len(), h * k);
+        assert_eq!(w.b2.len(), k);
+        Self {
+            d,
+            h,
+            k,
+            w,
+            scratch: vec![0.0; h],
+        }
+    }
+
+    /// Single-embedding forward; returns K bin probabilities.
+    pub fn forward(&mut self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d);
+        debug_assert_eq!(out.len(), self.k);
+        let (d, h, k) = (self.d, self.h, self.k);
+        // hidden = relu(x @ W1 + b1); W1 is row-major [D, H].
+        self.scratch.copy_from_slice(&self.w.b1);
+        for i in 0..d {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.w.w1[i * h..(i + 1) * h];
+            for (s, &w) in self.scratch.iter_mut().zip(row) {
+                *s += xi * w;
+            }
+        }
+        for s in self.scratch.iter_mut() {
+            if *s < 0.0 {
+                *s = 0.0;
+            }
+        }
+        // logits = hidden @ W2 + b2; W2 row-major [H, K].
+        out.copy_from_slice(&self.w.b2);
+        for j in 0..h {
+            let hj = self.scratch[j];
+            if hj == 0.0 {
+                continue;
+            }
+            let row = &self.w.w2[j * k..(j + 1) * k];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += hj * w;
+            }
+        }
+        // softmax
+        let m = out.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for o in out.iter_mut() {
+            *o = (*o - m).exp();
+            z += *o;
+        }
+        let inv = 1.0 / z.max(1e-30);
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+
+    pub fn forward_vec(&mut self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.k];
+        self.forward(x, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NativeMlp {
+        // D=2, H=2, K=3, hand-computable weights.
+        let w = Mlp {
+            w1: vec![1.0, 0.0, 0.0, 1.0], // identity
+            b1: vec![0.0, 0.0],
+            w2: vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0],
+            b2: vec![0.0, 0.0, 0.0],
+        };
+        NativeMlp::new(w, 2, 2, 3)
+    }
+
+    #[test]
+    fn softmax_normalised() {
+        let mut m = tiny();
+        let p = m.forward_vec(&[1.0, 2.0]);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn relu_blocks_negative() {
+        let mut m = tiny();
+        // x = (-5, 0): hidden = relu(-5, 0) = (0,0) → logits = b2 = 0 →
+        // uniform softmax.
+        let p = m.forward_vec(&[-5.0, 0.0]);
+        for &v in &p {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matches_manual_computation() {
+        let mut m = tiny();
+        // hidden = (1, 2); logits = (1, 2, 0); softmax.
+        let p = m.forward_vec(&[1.0, 2.0]);
+        let e: Vec<f32> = [1.0f32, 2.0, 0.0].iter().map(|l| l.exp()).collect();
+        let z: f32 = e.iter().sum();
+        for (a, b) in p.iter().zip(e.iter().map(|x| x / z)) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

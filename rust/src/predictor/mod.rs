@@ -1,0 +1,22 @@
+//! Length-prediction service (paper §3.1–3.2).
+//!
+//! Two probe paths exist, mirroring the paper's Table 1 comparison:
+//!
+//! * `NativeMlp` — the probe MLP evaluated directly in Rust on the
+//!   iteration hot path (the paper's "CPU" variant; at B=8 embeddings per
+//!   iteration the native path beats a PJRT dispatch by a wide margin —
+//!   measured in EXPERIMENTS.md §Perf);
+//! * `runtime::Engine::predict_layer` — the AOT Pallas-kernel executable
+//!   (the paper's batched "CUDA" variant, used by Table 1 and available
+//!   to the engine via `PredictorKind::Pjrt`).
+//!
+//! Refinement is the Bayesian transition-matrix update of Appendix A
+//! (`smoothing`), applied per request per generated token.
+
+pub mod mlp;
+pub mod service;
+pub mod smoothing;
+
+pub use mlp::NativeMlp;
+pub use service::{OraclePredictor, Predictor, ProbePredictor};
+pub use smoothing::Smoother;

@@ -1,0 +1,183 @@
+//! The prediction service the scheduler consults (paper §3.1–3.2).
+//!
+//! Implementations:
+//! * `ProbePredictor` — TRAIL: initial estimate from the prompt probe at
+//!   admission (mean embedding-table row through the prompt MLP — the
+//!   paper's BERT step), refined every token from the tap-layer embedding
+//!   via the Bayesian smoother. Set `refine = false` for TRAIL-BERT (the
+//!   paper's 4th system: limited preemption, static predictions).
+//! * `OraclePredictor` — exact or noisy ground-truth sizes; used by the
+//!   scheduler unit/property tests and theory cross-checks.
+
+use crate::config::Config;
+use crate::coordinator::request::Request;
+use crate::predictor::mlp::NativeMlp;
+use crate::runtime::probe_weights::ProbeWeights;
+use crate::runtime::Readout;
+use crate::util::rng::SplitMix64;
+
+pub trait Predictor {
+    /// Called at admission: set `initial_pred` / `pred_remaining` (and
+    /// reset the smoother) from prompt-only information.
+    fn init_request(&mut self, req: &mut Request);
+
+    /// Called after each decode step while `req` occupied `slot`:
+    /// refresh `pred_remaining` (TRAIL runs the probe + smoother here).
+    fn on_token(&mut self, req: &mut Request, readout: &Readout, slot: usize);
+
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// TRAIL probe predictor (and its TRAIL-BERT ablation)
+// ---------------------------------------------------------------------------
+
+pub struct ProbePredictor {
+    pub tap_layer: usize,
+    mlp: NativeMlp,
+    prompt_mlp: NativeMlp,
+    /// Embedding table [V * D], row-major — for the admission-time mean
+    /// prompt embedding.
+    embed: Vec<f32>,
+    midpoints: Vec<f64>,
+    d_model: usize,
+    slots: usize,
+    scratch: Vec<f32>,
+    emb_scratch: Vec<f32>,
+    /// false ⇒ TRAIL-BERT: keep the static prompt estimate, subtract age.
+    pub refine: bool,
+}
+
+impl ProbePredictor {
+    pub fn new(cfg: &Config, weights: &ProbeWeights) -> Self {
+        Self::with_tap_layer(cfg, weights, weights.best_layer)
+    }
+
+    pub fn with_tap_layer(cfg: &Config, weights: &ProbeWeights, layer: usize) -> Self {
+        let d = cfg.model.d_model;
+        let h = weights.hidden;
+        let k = cfg.bins.n_bins;
+        assert_eq!(weights.embed.len(), cfg.model.vocab * d, "embed table shape");
+        Self {
+            tap_layer: layer,
+            mlp: NativeMlp::new(weights.layers[layer].clone(), d, h, k),
+            prompt_mlp: NativeMlp::new(weights.prompt.clone(), d, h, k),
+            embed: weights.embed.clone(),
+            midpoints: cfg.bins.midpoints.clone(),
+            d_model: d,
+            slots: cfg.model.batch_slots,
+            scratch: vec![0.0; k],
+            emb_scratch: vec![0.0; d],
+            refine: true,
+        }
+    }
+
+    /// Mean embedding-table row over the prompt — identical (up to float
+    /// order) to the layer-0 prompt tap the prefill graph accumulates;
+    /// the runtime integration test asserts this equivalence.
+    pub fn mean_prompt_embedding(&mut self, prompt: &[i32]) -> &[f32] {
+        let d = self.d_model;
+        self.emb_scratch.iter_mut().for_each(|v| *v = 0.0);
+        for &t in prompt {
+            let row = &self.embed[(t as usize) * d..(t as usize + 1) * d];
+            for (acc, &x) in self.emb_scratch.iter_mut().zip(row) {
+                *acc += x;
+            }
+        }
+        let inv = 1.0 / prompt.len().max(1) as f32;
+        self.emb_scratch.iter_mut().for_each(|v| *v *= inv);
+        &self.emb_scratch
+    }
+}
+
+impl Predictor for ProbePredictor {
+    fn init_request(&mut self, req: &mut Request) {
+        let d = self.d_model;
+        self.emb_scratch.iter_mut().for_each(|v| *v = 0.0);
+        for &t in &req.spec.prompt {
+            let row = &self.embed[(t as usize) * d..(t as usize + 1) * d];
+            for (acc, &x) in self.emb_scratch.iter_mut().zip(row) {
+                *acc += x;
+            }
+        }
+        let inv = 1.0 / req.spec.prompt.len().max(1) as f32;
+        self.emb_scratch.iter_mut().for_each(|v| *v *= inv);
+        self.prompt_mlp.forward(&self.emb_scratch, &mut self.scratch);
+        req.smoother.reset(&self.scratch);
+        let total = req.smoother.predicted_length(&self.midpoints);
+        req.initial_pred = total;
+        req.pred_remaining = total;
+    }
+
+    fn on_token(&mut self, req: &mut Request, readout: &Readout, slot: usize) {
+        if !self.refine {
+            // TRAIL-BERT: static total minus tokens generated.
+            req.pred_remaining = (req.initial_pred - req.generated as f64).max(0.0);
+            return;
+        }
+        let emb = readout.tap(self.tap_layer, slot, self.d_model, self.slots);
+        self.mlp.forward(emb, &mut self.scratch);
+        req.smoother.update(&self.scratch);
+        req.pred_remaining = req.smoother.predicted_length(&self.midpoints);
+    }
+
+    fn name(&self) -> &'static str {
+        if self.refine {
+            "probe-refined"
+        } else {
+            "probe-static"
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracle (tests + theory cross-checks)
+// ---------------------------------------------------------------------------
+
+pub struct OraclePredictor {
+    /// Multiplicative log-normal noise sigma on the initial estimate;
+    /// 0 = perfect.
+    pub noise_sigma: f64,
+    /// If true, `on_token` reveals the exact remaining length (perfectly
+    /// refined); otherwise the initial estimate just decays with age.
+    pub refine_exact: bool,
+    rng: SplitMix64,
+}
+
+impl OraclePredictor {
+    pub fn new(noise_sigma: f64, refine_exact: bool, seed: u64) -> Self {
+        Self {
+            noise_sigma,
+            refine_exact,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    fn noisy(&mut self, x: f64) -> f64 {
+        if self.noise_sigma == 0.0 {
+            return x;
+        }
+        let z = crate::util::rng::normal_from_uniform(self.rng.next_f64());
+        (x * (self.noise_sigma * z).exp()).max(1.0)
+    }
+}
+
+impl Predictor for OraclePredictor {
+    fn init_request(&mut self, req: &mut Request) {
+        let est = self.noisy(req.spec.true_output_len as f64);
+        req.initial_pred = est;
+        req.pred_remaining = est;
+    }
+
+    fn on_token(&mut self, req: &mut Request, _readout: &Readout, _slot: usize) {
+        req.pred_remaining = if self.refine_exact {
+            (req.spec.true_output_len as f64 - req.generated as f64).max(0.0)
+        } else {
+            (req.initial_pred - req.generated as f64).max(0.0)
+        };
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}

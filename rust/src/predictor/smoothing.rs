@@ -1,0 +1,189 @@
+//! Bayesian refinement over length-bin predictions (paper §3.1 +
+//! Appendix A) — the Rust mirror of `python/compile/smoothing.py`.
+//!
+//! Per generated token, the prior drifts one bin downward via the
+//! lower-bidiagonal transition matrix `T` (uniform-within-bin
+//! assumption), then is multiplied by the classifier's output and
+//! renormalised.
+
+use crate::config::BinsConfig;
+
+/// The k×k transition matrix of Appendix A, stored as its two diagonals.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub stay: f64,  // T[i, i]   = 1 - 1/width
+    pub down: f64,  // T[i, i+1] = 1/width
+    pub k: usize,
+}
+
+impl Transition {
+    pub fn new(bins: &BinsConfig) -> Self {
+        Self {
+            stay: 1.0 - 1.0 / bins.width,
+            down: 1.0 / bins.width,
+            k: bins.n_bins,
+        }
+    }
+
+    /// prior = T @ q
+    pub fn apply(&self, q: &[f64], prior: &mut [f64]) {
+        debug_assert_eq!(q.len(), self.k);
+        for i in 0..self.k {
+            let mut v = self.stay * q[i];
+            if i + 1 < self.k {
+                v += self.down * q[i + 1];
+            }
+            prior[i] = v;
+        }
+    }
+}
+
+/// Per-request smoothing state (q̂ in the paper).
+#[derive(Clone, Debug)]
+pub struct Smoother {
+    pub q: Vec<f64>,
+    prior: Vec<f64>,
+    t: Transition,
+}
+
+impl Smoother {
+    pub fn new(bins: &BinsConfig) -> Self {
+        let k = bins.n_bins;
+        Self {
+            q: vec![1.0 / k as f64; k],
+            prior: vec![0.0; k],
+            t: Transition::new(bins),
+        }
+    }
+
+    /// Initialise from the first classifier output p^(0).
+    pub fn reset(&mut self, p0: &[f32]) {
+        let s: f64 = p0.iter().map(|&x| x as f64).sum();
+        if s <= 0.0 {
+            let k = self.q.len() as f64;
+            self.q.iter_mut().for_each(|v| *v = 1.0 / k);
+        } else {
+            for (q, &p) in self.q.iter_mut().zip(p0) {
+                *q = p as f64 / s;
+            }
+        }
+    }
+
+    /// One refinement step with classifier output p^(t).
+    pub fn update(&mut self, p: &[f32]) {
+        self.t.apply(&self.q, &mut self.prior);
+        let mut s = 0.0;
+        for i in 0..self.q.len() {
+            self.q[i] = self.prior[i] * p[i] as f64;
+            s += self.q[i];
+        }
+        if s <= 1e-30 {
+            // Degenerate disagreement — fall back to the raw classifier.
+            s = p.iter().map(|&x| x as f64).sum::<f64>().max(1e-30);
+            for (q, &pp) in self.q.iter_mut().zip(p) {
+                *q = pp as f64 / s;
+            }
+        } else {
+            let inv = 1.0 / s;
+            self.q.iter_mut().for_each(|v| *v *= inv);
+        }
+    }
+
+    /// L_t = Σ q̂(i)·m_i — the expected remaining length.
+    pub fn predicted_length(&self, midpoints: &[f64]) -> f64 {
+        self.q.iter().zip(midpoints).map(|(q, m)| q * m).sum()
+    }
+
+    pub fn argmax_bin(&self) -> usize {
+        self.q
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bins() -> BinsConfig {
+        BinsConfig {
+            n_bins: 10,
+            max_len: 256,
+            width: 25.6,
+            midpoints: (0..10).map(|i| (i as f64 + 0.5) * 25.6).collect(),
+        }
+    }
+
+    #[test]
+    fn transition_preserves_mass_up_to_leak() {
+        // Column j sums to stay+down except the last (mass leaks out of
+        // the top bin as remaining length shrinks) — normalisation in the
+        // update step re-scales, matching the paper's formulation.
+        let b = bins();
+        let t = Transition::new(&b);
+        let q = vec![0.1; 10];
+        let mut prior = vec![0.0; 10];
+        t.apply(&q, &mut prior);
+        let total: f64 = prior.iter().sum();
+        assert!(total <= 1.0 + 1e-12);
+        assert!(total > 0.95);
+    }
+
+    #[test]
+    fn repeated_updates_drift_downward() {
+        // With a flat classifier, the prior drift must lower the expected
+        // remaining length over time (requests get closer to completion).
+        let b = bins();
+        let mut s = Smoother::new(&b);
+        s.reset(&[0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+        let start = s.predicted_length(&b.midpoints);
+        let flat = [0.1f32; 10];
+        for _ in 0..50 {
+            s.update(&flat);
+        }
+        let end = s.predicted_length(&b.midpoints);
+        assert!(end < start - 20.0, "start={start} end={end}");
+    }
+
+    #[test]
+    fn sharp_classifier_dominates() {
+        let b = bins();
+        let mut s = Smoother::new(&b);
+        s.reset(&[0.1; 10]);
+        let mut sharp = [0.0f32; 10];
+        sharp[3] = 1.0;
+        s.update(&sharp);
+        assert_eq!(s.argmax_bin(), 3);
+        assert!(s.q[3] > 0.99);
+    }
+
+    #[test]
+    fn degenerate_disagreement_recovers() {
+        let b = bins();
+        let mut s = Smoother::new(&b);
+        let mut q0 = [0.0f32; 10];
+        q0[9] = 1.0;
+        s.reset(&q0);
+        // Classifier says bin 0 with certainty; prior mass there is ~0 —
+        // the smoother must not NaN, and must land on a valid simplex.
+        let mut p = [0.0f32; 10];
+        p[0] = 1.0;
+        s.update(&p);
+        let total: f64 = s.q.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(s.q.iter().all(|&x| x.is_finite()));
+    }
+
+    #[test]
+    fn predicted_length_midpoint() {
+        let b = bins();
+        let mut s = Smoother::new(&b);
+        let mut p = [0.0f32; 10];
+        p[2] = 1.0;
+        s.reset(&p);
+        assert!((s.predicted_length(&b.midpoints) - 64.0).abs() < 1e-9);
+    }
+}

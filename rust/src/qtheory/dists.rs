@@ -1,0 +1,106 @@
+//! Service-time / prediction distributions of the paper's Appendix D
+//! simulation study: exponential(1) service, with either *exponential*
+//! predictions (r ~ Exp(mean x) given true size x — Mitzenmacher 2019's
+//! "exponential predictions" model) or a *perfect* predictor (r = x).
+
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictionModel {
+    /// g(x, r) = f(x) · (1/x) e^{-r/x}
+    Exponential,
+    /// g(x, r) = f(x) · δ(r - x)
+    Perfect,
+}
+
+impl PredictionModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PredictionModel::Exponential => "exp-pred",
+            PredictionModel::Perfect => "perfect",
+        }
+    }
+
+    /// Sample (true size, prediction) for exp(1) service times.
+    pub fn sample(&self, rng: &mut SplitMix64) -> (f64, f64) {
+        let x = rng.next_exp(1.0);
+        let r = match self {
+            PredictionModel::Perfect => x,
+            PredictionModel::Exponential => rng.next_exp(1.0 / x),
+        };
+        (x, r)
+    }
+
+    /// Conditional prediction density h(r | x) (service density is
+    /// f(x) = e^{-x} throughout).
+    pub fn pred_density(&self, x: f64, r: f64) -> f64 {
+        match self {
+            PredictionModel::Perfect => {
+                // Delta — callers must special-case; this is only used by
+                // the generic integrators for the Exponential model.
+                panic!("pred_density undefined for the perfect predictor")
+            }
+            PredictionModel::Exponential => {
+                if x <= 0.0 {
+                    0.0
+                } else {
+                    (1.0 / x) * (-r / x).exp()
+                }
+            }
+        }
+    }
+}
+
+/// f(x) = e^{-x} (exp(1) service).
+pub fn service_density(x: f64) -> f64 {
+    (-x).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_prediction_mean_matches_size() {
+        // E[r | x] = x under the exponential predictions model.
+        let mut rng = SplitMix64::new(9);
+        let mut err = 0.0;
+        let n = 20000;
+        let mut sum_x = 0.0;
+        let mut sum_r = 0.0;
+        for _ in 0..n {
+            let (x, r) = PredictionModel::Exponential.sample(&mut rng);
+            sum_x += x;
+            sum_r += r;
+            err += (r - x).abs();
+        }
+        // Unconditionally E[r] = E[x] = 1.
+        assert!((sum_x / n as f64 - 1.0).abs() < 0.05);
+        assert!((sum_r / n as f64 - 1.0).abs() < 0.05);
+        assert!(err > 0.0);
+    }
+
+    #[test]
+    fn perfect_prediction_is_exact() {
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..100 {
+            let (x, r) = PredictionModel::Perfect.sample(&mut rng);
+            assert_eq!(x, r);
+        }
+    }
+
+    #[test]
+    fn density_normalises() {
+        // ∫ h(r|x) dr = 1 for a few x.
+        for &x in &[0.5, 1.0, 3.0] {
+            let mut total = 0.0;
+            let dr = 0.001;
+            let mut r = dr / 2.0;
+            while r < 60.0 {
+                total += PredictionModel::Exponential.pred_density(x, r) * dr;
+                r += dr;
+            }
+            assert!((total - 1.0).abs() < 1e-3, "x={x}: ∫={total}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Queueing-theory companion (paper §3.3, Appendices B–D):
+//! closed-form SOAP analysis of SPRPT with limited preemption (Lemma 1)
+//! evaluated by numeric integration, and a discrete-event M/G/1
+//! simulator with age-proportional memory tracking (Fig 8). The tests
+//! cross-validate simulator against formula.
+
+pub mod dists;
+pub mod sim;
+pub mod soap;
+
+pub use dists::PredictionModel;
+pub use sim::{SimConfig, SimResult, simulate};
+pub use soap::{mean_response_time, response_time_xr};

@@ -1,0 +1,289 @@
+//! Numeric evaluation of Lemma 1 (paper Appendix C): mean response time
+//! of SPRPT with limited preemption in an M/G/1 queue, via the SOAP
+//! tagged-job decomposition.
+//!
+//! ```text
+//!            λ (A(r) + B(r))          ⌠ a₀      da
+//! E[T(x,r)] = ───────────────────  +  ⎮    ──────────────  + (x − a₀)
+//!              2 (1 − ρ'_r)²          ⌡ 0   1 − ρ'_{(r−a)+}
+//!
+//! A(r) = ∫₀^r ∫ x² g(x,y) dx dy                 (original old jobs)
+//! B(r) = ∫_{t=r+a₀}^∞ ∫_{x=t−r}^∞ g(x,t)(x−(t−r))² dx dt   (recycled)
+//! ρ'_r = λ ∫₀^r ∫ x g(x,y) dx dy
+//! ```
+//!
+//! with a₀ = C·r, clamped to the job's own size (a job of size x < a₀
+//! completes while still preemptable, so its residence integral stops at
+//! x — this is the SOAP convention the closed form abbreviates).
+//!
+//! Service is exp(1); predictions are `PredictionModel`. For the perfect
+//! predictor every integral collapses to closed form; for exponential
+//! predictions we integrate numerically (trapezoid on graded grids,
+//! validated against the simulator to a few percent).
+
+use crate::qtheory::dists::PredictionModel;
+
+const X_MAX: f64 = 30.0;
+
+/// Trapezoid ∫ f over [a, b] with n panels.
+fn trapz<F: Fn(f64) -> f64>(a: f64, b: f64, n: usize, f: F) -> f64 {
+    if b <= a {
+        return 0.0;
+    }
+    let h = (b - a) / n as f64;
+    let mut s = 0.5 * (f(a) + f(b));
+    for i in 1..n {
+        s += f(a + i as f64 * h);
+    }
+    s * h
+}
+
+/// Moments of the prediction-conditioned size:
+/// mₖ(y) = ∫ xᵏ f(x) h(y|x) dx for the exponential predictions model.
+/// m₁(y) = m₂(y)·(d/dy)-free forms both reduce to ∫ x^{k-1} e^{-x-y/x} dx.
+fn m_k_exp(y: f64, k: u32) -> f64 {
+    // Integrand decays like e^{-x} for large x and e^{-y/x} for small x:
+    // integrate on [eps, X_MAX] with a graded grid.
+    trapz(1e-6, X_MAX, 600, |x| x.powi(k as i32 - 1) * (-x - y / x).exp())
+}
+
+/// Precomputed tables for one (λ, C, model) triple.
+pub struct SoapTables {
+    pub lambda: f64,
+    pub c: f64,
+    pub model: PredictionModel,
+    /// ρ'_r on a uniform r grid [0, R_MAX].
+    rho_grid: Vec<f64>,
+    dr: f64,
+}
+
+impl SoapTables {
+    pub fn new(lambda: f64, c: f64, model: PredictionModel) -> Self {
+        let r_max = X_MAX;
+        let n = 600;
+        let dr = r_max / n as f64;
+        // ρ'_r = λ ∫₀^r m₁(y) dy — cumulative trapezoid.
+        let mut rho_grid = Vec::with_capacity(n + 1);
+        rho_grid.push(0.0);
+        let m1 = |y: f64| match model {
+            PredictionModel::Perfect => y * (-y).exp(), // x f(x) at x=y
+            PredictionModel::Exponential => m_k_exp(y, 1),
+        };
+        let mut acc = 0.0;
+        let mut prev = m1(1e-9);
+        for i in 1..=n {
+            let y = i as f64 * dr;
+            let cur = m1(y);
+            acc += 0.5 * (prev + cur) * dr;
+            prev = cur;
+            rho_grid.push(lambda * acc);
+        }
+        let _ = r_max;
+        Self {
+            lambda,
+            c,
+            model,
+            rho_grid,
+            dr,
+        }
+    }
+
+    /// ρ'_r by linear interpolation (saturates at the table end).
+    pub fn rho(&self, r: f64) -> f64 {
+        if r <= 0.0 {
+            return 0.0;
+        }
+        let t = (r / self.dr).min((self.rho_grid.len() - 1) as f64 - 1e-9);
+        let i = t as usize;
+        let w = t - i as f64;
+        self.rho_grid[i] * (1.0 - w) + self.rho_grid[i + 1] * w
+    }
+
+    /// A(r) = ∫₀^r m₂(y) dy.
+    fn a_term(&self, r: f64) -> f64 {
+        match self.model {
+            PredictionModel::Perfect => {
+                // ∫₀^r x² e^{-x} dx = 2 − e^{-r}(r² + 2r + 2)
+                2.0 - (-r).exp() * (r * r + 2.0 * r + 2.0)
+            }
+            PredictionModel::Exponential => {
+                trapz(1e-9, r, 200, |y| m_k_exp(y, 2))
+            }
+        }
+    }
+
+    /// B(r): recycled-job second moment.
+    ///
+    /// NOTE (reproduction finding, EXPERIMENTS.md E9): the paper prints
+    /// the recycled integral with lower limit t = r + a₀, which at C = 1
+    /// disagrees with the classical Schrage/Miller SRPT truncated term
+    /// (it gives r²e^{-2r} instead of r²e^{-r}) and with our exact
+    /// simulator. We evaluate the SOAP recycled work from the rank
+    /// function directly: an old job with prediction t > r is recycled at
+    /// age t − r if still preemptable (t − r < C·t ⟺ t < r/(1−C)) and
+    /// contributes (x − (t−r))²; otherwise it locked first (age C·t) and
+    /// its whole post-lock remainder (x − C·t)² delays the tagged job.
+    /// At C = 1 this is exactly the classical SRPT term. The paper's
+    /// printed bound is available as `b_term_paper` for comparison.
+    fn b_term(&self, r: f64) -> f64 {
+        let c = self.c;
+        let t_split = if c >= 1.0 { f64::INFINITY } else { r / (1.0 - c) };
+        match self.model {
+            PredictionModel::Perfect => {
+                // g concentrates on x = t.
+                // Piece 1: t ∈ [r, t_split): contribution r².
+                let hi = t_split.min(X_MAX * 2.0);
+                let p1 = if hi > r {
+                    r * r * ((-r).exp() - (-hi).exp())
+                } else {
+                    0.0
+                };
+                // Piece 2: t ≥ t_split: contribution (t(1−C))².
+                let p2 = if t_split.is_finite() {
+                    let s = t_split;
+                    // ∫_s^∞ e^-t t² dt = e^-s (s² + 2s + 2)
+                    (1.0 - c) * (1.0 - c) * (-s).exp() * (s * s + 2.0 * s + 2.0)
+                } else {
+                    0.0
+                };
+                p1 + p2
+            }
+            PredictionModel::Exponential => {
+                // Piece 1: t ∈ [r, min(t_split, ·)): x from t − r.
+                let hi = t_split.min(r + X_MAX);
+                let p1 = trapz(r, hi, 150, |t| {
+                    let u = t - r;
+                    trapz(u.max(1e-6), u + X_MAX, 120, |x| {
+                        (-x - t / x).exp() / x * (x - u) * (x - u)
+                    })
+                });
+                // Piece 2: t ≥ t_split: x from C·t, contribution (x−C·t)².
+                let p2 = if t_split.is_finite() {
+                    trapz(t_split, t_split + X_MAX, 150, |t| {
+                        let lk = c * t;
+                        trapz(lk.max(1e-6), lk + X_MAX, 120, |x| {
+                            (-x - t / x).exp() / x * (x - lk) * (x - lk)
+                        })
+                    })
+                } else {
+                    0.0
+                };
+                p1 + p2
+            }
+        }
+    }
+
+    /// The recycled term exactly as printed in the paper's Lemma 1
+    /// (lower limit t = r + a₀) — kept for the E9 comparison bench.
+    pub fn b_term_paper(&self, r: f64) -> f64 {
+        let a0 = self.c * r;
+        match self.model {
+            PredictionModel::Perfect => r * r * (-(r + a0)).exp(),
+            PredictionModel::Exponential => trapz(a0, a0 + X_MAX, 150, |u| {
+                trapz(u.max(1e-6), u + X_MAX, 120, |x| {
+                    (-x - (u + r) / x).exp() / x * (x - u) * (x - u)
+                })
+            }),
+        }
+    }
+
+    /// E[T(x, r)] — Lemma 1.
+    pub fn response_time(&self, x: f64, r: f64) -> f64 {
+        let a0 = (self.c * r).min(x); // clamp: job may finish pre-lock
+        let rho_r = self.rho(r).min(0.999999);
+        let waiting = self.lambda * (self.a_term(r) + self.b_term(r))
+            / (2.0 * (1.0 - rho_r) * (1.0 - rho_r));
+        let residence = trapz(0.0, a0, 200, |a| {
+            let rr = (r - a).max(0.0);
+            1.0 / (1.0 - self.rho(rr).min(0.999999))
+        });
+        waiting + residence + (x - a0)
+    }
+
+    /// Overall mean response time E[T] = ∬ g(x,r) E[T(x,r)].
+    pub fn mean_response_time(&self) -> f64 {
+        match self.model {
+            PredictionModel::Perfect => trapz(1e-6, X_MAX, 300, |x| {
+                (-x).exp() * self.response_time(x, x)
+            }),
+            PredictionModel::Exponential => trapz(1e-6, X_MAX, 120, |x| {
+                let fx = (-x).exp();
+                if fx < 1e-13 {
+                    return 0.0;
+                }
+                fx * trapz(1e-6, (8.0 * x).min(X_MAX * 2.0), 120, |r| {
+                    (1.0 / x) * (-r / x).exp() * self.response_time(x, r)
+                })
+            }),
+        }
+    }
+}
+
+/// Convenience: E[T(x,r)] for one job.
+pub fn response_time_xr(lambda: f64, c: f64, model: PredictionModel, x: f64, r: f64) -> f64 {
+    SoapTables::new(lambda, c, model).response_time(x, r)
+}
+
+/// Convenience: overall E[T].
+pub fn mean_response_time(lambda: f64, c: f64, model: PredictionModel) -> f64 {
+    SoapTables::new(lambda, c, model).mean_response_time()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rho_monotone_and_bounded() {
+        let t = SoapTables::new(0.8, 1.0, PredictionModel::Perfect);
+        let mut prev = -1.0;
+        for i in 0..100 {
+            let r = i as f64 * 0.2;
+            let rho = t.rho(r);
+            assert!(rho >= prev - 1e-12);
+            assert!(rho <= 0.8 + 1e-9, "rho({r}) = {rho}");
+            prev = rho;
+        }
+        // ρ'_∞ = λ E[x] = 0.8.
+        assert!((t.rho(25.0) - 0.8).abs() < 1e-3);
+    }
+
+    #[test]
+    fn perfect_c1_matches_known_srpt_light_load() {
+        // At very light load, E[T] → E[x] = 1 (no queueing).
+        let et = mean_response_time(0.01, 1.0, PredictionModel::Perfect);
+        assert!((et - 1.0).abs() < 0.05, "E[T] = {et}");
+    }
+
+    #[test]
+    fn heavier_load_increases_response_time() {
+        let lo = mean_response_time(0.3, 1.0, PredictionModel::Perfect);
+        let hi = mean_response_time(0.8, 1.0, PredictionModel::Perfect);
+        assert!(hi > lo, "E[T]: {hi} !> {lo}");
+    }
+
+    #[test]
+    fn exp_predictions_worse_than_perfect() {
+        // Misprediction costs response time under SPRPT-like policies.
+        let perfect = mean_response_time(0.7, 1.0, PredictionModel::Perfect);
+        let noisy = mean_response_time(0.7, 1.0, PredictionModel::Exponential);
+        assert!(noisy > perfect * 0.99, "noisy {noisy} vs perfect {perfect}");
+    }
+
+    #[test]
+    fn b_term_matches_classical_srpt_at_c1() {
+        // C=1, perfect preds: B(r) must equal the classical truncated
+        // second-moment tail r²(1−F(r)) = r²e^{-r}.
+        let t = SoapTables::new(0.5, 1.0, PredictionModel::Perfect);
+        for &r in &[0.5, 1.0, 2.0, 4.0] {
+            let want = r * r * (-r as f64).exp();
+            let got = t.b_term(r);
+            assert!(
+                (got - want).abs() < 1e-6 + 1e-3 * want,
+                "B({r}) = {got}, classical {want}"
+            );
+        }
+        // And the paper's printed bound disagrees (the E9 finding).
+        assert!(t.b_term_paper(2.0) < t.b_term(2.0) * 0.5);
+    }
+}

@@ -1,0 +1,296 @@
+//! The PJRT execution engine.
+//!
+//! Loads `artifacts/*.hlo.txt` (HLO *text* — see aot.py for why), compiles
+//! each on the PJRT CPU client, and drives the packed-state step machine:
+//!
+//! ```text
+//!   state_buf  --execute_b(step, tokens, pos, active)-->  state_buf'
+//!   state_buf  --execute_b(prefill, tokens, slot, …)--->  state_buf'
+//!   state_buf  --execute_b(readout)------------------->  (logits, taps,
+//!                                                          ptaps, argmax)
+//! ```
+//!
+//! The state buffer (~10.5 MB at the default config) never leaves the
+//! device; per-iteration host traffic is a few hundred bytes of control
+//! input and ~45 KB of readout. This is the CPU-PJRT analogue of vLLM
+//! keeping the KV cache on the GPU while the scheduler ticks on the host.
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::Config;
+use crate::runtime::probe_weights::ProbeWeights;
+
+/// Host-visible per-iteration outputs (small).
+#[derive(Clone, Debug)]
+pub struct Readout {
+    /// `[B * V]` last-step logits, row-major per slot.
+    pub logits: Vec<f32>,
+    /// `[n_taps * B * D]` current-token hidden states at every tap point.
+    pub taps: Vec<f32>,
+    /// `[n_taps * B * D]` mean prompt embeddings per slot (prompt probe).
+    pub prompt_taps: Vec<f32>,
+    /// `[B]` argmax next token per slot.
+    pub argmax: Vec<i32>,
+}
+
+impl Readout {
+    pub fn tap(&self, layer: usize, slot: usize, d_model: usize, slots: usize) -> &[f32] {
+        let off = (layer * slots + slot) * d_model;
+        &self.taps[off..off + d_model]
+    }
+
+    pub fn prompt_tap(&self, layer: usize, slot: usize, d_model: usize, slots: usize) -> &[f32] {
+        let off = (layer * slots + slot) * d_model;
+        &self.prompt_taps[off..off + d_model]
+    }
+}
+
+/// Compiled model executables + the PJRT client that owns them.
+pub struct Engine {
+    pub cfg: Config,
+    client: PjRtClient,
+    step: PjRtLoadedExecutable,
+    prefill: PjRtLoadedExecutable,
+    readout: PjRtLoadedExecutable,
+    slot_reset: PjRtLoadedExecutable,
+    /// (batch size, executable) for the probe predictor, smallest first.
+    predictors: Vec<(usize, PjRtLoadedExecutable)>,
+    /// Probe MLP weights, staged on device once at load time.
+    probe_bufs: Option<ProbeDeviceWeights>,
+    pub probe: Option<ProbeWeights>,
+    /// Running counters (perf accounting, EXPERIMENTS.md §Perf).
+    pub n_steps: std::cell::Cell<u64>,
+    pub n_prefills: std::cell::Cell<u64>,
+    pub n_readouts: std::cell::Cell<u64>,
+}
+
+struct ProbeDeviceWeights {
+    /// Per tap layer: [w1, b1, w2, b2] device buffers.
+    layers: Vec<[PjRtBuffer; 4]>,
+    prompt: [PjRtBuffer; 4],
+}
+
+impl Engine {
+    /// Load + compile every artifact. `with_probe` also stages the probe
+    /// MLP weights on device (needed for serving and Table 1; the golden
+    /// runtime tests can skip it when probe training hasn't run).
+    pub fn load(cfg: &Config, with_probe: bool) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
+            let path = cfg.artifact_path(name);
+            let proto = HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {path}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))
+        };
+
+        let step = compile(&cfg.artifacts.step)?;
+        let prefill = compile(&cfg.artifacts.prefill)?;
+        let readout = compile(&cfg.artifacts.readout)?;
+        let slot_reset = compile("model_slot_reset.hlo.txt")?;
+        let mut predictors = Vec::new();
+        let mut sizes = cfg.table1_batches.clone();
+        sizes.push(cfg.model.batch_slots);
+        sizes.sort_unstable();
+        sizes.dedup();
+        for n in sizes {
+            let name = format!("{}{}.hlo.txt", cfg.artifacts.predictor_prefix, n);
+            if std::path::Path::new(&cfg.artifact_path(&name)).exists() {
+                predictors.push((n, compile(&name)?));
+            }
+        }
+        if predictors.is_empty() {
+            return Err(anyhow!("no predictor artifacts found"));
+        }
+
+        let (probe, probe_bufs) = if with_probe {
+            let pw = ProbeWeights::load(cfg)?;
+            let stage = |w: &crate::runtime::probe_weights::Mlp| -> Result<[PjRtBuffer; 4]> {
+                let d = cfg.model.d_model;
+                let h = cfg.probe_hidden;
+                let k = cfg.bins.n_bins;
+                Ok([
+                    client.buffer_from_host_buffer(&w.w1, &[d, h], None)?,
+                    client.buffer_from_host_buffer(&w.b1, &[h], None)?,
+                    client.buffer_from_host_buffer(&w.w2, &[h, k], None)?,
+                    client.buffer_from_host_buffer(&w.b2, &[k], None)?,
+                ])
+            };
+            let layers = pw
+                .layers
+                .iter()
+                .map(|w| stage(w))
+                .collect::<Result<Vec<_>>>()?;
+            let prompt = stage(&pw.prompt)?;
+            (Some(pw), Some(ProbeDeviceWeights { layers, prompt }))
+        } else {
+            (None, None)
+        };
+
+        Ok(Engine {
+            cfg: cfg.clone(),
+            client,
+            step,
+            prefill,
+            readout,
+            slot_reset,
+            predictors,
+            probe_bufs,
+            probe,
+            n_steps: std::cell::Cell::new(0),
+            n_prefills: std::cell::Cell::new(0),
+            n_readouts: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Fresh all-zeros packed state on device.
+    pub fn init_state(&self) -> Result<PjRtBuffer> {
+        let zeros = vec![0f32; self.cfg.layout.total];
+        Ok(self
+            .client
+            .buffer_from_host_buffer(&zeros, &[self.cfg.layout.total], None)?)
+    }
+
+    fn single(&self, mut outs: Vec<Vec<PjRtBuffer>>, what: &str) -> Result<PjRtBuffer> {
+        let mut replica = outs
+            .pop()
+            .ok_or_else(|| anyhow!("{what}: no replica outputs"))?;
+        // Single-output graphs (return_tuple=False) produce exactly one
+        // buffer per replica.
+        replica
+            .pop()
+            .ok_or_else(|| anyhow!("{what}: no output buffer"))
+    }
+
+    /// One decode iteration for all B slots (device-resident).
+    pub fn decode_step(
+        &self,
+        state: PjRtBuffer,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[f32],
+    ) -> Result<PjRtBuffer> {
+        let b = self.cfg.model.batch_slots;
+        debug_assert_eq!(tokens.len(), b);
+        let t = self.client.buffer_from_host_buffer(tokens, &[b], None)?;
+        let p = self.client.buffer_from_host_buffer(pos, &[b], None)?;
+        let a = self.client.buffer_from_host_buffer(active, &[b], None)?;
+        let outs = self.step.execute_b(&[&state, &t, &p, &a])?;
+        self.n_steps.set(self.n_steps.get() + 1);
+        self.single(outs, "decode_step")
+    }
+
+    /// One prefill chunk for one slot (tokens padded to the chunk size).
+    pub fn prefill_chunk(
+        &self,
+        state: PjRtBuffer,
+        tokens: &[i32],
+        slot: i32,
+        start: i32,
+        nvalid: i32,
+    ) -> Result<PjRtBuffer> {
+        let c = self.cfg.model.prefill_chunk;
+        let mut padded = vec![self.cfg.model.pad_id; c];
+        padded[..tokens.len().min(c)].copy_from_slice(&tokens[..tokens.len().min(c)]);
+        let t = self.client.buffer_from_host_buffer(&padded, &[c], None)?;
+        let s = self.client.buffer_from_host_buffer(&[slot], &[], None)?;
+        let st = self.client.buffer_from_host_buffer(&[start], &[], None)?;
+        let nv = self.client.buffer_from_host_buffer(&[nvalid], &[], None)?;
+        let outs = self.prefill.execute_b(&[&state, &t, &s, &st, &nv])?;
+        self.n_prefills.set(self.n_prefills.get() + 1);
+        self.single(outs, "prefill_chunk")
+    }
+
+    /// Clear a slot's prompt-tap accumulators before re-using it.
+    pub fn slot_reset(&self, state: PjRtBuffer, slot: i32) -> Result<PjRtBuffer> {
+        let s = self.client.buffer_from_host_buffer(&[slot], &[], None)?;
+        let outs = self.slot_reset.execute_b(&[&state, &s])?;
+        self.single(outs, "slot_reset")
+    }
+
+    /// Pull the small host-visible outputs (logits / taps / argmax).
+    pub fn read(&self, state: &PjRtBuffer) -> Result<Readout> {
+        let outs = self.readout.execute_b(&[state])?;
+        self.n_readouts.set(self.n_readouts.get() + 1);
+        let buf = self.single(outs, "readout")?;
+        let lit = buf.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != 4 {
+            return Err(anyhow!("readout: expected 4-tuple, got {}", parts.len()));
+        }
+        Ok(Readout {
+            logits: parts[0].to_vec::<f32>()?,
+            taps: parts[1].to_vec::<f32>()?,
+            prompt_taps: parts[2].to_vec::<f32>()?,
+            argmax: parts[3].to_vec::<i32>()?,
+        })
+    }
+
+    /// Debug/tests: pull the whole state back to the host.
+    pub fn state_to_host(&self, state: &PjRtBuffer) -> Result<Vec<f32>> {
+        Ok(state.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    /// Upload a host state (tests / golden replay).
+    pub fn state_from_host(&self, state: &[f32]) -> Result<PjRtBuffer> {
+        Ok(self
+            .client
+            .buffer_from_host_buffer(state, &[self.cfg.layout.total], None)?)
+    }
+
+    // -----------------------------------------------------------------
+    // Probe predictor (PJRT path — the paper's Table 1 "CUDA" analogue)
+    // -----------------------------------------------------------------
+
+    fn predictor_for(&self, n: usize) -> Result<(usize, &PjRtLoadedExecutable)> {
+        self.predictors
+            .iter()
+            .find(|(sz, _)| *sz >= n)
+            .or_else(|| self.predictors.last())
+            .map(|(sz, e)| (*sz, e))
+            .ok_or_else(|| anyhow!("no predictor executable"))
+    }
+
+    /// Run the probe MLP for `n` embeddings of tap layer `layer` via the
+    /// AOT predictor executable. `emb` is `[n * D]`; returns `[n * K]`
+    /// bin probabilities. Inputs are padded up to the executable batch.
+    pub fn predict_layer(&self, layer: usize, emb: &[f32], n: usize) -> Result<Vec<f32>> {
+        let bufs = self
+            .probe_bufs
+            .as_ref()
+            .ok_or_else(|| anyhow!("engine loaded without probe weights"))?;
+        let w = &bufs.layers[layer];
+        self.predict_with(emb, n, w)
+    }
+
+    /// Prompt-probe ("BERT" baseline) prediction.
+    pub fn predict_prompt(&self, emb: &[f32], n: usize) -> Result<Vec<f32>> {
+        let bufs = self
+            .probe_bufs
+            .as_ref()
+            .ok_or_else(|| anyhow!("engine loaded without probe weights"))?;
+        self.predict_with(emb, n, &bufs.prompt)
+    }
+
+    fn predict_with(&self, emb: &[f32], n: usize, w: &[PjRtBuffer; 4]) -> Result<Vec<f32>> {
+        let d = self.cfg.model.d_model;
+        let k = self.cfg.bins.n_bins;
+        debug_assert_eq!(emb.len(), n * d);
+        let (cap, exe) = self.predictor_for(n)?;
+        let mut padded = vec![0f32; cap * d];
+        padded[..n * d].copy_from_slice(emb);
+        let x = self.client.buffer_from_host_buffer(&padded, &[cap, d], None)?;
+        let outs = exe.execute_b(&[&x, &w[0], &w[1], &w[2], &w[3]])?;
+        let buf = self.single(outs, "predictor")?;
+        let mut probs = buf.to_literal_sync()?.to_vec::<f32>()?;
+        probs.truncate(n * k);
+        Ok(probs)
+    }
+}

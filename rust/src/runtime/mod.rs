@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them with a device-resident packed state (DESIGN.md §1).
+//!
+//! Python is never on this path — `make artifacts` ran once at build
+//! time; this module only touches the `xla` crate (PJRT C API).
+
+pub mod engine;
+pub mod probe_weights;
+
+pub use engine::{Engine, Readout};
+pub use probe_weights::ProbeWeights;

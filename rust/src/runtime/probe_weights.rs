@@ -1,0 +1,120 @@
+//! Probe MLP weights, trained by `python/compile/probe.py` and shipped in
+//! `artifacts/probe_weights.json`. Consumed two ways:
+//!
+//! * staged on device for the AOT predictor executables (`Engine`), and
+//! * run natively by `predictor::mlp::NativeMlp` on the iteration hot
+//!   path (the paper's Table 1 "CPU" variant — see DESIGN.md §2).
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::util::json::{parse_file, Json};
+
+/// One 2-layer MLP: softmax(relu(x@w1+b1)@w2+b2). Row-major flats.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub w1: Vec<f32>, // [D * H]
+    pub b1: Vec<f32>, // [H]
+    pub w2: Vec<f32>, // [H * K]
+    pub b2: Vec<f32>, // [K]
+}
+
+#[derive(Clone, Debug)]
+pub struct ProbeWeights {
+    /// One probe per tap point (layer 0 = embedding output).
+    pub layers: Vec<Mlp>,
+    /// Prompt-only probe (the paper's BERT/S³ baseline analogue).
+    pub prompt: Mlp,
+    /// Embedding table [V * D] row-major — admission-time prompt
+    /// embeddings for the Rust coordinator.
+    pub embed: Vec<f32>,
+    /// Tap layer the profiling pass found most accurate (paper: layer 11).
+    pub best_layer: usize,
+    pub hidden: usize,
+    /// Validation MAE rows recorded at training time (Fig 2/3 series).
+    pub mae_by_layer: Vec<MaeRow>,
+}
+
+#[derive(Clone, Debug)]
+pub struct MaeRow {
+    pub layer: usize,
+    pub mae_raw: f64,
+    pub mae_refined: f64,
+    pub mae_bert: f64,
+}
+
+fn mlp_from_json(j: &Json) -> Mlp {
+    Mlp {
+        w1: j.at(&["w1"]).as_f32_vec(),
+        b1: j.at(&["b1"]).as_f32_vec(),
+        w2: j.at(&["w2"]).as_f32_vec(),
+        b2: j.at(&["b2"]).as_f32_vec(),
+    }
+}
+
+impl ProbeWeights {
+    pub fn load(cfg: &Config) -> Result<ProbeWeights> {
+        let path = cfg.artifact_path(&cfg.artifacts.probe_weights);
+        let j = parse_file(&path).map_err(|e| anyhow!(e))?;
+        let hidden = j.at(&["hidden"]).as_usize();
+        let layers: Vec<Mlp> = j.at(&["layers"]).as_arr().iter().map(mlp_from_json).collect();
+        if layers.len() != cfg.model.n_taps {
+            return Err(anyhow!(
+                "probe_weights.json has {} layers, config expects {}",
+                layers.len(),
+                cfg.model.n_taps
+            ));
+        }
+        let d = cfg.model.d_model;
+        let k = cfg.bins.n_bins;
+        for (i, m) in layers.iter().enumerate() {
+            if m.w1.len() != d * hidden || m.b1.len() != hidden
+                || m.w2.len() != hidden * k || m.b2.len() != k
+            {
+                return Err(anyhow!("probe layer {i}: bad weight shapes"));
+            }
+        }
+        let mae_by_layer = j
+            .at(&["mae_by_layer"])
+            .as_arr()
+            .iter()
+            .map(|r| MaeRow {
+                layer: r.at(&["layer"]).as_usize(),
+                mae_raw: r.at(&["mae_raw"]).as_f64(),
+                mae_refined: r.at(&["mae_refined"]).as_f64(),
+                mae_bert: r.at(&["mae_bert"]).as_f64(),
+            })
+            .collect();
+        let embed = j.at(&["embed"]).as_f32_vec();
+        if embed.len() != cfg.model.vocab * d {
+            return Err(anyhow!("embed table: bad shape"));
+        }
+        Ok(ProbeWeights {
+            layers,
+            prompt: mlp_from_json(j.at(&["prompt"])),
+            embed,
+            best_layer: j.at(&["best_layer"]).as_usize(),
+            hidden,
+            mae_by_layer,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_and_validates() {
+        let cfg = Config::load_default().expect("run `make artifacts` first");
+        let path = cfg.artifact_path(&cfg.artifacts.probe_weights);
+        if !std::path::Path::new(&path).exists() {
+            eprintln!("probe_weights.json not built yet — skipping");
+            return;
+        }
+        let pw = ProbeWeights::load(&cfg).unwrap();
+        assert!(pw.best_layer < pw.layers.len());
+        assert_eq!(pw.layers.len(), cfg.model.n_taps);
+        assert!(!pw.mae_by_layer.is_empty());
+    }
+}

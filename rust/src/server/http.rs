@@ -1,0 +1,291 @@
+//! HTTP/1.1 server + load client for the chatbot benchmark.
+//!
+//! Protocol (JSON over HTTP):
+//!
+//! ```text
+//! POST /generate  {"prompt": [1, 42, …], "max_tokens": 64, "response": […]}
+//!   -> {"rid": 7, "n_tokens": 64, "latency_s": 0.12, "ttft_s": 0.03}
+//! GET  /stats     -> {"completed": …, "mean_latency_s": …, …}
+//! GET  /healthz   -> {"ok": true}
+//! ```
+//!
+//! Requests are forwarded over a channel into `ServingEngine::run_online`
+//! (one engine thread — iteration-level scheduling is a sequential
+//! decision loop, as in vLLM's engine core); handler threads block until
+//! their completion notification arrives.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::{OnlineDone, OnlineJob};
+use crate::util::json::{parse, Json};
+use crate::util::threadpool::ThreadPool;
+use crate::workload::RequestSpec;
+
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub completed: AtomicU64,
+    pub total_latency_us: AtomicU64,
+    pub total_ttft_us: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn to_json(&self) -> Json {
+        let n = self.completed.load(Ordering::Relaxed);
+        let lat = self.total_latency_us.load(Ordering::Relaxed) as f64 / 1e6;
+        let ttft = self.total_ttft_us.load(Ordering::Relaxed) as f64 / 1e6;
+        Json::obj(vec![
+            ("completed", Json::num(n as f64)),
+            ("mean_latency_s", Json::num(if n > 0 { lat / n as f64 } else { 0.0 })),
+            ("mean_ttft_s", Json::num(if n > 0 { ttft / n as f64 } else { 0.0 })),
+        ])
+    }
+}
+
+pub struct HttpServer {
+    listener: TcpListener,
+    pool: ThreadPool,
+    job_tx: SyncSender<OnlineJob>,
+    stats: Arc<ServerStats>,
+    next_rid: AtomicU64,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. "127.0.0.1:8091"). The caller runs the engine
+    /// thread with the returned receiver (see examples/http_serving.rs).
+    pub fn bind(addr: &str, workers: usize) -> Result<(HttpServer, Receiver<OnlineJob>)> {
+        let (job_tx, job_rx) = mpsc::sync_channel(1024);
+        let listener = TcpListener::bind(addr)?;
+        Ok((
+            HttpServer {
+                listener,
+                pool: ThreadPool::new(workers),
+                job_tx,
+                stats: Arc::new(ServerStats::default()),
+                next_rid: AtomicU64::new(1),
+                stop: Arc::new(AtomicBool::new(false)),
+            },
+            job_rx,
+        ))
+    }
+
+    pub fn local_addr(&self) -> String {
+        self.listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
+    }
+
+    pub fn stats(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop; returns when the stop flag is set (checked between
+    /// connections — send one more request to unblock accept).
+    pub fn serve(&self) {
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let tx = self.job_tx.clone();
+            let stats = Arc::clone(&self.stats);
+            let rid = self.next_rid.fetch_add(1, Ordering::Relaxed);
+            self.pool.execute(move || {
+                let _ = handle_connection(stream, tx, stats, rid);
+            });
+        }
+    }
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    tx: SyncSender<OnlineJob>,
+    stats: Arc<ServerStats>,
+    rid: u64,
+) -> Result<()> {
+    let (method, path, body) = read_request(&mut stream)?;
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => respond(&mut stream, 200, &Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/stats") => respond(&mut stream, 200, &stats.to_json()),
+        ("POST", "/generate") => {
+            let req = parse(&body).map_err(|e| anyhow!("bad JSON: {e}"))?;
+            let prompt: Vec<i32> = req
+                .at(&["prompt"])
+                .as_i64_vec()
+                .iter()
+                .map(|&x| x as i32)
+                .collect();
+            let max_tokens = req.at(&["max_tokens"]).as_usize();
+            let response: Vec<i32> = match req.get("response") {
+                Some(r) => r.as_i64_vec().iter().map(|&x| x as i32).collect(),
+                // No replay stream supplied: synthesise pad inputs.
+                None => vec![8; max_tokens.saturating_sub(1)],
+            };
+            let spec = RequestSpec {
+                rid,
+                prompt,
+                true_output_len: max_tokens.max(1),
+                response,
+            };
+            let (done_tx, done_rx) = mpsc::channel();
+            tx.send(OnlineJob { spec, done: done_tx })
+                .map_err(|_| anyhow!("engine gone"))?;
+            let done: OnlineDone = done_rx.recv().map_err(|_| anyhow!("engine dropped job"))?;
+            stats.completed.fetch_add(1, Ordering::Relaxed);
+            stats
+                .total_latency_us
+                .fetch_add((done.latency * 1e6) as u64, Ordering::Relaxed);
+            stats
+                .total_ttft_us
+                .fetch_add((done.ttft * 1e6) as u64, Ordering::Relaxed);
+            respond(
+                &mut stream,
+                200,
+                &Json::obj(vec![
+                    ("rid", Json::num(done.rid as f64)),
+                    ("n_tokens", Json::num(done.n_tokens as f64)),
+                    ("latency_s", Json::num(done.latency)),
+                    ("ttft_s", Json::num(done.ttft)),
+                ]),
+            )
+        }
+        _ => respond(
+            &mut stream,
+            404,
+            &Json::obj(vec![("error", Json::str("not found"))]),
+        ),
+    }
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn respond(stream: &mut TcpStream, code: u16, body: &Json) -> Result<()> {
+    let body = body.to_string();
+    let status = match code {
+        200 => "200 OK",
+        404 => "404 Not Found",
+        _ => "500 Internal Server Error",
+    };
+    let msg = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(msg.as_bytes())?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client side (the benchmark load generator)
+// ---------------------------------------------------------------------------
+
+/// One blocking request; returns (latency_s, ttft_s) as reported by the
+/// server.
+pub fn post_generate(addr: &str, spec: &RequestSpec) -> Result<(f64, f64)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body = Json::obj(vec![
+        (
+            "prompt",
+            Json::Arr(spec.prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("max_tokens", Json::num(spec.true_output_len as f64)),
+        (
+            "response",
+            Json::Arr(spec.response.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+    ])
+    .to_string();
+    let msg = format!(
+        "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(msg.as_bytes())?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let json_start = buf.find("\r\n\r\n").map(|i| i + 4).unwrap_or(0);
+    let j = parse(&buf[json_start..]).map_err(|e| anyhow!("bad response: {e}"))?;
+    Ok((j.at(&["latency_s"]).as_f64(), j.at(&["ttft_s"]).as_f64()))
+}
+
+pub fn get_stats(addr: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(b"GET /stats HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let json_start = buf.find("\r\n\r\n").map(|i| i + 4).unwrap_or(0);
+    parse(&buf[json_start..]).map_err(|e| anyhow!("bad response: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_roundtrip_with_echo_engine() {
+        // Stand-in "engine": completes every job instantly.
+        let (server, rx) = HttpServer::bind("127.0.0.1:0", 4).unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let engine = std::thread::spawn(move || {
+            while let Ok(job) = rx.recv() {
+                let _ = job.done.send(OnlineDone {
+                    rid: job.spec.rid,
+                    latency: 0.5,
+                    ttft: 0.1,
+                    n_tokens: job.spec.true_output_len,
+                });
+            }
+        });
+        let srv = std::thread::spawn(move || server.serve());
+
+        let spec = RequestSpec {
+            rid: 0,
+            prompt: vec![1, 2, 3],
+            true_output_len: 5,
+            response: vec![8; 4],
+        };
+        let (lat, ttft) = post_generate(&addr, &spec).unwrap();
+        assert_eq!(lat, 0.5);
+        assert_eq!(ttft, 0.1);
+
+        let stats = get_stats(&addr).unwrap();
+        assert_eq!(stats.at(&["completed"]).as_usize(), 1);
+
+        stop.store(true, Ordering::Relaxed);
+        // Unblock accept with a throwaway connection.
+        let _ = TcpStream::connect(&addr);
+        srv.join().unwrap();
+        engine.join().unwrap();
+    }
+}

@@ -1,0 +1,8 @@
+//! Minimal HTTP/1.1 chatbot serving front-end (paper §4 benchmark setup:
+//! "the server runs the vLLM OpenAI API, the client sends prompts") —
+//! built on std::net + the thread-pool substrate; tokio is not in the
+//! image.
+
+pub mod http;
+
+pub use http::{HttpServer, ServerStats};

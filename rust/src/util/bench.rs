@@ -1,0 +1,85 @@
+//! Tiny benchmark harness (substrate: criterion is not in the image).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary that uses this
+//! module to time sections, print the paper-style tables, and honour a
+//! shared `TRAIL_BENCH_SCALE` environment variable so `cargo bench` stays
+//! bounded by default but can be scaled up for the record runs.
+
+use std::time::Instant;
+
+/// Workload scale multiplier: `TRAIL_BENCH_SCALE` (default 1.0).
+pub fn scale() -> f64 {
+    std::env::var("TRAIL_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64) * scale()).round().max(1.0) as usize
+}
+
+/// Time `f()` `iters` times after `warmup` unmeasured runs; returns
+/// (mean_ns, std_ns, results discarded).
+pub fn time_ns<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / (n - 1.0).max(1.0);
+    (mean, var.sqrt())
+}
+
+/// Section banner used by every bench binary so `bench_output.txt` is
+/// grep-able per experiment.
+pub fn banner(experiment: &str, paper_ref: &str) {
+    println!();
+    println!("================================================================");
+    println!("  {experiment}");
+    println!("  reproduces: {paper_ref}");
+    println!("================================================================");
+}
+
+pub struct Timer {
+    t0: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { t0: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ns_positive() {
+        let (mean, _std) = time_ns(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(mean > 0.0);
+    }
+
+    #[test]
+    fn scaled_minimum_one() {
+        assert!(scaled(0) >= 1);
+    }
+}

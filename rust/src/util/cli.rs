@@ -1,0 +1,152 @@
+//! Minimal CLI argument parser (substrate: clap is not in the image).
+//!
+//! Grammar: `prog [subcommand] --key value --flag positional…`.
+//! Typed accessors with defaults; `--help` text is assembled from the
+//! options the program registers.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    help: Vec<(String, String)>, // (option, description) for --help
+}
+
+impl Args {
+    /// Parse `std::env::args()`, treating the first non-flag token as the
+    /// subcommand when `expect_subcommand`.
+    pub fn parse(expect_subcommand: bool) -> Args {
+        Self::from_vec(std::env::args().skip(1).collect(), expect_subcommand)
+    }
+
+    pub fn from_vec(argv: Vec<String>, expect_subcommand: bool) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if expect_subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    a.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value` form binds unambiguously; the bare
+                // `--name value` form greedily takes the next token as the
+                // value (positionals should precede options).
+                if let Some((k, v)) = name.split_once('=') {
+                    a.kv.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        a.kv.insert(name.to_string(), v);
+                    }
+                    _ => a.flags.push(name.to_string()),
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn describe(&mut self, opt: &str, desc: &str) -> &mut Self {
+        self.help.push((opt.to_string(), desc.to_string()));
+        self
+    }
+
+    pub fn help_text(&self, prog: &str, about: &str) -> String {
+        let mut s = format!("{prog} — {about}\n\noptions:\n");
+        for (o, d) in &self.help {
+            s.push_str(&format!("  --{o:<24} {d}\n"));
+        }
+        s
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.kv.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated f64 list, e.g. `--rates 2,4,8`.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad number '{t}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags() {
+        let a = Args::from_vec(sv(&["serve", "pos1", "--rate=3.5", "--burst"]), true);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.f64_or("rate", 0.0), 3.5);
+        assert!(a.has_flag("burst"));
+        assert_eq!(a.positional, vec!["pos1".to_string()]);
+        let b = Args::from_vec(sv(&["--rate", "2.5", "--quiet"]), false);
+        assert_eq!(b.f64_or("rate", 0.0), 2.5);
+        assert!(b.has_flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::from_vec(sv(&[]), false);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.str_or("mode", "fcfs"), "fcfs");
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn list_parse() {
+        let a = Args::from_vec(sv(&["--rates", "1,2.5, 4"]), false);
+        assert_eq!(a.f64_list_or("rates", &[]), vec![1.0, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = Args::from_vec(sv(&["--x", "-3"]), false);
+        assert_eq!(a.f64_or("x", 0.0), -3.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Substrate utilities (DESIGN.md S13).
+//!
+//! This image ships no network and only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde, clap, rand, criterion,
+//! proptest) are unavailable; each module here is a small, tested,
+//! purpose-built replacement rather than a stubbed dependency.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,104 @@
+//! Mini property-testing harness (substrate: proptest is not in the
+//! image). Runs N random cases from a seeded generator; on failure it
+//! reports the case index and seed so the exact case replays
+//! deterministically.
+//!
+//! Used by the coordinator invariants tests (routing, batching, memory
+//! accounting) and the queueing-theory cross-checks.
+
+use super::rng::SplitMix64;
+
+pub struct Gen {
+    pub rng: SplitMix64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.next_range(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` random cases of `property`. The property returns
+/// `Err(message)` to fail. Panics with seed + case index on failure.
+pub fn check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, cases, 0xC0FFEE, &mut property)
+}
+
+pub fn check_seeded<F>(name: &str, cases: usize, seed: u64, property: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut master = SplitMix64::new(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut g = Gen {
+            rng: SplitMix64::new(case_seed),
+        };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("usize_in bounds", 200, |g| {
+            let x = g.usize_in(3, 9);
+            if (3..=9).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut seq1 = Vec::new();
+        check("collect1", 10, |g| {
+            seq1.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut seq2 = Vec::new();
+        check("collect2", 10, |g| {
+            seq2.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(seq1, seq2);
+    }
+}

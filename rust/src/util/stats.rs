@@ -1,0 +1,202 @@
+//! Summary statistics + histograms for the benchmark harnesses.
+
+/// Online mean/variance (Welford) — used in the hot loop where keeping
+/// every sample would allocate.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Sample collection with percentile queries (sorts lazily on demand).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, p in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let rank = p / 100.0 * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let w = rank - lo as f64;
+            self.xs[lo] * (1.0 - w) + self.xs[hi] * w
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.xs.last().unwrap_or(&f64::NAN)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.xs.first().unwrap_or(&f64::NAN)
+    }
+}
+
+/// Fixed-bin 2D count matrix (Fig 4 heatmap).
+#[derive(Clone, Debug)]
+pub struct Heatmap {
+    pub bins: usize,
+    pub counts: Vec<u64>, // row-major [truth][pred]
+}
+
+impl Heatmap {
+    pub fn new(bins: usize) -> Self {
+        Self {
+            bins,
+            counts: vec![0; bins * bins],
+        }
+    }
+
+    pub fn add(&mut self, truth_bin: usize, pred_bin: usize) {
+        let t = truth_bin.min(self.bins - 1);
+        let p = pred_bin.min(self.bins - 1);
+        self.counts[t * self.bins + p] += 1;
+    }
+
+    pub fn get(&self, truth_bin: usize, pred_bin: usize) -> u64 {
+        self.counts[truth_bin * self.bins + pred_bin]
+    }
+
+    /// log10(1 + count), the paper's Fig 4 scale.
+    pub fn log_counts(&self) -> Vec<f64> {
+        self.counts.iter().map(|&c| (1.0 + c as f64).log10()).collect()
+    }
+
+    /// Fraction of mass on the diagonal (quick accuracy scalar).
+    pub fn diag_mass(&self) -> f64 {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let diag: u64 = (0..self.bins).map(|i| self.get(i, i)).sum();
+        diag as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.var() - var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(90.0) - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heatmap_diag() {
+        let mut h = Heatmap::new(3);
+        h.add(0, 0);
+        h.add(1, 1);
+        h.add(2, 0);
+        h.add(9, 9); // clamped to (2,2)
+        assert_eq!(h.get(2, 2), 1);
+        assert!((h.diag_mass() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,87 @@
+//! Arrival processes for the serving benchmarks (paper §4): Poisson
+//! arrivals at a target request rate, the burst scenario (Fig 7: all
+//! requests at t=0), and trace replay for reproducible comparisons.
+
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    /// Arrival time in seconds from benchmark start (virtual clock).
+    pub at: f64,
+    /// Index into the request list.
+    pub idx: usize,
+}
+
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Poisson with rate `lambda` requests/second.
+    Poisson { lambda: f64, seed: u64 },
+    /// All requests arrive at t=0 (Fig 7 burst).
+    Burst,
+    /// Explicit schedule.
+    Trace(Vec<f64>),
+}
+
+impl ArrivalProcess {
+    /// Materialise arrival times for `n` requests, sorted by time.
+    pub fn schedule(&self, n: usize) -> Vec<Arrival> {
+        match self {
+            ArrivalProcess::Poisson { lambda, seed } => {
+                let mut rng = SplitMix64::new(*seed);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|idx| {
+                        t += rng.next_exp(*lambda);
+                        Arrival { at: t, idx }
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Burst => (0..n).map(|idx| Arrival { at: 0.0, idx }).collect(),
+            ArrivalProcess::Trace(ts) => {
+                assert!(ts.len() >= n, "trace shorter than request count");
+                let mut v: Vec<Arrival> = ts[..n]
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, &at)| Arrival { at, idx })
+                    .collect();
+                v.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+                v
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let p = ArrivalProcess::Poisson {
+            lambda: 10.0,
+            seed: 5,
+        };
+        let sched = p.schedule(5000);
+        let span = sched.last().unwrap().at;
+        let rate = 5000.0 / span;
+        assert!((rate - 10.0).abs() < 0.5, "rate={rate}");
+        // Sorted, strictly increasing.
+        for w in sched.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+    }
+
+    #[test]
+    fn burst_all_zero() {
+        let sched = ArrivalProcess::Burst.schedule(10);
+        assert!(sched.iter().all(|a| a.at == 0.0));
+        assert_eq!(sched.len(), 10);
+    }
+
+    #[test]
+    fn trace_sorted() {
+        let sched = ArrivalProcess::Trace(vec![3.0, 1.0, 2.0]).schedule(3);
+        assert_eq!(sched[0].idx, 1);
+        assert_eq!(sched[2].idx, 0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Synthetic Alpaca-like request generator — the Rust mirror of
+//! `python/compile/workload.py`. Golden-vector parity with the Python
+//! side is asserted in the tests below against `artifacts/golden.json`.
+
+use crate::config::{BinsConfig, Config, ModelConfig, WorkloadConfig};
+use crate::util::rng::{normal_from_uniform, SplitMix64};
+
+/// One generated request: the prompt token ids and the ground-truth
+/// output length (the serving benchmark, like the paper's, fixes output
+/// lengths from the dataset and forces EOS at that length).
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    pub rid: u64,
+    pub prompt: Vec<i32>,
+    pub true_output_len: usize,
+    /// Dataset-replay decode inputs r_1..r_{N-1}: the serving engine
+    /// teacher-forces these, exactly like replaying dataset responses
+    /// with a fixed output length (DESIGN.md §2).
+    pub response: Vec<i32>,
+}
+
+impl RequestSpec {
+    pub fn length_class(&self, bins: &BinsConfig) -> usize {
+        bins.bin_of(self.true_output_len as f64)
+    }
+
+    /// Total service demand in iterations: prefill chunks + decode steps.
+    pub fn total_iterations(&self, chunk: usize) -> usize {
+        let prefill = (self.prompt.len() + chunk - 1) / chunk;
+        prefill + self.true_output_len.saturating_sub(1)
+    }
+}
+
+pub struct WorkloadGen {
+    master: SplitMix64,
+    next_rid: u64,
+    model: ModelConfig,
+    bins: BinsConfig,
+    w: WorkloadConfig,
+}
+
+impl WorkloadGen {
+    pub fn new(cfg: &Config, seed: u64) -> Self {
+        Self {
+            master: SplitMix64::new(seed),
+            next_rid: 0,
+            model: cfg.model.clone(),
+            bins: cfg.bins.clone(),
+            w: cfg.workload.clone(),
+        }
+    }
+
+    pub fn next_request(&mut self) -> RequestSpec {
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        let mut rng = self.master.split();
+        let n_out = sample_output_len(&mut rng, &self.w);
+        let cls = self.bins.bin_of(n_out as f64);
+        let obs = observed_class(&mut rng, cls, &self.w, &self.bins);
+        let plen =
+            rng.next_range(self.w.min_prompt as i64, self.w.max_prompt as i64) as usize;
+        let mut prompt = Vec::with_capacity(plen);
+        prompt.push(self.model.bos_id);
+        for _ in 0..plen - 1 {
+            prompt.push(sample_prompt_token(&mut rng, obs, &self.model, &self.bins, &self.w));
+        }
+        // r_j encodes remaining-after-step-j = n_out - j - 1, j=1..N-1.
+        let response = (1..n_out)
+            .map(|j| response_token(&mut rng, (n_out - j - 1) as i64, &self.model, &self.w))
+            .collect();
+        RequestSpec {
+            rid,
+            prompt,
+            true_output_len: n_out,
+            response,
+        }
+    }
+}
+
+pub fn gen_requests(cfg: &Config, n: usize, seed: u64) -> Vec<RequestSpec> {
+    let mut g = WorkloadGen::new(cfg, seed);
+    (0..n).map(|_| g.next_request()).collect()
+}
+
+fn sample_output_len(rng: &mut SplitMix64, w: &WorkloadConfig) -> usize {
+    let z = normal_from_uniform(rng.next_f64());
+    let x = (w.lognormal_mu + w.lognormal_sigma * z).exp();
+    let n = (x + 0.5) as i64;
+    (n.max(w.min_output as i64) as usize).min(w.max_output)
+}
+
+fn sample_geometric(rng: &mut SplitMix64, p: f64) -> i64 {
+    let u = rng.next_f64();
+    if u <= 0.0 {
+        return 0;
+    }
+    ((1.0 - u).ln() / (1.0 - p).ln()) as i64
+}
+
+fn observed_class(
+    rng: &mut SplitMix64,
+    cls: usize,
+    w: &WorkloadConfig,
+    bins: &BinsConfig,
+) -> usize {
+    let z = normal_from_uniform(rng.next_f64());
+    let obs = cls as i64 + (w.class_jitter_sigma * z).round() as i64;
+    obs.clamp(0, bins.n_bins as i64 - 1) as usize
+}
+
+fn response_token(rng: &mut SplitMix64, remaining: i64, m: &ModelConfig, w: &WorkloadConfig) -> i32 {
+    let content = m.vocab as i64 - m.first_content_id as i64;
+    if rng.next_f64() < w.resp_noise_p {
+        return (m.first_content_id as i64 + rng.next_range(0, content - 1)) as i32;
+    }
+    let bucket = remaining.max(0).min(content - 1) / w.resp_bucket as i64;
+    let tok = m.first_content_id as i64 + bucket * w.resp_bucket as i64 + w.resp_bucket as i64 / 2;
+    tok.min(m.vocab as i64 - 1) as i32
+}
+
+fn class_center(cls: usize, m: &ModelConfig, bins: &BinsConfig) -> i64 {
+    let content = (m.vocab as i64) - (m.first_content_id as i64);
+    m.first_content_id as i64
+        + ((cls as f64 + 0.5) * content as f64 / bins.n_bins as f64) as i64
+}
+
+fn sample_prompt_token(
+    rng: &mut SplitMix64,
+    cls: usize,
+    m: &ModelConfig,
+    bins: &BinsConfig,
+    w: &WorkloadConfig,
+) -> i32 {
+    let center = class_center(cls, m, bins);
+    let off = sample_geometric(rng, w.geom_p);
+    let sign = if rng.next_u64() & 1 == 0 { 1 } else { -1 };
+    let mut tok = center + sign * off;
+    let lo = m.first_content_id as i64;
+    let hi = m.vocab as i64 - 1;
+    if tok < lo {
+        tok = lo + ((lo - tok) % (hi - lo + 1));
+    } else if tok > hi {
+        tok = hi - ((tok - hi) % (hi - lo + 1));
+    }
+    tok as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse_file;
+
+    fn cfg() -> Config {
+        Config::load_default().expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn golden_parity_with_python() {
+        let c = cfg();
+        let golden = parse_file(&c.artifact_path(&c.artifacts.golden)).unwrap();
+
+        // Raw SplitMix64 stream parity.
+        let expect: Vec<u64> = golden
+            .at(&["splitmix_seed42_u64"])
+            .as_arr()
+            .iter()
+            .map(|v| v.as_str().parse::<u64>().unwrap())
+            .collect();
+        let mut r = SplitMix64::new(42);
+        for e in expect {
+            assert_eq!(r.next_u64(), e);
+        }
+
+        // f64 stream parity.
+        let expect_f = golden.at(&["splitmix_seed7_f64"]).as_f64_vec();
+        let mut r = SplitMix64::new(7);
+        for e in expect_f {
+            assert!((r.next_f64() - e).abs() < 1e-15);
+        }
+
+        // Full request-generation parity (prompt tokens + lengths).
+        let reqs = gen_requests(&c, 4, 12345);
+        for (i, jr) in golden.at(&["requests_seed12345"]).as_arr().iter().enumerate() {
+            assert_eq!(reqs[i].rid, jr.at(&["rid"]).as_i64() as u64);
+            assert_eq!(
+                reqs[i].true_output_len,
+                jr.at(&["true_output_len"]).as_usize()
+            );
+            let prompt: Vec<i32> =
+                jr.at(&["prompt"]).as_i64_vec().iter().map(|&x| x as i32).collect();
+            assert_eq!(reqs[i].prompt, prompt, "prompt mismatch for request {i}");
+            let response: Vec<i32> =
+                jr.at(&["response"]).as_i64_vec().iter().map(|&x| x as i32).collect();
+            assert_eq!(reqs[i].response, response, "response mismatch for request {i}");
+            assert_eq!(reqs[i].response.len(), reqs[i].true_output_len - 1);
+            assert_eq!(
+                reqs[i].length_class(&c.bins),
+                jr.at(&["length_class"]).as_usize()
+            );
+        }
+    }
+
+    #[test]
+    fn lengths_within_bounds_and_heavy_tailed() {
+        let c = cfg();
+        let reqs = gen_requests(&c, 2000, 777);
+        let mut lens: Vec<usize> = reqs.iter().map(|r| r.true_output_len).collect();
+        for r in &reqs {
+            assert!(r.true_output_len >= c.workload.min_output);
+            assert!(r.true_output_len <= c.workload.max_output);
+            assert!(r.prompt.len() >= c.workload.min_prompt);
+            assert!(r.prompt.len() <= c.workload.max_prompt);
+            assert_eq!(r.prompt[0], c.model.bos_id);
+        }
+        lens.sort_unstable();
+        let median = lens[lens.len() / 2] as f64;
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        // Right-skew: mean noticeably above median (log-normal signature).
+        assert!(mean > median * 1.05, "mean={mean} median={median}");
+    }
+
+    #[test]
+    fn prompt_tokens_carry_class_signal() {
+        // Mean content-token id should increase with the length class —
+        // this is the signal the probe learns (DESIGN.md §2).
+        let c = cfg();
+        let reqs = gen_requests(&c, 3000, 31);
+        let mut by_class: Vec<Vec<f64>> = vec![Vec::new(); c.bins.n_bins];
+        for r in &reqs {
+            let mean_tok = r.prompt[1..].iter().map(|&t| t as f64).sum::<f64>()
+                / (r.prompt.len() - 1) as f64;
+            by_class[r.length_class(&c.bins)].push(mean_tok);
+        }
+        let means: Vec<f64> = by_class
+            .iter()
+            .map(|v| {
+                if v.is_empty() {
+                    f64::NAN
+                } else {
+                    v.iter().sum::<f64>() / v.len() as f64
+                }
+            })
+            .collect();
+        // Compare the lowest and highest populated classes.
+        let lo = means.iter().find(|m| m.is_finite()).unwrap();
+        let hi = means.iter().rev().find(|m| m.is_finite()).unwrap();
+        assert!(hi > &(lo + 20.0), "class signal too weak: {means:?}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generation: synthetic Alpaca-like requests (bit-identical to
+//! `python/compile/workload.py`) and arrival processes (Poisson, burst,
+//! replay).
+
+pub mod arrivals;
+pub mod gen;
+
+pub use arrivals::{Arrival, ArrivalProcess};
+pub use gen::{gen_requests, RequestSpec, WorkloadGen};

@@ -1,0 +1,205 @@
+//! Integration tests over the real PJRT runtime: replay the golden
+//! decode trace recorded by the AOT pipeline and assert numeric parity,
+//! then cross-check the native probe MLP against the AOT Pallas-kernel
+//! predictor executable. Requires `make artifacts`.
+
+use trail::config::Config;
+use trail::predictor::NativeMlp;
+use trail::runtime::Engine;
+use trail::util::json::parse_file;
+
+fn close(a: f32, b: f64, tol: f64) -> bool {
+    ((a as f64) - b).abs() <= tol * (1.0 + b.abs())
+}
+
+fn assert_close_vec(got: &[f32], want: &[f64], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            close(g, w, tol),
+            "{what}[{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn golden_decode_trace_replays() {
+    let cfg = Config::load_default().expect("run `make artifacts` first");
+    let engine = Engine::load(&cfg, false).expect("engine load");
+    let golden = parse_file(&cfg.artifact_path(&cfg.artifacts.golden)).unwrap();
+    let trace = golden.at(&["decode_trace"]);
+
+    let prompt0: Vec<i32> = trace.at(&["prompt0"]).as_i64_vec().iter().map(|&x| x as i32).collect();
+    let prompt1: Vec<i32> = trace.at(&["prompt1"]).as_i64_vec().iter().map(|&x| x as i32).collect();
+    let c = cfg.model.prefill_chunk;
+    let b = cfg.model.batch_slots;
+
+    let mut state = engine.init_state().unwrap();
+    // Slot 0: 20-token prompt in two chunks; slot 1: 9 tokens in one.
+    state = engine.prefill_chunk(state, &prompt0[..c], 0, 0, c as i32).unwrap();
+    state = engine
+        .prefill_chunk(state, &prompt0[c..], 0, c as i32, (prompt0.len() - c) as i32)
+        .unwrap();
+    state = engine
+        .prefill_chunk(state, &prompt1, 1, 0, prompt1.len() as i32)
+        .unwrap();
+
+    let check = |ro: &trail::runtime::Readout, snap: &trail::util::json::Json, what: &str| {
+        let v = cfg.model.vocab;
+        let d = cfg.model.d_model;
+        assert_close_vec(
+            &ro.logits[..8],
+            &snap.at(&["logits0"]).as_f64_vec(),
+            2e-3,
+            &format!("{what}.logits0"),
+        );
+        assert_close_vec(
+            &ro.logits[v..v + 8],
+            &snap.at(&["logits1"]).as_f64_vec(),
+            2e-3,
+            &format!("{what}.logits1"),
+        );
+        assert_close_vec(
+            &ro.taps[(4 * b) * d..(4 * b) * d + 8],
+            &snap.at(&["tap_l4_s0"]).as_f64_vec(),
+            2e-3,
+            &format!("{what}.tap"),
+        );
+        assert_close_vec(
+            &ro.prompt_taps[..8],
+            &snap.at(&["ptap_l0_s0"]).as_f64_vec(),
+            2e-3,
+            &format!("{what}.ptap"),
+        );
+        let am = snap.at(&["argmax"]).as_i64_vec();
+        assert_eq!(ro.argmax[0] as i64, am[0], "{what}.argmax0");
+        assert_eq!(ro.argmax[1] as i64, am[1], "{what}.argmax1");
+    };
+
+    let ro = engine.read(&state).unwrap();
+    check(&ro, trace.at(&["after_prefill"]), "after_prefill");
+
+    let mut pos = vec![0i32; b];
+    pos[0] = prompt0.len() as i32;
+    pos[1] = prompt1.len() as i32;
+    let mut toks = ro.argmax.clone();
+    for (si, snap) in trace.at(&["steps"]).as_arr().iter().enumerate() {
+        let mut active = vec![0f32; b];
+        active[0] = 1.0;
+        active[1] = 1.0;
+        state = engine.decode_step(state, &toks, &pos, &active).unwrap();
+        let ro = engine.read(&state).unwrap();
+        check(&ro, snap, &format!("step{si}"));
+        toks = ro.argmax.clone();
+        pos[0] += 1;
+        pos[1] += 1;
+    }
+}
+
+#[test]
+fn inactive_slots_keep_their_logits() {
+    // A decode step with slot 1 inactive must not clobber slot 1's
+    // prefill logits (first-token correctness under chunked prefill).
+    let cfg = Config::load_default().expect("run `make artifacts` first");
+    let engine = Engine::load(&cfg, false).unwrap();
+    let b = cfg.model.batch_slots;
+
+    let mut state = engine.init_state().unwrap();
+    let prompt: Vec<i32> = (0..12).map(|i| 8 + (i * 5) % 200).collect();
+    state = engine.prefill_chunk(state, &prompt, 1, 0, 12).unwrap();
+    let before = engine.read(&state).unwrap();
+
+    // Run a decode step on slot 0 only.
+    let mut tokens = vec![0i32; b];
+    tokens[0] = 42;
+    let mut pos = vec![0i32; b];
+    pos[0] = 0;
+    let mut active = vec![0f32; b];
+    active[0] = 1.0;
+    state = engine.decode_step(state, &tokens, &pos, &active).unwrap();
+    let after = engine.read(&state).unwrap();
+
+    let v = cfg.model.vocab;
+    assert_eq!(
+        &before.logits[v..2 * v],
+        &after.logits[v..2 * v],
+        "slot 1 logits changed despite being inactive"
+    );
+    assert_eq!(before.argmax[1], after.argmax[1]);
+}
+
+#[test]
+fn native_mlp_matches_pjrt_predictor() {
+    let cfg = Config::load_default().expect("run `make artifacts` first");
+    if !std::path::Path::new(&cfg.artifact_path(&cfg.artifacts.probe_weights)).exists() {
+        eprintln!("probe weights not built — skipping");
+        return;
+    }
+    let engine = Engine::load(&cfg, true).unwrap();
+    let weights = engine.probe.as_ref().unwrap().clone();
+    let layer = weights.best_layer;
+    let d = cfg.model.d_model;
+    let k = cfg.bins.n_bins;
+
+    let mut native = NativeMlp::new(weights.layers[layer].clone(), d, weights.hidden, k);
+
+    // Deterministic pseudo-embeddings.
+    let n = 8;
+    let mut emb = vec![0f32; n * d];
+    for (i, e) in emb.iter_mut().enumerate() {
+        *e = ((i * 2654435761usize) % 1000) as f32 / 500.0 - 1.0;
+    }
+    let pjrt = engine.predict_layer(layer, &emb, n).unwrap();
+    for row in 0..n {
+        let probs = native.forward_vec(&emb[row * d..(row + 1) * d]);
+        for j in 0..k {
+            let a = probs[j];
+            let b = pjrt[row * k + j];
+            assert!(
+                (a - b).abs() < 1e-4,
+                "row {row} bin {j}: native {a} vs pjrt {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn admission_embedding_matches_prefill_ptap() {
+    // The Rust-side mean embedding-table row (admission-time prompt
+    // prediction) must equal the layer-0 prompt tap the prefill graph
+    // accumulates on device.
+    let cfg = Config::load_default().expect("run `make artifacts` first");
+    if !std::path::Path::new(&cfg.artifact_path(&cfg.artifacts.probe_weights)).exists() {
+        eprintln!("probe weights not built — skipping");
+        return;
+    }
+    let engine = Engine::load(&cfg, true).unwrap();
+    let weights = engine.probe.as_ref().unwrap();
+    let d = cfg.model.d_model;
+
+    let prompt: Vec<i32> = vec![1, 30, 60, 90, 120, 150, 180, 210, 240, 20];
+    let mut state = engine.init_state().unwrap();
+    state = engine
+        .prefill_chunk(state, &prompt, 2, 0, prompt.len() as i32)
+        .unwrap();
+    let ro = engine.read(&state).unwrap();
+    let device_ptap = ro.prompt_tap(0, 2, d, cfg.model.batch_slots);
+
+    let mut host = vec![0f32; d];
+    for &t in &prompt {
+        for j in 0..d {
+            host[j] += weights.embed[t as usize * d + j];
+        }
+    }
+    for h in host.iter_mut() {
+        *h /= prompt.len() as f32;
+    }
+    for j in 0..d {
+        assert!(
+            (host[j] - device_ptap[j]).abs() < 1e-4,
+            "dim {j}: host {} vs device {}",
+            host[j],
+            device_ptap[j]
+        );
+    }
+}
