@@ -2,14 +2,21 @@
 //! (`rust/benches/*`). Lives in the library so the benches stay thin and
 //! the replay logic is unit-testable.
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use crate::config::Config;
-use crate::coordinator::{PjrtBackend, Policy, ServeConfig, ServingEngine};
+#[cfg(feature = "pjrt")]
 use crate::coordinator::metrics::MetricsSummary;
+#[cfg(feature = "pjrt")]
+use crate::coordinator::{PjrtBackend, Policy, ServeConfig, ServingEngine};
+#[cfg(feature = "pjrt")]
 use crate::predictor::{NativeMlp, Predictor, ProbePredictor, Smoother};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, ProbeWeights};
 use crate::util::stats::Heatmap;
+#[cfg(feature = "pjrt")]
 use crate::workload::{gen_requests, ArrivalProcess, RequestSpec};
 
 /// Per-tap-point MAE accumulators for the Fig 2/3 evaluation.
@@ -53,6 +60,7 @@ impl ProbeEval {
 /// engine) through the PJRT runtime, evaluating *all* tap-point probes +
 /// Bayesian refinement + the prompt-only baseline on every iteration.
 /// This regenerates Fig 2/3/4 from the Rust side of the stack.
+#[cfg(feature = "pjrt")]
 pub fn replay_probe_eval(cfg: &Config, n_requests: usize, seed: u64) -> Result<ProbeEval> {
     let engine = Engine::load(cfg, true)?;
     let weights: &ProbeWeights = engine.probe.as_ref().unwrap();
@@ -197,6 +205,7 @@ pub fn replay_probe_eval(cfg: &Config, n_requests: usize, seed: u64) -> Result<P
 /// Run one serving benchmark point on the real PJRT runtime with the
 /// probe predictor. `refined=false` gives the TRAIL-BERT / SJF static
 /// prediction mode.
+#[cfg(feature = "pjrt")]
 pub fn serve_point(
     cfg: &Config,
     policy: Policy,
@@ -213,6 +222,7 @@ pub fn serve_point(
 /// Like `serve_point` but reuses an already-compiled PJRT engine (fresh
 /// zero state per run) and hands it back — benchmark sweeps compile the
 /// 5 MB HLO once instead of once per point.
+#[cfg(feature = "pjrt")]
 pub fn serve_point_with(
     cfg: &Config,
     pjrt: Engine,

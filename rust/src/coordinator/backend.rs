@@ -7,10 +7,13 @@
 //! virtual-clock benches run) without PJRT in the loop.
 
 use anyhow::Result;
+#[cfg(feature = "pjrt")]
 use xla::PjRtBuffer;
 
 use crate::config::Config;
-use crate::runtime::{Engine, Readout};
+#[cfg(feature = "pjrt")]
+use crate::runtime::Engine;
+use crate::runtime::Readout;
 
 /// Virtual cost (seconds) of backend calls — calibrated against the real
 /// engine for the virtual-clock benches; see EXPERIMENTS.md §Perf.
@@ -51,9 +54,10 @@ pub trait ModelBackend {
 }
 
 // ---------------------------------------------------------------------------
-// PJRT (real) backend
+// PJRT (real) backend — `pjrt` feature only
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     pub engine: Engine,
     state: Option<PjRtBuffer>,
@@ -61,6 +65,7 @@ pub struct PjrtBackend {
     pending_cost: f64,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     pub fn new(cfg: &Config, with_probe: bool) -> Result<Self> {
         let engine = Engine::load(cfg, with_probe)?;
@@ -88,6 +93,7 @@ impl PjrtBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelBackend for PjrtBackend {
     fn slots(&self) -> usize {
         self.engine.cfg.model.batch_slots

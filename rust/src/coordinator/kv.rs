@@ -139,4 +139,131 @@ mod tests {
         let s = kv.alloc(1).unwrap();
         kv.charge(s, 1, 101);
     }
+
+    #[test]
+    #[should_panic(expected = "not owned")]
+    fn double_free_is_a_scheduler_bug() {
+        let mut kv = KvManager::new(2, 100, 200);
+        let s = kv.alloc(1).unwrap();
+        kv.free(s, 1);
+        kv.free(s, 1); // second release: slot is vacant → panic
+    }
+
+    #[test]
+    #[should_panic(expected = "not owned")]
+    fn foreign_rid_release_rejected() {
+        let mut kv = KvManager::new(2, 100, 200);
+        let s = kv.alloc(1).unwrap();
+        kv.free(s, 99); // rid 99 never owned this slot
+    }
+
+    #[test]
+    fn freed_slot_drops_its_charge() {
+        let mut kv = KvManager::new(2, 100, 200);
+        let s0 = kv.alloc(1).unwrap();
+        let s1 = kv.alloc(2).unwrap();
+        kv.charge(s0, 1, 70);
+        kv.charge(s1, 2, 50);
+        kv.free(s0, 1);
+        assert_eq!(kv.used_tokens(), 50);
+        assert_eq!(kv.used_slots(), 1);
+        // Re-allocation starts from a zero charge.
+        let s2 = kv.alloc(3).unwrap();
+        assert_eq!(s2, s0);
+        assert_eq!(kv.used_tokens(), 50);
+        assert_eq!(kv.owner(s2), Some(3));
+    }
+
+    #[test]
+    fn peaks_are_high_water_marks_not_current() {
+        let mut kv = KvManager::new(3, 100, 300);
+        let s0 = kv.alloc(1).unwrap();
+        let s1 = kv.alloc(2).unwrap();
+        kv.charge(s0, 1, 90);
+        kv.charge(s1, 2, 80);
+        kv.free(s1, 2);
+        kv.free(s0, 1);
+        assert_eq!(kv.used_tokens(), 0);
+        assert_eq!(kv.used_slots(), 0);
+        assert_eq!(kv.peak_tokens, 170);
+        assert_eq!(kv.peak_slots, 2);
+        // A smaller later episode must not lower the peaks.
+        let s = kv.alloc(9).unwrap();
+        kv.charge(s, 9, 10);
+        assert_eq!(kv.peak_tokens, 170);
+        assert_eq!(kv.peak_slots, 2);
+    }
+
+    #[test]
+    fn utilisation_tracks_pool() {
+        let mut kv = KvManager::new(2, 100, 200);
+        let s = kv.alloc(1).unwrap();
+        assert_eq!(kv.utilisation(), 0.0);
+        kv.charge(s, 1, 50);
+        assert!((kv.utilisation() - 0.25).abs() < 1e-12);
+        assert!(kv.fits(150));
+        assert!(!kv.fits(151));
+    }
+
+    #[test]
+    fn prop_pool_respected_under_random_churn() {
+        // A scheduler that only charges what fits() approved can never
+        // push the pool over budget, across arbitrary alloc/charge/free
+        // interleavings; peaks stay monotone high-water marks.
+        crate::util::prop::check("kv pool accounting", 50, |g| {
+            let n_slots = g.usize_in(1, 6);
+            let max_seq = g.usize_in(20, 120);
+            let pool = g.usize_in(max_seq, n_slots * max_seq);
+            let mut kv = KvManager::new(n_slots, max_seq, pool);
+            let mut live: Vec<(usize, u64)> = Vec::new();
+            let mut next_rid = 0u64;
+            let mut max_seen = 0usize;
+            for _ in 0..200 {
+                match g.usize_in(0, 2) {
+                    0 => {
+                        if let Some(slot) = kv.alloc(next_rid) {
+                            live.push((slot, next_rid));
+                            next_rid += 1;
+                        } else if live.len() != n_slots {
+                            return Err("alloc failed with free slots".into());
+                        }
+                    }
+                    1 => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let i = g.usize_in(0, live.len() - 1);
+                        let (slot, rid) = live[i];
+                        let want = g.usize_in(0, max_seq);
+                        // The engine's discipline: release the old charge,
+                        // then take the new one only if the pool has room.
+                        kv.charge(slot, rid, 0);
+                        if kv.fits(want) {
+                            kv.charge(slot, rid, want);
+                        }
+                    }
+                    _ => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let i = g.usize_in(0, live.len() - 1);
+                        let (slot, rid) = live.swap_remove(i);
+                        kv.free(slot, rid);
+                    }
+                }
+                let used = kv.used_tokens();
+                if used > pool {
+                    return Err(format!("pool exceeded: {used} > {pool}"));
+                }
+                max_seen = max_seen.max(used);
+                if kv.peak_tokens < max_seen {
+                    return Err("peak_tokens below observed maximum".into());
+                }
+                if kv.used_slots() != live.len() {
+                    return Err("slot accounting out of sync".into());
+                }
+            }
+            Ok(())
+        });
+    }
 }

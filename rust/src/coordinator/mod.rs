@@ -10,7 +10,9 @@ pub mod metrics;
 pub mod policy;
 pub mod request;
 
-pub use backend::{MockBackend, ModelBackend, PjrtBackend};
+pub use backend::{MockBackend, ModelBackend};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
 pub use engine::{ServeConfig, ServeReport, ServingEngine};
 pub use kv::KvManager;
 pub use metrics::Metrics;

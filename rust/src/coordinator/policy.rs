@@ -27,12 +27,26 @@ pub struct Rank {
 }
 
 impl Rank {
+    /// A NaN `key` (e.g. a predictor fed a degenerate distribution) would
+    /// make `partial_cmp`-based comparison non-transitive mid-sort —
+    /// `sort_by` with an inconsistent comparator scrambles the schedule
+    /// or panics. Clamp NaN to +∞ at construction: an unpredictable
+    /// request sorts last among its peers instead of poisoning the order.
+    pub fn new(locked: bool, key: f64, tie: f64, rid: u64) -> Rank {
+        let key = if key.is_nan() { f64::INFINITY } else { key };
+        let tie = if tie.is_nan() { f64::INFINITY } else { tie };
+        Rank { locked, key, tie, rid }
+    }
+
+    /// Total order: locked first, then key, then FCFS tie, then rid.
+    /// `total_cmp` (not `partial_cmp`) so the comparator is total even if
+    /// a NaN is injected through the public fields.
     pub fn cmp(&self, other: &Rank) -> std::cmp::Ordering {
         other
             .locked
             .cmp(&self.locked) // locked first
-            .then(self.key.partial_cmp(&other.key).unwrap_or(std::cmp::Ordering::Equal))
-            .then(self.tie.partial_cmp(&other.tie).unwrap_or(std::cmp::Ordering::Equal))
+            .then(self.key.total_cmp(&other.key))
+            .then(self.tie.total_cmp(&other.tie))
             .then(self.rid.cmp(&other.rid))
     }
 }
@@ -85,34 +99,24 @@ impl Policy {
         let tie = r.arrival;
         let rid = r.spec.rid;
         match self {
-            Policy::Fcfs => Rank {
-                // Running requests are never preempted under FCFS: lock
-                // them so batch membership is stable until completion.
-                locked: matches!(r.phase, Phase::Running | Phase::Prefilling | Phase::Preempted),
-                key: r.arrival,
+            // Running requests are never preempted under FCFS: lock
+            // them so batch membership is stable until completion.
+            Policy::Fcfs => Rank::new(
+                matches!(r.phase, Phase::Running | Phase::Prefilling | Phase::Preempted),
+                r.arrival,
                 tie,
                 rid,
-            },
+            ),
             Policy::SjfPrompt => {
                 let started = !matches!(r.phase, Phase::Waiting);
-                Rank {
-                    locked: started,
-                    // Waiting queue ordered by static prompt prediction;
-                    // admission_estimate fills pred_remaining before any
-                    // compute happens.
-                    key: r.pred_remaining,
-                    tie,
-                    rid,
-                }
+                // Waiting queue ordered by static prompt prediction;
+                // admission_estimate fills pred_remaining before any
+                // compute happens.
+                Rank::new(started, r.pred_remaining, tie, rid)
             }
             Policy::Trail { c } => {
                 let locked = !r.preemptable(*c) && !matches!(r.phase, Phase::Waiting);
-                Rank {
-                    locked,
-                    key: r.pred_remaining,
-                    tie,
-                    rid,
-                }
+                Rank::new(locked, r.pred_remaining, tie, rid)
             }
         }
     }
@@ -190,5 +194,49 @@ mod tests {
         let b = req(2, 1.0, 0.0);
         assert_eq!(p.rank(&a).cmp(&p.rank(&b)), std::cmp::Ordering::Less);
         assert_eq!(p.rank(&b).cmp(&p.rank(&a)), std::cmp::Ordering::Greater);
+    }
+
+    #[test]
+    fn nan_prediction_sorts_last_not_equal() {
+        // Regression: a NaN pred_remaining used to collapse to
+        // Ordering::Equal mid-sort (partial_cmp fallback), making the
+        // comparator non-transitive. Rank::new clamps NaN to +∞.
+        let p = Policy::Trail { c: 0.8 };
+        let mut bad = req(1, 1.0, 0.0);
+        bad.pred_remaining = f64::NAN;
+        let good = req(2, 2.0, 5.0);
+        let rb = p.rank(&bad);
+        let rg = p.rank(&good);
+        assert!(rb.key.is_infinite() && rb.key > 0.0, "NaN key must clamp to +inf");
+        assert_eq!(rg.cmp(&rb), std::cmp::Ordering::Less);
+        assert_eq!(rb.cmp(&rg), std::cmp::Ordering::Greater);
+    }
+
+    #[test]
+    fn two_nan_predictions_stay_antisymmetric() {
+        let p = Policy::SjfPrompt;
+        let mut a = req(1, 3.0, 0.0);
+        a.pred_remaining = f64::NAN;
+        let mut b = req(2, 3.0, 0.0);
+        b.pred_remaining = f64::NAN;
+        let (ra, rb) = (p.rank(&a), p.rank(&b));
+        // Equal clamped keys + equal ties fall through to the rid
+        // tiebreak: still a strict total order.
+        assert_eq!(ra.cmp(&rb), std::cmp::Ordering::Less);
+        assert_eq!(rb.cmp(&ra), std::cmp::Ordering::Greater);
+        assert_eq!(ra.cmp(&ra), std::cmp::Ordering::Equal);
+    }
+
+    #[test]
+    fn nan_injected_through_fields_still_totally_ordered() {
+        // Even bypassing Rank::new (public fields), total_cmp keeps the
+        // comparator consistent: NaN sorts after +inf, deterministically.
+        let nan = Rank { locked: false, key: f64::NAN, tie: 0.0, rid: 1 };
+        let inf = Rank { locked: false, key: f64::INFINITY, tie: 0.0, rid: 2 };
+        let fin = Rank { locked: false, key: 1.0, tie: 0.0, rid: 3 };
+        assert_eq!(fin.cmp(&nan), std::cmp::Ordering::Less);
+        assert_eq!(inf.cmp(&nan), std::cmp::Ordering::Less);
+        assert_eq!(nan.cmp(&inf), std::cmp::Ordering::Greater);
+        assert_eq!(nan.cmp(&fin), std::cmp::Ordering::Greater);
     }
 }

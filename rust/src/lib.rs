@@ -11,5 +11,6 @@ pub mod predictor;
 pub mod qtheory;
 pub mod runtime;
 pub mod server;
+pub mod testkit;
 pub mod util;
 pub mod workload;

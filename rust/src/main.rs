@@ -9,12 +9,15 @@
 //! ```
 
 use trail::config::Config;
-use trail::coordinator::{MockBackend, PjrtBackend, Policy, ServeConfig, ServingEngine};
+use trail::coordinator::engine::OnlineJob;
+#[cfg(feature = "pjrt")]
+use trail::coordinator::PjrtBackend;
+use trail::coordinator::{MockBackend, Policy, ServeConfig, ServeReport, ServingEngine};
 use trail::predictor::{OraclePredictor, Predictor, ProbePredictor};
 use trail::qtheory::{self, PredictionModel, SimConfig};
 use trail::util::cli::Args;
 use trail::util::csv::{f, Table};
-use trail::workload::{gen_requests, ArrivalProcess};
+use trail::workload::{gen_requests, Arrival, ArrivalProcess, RequestSpec};
 
 fn main() {
     let args = Args::parse(true);
@@ -106,10 +109,77 @@ fn make_predictor(cfg: &Config, args: &Args) -> Box<dyn Predictor> {
             args.u64_or("seed", 1),
         ));
     }
-    let weights = trail::runtime::ProbeWeights::load(cfg).expect("probe weights");
+    // Trained artifact when present, deterministic synthetic fallback
+    // otherwise — `--mock` serving works from a fresh checkout.
+    let weights = trail::runtime::ProbeWeights::load_or_synthetic(cfg);
     let mut p = ProbePredictor::new(cfg, &weights);
     p.refine = !args.has_flag("no-refine");
     Box::new(p)
+}
+
+#[cfg(feature = "pjrt")]
+fn run_pjrt_serve(
+    cfg: &Config,
+    serve: ServeConfig,
+    specs: Vec<RequestSpec>,
+    arrivals: Vec<Arrival>,
+    args: &Args,
+) -> anyhow::Result<ServeReport> {
+    let backend = PjrtBackend::new(cfg, !args.has_flag("oracle"))?;
+    let mut eng = ServingEngine::new(cfg, serve, backend, make_predictor(cfg, args));
+    let rep = eng.run(specs, arrivals);
+    if args.has_flag("counters") {
+        let e = eng.backend().engine();
+        eprintln!(
+            "[counters] decode_steps={} prefill_chunks={} readouts={} iterations={}",
+            e.n_steps.get(),
+            e.n_prefills.get(),
+            e.n_readouts.get(),
+            eng.metrics.n_iterations
+        );
+    }
+    rep
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_pjrt_serve(
+    _cfg: &Config,
+    _serve: ServeConfig,
+    _specs: Vec<RequestSpec>,
+    _arrivals: Vec<Arrival>,
+    _args: &Args,
+) -> anyhow::Result<ServeReport> {
+    anyhow::bail!(
+        "this build has no PJRT runtime (the `pjrt` cargo feature is off) — \
+         use --mock for the hermetic virtual-clock backend"
+    )
+}
+
+#[cfg(feature = "pjrt")]
+fn run_online_pjrt(
+    cfg: &Config,
+    serve: ServeConfig,
+    oracle: bool,
+    predictor: Box<dyn Predictor>,
+    rx: std::sync::mpsc::Receiver<OnlineJob>,
+) -> anyhow::Result<ServeReport> {
+    let backend = PjrtBackend::new(cfg, !oracle)?;
+    let mut eng = ServingEngine::new(cfg, serve, backend, predictor);
+    eng.run_online(rx)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_online_pjrt(
+    _cfg: &Config,
+    _serve: ServeConfig,
+    _oracle: bool,
+    _predictor: Box<dyn Predictor>,
+    _rx: std::sync::mpsc::Receiver<OnlineJob>,
+) -> anyhow::Result<ServeReport> {
+    anyhow::bail!(
+        "this build has no PJRT runtime (the `pjrt` cargo feature is off) — \
+         pass --mock to serve on the virtual-cost mock backend"
+    )
 }
 
 fn cmd_serve(args: &Args) -> i32 {
@@ -136,20 +206,7 @@ fn cmd_serve(args: &Args) -> i32 {
         let mut eng = ServingEngine::new(&cfg, serve, backend, make_predictor(&cfg, args));
         eng.run(specs, arrivals)
     } else {
-        let backend = PjrtBackend::new(&cfg, !args.has_flag("oracle")).expect("engine");
-        let mut eng = ServingEngine::new(&cfg, serve, backend, make_predictor(&cfg, args));
-        let rep = eng.run(specs, arrivals);
-        if args.has_flag("counters") {
-            let e = eng.backend().engine();
-            eprintln!(
-                "[counters] decode_steps={} prefill_chunks={} readouts={} iterations={}",
-                e.n_steps.get(),
-                e.n_prefills.get(),
-                e.n_readouts.get(),
-                eng.metrics.n_iterations
-            );
-        }
-        rep
+        run_pjrt_serve(&cfg, serve, specs, arrivals, args)
     };
 
     match report {
@@ -241,7 +298,7 @@ fn cmd_server(args: &Args) -> i32 {
         let predictor: Box<dyn Predictor> = if oracle {
             Box::new(OraclePredictor::new(0.0, true, 1))
         } else {
-            let w = trail::runtime::ProbeWeights::load(&cfg2).expect("probe weights");
+            let w = trail::runtime::ProbeWeights::load_or_synthetic(&cfg2);
             Box::new(ProbePredictor::new(&cfg2, &w))
         };
         let rep = if use_mock {
@@ -249,9 +306,7 @@ fn cmd_server(args: &Args) -> i32 {
             let mut eng = ServingEngine::new(&cfg2, serve, backend, predictor);
             eng.run_online(rx)
         } else {
-            let backend = PjrtBackend::new(&cfg2, !oracle).expect("engine");
-            let mut eng = ServingEngine::new(&cfg2, serve, backend, predictor);
-            eng.run_online(rx)
+            run_online_pjrt(&cfg2, serve, oracle, predictor, rx)
         };
         match rep {
             Ok(r) => println!("engine done: served {} requests", r.summary.n),

@@ -20,31 +20,7 @@ use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaCompu
 
 use crate::config::Config;
 use crate::runtime::probe_weights::ProbeWeights;
-
-/// Host-visible per-iteration outputs (small).
-#[derive(Clone, Debug)]
-pub struct Readout {
-    /// `[B * V]` last-step logits, row-major per slot.
-    pub logits: Vec<f32>,
-    /// `[n_taps * B * D]` current-token hidden states at every tap point.
-    pub taps: Vec<f32>,
-    /// `[n_taps * B * D]` mean prompt embeddings per slot (prompt probe).
-    pub prompt_taps: Vec<f32>,
-    /// `[B]` argmax next token per slot.
-    pub argmax: Vec<i32>,
-}
-
-impl Readout {
-    pub fn tap(&self, layer: usize, slot: usize, d_model: usize, slots: usize) -> &[f32] {
-        let off = (layer * slots + slot) * d_model;
-        &self.taps[off..off + d_model]
-    }
-
-    pub fn prompt_tap(&self, layer: usize, slot: usize, d_model: usize, slots: usize) -> &[f32] {
-        let off = (layer * slots + slot) * d_model;
-        &self.prompt_taps[off..off + d_model]
-    }
-}
+use crate::runtime::readout::Readout;
 
 /// Compiled model executables + the PJRT client that owns them.
 pub struct Engine {

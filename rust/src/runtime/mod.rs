@@ -1,11 +1,20 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
-//! them with a device-resident packed state (DESIGN.md §1).
+//! Runtime layer: probe weights (trained artifact or deterministic
+//! synthetic fallback), the backend-facing `Readout` type, and — behind
+//! the `pjrt` feature — the PJRT execution engine that loads the
+//! AOT-compiled HLO-text artifacts and executes them with a
+//! device-resident packed state (DESIGN.md §1).
 //!
 //! Python is never on this path — `make artifacts` ran once at build
-//! time; this module only touches the `xla` crate (PJRT C API).
+//! time; only the gated engine module touches the `xla` crate (PJRT C
+//! API). Without the feature, the whole scheduler stack still runs
+//! hermetically on `MockBackend` + synthetic probe weights.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod probe_weights;
+pub mod readout;
 
-pub use engine::{Engine, Readout};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
 pub use probe_weights::ProbeWeights;
+pub use readout::Readout;

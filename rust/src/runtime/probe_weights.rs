@@ -4,11 +4,19 @@
 //! * staged on device for the AOT predictor executables (`Engine`), and
 //! * run natively by `predictor::mlp::NativeMlp` on the iteration hot
 //!   path (the paper's Table 1 "CPU" variant — see DESIGN.md §2).
+//!
+//! When the artifact is absent (fresh checkout, no Python step),
+//! `ProbeWeights::synthetic` generates deterministic seeded weights of
+//! the same shapes, so `ProbePredictor` and the full serving engine run
+//! hermetically — the predictions are untrained, but every code path
+//! (embedding lookup, MLP forward, Bayesian smoothing, rank updates) is
+//! exercised with finite, reproducible values.
 
 use anyhow::{anyhow, Result};
 
 use crate::config::Config;
 use crate::util::json::{parse_file, Json};
+use crate::util::rng::{normal_from_uniform, SplitMix64};
 
 /// One 2-layer MLP: softmax(relu(x@w1+b1)@w2+b2). Row-major flats.
 #[derive(Clone, Debug)]
@@ -98,6 +106,60 @@ impl ProbeWeights {
             mae_by_layer,
         })
     }
+
+    /// Trained artifact when present, deterministic synthetic weights
+    /// otherwise — the hermetic bootstrap every mock-backend serving path
+    /// uses. Falls back only when the artifact file is *absent*: a
+    /// present-but-unreadable file is a broken `make artifacts` run and
+    /// must fail loudly, not silently serve untrained weights.
+    pub fn load_or_synthetic(cfg: &Config) -> ProbeWeights {
+        let path = cfg.artifact_path(&cfg.artifacts.probe_weights);
+        if std::path::Path::new(&path).exists() {
+            Self::load(cfg).unwrap_or_else(|e| panic!("corrupt probe weights at {path}: {e}"))
+        } else {
+            Self::synthetic(cfg, cfg.workload.train_seed)
+        }
+    }
+
+    /// Deterministic seeded weights with the exact shapes the trained
+    /// artifact would have. Gaussian entries scaled by 1/sqrt(fan_in)
+    /// keep every `NativeMlp` forward finite and well-conditioned.
+    pub fn synthetic(cfg: &Config, seed: u64) -> ProbeWeights {
+        let d = cfg.model.d_model;
+        let h = cfg.probe_hidden;
+        let k = cfg.bins.n_bins;
+        let mut rng = SplitMix64::new(seed);
+        let mut gauss = |n: usize, scale: f64| -> Vec<f32> {
+            let mut rng = rng.split();
+            (0..n)
+                .map(|_| (normal_from_uniform(rng.next_f64()) * scale) as f32)
+                .collect()
+        };
+        let mut mlp = || Mlp {
+            w1: gauss(d * h, 1.0 / (d as f64).sqrt()),
+            b1: gauss(h, 0.01),
+            w2: gauss(h * k, 1.0 / (h as f64).sqrt()),
+            b2: gauss(k, 0.01),
+        };
+        let layers: Vec<Mlp> = (0..cfg.model.n_taps).map(|_| mlp()).collect();
+        let prompt = mlp();
+        let embed = {
+            let mut rng = rng.split();
+            (0..cfg.model.vocab * d)
+                .map(|_| (normal_from_uniform(rng.next_f64()) * 0.05) as f32)
+                .collect()
+        };
+        ProbeWeights {
+            layers,
+            prompt,
+            embed,
+            // Mid-depth taps predict best in the trained stack (Fig 2);
+            // any valid index works for the synthetic fallback.
+            best_layer: cfg.model.n_layers / 2 + 1,
+            hidden: h,
+            mae_by_layer: Vec::new(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -116,5 +178,48 @@ mod tests {
         assert!(pw.best_layer < pw.layers.len());
         assert_eq!(pw.layers.len(), cfg.model.n_taps);
         assert!(!pw.mae_by_layer.is_empty());
+    }
+
+    fn check_shapes(pw: &ProbeWeights, cfg: &Config) {
+        let d = cfg.model.d_model;
+        let h = pw.hidden;
+        let k = cfg.bins.n_bins;
+        assert_eq!(pw.layers.len(), cfg.model.n_taps);
+        for m in pw.layers.iter().chain(std::iter::once(&pw.prompt)) {
+            assert_eq!(m.w1.len(), d * h);
+            assert_eq!(m.b1.len(), h);
+            assert_eq!(m.w2.len(), h * k);
+            assert_eq!(m.b2.len(), k);
+            assert!(m.w1.iter().all(|x| x.is_finite()));
+            assert!(m.w2.iter().all(|x| x.is_finite()));
+        }
+        assert_eq!(pw.embed.len(), cfg.model.vocab * d);
+        assert!(pw.best_layer < pw.layers.len());
+    }
+
+    #[test]
+    fn synthetic_weights_have_artifact_shapes() {
+        let cfg = Config::embedded_default();
+        let pw = ProbeWeights::synthetic(&cfg, 1001);
+        check_shapes(&pw, &cfg);
+    }
+
+    #[test]
+    fn synthetic_weights_are_deterministic() {
+        let cfg = Config::embedded_default();
+        let a = ProbeWeights::synthetic(&cfg, 7);
+        let b = ProbeWeights::synthetic(&cfg, 7);
+        assert_eq!(a.layers[0].w1, b.layers[0].w1);
+        assert_eq!(a.prompt.w2, b.prompt.w2);
+        assert_eq!(a.embed, b.embed);
+        let c = ProbeWeights::synthetic(&cfg, 8);
+        assert_ne!(a.layers[0].w1, c.layers[0].w1, "seed must matter");
+    }
+
+    #[test]
+    fn load_or_synthetic_always_valid() {
+        let cfg = Config::load_default().unwrap();
+        let pw = ProbeWeights::load_or_synthetic(&cfg);
+        check_shapes(&pw, &cfg);
     }
 }

@@ -1,0 +1,51 @@
+//! Host-visible per-iteration engine outputs. Lives outside the
+//! PJRT-gated engine module because every backend (real or mock) and the
+//! prediction service exchange this type.
+
+/// Host-visible per-iteration outputs (small).
+#[derive(Clone, Debug)]
+pub struct Readout {
+    /// `[B * V]` last-step logits, row-major per slot.
+    pub logits: Vec<f32>,
+    /// `[n_taps * B * D]` current-token hidden states at every tap point.
+    pub taps: Vec<f32>,
+    /// `[n_taps * B * D]` mean prompt embeddings per slot (prompt probe).
+    pub prompt_taps: Vec<f32>,
+    /// `[B]` argmax next token per slot.
+    pub argmax: Vec<i32>,
+}
+
+impl Readout {
+    pub fn tap(&self, layer: usize, slot: usize, d_model: usize, slots: usize) -> &[f32] {
+        let off = (layer * slots + slot) * d_model;
+        &self.taps[off..off + d_model]
+    }
+
+    pub fn prompt_tap(&self, layer: usize, slot: usize, d_model: usize, slots: usize) -> &[f32] {
+        let off = (layer * slots + slot) * d_model;
+        &self.prompt_taps[off..off + d_model]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tap_offsets_are_layer_major() {
+        let d = 4;
+        let slots = 2;
+        let n_taps = 3;
+        let taps: Vec<f32> = (0..n_taps * slots * d).map(|i| i as f32).collect();
+        let ro = Readout {
+            logits: vec![],
+            taps: taps.clone(),
+            prompt_taps: taps,
+            argmax: vec![],
+        };
+        assert_eq!(ro.tap(0, 0, d, slots), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(ro.tap(0, 1, d, slots), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(ro.tap(1, 0, d, slots), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(ro.prompt_tap(2, 1, d, slots), &[20.0, 21.0, 22.0, 23.0]);
+    }
+}

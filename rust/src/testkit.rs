@@ -1,0 +1,337 @@
+//! Hermetic scenario harness for the TRAIL scheduler.
+//!
+//! Wraps `MockBackend` + the virtual clock + `gen_requests` +
+//! `ArrivalProcess` into one-call scenario runners, so integration tests
+//! and fast sweeps describe *what* to serve (policy × load ×
+//! pool-fraction × prediction-noise) instead of re-assembling the engine
+//! by hand. Nothing here touches PJRT or the `artifacts/` directory: the
+//! embedded config and (optionally) synthetic probe weights make every
+//! scenario runnable from a fresh checkout.
+//!
+//! ```no_run
+//! use trail::config::Config;
+//! use trail::coordinator::Policy;
+//! use trail::testkit::{Load, Scenario};
+//!
+//! let cfg = Config::load_default().unwrap();
+//! let report = Scenario::new(Policy::Trail { c: 0.8 })
+//!     .n(120)
+//!     .load(Load::Poisson(110.0))
+//!     .pool_frac(0.4)
+//!     .run(&cfg);
+//! assert_eq!(report.summary.n, 120);
+//! ```
+
+use crate::config::Config;
+use crate::coordinator::backend::CostModel;
+use crate::coordinator::{MockBackend, Policy, ServeConfig, ServeReport, ServingEngine};
+use crate::predictor::{OraclePredictor, Predictor, ProbePredictor};
+use crate::runtime::ProbeWeights;
+use crate::workload::{gen_requests, Arrival, ArrivalProcess};
+
+/// Arrival pattern of a scenario; materialised with the scenario seed.
+#[derive(Clone, Debug)]
+pub enum Load {
+    /// Everything at t = 0 (the paper's Fig 7 spike).
+    Burst,
+    /// Poisson arrivals at `lambda` requests/second.
+    Poisson(f64),
+    /// Explicit arrival times (replay).
+    Trace(Vec<f64>),
+}
+
+/// Which prediction service drives the scheduler.
+#[derive(Clone, Debug)]
+pub enum PredictorSpec {
+    /// Ground-truth sizes with multiplicative log-normal noise `noise`
+    /// on the initial estimate; `refine_exact` reveals the exact
+    /// remaining length as tokens are produced.
+    Oracle {
+        noise: f64,
+        refine_exact: bool,
+        seed: u64,
+    },
+    /// Deterministic synthetic probe weights through the full
+    /// `ProbePredictor` path (embedding lookup → MLP → Bayesian
+    /// smoother). `refine = false` is the TRAIL-BERT static mode.
+    SyntheticProbe { refine: bool, seed: u64 },
+}
+
+impl PredictorSpec {
+    /// Perfect predictions — the default for scheduler-invariant tests.
+    pub fn oracle() -> PredictorSpec {
+        PredictorSpec::Oracle {
+            noise: 0.0,
+            refine_exact: true,
+            seed: 7,
+        }
+    }
+
+    /// Noisy oracle with the conventional test seed.
+    pub fn noisy_oracle(noise: f64) -> PredictorSpec {
+        PredictorSpec::Oracle {
+            noise,
+            refine_exact: true,
+            seed: 7,
+        }
+    }
+
+    pub fn build(&self, cfg: &Config) -> Box<dyn Predictor> {
+        match self {
+            PredictorSpec::Oracle {
+                noise,
+                refine_exact,
+                seed,
+            } => Box::new(OraclePredictor::new(*noise, *refine_exact, *seed)),
+            PredictorSpec::SyntheticProbe { refine, seed } => {
+                let weights = ProbeWeights::synthetic(cfg, *seed);
+                let mut p = ProbePredictor::new(cfg, &weights);
+                p.refine = *refine;
+                Box::new(p)
+            }
+        }
+    }
+}
+
+/// One mock-backend serving scenario on the virtual clock.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub policy: Policy,
+    pub n: usize,
+    pub load: Load,
+    /// KV token pool as a fraction of B·max_seq.
+    pub pool_frac: f64,
+    pub predictor: PredictorSpec,
+    /// Workload seed (requests) — arrival seeds derive from it.
+    pub seed: u64,
+    pub cost: CostModel,
+    pub max_iterations: u64,
+}
+
+impl Scenario {
+    pub fn new(policy: Policy) -> Scenario {
+        Scenario {
+            policy,
+            n: 60,
+            load: Load::Poisson(80.0),
+            pool_frac: 0.55,
+            predictor: PredictorSpec::oracle(),
+            seed: 42,
+            // The cost model the scheduler test-suite has always used:
+            // capacity ≈ 100 req/s on the default workload.
+            cost: CostModel {
+                decode_step: 1.0e-3,
+                prefill_chunk: 1.2e-3,
+                readout: 0.2e-3,
+            },
+            max_iterations: 2_000_000,
+        }
+    }
+
+    pub fn n(mut self, n: usize) -> Scenario {
+        self.n = n;
+        self
+    }
+
+    pub fn load(mut self, load: Load) -> Scenario {
+        self.load = load;
+        self
+    }
+
+    pub fn pool_frac(mut self, pool_frac: f64) -> Scenario {
+        self.pool_frac = pool_frac;
+        self
+    }
+
+    pub fn predictor(mut self, predictor: PredictorSpec) -> Scenario {
+        self.predictor = predictor;
+        self
+    }
+
+    /// Shorthand: noisy oracle predictions (0.0 = perfect).
+    pub fn noise(mut self, noise: f64) -> Scenario {
+        self.predictor = PredictorSpec::noisy_oracle(noise);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Scenario {
+        self.seed = seed;
+        self
+    }
+
+    pub fn cost(mut self, cost: CostModel) -> Scenario {
+        self.cost = cost;
+        self
+    }
+
+    pub fn max_iterations(mut self, max_iterations: u64) -> Scenario {
+        self.max_iterations = max_iterations;
+        self
+    }
+
+    /// Materialise the arrival schedule for `n` requests.
+    pub fn arrivals(&self) -> Vec<Arrival> {
+        let process = match &self.load {
+            Load::Burst => ArrivalProcess::Burst,
+            Load::Poisson(lambda) => ArrivalProcess::Poisson {
+                lambda: *lambda,
+                seed: self.seed ^ 0xABCD,
+            },
+            Load::Trace(ts) => ArrivalProcess::Trace(ts.clone()),
+        };
+        process.schedule(self.n)
+    }
+
+    fn serve_config(&self, cfg: &Config) -> ServeConfig {
+        let mut serve = ServeConfig::new(cfg, self.policy.clone());
+        serve.max_iterations = self.max_iterations;
+        serve.pool_tokens =
+            ((cfg.model.batch_slots * cfg.model.max_seq) as f64 * self.pool_frac) as usize;
+        serve
+    }
+
+    /// Build the batch-mode serving engine (virtual clock) without
+    /// running it.
+    pub fn build_engine(&self, cfg: &Config) -> ServingEngine<MockBackend> {
+        let backend = MockBackend::new(cfg.model.batch_slots, cfg).with_cost(self.cost);
+        let mut serve = self.serve_config(cfg);
+        serve.real_clock = false;
+        ServingEngine::new(cfg, serve, backend, self.predictor.build(cfg))
+    }
+
+    /// Engine for the online (channel-fed) path. `run_online` stamps
+    /// admissions with wall time, so it must keep the real clock — a
+    /// virtual clock would jump backwards on late arrivals.
+    pub fn build_online_engine(&self, cfg: &Config) -> ServingEngine<MockBackend> {
+        let backend = MockBackend::new(cfg.model.batch_slots, cfg).with_cost(self.cost);
+        let serve = self.serve_config(cfg); // real_clock stays true
+        ServingEngine::new(cfg, serve, backend, self.predictor.build(cfg))
+    }
+
+    /// Serve the scenario to completion on the virtual clock.
+    pub fn run(&self, cfg: &Config) -> ServeReport {
+        self.run_detailed(cfg).0
+    }
+
+    /// Like `run`, but hands back the mock backend for call-count /
+    /// prefill-log invariant checks.
+    pub fn run_detailed(&self, cfg: &Config) -> (ServeReport, MockBackend) {
+        let specs = gen_requests(cfg, self.n, self.seed);
+        let arrivals = self.arrivals();
+        let mut engine = self.build_engine(cfg);
+        let report = engine.run(specs, arrivals).expect("scenario serve");
+        (report, engine.into_backend())
+    }
+}
+
+/// Run a policy × load grid from a base scenario; returns
+/// `(policy_name, lambda, report)` rows in grid order.
+pub fn policy_load_grid(
+    cfg: &Config,
+    policies: &[Policy],
+    lambdas: &[f64],
+    base: &Scenario,
+) -> Vec<(String, f64, ServeReport)> {
+    let mut rows = Vec::with_capacity(policies.len() * lambdas.len());
+    for policy in policies {
+        for &lambda in lambdas {
+            let mut s = base.clone();
+            s.policy = policy.clone();
+            s.load = Load::Poisson(lambda);
+            rows.push((policy.name(), lambda, s.run(cfg)));
+        }
+    }
+    rows
+}
+
+/// Run a pool-fraction sweep for one policy; returns
+/// `(pool_frac, report)` rows.
+pub fn pool_fraction_sweep(
+    cfg: &Config,
+    base: &Scenario,
+    fracs: &[f64],
+) -> Vec<(f64, ServeReport)> {
+    fracs
+        .iter()
+        .map(|&f| {
+            let mut s = base.clone();
+            s.pool_frac = f;
+            (f, s.run(cfg))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config::load_default().expect("load_default")
+    }
+
+    #[test]
+    fn scenario_completes_all_requests() {
+        let cfg = cfg();
+        let (report, backend) = Scenario::new(Policy::Trail { c: 0.8 })
+            .n(24)
+            .load(Load::Poisson(60.0))
+            .run_detailed(&cfg);
+        assert_eq!(report.summary.n, 24);
+        assert!(report.summary.mean_latency.is_finite());
+        assert!(backend.n_decode_steps > 0);
+        assert!(backend.n_prefill_chunks > 0);
+    }
+
+    #[test]
+    fn virtual_clock_is_deterministic() {
+        let cfg = cfg();
+        let s = Scenario::new(Policy::Trail { c: 0.8 }).n(30).load(Load::Poisson(90.0));
+        let a = s.run(&cfg);
+        let b = s.run(&cfg);
+        assert_eq!(a.summary.n, b.summary.n);
+        assert_eq!(a.n_iterations, b.n_iterations);
+        assert!((a.summary.mean_latency - b.summary.mean_latency).abs() < 1e-12);
+        assert_eq!(a.summary.preemptions, b.summary.preemptions);
+    }
+
+    #[test]
+    fn synthetic_probe_scenario_runs_end_to_end() {
+        // The full ProbePredictor path (embedding → MLP → smoother) with
+        // synthetic weights: predictions are untrained but must be finite
+        // and every request must still finish.
+        let cfg = cfg();
+        let report = Scenario::new(Policy::Trail { c: 0.8 })
+            .n(20)
+            .load(Load::Poisson(70.0))
+            .predictor(PredictorSpec::SyntheticProbe {
+                refine: true,
+                seed: 1001,
+            })
+            .run(&cfg);
+        assert_eq!(report.summary.n, 20);
+        assert!(report.summary.mean_latency.is_finite());
+        assert_eq!(report.predictor, "probe-refined");
+    }
+
+    #[test]
+    fn grid_covers_every_cell() {
+        let cfg = cfg();
+        let base = Scenario::new(Policy::Fcfs).n(12);
+        let rows = policy_load_grid(
+            &cfg,
+            &[Policy::Fcfs, Policy::Trail { c: 0.8 }],
+            &[50.0, 90.0],
+            &base,
+        );
+        assert_eq!(rows.len(), 4);
+        for (_, _, report) in &rows {
+            assert_eq!(report.summary.n, 12);
+        }
+    }
+
+    #[test]
+    fn burst_load_arrives_at_zero() {
+        let s = Scenario::new(Policy::Fcfs).n(5).load(Load::Burst);
+        assert!(s.arrivals().iter().all(|a| a.at == 0.0));
+    }
+}

@@ -1,17 +1,18 @@
 //! The online (channel-fed) engine path used by the HTTP server:
 //! admission from a live channel, completion notifications, clean
-//! shutdown. Mock backend — no PJRT.
+//! shutdown. Engines come from `trail::testkit` — mock backend, no PJRT,
+//! no artifacts.
 
 use std::sync::mpsc;
 
 use trail::config::Config;
 use trail::coordinator::engine::OnlineJob;
-use trail::coordinator::{MockBackend, Policy, ServeConfig, ServingEngine};
-use trail::predictor::OraclePredictor;
+use trail::coordinator::Policy;
+use trail::testkit::{PredictorSpec, Scenario};
 use trail::workload::gen_requests;
 
 fn cfg() -> Config {
-    Config::load_default().expect("run `make artifacts` first")
+    Config::load_default().expect("load_default")
 }
 
 #[test]
@@ -20,14 +21,13 @@ fn online_engine_serves_and_notifies() {
     let (tx, rx) = mpsc::channel::<OnlineJob>();
     let cfg2 = cfg.clone();
     let engine = std::thread::spawn(move || {
-        let serve = ServeConfig::new(&cfg2, Policy::Trail { c: 0.8 });
-        let backend = MockBackend::new(cfg2.model.batch_slots, &cfg2);
-        let mut eng = ServingEngine::new(
-            &cfg2,
-            serve,
-            backend,
-            Box::new(OraclePredictor::new(0.0, true, 1)),
-        );
+        let mut eng = Scenario::new(Policy::Trail { c: 0.8 })
+            .predictor(PredictorSpec::Oracle {
+                noise: 0.0,
+                refine_exact: true,
+                seed: 1,
+            })
+            .build_online_engine(&cfg2);
         eng.run_online(rx).expect("online run")
     });
 
@@ -56,14 +56,13 @@ fn online_engine_handles_staggered_submissions() {
     let (tx, rx) = mpsc::channel::<OnlineJob>();
     let cfg2 = cfg.clone();
     let engine = std::thread::spawn(move || {
-        let serve = ServeConfig::new(&cfg2, Policy::Fcfs);
-        let backend = MockBackend::new(cfg2.model.batch_slots, &cfg2);
-        let mut eng = ServingEngine::new(
-            &cfg2,
-            serve,
-            backend,
-            Box::new(OraclePredictor::new(0.0, true, 2)),
-        );
+        let mut eng = Scenario::new(Policy::Fcfs)
+            .predictor(PredictorSpec::Oracle {
+                noise: 0.0,
+                refine_exact: true,
+                seed: 2,
+            })
+            .build_online_engine(&cfg2);
         eng.run_online(rx).expect("online run")
     });
 
@@ -82,4 +81,36 @@ fn online_engine_handles_staggered_submissions() {
     drop(tx);
     let report = engine.join().unwrap();
     assert_eq!(report.summary.n, 6);
+}
+
+#[test]
+fn online_engine_with_synthetic_probe_predictor() {
+    // The hermetic probe path must also work over the live channel.
+    let cfg = cfg();
+    let (tx, rx) = mpsc::channel::<OnlineJob>();
+    let cfg2 = cfg.clone();
+    let engine = std::thread::spawn(move || {
+        let mut eng = Scenario::new(Policy::Trail { c: 0.8 })
+            .predictor(PredictorSpec::SyntheticProbe {
+                refine: true,
+                seed: 1001,
+            })
+            .build_online_engine(&cfg2);
+        eng.run_online(rx).expect("online run")
+    });
+
+    let specs = gen_requests(&cfg, 5, 555);
+    let mut waiters = Vec::new();
+    for spec in specs.clone() {
+        let (dtx, drx) = mpsc::channel();
+        tx.send(OnlineJob { spec, done: dtx }).unwrap();
+        waiters.push(drx);
+    }
+    for (drx, spec) in waiters.into_iter().zip(&specs) {
+        let done = drx.recv().expect("completion");
+        assert_eq!(done.n_tokens, spec.true_output_len);
+    }
+    drop(tx);
+    let report = engine.join().unwrap();
+    assert_eq!(report.summary.n, 5);
 }

@@ -1,0 +1,160 @@
+//! Property tests for the rank comparator (paper §3.3): `Rank::cmp`
+//! must be a strict total order under every policy — the engine sorts
+//! the whole schedulable set with it every iteration, and `sort_by` with
+//! an inconsistent comparator scrambles the schedule (or panics). Runs
+//! hermetically via `util::prop`.
+
+use std::cmp::Ordering;
+
+use trail::config::Config;
+use trail::coordinator::{Phase, Policy, Request};
+use trail::util::prop::{self, Gen};
+use trail::workload::RequestSpec;
+
+fn cfg() -> Config {
+    Config::load_default().expect("load_default")
+}
+
+/// A random request in a random lifecycle state; occasionally with a
+/// NaN prediction (the regression the rank constructor clamps).
+fn random_request(g: &mut Gen, cfg: &Config, rid: u64) -> Request {
+    let plen = g.usize_in(cfg.workload.min_prompt, cfg.workload.max_prompt);
+    let n_out = g.usize_in(cfg.workload.min_output, cfg.workload.max_output);
+    let spec = RequestSpec {
+        rid,
+        prompt: vec![1; plen],
+        true_output_len: n_out,
+        response: vec![9; n_out.saturating_sub(1)],
+    };
+    let mut r = Request::new(spec, g.f64_in(0.0, 50.0), &cfg.bins);
+    r.phase = *g.pick(&[
+        Phase::Waiting,
+        Phase::Prefilling,
+        Phase::Running,
+        Phase::Preempted,
+        Phase::Discarded,
+    ]);
+    r.generated = g.usize_in(0, n_out);
+    r.initial_pred = g.f64_in(0.0, 300.0);
+    r.pred_remaining = if g.usize_in(0, 19) == 0 {
+        f64::NAN
+    } else {
+        g.f64_in(0.0, 300.0)
+    };
+    r
+}
+
+fn random_policy(g: &mut Gen) -> Policy {
+    match g.usize_in(0, 2) {
+        0 => Policy::Fcfs,
+        1 => Policy::SjfPrompt,
+        _ => Policy::Trail {
+            c: *g.pick(&[0.0, 0.2, 0.5, 0.8, 1.0]),
+        },
+    }
+}
+
+#[test]
+fn prop_rank_cmp_is_antisymmetric_and_total() {
+    let cfg = cfg();
+    prop::check("rank antisymmetry", 300, |g| {
+        let policy = random_policy(g);
+        let a = random_request(g, &cfg, 1);
+        let b = random_request(g, &cfg, 2);
+        let (ra, rb) = (policy.rank(&a), policy.rank(&b));
+        let ab = ra.cmp(&rb);
+        let ba = rb.cmp(&ra);
+        if ab != ba.reverse() {
+            return Err(format!("not antisymmetric: {ab:?} vs {ba:?} ({ra:?}, {rb:?})"));
+        }
+        // Distinct rids can never compare Equal (strict total order).
+        if ab == Ordering::Equal {
+            return Err(format!("distinct requests compared Equal: {ra:?} vs {rb:?}"));
+        }
+        if ra.cmp(&ra) != Ordering::Equal {
+            return Err("rank not reflexive-equal with itself".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rank_cmp_is_transitive_over_random_triples() {
+    let cfg = cfg();
+    prop::check("rank transitivity", 300, |g| {
+        let policy = random_policy(g);
+        let reqs = [
+            random_request(g, &cfg, 1),
+            random_request(g, &cfg, 2),
+            random_request(g, &cfg, 3),
+        ];
+        let ranks: Vec<_> = reqs.iter().map(|r| policy.rank(r)).collect();
+        // Check a ≤ b ∧ b ≤ c ⇒ a ≤ c over every permutation.
+        for i in 0..3 {
+            for j in 0..3 {
+                for k in 0..3 {
+                    let ij = ranks[i].cmp(&ranks[j]);
+                    let jk = ranks[j].cmp(&ranks[k]);
+                    let ik = ranks[i].cmp(&ranks[k]);
+                    if ij != Ordering::Greater
+                        && jk != Ordering::Greater
+                        && ik == Ordering::Greater
+                    {
+                        return Err(format!(
+                            "not transitive: {:?} ≤ {:?} ≤ {:?} but {:?} > {:?}",
+                            ranks[i], ranks[j], ranks[k], ranks[i], ranks[k]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_locked_requests_sort_first_under_every_policy() {
+    let cfg = cfg();
+    prop::check("locked first", 300, |g| {
+        let policy = random_policy(g);
+        let a = random_request(g, &cfg, 1);
+        let b = random_request(g, &cfg, 2);
+        let (ra, rb) = (policy.rank(&a), policy.rank(&b));
+        if ra.locked && !rb.locked && ra.cmp(&rb) != Ordering::Less {
+            return Err(format!("locked {ra:?} did not sort before unlocked {rb:?}"));
+        }
+        if !ra.locked && rb.locked && rb.cmp(&ra) != Ordering::Less {
+            return Err(format!("locked {rb:?} did not sort before unlocked {ra:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sorting_ranks_never_panics_with_nan_predictions() {
+    // End-to-end regression for the NaN fix: sort a large vector of
+    // ranks where many keys were NaN before clamping; `sort_by` must not
+    // panic and the result must be totally ordered.
+    let cfg = cfg();
+    prop::check("nan sort", 50, |g| {
+        let policy = random_policy(g);
+        let n = g.usize_in(2, 40);
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let mut r = random_request(g, &cfg, i as u64);
+                if g.bool() {
+                    r.pred_remaining = f64::NAN;
+                }
+                r
+            })
+            .collect();
+        let mut ranks: Vec<_> = reqs.iter().map(|r| policy.rank(r)).collect();
+        ranks.sort_by(|x, y| x.cmp(y));
+        for w in ranks.windows(2) {
+            if w[0].cmp(&w[1]) == Ordering::Greater {
+                return Err(format!("sorted output out of order: {:?} > {:?}", w[0], w[1]));
+            }
+        }
+        Ok(())
+    });
+}

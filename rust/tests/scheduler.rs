@@ -1,17 +1,16 @@
 //! Scheduler behaviour + invariants over the `MockBackend` with a
-//! virtual clock — no PJRT in the loop, so these run in milliseconds and
-//! exercise thousands of scheduling decisions.
+//! virtual clock — no PJRT, no artifacts: every scenario runs through
+//! `trail::testkit` from a fresh checkout and exercises thousands of
+//! scheduling decisions in milliseconds.
 
 use trail::config::Config;
-use trail::coordinator::{
-    backend::CostModel, MockBackend, Policy, ServeConfig, ServingEngine,
-};
-use trail::predictor::OraclePredictor;
+use trail::coordinator::{Policy, ServeReport};
+use trail::testkit::{policy_load_grid, pool_fraction_sweep, Load, PredictorSpec, Scenario};
 use trail::util::prop;
-use trail::workload::{gen_requests, ArrivalProcess, RequestSpec};
+use trail::workload::{gen_requests, RequestSpec};
 
 fn cfg() -> Config {
-    Config::load_default().expect("run `make artifacts` first")
+    Config::load_default().expect("load_default")
 }
 
 fn run_policy(
@@ -22,25 +21,14 @@ fn run_policy(
     seed: u64,
     pool_frac: f64,
     noise: f64,
-) -> trail::coordinator::ServeReport {
-    let specs = gen_requests(cfg, n, seed);
-    let arrivals = ArrivalProcess::Poisson { lambda, seed: seed ^ 0xABCD }.schedule(n);
-    let backend = MockBackend::new(cfg.model.batch_slots, cfg).with_cost(CostModel {
-        decode_step: 1.0e-3,
-        prefill_chunk: 1.2e-3,
-        readout: 0.2e-3,
-    });
-    let mut serve = ServeConfig::new(cfg, policy);
-    serve.real_clock = false;
-    serve.pool_tokens = ((cfg.model.batch_slots * cfg.model.max_seq) as f64 * pool_frac) as usize;
-    serve.max_iterations = 2_000_000;
-    let mut engine = ServingEngine::new(
-        cfg,
-        serve,
-        backend,
-        Box::new(OraclePredictor::new(noise, true, 7)),
-    );
-    engine.run(specs, arrivals).expect("serve")
+) -> ServeReport {
+    Scenario::new(policy)
+        .n(n)
+        .load(Load::Poisson(lambda))
+        .seed(seed)
+        .pool_frac(pool_frac)
+        .noise(noise)
+        .run(cfg)
 }
 
 #[test]
@@ -118,19 +106,17 @@ fn burst_scenario_completes_and_orders_by_size() {
     let cfg = cfg();
     let n = 64;
     let specs = gen_requests(&cfg, n, 99);
-    let arrivals = ArrivalProcess::Burst.schedule(n);
-    let backend = MockBackend::new(cfg.model.batch_slots, &cfg);
-    let mut serve = ServeConfig::new(&cfg, Policy::Trail { c: 0.8 });
-    serve.real_clock = false;
-    serve.max_iterations = 2_000_000;
-    let mut engine = ServingEngine::new(
-        &cfg,
-        serve,
-        backend,
-        Box::new(OraclePredictor::new(0.0, true, 3)),
-    );
     let sizes: Vec<usize> = specs.iter().map(|s| s.true_output_len).collect();
-    let rep = engine.run(specs, arrivals).unwrap();
+    let rep = Scenario::new(Policy::Trail { c: 0.8 })
+        .n(n)
+        .seed(99)
+        .load(Load::Burst)
+        .predictor(PredictorSpec::Oracle {
+            noise: 0.0,
+            refine_exact: true,
+            seed: 3,
+        })
+        .run(&cfg);
     assert_eq!(rep.summary.n, n);
     // Mean size is heavy-tailed: check the summary is sane.
     assert!(sizes.iter().sum::<usize>() > 0);
@@ -148,6 +134,69 @@ fn oracle_trail_beats_noisy_trail() {
         "exact {} !<= noisy {}",
         exact.summary.mean_latency,
         noisy.summary.mean_latency
+    );
+}
+
+#[test]
+fn synthetic_probe_predictor_serves_the_grid() {
+    // The hermetic ProbePredictor path (synthetic weights, refined and
+    // static) across policies: predictions are untrained, but request
+    // conservation and finite metrics must hold everywhere.
+    let cfg = cfg();
+    for policy in [Policy::SjfPrompt, Policy::Trail { c: 0.8 }] {
+        for refine in [false, true] {
+            let rep = Scenario::new(policy.clone())
+                .n(40)
+                .load(Load::Poisson(100.0))
+                .predictor(PredictorSpec::SyntheticProbe { refine, seed: 1001 })
+                .run(&cfg);
+            assert_eq!(
+                rep.summary.n,
+                40,
+                "{} refine={refine} lost requests",
+                policy.name()
+            );
+            assert!(rep.summary.mean_latency.is_finite());
+        }
+    }
+}
+
+#[test]
+fn policy_load_grid_is_complete_and_conserving() {
+    let cfg = cfg();
+    let base = Scenario::new(Policy::Fcfs).n(30).pool_frac(0.45);
+    let rows = policy_load_grid(
+        &cfg,
+        &[Policy::Fcfs, Policy::SjfPrompt, Policy::Trail { c: 0.8 }],
+        &[70.0, 120.0],
+        &base,
+    );
+    assert_eq!(rows.len(), 6);
+    for (name, lambda, rep) in &rows {
+        assert_eq!(rep.summary.n, 30, "{name} @ {lambda} lost requests");
+    }
+}
+
+#[test]
+fn tighter_pools_discard_more() {
+    // Pool-fraction sweep: shrinking the KV pool can only increase
+    // memory-pressure discards for the same workload.
+    let cfg = cfg();
+    let base = Scenario::new(Policy::Trail { c: 1.0 })
+        .n(120)
+        .load(Load::Poisson(130.0))
+        .noise(0.3)
+        .seed(23);
+    let rows = pool_fraction_sweep(&cfg, &base, &[0.2, 0.55, 1.0]);
+    assert_eq!(rows.len(), 3);
+    for (_, rep) in &rows {
+        assert_eq!(rep.summary.n, 120);
+    }
+    let tight = rows[0].1.summary.discards;
+    let roomy = rows[2].1.summary.discards;
+    assert!(
+        tight >= roomy,
+        "tight pool discards {tight} !>= roomy pool discards {roomy}"
     );
 }
 
@@ -182,22 +231,22 @@ fn prop_memory_pool_never_exceeded_at_iteration_boundaries() {
         let n = g.usize_in(10, 50);
         let pool_frac = g.f64_in(0.2, 0.6);
         let seed = g.rng.next_u64();
-        let specs = gen_requests(&cfg, n, seed);
-        let arrivals = ArrivalProcess::Poisson { lambda: 120.0, seed }.schedule(n);
-        let backend = MockBackend::new(cfg.model.batch_slots, &cfg);
-        let mut serve = ServeConfig::new(&cfg, Policy::Trail { c: 1.0 });
-        serve.real_clock = false;
-        serve.max_iterations = 2_000_000;
+        let rep = Scenario::new(Policy::Trail { c: 1.0 })
+            .n(n)
+            .seed(seed)
+            .load(Load::Poisson(120.0))
+            .pool_frac(pool_frac)
+            .predictor(PredictorSpec::Oracle {
+                noise: 0.4,
+                refine_exact: true,
+                seed,
+            })
+            .run(&cfg);
         let pool = ((cfg.model.batch_slots * cfg.model.max_seq) as f64 * pool_frac) as usize;
-        serve.pool_tokens = pool;
-        let mut engine = ServingEngine::new(
-            &cfg,
-            serve,
-            backend,
-            Box::new(OraclePredictor::new(0.4, true, seed)),
-        );
-        let rep = engine.run(specs, arrivals).map_err(|e| e.to_string())?;
         let slack = cfg.model.batch_slots; // ≤1 token growth per slot per iter
+        if rep.summary.n != n {
+            return Err(format!("finished {} of {n}", rep.summary.n));
+        }
         if rep.summary.peak_mem_tokens > pool + slack {
             return Err(format!(
                 "peak {} > pool {pool} + slack {slack}",
@@ -222,8 +271,8 @@ fn recompute_restores_progress() {
 fn respects_slot_capacity() {
     // A request near max_seq must not overflow its slot.
     let cfg = cfg();
-    let mut specs: Vec<RequestSpec> = gen_requests(&cfg, 4, 1);
-    for s in &mut specs {
+    let specs: Vec<RequestSpec> = gen_requests(&cfg, 4, 1);
+    for s in &specs {
         assert!(s.prompt.len() + s.true_output_len <= cfg.model.max_seq);
     }
 }

@@ -1,0 +1,154 @@
+//! Minimal stand-in for the `anyhow` crate, covering exactly the API
+//! surface this workspace uses: `Error`, `Result`, `anyhow!`, `bail!`,
+//! and the `Context` extension trait. The image ships no crates.io
+//! mirror, so the real crate cannot be fetched; errors here are plain
+//! strings (no backtraces, no downcasting), which is all the serving
+//! stack needs.
+
+use std::fmt;
+
+/// String-backed error value. Like the real `anyhow::Error`, it
+/// deliberately does *not* implement `std::error::Error` — that is what
+/// makes the blanket `From<E: Error>` impl below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors `Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend a context layer: `context: original`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on any `Result` whose error
+/// displays — covers both std errors and this crate's `Error`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error {
+            msg: format!("{context}: {e}"),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error {
+            msg: format!("{}: {e}", f()),
+        })
+    }
+}
+
+/// `anyhow!("literal with {inline} args")`, `anyhow!(expr)`, or
+/// `anyhow!("fmt {}", args)`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!(..)` = `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("inline {n}");
+        assert_eq!(b.to_string(), "inline 3");
+        let c = anyhow!("fmt {}", 7);
+        assert_eq!(c.to_string(), "fmt 7");
+        let msg = String::from("owned");
+        let d = anyhow!(msg);
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            let r: std::result::Result<(), std::io::Error> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_layers() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: disk on fire");
+        let r2: std::result::Result<(), String> = Err("inner".into());
+        let e2 = r2.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(e2.to_string(), "step 2: inner");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn inner(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(4).unwrap(), 4);
+        assert_eq!(inner(-1).unwrap_err().to_string(), "negative: -1");
+    }
+}
