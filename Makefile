@@ -5,7 +5,7 @@
 # (`Config::embedded_default`) and deterministic synthetic probe weights
 # when the `artifacts/` directory is absent.
 
-.PHONY: build test bench-sim fmt artifacts clean
+.PHONY: build test bench-sim bench-dispatch fmt artifacts clean
 
 build:
 	cargo build --release
@@ -17,6 +17,11 @@ test:
 bench-sim:
 	cargo bench -p trail --bench fig8_queue_sim
 	cargo bench -p trail --bench lemma1_validation
+
+# Multi-replica dispatch smoke: HTTP front-end over a 2-replica mock
+# pool (examples/replica_pool.rs). Hermetic and fast (~seconds).
+bench-dispatch:
+	cargo run --release --example replica_pool -- --n 24 --rate 200 --replicas 2 --dispatch jsq
 
 fmt:
 	cargo fmt

@@ -7,7 +7,9 @@
 //! ```
 
 use trail::config::Config;
-use trail::coordinator::{backend::CostModel, MockBackend, Policy, ServeConfig, ServingEngine};
+use trail::coordinator::{
+    backend::CostModel, ClockSpec, MockBackend, Policy, ServeConfig, ServingEngine,
+};
 use trail::predictor::OraclePredictor;
 use trail::workload::{gen_requests, ArrivalProcess};
 
@@ -16,16 +18,22 @@ fn run(cfg: &Config, policy: Policy, n: usize, lambda: f64, seed: u64) -> (f64, 
     let arrivals = ArrivalProcess::Poisson { lambda, seed: seed ^ 0xABCD }.schedule(n);
     let backend = MockBackend::new(cfg.model.batch_slots, cfg).with_cost(CostModel {
         decode_step: 1.0e-3,
+        decode_per_slot: 0.0,
         prefill_chunk: 1.2e-3,
         readout: 0.2e-3,
     });
     let mut serve = ServeConfig::new(cfg, policy);
-    serve.real_clock = false;
+    serve.clock = ClockSpec::Virtual;
     serve.pool_tokens = ((cfg.model.batch_slots * cfg.model.max_seq) as f64
         * std::env::var("POOL").ok().and_then(|v| v.parse().ok()).unwrap_or(0.55))
         as usize;
     serve.max_iterations = 5_000_000;
-    let mut e = ServingEngine::new(cfg, serve, backend, Box::new(OraclePredictor::new(0.0, true, 7)));
+    let mut e = ServingEngine::new(
+        cfg,
+        serve,
+        backend,
+        Box::new(OraclePredictor::new(0.0, true, 7)),
+    );
     let r = e.run(specs, arrivals).unwrap();
     (
         r.summary.mean_latency,

@@ -58,5 +58,7 @@ fn main() {
         ]);
     }
     println!("{}", t2.render());
-    println!("take-away: smaller C trades a little response time for a\nsubstantially lower peak memory — the paper's §3.3 design point.");
+    println!(
+        "take-away: smaller C trades a little response time for a\nsubstantially lower peak memory — the paper's §3.3 design point."
+    );
 }

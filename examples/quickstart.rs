@@ -58,10 +58,19 @@ fn main() -> anyhow::Result<()> {
 
     let report = engine.run(specs, arrivals)?;
     let s = report.summary;
-    println!("\nserved {} requests in {:.2}s ({} engine iterations)", s.n, report.wall_time, report.n_iterations);
+    println!(
+        "\nserved {} requests in {:.2}s ({} engine iterations)",
+        s.n, report.wall_time, report.n_iterations
+    );
     println!("mean latency {:.3}s   median {:.3}s", s.mean_latency, s.median_latency);
     println!("mean TTFT    {:.3}s   median {:.3}s", s.mean_ttft, s.median_ttft);
-    println!("throughput   {:.1} tok/s  ({:.2} req/s)", s.throughput_tok_s, s.throughput_req_s);
-    println!("preemptions {}  discards {}  peak KV {} tokens", s.preemptions, s.discards, s.peak_mem_tokens);
+    println!(
+        "throughput   {:.1} tok/s  ({:.2} req/s)",
+        s.throughput_tok_s, s.throughput_req_s
+    );
+    println!(
+        "preemptions {}  discards {}  peak KV {} tokens",
+        s.preemptions, s.discards, s.peak_mem_tokens
+    );
     Ok(())
 }

@@ -1,0 +1,116 @@
+//! Multi-replica serving demo: an HTTP front-end dispatching a Poisson
+//! client load over a `ReplicaPool` of mock-backend engines.
+//!
+//! Self-contained (no PJRT, no artifacts) — this is the `bench-dispatch`
+//! smoke target:
+//!
+//! ```bash
+//! cargo run --release --example replica_pool -- \
+//!     --n 24 --rate 200 --replicas 2 --dispatch jsq
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use trail::config::Config;
+use trail::coordinator::dispatch::{DispatchPolicy, ReplicaPool};
+use trail::coordinator::{MockBackend, Policy, ServeConfig, ServingEngine};
+use trail::predictor::{Predictor, ProbePredictor};
+use trail::runtime::ProbeWeights;
+use trail::server::http::{get_stats, post_generate};
+use trail::server::HttpServer;
+use trail::util::cli::Args;
+use trail::util::rng::SplitMix64;
+use trail::util::stats::Samples;
+use trail::util::threadpool::ThreadPool;
+use trail::workload::gen_requests;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_vec(std::env::args().skip(1).collect(), false);
+    let n = args.usize_or("n", 32);
+    let rate = args.f64_or("rate", 40.0);
+    let replicas = args.usize_or("replicas", 2).max(1);
+    let dispatch = DispatchPolicy::parse(args.str_or("dispatch", "jsq"))
+        .expect("bad --dispatch (rr|jsq|least-work)");
+    let policy = Policy::parse(args.str_or("policy", "trail")).expect("bad --policy");
+    let cfg = Config::load_default().map_err(anyhow::Error::msg)?;
+
+    // --- replica pool: N engines on their own threads (wall clock) ---
+    let cfg2 = cfg.clone();
+    let policy2 = policy.clone();
+    let pool = Arc::new(ReplicaPool::start(replicas, dispatch, move |_i| {
+        let weights = ProbeWeights::load_or_synthetic(&cfg2);
+        let predictor: Box<dyn Predictor> = Box::new(ProbePredictor::new(&cfg2, &weights));
+        let serve = ServeConfig::new(&cfg2, policy2.clone());
+        let backend = MockBackend::new(cfg2.model.batch_slots, &cfg2);
+        ServingEngine::new(&cfg2, serve, backend, predictor)
+    }));
+
+    // --- HTTP front-end feeding the pool ---
+    let server = HttpServer::bind_with_sink("127.0.0.1:0", 32, pool.clone())?;
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    println!(
+        "[pool] {replicas} replica(s) behind {addr} (dispatch {}, policy {})",
+        dispatch.name(),
+        policy.name()
+    );
+    let accept = std::thread::spawn(move || server.serve());
+
+    // --- client side: open-loop Poisson arrivals over a client pool ---
+    let specs = gen_requests(&cfg, n, cfg.workload.serve_seed ^ 0x9001);
+    let mut rng = SplitMix64::new(0xD15BA7C4);
+    let latencies: Arc<Mutex<Samples>> = Arc::new(Mutex::new(Samples::new()));
+    {
+        let clients = ThreadPool::new(64);
+        let t0 = std::time::Instant::now();
+        let mut next_at = 0.0f64;
+        for spec in specs {
+            next_at += rng.next_exp(rate);
+            while t0.elapsed().as_secs_f64() < next_at {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            let addr = addr.clone();
+            let latencies = Arc::clone(&latencies);
+            clients.execute(move || match post_generate(&addr, &spec) {
+                Ok((lat, _ttft)) => latencies.lock().unwrap().push(lat),
+                Err(e) => eprintln!("[client] request {} failed: {e}", spec.rid),
+            });
+        }
+        // clients drop joins all in-flight requests.
+    }
+
+    println!("[server] /stats -> {}", get_stats(&addr)?.to_string());
+    for (i, s) in pool.snapshots().iter().enumerate() {
+        println!(
+            "[pool] replica {i}: in-flight {} (pred_remaining {:.1} tokens)",
+            s.queued, s.pred_remaining
+        );
+    }
+
+    // Shut down: stop accepting, close the pool, join everything.
+    stop.store(true, Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(&addr); // unblock accept
+    accept.join().unwrap();
+    let mut total = 0usize;
+    for (i, rep) in pool.join().into_iter().enumerate() {
+        match rep {
+            Ok(r) => {
+                total += r.summary.n;
+                println!(
+                    "[pool] replica {i} served {} requests in {} iterations",
+                    r.summary.n, r.n_iterations
+                );
+            }
+            Err(e) => eprintln!("[pool] replica {i} failed: {e}"),
+        }
+    }
+    let mut lat = latencies.lock().unwrap();
+    println!(
+        "[client] {} ok — mean e2e latency {:.3}s p50 {:.3}s | {total} served across {replicas} replica(s)",
+        lat.len(),
+        lat.mean(),
+        lat.median(),
+    );
+    Ok(())
+}

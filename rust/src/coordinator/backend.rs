@@ -19,27 +19,47 @@ use crate::runtime::Readout;
 /// engine for the virtual-clock benches; see EXPERIMENTS.md §Perf.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
+    /// Fixed launch cost of one decode iteration.
     pub decode_step: f64,
+    /// Marginal decode cost per *active* slot in the iteration: batched
+    /// decoding is not free, so large batches take longer per step and
+    /// load-balancing gaps reflect large-batch dynamics (ROADMAP "scale
+    /// the mock substrate").
+    pub decode_per_slot: f64,
     pub prefill_chunk: f64,
     pub readout: f64,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        // Defaults in the ballpark of the measured PJRT CPU numbers.
+        // Defaults in the ballpark of the measured PJRT CPU numbers; the
+        // per-slot term makes a full 8-slot batch ~2× the launch cost.
         Self {
             decode_step: 2.0e-3,
+            decode_per_slot: 0.25e-3,
             prefill_chunk: 2.5e-3,
             readout: 0.3e-3,
         }
     }
 }
 
+impl CostModel {
+    /// Cost of one decode iteration with `n_active` occupied slots.
+    pub fn decode_cost(&self, n_active: usize) -> f64 {
+        self.decode_step + self.decode_per_slot * n_active as f64
+    }
+}
+
 pub trait ModelBackend {
     fn slots(&self) -> usize;
 
-    fn prefill_chunk(&mut self, slot: usize, tokens: &[i32], start: usize, nvalid: usize)
-        -> Result<()>;
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        start: usize,
+        nvalid: usize,
+    ) -> Result<()>;
 
     fn decode_step(&mut self, tokens: &[i32], pos: &[i32], active: &[f32]) -> Result<()>;
 
@@ -99,8 +119,13 @@ impl ModelBackend for PjrtBackend {
         self.engine.cfg.model.batch_slots
     }
 
-    fn prefill_chunk(&mut self, slot: usize, tokens: &[i32], start: usize, nvalid: usize)
-        -> Result<()> {
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        start: usize,
+        nvalid: usize,
+    ) -> Result<()> {
         let state = self.state.take().expect("state in flight");
         let new = self.engine.prefill_chunk(
             state,
@@ -118,7 +143,8 @@ impl ModelBackend for PjrtBackend {
         let state = self.state.take().expect("state in flight");
         let new = self.engine.decode_step(state, tokens, pos, active)?;
         self.state = Some(new);
-        self.pending_cost += self.cost.decode_step;
+        let n_active = active.iter().filter(|&&a| a > 0.0).count();
+        self.pending_cost += self.cost.decode_cost(n_active);
         Ok(())
     }
 
@@ -186,8 +212,13 @@ impl ModelBackend for MockBackend {
         self.slots
     }
 
-    fn prefill_chunk(&mut self, slot: usize, _tokens: &[i32], start: usize, nvalid: usize)
-        -> Result<()> {
+    fn prefill_chunk(
+        &mut self,
+        slot: usize,
+        _tokens: &[i32],
+        start: usize,
+        nvalid: usize,
+    ) -> Result<()> {
         self.n_prefill_chunks += 1;
         self.prefill_log.push((slot, start, nvalid));
         self.pending_cost += self.cost.prefill_chunk;
@@ -199,7 +230,8 @@ impl ModelBackend for MockBackend {
         assert_eq!(pos.len(), self.slots);
         assert_eq!(active.len(), self.slots);
         self.n_decode_steps += 1;
-        self.pending_cost += self.cost.decode_step;
+        let n_active = active.iter().filter(|&&a| a > 0.0).count();
+        self.pending_cost += self.cost.decode_cost(n_active);
         Ok(())
     }
 
@@ -219,5 +251,59 @@ impl ModelBackend for MockBackend {
 
     fn take_cost(&mut self) -> f64 {
         std::mem::take(&mut self.pending_cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_cost_grows_with_active_batch() {
+        let cfg = Config::load_default().expect("load_default");
+        let slots = cfg.model.batch_slots;
+        let cost = CostModel {
+            decode_step: 1.0e-3,
+            decode_per_slot: 0.5e-3,
+            prefill_chunk: 0.0,
+            readout: 0.0,
+        };
+        let mut b = MockBackend::new(slots, &cfg).with_cost(cost);
+
+        let tokens = vec![0i32; slots];
+        let pos = vec![0i32; slots];
+        let mut one = vec![0f32; slots];
+        one[0] = 1.0;
+        b.decode_step(&tokens, &pos, &one).unwrap();
+        let c1 = b.take_cost();
+
+        let full = vec![1f32; slots];
+        b.decode_step(&tokens, &pos, &full).unwrap();
+        let cn = b.take_cost();
+
+        assert!((c1 - (1.0e-3 + 0.5e-3)).abs() < 1e-12);
+        assert!(
+            cn > c1,
+            "full batch ({cn}) must cost more than one slot ({c1})"
+        );
+        assert!((cn - (1.0e-3 + 0.5e-3 * slots as f64)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_per_slot_cost_is_batch_size_invariant() {
+        let cfg = Config::load_default().expect("load_default");
+        let slots = cfg.model.batch_slots;
+        let cost = CostModel {
+            decode_step: 2.0e-3,
+            decode_per_slot: 0.0,
+            prefill_chunk: 0.0,
+            readout: 0.0,
+        };
+        let mut b = MockBackend::new(slots, &cfg).with_cost(cost);
+        let tokens = vec![0i32; slots];
+        let pos = vec![0i32; slots];
+        b.decode_step(&tokens, &pos, &vec![1f32; slots]).unwrap();
+        let cn = b.take_cost();
+        assert!((cn - 2.0e-3).abs() < 1e-12);
     }
 }

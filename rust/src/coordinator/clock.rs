@@ -1,0 +1,129 @@
+//! The engine's notion of time.
+//!
+//! The serving engine used to thread a `real_clock: bool` through
+//! `run`/`advance_clock` and duplicate the idle-wait logic in both driver
+//! loops. `Clock` centralises it: a `Virtual` clock advances by the
+//! backend's reported cost model (deterministic, as fast as the CPU can
+//! schedule), a `Wall` clock reads monotonic elapsed time and really
+//! sleeps when asked to wait. The engine owns one `Clock`; `drive`
+//! restarts it so reports measure from serve start.
+
+use std::time::Instant;
+
+/// Which clock a [`super::ServeConfig`] asks for. The engine materialises
+/// the actual [`Clock`] from this at construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockSpec {
+    /// Deterministic simulated time driven by the backend cost model.
+    Virtual,
+    /// Monotonic wall time (the live-serving default).
+    Wall,
+}
+
+/// A started clock. `now()` is seconds since start on either variant.
+#[derive(Clone, Copy, Debug)]
+pub enum Clock {
+    Virtual { now: f64 },
+    Wall { start: Instant },
+}
+
+impl Clock {
+    pub fn new(spec: ClockSpec) -> Clock {
+        match spec {
+            ClockSpec::Virtual => Clock::Virtual { now: 0.0 },
+            ClockSpec::Wall => Clock::Wall {
+                start: Instant::now(),
+            },
+        }
+    }
+
+    pub fn spec(&self) -> ClockSpec {
+        match self {
+            Clock::Virtual { .. } => ClockSpec::Virtual,
+            Clock::Wall { .. } => ClockSpec::Wall,
+        }
+    }
+
+    /// Re-anchor to t = 0 (wall: now; virtual: reset the counter).
+    pub fn restart(&mut self) {
+        *self = Clock::new(self.spec());
+    }
+
+    /// Current time in seconds since start.
+    pub fn now(&self) -> f64 {
+        match self {
+            Clock::Virtual { now } => *now,
+            Clock::Wall { start } => start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Account one engine iteration: a virtual clock moves forward by the
+    /// backend's reported `cost`; a wall clock ignores it (real time has
+    /// already passed). Returns the post-step time.
+    pub fn advance(&mut self, cost: f64) -> f64 {
+        match self {
+            Clock::Virtual { now } => {
+                *now += cost;
+                *now
+            }
+            Clock::Wall { start } => start.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Idle until `at` (the next known arrival). A virtual clock jumps;
+    /// a wall clock sleeps in short slices (≤ 20 ms) so the caller can
+    /// re-poll its request source — jumping a real clock would stamp
+    /// first tokens before their arrivals.
+    pub fn wait_until(&mut self, at: f64) {
+        match self {
+            Clock::Virtual { now } => *now = (*now).max(at),
+            Clock::Wall { start } => {
+                let wait = at - start.elapsed().as_secs_f64();
+                if wait > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.02)));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances_by_cost() {
+        let mut c = Clock::new(ClockSpec::Virtual);
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.advance(0.5), 0.5);
+        assert_eq!(c.advance(0.25), 0.75);
+        assert_eq!(c.now(), 0.75);
+    }
+
+    #[test]
+    fn virtual_wait_jumps_forward_never_back() {
+        let mut c = Clock::new(ClockSpec::Virtual);
+        c.wait_until(2.0);
+        assert_eq!(c.now(), 2.0);
+        c.wait_until(1.0); // never backwards
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    fn restart_rewinds_virtual_time() {
+        let mut c = Clock::new(ClockSpec::Virtual);
+        c.advance(3.0);
+        c.restart();
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.spec(), ClockSpec::Virtual);
+    }
+
+    #[test]
+    fn wall_clock_monotone_and_ignores_cost() {
+        let mut c = Clock::new(ClockSpec::Wall);
+        let a = c.now();
+        let b = c.advance(1000.0); // cost ignored: no 1000 s jump
+        assert!(b >= a);
+        assert!(b < 100.0);
+    }
+}

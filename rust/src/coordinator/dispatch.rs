@@ -1,0 +1,328 @@
+//! Multi-replica dispatch: N independent `ServingEngine`s behind a
+//! load-balancing front-end (the ROADMAP "sharded/multi-replica
+//! coordinator").
+//!
+//! Each replica is one engine on its own thread, fed by a private
+//! bounded channel through [`crate::coordinator::source::ChannelSource`]
+//! and publishing its load into a [`SharedStatus`] cell. The pool itself
+//! is policy-driven and engine-agnostic:
+//!
+//! * [`DispatchPolicy::RoundRobin`] — cycle replicas, ignore load;
+//! * [`DispatchPolicy::JoinShortestQueue`] — fewest in-flight requests
+//!   (dispatched minus finished, as seen by the pool);
+//! * [`DispatchPolicy::LeastPredictedWork`] — smallest summed
+//!   `pred_remaining` as published by the replica's TRAIL predictor,
+//!   plus a fixed estimate for jobs dispatched but not yet admitted.
+//!   This is the TRAIL-native policy: the same length predictions that
+//!   order the per-replica batch also balance the cluster (cf. ELIS,
+//!   arXiv 2505.09142, and proxy-model dispatch, arXiv 2404.08509).
+//!
+//! The decision function [`DispatchPolicy::pick`] is pure over
+//! [`ReplicaSnapshot`]s, so policies are unit-testable without threads.
+//!
+//! Front-ends talk to either a single engine channel or a pool through
+//! the [`JobSink`] trait; `server::HttpServer::bind_with_sink` accepts
+//! any of them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::backend::ModelBackend;
+use crate::coordinator::engine::{OnlineJob, ServeReport, ServingEngine, SharedStatus};
+use crate::coordinator::source::ChannelSource;
+
+/// Tokens of predicted remaining work assumed for a job the pool has
+/// dispatched but the replica has not yet admitted (its real prediction
+/// does not exist yet). Half the default workload's max output length —
+/// biased high so bursts do not pile onto one replica while its
+/// published status lags.
+pub const DEFAULT_UNSEEN_JOB_ESTIMATE: f64 = 128.0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    RoundRobin,
+    JoinShortestQueue,
+    LeastPredictedWork,
+}
+
+impl DispatchPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::JoinShortestQueue => "jsq",
+            DispatchPolicy::LeastPredictedWork => "least-work",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DispatchPolicy> {
+        match s {
+            "rr" | "round-robin" => Some(DispatchPolicy::RoundRobin),
+            "jsq" | "shortest-queue" => Some(DispatchPolicy::JoinShortestQueue),
+            "least-work" | "lpw" | "least-predicted-work" => {
+                Some(DispatchPolicy::LeastPredictedWork)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [DispatchPolicy; 3] {
+        [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::LeastPredictedWork,
+        ]
+    }
+
+    /// Choose a replica. Pure and deterministic: ties break to the
+    /// lowest index, round-robin is driven by the caller's counter.
+    pub fn pick(&self, snaps: &[ReplicaSnapshot], rr_counter: u64, unseen_estimate: f64) -> usize {
+        assert!(!snaps.is_empty(), "pick over an empty pool");
+        match self {
+            DispatchPolicy::RoundRobin => (rr_counter % snaps.len() as u64) as usize,
+            DispatchPolicy::JoinShortestQueue => snaps
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, s)| (s.queued, *i))
+                .map(|(i, _)| i)
+                .unwrap(),
+            DispatchPolicy::LeastPredictedWork => snaps
+                .iter()
+                .enumerate()
+                .min_by(|(i, a), (j, b)| {
+                    a.estimated_work(unseen_estimate)
+                        .total_cmp(&b.estimated_work(unseen_estimate))
+                        .then(a.queued.cmp(&b.queued))
+                        .then(i.cmp(j))
+                })
+                .map(|(i, _)| i)
+                .unwrap(),
+        }
+    }
+}
+
+/// Pool-side view of one replica at dispatch time.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaSnapshot {
+    /// Jobs dispatched to the replica and not yet finished.
+    pub queued: u64,
+    /// Jobs dispatched but not yet admitted by the replica (in its
+    /// channel) — invisible to its predictor.
+    pub unseen: u64,
+    /// Summed predicted remaining output tokens over the replica's live
+    /// set, as published by its engine.
+    pub pred_remaining: f64,
+}
+
+impl ReplicaSnapshot {
+    /// Load key for least-predicted-work dispatch: published prediction
+    /// mass plus a fixed per-job estimate for not-yet-admitted jobs.
+    pub fn estimated_work(&self, unseen_estimate: f64) -> f64 {
+        self.pred_remaining + self.unseen as f64 * unseen_estimate
+    }
+}
+
+/// Anything a front-end can hand an [`OnlineJob`] to: a single engine's
+/// channel sender, or a [`ReplicaPool`].
+pub trait JobSink: Send + Sync {
+    fn submit(&self, job: OnlineJob) -> Result<()>;
+}
+
+impl JobSink for SyncSender<OnlineJob> {
+    fn submit(&self, job: OnlineJob) -> Result<()> {
+        self.send(job).map_err(|_| anyhow!("engine gone"))
+    }
+}
+
+struct Replica {
+    /// `None` after `close()` — dropping the sender ends the replica's
+    /// `drive` loop once its queue drains.
+    tx: Mutex<Option<SyncSender<OnlineJob>>>,
+    status: Arc<SharedStatus>,
+    dispatched: AtomicU64,
+    thread: Mutex<Option<JoinHandle<Result<ServeReport>>>>,
+}
+
+/// N serving engines on their own threads behind a [`DispatchPolicy`].
+pub struct ReplicaPool {
+    replicas: Vec<Replica>,
+    policy: DispatchPolicy,
+    rr: AtomicU64,
+    unseen_estimate: f64,
+}
+
+impl ReplicaPool {
+    /// Spawn `n_replicas` engine threads. `build` is called once *inside*
+    /// each thread (index-parameterised), so engines never cross thread
+    /// boundaries and need not be `Send`.
+    pub fn start<B, F>(n_replicas: usize, policy: DispatchPolicy, build: F) -> ReplicaPool
+    where
+        B: ModelBackend + 'static,
+        F: Fn(usize) -> ServingEngine<B> + Send + Sync + 'static,
+    {
+        assert!(n_replicas >= 1, "pool needs at least one replica");
+        let build = Arc::new(build);
+        let replicas = (0..n_replicas)
+            .map(|i| {
+                let (tx, rx) = sync_channel::<OnlineJob>(1024);
+                let status = Arc::new(SharedStatus::default());
+                let status2 = Arc::clone(&status);
+                let build = Arc::clone(&build);
+                let thread = std::thread::Builder::new()
+                    .name(format!("trail-replica-{i}"))
+                    .spawn(move || {
+                        let mut engine = (build.as_ref())(i);
+                        engine.set_status_cell(status2);
+                        let mut source = ChannelSource::new(rx);
+                        engine.drive(&mut source)
+                    })
+                    .expect("spawn replica thread");
+                Replica {
+                    tx: Mutex::new(Some(tx)),
+                    status,
+                    dispatched: AtomicU64::new(0),
+                    thread: Mutex::new(Some(thread)),
+                }
+            })
+            .collect();
+        ReplicaPool {
+            replicas,
+            policy,
+            rr: AtomicU64::new(0),
+            unseen_estimate: DEFAULT_UNSEEN_JOB_ESTIMATE,
+        }
+    }
+
+    pub fn with_unseen_estimate(mut self, estimate: f64) -> ReplicaPool {
+        self.unseen_estimate = estimate;
+        self
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Current pool-side load view, one snapshot per replica.
+    pub fn snapshots(&self) -> Vec<ReplicaSnapshot> {
+        self.replicas
+            .iter()
+            .map(|r| {
+                let dispatched = r.dispatched.load(Ordering::Relaxed);
+                ReplicaSnapshot {
+                    queued: dispatched.saturating_sub(r.status.finished()),
+                    unseen: dispatched.saturating_sub(r.status.admitted()),
+                    pred_remaining: r.status.pred_remaining(),
+                }
+            })
+            .collect()
+    }
+
+    /// Dispatch one job under the pool policy. Blocks while the chosen
+    /// replica's channel is full. Returns the replica index.
+    pub fn submit(&self, job: OnlineJob) -> Result<usize> {
+        let snaps = self.snapshots();
+        let rr = self.rr.fetch_add(1, Ordering::Relaxed);
+        let idx = self.policy.pick(&snaps, rr, self.unseen_estimate);
+        let tx = self.replicas[idx]
+            .tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .cloned()
+            .ok_or_else(|| anyhow!("pool closed"))?;
+        self.replicas[idx].dispatched.fetch_add(1, Ordering::Relaxed);
+        if tx.send(job).is_err() {
+            self.replicas[idx].dispatched.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow!("replica {idx} is gone"));
+        }
+        Ok(idx)
+    }
+
+    /// Stop accepting jobs: drop every replica's sender so each engine
+    /// drains its queue and returns.
+    pub fn close(&self) {
+        for r in &self.replicas {
+            r.tx.lock().unwrap().take();
+        }
+    }
+
+    /// Close and join every replica, returning the per-replica reports
+    /// (in replica order). Idempotent: already-joined replicas report an
+    /// error instead of blocking.
+    pub fn join(&self) -> Vec<Result<ServeReport>> {
+        self.close();
+        self.replicas
+            .iter()
+            .map(|r| {
+                let handle = r.thread.lock().unwrap().take();
+                match handle {
+                    Some(h) => h
+                        .join()
+                        .unwrap_or_else(|_| Err(anyhow!("replica thread panicked"))),
+                    None => Err(anyhow!("replica already joined")),
+                }
+            })
+            .collect()
+    }
+}
+
+impl JobSink for ReplicaPool {
+    fn submit(&self, job: OnlineJob) -> Result<()> {
+        ReplicaPool::submit(self, job).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(queued: u64, unseen: u64, pred: f64) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            queued,
+            unseen,
+            pred_remaining: pred,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let snaps = vec![snap(9, 0, 900.0), snap(0, 0, 0.0), snap(3, 0, 30.0)];
+        let p = DispatchPolicy::RoundRobin;
+        let picks: Vec<usize> = (0..6).map(|rr| p.pick(&snaps, rr, 0.0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_shortest_with_lowest_index_ties() {
+        let p = DispatchPolicy::JoinShortestQueue;
+        assert_eq!(p.pick(&[snap(4, 0, 0.0), snap(1, 0, 0.0)], 0, 0.0), 1);
+        // Tie → lowest index.
+        assert_eq!(p.pick(&[snap(2, 0, 0.0), snap(2, 0, 0.0), snap(5, 0, 0.0)], 7, 0.0), 0);
+    }
+
+    #[test]
+    fn least_work_counts_unseen_jobs() {
+        let p = DispatchPolicy::LeastPredictedWork;
+        // Published work alone: replica 1 wins.
+        assert_eq!(p.pick(&[snap(2, 0, 500.0), snap(2, 0, 120.0)], 0, 64.0), 1);
+        // Two unseen jobs add 2×64 to replica 1: replica 2 wins now.
+        let snaps = [snap(2, 0, 500.0), snap(4, 2, 120.0), snap(2, 0, 130.0)];
+        assert_eq!(p.pick(&snaps, 0, 64.0), 2);
+    }
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for p in DispatchPolicy::all() {
+            assert_eq!(DispatchPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::parse("rr"), Some(DispatchPolicy::RoundRobin));
+        assert_eq!(DispatchPolicy::parse("bogus"), None);
+    }
+}

@@ -1,8 +1,24 @@
-//! The iteration-level serving engine (paper Fig 1).
+//! The iteration-level serving engine (paper Fig 1), exposed as a
+//! *step-driven* state machine.
 //!
-//! Every iteration:
+//! The engine does not own a driver loop. Its public surface is:
 //!
-//! 1. admit arrivals whose time has come;
+//! * [`ServingEngine::admit`] — hand a request to the scheduler, stamped
+//!   with an explicit arrival time or the engine clock;
+//! * [`ServingEngine::step`] — run ONE admission-free iteration and
+//!   report what happened as a [`StepOutcome`];
+//! * [`ServingEngine::status`] — a cheap [`EngineStatus`] view (live /
+//!   resident counts, KV occupancy, summed predicted remaining work)
+//!   for load balancers and monitors; optionally mirrored into a shared
+//!   [`SharedStatus`] cell for cross-thread readers;
+//! * [`ServingEngine::drive`] — the one generic loop: poll a
+//!   [`RequestSource`] for admissions, idle on the [`Clock`] when nothing
+//!   is schedulable, `step` otherwise. [`ServingEngine::run`] (replay)
+//!   and [`ServingEngine::run_online`] (live channel) are thin wrappers
+//!   that plug a [`ReplaySource`] / [`ChannelSource`] into `drive`.
+//!
+//! One `step()` performs steps 2–6 of the classic serving iteration:
+//!
 //! 2. rank all schedulable requests under the active policy and choose
 //!    the target set (≤ B slots), evicting/discarding under memory
 //!    pressure (paper's recompute OOM mode);
@@ -14,20 +30,28 @@
 //!    predictions (probe + Bayesian smoother), finish requests;
 //! 6. advance the clock (wall time, or the backend's virtual cost model).
 //!
+//! Step 1 — admission — is *not* part of `step()`: it belongs to the
+//! caller (`drive`, or a multi-replica dispatcher doing its own pacing).
+//!
 //! Preemption semantics (paper §3.3): a `Running` request pushed out of
 //! the target set stays resident (KV held — `Preempted`); if memory is
 //! needed, the worst-ranked non-locked resident request is *discarded*
 //! (KV dropped, recompute later). Requests older than ⌊C·r⌋ tokens are
 //! locked and cannot be pushed out at all.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::Config;
 use crate::coordinator::backend::ModelBackend;
+use crate::coordinator::clock::{Clock, ClockSpec};
 use crate::coordinator::kv::KvManager;
 use crate::coordinator::metrics::{Metrics, MetricsSummary};
 use crate::coordinator::policy::Policy;
 use crate::coordinator::request::{Phase, Request};
+use crate::coordinator::source::{Admission, ChannelSource, ReplaySource, RequestSource};
 use crate::predictor::Predictor;
 use crate::workload::{Arrival, RequestSpec};
 
@@ -46,8 +70,8 @@ pub struct ServeConfig {
     /// bin-granular (width 25.6 tokens); sub-bin differences are noise
     /// and churning on them wastes recompute (EXPERIMENTS.md §Perf L3).
     pub evict_margin: f64,
-    /// Use wall time (true) or the backend's virtual cost model (false).
-    pub real_clock: bool,
+    /// Wall time, or the backend's virtual cost model.
+    pub clock: ClockSpec,
     /// Stop after this many iterations (safety valve; 0 = unlimited).
     pub max_iterations: u64,
 }
@@ -59,7 +83,7 @@ impl ServeConfig {
             pool_tokens: cfg.model.batch_slots * cfg.model.max_seq * 55 / 100,
             prefill_chunks_per_iter: 2,
             evict_margin: cfg.bins.width / 2.0,
-            real_clock: true,
+            clock: ClockSpec::Wall,
             max_iterations: 0,
         }
     }
@@ -80,13 +104,106 @@ pub struct OnlineJob {
     pub done: std::sync::mpsc::Sender<OnlineDone>,
 }
 
-/// Completion notification for an `OnlineJob`.
+/// A request that finished during a `step()`: identity + the per-request
+/// numbers a front-end answers with.
 #[derive(Clone, Copy, Debug)]
-pub struct OnlineDone {
+pub struct FinishedRequest {
     pub rid: u64,
     pub latency: f64,
     pub ttft: f64,
     pub n_tokens: usize,
+}
+
+/// Completion notification for an `OnlineJob` (the historical name for
+/// [`FinishedRequest`] on the channel path).
+pub type OnlineDone = FinishedRequest;
+
+/// What one `step()` did.
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    /// Clock value after the step (the time stamped on tokens produced
+    /// by it).
+    pub now: f64,
+    /// Virtual cost reported by the backend for this iteration.
+    pub cost: f64,
+    /// False when the step was a no-op: nothing schedulable, or every
+    /// target blocked on memory (no prefill chunk or decode issued).
+    pub worked: bool,
+    /// Requests that completed during this step, in finish order.
+    pub finished: Vec<FinishedRequest>,
+}
+
+/// Cheap point-in-time view of the engine, for dispatchers and monitors.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineStatus {
+    /// Admitted, unfinished requests (the schedulable set).
+    pub live: usize,
+    /// Subset of `live` currently holding a KV slot.
+    pub resident: usize,
+    pub kv_used_tokens: usize,
+    pub kv_pool_tokens: usize,
+    /// Sum of predicted remaining output tokens over the live set — the
+    /// TRAIL-native load signal (least-predicted-work dispatch).
+    pub pred_remaining_sum: f64,
+    pub n_admitted: u64,
+    pub n_finished: u64,
+    pub n_iterations: u64,
+}
+
+impl EngineStatus {
+    /// `live`, derived from the monotone counters (stable across the
+    /// engine's internal compaction of finished requests).
+    pub fn unfinished(&self) -> u64 {
+        self.n_admitted - self.n_finished
+    }
+}
+
+/// Lock-free mirror of [`EngineStatus`] that an engine thread publishes
+/// after every admission and step, for cross-thread dispatchers
+/// (`coordinator::dispatch::ReplicaPool`). f64 travels as raw bits.
+#[derive(Debug, Default)]
+pub struct SharedStatus {
+    admitted: AtomicU64,
+    finished: AtomicU64,
+    live: AtomicUsize,
+    resident: AtomicUsize,
+    kv_used_tokens: AtomicUsize,
+    pred_remaining_bits: AtomicU64,
+}
+
+impl SharedStatus {
+    pub fn publish(&self, st: &EngineStatus) {
+        self.admitted.store(st.n_admitted, Ordering::Relaxed);
+        self.finished.store(st.n_finished, Ordering::Relaxed);
+        self.live.store(st.live, Ordering::Relaxed);
+        self.resident.store(st.resident, Ordering::Relaxed);
+        self.kv_used_tokens.store(st.kv_used_tokens, Ordering::Relaxed);
+        self.pred_remaining_bits.store(st.pred_remaining_sum.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn finished(&self) -> u64 {
+        self.finished.load(Ordering::Relaxed)
+    }
+
+    pub fn live(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    pub fn resident(&self) -> usize {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    pub fn kv_used_tokens(&self) -> usize {
+        self.kv_used_tokens.load(Ordering::Relaxed)
+    }
+
+    pub fn pred_remaining(&self) -> f64 {
+        f64::from_bits(self.pred_remaining_bits.load(Ordering::Relaxed))
+    }
 }
 
 pub struct ServingEngine<B: ModelBackend> {
@@ -95,9 +212,16 @@ pub struct ServingEngine<B: ModelBackend> {
     backend: B,
     predictor: Box<dyn Predictor>,
     kv: KvManager,
+    clock: Clock,
     pub metrics: Metrics,
-    /// rids finished, in completion order (run_online notification).
+    /// Admitted requests; finished entries are compacted away after each
+    /// step (their stats live on in `metrics`).
+    requests: Vec<Request>,
+    /// rids finished during the current step, in completion order.
     finished_rids: Vec<u64>,
+    n_admitted: u64,
+    n_iter: u64,
+    status_cell: Option<Arc<SharedStatus>>,
 }
 
 impl<B: ModelBackend> ServingEngine<B> {
@@ -107,19 +231,21 @@ impl<B: ModelBackend> ServingEngine<B> {
         backend: B,
         predictor: Box<dyn Predictor>,
     ) -> Self {
-        let kv = KvManager::new(
-            backend.slots(),
-            cfg.model.max_seq,
-            serve.pool_tokens,
-        );
+        let kv = KvManager::new(backend.slots(), cfg.model.max_seq, serve.pool_tokens);
+        let clock = Clock::new(serve.clock);
         Self {
             cfg: cfg.clone(),
             serve,
             backend,
             predictor,
             kv,
+            clock,
             metrics: Metrics::default(),
+            requests: Vec::new(),
             finished_rids: Vec::new(),
+            n_admitted: 0,
+            n_iter: 0,
+            status_cell: None,
         }
     }
 
@@ -131,171 +257,168 @@ impl<B: ModelBackend> ServingEngine<B> {
         self.backend
     }
 
-    /// Serve a full workload; returns when every request has finished.
-    pub fn run(&mut self, specs: Vec<RequestSpec>, arrivals: Vec<Arrival>) -> Result<ServeReport> {
-        assert_eq!(specs.len(), arrivals.len());
-        let mut requests: Vec<Request> = Vec::with_capacity(specs.len());
-        // arrivals sorted by time; specs indexed by arrival.idx.
-        let mut arrival_iter = arrivals.into_iter().peekable();
-        let mut specs: Vec<Option<RequestSpec>> = specs.into_iter().map(Some).collect();
+    /// Current engine time (seconds since clock start).
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
 
-        let wall_start = std::time::Instant::now();
-        let mut now = 0.0f64;
-        let mut n_iter: u64 = 0;
-        let mut n_unfinished = specs.len();
+    /// Mirror every status change into `cell` (publishes once
+    /// immediately). Used by `ReplicaPool` to read load cross-thread.
+    pub fn set_status_cell(&mut self, cell: Arc<SharedStatus>) {
+        cell.publish(&self.status());
+        self.status_cell = Some(cell);
+    }
 
-        while n_unfinished > 0 {
-            if self.serve.max_iterations > 0 && n_iter >= self.serve.max_iterations {
-                anyhow::bail!("max_iterations exceeded ({n_iter}) — scheduler stall?");
+    pub fn any_schedulable(&self) -> bool {
+        self.requests.iter().any(|r| r.is_schedulable())
+    }
+
+    /// Admit one request. `arrival` stamps its queueing start; `None`
+    /// means "now" on the engine clock (live admission). Returns the rid.
+    pub fn admit(&mut self, spec: RequestSpec, arrival: Option<f64>) -> u64 {
+        let at = arrival.unwrap_or_else(|| self.clock.now());
+        let mut req = Request::new(spec, at, &self.cfg.bins);
+        self.predictor.init_request(&mut req);
+        let rid = req.spec.rid;
+        self.requests.push(req);
+        self.n_admitted += 1;
+        self.publish_status();
+        rid
+    }
+
+    /// Point-in-time engine view.
+    pub fn status(&self) -> EngineStatus {
+        let mut live = 0usize;
+        let mut resident = 0usize;
+        let mut pred = 0.0f64;
+        for r in &self.requests {
+            if r.phase == Phase::Finished {
+                continue;
             }
-
-            // ---- 1. admission ----
-            while let Some(a) = arrival_iter.peek() {
-                if a.at <= now {
-                    let a = arrival_iter.next().unwrap();
-                    let spec = specs[a.idx].take().expect("double admission");
-                    let mut req = Request::new(spec, a.at, &self.cfg.bins);
-                    self.predictor.init_request(&mut req);
-                    requests.push(req);
-                } else {
-                    break;
-                }
+            live += 1;
+            if r.slot.is_some() {
+                resident += 1;
             }
-
-            // Nothing live? Advance to the next arrival: jump the virtual
-            // clock, or actually wait on the wall clock (jumping a real
-            // clock would stamp first tokens before their arrivals).
-            let any_live = requests.iter().any(|r| r.is_schedulable());
-            if !any_live {
-                match arrival_iter.peek() {
-                    Some(a) => {
-                        if self.serve.real_clock {
-                            let wait = a.at - wall_start.elapsed().as_secs_f64();
-                            if wait > 0.0 {
-                                std::thread::sleep(std::time::Duration::from_secs_f64(
-                                    wait.min(0.02),
-                                ));
-                            }
-                            now = wall_start.elapsed().as_secs_f64();
-                        } else {
-                            now = now.max(a.at);
-                        }
-                        continue;
-                    }
-                    None => break, // all finished
-                }
-            }
-
-            now = self.tick(&mut requests, &wall_start, now, &mut n_unfinished)?;
-            n_iter += 1;
+            pred += r.pred_remaining.max(0.0);
         }
+        EngineStatus {
+            live,
+            resident,
+            kv_used_tokens: self.kv.used_tokens(),
+            kv_pool_tokens: self.kv.pool_tokens,
+            pred_remaining_sum: pred,
+            n_admitted: self.n_admitted,
+            n_finished: self.metrics.n_finished as u64,
+            n_iterations: self.n_iter,
+        }
+    }
 
-        let wall = wall_start.elapsed().as_secs_f64();
-        self.metrics.wall_time = if self.serve.real_clock { wall } else { now };
-        self.metrics.n_iterations = n_iter;
-        self.metrics.peak_slots = self.kv.peak_slots;
-        Ok(ServeReport {
-            summary: self.metrics.summary_row(),
-            policy: self.serve.policy.name(),
-            predictor: self.predictor.name().to_string(),
-            n_iterations: n_iter,
-            wall_time: self.metrics.wall_time,
-        })
+    fn publish_status(&self) {
+        if let Some(cell) = &self.status_cell {
+            cell.publish(&self.status());
+        }
+    }
+
+    /// One admission-free engine iteration (steps 2–6). A no-op — and
+    /// idempotent — when nothing is schedulable: the clock does not move,
+    /// no iteration is counted, and `worked` is false.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        if !self.any_schedulable() {
+            return Ok(StepOutcome {
+                now: self.clock.now(),
+                cost: 0.0,
+                worked: false,
+                finished: Vec::new(),
+            });
+        }
+        if self.serve.max_iterations > 0 && self.n_iter >= self.serve.max_iterations {
+            anyhow::bail!("max_iterations exceeded ({}) — scheduler stall?", self.n_iter);
+        }
+        let mut requests = std::mem::take(&mut self.requests);
+        let result = self.step_inner(&mut requests);
+        self.requests = requests;
+        if result.is_ok() {
+            self.requests.retain(|r| r.phase != Phase::Finished);
+        }
+        self.publish_status();
+        result
+    }
+
+    /// The one generic driver loop: admit from `source`, idle on the
+    /// clock when nothing is schedulable, step otherwise. Returns when
+    /// the source is closed and all admitted work has drained.
+    pub fn drive(&mut self, source: &mut dyn RequestSource) -> Result<ServeReport> {
+        self.clock.restart();
+        let mut open = true;
+        loop {
+            // ---- 1. admission ----
+            let mut next_arrival: Option<f64> = None;
+            while open {
+                let idle = !self.any_schedulable();
+                match source.poll(self.clock.now(), idle) {
+                    Admission::Admit { spec, arrival } => {
+                        self.admit(spec, arrival);
+                    }
+                    Admission::NotBefore(at) => {
+                        next_arrival = Some(at);
+                        break;
+                    }
+                    Admission::Pending => break,
+                    Admission::Closed => open = false,
+                }
+            }
+            if !self.any_schedulable() {
+                if !open {
+                    break; // drained and no more arrivals
+                }
+                if let Some(at) = next_arrival {
+                    self.clock.wait_until(at);
+                }
+                continue;
+            }
+
+            // ---- 2–6. one iteration ----
+            let outcome = self.step()?;
+            if !outcome.finished.is_empty() {
+                source.on_finished(&outcome.finished);
+            }
+        }
+        Ok(self.report())
+    }
+
+    /// Serve a full replay workload; returns when every request has
+    /// finished. Thin wrapper: `drive` over a [`ReplaySource`].
+    pub fn run(&mut self, specs: Vec<RequestSpec>, arrivals: Vec<Arrival>) -> Result<ServeReport> {
+        let mut source = ReplaySource::new(specs, arrivals);
+        self.drive(&mut source)
     }
 
     /// Serve from a live channel (the HTTP server path): each `OnlineJob`
     /// is admitted when received; its completion is signalled back on its
     /// response channel. Returns when the channel is closed and all
-    /// admitted work has drained. Always uses the real clock.
-    pub fn run_online(
-        &mut self,
-        rx: std::sync::mpsc::Receiver<OnlineJob>,
-    ) -> Result<ServeReport> {
-        let mut requests: Vec<Request> = Vec::new();
-        let mut responders: std::collections::HashMap<u64, std::sync::mpsc::Sender<OnlineDone>> =
-            std::collections::HashMap::new();
-        let wall_start = std::time::Instant::now();
-        let mut now = 0.0f64;
-        let mut n_iter: u64 = 0;
-        let mut n_unfinished = 0usize;
-        let mut open = true;
+    /// admitted work has drained. Thin wrapper: `drive` over a
+    /// [`ChannelSource`].
+    pub fn run_online(&mut self, rx: std::sync::mpsc::Receiver<OnlineJob>) -> Result<ServeReport> {
+        let mut source = ChannelSource::new(rx);
+        self.drive(&mut source)
+    }
 
-        loop {
-            // ---- admission (non-blocking drain; block when idle) ----
-            loop {
-                let job = if n_unfinished == 0 && open {
-                    // Idle: block until work arrives or channel closes.
-                    match rx.recv() {
-                        Ok(j) => Some(j),
-                        Err(_) => {
-                            open = false;
-                            None
-                        }
-                    }
-                } else {
-                    match rx.try_recv() {
-                        Ok(j) => Some(j),
-                        Err(std::sync::mpsc::TryRecvError::Empty) => None,
-                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                            open = false;
-                            None
-                        }
-                    }
-                };
-                let Some(job) = job else { break };
-                now = wall_start.elapsed().as_secs_f64();
-                let mut req = Request::new(job.spec, now, &self.cfg.bins);
-                self.predictor.init_request(&mut req);
-                responders.insert(req.spec.rid, job.done);
-                requests.push(req);
-                n_unfinished += 1;
-            }
-            if n_unfinished == 0 {
-                if !open {
-                    break;
-                }
-                continue;
-            }
-
-            let before = self.finished_rids.len();
-            now = self.tick(&mut requests, &wall_start, now, &mut n_unfinished)?;
-            n_iter += 1;
-            for rid in self.finished_rids.drain(before..).collect::<Vec<_>>() {
-                if let Some(tx) = responders.remove(&rid) {
-                    let r = requests.iter().find(|r| r.spec.rid == rid).unwrap();
-                    let _ = tx.send(OnlineDone {
-                        rid,
-                        latency: r.latency().unwrap_or(0.0),
-                        ttft: r.ttft().unwrap_or(0.0),
-                        n_tokens: r.generated,
-                    });
-                }
-            }
-        }
-
-        self.metrics.wall_time = wall_start.elapsed().as_secs_f64();
-        self.metrics.n_iterations = n_iter;
+    fn report(&mut self) -> ServeReport {
+        self.metrics.wall_time = self.clock.now();
+        self.metrics.n_iterations = self.n_iter;
         self.metrics.peak_slots = self.kv.peak_slots;
-        Ok(ServeReport {
+        ServeReport {
             summary: self.metrics.summary_row(),
             policy: self.serve.policy.name(),
             predictor: self.predictor.name().to_string(),
-            n_iterations: n_iter,
+            n_iterations: self.n_iter,
             wall_time: self.metrics.wall_time,
-        })
+        }
     }
 
-    /// One engine iteration (steps 2-6 of the loop). Returns the new
-    /// clock value.
-    fn tick(
-        &mut self,
-        requests: &mut Vec<Request>,
-        wall_start: &std::time::Instant,
-        now_in: f64,
-        n_unfinished: &mut usize,
-    ) -> Result<f64> {
-        let mut now = now_in;
-        {
+    /// Steps 2–6 on a request set temporarily moved out of `self` (so
+    /// the helper methods can borrow the engine mutably alongside it).
+    fn step_inner(&mut self, requests: &mut Vec<Request>) -> Result<StepOutcome> {
         // ---- 2. memory pressure, then target-set selection ----
         self.resolve_oom(requests);
         let target = self.select_targets(requests);
@@ -303,6 +426,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         // ---- 3. prefill budget ----
         let mut prefill_done_now: Vec<usize> = Vec::new();
         let mut budget = self.serve.prefill_chunks_per_iter;
+        let mut chunks_issued = 0usize;
         for &idx in &target {
             if budget == 0 {
                 break;
@@ -315,8 +439,7 @@ impl<B: ModelBackend> ServingEngine<B> {
             while budget > 0 && !r.prefill_done() {
                 let tokens = r.prefill_tokens();
                 let start = r.prefilled;
-                let nvalid =
-                    (tokens.len() - start).min(self.cfg.model.prefill_chunk);
+                let nvalid = (tokens.len() - start).min(self.cfg.model.prefill_chunk);
                 // Memory discipline: never prefill past the pool —
                 // the request waits until discards/completions make
                 // room (resolve_oom runs each iteration).
@@ -329,6 +452,7 @@ impl<B: ModelBackend> ServingEngine<B> {
                 r.kv_written = r.prefilled;
                 self.kv.charge(slot, r.spec.rid, r.resident_tokens());
                 budget -= 1;
+                chunks_issued += 1;
             }
             self.kv.charge(slot, r.spec.rid, r.resident_tokens());
             if r.prefill_done() {
@@ -347,7 +471,9 @@ impl<B: ModelBackend> ServingEngine<B> {
             // Ready to decode: fully prefilled *before* this iteration
             // (requests whose prefill completed now get their first
             // token from the prefill logits at readout instead).
-            if r.phase == Phase::Running && r.prefill_done() && r.generated >= 1
+            if r.phase == Phase::Running
+                && r.prefill_done()
+                && r.generated >= 1
                 && !prefill_done_now.contains(&idx)
             {
                 let slot = r.slot.unwrap();
@@ -362,12 +488,18 @@ impl<B: ModelBackend> ServingEngine<B> {
         }
 
         // ---- 5. readout + bookkeeping ----
-        if !decoding.is_empty() || !prefill_done_now.is_empty() {
-            let readout = self.backend.read()?;
+        let stepped = !decoding.is_empty() || !prefill_done_now.is_empty();
+        let readout = if stepped {
+            Some(self.backend.read()?)
+        } else {
+            None
+        };
 
-            // Advance the clock before stamping token times.
-            now = self.advance_clock(wall_start, now);
+        // ---- 6. advance the clock (before stamping token times) ----
+        let cost = self.backend.take_cost();
+        let now = self.clock.advance(cost);
 
+        if let Some(readout) = readout {
             for idx in prefill_done_now {
                 let r = &mut requests[idx];
                 let slot = r.slot.unwrap();
@@ -379,7 +511,7 @@ impl<B: ModelBackend> ServingEngine<B> {
                 // Recompute prefill: tokens were already produced;
                 // nothing to stamp.
                 self.kv.charge(slot, r.spec.rid, r.resident_tokens());
-                self.finish_if_done(&mut requests[idx], now, n_unfinished);
+                self.finish_if_done(&mut requests[idx], now);
             }
             for idx in decoding {
                 let r = &mut requests[idx];
@@ -389,28 +521,39 @@ impl<B: ModelBackend> ServingEngine<B> {
                 r.generated += 1;
                 self.predictor.on_token(r, &readout, slot);
                 self.kv.charge(slot, r.spec.rid, r.resident_tokens());
-                self.finish_if_done(&mut requests[idx], now, n_unfinished);
+                self.finish_if_done(&mut requests[idx], now);
             }
-        } else {
-            // Pure-prefill iteration (or idle): still advances time.
-            now = self.advance_clock(wall_start, now);
         }
 
-        }
         self.metrics.peak_mem_tokens = self.metrics.peak_mem_tokens.max(self.kv.used_tokens());
-        Ok(now)
+        self.n_iter += 1;
+
+        let finished: Vec<FinishedRequest> = self
+            .finished_rids
+            .drain(..)
+            .map(|rid| {
+                let r = requests
+                    .iter()
+                    .find(|r| r.spec.rid == rid)
+                    .expect("finished rid tracked");
+                FinishedRequest {
+                    rid,
+                    latency: r.latency().unwrap_or(0.0),
+                    ttft: r.ttft().unwrap_or(0.0),
+                    n_tokens: r.generated,
+                }
+            })
+            .collect();
+
+        Ok(StepOutcome {
+            now,
+            cost,
+            worked: stepped || chunks_issued > 0,
+            finished,
+        })
     }
 
-    fn advance_clock(&mut self, wall_start: &std::time::Instant, now: f64) -> f64 {
-        let cost = self.backend.take_cost();
-        if self.serve.real_clock {
-            wall_start.elapsed().as_secs_f64()
-        } else {
-            now + cost
-        }
-    }
-
-    fn finish_if_done(&mut self, r: &mut Request, now: f64, n_unfinished: &mut usize) {
+    fn finish_if_done(&mut self, r: &mut Request, now: f64) {
         if r.done() && r.phase != Phase::Finished {
             r.finished_at = Some(now);
             r.phase = Phase::Finished;
@@ -419,7 +562,6 @@ impl<B: ModelBackend> ServingEngine<B> {
             }
             self.metrics.observe_finish(r);
             self.finished_rids.push(r.spec.rid);
-            *n_unfinished -= 1;
         }
     }
 
@@ -470,11 +612,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         let mut order: Vec<usize> = (0..requests.len())
             .filter(|&i| requests[i].is_schedulable())
             .collect();
-        order.sort_by(|&a, &z| {
-            policy
-                .rank(&requests[a])
-                .cmp(&policy.rank(&requests[z]))
-        });
+        order.sort_by(|&a, &z| policy.rank(&requests[a]).cmp(&policy.rank(&requests[z])));
 
         let mut target: Vec<usize> = Vec::with_capacity(b);
         let mut chosen = vec![false; requests.len()];
@@ -499,7 +637,8 @@ impl<B: ModelBackend> ServingEngine<B> {
             if !chosen[i] && r.phase == Phase::Running {
                 r.phase = Phase::Preempted;
                 r.n_preemptions += 1;
-            } else if chosen[i] && matches!(r.phase, Phase::Preempted | Phase::Waiting | Phase::Discarded)
+            } else if chosen[i]
+                && matches!(r.phase, Phase::Preempted | Phase::Waiting | Phase::Discarded)
             {
                 r.phase = if r.prefill_done() {
                     Phase::Running
@@ -515,12 +654,7 @@ impl<B: ModelBackend> ServingEngine<B> {
 
     /// Make `idx` resident (slot + pool room), discarding worse-ranked
     /// non-locked residents if allowed. Returns false if impossible.
-    fn ensure_resident(
-        &mut self,
-        requests: &mut [Request],
-        idx: usize,
-        chosen: &[bool],
-    ) -> bool {
+    fn ensure_resident(&mut self, requests: &mut [Request], idx: usize, chosen: &[bool]) -> bool {
         if requests[idx].slot.is_some() {
             return true;
         }

@@ -2,19 +2,33 @@
 //! embedding-based length predictions and SPRPT with *limited preemption*
 //! (paper §3.3), over a vLLM-like serving substrate (slot-based KV
 //! manager, chunked prefill, discard+recompute on OOM).
+//!
+//! The engine is step-driven (`engine::ServingEngine::step`), admission
+//! comes from pluggable `source::RequestSource`s on a `clock::Clock`,
+//! and `dispatch::ReplicaPool` multiplexes N engines behind a
+//! load-balancing policy.
 
 pub mod backend;
+pub mod clock;
+pub mod dispatch;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod policy;
 pub mod request;
+pub mod source;
 
 pub use backend::{MockBackend, ModelBackend};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
-pub use engine::{ServeConfig, ServeReport, ServingEngine};
+pub use clock::{Clock, ClockSpec};
+pub use dispatch::{DispatchPolicy, JobSink, ReplicaPool, ReplicaSnapshot};
+pub use engine::{
+    EngineStatus, FinishedRequest, OnlineDone, OnlineJob, ServeConfig, ServeReport, ServingEngine,
+    SharedStatus, StepOutcome,
+};
 pub use kv::KvManager;
 pub use metrics::Metrics;
 pub use policy::{Policy, Rank};
 pub use request::{Phase, Request};
+pub use source::{Admission, ChannelSource, ReplaySource, RequestSource};

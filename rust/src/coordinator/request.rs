@@ -103,7 +103,9 @@ impl Request {
     /// The token sequence to (re)prefill: prompt ++ response[0..extra].
     pub fn prefill_tokens(&self) -> Vec<i32> {
         let mut v = self.spec.prompt.clone();
-        v.extend_from_slice(&self.spec.response[..self.resume_extra().min(self.spec.response.len())]);
+        v.extend_from_slice(
+            &self.spec.response[..self.resume_extra().min(self.spec.response.len())],
+        );
         v
     }
 

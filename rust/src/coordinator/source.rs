@@ -1,0 +1,220 @@
+//! Admission sources for the serving engine.
+//!
+//! `ServingEngine::drive` is generic over *where requests come from*: a
+//! [`RequestSource`] is polled for the next admission, and notified when
+//! requests finish. Two implementations cover the two historical driver
+//! loops:
+//!
+//! * [`ReplaySource`] — a pre-generated workload (sorted arrival schedule
+//!   + specs), the batch-benchmark path (`ServingEngine::run`);
+//! * [`ChannelSource`] — a live mpsc channel of [`OnlineJob`]s, the HTTP
+//!   server path (`ServingEngine::run_online`); it owns the per-request
+//!   completion senders and answers them from `on_finished`.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+
+use crate::coordinator::engine::{FinishedRequest, OnlineDone, OnlineJob};
+use crate::workload::{Arrival, RequestSpec};
+
+/// One answer to a `poll`.
+#[derive(Debug)]
+pub enum Admission {
+    /// Admit this request. `arrival` is the time to stamp on it; `None`
+    /// means "now" (the engine uses its clock — the live-channel case).
+    Admit {
+        spec: RequestSpec,
+        arrival: Option<f64>,
+    },
+    /// Nothing is due yet, but the next arrival is at this (virtual)
+    /// time — the engine may idle until then.
+    NotBefore(f64),
+    /// Nothing available right now; more may appear later. Only valid
+    /// when the engine has schedulable work (`idle == false`) — an idle
+    /// engine would spin on it, so idle polls must block, return
+    /// `NotBefore`, or `Closed`.
+    Pending,
+    /// The source is exhausted: no further admissions will ever come.
+    Closed,
+}
+
+/// Where the engine's requests come from. `poll` is called repeatedly at
+/// the top of every drive iteration until it stops returning `Admit`.
+pub trait RequestSource {
+    /// Ask for the next admission at engine time `now`. `idle` is true
+    /// when the engine has no schedulable work — a live source should
+    /// block until work arrives rather than return `Pending`.
+    fn poll(&mut self, now: f64, idle: bool) -> Admission;
+
+    /// Completion notifications for requests admitted by this source,
+    /// in finish order. Default: ignore (replay benchmarks read the
+    /// aggregate report instead).
+    fn on_finished(&mut self, _finished: &[FinishedRequest]) {}
+}
+
+/// Replay admission: a pre-materialised arrival schedule over a spec
+/// list (`arrivals[i].idx` indexes `specs`), sorted by arrival time.
+pub struct ReplaySource {
+    arrivals: std::iter::Peekable<std::vec::IntoIter<Arrival>>,
+    specs: Vec<Option<RequestSpec>>,
+}
+
+impl ReplaySource {
+    pub fn new(specs: Vec<RequestSpec>, arrivals: Vec<Arrival>) -> ReplaySource {
+        assert_eq!(specs.len(), arrivals.len());
+        ReplaySource {
+            arrivals: arrivals.into_iter().peekable(),
+            specs: specs.into_iter().map(Some).collect(),
+        }
+    }
+}
+
+impl RequestSource for ReplaySource {
+    fn poll(&mut self, now: f64, _idle: bool) -> Admission {
+        match self.arrivals.peek() {
+            None => Admission::Closed,
+            Some(a) if a.at <= now => {
+                let a = self.arrivals.next().unwrap();
+                let spec = self.specs[a.idx].take().expect("double admission");
+                Admission::Admit {
+                    spec,
+                    arrival: Some(a.at),
+                }
+            }
+            Some(a) => Admission::NotBefore(a.at),
+        }
+    }
+}
+
+/// Live admission from an mpsc channel (the HTTP server path). Non-idle
+/// polls drain without blocking; idle polls block until a job arrives or
+/// every sender is dropped. Completion senders are kept here and answered
+/// from `on_finished`.
+pub struct ChannelSource {
+    rx: Receiver<OnlineJob>,
+    responders: HashMap<u64, Sender<OnlineDone>>,
+    open: bool,
+}
+
+impl ChannelSource {
+    pub fn new(rx: Receiver<OnlineJob>) -> ChannelSource {
+        ChannelSource {
+            rx,
+            responders: HashMap::new(),
+            open: true,
+        }
+    }
+}
+
+impl RequestSource for ChannelSource {
+    fn poll(&mut self, _now: f64, idle: bool) -> Admission {
+        if !self.open {
+            return Admission::Closed;
+        }
+        let job = if idle {
+            // Idle: block until work arrives or the channel closes.
+            match self.rx.recv() {
+                Ok(j) => Some(j),
+                Err(_) => None,
+            }
+        } else {
+            match self.rx.try_recv() {
+                Ok(j) => Some(j),
+                Err(TryRecvError::Empty) => return Admission::Pending,
+                Err(TryRecvError::Disconnected) => None,
+            }
+        };
+        match job {
+            Some(job) => {
+                self.responders.insert(job.spec.rid, job.done);
+                Admission::Admit {
+                    spec: job.spec,
+                    arrival: None,
+                }
+            }
+            None => {
+                self.open = false;
+                Admission::Closed
+            }
+        }
+    }
+
+    fn on_finished(&mut self, finished: &[FinishedRequest]) {
+        for f in finished {
+            if let Some(tx) = self.responders.remove(&f.rid) {
+                let _ = tx.send(*f);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn spec(rid: u64) -> RequestSpec {
+        RequestSpec {
+            rid,
+            prompt: vec![1, 2],
+            true_output_len: 3,
+            response: vec![8, 8],
+        }
+    }
+
+    #[test]
+    fn replay_source_respects_arrival_times() {
+        let arrivals = vec![
+            Arrival { at: 0.0, idx: 0 },
+            Arrival { at: 1.0, idx: 1 },
+        ];
+        let mut s = ReplaySource::new(vec![spec(10), spec(11)], arrivals);
+        match s.poll(0.0, true) {
+            Admission::Admit { spec, arrival } => {
+                assert_eq!(spec.rid, 10);
+                assert_eq!(arrival, Some(0.0));
+            }
+            other => panic!("expected admit, got {other:?}"),
+        }
+        match s.poll(0.5, false) {
+            Admission::NotBefore(at) => assert_eq!(at, 1.0),
+            other => panic!("expected NotBefore, got {other:?}"),
+        }
+        match s.poll(2.0, false) {
+            Admission::Admit { spec, .. } => assert_eq!(spec.rid, 11),
+            other => panic!("expected admit, got {other:?}"),
+        }
+        assert!(matches!(s.poll(9.0, true), Admission::Closed));
+        assert!(matches!(s.poll(9.0, true), Admission::Closed));
+    }
+
+    #[test]
+    fn channel_source_drains_then_pends_then_closes() {
+        let (tx, rx) = mpsc::channel::<OnlineJob>();
+        let (dtx, drx) = mpsc::channel();
+        tx.send(OnlineJob {
+            spec: spec(7),
+            done: dtx,
+        })
+        .unwrap();
+        let mut s = ChannelSource::new(rx);
+        match s.poll(0.0, true) {
+            Admission::Admit { spec, arrival } => {
+                assert_eq!(spec.rid, 7);
+                assert_eq!(arrival, None);
+            }
+            other => panic!("expected admit, got {other:?}"),
+        }
+        assert!(matches!(s.poll(0.0, false), Admission::Pending));
+        s.on_finished(&[FinishedRequest {
+            rid: 7,
+            latency: 1.0,
+            ttft: 0.5,
+            n_tokens: 3,
+        }]);
+        assert_eq!(drx.recv().unwrap().rid, 7);
+        drop(tx);
+        assert!(matches!(s.poll(0.0, false), Admission::Closed));
+        assert!(matches!(s.poll(0.0, true), Admission::Closed));
+    }
+}

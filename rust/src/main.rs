@@ -5,14 +5,19 @@
 //! trail-serve serve   --policy trail --rate 6 --n 80 [--mock] [--burst]
 //! trail-serve simulate --lambda 0.7 --c 0.8 --model exp --jobs 200000
 //! trail-serve theory  --lambda 0.7 --c 0.8 --model perfect
-//! trail-serve server  --addr 127.0.0.1:8091 --policy trail
+//! trail-serve server  --addr 127.0.0.1:8091 --policy trail \
+//!                     --replicas 2 --dispatch jsq [--mock]
 //! ```
 
+use std::sync::Arc;
+
 use trail::config::Config;
-use trail::coordinator::engine::OnlineJob;
 #[cfg(feature = "pjrt")]
 use trail::coordinator::PjrtBackend;
-use trail::coordinator::{MockBackend, Policy, ServeConfig, ServeReport, ServingEngine};
+use trail::coordinator::{
+    ClockSpec, DispatchPolicy, MockBackend, Policy, ReplicaPool, ServeConfig, ServeReport,
+    ServingEngine,
+};
 use trail::predictor::{OraclePredictor, Predictor, ProbePredictor};
 use trail::qtheory::{self, PredictionModel, SimConfig};
 use trail::util::cli::Args;
@@ -39,7 +44,9 @@ fn main() {
                  \x20        --lambda <ρ> --c <C> --model exp|perfect --jobs <n>\n\
                  theory   — Lemma 1 closed form (numeric integration)\n\
                  \x20        --lambda <ρ> --c <C> --model exp|perfect\n\
-                 server   — HTTP chatbot server (see examples/http_serving.rs)\n\
+                 server   — HTTP chatbot server over a replica pool\n\
+                 \x20        --addr <ip:port> --policy <p> [--mock] [--oracle]\n\
+                 \x20        --replicas <n> --dispatch rr|jsq|least-work\n\
                  info     — print artifact/config summary"
             );
             2
@@ -155,27 +162,40 @@ fn run_pjrt_serve(
     )
 }
 
+/// Predictor for a pool replica (built inside the replica thread).
+fn replica_predictor(cfg: &Config, oracle: bool) -> Box<dyn Predictor> {
+    if oracle {
+        Box::new(OraclePredictor::new(0.0, true, 1))
+    } else {
+        let w = trail::runtime::ProbeWeights::load_or_synthetic(cfg);
+        Box::new(ProbePredictor::new(cfg, &w))
+    }
+}
+
 #[cfg(feature = "pjrt")]
-fn run_online_pjrt(
+fn start_pjrt_pool(
     cfg: &Config,
     serve: ServeConfig,
     oracle: bool,
-    predictor: Box<dyn Predictor>,
-    rx: std::sync::mpsc::Receiver<OnlineJob>,
-) -> anyhow::Result<ServeReport> {
-    let backend = PjrtBackend::new(cfg, !oracle)?;
-    let mut eng = ServingEngine::new(cfg, serve, backend, predictor);
-    eng.run_online(rx)
+    replicas: usize,
+    dispatch: DispatchPolicy,
+) -> anyhow::Result<Arc<ReplicaPool>> {
+    let cfg2 = cfg.clone();
+    Ok(Arc::new(ReplicaPool::start(replicas, dispatch, move |i| {
+        let backend = PjrtBackend::new(&cfg2, !oracle)
+            .unwrap_or_else(|e| panic!("replica {i}: PJRT backend load failed: {e}"));
+        ServingEngine::new(&cfg2, serve.clone(), backend, replica_predictor(&cfg2, oracle))
+    })))
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn run_online_pjrt(
+fn start_pjrt_pool(
     _cfg: &Config,
     _serve: ServeConfig,
     _oracle: bool,
-    _predictor: Box<dyn Predictor>,
-    _rx: std::sync::mpsc::Receiver<OnlineJob>,
-) -> anyhow::Result<ServeReport> {
+    _replicas: usize,
+    _dispatch: DispatchPolicy,
+) -> anyhow::Result<Arc<ReplicaPool>> {
     anyhow::bail!(
         "this build has no PJRT runtime (the `pjrt` cargo feature is off) — \
          pass --mock to serve on the virtual-cost mock backend"
@@ -200,7 +220,7 @@ fn cmd_serve(args: &Args) -> i32 {
         * args.f64_or("pool-frac", 0.55)) as usize;
 
     let report = if args.has_flag("mock") {
-        serve.real_clock = false;
+        serve.clock = ClockSpec::Virtual;
         serve.max_iterations = 10_000_000;
         let backend = MockBackend::new(cfg.model.batch_slots, &cfg);
         let mut eng = ServingEngine::new(&cfg, serve, backend, make_predictor(&cfg, args));
@@ -285,36 +305,54 @@ fn cmd_server(args: &Args) -> i32 {
     let cfg = load_cfg();
     let addr = args.str_or("addr", "127.0.0.1:8091").to_string();
     let policy = Policy::parse(args.str_or("policy", "trail")).expect("bad --policy");
-    let (server, rx) = trail::server::HttpServer::bind(&addr, 16).expect("bind");
-    println!("listening on {} (policy {})", server.local_addr(), policy.name());
-
-    let cfg2 = cfg.clone();
-    let mut serve = ServeConfig::new(&cfg, policy);
-    serve.pool_tokens = ((cfg.model.batch_slots * cfg.model.max_seq) as f64
-        * args.f64_or("pool-frac", 0.55)) as usize;
+    let replicas = args.usize_or("replicas", 1).max(1);
+    let dispatch = DispatchPolicy::parse(args.str_or("dispatch", "rr"))
+        .expect("bad --dispatch (rr|jsq|least-work)");
     let use_mock = args.has_flag("mock");
     let oracle = args.has_flag("oracle");
-    let engine_thread = std::thread::spawn(move || {
-        let predictor: Box<dyn Predictor> = if oracle {
-            Box::new(OraclePredictor::new(0.0, true, 1))
-        } else {
-            let w = trail::runtime::ProbeWeights::load_or_synthetic(&cfg2);
-            Box::new(ProbePredictor::new(&cfg2, &w))
-        };
-        let rep = if use_mock {
+
+    let mut serve = ServeConfig::new(&cfg, policy.clone());
+    serve.pool_tokens = ((cfg.model.batch_slots * cfg.model.max_seq) as f64
+        * args.f64_or("pool-frac", 0.55)) as usize;
+
+    let pool = if use_mock {
+        let cfg2 = cfg.clone();
+        let serve2 = serve.clone();
+        Arc::new(ReplicaPool::start(replicas, dispatch, move |_i| {
             let backend = MockBackend::new(cfg2.model.batch_slots, &cfg2);
-            let mut eng = ServingEngine::new(&cfg2, serve, backend, predictor);
-            eng.run_online(rx)
-        } else {
-            run_online_pjrt(&cfg2, serve, oracle, predictor, rx)
-        };
-        match rep {
-            Ok(r) => println!("engine done: served {} requests", r.summary.n),
-            Err(e) => eprintln!("engine loop failed: {e}"),
+            ServingEngine::new(&cfg2, serve2.clone(), backend, replica_predictor(&cfg2, oracle))
+        }))
+    } else {
+        match start_pjrt_pool(&cfg, serve, oracle, replicas, dispatch) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("server failed: {e}");
+                return 1;
+            }
         }
-    });
+    };
+
+    let server = match trail::server::HttpServer::bind_with_sink(&addr, 16, pool.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {addr} failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "listening on {} ({} replica(s), policy {}, dispatch {})",
+        server.local_addr(),
+        replicas,
+        policy.name(),
+        dispatch.name()
+    );
     server.serve();
     drop(server);
-    let _ = engine_thread.join();
+    for (i, rep) in pool.join().into_iter().enumerate() {
+        match rep {
+            Ok(r) => println!("replica {i}: served {} requests", r.summary.n),
+            Err(e) => eprintln!("replica {i} failed: {e}"),
+        }
+    }
     0
 }

@@ -5,23 +5,27 @@
 //! ```text
 //! POST /generate  {"prompt": [1, 42, …], "max_tokens": 64, "response": […]}
 //!   -> {"rid": 7, "n_tokens": 64, "latency_s": 0.12, "ttft_s": 0.03}
+//!   -> 400 {"error": …} on malformed JSON / missing fields
 //! GET  /stats     -> {"completed": …, "mean_latency_s": …, …}
 //! GET  /healthz   -> {"ok": true}
 //! ```
 //!
-//! Requests are forwarded over a channel into `ServingEngine::run_online`
-//! (one engine thread — iteration-level scheduling is a sequential
-//! decision loop, as in vLLM's engine core); handler threads block until
-//! their completion notification arrives.
+//! Requests are forwarded into a [`JobSink`]: either a single engine's
+//! channel (`ServingEngine::run_online` on one thread — iteration-level
+//! scheduling is a sequential decision loop, as in vLLM's engine core)
+//! or a `coordinator::dispatch::ReplicaPool` spreading load over N
+//! engines. Handler threads block until their completion notification
+//! arrives.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::mpsc::Receiver;
+use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::dispatch::JobSink;
 use crate::coordinator::engine::{OnlineDone, OnlineJob};
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
@@ -50,29 +54,37 @@ impl ServerStats {
 pub struct HttpServer {
     listener: TcpListener,
     pool: ThreadPool,
-    job_tx: SyncSender<OnlineJob>,
+    sink: Arc<dyn JobSink>,
     stats: Arc<ServerStats>,
     next_rid: AtomicU64,
     stop: Arc<AtomicBool>,
 }
 
 impl HttpServer {
-    /// Bind `addr` (e.g. "127.0.0.1:8091"). The caller runs the engine
-    /// thread with the returned receiver (see examples/http_serving.rs).
+    /// Bind `addr` (e.g. "127.0.0.1:8091") in single-engine mode: the
+    /// caller runs the engine thread with the returned receiver (see
+    /// examples/http_serving.rs).
     pub fn bind(addr: &str, workers: usize) -> Result<(HttpServer, Receiver<OnlineJob>)> {
         let (job_tx, job_rx) = mpsc::sync_channel(1024);
-        let listener = TcpListener::bind(addr)?;
-        Ok((
-            HttpServer {
-                listener,
-                pool: ThreadPool::new(workers),
-                job_tx,
-                stats: Arc::new(ServerStats::default()),
-                next_rid: AtomicU64::new(1),
-                stop: Arc::new(AtomicBool::new(false)),
-            },
-            job_rx,
-        ))
+        let server = Self::bind_with_sink(addr, workers, Arc::new(job_tx))?;
+        Ok((server, job_rx))
+    }
+
+    /// Bind `addr` and forward `/generate` jobs into `sink` — a single
+    /// engine's sender or a `ReplicaPool`.
+    pub fn bind_with_sink(
+        addr: &str,
+        workers: usize,
+        sink: Arc<dyn JobSink>,
+    ) -> Result<HttpServer> {
+        Ok(HttpServer {
+            listener: TcpListener::bind(addr)?,
+            pool: ThreadPool::new(workers),
+            sink,
+            stats: Arc::new(ServerStats::default()),
+            next_rid: AtomicU64::new(1),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
     }
 
     pub fn local_addr(&self) -> String {
@@ -95,11 +107,11 @@ impl HttpServer {
                 break;
             }
             let Ok(stream) = stream else { continue };
-            let tx = self.job_tx.clone();
+            let sink = Arc::clone(&self.sink);
             let stats = Arc::clone(&self.stats);
             let rid = self.next_rid.fetch_add(1, Ordering::Relaxed);
             self.pool.execute(move || {
-                let _ = handle_connection(stream, tx, stats, rid);
+                let _ = handle_connection(stream, sink, stats, rid);
             });
         }
     }
@@ -107,38 +119,47 @@ impl HttpServer {
 
 fn handle_connection(
     mut stream: TcpStream,
-    tx: SyncSender<OnlineJob>,
+    sink: Arc<dyn JobSink>,
     stats: Arc<ServerStats>,
     rid: u64,
 ) -> Result<()> {
     let (method, path, body) = read_request(&mut stream)?;
     match (method.as_str(), path.as_str()) {
-        ("GET", "/healthz") => respond(&mut stream, 200, &Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/healthz") => {
+            respond(&mut stream, 200, &Json::obj(vec![("ok", Json::Bool(true))]))
+        }
         ("GET", "/stats") => respond(&mut stream, 200, &stats.to_json()),
         ("POST", "/generate") => {
-            let req = parse(&body).map_err(|e| anyhow!("bad JSON: {e}"))?;
-            let prompt: Vec<i32> = req
-                .at(&["prompt"])
-                .as_i64_vec()
-                .iter()
-                .map(|&x| x as i32)
-                .collect();
-            let max_tokens = req.at(&["max_tokens"]).as_usize();
-            let response: Vec<i32> = match req.get("response") {
-                Some(r) => r.as_i64_vec().iter().map(|&x| x as i32).collect(),
-                // No replay stream supplied: synthesise pad inputs.
-                None => vec![8; max_tokens.saturating_sub(1)],
-            };
-            let spec = RequestSpec {
-                rid,
-                prompt,
-                true_output_len: max_tokens.max(1),
-                response,
+            // Client errors get a 400 with a reason instead of a silent
+            // hang-up; only transport failures propagate as Err.
+            let spec = match parse_generate(&body, rid) {
+                Ok(spec) => spec,
+                Err(e) => {
+                    return respond(&mut stream, 400, &Json::obj(vec![("error", Json::str(&e))]))
+                }
             };
             let (done_tx, done_rx) = mpsc::channel();
-            tx.send(OnlineJob { spec, done: done_tx })
-                .map_err(|_| anyhow!("engine gone"))?;
-            let done: OnlineDone = done_rx.recv().map_err(|_| anyhow!("engine dropped job"))?;
+            let job = OnlineJob {
+                spec,
+                done: done_tx,
+            };
+            if sink.submit(job).is_err() {
+                return respond(
+                    &mut stream,
+                    503,
+                    &Json::obj(vec![("error", Json::str("engine unavailable"))]),
+                );
+            }
+            let done: OnlineDone = match done_rx.recv() {
+                Ok(d) => d,
+                Err(_) => {
+                    return respond(
+                        &mut stream,
+                        500,
+                        &Json::obj(vec![("error", Json::str("engine dropped job"))]),
+                    )
+                }
+            };
             stats.completed.fetch_add(1, Ordering::Relaxed);
             stats
                 .total_latency_us
@@ -165,6 +186,59 @@ fn handle_connection(
     }
 }
 
+/// Hard protocol cap on `max_tokens`: a hostile `1e18` would otherwise
+/// drive a multi-exabyte `vec![8; …]` allocation (process abort) before
+/// the engine ever saw the request. Real model configs bound sequences
+/// far lower (`cfg.model.max_seq`); this is the transport-level ceiling.
+const MAX_GENERATE_TOKENS: usize = 65_536;
+
+/// Request bodies larger than this are rejected with 413 before the body
+/// is read — `Content-Length: 10^18` must not size a buffer.
+const MAX_BODY_BYTES: usize = 16 << 20;
+
+/// Validate a `/generate` body into a `RequestSpec` without panicking on
+/// hostile input (`Json::at`/`as_*` panic on shape mismatches).
+fn parse_generate(body: &str, rid: u64) -> std::result::Result<RequestSpec, String> {
+    let req = parse(body).map_err(|e| format!("bad JSON: {e}"))?;
+    let prompt = token_array(req.get("prompt"), "prompt")?;
+    if prompt.is_empty() {
+        return Err("'prompt' must be a non-empty array of token ids".into());
+    }
+    let max_tokens = match req.get("max_tokens") {
+        Some(Json::Num(x)) if *x >= 1.0 && *x <= MAX_GENERATE_TOKENS as f64 => *x as usize,
+        Some(Json::Num(_)) => {
+            return Err(format!("'max_tokens' must be in 1..={MAX_GENERATE_TOKENS}"))
+        }
+        Some(_) => return Err("'max_tokens' must be a number >= 1".into()),
+        None => return Err("missing 'max_tokens'".into()),
+    };
+    let response = match req.get("response") {
+        Some(r) => token_array(Some(r), "response")?,
+        // No replay stream supplied: synthesise pad inputs.
+        None => vec![8; max_tokens.saturating_sub(1)],
+    };
+    Ok(RequestSpec {
+        rid,
+        prompt,
+        true_output_len: max_tokens,
+        response,
+    })
+}
+
+fn token_array(v: Option<&Json>, field: &str) -> std::result::Result<Vec<i32>, String> {
+    match v {
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|t| match t {
+                Json::Num(x) => Ok(*x as i32),
+                _ => Err(format!("'{field}' must contain only numeric token ids")),
+            })
+            .collect(),
+        Some(_) => Err(format!("'{field}' must be an array of token ids")),
+        None => Err(format!("missing '{field}' (array of token ids)")),
+    }
+}
+
 fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
@@ -184,6 +258,26 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
             content_length = v.trim().parse().unwrap_or(0);
         }
     }
+    if content_length > MAX_BODY_BYTES {
+        // Answer before bailing: an oversized body is a client error,
+        // not a reason to hang up silently. Then drain (bounded) so the
+        // client can read the 413 — dropping unread data makes the
+        // kernel RST the connection, discarding the queued response.
+        let _ = respond(
+            stream,
+            413,
+            &Json::obj(vec![("error", Json::str("body too large"))]),
+        );
+        let mut sink = [0u8; 8192];
+        let mut drained = 0usize;
+        while drained < MAX_BODY_BYTES {
+            match reader.read(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => drained += n,
+            }
+        }
+        anyhow::bail!("oversized body ({content_length} bytes)");
+    }
     let mut body = vec![0u8; content_length];
     if content_length > 0 {
         reader.read_exact(&mut body)?;
@@ -195,7 +289,10 @@ fn respond(stream: &mut TcpStream, code: u16, body: &Json) -> Result<()> {
     let body = body.to_string();
     let status = match code {
         200 => "200 OK",
+        400 => "400 Bad Request",
         404 => "404 Not Found",
+        413 => "413 Payload Too Large",
+        503 => "503 Service Unavailable",
         _ => "500 Internal Server Error",
     };
     let msg = format!(
@@ -251,6 +348,18 @@ pub fn get_stats(addr: &str) -> Result<Json> {
 mod tests {
     use super::*;
 
+    fn raw_post(addr: &str, path: &str, body: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let msg = format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(msg.as_bytes()).unwrap();
+        let mut buf = String::new();
+        BufReader::new(stream).read_to_string(&mut buf).unwrap();
+        buf
+    }
+
     #[test]
     fn http_roundtrip_with_echo_engine() {
         // Stand-in "engine": completes every job instantly.
@@ -287,5 +396,41 @@ mod tests {
         let _ = TcpStream::connect(&addr);
         srv.join().unwrap();
         engine.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_generate_gets_400_not_a_hangup() {
+        let (server, _job_rx) = HttpServer::bind("127.0.0.1:0", 2).unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let srv = std::thread::spawn(move || server.serve());
+
+        // Garbage body: must answer 400 + an error object, not close the
+        // connection with nothing.
+        let resp = raw_post(&addr, "/generate", "{this is not json");
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        assert!(resp.contains("error"), "got: {resp}");
+
+        // Well-formed JSON with a missing/empty prompt is still a 400
+        // (the old handler panicked on these shapes).
+        let resp = raw_post(&addr, "/generate", "{\"max_tokens\": 4}");
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        let resp = raw_post(&addr, "/generate", "{\"prompt\": [], \"max_tokens\": 4}");
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        let resp = raw_post(&addr, "/generate", "{\"prompt\": [1, 2]}");
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+
+        // An absurd max_tokens must be rejected, not allocated: 1e18
+        // would size a multi-exabyte response buffer.
+        let resp = raw_post(
+            &addr,
+            "/generate",
+            "{\"prompt\": [1, 2], \"max_tokens\": 1e18}",
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&addr);
+        srv.join().unwrap();
     }
 }

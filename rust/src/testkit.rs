@@ -3,8 +3,12 @@
 //! Wraps `MockBackend` + the virtual clock + `gen_requests` +
 //! `ArrivalProcess` into one-call scenario runners, so integration tests
 //! and fast sweeps describe *what* to serve (policy × load ×
-//! pool-fraction × prediction-noise) instead of re-assembling the engine
-//! by hand. Nothing here touches PJRT or the `artifacts/` directory: the
+//! pool-fraction × prediction-noise × replica count) instead of
+//! re-assembling the engine by hand. `run` serves one virtual-clock
+//! engine; `run_pool` serves the same workload through a
+//! `coordinator::dispatch::ReplicaPool` of N wall-clock engines under a
+//! dispatch policy (`dispatch_policy_comparison` sweeps the policies).
+//! Nothing here touches PJRT or the `artifacts/` directory: the
 //! embedded config and (optionally) synthetic probe weights make every
 //! scenario runnable from a fresh checkout.
 //!
@@ -22,12 +26,17 @@
 //! assert_eq!(report.summary.n, 120);
 //! ```
 
+use std::sync::mpsc;
+
 use crate::config::Config;
 use crate::coordinator::backend::CostModel;
-use crate::coordinator::{MockBackend, Policy, ServeConfig, ServeReport, ServingEngine};
+use crate::coordinator::dispatch::{DispatchPolicy, ReplicaPool};
+use crate::coordinator::engine::OnlineJob;
+use crate::coordinator::{ClockSpec, MockBackend, Policy, ServeConfig, ServeReport, ServingEngine};
 use crate::predictor::{OraclePredictor, Predictor, ProbePredictor};
 use crate::runtime::ProbeWeights;
-use crate::workload::{gen_requests, Arrival, ArrivalProcess};
+use crate::util::stats::Samples;
+use crate::workload::{gen_requests, Arrival, ArrivalProcess, RequestSpec};
 
 /// Arrival pattern of a scenario; materialised with the scenario seed.
 #[derive(Clone, Debug)]
@@ -106,6 +115,8 @@ pub struct Scenario {
     pub seed: u64,
     pub cost: CostModel,
     pub max_iterations: u64,
+    /// Engine replicas for the pool harness (`run_pool`); 1 elsewhere.
+    pub replicas: usize,
 }
 
 impl Scenario {
@@ -118,13 +129,18 @@ impl Scenario {
             predictor: PredictorSpec::oracle(),
             seed: 42,
             // The cost model the scheduler test-suite has always used:
-            // capacity ≈ 100 req/s on the default workload.
+            // capacity ≈ 100 req/s on the default workload. The per-slot
+            // decode term stays 0 here so the pinned suite numbers are
+            // batch-size invariant; opt in via `.cost(...)` to exercise
+            // large-batch dynamics.
             cost: CostModel {
                 decode_step: 1.0e-3,
+                decode_per_slot: 0.0,
                 prefill_chunk: 1.2e-3,
                 readout: 0.2e-3,
             },
             max_iterations: 2_000_000,
+            replicas: 1,
         }
     }
 
@@ -169,6 +185,12 @@ impl Scenario {
         self
     }
 
+    /// Serve over `n` engine replicas in `run_pool` (min 1).
+    pub fn replicas(mut self, n: usize) -> Scenario {
+        self.replicas = n.max(1);
+        self
+    }
+
     /// Materialise the arrival schedule for `n` requests.
     pub fn arrivals(&self) -> Vec<Arrival> {
         let process = match &self.load {
@@ -195,17 +217,25 @@ impl Scenario {
     pub fn build_engine(&self, cfg: &Config) -> ServingEngine<MockBackend> {
         let backend = MockBackend::new(cfg.model.batch_slots, cfg).with_cost(self.cost);
         let mut serve = self.serve_config(cfg);
-        serve.real_clock = false;
+        serve.clock = ClockSpec::Virtual;
         ServingEngine::new(cfg, serve, backend, self.predictor.build(cfg))
     }
 
-    /// Engine for the online (channel-fed) path. `run_online` stamps
-    /// admissions with wall time, so it must keep the real clock — a
-    /// virtual clock would jump backwards on late arrivals.
+    /// Engine for the online (channel-fed) path on the wall clock: live
+    /// admissions are stamped with real time as they arrive.
     pub fn build_online_engine(&self, cfg: &Config) -> ServingEngine<MockBackend> {
         let backend = MockBackend::new(cfg.model.batch_slots, cfg).with_cost(self.cost);
-        let serve = self.serve_config(cfg); // real_clock stays true
+        let serve = self.serve_config(cfg); // ClockSpec::Wall default
         ServingEngine::new(cfg, serve, backend, self.predictor.build(cfg))
+    }
+
+    /// Online engine on the *virtual* clock: deterministic, for parity
+    /// tests that pre-queue every job before driving (live admissions
+    /// are stamped with the current virtual time). Identical to
+    /// `build_engine` — the engine core no longer distinguishes replay
+    /// from channel admission, which is the point of the parity test.
+    pub fn build_online_engine_virtual(&self, cfg: &Config) -> ServingEngine<MockBackend> {
+        self.build_engine(cfg)
     }
 
     /// Serve the scenario to completion on the virtual clock.
@@ -222,6 +252,82 @@ impl Scenario {
         let report = engine.run(specs, arrivals).expect("scenario serve");
         (report, engine.into_backend())
     }
+
+    /// Serve the scenario through a `ReplicaPool` of `self.replicas`
+    /// wall-clock mock engines under the given dispatch policy. Arrivals
+    /// are paced in real time on the client side (use `Load::Burst` for
+    /// fast tests).
+    pub fn run_pool(&self, cfg: &Config, dispatch: DispatchPolicy) -> PoolReport {
+        let specs = gen_requests(cfg, self.n, self.seed);
+        let arrivals = self.arrivals();
+        let scenario = self.clone();
+        let cfg2 = cfg.clone();
+        let pool = ReplicaPool::start(self.replicas, dispatch, move |_i| {
+            scenario.build_online_engine(&cfg2)
+        });
+
+        let mut specs: Vec<Option<RequestSpec>> = specs.into_iter().map(Some).collect();
+        let t0 = std::time::Instant::now();
+        let mut waiters = Vec::with_capacity(specs.len());
+        for a in &arrivals {
+            let wait = a.at - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            let spec = specs[a.idx].take().expect("double dispatch");
+            let (done_tx, done_rx) = mpsc::channel();
+            pool.submit(OnlineJob {
+                spec,
+                done: done_tx,
+            })
+            .expect("pool submit");
+            waiters.push(done_rx);
+        }
+
+        let mut latency = Samples::new();
+        let mut ttft = Samples::new();
+        let mut n_completed = 0usize;
+        for done_rx in waiters {
+            if let Ok(done) = done_rx.recv() {
+                n_completed += 1;
+                latency.push(done.latency);
+                ttft.push(done.ttft);
+            }
+        }
+        let per_replica_n = pool
+            .join()
+            .iter()
+            .map(|r| r.as_ref().map(|rep| rep.summary.n).unwrap_or(0))
+            .collect();
+        PoolReport {
+            dispatch: dispatch.name().to_string(),
+            n_completed,
+            mean_latency: latency.mean(),
+            mean_ttft: ttft.mean(),
+            per_replica_n,
+        }
+    }
+}
+
+/// Aggregate outcome of one `Scenario::run_pool` serve.
+#[derive(Clone, Debug)]
+pub struct PoolReport {
+    pub dispatch: String,
+    pub n_completed: usize,
+    pub mean_latency: f64,
+    pub mean_ttft: f64,
+    /// Requests served per replica, replica order.
+    pub per_replica_n: Vec<usize>,
+}
+
+/// Run one scenario under each dispatch policy (same workload, fresh
+/// replica pool per policy); returns reports in policy order.
+pub fn dispatch_policy_comparison(
+    cfg: &Config,
+    base: &Scenario,
+    policies: &[DispatchPolicy],
+) -> Vec<PoolReport> {
+    policies.iter().map(|&p| base.run_pool(cfg, p)).collect()
 }
 
 /// Run a policy × load grid from a base scenario; returns
@@ -333,5 +439,41 @@ mod tests {
     fn burst_load_arrives_at_zero() {
         let s = Scenario::new(Policy::Fcfs).n(5).load(Load::Burst);
         assert!(s.arrivals().iter().all(|a| a.at == 0.0));
+    }
+
+    #[test]
+    fn pool_scenario_completes_on_two_replicas() {
+        let cfg = cfg();
+        let report = Scenario::new(Policy::Trail { c: 0.8 })
+            .n(16)
+            .load(Load::Burst)
+            .replicas(2)
+            .run_pool(&cfg, DispatchPolicy::RoundRobin);
+        assert_eq!(report.n_completed, 16);
+        assert_eq!(report.per_replica_n, vec![8, 8]);
+        assert!(report.mean_latency.is_finite());
+    }
+
+    #[test]
+    fn dispatch_comparison_covers_every_policy() {
+        let cfg = cfg();
+        let base = Scenario::new(Policy::Trail { c: 0.8 })
+            .n(12)
+            .load(Load::Burst)
+            .replicas(2);
+        let rows = dispatch_policy_comparison(
+            &cfg,
+            &base,
+            &[
+                DispatchPolicy::RoundRobin,
+                DispatchPolicy::JoinShortestQueue,
+                DispatchPolicy::LeastPredictedWork,
+            ],
+        );
+        assert_eq!(rows.len(), 3);
+        for row in &rows {
+            assert_eq!(row.n_completed, 12, "{} lost requests", row.dispatch);
+            assert_eq!(row.per_replica_n.iter().sum::<usize>(), 12);
+        }
     }
 }

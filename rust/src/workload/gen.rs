@@ -108,7 +108,12 @@ fn observed_class(
     obs.clamp(0, bins.n_bins as i64 - 1) as usize
 }
 
-fn response_token(rng: &mut SplitMix64, remaining: i64, m: &ModelConfig, w: &WorkloadConfig) -> i32 {
+fn response_token(
+    rng: &mut SplitMix64,
+    remaining: i64,
+    m: &ModelConfig,
+    w: &WorkloadConfig,
+) -> i32 {
     let content = m.vocab as i64 - m.first_content_id as i64;
     if rng.next_f64() < w.resp_noise_p {
         return (m.first_content_id as i64 + rng.next_range(0, content - 1)) as i32;

@@ -1,0 +1,136 @@
+//! Seams of the step-driven engine API: `run`/`run_online` parity over
+//! the same `drive` core, `step()` idempotence when nothing is
+//! schedulable, and serving directly through `admit` + `step` without any
+//! driver loop. Engines come from `trail::testkit` — mock backend, no
+//! PJRT, no artifacts.
+
+use std::sync::mpsc;
+
+use trail::config::Config;
+use trail::coordinator::engine::OnlineJob;
+use trail::coordinator::Policy;
+use trail::testkit::{Load, PredictorSpec, Scenario};
+use trail::workload::gen_requests;
+
+fn cfg() -> Config {
+    Config::load_default().expect("load_default")
+}
+
+#[test]
+fn run_and_run_online_agree_on_virtual_clock() {
+    // Same burst workload through both thin wrappers: the replay path
+    // (`run` → ReplaySource) and the channel path (`run_online` →
+    // ChannelSource, all jobs pre-queued) must produce bit-identical
+    // virtual-clock metrics, because both are the same `drive`/`step`
+    // core and burst admission stamps every arrival at t = 0.
+    let cfg = cfg();
+    let scenario = Scenario::new(Policy::Trail { c: 0.8 })
+        .n(24)
+        .load(Load::Burst)
+        .predictor(PredictorSpec::oracle());
+    let replay = scenario.run(&cfg);
+
+    let specs = gen_requests(&cfg, 24, scenario.seed);
+    let (tx, rx) = mpsc::channel::<OnlineJob>();
+    let mut waiters = Vec::new();
+    for spec in specs {
+        let (done_tx, done_rx) = mpsc::channel();
+        tx.send(OnlineJob {
+            spec,
+            done: done_tx,
+        })
+        .unwrap();
+        waiters.push(done_rx);
+    }
+    drop(tx); // close channel → engine drains and returns
+    let mut engine = scenario.build_online_engine_virtual(&cfg);
+    let online = engine.run_online(rx).expect("online run");
+
+    assert_eq!(replay.summary.n, online.summary.n);
+    assert_eq!(replay.n_iterations, online.n_iterations);
+    assert_eq!(replay.summary.preemptions, online.summary.preemptions);
+    assert_eq!(replay.summary.discards, online.summary.discards);
+    assert!((replay.summary.mean_latency - online.summary.mean_latency).abs() < 1e-12);
+    assert!((replay.summary.mean_ttft - online.summary.mean_ttft).abs() < 1e-12);
+    assert!((replay.wall_time - online.wall_time).abs() < 1e-12);
+    for done_rx in waiters {
+        let done = done_rx.recv().expect("completion");
+        assert!(done.latency >= 0.0);
+        assert!(done.ttft <= done.latency + 1e-9);
+    }
+}
+
+#[test]
+fn step_is_an_idempotent_noop_without_schedulable_work() {
+    let cfg = cfg();
+    let mut engine = Scenario::new(Policy::Fcfs).build_engine(&cfg);
+    let before = engine.status();
+    for _ in 0..3 {
+        let out = engine.step().expect("step");
+        assert!(!out.worked);
+        assert_eq!(out.cost, 0.0);
+        assert_eq!(out.now, 0.0, "virtual clock must not move on a no-op");
+        assert!(out.finished.is_empty());
+    }
+    let after = engine.status();
+    assert_eq!(before.n_iterations, after.n_iterations);
+    assert_eq!(after.live, 0);
+    assert_eq!(after.resident, 0);
+    assert_eq!(after.kv_used_tokens, 0);
+}
+
+#[test]
+fn direct_step_loop_serves_admitted_requests() {
+    // The step-driven API with no driver loop at all: admit everything,
+    // then step until the engine drains.
+    let cfg = cfg();
+    let mut engine = Scenario::new(Policy::Trail { c: 0.8 }).build_engine(&cfg);
+    let specs = gen_requests(&cfg, 8, 77);
+    let mut expected: Vec<u64> = specs.iter().map(|s| s.rid).collect();
+    for spec in specs {
+        engine.admit(spec, Some(0.0));
+    }
+    let status = engine.status();
+    assert_eq!(status.live, 8);
+    assert_eq!(status.unfinished(), 8);
+    assert!(
+        status.pred_remaining_sum > 0.0,
+        "oracle predictions should be live at admission"
+    );
+
+    let mut finished: Vec<u64> = Vec::new();
+    let mut guard = 0u64;
+    while engine.status().live > 0 {
+        let out = engine.step().expect("step");
+        finished.extend(out.finished.iter().map(|f| f.rid));
+        guard += 1;
+        assert!(guard < 200_000, "step loop stalled");
+    }
+    finished.sort_unstable();
+    expected.sort_unstable();
+    assert_eq!(finished, expected);
+
+    let status = engine.status();
+    assert_eq!(status.unfinished(), 0);
+    assert_eq!(status.kv_used_tokens, 0, "all KV freed after drain");
+    assert!(status.pred_remaining_sum <= 1e-9);
+    assert!(engine.now() > 0.0, "virtual clock advanced while serving");
+}
+
+#[test]
+fn step_after_drain_stays_idle() {
+    let cfg = cfg();
+    let mut engine = Scenario::new(Policy::Fcfs).build_engine(&cfg);
+    for spec in gen_requests(&cfg, 3, 5) {
+        engine.admit(spec, Some(0.0));
+    }
+    while engine.status().live > 0 {
+        engine.step().expect("step");
+    }
+    let iters = engine.status().n_iterations;
+    let now = engine.now();
+    let out = engine.step().expect("idle step");
+    assert!(!out.worked);
+    assert_eq!(engine.status().n_iterations, iters);
+    assert_eq!(engine.now(), now);
+}
