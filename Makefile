@@ -5,7 +5,7 @@
 # (`Config::embedded_default`) and deterministic synthetic probe weights
 # when the `artifacts/` directory is absent.
 
-.PHONY: build test bench-sim bench-dispatch fmt artifacts clean
+.PHONY: build test bench-sim bench-dispatch bench-sim-json bench-sim-diff bench-sim-refresh fmt artifacts clean
 
 build:
 	cargo build --release
@@ -22,6 +22,29 @@ bench-sim:
 # pool (examples/replica_pool.rs). Hermetic and fast (~seconds).
 bench-dispatch:
 	cargo run --release --example replica_pool -- --n 24 --rate 200 --replicas 2 --dispatch jsq
+
+# simlab: deterministic virtual-time co-simulation sweep (FCFS vs SRPT
+# vs TRAIL x {steady, bursty, multi-tenant, skewed} x {2, 4} replicas,
+# migration on). Runs the full grid twice and `cmp`s the two
+# BENCH_*.json files byte-for-byte — the hard determinism gate.
+# Hermetic: embedded config, mock backend, virtual clocks, no threads.
+bench-sim-json:
+	cargo run --release --bin trail-serve -- sim --out BENCH_sim.json
+	cargo run --release --bin trail-serve -- sim --out BENCH_sim.run2.json
+	cmp BENCH_sim.json BENCH_sim.run2.json
+	rm -f BENCH_sim.run2.json
+
+# Diff the sweep against the checked-in baseline. A diff means a real
+# behaviour change: intentional -> `make bench-sim-refresh` and commit
+# the new baseline in the same PR; otherwise it is a regression.
+bench-sim-diff: bench-sim-json
+	diff -u benchmarks/BENCH_seed.json BENCH_sim.json
+
+# Refresh the checked-in simlab baseline after an *intentional*
+# scheduler / cost-model / scenario change. Commit the resulting diff
+# in the same PR that caused it (see docs/simlab.md).
+bench-sim-refresh:
+	cargo run --release --bin trail-serve -- sim --out benchmarks/BENCH_seed.json
 
 fmt:
 	cargo fmt

@@ -1,0 +1,30 @@
+//! Minimal simlab tour: co-simulate one bursty workload over FCFS vs
+//! TRAIL on 2 virtual-clock replicas and print the comparative rows.
+//!
+//! ```text
+//! cargo run --release --example sim_sweep
+//! ```
+//!
+//! Everything is hermetic (embedded config, mock backend, oracle
+//! predictions) and deterministic — run it twice and the numbers are
+//! bit-identical. The full grid lives behind `trail-serve sim` /
+//! `make bench-sim-json`.
+
+use trail::config::Config;
+use trail::coordinator::Policy;
+use trail::sim::{builtin, run_sweep, BenchReport, SweepConfig};
+
+fn main() {
+    // Embedded config, never artifacts/ — sim numbers are pinned to it.
+    let cfg = Config::embedded_default();
+    let sweep = SweepConfig {
+        scenarios: vec![builtin("bursty").unwrap().n(120), builtin("skewed").unwrap().n(120)],
+        policies: vec![Policy::Fcfs, Policy::Trail { c: 0.8 }],
+        replica_counts: vec![2],
+        migration: true,
+    };
+    let report: BenchReport = run_sweep(&cfg, &sweep).expect("sweep");
+    print!("{}", report.render_table());
+    let migrations: u64 = report.rows.iter().map(|r| r.migrations).sum();
+    println!("total cross-replica migrations: {migrations}");
+}

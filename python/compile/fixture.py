@@ -1,0 +1,33 @@
+"""Write the cross-language workload fixture embedded in the Rust crate.
+
+``rust/src/workload/golden_fixture.json`` pins the SplitMix64 stream and
+the first requests of the seed-12345 generator stream against this
+Python reference — the same vectors ``aot.py`` puts in
+``artifacts/golden.json``, but checked in, so the parity test runs from
+a fresh checkout with no ``make artifacts`` (ROADMAP "Python↔Rust
+goldens" follow-on).
+
+    cd python && python -m compile.fixture
+"""
+
+import json
+import os
+
+from .workload import golden_vectors
+
+OUT = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "src", "workload", "golden_fixture.json"
+)
+
+
+def main() -> None:
+    vectors = golden_vectors()
+    path = os.path.normpath(OUT)
+    with open(path, "w") as f:
+        json.dump(vectors, f, sort_keys=True, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,805 @@
+"""Reference mirror of the Rust `sim` subsystem (``rust/src/sim/``).
+
+A line-faithful transcription of the deterministic co-simulation path:
+``MockBackend`` cost accrual, ``KvManager`` accounting,
+``ServingEngine::step`` (select_targets / ensure_resident / resolve_oom /
+chunked prefill / decode / finish), the ``OraclePredictor`` (exact
+refinement), ``TraceWorkload`` generation, the ``SimDriver`` event loop
+with cross-replica migration, and the byte-format of
+``BenchReport::to_json_string``.
+
+Purpose: cross-language pinning of ``benchmarks/BENCH_seed.json``. The
+checked-in baseline is generated here and must match what
+``trail-serve sim`` (the Rust binary) produces bit-for-bit — every
+arithmetic operation below mirrors the Rust order of operations, all
+draws come from the shared SplitMix64 mirror, and floats are IEEE
+doubles in both languages. (The only platform sensitivity is libm
+``exp``/``log`` in the workload generator; regenerate with
+``make bench-sim-refresh`` if a libm ever disagrees.)
+
+Usage:
+    cd python && python3 simref.py sweep --out ../benchmarks/BENCH_seed.json
+"""
+
+import math
+import sys
+from dataclasses import replace
+
+from compile.config import BINS, MODEL, WORKLOAD
+from compile.prng import SplitMix64, normal_from_uniform
+
+# ---------------------------------------------------------------------------
+# Engine constants (rust/src/coordinator/{engine,backend}.rs)
+# ---------------------------------------------------------------------------
+
+MAX_SEQ = MODEL.max_seq                # 320
+CHUNK = MODEL.prefill_chunk            # 16
+PREFILL_CHUNKS_PER_ITER = 2
+EVICT_MARGIN = BINS.width / 2.0        # 12.8
+
+# CostModel::default()
+COST_DECODE_STEP = 2.0e-3
+COST_DECODE_PER_SLOT = 0.25e-3
+COST_PREFILL_CHUNK = 2.5e-3
+COST_READOUT = 0.3e-3
+
+WAITING, PREFILLING, RUNNING, PREEMPTED, DISCARDED, FINISHED = range(6)
+
+
+class Req:
+    __slots__ = (
+        "rid", "plen", "n_out", "tenant", "phase", "slot", "prefilled",
+        "generated", "kv_written", "initial_pred", "pred_remaining",
+        "arrival", "first_token_at", "finished_at", "n_preemptions",
+        "n_discards", "n_migrations",
+    )
+
+    def __init__(self, rid, plen, n_out, tenant, arrival):
+        self.rid = rid
+        self.plen = plen
+        self.n_out = n_out
+        self.tenant = tenant
+        self.phase = WAITING
+        self.slot = None
+        self.prefilled = 0
+        self.generated = 0
+        self.kv_written = 0
+        # OraclePredictor::init_request (noise 0)
+        self.initial_pred = float(n_out)
+        self.pred_remaining = float(n_out)
+        self.arrival = arrival
+        self.first_token_at = None
+        self.finished_at = None
+        self.n_preemptions = 0
+        self.n_discards = 0
+        self.n_migrations = 0
+
+    def prefill_target(self):
+        return self.plen + max(self.generated - 1, 0)
+
+    def prefill_done(self):
+        return self.kv_written >= self.prefill_target()
+
+    def preemptable(self, c):
+        if self.generated == 0:
+            return True
+        return self.generated < math.floor(c * self.initial_pred)
+
+    def done(self):
+        return self.generated >= self.n_out
+
+
+# Policies: ("fcfs",), ("sjf",), ("trail", c). Rank mirrors
+# rust/src/coordinator/policy.rs — tuple (0 locked / 1 unlocked, key,
+# tie, rid); lexicographic tuple order == Rank::cmp.
+def rank(policy, r):
+    tie = r.arrival
+    if policy[0] == "fcfs":
+        locked = r.phase in (RUNNING, PREFILLING, PREEMPTED)
+        key = r.arrival
+    elif policy[0] == "sjf":
+        locked = r.phase != WAITING
+        key = r.pred_remaining
+    else:  # trail
+        locked = (not r.preemptable(policy[1])) and r.phase != WAITING
+        key = r.pred_remaining
+    return (0 if locked else 1, key, tie, r.rid)
+
+
+def policy_preemptive(policy):
+    return policy[0] == "trail"
+
+
+def policy_c(policy):
+    return policy[1] if policy[0] == "trail" else 1.0
+
+
+def policy_name(policy):
+    if policy[0] == "fcfs":
+        return "fcfs"
+    if policy[0] == "sjf":
+        return "sjf-prompt"
+    c = policy[1]
+    return "trail-c" + (str(int(c)) if c == int(c) else repr(c))
+
+
+class Kv:
+    """rust/src/coordinator/kv.rs"""
+
+    def __init__(self, n_slots, pool_tokens):
+        self.n_slots = n_slots
+        self.pool_tokens = pool_tokens
+        self.slots = [None] * n_slots
+        self.charged = [0] * n_slots
+
+    def used_tokens(self):
+        return sum(self.charged)
+
+    def free_slot_available(self):
+        return any(s is None for s in self.slots)
+
+    def alloc(self, rid):
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = rid
+                self.charged[i] = 0
+                return i
+        return None
+
+    def charge(self, slot, rid, tokens):
+        assert self.slots[slot] == rid, "slot not owned"
+        assert tokens <= MAX_SEQ
+        self.charged[slot] = tokens
+
+    def free(self, slot, rid):
+        assert self.slots[slot] == rid, "slot not owned"
+        self.slots[slot] = None
+        self.charged[slot] = 0
+
+    def fits(self, extra):
+        return self.used_tokens() + extra <= self.pool_tokens
+
+
+class Engine:
+    """Virtual-clock ServingEngine<MockBackend> with the oracle predictor
+    (multiplicative log-normal noise on the initial estimate, exact
+    refinement per token — OraclePredictor{noise, refine_exact, seed})."""
+
+    def __init__(self, policy, slots, pool_tokens, noise=0.4, pred_seed=7,
+                 max_iterations=2_000_000):
+        self.policy = policy
+        self.slots = slots
+        self.kv = Kv(slots, pool_tokens)
+        self.noise = noise
+        self.pred_rng = SplitMix64(pred_seed)
+        self.now = 0.0
+        self.reqs = []
+        self.finished_rids = []
+        self.pending_cost = 0.0
+        self.n_iter = 0
+        self.max_iterations = max_iterations
+        # metrics
+        self.lat = []
+        self.ttft = []
+        self.n_finished = 0
+        self.m_preemptions = 0
+        self.m_discards = 0
+        self.m_migrations = 0
+        self.peak_mem = 0
+
+    # --- clock ---
+    def sync_clock(self, at):
+        if at > self.now:
+            self.now = at
+
+    # --- status ---
+    def any_schedulable(self):
+        return any(r.phase != FINISHED for r in self.reqs)
+
+    def live(self):
+        return sum(1 for r in self.reqs if r.phase != FINISHED)
+
+    def resident(self):
+        return sum(1 for r in self.reqs if r.phase != FINISHED and r.slot is not None)
+
+    def pred_sum(self):
+        s = 0.0
+        for r in self.reqs:
+            if r.phase != FINISHED:
+                s += max(r.pred_remaining, 0.0)
+        return s
+
+    def admit(self, req):
+        # OraclePredictor::init_request (one normal draw per admission,
+        # in admission order, from this engine's predictor stream).
+        if self.noise != 0.0:
+            z = normal_from_uniform(self.pred_rng.next_f64())
+            est = max(float(req.n_out) * math.exp(self.noise * z), 1.0)
+            req.initial_pred = est
+            req.pred_remaining = est
+        self.reqs.append(req)
+
+    # --- migration (rust ServingEngine::take_migratable) ---
+    def take_migratable(self):
+        pick = None  # (resident, rank, idx)
+        for i, r in enumerate(self.reqs):
+            if r.phase == FINISHED:
+                continue
+            rk = rank(self.policy, r)
+            if rk[0] == 0:  # locked
+                continue
+            res = r.slot is not None
+            if pick is None:
+                better = True
+            else:
+                pres, prank, _ = pick
+                if res != pres:
+                    better = not res
+                else:
+                    better = rk > prank
+            if better:
+                pick = (res, rk, i)
+        if pick is None:
+            return None
+        idx = pick[2]
+        # Vec::swap_remove
+        if idx == len(self.reqs) - 1:
+            r = self.reqs.pop()
+        else:
+            r = self.reqs[idx]
+            self.reqs[idx] = self.reqs.pop()
+        if r.slot is not None:
+            self.kv.free(r.slot, r.rid)
+            r.slot = None
+        r.prefilled = 0
+        r.kv_written = 0
+        r.phase = WAITING if r.generated == 0 else DISCARDED
+        r.n_migrations += 1
+        return r
+
+    def admit_migrated(self, r):
+        self.reqs.append(r)
+
+    # --- step (rust step/step_inner) ---
+    def step(self):
+        if not self.any_schedulable():
+            return False, []
+        if self.max_iterations > 0 and self.n_iter >= self.max_iterations:
+            raise RuntimeError("max_iterations exceeded — scheduler stall?")
+        reqs = self.reqs
+        self.resolve_oom(reqs)
+        target = self.select_targets(reqs)
+
+        # ---- prefill budget ----
+        prefill_done_now = []
+        budget = PREFILL_CHUNKS_PER_ITER
+        chunks_issued = 0
+        for idx in target:
+            if budget == 0:
+                break
+            r = reqs[idx]
+            if r.prefill_done():
+                continue
+            while budget > 0 and not r.prefill_done():
+                tokens_len = r.prefill_target()
+                start = r.prefilled
+                nvalid = min(tokens_len - start, CHUNK)
+                if not self.kv.fits(nvalid):
+                    break
+                self.pending_cost += COST_PREFILL_CHUNK
+                r.prefilled += nvalid
+                r.kv_written = r.prefilled
+                self.kv.charge(r.slot, r.rid, r.kv_written)
+                budget -= 1
+                chunks_issued += 1
+            self.kv.charge(r.slot, r.rid, r.kv_written)
+            if r.prefill_done():
+                prefill_done_now.append(idx)
+
+        # ---- decode ----
+        decoding = []
+        for idx in target:
+            r = reqs[idx]
+            if (
+                r.phase == RUNNING
+                and r.prefill_done()
+                and r.generated >= 1
+                and idx not in prefill_done_now
+            ):
+                decoding.append(idx)
+        if decoding:
+            self.pending_cost += COST_DECODE_STEP + COST_DECODE_PER_SLOT * len(decoding)
+
+        # ---- readout + clock ----
+        stepped = bool(decoding) or bool(prefill_done_now)
+        if stepped:
+            self.pending_cost += COST_READOUT
+        cost = self.pending_cost
+        self.pending_cost = 0.0
+        self.now += cost
+        now = self.now
+
+        if stepped:
+            for idx in prefill_done_now:
+                r = reqs[idx]
+                if r.generated == 0:
+                    r.generated = 1
+                    r.first_token_at = now
+                self.kv.charge(r.slot, r.rid, r.kv_written)
+                self.finish_if_done(r, now)
+            for idx in decoding:
+                r = reqs[idx]
+                r.kv_written = max(r.kv_written, r.plen + r.generated - 1 + 1)
+                r.generated += 1
+                r.pred_remaining = max(float(r.n_out - r.generated), 0.0)
+                self.kv.charge(r.slot, r.rid, r.kv_written)
+                self.finish_if_done(r, now)
+
+        used = self.kv.used_tokens()
+        if used > self.peak_mem:
+            self.peak_mem = used
+        self.n_iter += 1
+
+        finished = []
+        for rid in self.finished_rids:
+            r = next(r for r in reqs if r.rid == rid)
+            finished.append((rid, r.finished_at - r.arrival, r.first_token_at - r.arrival, r.generated))
+        self.finished_rids = []
+        self.reqs = [r for r in reqs if r.phase != FINISHED]
+        worked = stepped or chunks_issued > 0
+        return worked, finished
+
+    def finish_if_done(self, r, now):
+        if r.done() and r.phase != FINISHED:
+            r.finished_at = now
+            r.phase = FINISHED
+            if r.slot is not None:
+                self.kv.free(r.slot, r.rid)
+                r.slot = None
+            # Metrics::observe_finish
+            self.n_finished += 1
+            self.lat.append(r.finished_at - r.arrival)
+            self.ttft.append(r.first_token_at - r.arrival)
+            self.m_preemptions += r.n_preemptions
+            self.m_discards += r.n_discards
+            self.m_migrations += r.n_migrations
+            self.finished_rids.append(r.rid)
+
+    def resolve_oom(self, reqs):
+        c = policy_c(self.policy)
+        while not self.kv.fits(0):
+            cands = [
+                (i, r)
+                for i, r in enumerate(reqs)
+                if r.slot is not None and r.phase != FINISHED and r.preemptable(c)
+            ]
+            if not cands:
+                cands = [
+                    (i, r)
+                    for i, r in enumerate(reqs)
+                    if r.slot is not None and r.phase != FINISHED
+                ]
+            if not cands:
+                break
+            _, r = max(cands, key=lambda t: rank(self.policy, t[1]))
+            self.kv.free(r.slot, r.rid)
+            r.slot = None
+            r.phase = DISCARDED
+            r.prefilled = 0
+            r.kv_written = 0
+            r.n_discards += 1
+
+    def select_targets(self, reqs):
+        order = [i for i in range(len(reqs)) if reqs[i].phase != FINISHED]
+        order.sort(key=lambda i: rank(self.policy, reqs[i]))
+        target = []
+        chosen = [False] * len(reqs)
+        for idx in order:
+            if len(target) >= self.slots:
+                break
+            if self.ensure_resident(reqs, idx, chosen):
+                chosen[idx] = True
+                target.append(idx)
+        for i, r in enumerate(reqs):
+            if not chosen[i] and r.phase == RUNNING:
+                r.phase = PREEMPTED
+                r.n_preemptions += 1
+            elif chosen[i] and r.phase in (PREEMPTED, WAITING, DISCARDED):
+                r.phase = RUNNING if r.prefill_done() else PREFILLING
+            elif chosen[i] and r.phase == PREFILLING and r.prefill_done():
+                r.phase = RUNNING
+        return target
+
+    def ensure_resident(self, reqs, idx, chosen):
+        if reqs[idx].slot is not None:
+            return True
+        c = policy_c(self.policy)
+        need = min(reqs[idx].prefill_target(), MAX_SEQ)
+        while True:
+            have_slot = self.kv.free_slot_available()
+            have_mem = self.kv.fits(min(need, CHUNK * 2))
+            if have_slot and have_mem:
+                break
+            victims = [
+                (i, r)
+                for i, r in enumerate(reqs)
+                if not chosen[i]
+                and r.slot is not None
+                and r.phase != FINISHED
+                and policy_preemptive(self.policy)
+                and r.preemptable(c)
+            ]
+            if not victims:
+                return False
+            _, vreq = max(victims, key=lambda t: rank(self.policy, t[1]))
+            vr = rank(self.policy, vreq)
+            cr = rank(self.policy, reqs[idx])
+            if not vr > cr:
+                return False
+            if vr[0] == 1 and cr[0] == 1 and vr[1] - cr[1] < EVICT_MARGIN:
+                return False
+            self.kv.free(vreq.slot, vreq.rid)
+            vreq.slot = None
+            vreq.phase = DISCARDED
+            vreq.prefilled = 0
+            vreq.kv_written = 0
+            vreq.n_discards += 1
+        slot = self.kv.alloc(reqs[idx].rid)
+        assert slot is not None
+        reqs[idx].slot = slot
+        reqs[idx].prefilled = 0
+        reqs[idx].kv_written = 0
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Trace workload (rust/src/workload/trace.rs)
+# ---------------------------------------------------------------------------
+
+def tenant_arrivals(rate, phases, n, rng):
+    out = []
+    t = 0.0
+    phase_idx = 0
+    if not phases:
+        cur_rate, phase_left = rate, float("inf")
+    else:
+        cur_rate, phase_left = rate * phases[0][0], phases[0][1]
+    while len(out) < n:
+        e = -math.log(1.0 - rng.next_f64())
+        while True:
+            if cur_rate > 0.0 and e <= cur_rate * phase_left:
+                dt = e / cur_rate
+                t += dt
+                phase_left -= dt
+                out.append(t)
+                break
+            e -= cur_rate * phase_left
+            t += phase_left
+            phase_idx = (phase_idx + 1) % len(phases)
+            phase_left = phases[phase_idx][1]
+            cur_rate = rate * phases[phase_idx][0]
+    return out
+
+
+class TenantGen:
+    """WorkloadGen mirror, reduced to (plen, n_out): the oracle co-sim
+    never reads token values, and the per-request child stream is split
+    off the master, so skipping token draws does not perturb anything."""
+
+    def __init__(self, seed, mu_shift):
+        self.master = SplitMix64(seed)
+        self.w = replace(WORKLOAD, lognormal_mu=WORKLOAD.lognormal_mu + mu_shift)
+
+    def next_request(self):
+        rng = self.master.split()
+        # sample_output_len
+        z = normal_from_uniform(rng.next_f64())
+        x = math.exp(self.w.lognormal_mu + self.w.lognormal_sigma * z)
+        n = int(x + 0.5)
+        n_out = min(max(n, self.w.min_output), self.w.max_output)
+        # observed_class draws one uniform (value unused here)
+        rng.next_f64()
+        plen = rng.next_range(self.w.min_prompt, self.w.max_prompt)
+        return plen, n_out
+
+
+def generate_trace(tenants, n, seed):
+    """tenants: list of (rate, mu_shift, phases) — phases: [(mult, dur)]."""
+    master = SplitMix64(seed)
+    streams = []
+    for (rate, mu_shift, phases) in tenants:
+        spec_seed = master.next_u64()
+        arr_rng = SplitMix64(master.next_u64())
+        times = tenant_arrivals(rate, phases, n, arr_rng)
+        streams.append([times, TenantGen(spec_seed, mu_shift), 0])
+    out = []
+    while len(out) < n:
+        best = None
+        for ti, (times, _, pos) in enumerate(streams):
+            at = times[pos]
+            if best is None or at < best[0]:
+                best = (at, ti)
+        at, ti = best
+        stream = streams[ti]
+        stream[2] += 1
+        plen, n_out = stream[1].next_request()
+        out.append((at, ti, len(out), plen, n_out))  # (at, tenant, rid, plen, n_out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Driver (rust/src/sim/driver.rs)
+# ---------------------------------------------------------------------------
+
+def pick_replica(dispatch, engines, rr):
+    if dispatch == "rr":
+        return rr % len(engines)
+    if dispatch == "jsq":
+        return min(range(len(engines)), key=lambda i: (engines[i].live(), i))
+    # least-work (unseen is always 0 on the co-sim path)
+    return min(
+        range(len(engines)),
+        key=lambda i: (engines[i].pred_sum(), engines[i].live(), i),
+    )
+
+
+def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, noise=0.4):
+    engines = [Engine(policy, slots, pool_tokens, noise=noise) for _ in range(replicas)]
+    n_total = len(trace)
+    nxt = 0
+    rr = 0
+    n_migrations = 0
+    lat = []
+    ttft = []
+    finished = 0
+    stalled = [False] * replicas
+
+    def rebalance(now):
+        nonlocal n_migrations
+        moved = False
+        while True:
+            idle = next((j for j in range(replicas) if not engines[j].any_schedulable()), None)
+            if idle is None:
+                break
+            donors = []  # (waiting, k)
+            for k in range(replicas):
+                if k == idle:
+                    continue
+                waiting = engines[k].live() - engines[k].resident()
+                if waiting <= 0 or (engines[k].resident() == 0 and waiting < 2):
+                    continue
+                donors.append((waiting, k))
+            donors.sort(key=lambda t: (-t[0], t[1]))
+            migrated = False
+            for _, k in donors:
+                req = engines[k].take_migratable()
+                if req is None:
+                    continue
+                engines[idle].sync_clock(now)
+                engines[idle].admit_migrated(req)
+                stalled[idle] = False
+                stalled[k] = False
+                n_migrations += 1
+                moved = True
+                migrated = True
+                break
+            if not migrated:
+                break
+        return moved
+
+    while True:
+        active = None
+        for i, e in enumerate(engines):
+            if stalled[i] or not e.any_schedulable():
+                continue
+            now = e.now
+            if active is None or now < active[0]:
+                active = (now, i)
+
+        if nxt < n_total and (active is None or trace[nxt][0] <= active[0]):
+            at, tenant, rid, plen, n_out = trace[nxt]
+            nxt += 1
+            idx = pick_replica(dispatch, engines, rr)
+            rr += 1
+            engines[idx].sync_clock(at)
+            engines[idx].admit(Req(rid, plen, n_out, tenant, at))
+            stalled[idx] = False
+            continue
+
+        if active is None:
+            if any(e.any_schedulable() for e in engines):
+                now = max(0.0, *[e.now for e in engines])
+                if migration and rebalance(now):
+                    continue
+                raise RuntimeError("co-sim stalled")
+            break
+
+        now, i = active
+        if migration and rebalance(now):
+            continue
+        worked, fin = engines[i].step()
+        if not worked:
+            stalled[i] = True
+        for (_, l, t, _) in fin:
+            finished += 1
+            lat.append(l)
+            ttft.append(t)
+
+    assert finished == n_total, f"lost requests: {finished}/{n_total}"
+    makespan = max(e.now for e in engines)
+    return {
+        "n": finished,
+        "lat": lat,
+        "ttft": ttft,
+        "preemptions": sum(e.m_preemptions for e in engines),
+        "discards": sum(e.m_discards for e in engines),
+        "migrations": n_migrations,
+        "kv_peak": max(e.peak_mem for e in engines),
+        "per_replica": [e.n_finished for e in engines],
+        "makespan": makespan,
+        "iters": sum(e.n_iter for e in engines),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Scenarios (rust/src/sim/scenario.rs builtins — keep in sync!)
+# ---------------------------------------------------------------------------
+
+def builtin_scenarios():
+    # name -> (tenants, n, seed, dispatch, slots, pool_frac, noise)
+    # Keep in sync with rust/src/sim/scenario.rs `builtin`.
+    return {
+        "steady": ([(170.0, 0.0, [])], 500, 9001, "jsq", 128, 0.55, 0.4),
+        "bursty": ([(45.0, 0.0, [(4.0, 2.5), (0.2, 5.5)])], 500, 9001, "jsq", 128, 0.55, 0.4),
+        "multi-tenant": (
+            [
+                (90.0, -0.3, []),
+                (20.0, 0.9, []),
+                (40.0, 0.0, [(2.0, 1.0), (0.5, 3.0)]),
+            ],
+            500, 9001, "jsq", 128, 0.55, 0.4,
+        ),
+        "skewed": (
+            [
+                (14.0, 1.0, [(4.0, 1.5), (0.1, 4.5)]),
+                (26.0, -0.5, []),
+            ],
+            240, 9001, "rr", 16, 0.35, 0.8,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Report serialisation (rust/src/sim/report.rs — byte-format mirror)
+# ---------------------------------------------------------------------------
+
+SCHEMA = "trail.simlab.bench/v1"
+
+
+def jnum(x):
+    x = float(x)
+    assert math.isfinite(x)
+    if x == math.trunc(x) and abs(x) < 1e15:
+        return str(int(x))
+    r = repr(x)
+    assert "e" not in r and "E" not in r, f"exponent formatting diverges from Rust: {r}"
+    return r
+
+
+def mean(xs):
+    acc = 0.0
+    for x in xs:
+        acc += x
+    return acc / len(xs)
+
+
+def percentile(xs, p):
+    ys = sorted(xs)
+    r = p / 100.0 * (len(ys) - 1)
+    lo = math.floor(r)
+    hi = math.ceil(r)
+    if lo == hi:
+        return ys[lo]
+    w = r - lo
+    return ys[lo] * (1.0 - w) + ys[hi] * w
+
+
+def row_json(row):
+    parts = []
+    for k in sorted(row.keys()):
+        v = row[k]
+        if isinstance(v, str):
+            sv = '"' + v + '"'
+        elif isinstance(v, bool):
+            sv = "true" if v else "false"
+        elif isinstance(v, list):
+            sv = "[" + ",".join(jnum(x) for x in v) + "]"
+        else:
+            sv = jnum(v)
+        parts.append('"' + k + '":' + sv)
+    return "{" + ",".join(parts) + "}"
+
+
+def report_json(rows):
+    s = "{\n"
+    s += '"schema":"' + SCHEMA + '",\n'
+    s += '"rows":[\n'
+    for i, row in enumerate(rows):
+        s += row_json(row)
+        if i + 1 < len(rows):
+            s += ","
+        s += "\n"
+    s += "]\n}\n"
+    return s
+
+
+def sweep_rows(scenario_names, policies, replica_counts, migration):
+    rows = []
+    scs = builtin_scenarios()
+    for name in scenario_names:
+        tenants, n, seed, dispatch, slots, pool_frac, noise = scs[name]
+        trace = generate_trace(tenants, n, seed)
+        pool_tokens = int((slots * MAX_SEQ) * pool_frac)
+        for replicas in replica_counts:
+            for policy in policies:
+                out = run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, noise)
+                rows.append({
+                    "scenario": name,
+                    "policy": policy_name(policy),
+                    "dispatch": {"rr": "round-robin", "jsq": "jsq", "lpw": "least-work"}[dispatch],
+                    "replicas": replicas,
+                    "migration": migration,
+                    "n": out["n"],
+                    # u64s travel as strings (golden_fixture.json convention)
+                    "seed": str(seed),
+                    "mean_latency_s": mean(out["lat"]),
+                    "p50_latency_s": percentile(out["lat"], 50.0),
+                    "p99_latency_s": percentile(out["lat"], 99.0),
+                    "mean_ttft_s": mean(out["ttft"]),
+                    "p50_ttft_s": percentile(out["ttft"], 50.0),
+                    "p99_ttft_s": percentile(out["ttft"], 99.0),
+                    "throughput_req_s": out["n"] / out["makespan"] if out["makespan"] > 0 else 0.0,
+                    "makespan_s": out["makespan"],
+                    "preemptions": out["preemptions"],
+                    "discards": out["discards"],
+                    "migrations": out["migrations"],
+                    "kv_peak_tokens": out["kv_peak"],
+                    "n_iterations": out["iters"],
+                    "per_replica_finished": out["per_replica"],
+                })
+    return rows
+
+
+DEFAULT_POLICIES = [("fcfs",), ("trail", 1.0), ("trail", 0.8)]
+
+
+def main(argv):
+    if not argv or argv[0] != "sweep":
+        print(__doc__)
+        return 2
+    out_path = None
+    if "--out" in argv:
+        out_path = argv[argv.index("--out") + 1]
+    rows = sweep_rows(
+        ["steady", "bursty", "multi-tenant", "skewed"],
+        DEFAULT_POLICIES,
+        [2, 4],
+        migration=True,
+    )
+    text = report_json(rows)
+    for row in rows:
+        print(
+            f"{row['scenario']:>13} {row['policy']:>10} x{row['replicas']} "
+            f"mean={row['mean_latency_s']:.3f}s p99={row['p99_latency_s']:.3f}s "
+            f"ttft={row['mean_ttft_s']:.3f}s preempt={row['preemptions']} "
+            f"discard={row['discards']} migrate={row['migrations']}"
+        )
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(text)
+        print(f"wrote {out_path} ({len(rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -123,6 +123,17 @@ impl ReplicaSnapshot {
     pub fn estimated_work(&self, unseen_estimate: f64) -> f64 {
         self.pred_remaining + self.unseen as f64 * unseen_estimate
     }
+
+    /// Snapshot of a directly-owned engine (the co-sim path, where the
+    /// driver reads `EngineStatus` synchronously): every dispatched job
+    /// is already admitted, so `unseen` is zero.
+    pub fn from_status(st: &crate::coordinator::engine::EngineStatus) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            queued: st.live as u64,
+            unseen: 0,
+            pred_remaining: st.pred_remaining_sum,
+        }
+    }
 }
 
 /// Anything a front-end can hand an [`OnlineJob`] to: a single engine's

@@ -49,7 +49,7 @@ use crate::coordinator::backend::ModelBackend;
 use crate::coordinator::clock::{Clock, ClockSpec};
 use crate::coordinator::kv::KvManager;
 use crate::coordinator::metrics::{Metrics, MetricsSummary};
-use crate::coordinator::policy::Policy;
+use crate::coordinator::policy::{Policy, Rank};
 use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::source::{Admission, ChannelSource, ReplaySource, RequestSource};
 use crate::predictor::Predictor;
@@ -151,8 +151,9 @@ pub struct EngineStatus {
 }
 
 impl EngineStatus {
-    /// `live`, derived from the monotone counters (stable across the
-    /// engine's internal compaction of finished requests).
+    /// `live`, derived from the admission/finish counters (stable across
+    /// the engine's internal compaction of finished requests; a migrated
+    /// request moves its admission count to the target engine).
     pub fn unfinished(&self) -> u64 {
         self.n_admitted - self.n_finished
     }
@@ -282,6 +283,91 @@ impl<B: ModelBackend> ServingEngine<B> {
         let rid = req.spec.rid;
         self.requests.push(req);
         self.n_admitted += 1;
+        self.publish_status();
+        rid
+    }
+
+    /// Advance a *virtual* engine clock to at least `at`. The co-sim
+    /// driver (`sim::SimDriver`) uses this to keep replica timelines
+    /// aligned on the shared virtual timeline: an idle replica's clock is
+    /// pulled forward to the global event time before it admits or steps.
+    /// No-op on wall clocks (real time cannot be jumped) and when the
+    /// clock is already past `at`.
+    pub fn sync_clock(&mut self, at: f64) {
+        if self.clock.spec() == ClockSpec::Virtual {
+            self.clock.wait_until(at);
+        }
+    }
+
+    /// Remove one request for cross-replica migration (the PR 2
+    /// "rebalance admitted-but-waiting work when a replica drains"
+    /// follow-on). Candidate set: every unfinished request the active
+    /// policy has not *locked* into the batch (under FCFS/SJF that is
+    /// only never-started work; under TRAIL anything still inside its
+    /// preemption window). Preference: requests holding no KV
+    /// (Waiting/Discarded — free to move), then the worst-ranked
+    /// resident. A resident victim's KV is dropped here and recomputed
+    /// on the target, exactly like a discard — the KvManager asserts
+    /// make a double-free a panic, not a silent corruption.
+    pub fn take_migratable(&mut self) -> Option<Request> {
+        let policy = self.serve.policy.clone();
+        let mut pick: Option<(bool, Rank, usize)> = None;
+        for (i, r) in self.requests.iter().enumerate() {
+            if r.phase == Phase::Finished {
+                continue;
+            }
+            let rank = policy.rank(r);
+            if rank.locked {
+                continue;
+            }
+            let resident = r.slot.is_some();
+            let better = match &pick {
+                None => true,
+                Some((pres, prank, _)) => {
+                    if resident != *pres {
+                        !resident
+                    } else {
+                        rank.cmp(prank) == std::cmp::Ordering::Greater
+                    }
+                }
+            };
+            if better {
+                pick = Some((resident, rank, i));
+            }
+        }
+        let (_, _, idx) = pick?;
+        let mut r = self.requests.swap_remove(idx);
+        // The request is no longer this engine's: hand its admission
+        // count to the target (admit_migrated re-increments there), so
+        // `EngineStatus::unfinished()` stays `admitted - finished` on
+        // both sides and pool-wide sums count each request once.
+        self.n_admitted -= 1;
+        if let Some(slot) = r.slot.take() {
+            self.kv.free(slot, r.spec.rid);
+        }
+        r.prefilled = 0;
+        r.kv_written = 0;
+        r.phase = if r.generated == 0 {
+            Phase::Waiting
+        } else {
+            Phase::Discarded
+        };
+        r.n_migrations += 1;
+        self.metrics.n_migrated_out += 1;
+        self.publish_status();
+        Some(r)
+    }
+
+    /// Admit a request migrated from another replica: its arrival stamp,
+    /// prediction state (smoother + `pred_remaining`), and
+    /// preemption/migration counters travel with it; only the KV must be
+    /// recomputed (the source dropped it in `take_migratable`).
+    pub fn admit_migrated(&mut self, req: Request) -> u64 {
+        debug_assert!(req.slot.is_none(), "migrated request still holds a slot");
+        let rid = req.spec.rid;
+        self.requests.push(req);
+        self.n_admitted += 1;
+        self.metrics.n_migrated_in += 1;
         self.publish_status();
         rid
     }

@@ -11,6 +11,13 @@ pub struct Metrics {
     pub n_finished: usize,
     pub n_preemptions: u64,
     pub n_discards: u64,
+    /// Requests handed to / received from another replica (co-sim
+    /// migration; see `coordinator::engine::ServingEngine::take_migratable`).
+    pub n_migrated_out: u64,
+    pub n_migrated_in: u64,
+    /// Migration hops accumulated by requests that *finished* on this
+    /// engine — summing this across replicas counts every hop once.
+    pub n_request_migrations: u64,
     pub total_output_tokens: u64,
     pub total_prefill_tokens: u64,
     pub wall_time: f64,
@@ -26,6 +33,7 @@ impl Metrics {
         self.ttft.push(r.ttft().expect("finished without first token"));
         self.n_preemptions += r.n_preemptions;
         self.n_discards += r.n_discards;
+        self.n_request_migrations += r.n_migrations;
         self.total_output_tokens += r.spec.true_output_len as u64;
         self.total_prefill_tokens += r.spec.prompt.len() as u64;
     }
@@ -57,6 +65,7 @@ impl Metrics {
             throughput_tok_s: self.throughput_tok_s(),
             preemptions: self.n_preemptions,
             discards: self.n_discards,
+            migrations: self.n_request_migrations,
             peak_mem_tokens: self.peak_mem_tokens,
         }
     }
@@ -75,6 +84,7 @@ pub struct MetricsSummary {
     pub throughput_tok_s: f64,
     pub preemptions: u64,
     pub discards: u64,
+    pub migrations: u64,
     pub peak_mem_tokens: usize,
 }
 

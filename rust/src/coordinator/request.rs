@@ -65,6 +65,8 @@ pub struct Request {
     // --- accounting ---
     pub n_preemptions: u64,
     pub n_discards: u64,
+    /// Cross-replica migration hops (co-sim rebalancing).
+    pub n_migrations: u64,
 }
 
 impl Request {
@@ -84,6 +86,7 @@ impl Request {
             finished_at: None,
             n_preemptions: 0,
             n_discards: 0,
+            n_migrations: 0,
         }
     }
 

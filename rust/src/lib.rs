@@ -11,6 +11,7 @@ pub mod predictor;
 pub mod qtheory;
 pub mod runtime;
 pub mod server;
+pub mod sim;
 pub mod testkit;
 pub mod util;
 pub mod workload;

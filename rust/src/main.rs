@@ -7,6 +7,8 @@
 //! trail-serve theory  --lambda 0.7 --c 0.8 --model perfect
 //! trail-serve server  --addr 127.0.0.1:8091 --policy trail \
 //!                     --replicas 2 --dispatch jsq [--mock]
+//! trail-serve sim     --scenarios steady,skewed --policies fcfs,srpt,trail \
+//!                     --replicas 2,4 --out BENCH_sim.json
 //! ```
 
 use std::sync::Arc;
@@ -32,6 +34,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("theory") => cmd_theory(&args),
         Some("server") => cmd_server(&args),
+        Some("sim") => cmd_sim(&args),
         _ => {
             eprintln!(
                 "usage: trail-serve <info|serve|simulate|theory|server> [options]\n\
@@ -47,6 +50,11 @@ fn main() {
                  server   — HTTP chatbot server over a replica pool\n\
                  \x20        --addr <ip:port> --policy <p> [--mock] [--oracle]\n\
                  \x20        --replicas <n> --dispatch rr|jsq|least-work\n\
+                 sim      — deterministic virtual-time multi-replica co-simulation\n\
+                 \x20        --scenarios steady,bursty,multi-tenant,skewed\n\
+                 \x20        --policies fcfs,srpt,trail --replicas 2,4\n\
+                 \x20        [--n <reqs>] [--seed <u64>] [--no-migration]\n\
+                 \x20        [--out BENCH_sim.json] [--trace-out trace.jsonl]\n\
                  info     — print artifact/config summary"
             );
             2
@@ -298,6 +306,120 @@ fn cmd_theory(args: &Args) -> i32 {
         "E[T] (Lemma 1, corrected recycled term) = {et:.4}  [λ={lambda} C={c} {}]",
         model.name()
     );
+    0
+}
+
+fn cmd_sim(args: &Args) -> i32 {
+    // Always the embedded config — never artifacts/config.json. The
+    // checked-in BENCH baseline, the tier-1 determinism tests, and the
+    // Python mirror all pin the embedded defaults; an ambient artifacts
+    // directory must not change the benchmark bytes.
+    let cfg = Config::embedded_default();
+    let mut sweep = trail::sim::SweepConfig::default_sweep();
+
+    let scenario_names = args.str_or("scenarios", "steady,bursty,multi-tenant,skewed");
+    sweep.scenarios = Vec::new();
+    for name in scenario_names.split(',').filter(|s| !s.is_empty()) {
+        match trail::sim::builtin(name) {
+            Some(s) => sweep.scenarios.push(s),
+            None => {
+                eprintln!(
+                    "unknown scenario '{name}' (builtin: {})",
+                    trail::sim::builtin_names().join(", ")
+                );
+                return 2;
+            }
+        }
+    }
+
+    let policy_names = args.str_or("policies", "fcfs,srpt,trail");
+    sweep.policies = Vec::new();
+    for name in policy_names.split(',').filter(|s| !s.is_empty()) {
+        match Policy::parse(name) {
+            Some(p) => sweep.policies.push(p),
+            None => {
+                eprintln!("bad --policies entry '{name}'");
+                return 2;
+            }
+        }
+    }
+
+    sweep.replica_counts = Vec::new();
+    for tok in args.str_or("replicas", "2,4").split(',').filter(|s| !s.is_empty()) {
+        match tok.parse::<usize>() {
+            Ok(n) if n >= 1 => sweep.replica_counts.push(n),
+            _ => {
+                eprintln!("bad --replicas entry '{tok}'");
+                return 2;
+            }
+        }
+    }
+
+    if sweep.scenarios.is_empty() || sweep.policies.is_empty() || sweep.replica_counts.is_empty() {
+        eprintln!("sim needs at least one scenario, policy, and replica count");
+        return 2;
+    }
+
+    sweep.migration = !args.has_flag("no-migration");
+    // Absent flag = no override; an explicit bad value is an error, not
+    // a silent fall-through to the scenario defaults.
+    let n_override = match args.str_or("n", "") {
+        "" => None,
+        s => match s.parse::<usize>() {
+            Ok(v) if v >= 1 => Some(v),
+            _ => {
+                eprintln!("bad --n '{s}' (want an integer >= 1)");
+                return 2;
+            }
+        },
+    };
+    let seed_override = match args.str_or("seed", "") {
+        "" => None,
+        s => match s.parse::<u64>() {
+            Ok(v) => Some(v),
+            Err(_) => {
+                eprintln!("bad --seed '{s}' (want a u64)");
+                return 2;
+            }
+        },
+    };
+    for sc in &mut sweep.scenarios {
+        if let Some(n) = n_override {
+            sc.n = n;
+        }
+        if let Some(seed) = seed_override {
+            sc.seed = seed;
+        }
+    }
+
+    // Optionally dump the first scenario's trace for external replay.
+    let trace_out = args.str_or("trace-out", "").to_string();
+    if !trace_out.is_empty() {
+        let trace = sweep.scenarios[0].trace(&cfg);
+        if let Err(e) = trail::workload::trace::save_jsonl(&trace, &trace_out) {
+            eprintln!("write {trace_out} failed: {e}");
+            return 1;
+        }
+        println!("trace[{}] ({} entries) -> {trace_out}", sweep.scenarios[0].name, trace.len());
+    }
+
+    let report = match trail::sim::run_sweep(&cfg, &sweep) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sim failed: {e}");
+            return 1;
+        }
+    };
+    print!("{}", report.render_table());
+
+    let out = args.str_or("out", "").to_string();
+    if !out.is_empty() {
+        if let Err(e) = report.save(&out) {
+            eprintln!("write {out} failed: {e}");
+            return 1;
+        }
+        println!("report ({} rows, schema {}) -> {out}", report.rows.len(), trail::sim::SCHEMA_VERSION);
+    }
     0
 }
 

@@ -1,0 +1,248 @@
+//! Deterministic virtual-time co-simulation of N serving engines.
+//!
+//! `ReplicaPool` (the online path) runs one thread per engine on the
+//! wall clock — every multi-replica number it produces is scheduling
+//! noise. `SimDriver` replaces it for offline runs: all replicas live on
+//! one thread and one shared *virtual* timeline, and the driver
+//! interleaves their `step()` calls in virtual-time order:
+//!
+//! 1. the next event is either the earliest pending trace arrival or the
+//!    lowest engine clock among replicas with schedulable work (ties
+//!    break to the lowest replica index);
+//! 2. arrivals are dispatched under a [`DispatchPolicy`] over synchronous
+//!    [`ReplicaSnapshot`]s (no `SharedStatus` races — the driver reads
+//!    `EngineStatus` directly), and the chosen replica's clock is pulled
+//!    forward to the arrival time before it admits;
+//! 3. otherwise the earliest replica steps once.
+//!
+//! With `migration` enabled the driver also rebalances before stepping:
+//! a drained replica pulls one admitted-but-waiting request from the
+//! most backlogged replica (`ServingEngine::take_migratable` /
+//! `admit_migrated` — the PR 2 cross-replica migration follow-on). A
+//! donor must either have busy residents or at least two waiting
+//! requests, so a just-migrated request never ping-pongs straight back.
+//!
+//! Everything is sequential and seeded: identical `(engines, dispatch,
+//! trace)` inputs produce bit-identical outcomes, which is what lets
+//! `sim::report` pin benchmark JSON byte-for-byte.
+
+use anyhow::Result;
+
+use crate::coordinator::backend::ModelBackend;
+use crate::coordinator::dispatch::{DispatchPolicy, ReplicaSnapshot, DEFAULT_UNSEEN_JOB_ESTIMATE};
+use crate::coordinator::engine::ServingEngine;
+use crate::util::stats::Samples;
+use crate::workload::TraceEntry;
+
+/// Aggregate outcome of one co-simulated serve (all replicas).
+#[derive(Debug)]
+pub struct SimOutcome {
+    pub n_requests: usize,
+    /// Per-request completion times, finish order.
+    pub latency: Samples,
+    pub ttft: Samples,
+    pub preemptions: u64,
+    pub discards: u64,
+    /// Cross-replica migrations performed by the driver.
+    pub migrations: u64,
+    /// Highest KV token occupancy observed on any single replica.
+    pub kv_peak_tokens: usize,
+    pub per_replica_finished: Vec<usize>,
+    /// Virtual time at which the last replica went idle.
+    pub makespan: f64,
+    /// Engine iterations summed over replicas.
+    pub n_iterations: u64,
+}
+
+impl SimOutcome {
+    pub fn throughput_req_s(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.n_requests as f64 / self.makespan
+    }
+}
+
+/// N engines co-simulated on one shared virtual timeline.
+pub struct SimDriver<B: ModelBackend> {
+    engines: Vec<ServingEngine<B>>,
+    dispatch: DispatchPolicy,
+    migration: bool,
+    unseen_estimate: f64,
+    rr: u64,
+    n_migrations: u64,
+}
+
+impl<B: ModelBackend> SimDriver<B> {
+    /// Engines must be freshly built (virtual clocks at t = 0).
+    pub fn new(engines: Vec<ServingEngine<B>>, dispatch: DispatchPolicy, migration: bool) -> Self {
+        assert!(!engines.is_empty(), "co-sim needs at least one replica");
+        SimDriver {
+            engines,
+            dispatch,
+            migration,
+            unseen_estimate: DEFAULT_UNSEEN_JOB_ESTIMATE,
+            rr: 0,
+            n_migrations: 0,
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Serve a time-sorted trace to completion; consumes the driver's
+    /// engine state (a driver is single-use, like one benchmark run).
+    pub fn run(&mut self, trace: &[TraceEntry]) -> Result<SimOutcome> {
+        let n_total = trace.len();
+        let mut next = 0usize;
+        let mut latency = Samples::new();
+        let mut ttft = Samples::new();
+        let mut finished = 0usize;
+        // A replica whose step was a no-op (memory-blocked) cannot make
+        // progress until an admission or migration changes its state;
+        // exclude it from the event loop until then.
+        let mut stalled = vec![false; self.engines.len()];
+        loop {
+            let mut active: Option<(f64, usize)> = None;
+            for (i, e) in self.engines.iter().enumerate() {
+                if stalled[i] || !e.any_schedulable() {
+                    continue;
+                }
+                let now = e.now();
+                if active.map_or(true, |(t, _)| now < t) {
+                    active = Some((now, i));
+                }
+            }
+
+            // ---- arrivals due before the next step ----
+            if next < n_total && active.map_or(true, |(t, _)| trace[next].at <= t) {
+                let entry = &trace[next];
+                next += 1;
+                let snaps: Vec<ReplicaSnapshot> = self
+                    .engines
+                    .iter()
+                    .map(|e| ReplicaSnapshot::from_status(&e.status()))
+                    .collect();
+                let idx = self.dispatch.pick(&snaps, self.rr, self.unseen_estimate);
+                self.rr += 1;
+                self.engines[idx].sync_clock(entry.at);
+                self.engines[idx].admit(entry.spec.clone(), Some(entry.at));
+                stalled[idx] = false;
+                continue;
+            }
+
+            let Some((now, i)) = active else {
+                // No arrivals left and no replica can move. Either we are
+                // done, or every replica holding work is memory-stalled —
+                // migration may still unstick that.
+                if self.engines.iter().any(|e| e.any_schedulable()) {
+                    let now = self
+                        .engines
+                        .iter()
+                        .map(|e| e.now())
+                        .fold(0.0f64, f64::max);
+                    if self.migration && self.rebalance(now, &mut stalled) {
+                        continue;
+                    }
+                    anyhow::bail!(
+                        "co-sim stalled: requests pending but no replica can make progress \
+                         (KV pool too small for any admission?)"
+                    );
+                }
+                break;
+            };
+
+            // ---- drain rebalancing, then one step ----
+            if self.migration && self.rebalance(now, &mut stalled) {
+                continue; // the event order may have changed
+            }
+            let outcome = self.engines[i].step()?;
+            if !outcome.worked {
+                stalled[i] = true;
+            }
+            for f in &outcome.finished {
+                finished += 1;
+                latency.push(f.latency);
+                ttft.push(f.ttft);
+            }
+        }
+        if finished != n_total {
+            anyhow::bail!("co-sim lost requests: {finished} finished of {n_total}");
+        }
+
+        let mut preemptions = 0u64;
+        let mut discards = 0u64;
+        let mut kv_peak = 0usize;
+        let mut iters = 0u64;
+        let mut per_replica = Vec::with_capacity(self.engines.len());
+        let mut makespan = 0.0f64;
+        for e in &self.engines {
+            let st = e.status();
+            preemptions += e.metrics.n_preemptions;
+            discards += e.metrics.n_discards;
+            kv_peak = kv_peak.max(e.metrics.peak_mem_tokens);
+            iters += st.n_iterations;
+            per_replica.push(e.metrics.n_finished);
+            makespan = makespan.max(e.now());
+        }
+        Ok(SimOutcome {
+            n_requests: finished,
+            latency,
+            ttft,
+            preemptions,
+            discards,
+            migrations: self.n_migrations,
+            kv_peak_tokens: kv_peak,
+            per_replica_finished: per_replica,
+            makespan,
+            n_iterations: iters,
+        })
+    }
+
+    /// Move admitted-but-waiting work onto drained replicas. Returns true
+    /// if anything moved. One request per drained replica per call;
+    /// donors are tried from the largest non-resident backlog down (a
+    /// donor with only locked work yields nothing — fall through to the
+    /// next rather than giving up), and a donor must keep either busy
+    /// residents or further waiting work, so the request cannot
+    /// ping-pong straight back.
+    fn rebalance(&mut self, now: f64, stalled: &mut [bool]) -> bool {
+        let mut moved = false;
+        loop {
+            let idle = (0..self.engines.len()).find(|&j| !self.engines[j].any_schedulable());
+            let Some(j) = idle else { break };
+            let mut donors: Vec<(usize, usize)> = Vec::new(); // (waiting, replica)
+            for (k, e) in self.engines.iter().enumerate() {
+                if k == j {
+                    continue;
+                }
+                let st = e.status();
+                let waiting = st.live.saturating_sub(st.resident);
+                if waiting == 0 || (st.resident == 0 && waiting < 2) {
+                    continue;
+                }
+                donors.push((waiting, k));
+            }
+            // Largest backlog first, replica index as the tiebreak.
+            donors.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            let mut migrated = false;
+            for (_, k) in donors {
+                if let Some(req) = self.engines[k].take_migratable() {
+                    self.engines[j].sync_clock(now);
+                    self.engines[j].admit_migrated(req);
+                    stalled[j] = false;
+                    stalled[k] = false;
+                    self.n_migrations += 1;
+                    moved = true;
+                    migrated = true;
+                    break;
+                }
+            }
+            if !migrated {
+                break;
+            }
+        }
+        moved
+    }
+}

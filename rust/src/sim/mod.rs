@@ -1,0 +1,19 @@
+//! `simlab` — deterministic virtual-time multi-replica co-simulation.
+//!
+//! Replaces the thread-per-engine wall-clock `ReplicaPool` path for
+//! *offline* evaluation: [`driver::SimDriver`] interleaves N
+//! `ServingEngine::step()` calls on one shared virtual timeline (so
+//! multi-replica dispatch and cross-replica migration benchmarks are
+//! bit-reproducible), [`scenario`] names the workload regimes the
+//! paper's comparative claims need (steady / bursty / multi-tenant /
+//! skewed), and [`report`] emits schema-versioned `BENCH_*.json` files
+//! that `make bench-sim-json` pins byte-for-byte against
+//! `benchmarks/BENCH_seed.json`.
+
+pub mod driver;
+pub mod report;
+pub mod scenario;
+
+pub use driver::{SimDriver, SimOutcome};
+pub use report::{BenchReport, SweepRow, SCHEMA_VERSION};
+pub use scenario::{builtin, builtin_names, run_sweep, SimScenario, SweepConfig};

@@ -1,0 +1,235 @@
+//! Schema-versioned benchmark reports (`BENCH_*.json`).
+//!
+//! A [`BenchReport`] is one co-simulation sweep: one [`SweepRow`] per
+//! (scenario, policy, replica count) cell with the comparative metrics
+//! the paper reports (completion time and TTFT mean/p50/p99, preemption
+//! / discard / migration counts, peak KV occupancy, throughput).
+//!
+//! Serialisation is **byte-deterministic**: object keys are sorted (the
+//! `util::json` writer is backed by a `BTreeMap`), numbers use Rust's
+//! shortest-round-trip formatting, the file carries no timestamps, and
+//! every value comes off the virtual clock — so identical seed +
+//! scenario produce identical bytes, and CI can `cmp` a fresh run
+//! against the checked-in `benchmarks/BENCH_seed.json` baseline. Bump
+//! [`SCHEMA_VERSION`] when a field changes meaning; see `docs/simlab.md`
+//! for the field-by-field schema.
+
+use crate::coordinator::Policy;
+use crate::sim::driver::SimOutcome;
+use crate::sim::scenario::SimScenario;
+use crate::util::csv::{f, Table};
+use crate::util::json::{parse_file, Json};
+
+pub const SCHEMA_VERSION: &str = "trail.simlab.bench/v1";
+
+/// One (scenario × policy × replicas) cell of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub scenario: String,
+    pub policy: String,
+    pub dispatch: String,
+    pub replicas: usize,
+    pub migration: bool,
+    pub n: usize,
+    pub seed: u64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_ttft_s: f64,
+    pub p50_ttft_s: f64,
+    pub p99_ttft_s: f64,
+    pub throughput_req_s: f64,
+    pub makespan_s: f64,
+    pub preemptions: u64,
+    pub discards: u64,
+    pub migrations: u64,
+    /// Highest KV token occupancy on any single replica.
+    pub kv_peak_tokens: usize,
+    pub n_iterations: u64,
+    pub per_replica_finished: Vec<usize>,
+}
+
+impl SweepRow {
+    pub fn from_outcome(
+        sc: &SimScenario,
+        policy: &Policy,
+        replicas: usize,
+        migration: bool,
+        mut out: SimOutcome,
+    ) -> SweepRow {
+        SweepRow {
+            scenario: sc.name.clone(),
+            policy: policy.name(),
+            dispatch: sc.dispatch.name().to_string(),
+            replicas,
+            migration,
+            n: out.n_requests,
+            seed: sc.seed,
+            mean_latency_s: out.latency.mean(),
+            p50_latency_s: out.latency.percentile(50.0),
+            p99_latency_s: out.latency.percentile(99.0),
+            mean_ttft_s: out.ttft.mean(),
+            p50_ttft_s: out.ttft.percentile(50.0),
+            p99_ttft_s: out.ttft.percentile(99.0),
+            throughput_req_s: out.throughput_req_s(),
+            makespan_s: out.makespan,
+            preemptions: out.preemptions,
+            discards: out.discards,
+            migrations: out.migrations,
+            kv_peak_tokens: out.kv_peak_tokens,
+            n_iterations: out.n_iterations,
+            per_replica_finished: out.per_replica_finished,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::str(&self.scenario)),
+            ("policy", Json::str(&self.policy)),
+            ("dispatch", Json::str(&self.dispatch)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("migration", Json::Bool(self.migration)),
+            ("n", Json::Num(self.n as f64)),
+            // u64s travel as strings: values above 2^53 would be
+            // corrupted by the f64 number path (same convention as
+            // golden_fixture.json).
+            ("seed", Json::str(&self.seed.to_string())),
+            ("mean_latency_s", Json::Num(self.mean_latency_s)),
+            ("p50_latency_s", Json::Num(self.p50_latency_s)),
+            ("p99_latency_s", Json::Num(self.p99_latency_s)),
+            ("mean_ttft_s", Json::Num(self.mean_ttft_s)),
+            ("p50_ttft_s", Json::Num(self.p50_ttft_s)),
+            ("p99_ttft_s", Json::Num(self.p99_ttft_s)),
+            ("throughput_req_s", Json::Num(self.throughput_req_s)),
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("discards", Json::Num(self.discards as f64)),
+            ("migrations", Json::Num(self.migrations as f64)),
+            ("kv_peak_tokens", Json::Num(self.kv_peak_tokens as f64)),
+            ("n_iterations", Json::Num(self.n_iterations as f64)),
+            (
+                "per_replica_finished",
+                Json::Arr(
+                    self.per_replica_finished
+                        .iter()
+                        .map(|&x| Json::Num(x as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> SweepRow {
+        SweepRow {
+            scenario: j.at(&["scenario"]).as_str().to_string(),
+            policy: j.at(&["policy"]).as_str().to_string(),
+            dispatch: j.at(&["dispatch"]).as_str().to_string(),
+            replicas: j.at(&["replicas"]).as_usize(),
+            migration: matches!(j.at(&["migration"]), Json::Bool(true)),
+            n: j.at(&["n"]).as_usize(),
+            // Canonically a string (u64s above 2^53 don't survive the
+            // f64 number path); tolerate the numeric form for files from
+            // tools that followed the other fields' pattern.
+            seed: match j.at(&["seed"]) {
+                Json::Str(s) => s.parse::<u64>().expect("u64 seed string"),
+                other => other.as_i64() as u64,
+            },
+            mean_latency_s: j.at(&["mean_latency_s"]).as_f64(),
+            p50_latency_s: j.at(&["p50_latency_s"]).as_f64(),
+            p99_latency_s: j.at(&["p99_latency_s"]).as_f64(),
+            mean_ttft_s: j.at(&["mean_ttft_s"]).as_f64(),
+            p50_ttft_s: j.at(&["p50_ttft_s"]).as_f64(),
+            p99_ttft_s: j.at(&["p99_ttft_s"]).as_f64(),
+            throughput_req_s: j.at(&["throughput_req_s"]).as_f64(),
+            makespan_s: j.at(&["makespan_s"]).as_f64(),
+            preemptions: j.at(&["preemptions"]).as_i64() as u64,
+            discards: j.at(&["discards"]).as_i64() as u64,
+            migrations: j.at(&["migrations"]).as_i64() as u64,
+            kv_peak_tokens: j.at(&["kv_peak_tokens"]).as_usize(),
+            n_iterations: j.at(&["n_iterations"]).as_i64() as u64,
+            per_replica_finished: j
+                .at(&["per_replica_finished"])
+                .as_i64_vec()
+                .iter()
+                .map(|&x| x as usize)
+                .collect(),
+        }
+    }
+}
+
+/// One sweep's worth of rows, ready to serialise.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub rows: Vec<SweepRow>,
+}
+
+impl BenchReport {
+    /// Deterministic serialisation: fixed top-level layout, one row
+    /// object per line (row diffs stay line-local), sorted keys inside
+    /// each row, trailing newline.
+    pub fn to_json_string(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("\"schema\":{},\n", Json::str(SCHEMA_VERSION).to_string()));
+        s.push_str("\"rows\":[\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            s.push_str(&row.to_json().to_string());
+            if i + 1 < self.rows.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json_string())
+    }
+
+    pub fn load(path: &str) -> Result<BenchReport, String> {
+        let j = parse_file(path)?;
+        let schema = j.at(&["schema"]).as_str();
+        if schema != SCHEMA_VERSION {
+            return Err(format!(
+                "schema mismatch: file is '{schema}', this binary reads '{SCHEMA_VERSION}'"
+            ));
+        }
+        Ok(BenchReport {
+            rows: j.at(&["rows"]).as_arr().iter().map(SweepRow::from_json).collect(),
+        })
+    }
+
+    /// Aligned console table (the `trail-serve sim` output).
+    pub fn render_table(&self) -> String {
+        let mut t = Table::new(&[
+            "scenario", "policy", "disp", "reps", "n", "mean_lat_s", "p50_lat_s", "p99_lat_s",
+            "mean_ttft_s", "p99_ttft_s", "req/s", "preempt", "discard", "migrate", "kv_peak",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.scenario.clone(),
+                r.policy.clone(),
+                r.dispatch.clone(),
+                r.replicas.to_string(),
+                r.n.to_string(),
+                f(r.mean_latency_s, 3),
+                f(r.p50_latency_s, 3),
+                f(r.p99_latency_s, 3),
+                f(r.mean_ttft_s, 3),
+                f(r.p99_ttft_s, 3),
+                f(r.throughput_req_s, 2),
+                r.preemptions.to_string(),
+                r.discards.to_string(),
+                r.migrations.to_string(),
+                r.kv_peak_tokens.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}

@@ -1,0 +1,230 @@
+//! Named co-simulation scenarios and the policy × replica sweep.
+//!
+//! A [`SimScenario`] bundles a [`TraceWorkload`] with the backend shape
+//! (batch slots — paper-scale 128 by default — KV pool fraction, cost
+//! model), a dispatch policy, and a seed. The builtin set covers the
+//! regimes the paper's comparative claims live in:
+//!
+//! * `steady` — one Poisson tenant near capacity (Fig 6 regime);
+//! * `bursty` — on-off diurnal modulation (Fig 7 regime, sustained);
+//! * `multi-tenant` — interactive + batch + background tenants with
+//!   size skew across them;
+//! * `skewed` — small replicas (16 slots), round-robin dispatch, and a
+//!   heavy-tailed bursty tenant: the regime where cross-replica
+//!   migration visibly rebalances drained replicas.
+//!
+//! `run_sweep` runs scenarios × scheduling policies × replica counts on
+//! one shared trace per scenario (the comparisons are paired, like the
+//! paper's) and returns a [`BenchReport`] ready for `BENCH_*.json`.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::coordinator::backend::CostModel;
+use crate::coordinator::dispatch::DispatchPolicy;
+use crate::coordinator::{ClockSpec, MockBackend, Policy, ServeConfig, ServingEngine};
+use crate::sim::driver::{SimDriver, SimOutcome};
+use crate::sim::report::{BenchReport, SweepRow};
+use crate::testkit::PredictorSpec;
+use crate::workload::{TenantProfile, TraceEntry, TraceWorkload};
+
+/// One named co-simulation setup (workload + backend shape + dispatch).
+#[derive(Clone, Debug)]
+pub struct SimScenario {
+    pub name: String,
+    pub workload: TraceWorkload,
+    /// Requests per run.
+    pub n: usize,
+    pub seed: u64,
+    pub dispatch: DispatchPolicy,
+    /// Mock batch slots per replica (paper-scale default: 128 — the
+    /// A100 batches 100+ sequences; ROADMAP "scale the mock substrate").
+    pub slots: usize,
+    /// KV token pool as a fraction of `slots × max_seq`.
+    pub pool_frac: f64,
+    pub cost: CostModel,
+    pub predictor: PredictorSpec,
+    pub max_iterations: u64,
+}
+
+impl SimScenario {
+    pub fn new(name: &str, workload: TraceWorkload) -> SimScenario {
+        SimScenario {
+            name: name.to_string(),
+            workload,
+            n: 240,
+            seed: 9001,
+            dispatch: DispatchPolicy::JoinShortestQueue,
+            slots: 128,
+            pool_frac: 0.55,
+            cost: CostModel::default(),
+            // Noisy initial estimates with exact per-token refinement —
+            // the regime where limited preemption (C < 1) does real work;
+            // a perfect oracle makes it indistinguishable from SRPT.
+            predictor: PredictorSpec::noisy_oracle(0.4),
+            max_iterations: 2_000_000,
+        }
+    }
+
+    pub fn n(mut self, n: usize) -> SimScenario {
+        self.n = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> SimScenario {
+        self.seed = seed;
+        self
+    }
+
+    /// Materialise this scenario's arrival trace.
+    pub fn trace(&self, cfg: &Config) -> Vec<TraceEntry> {
+        self.workload.generate(cfg, self.n, self.seed)
+    }
+
+    /// Fresh virtual-clock engines for one run. The probe predictor
+    /// indexes readout taps by `cfg.model.batch_slots`, so non-default
+    /// slot counts require the oracle predictor (same invariant as
+    /// `testkit::Scenario::effective_slots`).
+    pub fn build_engines(
+        &self,
+        cfg: &Config,
+        policy: &Policy,
+        replicas: usize,
+    ) -> Vec<ServingEngine<MockBackend>> {
+        assert!(replicas >= 1, "co-sim needs at least one replica");
+        if self.slots != cfg.model.batch_slots {
+            assert!(
+                matches!(self.predictor, PredictorSpec::Oracle { .. }),
+                "custom batch slots ({}) require the oracle predictor",
+                self.slots
+            );
+        }
+        (0..replicas)
+            .map(|_| {
+                let backend = MockBackend::new(self.slots, cfg).with_cost(self.cost);
+                let mut serve = ServeConfig::new(cfg, policy.clone());
+                serve.clock = ClockSpec::Virtual;
+                serve.max_iterations = self.max_iterations;
+                serve.pool_tokens =
+                    ((self.slots * cfg.model.max_seq) as f64 * self.pool_frac) as usize;
+                ServingEngine::new(cfg, serve, backend, self.predictor.build(cfg))
+            })
+            .collect()
+    }
+
+    /// Serve this scenario's own trace (convenience over `run_trace`).
+    pub fn run(
+        &self,
+        cfg: &Config,
+        policy: &Policy,
+        replicas: usize,
+        migration: bool,
+    ) -> Result<SimOutcome> {
+        let trace = self.trace(cfg);
+        self.run_trace(cfg, policy, replicas, migration, &trace)
+    }
+
+    /// Serve a pre-materialised trace (lets a sweep pair every policy on
+    /// the identical arrival stream).
+    pub fn run_trace(
+        &self,
+        cfg: &Config,
+        policy: &Policy,
+        replicas: usize,
+        migration: bool,
+        trace: &[TraceEntry],
+    ) -> Result<SimOutcome> {
+        let engines = self.build_engines(cfg, policy, replicas);
+        let mut driver = SimDriver::new(engines, self.dispatch, migration);
+        driver.run(trace)
+    }
+}
+
+pub fn builtin_names() -> [&'static str; 4] {
+    ["steady", "bursty", "multi-tenant", "skewed"]
+}
+
+/// Builtin scenario by name (see the module docs for the regimes).
+pub fn builtin(name: &str) -> Option<SimScenario> {
+    // Rates are tuned against the mock cost model so the 2-replica cells
+    // run over capacity (queueing makes policy order matter) and the
+    // 4-replica cells run near/below it (scale-out flattens the queue).
+    // Keep in sync with python/simref.py `builtin_scenarios`.
+    let s = match name {
+        "steady" => SimScenario::new("steady", TraceWorkload::poisson(170.0)).n(500),
+        "bursty" => SimScenario::new(
+            "bursty",
+            TraceWorkload::new(vec![TenantProfile::on_off("diurnal", 45.0, 4.0, 2.5, 0.2, 5.5)]),
+        )
+        .n(500),
+        "multi-tenant" => SimScenario::new(
+            "multi-tenant",
+            TraceWorkload::new(vec![
+                TenantProfile::steady("chat", 90.0).mu_shift(-0.3),
+                TenantProfile::steady("batch", 20.0).mu_shift(0.9),
+                TenantProfile::on_off("background", 40.0, 2.0, 1.0, 0.5, 3.0),
+            ]),
+        )
+        .n(500),
+        "skewed" => {
+            // Small replicas + round-robin dispatch + a heavy-tailed
+            // bursty tenant: replicas drain unevenly (migration fires)
+            // and the tight pool forces discard/recompute churn, where
+            // the C-window separates trail-c0.8 from plain SRPT.
+            let mut s = SimScenario::new(
+                "skewed",
+                TraceWorkload::new(vec![
+                    TenantProfile::on_off("heavy", 14.0, 4.0, 1.5, 0.1, 4.5).mu_shift(1.0),
+                    TenantProfile::steady("light", 26.0).mu_shift(-0.5),
+                ]),
+            );
+            s.slots = 16;
+            s.pool_frac = 0.35;
+            s.dispatch = DispatchPolicy::RoundRobin;
+            s.predictor = PredictorSpec::noisy_oracle(0.8);
+            s.n = 240;
+            s
+        }
+        _ => return None,
+    };
+    Some(s)
+}
+
+/// What `run_sweep` runs: scenarios × policies × replica counts.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub scenarios: Vec<SimScenario>,
+    pub policies: Vec<Policy>,
+    pub replica_counts: Vec<usize>,
+    pub migration: bool,
+}
+
+impl SweepConfig {
+    /// The checked-in benchmark grid (`benchmarks/BENCH_seed.json`):
+    /// FCFS vs SRPT vs TRAIL limited-preemption over every builtin
+    /// scenario at 2 and 4 replicas, migration on.
+    pub fn default_sweep() -> SweepConfig {
+        SweepConfig {
+            scenarios: builtin_names().iter().map(|n| builtin(n).unwrap()).collect(),
+            policies: vec![Policy::Fcfs, Policy::Trail { c: 1.0 }, Policy::Trail { c: 0.8 }],
+            replica_counts: vec![2, 4],
+            migration: true,
+        }
+    }
+}
+
+/// Run the grid; each scenario's trace is generated once and shared by
+/// every (policy, replicas) cell so comparisons are paired.
+pub fn run_sweep(cfg: &Config, sweep: &SweepConfig) -> Result<BenchReport> {
+    let mut rows = Vec::new();
+    for sc in &sweep.scenarios {
+        let trace = sc.trace(cfg);
+        for &replicas in &sweep.replica_counts {
+            for policy in &sweep.policies {
+                let out = sc.run_trace(cfg, policy, replicas, sweep.migration, &trace)?;
+                rows.push(SweepRow::from_outcome(sc, policy, replicas, sweep.migration, out));
+            }
+        }
+    }
+    Ok(BenchReport { rows })
+}

@@ -117,6 +117,12 @@ pub struct Scenario {
     pub max_iterations: u64,
     /// Engine replicas for the pool harness (`run_pool`); 1 elsewhere.
     pub replicas: usize,
+    /// Mock-backend batch slots. `None` keeps the config default
+    /// (`cfg.model.batch_slots`, 8 — the regime the pinned suite numbers
+    /// were measured in); set it to exercise paper-scale 100+-sequence
+    /// batches (the sim subsystem defaults to 128). The KV pool budget
+    /// scales with the effective slot count.
+    pub slots: Option<usize>,
 }
 
 impl Scenario {
@@ -141,6 +147,7 @@ impl Scenario {
             },
             max_iterations: 2_000_000,
             replicas: 1,
+            slots: None,
         }
     }
 
@@ -191,6 +198,27 @@ impl Scenario {
         self
     }
 
+    /// Mock-backend batch slots (paper-scale batches: 128).
+    pub fn slots(mut self, n: usize) -> Scenario {
+        self.slots = Some(n.max(1));
+        self
+    }
+
+    /// Effective mock batch width for this scenario. The probe predictor
+    /// indexes readout taps by `cfg.model.batch_slots`, so a custom slot
+    /// count is only valid with the oracle predictor.
+    pub fn effective_slots(&self, cfg: &Config) -> usize {
+        let slots = self.slots.unwrap_or(cfg.model.batch_slots);
+        if slots != cfg.model.batch_slots {
+            assert!(
+                matches!(self.predictor, PredictorSpec::Oracle { .. }),
+                "custom batch slots ({slots}) require the oracle predictor: \
+                 ProbePredictor tap indexing is tied to cfg.model.batch_slots"
+            );
+        }
+        slots
+    }
+
     /// Materialise the arrival schedule for `n` requests.
     pub fn arrivals(&self) -> Vec<Arrival> {
         let process = match &self.load {
@@ -208,14 +236,14 @@ impl Scenario {
         let mut serve = ServeConfig::new(cfg, self.policy.clone());
         serve.max_iterations = self.max_iterations;
         serve.pool_tokens =
-            ((cfg.model.batch_slots * cfg.model.max_seq) as f64 * self.pool_frac) as usize;
+            ((self.effective_slots(cfg) * cfg.model.max_seq) as f64 * self.pool_frac) as usize;
         serve
     }
 
     /// Build the batch-mode serving engine (virtual clock) without
     /// running it.
     pub fn build_engine(&self, cfg: &Config) -> ServingEngine<MockBackend> {
-        let backend = MockBackend::new(cfg.model.batch_slots, cfg).with_cost(self.cost);
+        let backend = MockBackend::new(self.effective_slots(cfg), cfg).with_cost(self.cost);
         let mut serve = self.serve_config(cfg);
         serve.clock = ClockSpec::Virtual;
         ServingEngine::new(cfg, serve, backend, self.predictor.build(cfg))
@@ -224,7 +252,7 @@ impl Scenario {
     /// Engine for the online (channel-fed) path on the wall clock: live
     /// admissions are stamped with real time as they arrive.
     pub fn build_online_engine(&self, cfg: &Config) -> ServingEngine<MockBackend> {
-        let backend = MockBackend::new(cfg.model.batch_slots, cfg).with_cost(self.cost);
+        let backend = MockBackend::new(self.effective_slots(cfg), cfg).with_cost(self.cost);
         let serve = self.serve_config(cfg); // ClockSpec::Wall default
         ServingEngine::new(cfg, serve, backend, self.predictor.build(cfg))
     }
@@ -433,6 +461,37 @@ mod tests {
         for (_, _, report) in &rows {
             assert_eq!(report.summary.n, 12);
         }
+    }
+
+    #[test]
+    fn paper_scale_batch_slots_speed_up_burst_serving() {
+        // ROADMAP "scale the mock substrate": the paper batches 100+
+        // sequences on an A100. With a per-slot decode cost, a 128-slot
+        // backend pays more per iteration but retires ~16x the tokens —
+        // a burst must finish in less virtual time than on 8 slots.
+        let cfg = cfg();
+        let cost = CostModel {
+            decode_step: 1.0e-3,
+            decode_per_slot: 0.25e-3,
+            prefill_chunk: 1.2e-3,
+            readout: 0.2e-3,
+        };
+        assert!((cost.decode_cost(128) - (1.0e-3 + 128.0 * 0.25e-3)).abs() < 1e-12);
+        assert!(cost.decode_cost(128) < 128.0 * cost.decode_cost(1));
+        let base = Scenario::new(Policy::Trail { c: 0.8 })
+            .n(96)
+            .load(Load::Burst)
+            .cost(cost);
+        let small = base.clone().run(&cfg);
+        let big = base.slots(128).run(&cfg);
+        assert_eq!(small.summary.n, 96);
+        assert_eq!(big.summary.n, 96);
+        assert!(
+            big.wall_time < small.wall_time,
+            "128-slot burst ({:.3}s) must beat 8-slot ({:.3}s)",
+            big.wall_time,
+            small.wall_time
+        );
     }
 
     #[test]

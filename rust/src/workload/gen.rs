@@ -214,6 +214,56 @@ mod tests {
     }
 
     #[test]
+    fn embedded_fixture_pins_generator_stream() {
+        // Hermetic Python↔Rust golden (ROADMAP): the same vectors the
+        // AOT pipeline puts in artifacts/golden.json, but embedded in
+        // the crate (written by `python -m compile.fixture`), so the
+        // parity check runs from a fresh checkout with no artifacts.
+        // The fixture is generated from the Python defaults, which the
+        // embedded config mirrors verbatim.
+        let golden = crate::util::json::parse(include_str!("golden_fixture.json"))
+            .expect("embedded fixture parses");
+        let c = Config::embedded_default();
+
+        // Raw SplitMix64 stream (u64s travel as strings: > 2^53).
+        let expect: Vec<u64> = golden
+            .at(&["splitmix_seed42_u64"])
+            .as_arr()
+            .iter()
+            .map(|v| v.as_str().parse::<u64>().unwrap())
+            .collect();
+        assert!(!expect.is_empty());
+        let mut r = SplitMix64::new(42);
+        for e in expect {
+            assert_eq!(r.next_u64(), e);
+        }
+
+        // f64 stream: JSON round-trips shortest-repr doubles exactly.
+        let expect_f = golden.at(&["splitmix_seed7_f64"]).as_f64_vec();
+        assert!(!expect_f.is_empty());
+        let mut r = SplitMix64::new(7);
+        for e in expect_f {
+            assert_eq!(r.next_f64().to_bits(), e.to_bits());
+        }
+
+        // Full request-generation parity (prompts, responses, classes).
+        let jreqs = golden.at(&["requests_seed12345"]).as_arr();
+        assert!(!jreqs.is_empty());
+        let reqs = gen_requests(&c, jreqs.len(), 12345);
+        for (i, jr) in jreqs.iter().enumerate() {
+            assert_eq!(reqs[i].rid, jr.at(&["rid"]).as_i64() as u64);
+            assert_eq!(reqs[i].true_output_len, jr.at(&["true_output_len"]).as_usize());
+            let prompt: Vec<i32> =
+                jr.at(&["prompt"]).as_i64_vec().iter().map(|&x| x as i32).collect();
+            assert_eq!(reqs[i].prompt, prompt, "prompt mismatch for request {i}");
+            let response: Vec<i32> =
+                jr.at(&["response"]).as_i64_vec().iter().map(|&x| x as i32).collect();
+            assert_eq!(reqs[i].response, response, "response mismatch for request {i}");
+            assert_eq!(reqs[i].length_class(&c.bins), jr.at(&["length_class"]).as_usize());
+        }
+    }
+
+    #[test]
     fn lengths_within_bounds_and_heavy_tailed() {
         let c = cfg();
         let reqs = gen_requests(&c, 2000, 777);

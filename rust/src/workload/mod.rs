@@ -1,9 +1,12 @@
 //! Workload generation: synthetic Alpaca-like requests (bit-identical to
-//! `python/compile/workload.py`) and arrival processes (Poisson, burst,
-//! replay).
+//! `python/compile/workload.py`), arrival processes (Poisson, burst,
+//! replay), and trace-driven multi-tenant workloads (seeded MMPP/on-off
+//! phases with replayable JSONL traces).
 
 pub mod arrivals;
 pub mod gen;
+pub mod trace;
 
 pub use arrivals::{Arrival, ArrivalProcess};
 pub use gen::{gen_requests, RequestSpec, WorkloadGen};
+pub use trace::{RatePhase, TenantProfile, TraceEntry, TraceWorkload};

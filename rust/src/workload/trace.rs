@@ -1,0 +1,353 @@
+//! Trace-driven workloads: reproducible bursty / diurnal / multi-tenant
+//! arrival traces on top of the synthetic request generator.
+//!
+//! A [`TraceWorkload`] is a set of [`TenantProfile`]s, each a Poisson
+//! source whose rate is modulated by a cycled list of [`RatePhase`]s —
+//! the classic MMPP / on-off construction: an empty phase list is a
+//! steady Poisson tenant; `[(hi, d1), (lo, d2)]` is an on-off burst
+//! process; several graded phases approximate a diurnal cycle. Tenants
+//! also carry a `mu_shift` on the workload's log-normal output-length
+//! parameter, so multi-tenant traces mix short interactive and long
+//! batch requests (the size skew that makes size-based scheduling and
+//! cross-replica migration matter).
+//!
+//! `generate` materialises a deterministic, time-sorted [`TraceEntry`]
+//! stream from one seed; `to_specs_arrivals` adapts it to the engine's
+//! existing replay path (`ReplaySource` via `ServingEngine::run`), and
+//! `save_jsonl`/`load_jsonl` round-trip a trace through a line-oriented
+//! JSON file so a workload can be replayed byte-identically elsewhere.
+
+use crate::config::Config;
+use crate::util::json::{parse, Json};
+use crate::util::rng::SplitMix64;
+use crate::workload::gen::WorkloadGen;
+use crate::workload::{Arrival, RequestSpec};
+
+/// One arrival in a materialised trace.
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    /// Arrival time (seconds on the virtual timeline).
+    pub at: f64,
+    /// Index into the generating workload's tenant list.
+    pub tenant: u32,
+    pub spec: RequestSpec,
+}
+
+/// Piecewise-constant rate modulation: the tenant's base rate is
+/// multiplied by `rate_mult` for `duration` seconds; the list cycles.
+#[derive(Clone, Copy, Debug)]
+pub struct RatePhase {
+    pub rate_mult: f64,
+    pub duration: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TenantProfile {
+    pub name: String,
+    /// Base Poisson arrival rate (requests/second).
+    pub rate: f64,
+    /// Shift applied to the workload's `lognormal_mu`: positive means
+    /// longer outputs for this tenant (outputs stay clipped to the
+    /// configured `[min_output, max_output]`).
+    pub mu_shift: f64,
+    /// Cycled modulation phases; empty = constant rate.
+    pub phases: Vec<RatePhase>,
+}
+
+impl TenantProfile {
+    pub fn steady(name: &str, rate: f64) -> TenantProfile {
+        TenantProfile {
+            name: name.to_string(),
+            rate,
+            mu_shift: 0.0,
+            phases: Vec::new(),
+        }
+    }
+
+    /// On-off burst tenant: `hi`×rate for `hi_dur` seconds, then
+    /// `lo`×rate for `lo_dur` seconds, repeating.
+    pub fn on_off(name: &str, rate: f64, hi: f64, hi_dur: f64, lo: f64, lo_dur: f64) -> TenantProfile {
+        TenantProfile {
+            name: name.to_string(),
+            rate,
+            mu_shift: 0.0,
+            phases: vec![
+                RatePhase { rate_mult: hi, duration: hi_dur },
+                RatePhase { rate_mult: lo, duration: lo_dur },
+            ],
+        }
+    }
+
+    pub fn mu_shift(mut self, mu_shift: f64) -> TenantProfile {
+        self.mu_shift = mu_shift;
+        self
+    }
+}
+
+/// A reproducible multi-tenant arrival process.
+#[derive(Clone, Debug)]
+pub struct TraceWorkload {
+    pub tenants: Vec<TenantProfile>,
+}
+
+impl TraceWorkload {
+    pub fn new(tenants: Vec<TenantProfile>) -> TraceWorkload {
+        TraceWorkload { tenants }
+    }
+
+    /// Single steady Poisson tenant (the Fig 6 serving regime).
+    pub fn poisson(rate: f64) -> TraceWorkload {
+        TraceWorkload::new(vec![TenantProfile::steady("poisson", rate)])
+    }
+
+    /// Materialise the first `n` arrivals, time-sorted, specs drawn from
+    /// per-tenant seeded generator streams. Deterministic in `(cfg, n,
+    /// seed)`: tenant sub-seeds derive from one master stream in tenant
+    /// order, and merge ties break to the lower tenant index. rids are
+    /// re-assigned to the global trace order so they stay unique across
+    /// tenants (and across the replicas a co-sim dispatches them to).
+    pub fn generate(&self, cfg: &Config, n: usize, seed: u64) -> Vec<TraceEntry> {
+        assert!(!self.tenants.is_empty(), "trace workload needs >= 1 tenant");
+        let mut master = SplitMix64::new(seed);
+        let mut streams: Vec<(Vec<f64>, WorkloadGen, usize)> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let spec_seed = master.next_u64();
+                let mut arr_rng = SplitMix64::new(master.next_u64());
+                let times = tenant_arrivals(t, n, &mut arr_rng);
+                let mut tcfg = cfg.clone();
+                tcfg.workload.lognormal_mu += t.mu_shift;
+                (times, WorkloadGen::new(&tcfg, spec_seed), 0usize)
+            })
+            .collect();
+        let mut out: Vec<TraceEntry> = Vec::with_capacity(n);
+        while out.len() < n {
+            let mut best: Option<(f64, usize)> = None;
+            for (ti, (times, _, pos)) in streams.iter().enumerate() {
+                let at = times[*pos];
+                if best.map_or(true, |(bat, _)| at < bat) {
+                    best = Some((at, ti));
+                }
+            }
+            let (at, ti) = best.expect("non-empty tenant set");
+            let (_, gen, pos) = &mut streams[ti];
+            *pos += 1;
+            let mut spec = gen.next_request();
+            spec.rid = out.len() as u64;
+            out.push(TraceEntry {
+                at,
+                tenant: ti as u32,
+                spec,
+            });
+        }
+        out
+    }
+}
+
+/// First `n` arrival times of one tenant: exact inhomogeneous-Poisson
+/// simulation over the piecewise-constant rate (draw Exp(1), spend it
+/// across phases at `rate × mult` per second).
+fn tenant_arrivals(p: &TenantProfile, n: usize, rng: &mut SplitMix64) -> Vec<f64> {
+    assert!(
+        p.rate > 0.0
+            && (p.phases.is_empty()
+                || p.phases.iter().any(|ph| ph.rate_mult > 0.0 && ph.duration > 0.0)),
+        "tenant '{}' can never produce an arrival",
+        p.name
+    );
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    let mut phase_idx = 0usize;
+    let (mut rate, mut phase_left) = if p.phases.is_empty() {
+        (p.rate, f64::INFINITY)
+    } else {
+        (p.rate * p.phases[0].rate_mult, p.phases[0].duration)
+    };
+    while out.len() < n {
+        let mut e = -(1.0 - rng.next_f64()).ln(); // Exp(1) budget
+        loop {
+            if rate > 0.0 && e <= rate * phase_left {
+                let dt = e / rate;
+                t += dt;
+                phase_left -= dt;
+                out.push(t);
+                break;
+            }
+            // Budget outlives this phase: consume it and roll over.
+            e -= rate * phase_left;
+            t += phase_left;
+            phase_idx = (phase_idx + 1) % p.phases.len();
+            phase_left = p.phases[phase_idx].duration;
+            rate = p.rate * p.phases[phase_idx].rate_mult;
+        }
+    }
+    out
+}
+
+/// Adapt a trace to the engine's replay path: `(specs, arrivals)` for
+/// `ServingEngine::run` / `ReplaySource` (entries are already
+/// time-sorted, so `arrivals[i].idx == i`).
+pub fn to_specs_arrivals(entries: &[TraceEntry]) -> (Vec<RequestSpec>, Vec<Arrival>) {
+    let specs = entries.iter().map(|e| e.spec.clone()).collect();
+    let arrivals = entries
+        .iter()
+        .enumerate()
+        .map(|(idx, e)| Arrival { at: e.at, idx })
+        .collect();
+    (specs, arrivals)
+}
+
+fn arr_i32(xs: &[i32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn entry_to_json(e: &TraceEntry) -> Json {
+    Json::obj(vec![
+        ("at", Json::Num(e.at)),
+        ("tenant", Json::Num(e.tenant as f64)),
+        ("rid", Json::Num(e.spec.rid as f64)),
+        ("prompt", arr_i32(&e.spec.prompt)),
+        ("true_output_len", Json::Num(e.spec.true_output_len as f64)),
+        ("response", arr_i32(&e.spec.response)),
+    ])
+}
+
+fn entry_from_json(j: &Json) -> TraceEntry {
+    TraceEntry {
+        at: j.at(&["at"]).as_f64(),
+        tenant: j.at(&["tenant"]).as_i64() as u32,
+        spec: RequestSpec {
+            rid: j.at(&["rid"]).as_i64() as u64,
+            prompt: j.at(&["prompt"]).as_i64_vec().iter().map(|&x| x as i32).collect(),
+            true_output_len: j.at(&["true_output_len"]).as_usize(),
+            response: j.at(&["response"]).as_i64_vec().iter().map(|&x| x as i32).collect(),
+        },
+    }
+}
+
+/// Write a trace as JSONL (one entry per line, keys sorted — the file is
+/// byte-deterministic for a given trace).
+pub fn save_jsonl(entries: &[TraceEntry], path: &str) -> std::io::Result<()> {
+    let mut s = String::new();
+    for e in entries {
+        s.push_str(&entry_to_json(e).to_string());
+        s.push('\n');
+    }
+    std::fs::write(path, s)
+}
+
+/// Read a JSONL trace back (inverse of [`save_jsonl`]).
+pub fn load_jsonl(path: &str) -> Result<Vec<TraceEntry>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| parse(l).map(|j| entry_from_json(&j)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config::embedded_default()
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_sorted() {
+        let w = TraceWorkload::new(vec![
+            TenantProfile::steady("a", 20.0),
+            TenantProfile::on_off("b", 10.0, 3.0, 1.0, 0.2, 3.0).mu_shift(0.5),
+        ]);
+        let t1 = w.generate(&cfg(), 80, 7);
+        let t2 = w.generate(&cfg(), 80, 7);
+        assert_eq!(t1.len(), 80);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.at.to_bits(), b.at.to_bits());
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.spec.rid, b.spec.rid);
+            assert_eq!(a.spec.prompt, b.spec.prompt);
+            assert_eq!(a.spec.response, b.spec.response);
+        }
+        for (i, pair) in t1.windows(2).enumerate() {
+            assert!(pair[0].at <= pair[1].at, "unsorted at {i}");
+        }
+        for (i, e) in t1.iter().enumerate() {
+            assert_eq!(e.spec.rid, i as u64, "rids must follow trace order");
+        }
+        // Both tenants contribute.
+        assert!(t1.iter().any(|e| e.tenant == 0));
+        assert!(t1.iter().any(|e| e.tenant == 1));
+    }
+
+    #[test]
+    fn on_off_phases_modulate_density() {
+        // hi phase at 10x for 1s, off (0x) for 1s: arrivals concentrate
+        // in the first second of every 2s cycle.
+        let w = TraceWorkload::new(vec![TenantProfile::on_off("b", 30.0, 2.0, 1.0, 0.0, 1.0)]);
+        let t = w.generate(&cfg(), 200, 11);
+        for e in &t {
+            let cycle_pos = e.at % 2.0;
+            assert!(cycle_pos <= 1.0 + 1e-9, "arrival in the off phase: {}", e.at);
+        }
+    }
+
+    #[test]
+    fn mu_shift_lengthens_outputs() {
+        let short = TraceWorkload::new(vec![TenantProfile::steady("s", 10.0).mu_shift(-0.5)]);
+        let long = TraceWorkload::new(vec![TenantProfile::steady("l", 10.0).mu_shift(0.9)]);
+        let c = cfg();
+        let mean = |t: &[TraceEntry]| {
+            t.iter().map(|e| e.spec.true_output_len as f64).sum::<f64>() / t.len() as f64
+        };
+        let ts = short.generate(&c, 300, 5);
+        let tl = long.generate(&c, 300, 5);
+        assert!(
+            mean(&tl) > mean(&ts) * 1.5,
+            "mu_shift must skew sizes: {} vs {}",
+            mean(&tl),
+            mean(&ts)
+        );
+        for e in ts.iter().chain(&tl) {
+            assert!(e.spec.true_output_len <= c.workload.max_output);
+            assert!(e.spec.true_output_len >= c.workload.min_output);
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_exact() {
+        let w = TraceWorkload::new(vec![
+            TenantProfile::steady("a", 25.0),
+            TenantProfile::steady("b", 5.0).mu_shift(0.8),
+        ]);
+        let t = w.generate(&cfg(), 40, 99);
+        let path = std::env::temp_dir().join("trail_trace_roundtrip.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        save_jsonl(&t, &path).unwrap();
+        let back = load_jsonl(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.len(), t.len());
+        for (a, b) in t.iter().zip(&back) {
+            assert_eq!(a.at.to_bits(), b.at.to_bits(), "arrival time must survive");
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.spec.rid, b.spec.rid);
+            assert_eq!(a.spec.prompt, b.spec.prompt);
+            assert_eq!(a.spec.true_output_len, b.spec.true_output_len);
+            assert_eq!(a.spec.response, b.spec.response);
+        }
+    }
+
+    #[test]
+    fn replay_adapter_feeds_the_engine_source() {
+        let w = TraceWorkload::poisson(50.0);
+        let t = w.generate(&cfg(), 12, 3);
+        let (specs, arrivals) = to_specs_arrivals(&t);
+        assert_eq!(specs.len(), 12);
+        assert_eq!(arrivals.len(), 12);
+        for (i, a) in arrivals.iter().enumerate() {
+            assert_eq!(a.idx, i);
+            assert_eq!(a.at, t[i].at);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Cross-replica migration: KV pool accounting across a migration
+//! (slots freed on the source, re-acquired on the target, no double
+//! free — the `KvManager` ownership asserts turn any double accounting
+//! into a panic), plus end-to-end drains of migrated work.
+
+use trail::config::Config;
+use trail::coordinator::{MockBackend, Phase, Policy, ServingEngine};
+use trail::testkit::Scenario;
+use trail::workload::RequestSpec;
+
+fn cfg() -> Config {
+    Config::embedded_default()
+}
+
+fn spec(rid: u64, plen: usize, n_out: usize) -> RequestSpec {
+    RequestSpec {
+        rid,
+        prompt: vec![9; plen],
+        true_output_len: n_out,
+        response: vec![8; n_out.saturating_sub(1)],
+    }
+}
+
+fn engine(cfg: &Config, policy: Policy) -> ServingEngine<MockBackend> {
+    Scenario::new(policy).build_engine(cfg)
+}
+
+fn drain(e: &mut ServingEngine<MockBackend>) -> usize {
+    let mut finished = 0;
+    while e.any_schedulable() {
+        let out = e.step().expect("step");
+        assert!(out.worked, "engine wedged mid-drain");
+        finished += out.finished.len();
+    }
+    finished
+}
+
+#[test]
+fn waiting_request_migrates_without_touching_kv() {
+    let cfg = cfg();
+    let mut a = engine(&cfg, Policy::Trail { c: 0.8 });
+    let mut b = engine(&cfg, Policy::Trail { c: 0.8 });
+    for i in 0..12 {
+        a.admit(spec(i, 16, 40), Some(0.0));
+    }
+    let before = a.status();
+    assert_eq!(before.live, 12);
+    assert_eq!(before.resident, 0);
+    assert_eq!(before.kv_used_tokens, 0);
+
+    // Nothing has started: the migrated request is a pure queue move.
+    let req = a.take_migratable().expect("a waiting request is migratable");
+    assert_eq!(req.phase, Phase::Waiting);
+    assert!(req.slot.is_none());
+    assert_eq!(req.n_migrations, 1);
+    let after = a.status();
+    assert_eq!(after.live, 11);
+    assert_eq!(after.kv_used_tokens, 0);
+
+    b.sync_clock(a.now());
+    b.admit_migrated(req);
+    assert_eq!(b.status().live, 1);
+
+    assert_eq!(drain(&mut a), 11);
+    assert_eq!(drain(&mut b), 1);
+    assert_eq!(a.metrics.n_migrated_out, 1);
+    assert_eq!(b.metrics.n_migrated_in, 1);
+    // The hop is attributed to the engine where the request finished.
+    assert_eq!(a.metrics.summary_row().migrations, 0);
+    assert_eq!(b.metrics.summary_row().migrations, 1);
+}
+
+#[test]
+fn resident_migration_frees_source_slots_and_reacquires_on_target() {
+    let cfg = cfg();
+    // c = 1.0 (plain SRPT): requests stay preemptable — and therefore
+    // migratable — until they finish.
+    let mut a = engine(&cfg, Policy::Trail { c: 1.0 });
+    let mut b = engine(&cfg, Policy::Trail { c: 1.0 });
+    for i in 0..3 {
+        a.admit(spec(i, 16, 120), Some(0.0));
+    }
+    // Run a few iterations: everyone becomes resident and generates.
+    for _ in 0..8 {
+        assert!(a.step().expect("step").worked);
+    }
+    let before = a.status();
+    assert_eq!(before.resident, 3);
+    assert!(before.kv_used_tokens > 0);
+
+    let req = a.take_migratable().expect("an unlocked resident is migratable");
+    assert!(req.slot.is_none(), "source must strip the slot");
+    assert!(req.generated > 0);
+    assert_eq!(req.phase, Phase::Discarded, "partial progress => recompute on target");
+    assert_eq!(req.prefilled, 0);
+    assert_eq!(req.kv_written, 0);
+
+    // Source accounting: one slot and its charged tokens released.
+    let after = a.status();
+    assert_eq!(after.resident, 2);
+    assert_eq!(after.live, 2);
+    assert!(
+        after.kv_used_tokens < before.kv_used_tokens,
+        "migration must release the victim's KV charge ({} -> {})",
+        before.kv_used_tokens,
+        after.kv_used_tokens
+    );
+
+    // Target accounting: the request re-acquires a slot and recomputes.
+    b.sync_clock(a.now());
+    b.admit_migrated(req);
+    assert!(b.step().expect("step").worked);
+    let bst = b.status();
+    assert_eq!(bst.resident, 1);
+    assert!(bst.kv_used_tokens > 0);
+
+    // Both drain fully — a double-free or stale charge would panic in
+    // KvManager long before these counts could come out right.
+    assert_eq!(drain(&mut a), 2);
+    assert_eq!(drain(&mut b), 1);
+    assert_eq!(a.status().kv_used_tokens, 0);
+    assert_eq!(b.status().kv_used_tokens, 0);
+    assert_eq!(b.metrics.summary_row().migrations, 1);
+    assert_eq!(b.metrics.latency.len(), 1);
+}
+
+#[test]
+fn fcfs_locks_started_requests_against_migration() {
+    let cfg = cfg();
+    let mut a = engine(&cfg, Policy::Fcfs);
+    a.admit(spec(0, 16, 60), Some(0.0));
+    for _ in 0..4 {
+        a.step().expect("step");
+    }
+    // The only request is running and FCFS never preempts: nothing to take.
+    assert!(a.take_migratable().is_none());
+    // A second, never-started request is fair game.
+    a.admit(spec(1, 16, 60), None);
+    // One step so the engine settles target membership; slot pressure is
+    // zero (8 slots), so request 1 becomes resident too — and locked.
+    a.step().expect("step");
+    assert!(a.take_migratable().is_none());
+    assert_eq!(drain(&mut a), 2);
+}
+
+#[test]
+fn migrated_request_keeps_arrival_and_progress_counters() {
+    let cfg = cfg();
+    let mut a = engine(&cfg, Policy::Trail { c: 1.0 });
+    let mut b = engine(&cfg, Policy::Trail { c: 1.0 });
+    a.admit(spec(0, 16, 80), Some(0.25));
+    a.sync_clock(0.25); // the co-sim driver pulls the clock to the arrival
+    for _ in 0..6 {
+        a.step().expect("step");
+    }
+    let req = a.take_migratable().expect("migratable");
+    assert_eq!(req.arrival, 0.25, "arrival stamp must travel");
+    let source_now = a.now();
+    b.sync_clock(source_now);
+    b.admit_migrated(req);
+    let mut finished = Vec::new();
+    while b.any_schedulable() {
+        finished.extend(b.step().expect("step").finished);
+    }
+    assert_eq!(finished.len(), 1);
+    assert_eq!(finished[0].n_tokens, 80, "migration resumes, it does not restart");
+    assert!(
+        finished[0].latency >= source_now - 0.25,
+        "latency must span the pre-migration queueing time"
+    );
+}
