@@ -5,7 +5,8 @@
 # (`Config::embedded_default`) and deterministic synthetic probe weights
 # when the `artifacts/` directory is absent.
 
-.PHONY: build test bench-sim bench-dispatch bench-sim-json bench-sim-diff bench-sim-refresh fmt artifacts clean
+.PHONY: build test bench-sim bench-dispatch bench-sim-json bench-sim-diff bench-sim-refresh \
+        bench-sched bench-sched-diff bench-sched-refresh fmt artifacts clean
 
 build:
 	cargo build --release
@@ -45,6 +46,24 @@ bench-sim-diff: bench-sim-json
 # in the same PR that caused it (see docs/simlab.md).
 bench-sim-refresh:
 	cargo run --release --bin trail-serve -- sim --out benchmarks/BENCH_seed.json
+
+# Scheduler-scale selector comparison (docs/scheduler.md): reference
+# full-sort vs incremental rank index over the scale-1k / scale-10k /
+# scale-replicas grid. Run twice and `cmp` byte-for-byte — the hard
+# determinism gate for the selector work counters.
+bench-sched:
+	cargo run --release --bin trail-serve -- sched --out BENCH_sched.json
+	cargo run --release --bin trail-serve -- sched --out BENCH_sched.run2.json
+	cmp BENCH_sched.json BENCH_sched.run2.json
+	rm -f BENCH_sched.run2.json
+
+# Diff against the checked-in scaling baseline (advisory in CI, same
+# libm caveat as bench-sim-diff).
+bench-sched-diff: bench-sched
+	diff -u benchmarks/BENCH_sched.json BENCH_sched.json
+
+bench-sched-refresh:
+	cargo run --release --bin trail-serve -- sched --out benchmarks/BENCH_sched.json
 
 fmt:
 	cargo fmt

@@ -22,6 +22,7 @@ fn main() {
         policies: vec![Policy::Fcfs, Policy::Trail { c: 0.8 }],
         replica_counts: vec![2],
         migration: true,
+        tenant_breakdown: false,
     };
     let report: BenchReport = run_sweep(&cfg, &sweep).expect("sweep");
     print!("{}", report.render_table());

@@ -3,22 +3,31 @@
 A line-faithful transcription of the deterministic co-simulation path:
 ``MockBackend`` cost accrual, ``KvManager`` accounting,
 ``ServingEngine::step`` (select_targets / ensure_resident / resolve_oom /
-chunked prefill / decode / finish), the ``OraclePredictor`` (exact
+chunked prefill / decode / finish) under BOTH selectors — the reference
+full-sort path and the incremental ``RankIndex`` (lazy bucket queue +
+pairing-heap fallback, ``rust/src/coordinator/rank_index.rs``) with its
+exact selector-op accounting — the ``OraclePredictor`` (exact
 refinement), ``TraceWorkload`` generation, the ``SimDriver`` event loop
-with cross-replica migration, and the byte-format of
-``BenchReport::to_json_string``.
+with cross-replica migration, per-tenant latency breakdowns, and the
+byte-formats of ``BenchReport::to_json_string`` (bench + sched schemas).
 
-Purpose: cross-language pinning of ``benchmarks/BENCH_seed.json``. The
-checked-in baseline is generated here and must match what
-``trail-serve sim`` (the Rust binary) produces bit-for-bit — every
-arithmetic operation below mirrors the Rust order of operations, all
-draws come from the shared SplitMix64 mirror, and floats are IEEE
-doubles in both languages. (The only platform sensitivity is libm
-``exp``/``log`` in the workload generator; regenerate with
-``make bench-sim-refresh`` if a libm ever disagrees.)
+Purpose: cross-language pinning of ``benchmarks/BENCH_seed.json`` and
+``benchmarks/BENCH_sched.json``. The checked-in baselines are generated
+here and must match what ``trail-serve sim`` / ``trail-serve sched``
+(the Rust binary) produce bit-for-bit — every arithmetic operation
+below mirrors the Rust order of operations, all draws come from the
+shared SplitMix64 mirror, and floats are IEEE doubles in both
+languages. Both selectors must reproduce the seed baseline
+byte-for-byte (``--selector reference|indexed``) — that equivalence is
+how the rank-index rewrite was validated. (The only platform
+sensitivity is libm ``exp``/``log`` in the workload generator;
+regenerate with ``make bench-sim-refresh`` / ``bench-sched-refresh``
+if a libm ever disagrees.)
 
 Usage:
     cd python && python3 simref.py sweep --out ../benchmarks/BENCH_seed.json
+    cd python && python3 simref.py sweep --selector reference --out /tmp/x.json
+    cd python && python3 simref.py sched --out ../benchmarks/BENCH_sched.json
 """
 
 import math
@@ -123,6 +132,276 @@ def policy_name(policy):
     return "trail-c" + (str(int(c)) if c == int(c) else repr(c))
 
 
+# ---------------------------------------------------------------------------
+# Incremental rank index (rust/src/coordinator/rank_index.rs)
+# ---------------------------------------------------------------------------
+#
+# A lazy bucket queue over quantized rank keys with a pairing-heap
+# fallback for unbounded keys (locked = -inf tier, negative keys,
+# overflow / non-finite keys). Entries are (rank, version) pairs; updates
+# push a fresh version eagerly and leave the old entry to be skipped
+# lazily at pop time, so pop order is always the exact total rank order
+# regardless of internal shape. The `ops` counter is the selector work
+# metric pinned into BENCH_sched.json: +1 per entry pushed (insert /
+# update-with-change / reinsert / rebuild), +1 per update rank check,
+# +1 per remove, +1 per physical entry examined by pop (stale or live).
+
+RANK_BUCKET_WIDTH = 1.0
+MAX_BUCKETS = 4096
+HEAP_NONE = -1
+
+
+class PairingHeap:
+    """Arena pairing heap over (rank, version) entries; `maxdir` reverses
+    the comparator. Mirrors rust/src/coordinator/rank_index.rs node for
+    node (child/sibling links, two-pass merge pop)."""
+
+    def __init__(self, maxdir):
+        self.maxdir = maxdir
+        self.entries = []   # entry payloads
+        self.child = []
+        self.sibling = []
+        self.free = []
+        self.root = HEAP_NONE
+
+    def _less(self, a, b):
+        return (a > b) if self.maxdir else (a < b)
+
+    def _alloc(self, e):
+        if self.free:
+            n = self.free.pop()
+            self.entries[n] = e
+            self.child[n] = HEAP_NONE
+            self.sibling[n] = HEAP_NONE
+            return n
+        self.entries.append(e)
+        self.child.append(HEAP_NONE)
+        self.sibling.append(HEAP_NONE)
+        return len(self.entries) - 1
+
+    def _meld(self, a, b):
+        if a == HEAP_NONE:
+            return b
+        if b == HEAP_NONE:
+            return a
+        if self._less(self.entries[b], self.entries[a]):
+            a, b = b, a
+        self.sibling[b] = self.child[a]
+        self.child[a] = b
+        return a
+
+    def push(self, e):
+        self.root = self._meld(self.root, self._alloc(e))
+
+    def pop(self):
+        if self.root == HEAP_NONE:
+            return None
+        n = self.root
+        e = self.entries[n]
+        # Two-pass merge of the child chain.
+        pairs = []
+        c = self.child[n]
+        while c != HEAP_NONE:
+            nxt = self.sibling[c]
+            self.sibling[c] = HEAP_NONE
+            if nxt != HEAP_NONE:
+                nn = self.sibling[nxt]
+                self.sibling[nxt] = HEAP_NONE
+                pairs.append(self._meld(c, nxt))
+                c = nn
+            else:
+                pairs.append(c)
+                break
+        root = HEAP_NONE
+        for p in reversed(pairs):
+            root = self._meld(root, p)
+        self.root = root
+        self.entries[n] = None
+        self.free.append(n)
+        return e
+
+    def clear(self):
+        self.entries = []
+        self.child = []
+        self.sibling = []
+        self.free = []
+        self.root = HEAP_NONE
+
+
+class RankIndex:
+    """Incremental priority index over policy ranks; pop order is exactly
+    the sorted rank order (min-first, or max-first when `maxdir`)."""
+
+    def __init__(self, maxdir=False, width=RANK_BUCKET_WIDTH):
+        self.maxdir = maxdir
+        self.width = width
+        # Grown on demand up to MAX_BUCKETS (mirrors the Rust index).
+        self.buckets = []
+        # Next candidate bucket for pop: min direction scans upward from
+        # cursor, max direction scans downward.
+        self.cursor = MAX_BUCKETS if not maxdir else 0
+        self.front = PairingHeap(maxdir)   # locked entries (-inf tier)
+        self.under = PairingHeap(maxdir)   # finite keys < 0
+        self.over = PairingHeap(maxdir)    # keys >= MAX_BUCKETS*width, non-finite
+        self.live = {}                     # rid -> (rank, version)
+        self.vgen = 0
+        self.len = 0
+        self.n_entries = 0                 # physical entries incl. stale
+        self.ops = 0
+
+    # --- internal ---
+
+    def _pop_less(self, a, b):
+        return (a > b) if self.maxdir else (a < b)
+
+    def _push_entry(self, e):
+        self.ops += 1
+        self.n_entries += 1
+        rank = e[0]
+        locked, key = rank[0] == 0, rank[1]
+        if locked:
+            self.front.push(e)
+            return
+        if not math.isfinite(key):
+            (self.under if key < 0.0 else self.over).push(e)
+            return
+        if key < 0.0:
+            self.under.push(e)
+            return
+        b = int(math.floor(key / self.width))
+        if b >= MAX_BUCKETS:
+            self.over.push(e)
+            return
+        while len(self.buckets) <= b:
+            self.buckets.append([])
+        bucket = self.buckets[b]
+        # Keep the bucket sorted descending in pop order (last element
+        # pops next); binary search for the unique insertion point.
+        lo, hi = 0, len(bucket)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self._pop_less(e, bucket[mid]):
+                lo = mid + 1
+            else:
+                hi = mid
+        bucket.insert(lo, e)
+        if not self.maxdir:
+            if b < self.cursor:
+                self.cursor = b
+        else:
+            if b > self.cursor:
+                self.cursor = b
+
+    def _is_live(self, e):
+        cur = self.live.get(e[0][3])
+        return cur is not None and cur[1] == e[1]
+
+    def _maybe_compact(self):
+        if self.n_entries > 4 * self.len + 64:
+            for bucket in self.buckets:
+                del bucket[:]
+            self.front.clear()
+            self.under.clear()
+            self.over.clear()
+            self.cursor = MAX_BUCKETS if not self.maxdir else 0
+            self.n_entries = 0
+            for rid in self.live:
+                rank, version = self.live[rid]
+                self._push_entry((rank, version))
+
+    # --- public ---
+
+    def insert(self, rid, rank):
+        assert rid not in self.live, f"rank index: duplicate insert of rid {rid}"
+        self._maybe_compact()
+        version = self.vgen
+        self.vgen += 1
+        self.live[rid] = (rank, version)
+        self.len += 1
+        self._push_entry((rank, version))
+
+    def update(self, rid, rank):
+        cur = self.live.get(rid)
+        assert cur is not None, f"rank index: update of absent rid {rid}"
+        self.ops += 1
+        if cur[0] == rank:
+            return
+        self._maybe_compact()
+        version = self.vgen
+        self.vgen += 1
+        self.live[rid] = (rank, version)
+        self._push_entry((rank, version))
+
+    def remove(self, rid):
+        assert rid in self.live, f"rank index: remove of absent rid {rid}"
+        self.ops += 1
+        del self.live[rid]
+        self.len -= 1
+
+    def reinsert(self, e):
+        """Put back an entry returned by pop (same rank + version)."""
+        rid = e[0][3]
+        assert rid not in self.live, f"rank index: reinsert of live rid {rid}"
+        self._maybe_compact()
+        self.live[rid] = (e[0], e[1])
+        self.len += 1
+        self._push_entry(e)
+
+    def _pop_heap(self, heap):
+        while True:
+            e = heap.pop()
+            if e is None:
+                return None
+            self.ops += 1
+            self.n_entries -= 1
+            if self._is_live(e):
+                del self.live[e[0][3]]
+                self.len -= 1
+                return e
+
+    def pop(self):
+        """Remove and return the next entry in pop order, or None."""
+        order = (
+            [self.over, None, self.under, self.front]
+            if self.maxdir
+            else [self.front, self.under, None, self.over]
+        )
+        for tier in order:
+            if tier is not None:
+                e = self._pop_heap(tier)
+                if e is not None:
+                    return e
+                continue
+            # Bucket tier: scan from the cursor.
+            if not self.buckets:
+                continue
+            while True:
+                if not self.maxdir:
+                    while self.cursor < len(self.buckets) and not self.buckets[self.cursor]:
+                        self.cursor += 1
+                    if self.cursor >= len(self.buckets):
+                        break
+                else:
+                    while self.cursor > 0 and not self.buckets[self.cursor]:
+                        self.cursor -= 1
+                    if not self.buckets[self.cursor]:
+                        break
+                bucket = self.buckets[self.cursor]
+                found = None
+                while bucket:
+                    e = bucket.pop()
+                    self.ops += 1
+                    self.n_entries -= 1
+                    if self._is_live(e):
+                        del self.live[e[0][3]]
+                        self.len -= 1
+                        found = e
+                        break
+                if found is not None:
+                    return found
+        return None
+
+
 class Kv:
     """rust/src/coordinator/kv.rs"""
 
@@ -166,7 +445,7 @@ class Engine:
     refinement per token — OraclePredictor{noise, refine_exact, seed})."""
 
     def __init__(self, policy, slots, pool_tokens, noise=0.4, pred_seed=7,
-                 max_iterations=2_000_000):
+                 max_iterations=2_000_000, selector="indexed"):
         self.policy = policy
         self.slots = slots
         self.kv = Kv(slots, pool_tokens)
@@ -178,6 +457,12 @@ class Engine:
         self.pending_cost = 0.0
         self.n_iter = 0
         self.max_iterations = max_iterations
+        # Incremental rank index (always maintained; read when
+        # selector == "indexed") + the reference selector's scan counter.
+        self.selector = selector
+        self.sched_idx = RankIndex(maxdir=False)
+        self.res_idx = RankIndex(maxdir=True)
+        self.sel_ops_ref = 0
         # metrics
         self.lat = []
         self.ttft = []
@@ -218,6 +503,18 @@ class Engine:
             req.initial_pred = est
             req.pred_remaining = est
         self.reqs.append(req)
+        self.sched_idx.insert(req.rid, rank(self.policy, req))
+
+    def selector_ops(self):
+        if self.selector == "reference":
+            return self.sel_ops_ref
+        return self.sched_idx.ops + self.res_idx.ops
+
+    def reindex(self, r):
+        rk = rank(self.policy, r)
+        self.sched_idx.update(r.rid, rk)
+        if r.slot is not None:
+            self.res_idx.update(r.rid, rk)
 
     # --- migration (rust ServingEngine::take_migratable) ---
     def take_migratable(self):
@@ -248,8 +545,10 @@ class Engine:
         else:
             r = self.reqs[idx]
             self.reqs[idx] = self.reqs.pop()
+        self.sched_idx.remove(r.rid)
         if r.slot is not None:
             self.kv.free(r.slot, r.rid)
+            self.res_idx.remove(r.rid)
             r.slot = None
         r.prefilled = 0
         r.kv_written = 0
@@ -259,6 +558,7 @@ class Engine:
 
     def admit_migrated(self, r):
         self.reqs.append(r)
+        self.sched_idx.insert(r.rid, rank(self.policy, r))
 
     # --- step (rust step/step_inner) ---
     def step(self):
@@ -267,8 +567,14 @@ class Engine:
         if self.max_iterations > 0 and self.n_iter >= self.max_iterations:
             raise RuntimeError("max_iterations exceeded — scheduler stall?")
         reqs = self.reqs
+        rid_idx = None
+        if self.selector == "indexed":
+            rid_idx = {r.rid: i for i, r in enumerate(reqs)}
         self.resolve_oom(reqs)
-        target = self.select_targets(reqs)
+        if self.selector == "indexed":
+            target = self.select_targets_indexed(reqs, rid_idx)
+        else:
+            target = self.select_targets(reqs)
 
         # ---- prefill budget ----
         prefill_done_now = []
@@ -327,6 +633,8 @@ class Engine:
                     r.first_token_at = now
                 self.kv.charge(r.slot, r.rid, r.kv_written)
                 self.finish_if_done(r, now)
+                if r.phase != FINISHED:
+                    self.reindex(r)
             for idx in decoding:
                 r = reqs[idx]
                 r.kv_written = max(r.kv_written, r.plen + r.generated - 1 + 1)
@@ -334,6 +642,8 @@ class Engine:
                 r.pred_remaining = max(float(r.n_out - r.generated), 0.0)
                 self.kv.charge(r.slot, r.rid, r.kv_written)
                 self.finish_if_done(r, now)
+                if r.phase != FINISHED:
+                    self.reindex(r)
 
         used = self.kv.used_tokens()
         if used > self.peak_mem:
@@ -355,7 +665,9 @@ class Engine:
             r.phase = FINISHED
             if r.slot is not None:
                 self.kv.free(r.slot, r.rid)
+                self.res_idx.remove(r.rid)
                 r.slot = None
+            self.sched_idx.remove(r.rid)
             # Metrics::observe_finish
             self.n_finished += 1
             self.lat.append(r.finished_at - r.arrival)
@@ -383,15 +695,31 @@ class Engine:
                 break
             _, r = max(cands, key=lambda t: rank(self.policy, t[1]))
             self.kv.free(r.slot, r.rid)
+            self.res_idx.remove(r.rid)
             r.slot = None
             r.phase = DISCARDED
             r.prefilled = 0
             r.kv_written = 0
             r.n_discards += 1
+            self.sched_idx.update(r.rid, rank(self.policy, r))
+
+    def apply_phase_transitions(self, reqs, chosen):
+        for i, r in enumerate(reqs):
+            before = r.phase
+            if not chosen[i] and r.phase == RUNNING:
+                r.phase = PREEMPTED
+                r.n_preemptions += 1
+            elif chosen[i] and r.phase in (PREEMPTED, WAITING, DISCARDED):
+                r.phase = RUNNING if r.prefill_done() else PREFILLING
+            elif chosen[i] and r.phase == PREFILLING and r.prefill_done():
+                r.phase = RUNNING
+            if r.phase != before:
+                self.reindex(r)
 
     def select_targets(self, reqs):
         order = [i for i in range(len(reqs)) if reqs[i].phase != FINISHED]
         order.sort(key=lambda i: rank(self.policy, reqs[i]))
+        self.sel_ops_ref += len(order)
         target = []
         chosen = [False] * len(reqs)
         for idx in order:
@@ -400,14 +728,25 @@ class Engine:
             if self.ensure_resident(reqs, idx, chosen):
                 chosen[idx] = True
                 target.append(idx)
-        for i, r in enumerate(reqs):
-            if not chosen[i] and r.phase == RUNNING:
-                r.phase = PREEMPTED
-                r.n_preemptions += 1
-            elif chosen[i] and r.phase in (PREEMPTED, WAITING, DISCARDED):
-                r.phase = RUNNING if r.prefill_done() else PREFILLING
-            elif chosen[i] and r.phase == PREFILLING and r.prefill_done():
-                r.phase = RUNNING
+        self.apply_phase_transitions(reqs, chosen)
+        return target
+
+    def select_targets_indexed(self, reqs, rid_idx):
+        target = []
+        chosen = [False] * len(reqs)
+        held = []
+        while len(target) < self.slots:
+            ent = self.sched_idx.pop()
+            if ent is None:
+                break
+            idx = rid_idx[ent[0][3]]
+            if self.ensure_resident_indexed(reqs, idx, chosen, rid_idx):
+                chosen[idx] = True
+                target.append(idx)
+            held.append(ent)
+        for ent in held:
+            self.sched_idx.reinsert(ent)
+        self.apply_phase_transitions(reqs, chosen)
         return target
 
     def ensure_resident(self, reqs, idx, chosen):
@@ -420,6 +759,7 @@ class Engine:
             have_mem = self.kv.fits(min(need, CHUNK * 2))
             if have_slot and have_mem:
                 break
+            self.sel_ops_ref += len(reqs)
             victims = [
                 (i, r)
                 for i, r in enumerate(reqs)
@@ -439,16 +779,81 @@ class Engine:
             if vr[0] == 1 and cr[0] == 1 and vr[1] - cr[1] < EVICT_MARGIN:
                 return False
             self.kv.free(vreq.slot, vreq.rid)
+            self.res_idx.remove(vreq.rid)
             vreq.slot = None
             vreq.phase = DISCARDED
             vreq.prefilled = 0
             vreq.kv_written = 0
             vreq.n_discards += 1
+            self.sched_idx.update(vreq.rid, rank(self.policy, vreq))
         slot = self.kv.alloc(reqs[idx].rid)
         assert slot is not None
         reqs[idx].slot = slot
         reqs[idx].prefilled = 0
         reqs[idx].kv_written = 0
+        self.res_idx.insert(reqs[idx].rid, rank(self.policy, reqs[idx]))
+        return True
+
+    def ensure_resident_indexed(self, reqs, idx, chosen, rid_idx):
+        if reqs[idx].slot is not None:
+            return True
+        need = min(reqs[idx].prefill_target(), MAX_SEQ)
+        while True:
+            have_slot = self.kv.free_slot_available()
+            have_mem = self.kv.fits(min(need, CHUNK * 2))
+            if have_slot and have_mem:
+                break
+            if not policy_preemptive(self.policy):
+                return False
+            # Worst-ranked eligible victim: pop the resident max index;
+            # chosen entries are skipped, a locked entry means no
+            # unlocked resident remains (locked sorts last max-first).
+            held = []
+            victim = None
+            while True:
+                e = self.res_idx.pop()
+                if e is None:
+                    break
+                if e[0][0] == 0:
+                    held.append(e)
+                    break
+                if chosen[rid_idx[e[0][3]]]:
+                    held.append(e)
+                    continue
+                victim = e
+                break
+            cr = rank(self.policy, reqs[idx])
+            ok = (
+                victim is not None
+                and victim[0] > cr
+                and not (
+                    victim[0][0] == 1
+                    and cr[0] == 1
+                    and victim[0][1] - cr[1] < EVICT_MARGIN
+                )
+            )
+            if not ok:
+                if victim is not None:
+                    self.res_idx.reinsert(victim)
+                for e in held:
+                    self.res_idx.reinsert(e)
+                return False
+            for e in held:
+                self.res_idx.reinsert(e)
+            vreq = reqs[rid_idx[victim[0][3]]]
+            self.kv.free(vreq.slot, vreq.rid)
+            vreq.slot = None
+            vreq.phase = DISCARDED
+            vreq.prefilled = 0
+            vreq.kv_written = 0
+            vreq.n_discards += 1
+            self.sched_idx.update(vreq.rid, rank(self.policy, vreq))
+        slot = self.kv.alloc(reqs[idx].rid)
+        assert slot is not None
+        reqs[idx].slot = slot
+        reqs[idx].prefilled = 0
+        reqs[idx].kv_written = 0
+        self.res_idx.insert(reqs[idx].rid, rank(self.policy, reqs[idx]))
         return True
 
 
@@ -543,8 +948,12 @@ def pick_replica(dispatch, engines, rr):
     )
 
 
-def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, noise=0.4):
-    engines = [Engine(policy, slots, pool_tokens, noise=noise) for _ in range(replicas)]
+def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, noise=0.4,
+            selector="indexed"):
+    engines = [
+        Engine(policy, slots, pool_tokens, noise=noise, selector=selector)
+        for _ in range(replicas)
+    ]
     n_total = len(trace)
     nxt = 0
     rr = 0
@@ -553,6 +962,10 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
     ttft = []
     finished = 0
     stalled = [False] * replicas
+    rid_tenant = {rid: tenant for (_, tenant, rid, _, _) in trace}
+    n_tenants = max((t for (_, t, _, _, _) in trace), default=-1) + 1
+    tenant_lat = [[] for _ in range(n_tenants)]
+    tenant_ttft = [[] for _ in range(n_tenants)]
 
     def rebalance(now):
         nonlocal n_migrations
@@ -620,10 +1033,12 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
         worked, fin = engines[i].step()
         if not worked:
             stalled[i] = True
-        for (_, l, t, _) in fin:
+        for (rid, l, t, _) in fin:
             finished += 1
             lat.append(l)
             ttft.append(t)
+            tenant_lat[rid_tenant[rid]].append(l)
+            tenant_ttft[rid_tenant[rid]].append(t)
 
     assert finished == n_total, f"lost requests: {finished}/{n_total}"
     makespan = max(e.now for e in engines)
@@ -638,6 +1053,9 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
         "per_replica": [e.n_finished for e in engines],
         "makespan": makespan,
         "iters": sum(e.n_iter for e in engines),
+        "sel_ops": sum(e.selector_ops() for e in engines),
+        "tenant_lat": tenant_lat,
+        "tenant_ttft": tenant_ttft,
     }
 
 
@@ -666,6 +1084,41 @@ def builtin_scenarios():
             ],
             240, 9001, "rr", 16, 0.35, 0.8,
         ),
+        # Scheduler-scale grid (BENCH_sched.json): the same ~2.5x-overload
+        # mix at 1k and 10k requests on 4 replicas (per-replica live sets
+        # grow into the thousands — the hot-path blow-up regime), plus a
+        # 128-replica fleet point where per-replica sets stay small.
+        "scale-1k": (
+            [
+                (288.0, -0.3, []),
+                (72.0, 0.7, []),
+            ],
+            1000, 777, "jsq", 32, 0.55, 0.4,
+        ),
+        "scale-10k": (
+            [
+                (288.0, -0.3, []),
+                (72.0, 0.7, []),
+            ],
+            10000, 777, "jsq", 32, 0.55, 0.4,
+        ),
+        "scale-replicas": (
+            [(2100.0, 0.0, [])],
+            2560, 777, "jsq", 16, 0.5, 0.4,
+        ),
+    }
+
+
+def scenario_tenant_names():
+    # Keep in sync with the TenantProfile names in rust scenario.rs.
+    return {
+        "steady": ["poisson"],
+        "bursty": ["diurnal"],
+        "multi-tenant": ["chat", "batch", "background"],
+        "skewed": ["heavy", "light"],
+        "scale-1k": ["chat", "batch"],
+        "scale-10k": ["chat", "batch"],
+        "scale-replicas": ["fleet"],
     }
 
 
@@ -674,6 +1127,7 @@ def builtin_scenarios():
 # ---------------------------------------------------------------------------
 
 SCHEMA = "trail.simlab.bench/v1"
+SCHED_SCHEMA = "trail.simlab.sched/v1"
 
 
 def jnum(x):
@@ -713,16 +1167,19 @@ def row_json(row):
         elif isinstance(v, bool):
             sv = "true" if v else "false"
         elif isinstance(v, list):
-            sv = "[" + ",".join(jnum(x) for x in v) + "]"
+            if v and isinstance(v[0], dict):
+                sv = "[" + ",".join(row_json(x) for x in v) + "]"
+            else:
+                sv = "[" + ",".join(jnum(x) for x in v) + "]"
         else:
             sv = jnum(v)
         parts.append('"' + k + '":' + sv)
     return "{" + ",".join(parts) + "}"
 
 
-def report_json(rows):
+def report_json(rows, schema=SCHEMA):
     s = "{\n"
-    s += '"schema":"' + SCHEMA + '",\n'
+    s += '"schema":"' + schema + '",\n'
     s += '"rows":[\n'
     for i, row in enumerate(rows):
         s += row_json(row)
@@ -733,7 +1190,68 @@ def report_json(rows):
     return s
 
 
-def sweep_rows(scenario_names, policies, replica_counts, migration):
+def tenant_rows(name, out):
+    names = scenario_tenant_names()[name]
+    rows = []
+    for ti, tname in enumerate(names):
+        ls = out["tenant_lat"][ti] if ti < len(out["tenant_lat"]) else []
+        ts = out["tenant_ttft"][ti] if ti < len(out["tenant_ttft"]) else []
+        if ls:
+            rows.append({
+                "tenant": tname,
+                "n": len(ls),
+                "mean_latency_s": mean(ls),
+                "p50_latency_s": percentile(ls, 50.0),
+                "p99_latency_s": percentile(ls, 99.0),
+                "mean_ttft_s": mean(ts),
+            })
+        else:
+            rows.append({
+                "tenant": tname,
+                "n": 0,
+                "mean_latency_s": 0.0,
+                "p50_latency_s": 0.0,
+                "p99_latency_s": 0.0,
+                "mean_ttft_s": 0.0,
+            })
+    return rows
+
+
+def make_row(name, policy, dispatch, replicas, migration, seed, out,
+             selector=None, tenant_breakdown=False):
+    row = {
+        "scenario": name,
+        "policy": policy_name(policy),
+        "dispatch": {"rr": "round-robin", "jsq": "jsq", "lpw": "least-work"}[dispatch],
+        "replicas": replicas,
+        "migration": migration,
+        "n": out["n"],
+        # u64s travel as strings (golden_fixture.json convention)
+        "seed": str(seed),
+        "mean_latency_s": mean(out["lat"]),
+        "p50_latency_s": percentile(out["lat"], 50.0),
+        "p99_latency_s": percentile(out["lat"], 99.0),
+        "mean_ttft_s": mean(out["ttft"]),
+        "p50_ttft_s": percentile(out["ttft"], 50.0),
+        "p99_ttft_s": percentile(out["ttft"], 99.0),
+        "throughput_req_s": out["n"] / out["makespan"] if out["makespan"] > 0 else 0.0,
+        "makespan_s": out["makespan"],
+        "preemptions": out["preemptions"],
+        "discards": out["discards"],
+        "migrations": out["migrations"],
+        "kv_peak_tokens": out["kv_peak"],
+        "n_iterations": out["iters"],
+        "per_replica_finished": out["per_replica"],
+    }
+    if selector is not None:
+        row["selector"] = selector
+        row["selector_ops"] = out["sel_ops"]
+    if tenant_breakdown:
+        row["per_tenant"] = tenant_rows(name, out)
+    return row
+
+
+def sweep_rows(scenario_names, policies, replica_counts, migration, selector="indexed"):
     rows = []
     scs = builtin_scenarios()
     for name in scenario_names:
@@ -742,31 +1260,30 @@ def sweep_rows(scenario_names, policies, replica_counts, migration):
         pool_tokens = int((slots * MAX_SEQ) * pool_frac)
         for replicas in replica_counts:
             for policy in policies:
-                out = run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, noise)
-                rows.append({
-                    "scenario": name,
-                    "policy": policy_name(policy),
-                    "dispatch": {"rr": "round-robin", "jsq": "jsq", "lpw": "least-work"}[dispatch],
-                    "replicas": replicas,
-                    "migration": migration,
-                    "n": out["n"],
-                    # u64s travel as strings (golden_fixture.json convention)
-                    "seed": str(seed),
-                    "mean_latency_s": mean(out["lat"]),
-                    "p50_latency_s": percentile(out["lat"], 50.0),
-                    "p99_latency_s": percentile(out["lat"], 99.0),
-                    "mean_ttft_s": mean(out["ttft"]),
-                    "p50_ttft_s": percentile(out["ttft"], 50.0),
-                    "p99_ttft_s": percentile(out["ttft"], 99.0),
-                    "throughput_req_s": out["n"] / out["makespan"] if out["makespan"] > 0 else 0.0,
-                    "makespan_s": out["makespan"],
-                    "preemptions": out["preemptions"],
-                    "discards": out["discards"],
-                    "migrations": out["migrations"],
-                    "kv_peak_tokens": out["kv_peak"],
-                    "n_iterations": out["iters"],
-                    "per_replica_finished": out["per_replica"],
-                })
+                out = run_sim(trace, policy, replicas, dispatch, migration, slots,
+                              pool_tokens, noise, selector=selector)
+                rows.append(make_row(name, policy, dispatch, replicas, migration, seed, out))
+    return rows
+
+
+# (scenario, replicas) grid of the scheduler-scale sweep — keep in sync
+# with rust/src/sim/scenario.rs `sched_sweep`.
+SCHED_GRID = [("scale-1k", 4), ("scale-10k", 4), ("scale-replicas", 128)]
+SCHED_POLICY = ("trail", 0.8)
+
+
+def sched_rows():
+    rows = []
+    scs = builtin_scenarios()
+    for name, replicas in SCHED_GRID:
+        tenants, n, seed, dispatch, slots, pool_frac, noise = scs[name]
+        trace = generate_trace(tenants, n, seed)
+        pool_tokens = int((slots * MAX_SEQ) * pool_frac)
+        for selector in ("reference", "indexed"):
+            out = run_sim(trace, SCHED_POLICY, replicas, dispatch, True, slots,
+                          pool_tokens, noise, selector=selector)
+            rows.append(make_row(name, SCHED_POLICY, dispatch, replicas, True, seed, out,
+                                 selector=selector, tenant_breakdown=True))
     return rows
 
 
@@ -774,26 +1291,40 @@ DEFAULT_POLICIES = [("fcfs",), ("trail", 1.0), ("trail", 0.8)]
 
 
 def main(argv):
-    if not argv or argv[0] != "sweep":
+    if not argv or argv[0] not in ("sweep", "sched"):
         print(__doc__)
         return 2
     out_path = None
     if "--out" in argv:
         out_path = argv[argv.index("--out") + 1]
-    rows = sweep_rows(
-        ["steady", "bursty", "multi-tenant", "skewed"],
-        DEFAULT_POLICIES,
-        [2, 4],
-        migration=True,
-    )
-    text = report_json(rows)
-    for row in rows:
-        print(
-            f"{row['scenario']:>13} {row['policy']:>10} x{row['replicas']} "
-            f"mean={row['mean_latency_s']:.3f}s p99={row['p99_latency_s']:.3f}s "
-            f"ttft={row['mean_ttft_s']:.3f}s preempt={row['preemptions']} "
-            f"discard={row['discards']} migrate={row['migrations']}"
+    if argv[0] == "sched":
+        rows = sched_rows()
+        text = report_json(rows, schema=SCHED_SCHEMA)
+        for row in rows:
+            print(
+                f"{row['scenario']:>14} {row['selector']:>9} x{row['replicas']} "
+                f"n={row['n']} ops={row['selector_ops']} iters={row['n_iterations']} "
+                f"mean={row['mean_latency_s']:.3f}s discard={row['discards']}"
+            )
+    else:
+        selector = "indexed"
+        if "--selector" in argv:
+            selector = argv[argv.index("--selector") + 1]
+        rows = sweep_rows(
+            ["steady", "bursty", "multi-tenant", "skewed"],
+            DEFAULT_POLICIES,
+            [2, 4],
+            migration=True,
+            selector=selector,
         )
+        text = report_json(rows)
+        for row in rows:
+            print(
+                f"{row['scenario']:>13} {row['policy']:>10} x{row['replicas']} "
+                f"mean={row['mean_latency_s']:.3f}s p99={row['p99_latency_s']:.3f}s "
+                f"ttft={row['mean_ttft_s']:.3f}s preempt={row['preemptions']} "
+                f"discard={row['discards']} migrate={row['migrations']}"
+            )
     if out_path:
         with open(out_path, "w") as f:
             f.write(text)

@@ -39,6 +39,7 @@
 //! (KV dropped, recompute later). Requests older than ⌊C·r⌋ tokens are
 //! locked and cannot be pushed out at all.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -50,14 +51,47 @@ use crate::coordinator::clock::{Clock, ClockSpec};
 use crate::coordinator::kv::KvManager;
 use crate::coordinator::metrics::{Metrics, MetricsSummary};
 use crate::coordinator::policy::{Policy, Rank};
+use crate::coordinator::rank_index::{Entry, RankIndex};
 use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::source::{Admission, ChannelSource, ReplaySource, RequestSource};
 use crate::predictor::Predictor;
 use crate::workload::{Arrival, RequestSpec};
 
+/// Which target-selection implementation the engine runs. Both produce
+/// bit-identical schedules (`rust/tests/rank_index_diff.rs` proves it
+/// across the testkit grid); `Reference` is the seed full-sort oracle
+/// kept for differential testing and the `BENCH_sched.json` cost
+/// comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selector {
+    /// Incremental `RankIndex` selection (the default hot path).
+    Indexed,
+    /// Full re-sort + linear victim scans (the seed implementation).
+    Reference,
+}
+
+impl Selector {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Selector::Indexed => "indexed",
+            Selector::Reference => "reference",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Selector> {
+        match s {
+            "indexed" | "index" => Some(Selector::Indexed),
+            "reference" | "ref" | "sort" => Some(Selector::Reference),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub policy: Policy,
+    /// Target-selection implementation (see [`Selector`]).
+    pub selector: Selector,
     /// KV token pool (the "GPU memory" budget). Default: 55% of B·S —
     /// enough to run full batches of average requests, tight enough that
     /// preemption hoarding hurts, like the paper's A100 setup.
@@ -80,6 +114,7 @@ impl ServeConfig {
     pub fn new(cfg: &Config, policy: Policy) -> Self {
         Self {
             policy,
+            selector: Selector::Indexed,
             pool_tokens: cfg.model.batch_slots * cfg.model.max_seq * 55 / 100,
             prefill_chunks_per_iter: 2,
             evict_margin: cfg.bins.width / 2.0,
@@ -223,6 +258,40 @@ pub struct ServingEngine<B: ModelBackend> {
     n_admitted: u64,
     n_iter: u64,
     status_cell: Option<Arc<SharedStatus>>,
+    /// Incremental rank index over the schedulable set (min-first) —
+    /// maintained on every rank-relevant mutation regardless of the
+    /// active selector, read by `select_targets_indexed`.
+    sched_idx: RankIndex,
+    /// Max-first index over slot-holding requests, for the O(log n)
+    /// worst-ranked-victim search in `ensure_resident_indexed`.
+    res_idx: RankIndex,
+    /// Reference-selector work counter: sort candidates + victim-scan
+    /// lengths (the indexed counters live on the indexes themselves).
+    sel_ops_ref: u64,
+    /// rid → position in `requests`, rebuilt per step for the indexed
+    /// selector (the vec is compacted after every step).
+    rid_idx: HashMap<u64, usize>,
+    /// rids targeted by the most recent step, rank order (diagnostics +
+    /// the differential harness).
+    last_target_rids: Vec<u64>,
+}
+
+/// Point-in-time per-request view for differential tests: two engines
+/// served the same workload step-for-step iff their snapshot streams
+/// (plus clocks and KV accounting) are identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestSnapshot {
+    pub rid: u64,
+    pub phase: Phase,
+    pub slot: Option<usize>,
+    pub prefilled: usize,
+    pub generated: usize,
+    pub kv_written: usize,
+    pub n_preemptions: u64,
+    pub n_discards: u64,
+    pub n_migrations: u64,
+    pub pred_remaining_bits: u64,
+    pub initial_pred_bits: u64,
 }
 
 impl<B: ModelBackend> ServingEngine<B> {
@@ -247,6 +316,59 @@ impl<B: ModelBackend> ServingEngine<B> {
             n_admitted: 0,
             n_iter: 0,
             status_cell: None,
+            sched_idx: RankIndex::new_min(),
+            res_idx: RankIndex::new_max(),
+            sel_ops_ref: 0,
+            rid_idx: HashMap::new(),
+            last_target_rids: Vec::new(),
+        }
+    }
+
+    /// Work performed by the active selector (see `docs/scheduler.md`
+    /// for the op accounting; pinned into `BENCH_sched.json`).
+    pub fn selector_ops(&self) -> u64 {
+        match self.serve.selector {
+            Selector::Reference => self.sel_ops_ref,
+            Selector::Indexed => self.sched_idx.ops + self.res_idx.ops,
+        }
+    }
+
+    /// rids targeted by the most recent step, rank order.
+    pub fn last_target_rids(&self) -> &[u64] {
+        &self.last_target_rids
+    }
+
+    /// Per-request state snapshot, sorted by rid (differential tests).
+    pub fn request_snapshots(&self) -> Vec<RequestSnapshot> {
+        let mut out: Vec<RequestSnapshot> = self
+            .requests
+            .iter()
+            .map(|r| RequestSnapshot {
+                rid: r.spec.rid,
+                phase: r.phase,
+                slot: r.slot,
+                prefilled: r.prefilled,
+                generated: r.generated,
+                kv_written: r.kv_written,
+                n_preemptions: r.n_preemptions,
+                n_discards: r.n_discards,
+                n_migrations: r.n_migrations,
+                pred_remaining_bits: r.pred_remaining.to_bits(),
+                initial_pred_bits: r.initial_pred.to_bits(),
+            })
+            .collect();
+        out.sort_by_key(|s| s.rid);
+        out
+    }
+
+    /// Refresh a request's entry in the rank indexes after a mutation of
+    /// rank-relevant state (phase / generated / predictions). No-ops
+    /// when the rank is unchanged.
+    fn reindex(&mut self, r: &Request) {
+        let rk = self.serve.policy.rank(r);
+        self.sched_idx.update(rk);
+        if r.slot.is_some() {
+            self.res_idx.update(rk);
         }
     }
 
@@ -281,6 +403,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         let mut req = Request::new(spec, at, &self.cfg.bins);
         self.predictor.init_request(&mut req);
         let rid = req.spec.rid;
+        self.sched_idx.insert(self.serve.policy.rank(&req));
         self.requests.push(req);
         self.n_admitted += 1;
         self.publish_status();
@@ -342,8 +465,10 @@ impl<B: ModelBackend> ServingEngine<B> {
         // `EngineStatus::unfinished()` stays `admitted - finished` on
         // both sides and pool-wide sums count each request once.
         self.n_admitted -= 1;
+        self.sched_idx.remove(r.spec.rid);
         if let Some(slot) = r.slot.take() {
             self.kv.free(slot, r.spec.rid);
+            self.res_idx.remove(r.spec.rid);
         }
         r.prefilled = 0;
         r.kv_written = 0;
@@ -365,6 +490,7 @@ impl<B: ModelBackend> ServingEngine<B> {
     pub fn admit_migrated(&mut self, req: Request) -> u64 {
         debug_assert!(req.slot.is_none(), "migrated request still holds a slot");
         let rid = req.spec.rid;
+        self.sched_idx.insert(self.serve.policy.rank(&req));
         self.requests.push(req);
         self.n_admitted += 1;
         self.metrics.n_migrated_in += 1;
@@ -506,8 +632,22 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// the helper methods can borrow the engine mutably alongside it).
     fn step_inner(&mut self, requests: &mut Vec<Request>) -> Result<StepOutcome> {
         // ---- 2. memory pressure, then target-set selection ----
+        if self.serve.selector == Selector::Indexed {
+            // The vec is compacted after every step, so positions are
+            // only stable within one iteration.
+            self.rid_idx.clear();
+            for (i, r) in requests.iter().enumerate() {
+                self.rid_idx.insert(r.spec.rid, i);
+            }
+        }
         self.resolve_oom(requests);
-        let target = self.select_targets(requests);
+        let target = match self.serve.selector {
+            Selector::Indexed => self.select_targets_indexed(requests),
+            Selector::Reference => self.select_targets_reference(requests),
+        };
+        self.last_target_rids.clear();
+        self.last_target_rids
+            .extend(target.iter().map(|&i| requests[i].spec.rid));
 
         // ---- 3. prefill budget ----
         let mut prefill_done_now: Vec<usize> = Vec::new();
@@ -598,6 +738,10 @@ impl<B: ModelBackend> ServingEngine<B> {
                 // nothing to stamp.
                 self.kv.charge(slot, r.spec.rid, r.resident_tokens());
                 self.finish_if_done(&mut requests[idx], now);
+                // `generated` may have crossed the preemption window.
+                if requests[idx].phase != Phase::Finished {
+                    self.reindex(&requests[idx]);
+                }
             }
             for idx in decoding {
                 let r = &mut requests[idx];
@@ -608,6 +752,11 @@ impl<B: ModelBackend> ServingEngine<B> {
                 self.predictor.on_token(r, &readout, slot);
                 self.kv.charge(slot, r.spec.rid, r.resident_tokens());
                 self.finish_if_done(&mut requests[idx], now);
+                // Every decoded token re-ranks the request (this is the
+                // TRAIL hot path the index exists for).
+                if requests[idx].phase != Phase::Finished {
+                    self.reindex(&requests[idx]);
+                }
             }
         }
 
@@ -645,7 +794,9 @@ impl<B: ModelBackend> ServingEngine<B> {
             r.phase = Phase::Finished;
             if let Some(slot) = r.slot.take() {
                 self.kv.free(slot, r.spec.rid);
+                self.res_idx.remove(r.spec.rid);
             }
+            self.sched_idx.remove(r.spec.rid);
             self.metrics.observe_finish(r);
             self.finished_rids.push(r.spec.rid);
         }
@@ -679,47 +830,20 @@ impl<B: ModelBackend> ServingEngine<B> {
                 })
                 .map(|(i, _)| i);
             let Some(vi) = victim else { break };
-            let r = &mut requests[vi];
-            let slot = r.slot.take().unwrap();
-            self.kv.free(slot, r.spec.rid);
-            r.phase = Phase::Discarded;
-            r.prefilled = 0;
-            r.kv_written = 0;
-            r.n_discards += 1;
+            self.discard_victim(requests, vi, &policy, true);
         }
     }
 
-    /// Rank everything, pick ≤ B targets, allocate slots, evict under
-    /// pressure. Returns indices into `requests`, rank order.
-    fn select_targets(&mut self, requests: &mut [Request]) -> Vec<usize> {
-        let policy = self.serve.policy.clone();
-        let b = self.backend.slots();
-
-        let mut order: Vec<usize> = (0..requests.len())
-            .filter(|&i| requests[i].is_schedulable())
-            .collect();
-        order.sort_by(|&a, &z| policy.rank(&requests[a]).cmp(&policy.rank(&requests[z])));
-
-        let mut target: Vec<usize> = Vec::with_capacity(b);
-        let mut chosen = vec![false; requests.len()];
-        for &idx in &order {
-            if target.len() >= b {
-                break;
-            }
-            // Non-preemptive policies never *start* a new request by
-            // pushing out a resident one; they only fill free slots. The
-            // rank ordering already encodes that via `locked`, but a
-            // waiting request must not grab resources a resident one
-            // needs: handled below by slot availability.
-            if self.ensure_resident(requests, idx, &chosen) {
-                chosen[idx] = true;
-                target.push(idx);
-            }
-        }
-
-        // Anything Running but not targeted this iteration is preempted
-        // (stays resident).
-        for (i, r) in requests.iter_mut().enumerate() {
+    /// Post-selection phase transitions, shared by both selectors:
+    /// anything Running but not targeted this iteration is preempted
+    /// (stays resident); chosen non-running requests (re)enter the
+    /// batch. A phase change can flip the `locked` rank bit (FCFS/SJF
+    /// lock on start; TRAIL windows on age), so changed requests are
+    /// reindexed.
+    fn apply_phase_transitions(&mut self, requests: &mut [Request], chosen: &[bool]) {
+        for i in 0..requests.len() {
+            let r = &mut requests[i];
+            let before = r.phase;
             if !chosen[i] && r.phase == Phase::Running {
                 r.phase = Phase::Preempted;
                 r.n_preemptions += 1;
@@ -734,13 +858,85 @@ impl<B: ModelBackend> ServingEngine<B> {
             } else if chosen[i] && r.phase == Phase::Prefilling && r.prefill_done() {
                 r.phase = Phase::Running;
             }
+            if requests[i].phase != before {
+                self.reindex(&requests[i]);
+            }
         }
+    }
+
+    /// The seed selector, kept as the differential oracle: rank
+    /// everything, fully sort, pick ≤ B targets, allocate slots, evict
+    /// under pressure. Returns indices into `requests`, rank order.
+    fn select_targets_reference(&mut self, requests: &mut [Request]) -> Vec<usize> {
+        let policy = self.serve.policy.clone();
+        let b = self.backend.slots();
+
+        let mut order: Vec<usize> = (0..requests.len())
+            .filter(|&i| requests[i].is_schedulable())
+            .collect();
+        order.sort_by(|&a, &z| policy.rank(&requests[a]).cmp(&policy.rank(&requests[z])));
+        self.sel_ops_ref += order.len() as u64;
+
+        let mut target: Vec<usize> = Vec::with_capacity(b);
+        let mut chosen = vec![false; requests.len()];
+        for &idx in &order {
+            if target.len() >= b {
+                break;
+            }
+            // Non-preemptive policies never *start* a new request by
+            // pushing out a resident one; they only fill free slots. The
+            // rank ordering already encodes that via `locked`, but a
+            // waiting request must not grab resources a resident one
+            // needs: handled below by slot availability.
+            if self.ensure_resident_reference(requests, idx, &chosen) {
+                chosen[idx] = true;
+                target.push(idx);
+            }
+        }
+        self.apply_phase_transitions(requests, &chosen);
+        target
+    }
+
+    /// Indexed selection: pop the schedulable min-index in rank order
+    /// until the batch is full, holding popped-but-examined entries and
+    /// restoring them afterwards. The pop sequence equals the reference
+    /// sort order because every rank mutation reindexes eagerly (and
+    /// in-selection discards never change a victim's rank — TRAIL is
+    /// the only discarding policy and its rank ignores the
+    /// Running→Discarded flip).
+    fn select_targets_indexed(&mut self, requests: &mut [Request]) -> Vec<usize> {
+        let b = self.backend.slots();
+        let mut target: Vec<usize> = Vec::with_capacity(b);
+        let mut chosen = vec![false; requests.len()];
+        let mut held: Vec<Entry> = Vec::new();
+        while target.len() < b {
+            let Some(ent) = self.sched_idx.pop() else { break };
+            let idx = *self
+                .rid_idx
+                .get(&ent.rank.rid)
+                .expect("popped rid present in this step's rid index");
+            if self.ensure_resident_indexed(requests, idx, &chosen) {
+                chosen[idx] = true;
+                target.push(idx);
+            }
+            held.push(ent);
+        }
+        for ent in held {
+            self.sched_idx.reinsert(ent);
+        }
+        self.apply_phase_transitions(requests, &chosen);
         target
     }
 
     /// Make `idx` resident (slot + pool room), discarding worse-ranked
     /// non-locked residents if allowed. Returns false if impossible.
-    fn ensure_resident(&mut self, requests: &mut [Request], idx: usize, chosen: &[bool]) -> bool {
+    /// Reference implementation: linear victim scans.
+    fn ensure_resident_reference(
+        &mut self,
+        requests: &mut [Request],
+        idx: usize,
+        chosen: &[bool],
+    ) -> bool {
         if requests[idx].slot.is_some() {
             return true;
         }
@@ -757,6 +953,7 @@ impl<B: ModelBackend> ServingEngine<B> {
             if have_slot && have_mem {
                 break;
             }
+            self.sel_ops_ref += requests.len() as u64;
             // Find the worst-ranked resident, non-chosen, non-locked
             // request to discard. Non-preemptive policies only reclaim
             // from *preempted* requests (there are none under FCFS/SJF,
@@ -787,21 +984,121 @@ impl<B: ModelBackend> ServingEngine<B> {
             if !vr.locked && !cr.locked && vr.key - cr.key < self.serve.evict_margin {
                 return false;
             }
-            let r = &mut requests[vi];
-            let slot = r.slot.take().unwrap();
-            self.kv.free(slot, r.spec.rid);
-            r.phase = Phase::Discarded;
-            r.prefilled = 0; // KV gone — recompute on resume
-            r.kv_written = 0;
-            r.n_discards += 1;
+            self.discard_victim(requests, vi, &policy, true);
         }
 
+        self.alloc_slot(requests, idx);
+        true
+    }
+
+    /// Indexed victim search: pop the resident max-index (worst rank
+    /// first, locked last). A locked pop means no preemptable resident
+    /// remains — for residents `preemptable(c)` ⇔ `!rank.locked`, since
+    /// a slot-holding request is never `Waiting`.
+    fn ensure_resident_indexed(
+        &mut self,
+        requests: &mut [Request],
+        idx: usize,
+        chosen: &[bool],
+    ) -> bool {
+        if requests[idx].slot.is_some() {
+            return true;
+        }
+        let policy = self.serve.policy.clone();
+        let need_tokens = requests[idx].prefill_target().min(self.cfg.model.max_seq);
+
+        loop {
+            let have_slot = self.kv.free_slot_available();
+            let have_mem = self.kv.fits(need_tokens.min(self.cfg.model.prefill_chunk * 2));
+            if have_slot && have_mem {
+                break;
+            }
+            if !policy.preemptive() {
+                return false;
+            }
+            let mut held: Vec<Entry> = Vec::new();
+            let mut victim: Option<Entry> = None;
+            while let Some(e) = self.res_idx.pop() {
+                if e.rank.locked {
+                    held.push(e);
+                    break;
+                }
+                let vi = *self.rid_idx.get(&e.rank.rid).expect("resident rid indexed");
+                if chosen[vi] {
+                    held.push(e);
+                    continue;
+                }
+                victim = Some(e);
+                break;
+            }
+            let cr = policy.rank(&requests[idx]);
+            let ok = match &victim {
+                None => false,
+                Some(v) => {
+                    v.rank.cmp(&cr) == std::cmp::Ordering::Greater
+                        && !(!v.rank.locked
+                            && !cr.locked
+                            && v.rank.key - cr.key < self.serve.evict_margin)
+                }
+            };
+            if !ok {
+                if let Some(v) = victim {
+                    self.res_idx.reinsert(v);
+                }
+                for e in held {
+                    self.res_idx.reinsert(e);
+                }
+                return false;
+            }
+            for e in held {
+                self.res_idx.reinsert(e);
+            }
+            let v = victim.unwrap();
+            let vi = *self.rid_idx.get(&v.rank.rid).expect("victim rid indexed");
+            // The victim was already popped off the resident index — the
+            // discard must not re-remove it there.
+            self.discard_victim(requests, vi, &policy, false);
+        }
+
+        self.alloc_slot(requests, idx);
+        true
+    }
+
+    /// Discard a resident victim: KV dropped, recompute later; both
+    /// indexes kept coherent. `in_res_idx` is false only on the indexed
+    /// victim path, where the caller already popped the entry off the
+    /// resident index. Under FCFS a discard unlocks the request (its
+    /// rank flips); under TRAIL the rank is invariant and the update
+    /// no-ops.
+    fn discard_victim(
+        &mut self,
+        requests: &mut [Request],
+        vi: usize,
+        policy: &Policy,
+        in_res_idx: bool,
+    ) {
+        let r = &mut requests[vi];
+        let slot = r.slot.take().unwrap();
+        self.kv.free(slot, r.spec.rid);
+        r.phase = Phase::Discarded;
+        r.prefilled = 0; // KV gone — recompute on resume
+        r.kv_written = 0;
+        r.n_discards += 1;
+        if in_res_idx {
+            self.res_idx.remove(requests[vi].spec.rid);
+        }
+        let rk = policy.rank(&requests[vi]);
+        self.sched_idx.update(rk);
+    }
+
+    /// Allocate a fresh slot for `idx` and register it as resident.
+    fn alloc_slot(&mut self, requests: &mut [Request], idx: usize) {
         let slot = self.kv.alloc(requests[idx].spec.rid).expect("slot freed above");
         requests[idx].slot = Some(slot);
         // Re-used slot: clear its prompt-tap accumulators.
         let _ = self.backend.slot_reset(slot);
         requests[idx].prefilled = 0; // fresh slot ⇒ (re)prefill from 0
         requests[idx].kv_written = 0;
-        true
+        self.res_idx.insert(self.serve.policy.rank(&requests[idx]));
     }
 }

@@ -15,6 +15,7 @@ pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod policy;
+pub mod rank_index;
 pub mod request;
 pub mod source;
 
@@ -24,11 +25,12 @@ pub use backend::PjrtBackend;
 pub use clock::{Clock, ClockSpec};
 pub use dispatch::{DispatchPolicy, JobSink, ReplicaPool, ReplicaSnapshot};
 pub use engine::{
-    EngineStatus, FinishedRequest, OnlineDone, OnlineJob, ServeConfig, ServeReport, ServingEngine,
-    SharedStatus, StepOutcome,
+    EngineStatus, FinishedRequest, OnlineDone, OnlineJob, RequestSnapshot, Selector, ServeConfig,
+    ServeReport, ServingEngine, SharedStatus, StepOutcome,
 };
 pub use kv::KvManager;
 pub use metrics::Metrics;
 pub use policy::{Policy, Rank};
+pub use rank_index::RankIndex;
 pub use request::{Phase, Request};
 pub use source::{Admission, ChannelSource, ReplaySource, RequestSource};

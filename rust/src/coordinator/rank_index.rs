@@ -1,0 +1,795 @@
+//! Incremental rank index for the scheduler hot path.
+//!
+//! `select_targets` used to rebuild and fully sort the schedulable set
+//! every engine iteration, and `ensure_resident` re-scanned every
+//! resident per victim — O(n log n + n·b) per step, the ROADMAP blocker
+//! for 10k+-request and 100+-replica sweeps. The TRAIL policy re-ranks
+//! on *every decoded token* (predictions change each step), so the
+//! engine needs cheap incremental re-ranking rather than re-sorting:
+//! a [`RankIndex`] holds one entry per live request and is updated on
+//! admit / token-decode / preempt / discard / migrate; pop order is
+//! exactly the total [`Rank`] order the full sort would produce, which
+//! is what `rust/tests/rank_index_diff.rs` proves against the retained
+//! reference selector across the whole testkit grid.
+//!
+//! Structure: a **lazy bucket queue** over quantized finite keys
+//! (bucket = ⌊key / width⌋, each bucket kept sorted by the exact total
+//! order) with a **pairing-heap fallback** for the unbounded tiers —
+//! locked entries (they sort before every unlocked key, an effective
+//! −∞), finite negative keys, and overflow / non-finite keys (NaN keys
+//! are +∞ after `Rank::new`'s clamp). Updates are *eager-push,
+//! lazy-delete*: a rank change pushes a fresh `(rank, version)` entry
+//! and the stale version is discarded when a pop encounters it, so the
+//! minimum is always physically present at its correct position. A
+//! `max_first` index reverses the pop order (the resident victim
+//! search wants the *worst*-ranked entry first; locked entries then
+//! surface last, which is how the engine detects "no preemptable
+//! victim remains" without a filter pass).
+//!
+//! Determinism: the entry order `(Rank, version)` is strict and total,
+//! so the pop *sequence* is independent of heap shape and of the
+//! (unordered) rebuild iteration during compaction — identical op
+//! histories produce identical pops and identical `ops` counts, which
+//! is what lets `BENCH_sched.json` pin the work counters byte-for-byte
+//! (mirrored line-faithfully in `python/simref.py`).
+//!
+//! The `ops` counter is the selector work metric: +1 per entry pushed
+//! (insert / update-with-change / reinsert / compaction re-push), +1
+//! per `update` rank check, +1 per `remove`, and +1 per physical entry
+//! examined by `pop` (stale or live). It deliberately does not count
+//! bucket-cursor scans (amortized O(1)) or hash lookups.
+
+use std::collections::HashMap;
+
+use crate::coordinator::policy::Rank;
+
+/// Quantization width of the bucket queue. Keys are predicted remaining
+/// lengths (tokens) under TRAIL/SJF and arrival times (seconds) under
+/// FCFS; one unit per bucket keeps buckets small in both regimes. This
+/// is pure storage quantization — ordering inside a bucket is still the
+/// exact total order, so it does not interact with the engine's
+/// eviction hysteresis (`evict_margin`), which compares raw keys.
+pub const RANK_BUCKET_WIDTH: f64 = 1.0;
+/// Finite keys at or above `MAX_BUCKETS * width` overflow to the heap.
+pub const MAX_BUCKETS: usize = 4096;
+
+const NONE: u32 = u32::MAX;
+
+/// One physical index entry: a rank snapshot plus the version that was
+/// current when it was pushed. Stale versions are skipped on pop.
+#[derive(Clone, Copy, Debug)]
+pub struct Entry {
+    pub rank: Rank,
+    pub version: u64,
+}
+
+/// Strict total order over entries: full rank order, then version.
+/// (An update A→B→A leaves a stale A-entry alongside the live one with
+/// the same rank; the version tiebreak keeps the order strict.)
+fn ent_cmp(a: &Entry, b: &Entry) -> std::cmp::Ordering {
+    a.rank.cmp(&b.rank).then(a.version.cmp(&b.version))
+}
+
+/// Does `a` pop before `b` in the given direction?
+fn pop_less(a: &Entry, b: &Entry, max_first: bool) -> bool {
+    if max_first {
+        ent_cmp(a, b) == std::cmp::Ordering::Greater
+    } else {
+        ent_cmp(a, b) == std::cmp::Ordering::Less
+    }
+}
+
+struct Node {
+    e: Entry,
+    child: u32,
+    sibling: u32,
+}
+
+/// Arena pairing heap (two-pass merge). Mirrored node-for-node in
+/// `python/simref.py`.
+struct PairingHeap {
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    root: u32,
+    max_first: bool,
+}
+
+impl PairingHeap {
+    fn new(max_first: bool) -> PairingHeap {
+        PairingHeap {
+            nodes: Vec::new(),
+            free: Vec::new(),
+            root: NONE,
+            max_first,
+        }
+    }
+
+    fn alloc(&mut self, e: Entry) -> u32 {
+        if let Some(n) = self.free.pop() {
+            let node = &mut self.nodes[n as usize];
+            node.e = e;
+            node.child = NONE;
+            node.sibling = NONE;
+            n
+        } else {
+            self.nodes.push(Node {
+                e,
+                child: NONE,
+                sibling: NONE,
+            });
+            (self.nodes.len() - 1) as u32
+        }
+    }
+
+    fn meld(&mut self, a: u32, b: u32) -> u32 {
+        if a == NONE {
+            return b;
+        }
+        if b == NONE {
+            return a;
+        }
+        let (a, b) = if pop_less(
+            &self.nodes[b as usize].e,
+            &self.nodes[a as usize].e,
+            self.max_first,
+        ) {
+            (b, a)
+        } else {
+            (a, b)
+        };
+        self.nodes[b as usize].sibling = self.nodes[a as usize].child;
+        self.nodes[a as usize].child = b;
+        a
+    }
+
+    fn push(&mut self, e: Entry) {
+        let n = self.alloc(e);
+        self.root = self.meld(self.root, n);
+    }
+
+    fn pop(&mut self) -> Option<Entry> {
+        if self.root == NONE {
+            return None;
+        }
+        let n = self.root;
+        let e = self.nodes[n as usize].e;
+        // Two-pass merge of the child chain.
+        let mut pairs: Vec<u32> = Vec::new();
+        let mut c = self.nodes[n as usize].child;
+        while c != NONE {
+            let next = self.nodes[c as usize].sibling;
+            self.nodes[c as usize].sibling = NONE;
+            if next != NONE {
+                let nn = self.nodes[next as usize].sibling;
+                self.nodes[next as usize].sibling = NONE;
+                let m = self.meld(c, next);
+                pairs.push(m);
+                c = nn;
+            } else {
+                pairs.push(c);
+                break;
+            }
+        }
+        let mut root = NONE;
+        for &p in pairs.iter().rev() {
+            root = self.meld(root, p);
+        }
+        self.root = root;
+        self.free.push(n);
+        Some(e)
+    }
+
+    fn clear(&mut self) {
+        self.nodes.clear();
+        self.free.clear();
+        self.root = NONE;
+    }
+}
+
+/// Pop the next live entry off one heap tier, discarding stale ones.
+fn pop_heap_tier(
+    heap: &mut PairingHeap,
+    live: &mut HashMap<u64, (Rank, u64)>,
+    ops: &mut u64,
+    n_entries: &mut usize,
+    len: &mut usize,
+) -> Option<Entry> {
+    while let Some(e) = heap.pop() {
+        *ops += 1;
+        *n_entries -= 1;
+        if live.get(&e.rank.rid).map_or(false, |c| c.1 == e.version) {
+            live.remove(&e.rank.rid);
+            *len -= 1;
+            return Some(e);
+        }
+    }
+    None
+}
+
+/// Incremental priority index over policy [`Rank`]s; pop order is
+/// exactly the sorted rank order (min-first, or max-first).
+pub struct RankIndex {
+    max_first: bool,
+    width: f64,
+    buckets: Vec<Vec<Entry>>,
+    /// Next candidate bucket for pop: a min index scans upward from the
+    /// cursor, a max index scans downward.
+    cursor: usize,
+    /// Locked entries (the −∞ tier).
+    front: PairingHeap,
+    /// Finite keys < 0.
+    under: PairingHeap,
+    /// Keys ≥ MAX_BUCKETS·width, and non-finite keys.
+    over: PairingHeap,
+    /// rid → (current rank, current version). Membership authority.
+    live: HashMap<u64, (Rank, u64)>,
+    vgen: u64,
+    len: usize,
+    /// Physical entries across buckets + heaps, stale included.
+    n_entries: usize,
+    /// Selector work counter (see module docs for the accounting rules).
+    pub ops: u64,
+}
+
+impl RankIndex {
+    pub fn with_width(width: f64, max_first: bool) -> RankIndex {
+        assert!(width > 0.0 && width.is_finite(), "bucket width must be positive");
+        RankIndex {
+            max_first,
+            width,
+            // Grown on demand up to MAX_BUCKETS (a fleet of small
+            // engines should not pay thousands of empty buckets each).
+            buckets: Vec::new(),
+            cursor: if max_first { 0 } else { MAX_BUCKETS },
+            front: PairingHeap::new(max_first),
+            under: PairingHeap::new(max_first),
+            over: PairingHeap::new(max_first),
+            live: HashMap::new(),
+            vgen: 0,
+            len: 0,
+            n_entries: 0,
+            ops: 0,
+        }
+    }
+
+    /// Min-first index (selection order: best rank pops first).
+    pub fn new_min() -> RankIndex {
+        RankIndex::with_width(RANK_BUCKET_WIDTH, false)
+    }
+
+    /// Max-first index (victim order: worst rank pops first, locked
+    /// entries last).
+    pub fn new_max() -> RankIndex {
+        RankIndex::with_width(RANK_BUCKET_WIDTH, true)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn contains(&self, rid: u64) -> bool {
+        self.live.contains_key(&rid)
+    }
+
+    /// Physical entry count including stale versions (test hook for the
+    /// compaction bound).
+    pub fn physical_entries(&self) -> usize {
+        self.n_entries
+    }
+
+    fn is_live(&self, e: &Entry) -> bool {
+        self.live.get(&e.rank.rid).map_or(false, |c| c.1 == e.version)
+    }
+
+    fn push_entry(&mut self, e: Entry) {
+        self.ops += 1;
+        self.n_entries += 1;
+        let key = e.rank.key;
+        if e.rank.locked {
+            self.front.push(e);
+            return;
+        }
+        if !key.is_finite() {
+            if key < 0.0 {
+                self.under.push(e);
+            } else {
+                self.over.push(e);
+            }
+            return;
+        }
+        if key < 0.0 {
+            self.under.push(e);
+            return;
+        }
+        let b = (key / self.width).floor() as usize;
+        if b >= MAX_BUCKETS {
+            self.over.push(e);
+            return;
+        }
+        if b >= self.buckets.len() {
+            self.buckets.resize_with(b + 1, Vec::new);
+        }
+        let max_first = self.max_first;
+        let bucket = &mut self.buckets[b];
+        // Buckets are sorted descending in pop order (the last element
+        // pops next); binary-search the unique insertion point.
+        let mut lo = 0usize;
+        let mut hi = bucket.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if pop_less(&e, &bucket[mid], max_first) {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        bucket.insert(lo, e);
+        if !self.max_first {
+            if b < self.cursor {
+                self.cursor = b;
+            }
+        } else if b > self.cursor {
+            self.cursor = b;
+        }
+    }
+
+    /// Rebuild from the live set once stale entries dominate; keeps the
+    /// footprint O(live) over unboundedly long runs. The trigger is a
+    /// pure function of the op history, so rebuild points (and the op
+    /// counts they contribute) are deterministic.
+    fn maybe_compact(&mut self) {
+        if self.n_entries > 4 * self.len + 64 {
+            for b in &mut self.buckets {
+                b.clear();
+            }
+            self.front.clear();
+            self.under.clear();
+            self.over.clear();
+            self.cursor = if self.max_first { 0 } else { MAX_BUCKETS };
+            self.n_entries = 0;
+            // Iteration order is irrelevant: bucket positions and heap
+            // pop sequences depend only on the (strict, total) entry
+            // order, not on insertion order.
+            let entries: Vec<Entry> = self
+                .live
+                .values()
+                .map(|&(rank, version)| Entry { rank, version })
+                .collect();
+            for e in entries {
+                self.push_entry(e);
+            }
+        }
+    }
+
+    /// Add a request (rid travels inside the rank). Panics on duplicate
+    /// rids — that is an engine maintenance bug, not a recoverable
+    /// condition (same stance as `KvManager`).
+    pub fn insert(&mut self, rank: Rank) {
+        let rid = rank.rid;
+        assert!(
+            !self.live.contains_key(&rid),
+            "rank index: duplicate insert of rid {rid}"
+        );
+        self.maybe_compact();
+        let version = self.vgen;
+        self.vgen += 1;
+        self.live.insert(rid, (rank, version));
+        self.len += 1;
+        self.push_entry(Entry { rank, version });
+    }
+
+    /// Refresh a present request's rank; no-op when unchanged.
+    pub fn update(&mut self, rank: Rank) {
+        let rid = rank.rid;
+        let cur = *self
+            .live
+            .get(&rid)
+            .unwrap_or_else(|| panic!("rank index: update of absent rid {rid}"));
+        self.ops += 1;
+        if cur.0 == rank {
+            return;
+        }
+        self.maybe_compact();
+        let version = self.vgen;
+        self.vgen += 1;
+        self.live.insert(rid, (rank, version));
+        self.push_entry(Entry { rank, version });
+    }
+
+    /// Drop a request (lazy: physical entries become stale).
+    pub fn remove(&mut self, rid: u64) {
+        assert!(
+            self.live.remove(&rid).is_some(),
+            "rank index: remove of absent rid {rid}"
+        );
+        self.ops += 1;
+        self.len -= 1;
+    }
+
+    /// Put back an entry returned by `pop` (same rank + version) — the
+    /// selection loop holds popped-but-unchosen entries and restores
+    /// them after the target set is fixed.
+    pub fn reinsert(&mut self, e: Entry) {
+        let rid = e.rank.rid;
+        assert!(
+            !self.live.contains_key(&rid),
+            "rank index: reinsert of live rid {rid}"
+        );
+        self.maybe_compact();
+        self.live.insert(rid, (e.rank, e.version));
+        self.len += 1;
+        self.push_entry(e);
+    }
+
+    fn pop_buckets(&mut self) -> Option<Entry> {
+        if self.buckets.is_empty() {
+            return None;
+        }
+        loop {
+            if !self.max_first {
+                while self.cursor < self.buckets.len() && self.buckets[self.cursor].is_empty() {
+                    self.cursor += 1;
+                }
+                if self.cursor >= self.buckets.len() {
+                    return None;
+                }
+            } else {
+                while self.cursor > 0 && self.buckets[self.cursor].is_empty() {
+                    self.cursor -= 1;
+                }
+                if self.buckets[self.cursor].is_empty() {
+                    return None;
+                }
+            }
+            while let Some(e) = self.buckets[self.cursor].pop() {
+                self.ops += 1;
+                self.n_entries -= 1;
+                if self.is_live(&e) {
+                    self.live.remove(&e.rank.rid);
+                    self.len -= 1;
+                    return Some(e);
+                }
+            }
+            // Bucket exhausted (all stale); advance the cursor.
+        }
+    }
+
+    /// Remove and return the next entry in pop order, or None when the
+    /// index is empty.
+    pub fn pop(&mut self) -> Option<Entry> {
+        if self.max_first {
+            if let Some(e) = pop_heap_tier(
+                &mut self.over,
+                &mut self.live,
+                &mut self.ops,
+                &mut self.n_entries,
+                &mut self.len,
+            ) {
+                return Some(e);
+            }
+            if let Some(e) = self.pop_buckets() {
+                return Some(e);
+            }
+            if let Some(e) = pop_heap_tier(
+                &mut self.under,
+                &mut self.live,
+                &mut self.ops,
+                &mut self.n_entries,
+                &mut self.len,
+            ) {
+                return Some(e);
+            }
+            pop_heap_tier(
+                &mut self.front,
+                &mut self.live,
+                &mut self.ops,
+                &mut self.n_entries,
+                &mut self.len,
+            )
+        } else {
+            if let Some(e) = pop_heap_tier(
+                &mut self.front,
+                &mut self.live,
+                &mut self.ops,
+                &mut self.n_entries,
+                &mut self.len,
+            ) {
+                return Some(e);
+            }
+            if let Some(e) = pop_heap_tier(
+                &mut self.under,
+                &mut self.live,
+                &mut self.ops,
+                &mut self.n_entries,
+                &mut self.len,
+            ) {
+                return Some(e);
+            }
+            if let Some(e) = self.pop_buckets() {
+                return Some(e);
+            }
+            pop_heap_tier(
+                &mut self.over,
+                &mut self.live,
+                &mut self.ops,
+                &mut self.n_entries,
+                &mut self.len,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BinsConfig;
+    use crate::coordinator::policy::Policy;
+    use crate::coordinator::request::{Phase, Request};
+    use crate::util::prop;
+    use crate::workload::RequestSpec;
+
+    fn rk(locked: bool, key: f64, tie: f64, rid: u64) -> Rank {
+        Rank::new(locked, key, tie, rid)
+    }
+
+    /// Model: the live (rid → rank) map; expected pop order is the full
+    /// sort of its ranks.
+    fn model_order(live: &[(u64, Rank)], max_first: bool) -> Vec<u64> {
+        let mut ranks: Vec<Rank> = live.iter().map(|&(_, r)| r).collect();
+        ranks.sort_by(|a, b| a.cmp(b));
+        if max_first {
+            ranks.reverse();
+        }
+        ranks.iter().map(|r| r.rid).collect()
+    }
+
+    fn drain(idx: &mut RankIndex) -> Vec<u64> {
+        let mut out = Vec::new();
+        while let Some(e) = idx.pop() {
+            out.push(e.rank.rid);
+        }
+        out
+    }
+
+    #[test]
+    fn pop_order_is_sorted_rank_order() {
+        let mut idx = RankIndex::new_min();
+        let ranks = [
+            rk(false, 40.0, 1.0, 1),
+            rk(false, 3.0, 2.0, 2),
+            rk(true, 99.0, 0.5, 3), // locked sorts first
+            rk(false, 3.0, 0.1, 4), // key tie → earlier arrival first
+            rk(false, f64::NAN, 0.0, 5), // NaN clamps to +inf → last
+            rk(false, -7.0, 0.0, 6), // negative key → under tier
+            rk(false, 1.0e9, 0.0, 7), // overflow tier
+        ];
+        for r in ranks {
+            idx.insert(r);
+        }
+        assert_eq!(idx.len(), 7);
+        assert_eq!(drain(&mut idx), vec![3, 6, 4, 2, 1, 7, 5]);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn max_direction_reverses_and_surfaces_locked_last() {
+        let mut idx = RankIndex::new_max();
+        idx.insert(rk(true, 0.0, 0.0, 1));
+        idx.insert(rk(false, 5.0, 0.0, 2));
+        idx.insert(rk(false, 500000.0, 0.0, 3));
+        idx.insert(rk(false, -1.0, 0.0, 4));
+        assert_eq!(drain(&mut idx), vec![3, 2, 4, 1]);
+    }
+
+    #[test]
+    fn update_moves_and_remove_hides() {
+        let mut idx = RankIndex::new_min();
+        idx.insert(rk(false, 10.0, 0.0, 1));
+        idx.insert(rk(false, 20.0, 0.0, 2));
+        idx.update(rk(false, 30.0, 0.0, 1)); // 1 moves behind 2
+        idx.remove(2);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(drain(&mut idx), vec![1]);
+    }
+
+    #[test]
+    fn reinsert_restores_popped_entry() {
+        let mut idx = RankIndex::new_min();
+        idx.insert(rk(false, 1.0, 0.0, 1));
+        idx.insert(rk(false, 2.0, 0.0, 2));
+        let e = idx.pop().unwrap();
+        assert_eq!(e.rank.rid, 1);
+        assert_eq!(idx.len(), 1);
+        idx.reinsert(e);
+        assert_eq!(idx.len(), 2);
+        assert_eq!(drain(&mut idx), vec![1, 2]);
+    }
+
+    #[test]
+    fn compaction_bounds_physical_entries() {
+        let mut idx = RankIndex::new_min();
+        idx.insert(rk(false, 0.0, 0.0, 1));
+        idx.insert(rk(false, 1.0, 0.0, 2));
+        for i in 0..10_000u64 {
+            idx.update(rk(false, (i % 300) as f64 + 0.5, 0.0, 1));
+        }
+        assert!(
+            idx.physical_entries() <= 4 * idx.len() + 64 + 1,
+            "stale entries unbounded: {}",
+            idx.physical_entries()
+        );
+        assert_eq!(idx.pop().unwrap().rank.rid, 2); // key 1.0 < ~299.5
+    }
+
+    #[test]
+    fn same_op_history_gives_same_pops_and_ops() {
+        let run = || {
+            let mut idx = RankIndex::new_min();
+            for i in 0..200u64 {
+                idx.insert(rk(i % 7 == 0, (i % 13) as f64, i as f64, i));
+            }
+            for i in 0..200u64 {
+                if i % 3 == 0 {
+                    idx.update(rk(false, (i % 29) as f64, i as f64, i));
+                }
+                if i % 5 == 0 {
+                    idx.remove(i);
+                }
+            }
+            let mut pops = Vec::new();
+            while let Some(e) = idx.pop() {
+                pops.push((e.rank.rid, e.version));
+            }
+            (pops, idx.ops)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn prop_pop_order_matches_model_under_random_interleavings() {
+        // Satellite: pop order == sorted Policy::rank order under random
+        // insert/update/remove interleavings, NaN and ties included.
+        prop::check("rank index vs sort", 60, |g| {
+            let max_first = g.bool();
+            let mut idx = RankIndex::with_width(
+                *g.pick(&[0.5, 1.0, 25.6]),
+                max_first,
+            );
+            let mut model: Vec<(u64, Rank)> = Vec::new();
+            let n_ops = g.usize_in(1, 120);
+            let mut next_rid = 0u64;
+            for _ in 0..n_ops {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        let key = match g.usize_in(0, 5) {
+                            0 => f64::NAN,
+                            1 => -g.f64_in(0.0, 10.0),
+                            2 => g.f64_in(0.0, 3.0).floor(), // force ties
+                            _ => g.f64_in(0.0, 9000.0),
+                        };
+                        let r = rk(g.bool(), key, g.f64_in(0.0, 2.0).floor(), next_rid);
+                        idx.insert(r);
+                        model.push((next_rid, r));
+                        next_rid += 1;
+                    }
+                    1 => {
+                        if model.is_empty() {
+                            continue;
+                        }
+                        let i = g.usize_in(0, model.len() - 1);
+                        let (rid, old) = model[i];
+                        let r = rk(g.bool(), g.f64_in(-5.0, 400.0), old.tie, rid);
+                        idx.update(r);
+                        model[i] = (rid, r);
+                    }
+                    2 => {
+                        if model.is_empty() {
+                            continue;
+                        }
+                        let i = g.usize_in(0, model.len() - 1);
+                        let (rid, _) = model.swap_remove(i);
+                        idx.remove(rid);
+                    }
+                    _ => {
+                        let popped = idx.pop();
+                        let expect = model_order(&model, max_first);
+                        match (popped, expect.first()) {
+                            (None, None) => {}
+                            (Some(e), Some(&rid)) => {
+                                if e.rank.rid != rid {
+                                    return Err(format!(
+                                        "pop {} but model head {rid}",
+                                        e.rank.rid
+                                    ));
+                                }
+                                let i = model
+                                    .iter()
+                                    .position(|&(r, _)| r == rid)
+                                    .unwrap();
+                                model.swap_remove(i);
+                            }
+                            (got, want) => {
+                                return Err(format!(
+                                    "pop {got:?} vs model {want:?}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                if idx.len() != model.len() {
+                    return Err(format!(
+                        "len {} != model {}",
+                        idx.len(),
+                        model.len()
+                    ));
+                }
+            }
+            // Drain: the full remaining pop order must equal the sort.
+            let expect = model_order(&model, max_first);
+            let got = drain(&mut idx);
+            if got != expect {
+                return Err(format!("drain {got:?} != sorted {expect:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_policy_rank_pop_order() {
+        // Drive the index with real Policy::rank values over randomized
+        // request states (phases, ages, NaN predictions).
+        let bins = BinsConfig {
+            n_bins: 10,
+            max_len: 256,
+            width: 25.6,
+            midpoints: (0..10).map(|i| (i as f64 + 0.5) * 25.6).collect(),
+        };
+        prop::check("policy rank pop order", 40, |g| {
+            let policy = match g.usize_in(0, 2) {
+                0 => Policy::Fcfs,
+                1 => Policy::SjfPrompt,
+                _ => Policy::Trail { c: g.f64_in(0.2, 1.0) },
+            };
+            let mut idx = RankIndex::new_min();
+            let mut ranks: Vec<Rank> = Vec::new();
+            let n = g.usize_in(1, 60);
+            for rid in 0..n as u64 {
+                let spec = RequestSpec {
+                    rid,
+                    prompt: vec![1; g.usize_in(1, 8)],
+                    true_output_len: 32,
+                    response: vec![9; 31],
+                };
+                let mut r = Request::new(spec, g.f64_in(0.0, 4.0).floor(), &bins);
+                r.phase = *g.pick(&[
+                    Phase::Waiting,
+                    Phase::Prefilling,
+                    Phase::Running,
+                    Phase::Preempted,
+                    Phase::Discarded,
+                ]);
+                r.generated = g.usize_in(0, 31);
+                r.initial_pred = g.f64_in(1.0, 64.0);
+                r.pred_remaining = if g.usize_in(0, 9) == 0 {
+                    f64::NAN
+                } else {
+                    g.f64_in(0.0, 64.0)
+                };
+                let rank = policy.rank(&r);
+                idx.insert(rank);
+                ranks.push(rank);
+            }
+            ranks.sort_by(|a, b| a.cmp(b));
+            let got = drain(&mut idx);
+            let want: Vec<u64> = ranks.iter().map(|r| r.rid).collect();
+            if got != want {
+                return Err(format!("{policy:?}: {got:?} != {want:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -35,9 +35,10 @@ fn main() {
         Some("theory") => cmd_theory(&args),
         Some("server") => cmd_server(&args),
         Some("sim") => cmd_sim(&args),
+        Some("sched") => cmd_sched(&args),
         _ => {
             eprintln!(
-                "usage: trail-serve <info|serve|simulate|theory|server> [options]\n\
+                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched> [options]\n\
                  \n\
                  serve    — run a serving benchmark against the AOT model\n\
                  \x20        --policy fcfs|sjf|trail|srpt|trail-c<M>  (default trail)\n\
@@ -54,7 +55,12 @@ fn main() {
                  \x20        --scenarios steady,bursty,multi-tenant,skewed\n\
                  \x20        --policies fcfs,srpt,trail --replicas 2,4\n\
                  \x20        [--n <reqs>] [--seed <u64>] [--no-migration]\n\
+                 \x20        [--selector indexed|reference] [--tenants]\n\
                  \x20        [--out BENCH_sim.json] [--trace-out trace.jsonl]\n\
+                 sched    — scheduler-scale selector comparison (BENCH_sched.json):\n\
+                 \x20        reference full-sort vs incremental rank index over the\n\
+                 \x20        scale-1k / scale-10k / scale-replicas grid\n\
+                 \x20        [--out BENCH_sched.json]\n\
                  info     — print artifact/config summary"
             );
             2
@@ -361,6 +367,23 @@ fn cmd_sim(args: &Args) -> i32 {
     }
 
     sweep.migration = !args.has_flag("no-migration");
+    sweep.tenant_breakdown = args.has_flag("tenants");
+    // Selector override (both implementations serve bit-identically;
+    // this exists for A/B timing and the differential harness).
+    match args.str_or("selector", "") {
+        "" => {}
+        s => match trail::coordinator::Selector::parse(s) {
+            Some(sel) => {
+                for sc in &mut sweep.scenarios {
+                    sc.selector = sel;
+                }
+            }
+            None => {
+                eprintln!("bad --selector '{s}' (indexed|reference)");
+                return 2;
+            }
+        },
+    }
     // Absent flag = no override; an explicit bad value is an error, not
     // a silent fall-through to the scenario defaults.
     let n_override = match args.str_or("n", "") {
@@ -419,6 +442,48 @@ fn cmd_sim(args: &Args) -> i32 {
             return 1;
         }
         println!("report ({} rows, schema {}) -> {out}", report.rows.len(), trail::sim::SCHEMA_VERSION);
+    }
+    0
+}
+
+fn cmd_sched(args: &Args) -> i32 {
+    // Embedded config, like `sim`: the checked-in BENCH_sched.json and
+    // the Python mirror pin the embedded defaults.
+    let cfg = Config::embedded_default();
+    let report = match trail::sim::run_sched_sweep(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sched sweep failed: {e}");
+            return 1;
+        }
+    };
+    print!("{}", report.render_table());
+    // The headline claim, stated directly on the console: indexed vs
+    // reference work at the 10k-request grid point.
+    let ops = |sel: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| r.scenario == "scale-10k" && r.selector.as_deref() == Some(sel))
+            .and_then(|r| r.selector_ops)
+    };
+    if let (Some(rops), Some(iops)) = (ops("reference"), ops("indexed")) {
+        println!(
+            "scale-10k selector work: reference {rops} ops, indexed {iops} ops ({:.1}x)",
+            rops as f64 / iops.max(1) as f64
+        );
+    }
+    let out = args.str_or("out", "").to_string();
+    if !out.is_empty() {
+        if let Err(e) = report.save(&out) {
+            eprintln!("write {out} failed: {e}");
+            return 1;
+        }
+        println!(
+            "report ({} rows, schema {}) -> {out}",
+            report.rows.len(),
+            trail::sim::SCHED_SCHEMA_VERSION
+        );
     }
     0
 }

@@ -34,6 +34,15 @@ use crate::coordinator::engine::ServingEngine;
 use crate::util::stats::Samples;
 use crate::workload::TraceEntry;
 
+/// Per-tenant latency slice of a co-simulated serve (tenant indices
+/// follow the generating workload's tenant list).
+#[derive(Debug, Default)]
+pub struct TenantOutcome {
+    pub n: usize,
+    pub latency: Samples,
+    pub ttft: Samples,
+}
+
 /// Aggregate outcome of one co-simulated serve (all replicas).
 #[derive(Debug)]
 pub struct SimOutcome {
@@ -52,6 +61,12 @@ pub struct SimOutcome {
     pub makespan: f64,
     /// Engine iterations summed over replicas.
     pub n_iterations: u64,
+    /// Selector work units summed over replicas
+    /// (`ServingEngine::selector_ops`; see docs/scheduler.md).
+    pub selector_ops: u64,
+    /// Latency breakdown by trace tenant (ROADMAP multi-tenant
+    /// fairness groundwork), tenant index order.
+    pub per_tenant: Vec<TenantOutcome>,
 }
 
 impl SimOutcome {
@@ -99,6 +114,11 @@ impl<B: ModelBackend> SimDriver<B> {
         let mut latency = Samples::new();
         let mut ttft = Samples::new();
         let mut finished = 0usize;
+        let rid_tenant: std::collections::HashMap<u64, u32> =
+            trace.iter().map(|e| (e.spec.rid, e.tenant)).collect();
+        let n_tenants = trace.iter().map(|e| e.tenant + 1).max().unwrap_or(0) as usize;
+        let mut per_tenant: Vec<TenantOutcome> =
+            (0..n_tenants).map(|_| TenantOutcome::default()).collect();
         // A replica whose step was a no-op (memory-blocked) cannot make
         // progress until an admission or migration changes its state;
         // exclude it from the event loop until then.
@@ -165,6 +185,10 @@ impl<B: ModelBackend> SimDriver<B> {
                 finished += 1;
                 latency.push(f.latency);
                 ttft.push(f.ttft);
+                let tenant = rid_tenant[&f.rid] as usize;
+                per_tenant[tenant].n += 1;
+                per_tenant[tenant].latency.push(f.latency);
+                per_tenant[tenant].ttft.push(f.ttft);
             }
         }
         if finished != n_total {
@@ -175,6 +199,7 @@ impl<B: ModelBackend> SimDriver<B> {
         let mut discards = 0u64;
         let mut kv_peak = 0usize;
         let mut iters = 0u64;
+        let mut selector_ops = 0u64;
         let mut per_replica = Vec::with_capacity(self.engines.len());
         let mut makespan = 0.0f64;
         for e in &self.engines {
@@ -183,6 +208,7 @@ impl<B: ModelBackend> SimDriver<B> {
             discards += e.metrics.n_discards;
             kv_peak = kv_peak.max(e.metrics.peak_mem_tokens);
             iters += st.n_iterations;
+            selector_ops += e.selector_ops();
             per_replica.push(e.metrics.n_finished);
             makespan = makespan.max(e.now());
         }
@@ -197,6 +223,8 @@ impl<B: ModelBackend> SimDriver<B> {
             per_replica_finished: per_replica,
             makespan,
             n_iterations: iters,
+            selector_ops,
+            per_tenant,
         })
     }
 

@@ -14,6 +14,6 @@ pub mod driver;
 pub mod report;
 pub mod scenario;
 
-pub use driver::{SimDriver, SimOutcome};
-pub use report::{BenchReport, SweepRow, SCHEMA_VERSION};
-pub use scenario::{builtin, builtin_names, run_sweep, SimScenario, SweepConfig};
+pub use driver::{SimDriver, SimOutcome, TenantOutcome};
+pub use report::{BenchReport, SweepRow, TenantRow, SCHED_SCHEMA_VERSION, SCHEMA_VERSION};
+pub use scenario::{builtin, builtin_names, run_sched_sweep, run_sweep, SimScenario, SweepConfig};

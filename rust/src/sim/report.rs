@@ -21,6 +21,46 @@ use crate::util::csv::{f, Table};
 use crate::util::json::{parse_file, Json};
 
 pub const SCHEMA_VERSION: &str = "trail.simlab.bench/v1";
+/// Scheduler-scale reports (`BENCH_sched.json`): the bench rows plus
+/// `selector` / `selector_ops` / `per_tenant` columns.
+pub const SCHED_SCHEMA_VERSION: &str = "trail.simlab.sched/v1";
+
+/// Per-tenant latency row (present when a sweep runs with
+/// `tenant_breakdown`; tenant names come from the scenario's
+/// `TenantProfile`s).
+#[derive(Clone, Debug)]
+pub struct TenantRow {
+    pub tenant: String,
+    pub n: usize,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_ttft_s: f64,
+}
+
+impl TenantRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tenant", Json::str(&self.tenant)),
+            ("n", Json::Num(self.n as f64)),
+            ("mean_latency_s", Json::Num(self.mean_latency_s)),
+            ("p50_latency_s", Json::Num(self.p50_latency_s)),
+            ("p99_latency_s", Json::Num(self.p99_latency_s)),
+            ("mean_ttft_s", Json::Num(self.mean_ttft_s)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> TenantRow {
+        TenantRow {
+            tenant: j.at(&["tenant"]).as_str().to_string(),
+            n: j.at(&["n"]).as_usize(),
+            mean_latency_s: j.at(&["mean_latency_s"]).as_f64(),
+            p50_latency_s: j.at(&["p50_latency_s"]).as_f64(),
+            p99_latency_s: j.at(&["p99_latency_s"]).as_f64(),
+            mean_ttft_s: j.at(&["mean_ttft_s"]).as_f64(),
+        }
+    }
+}
 
 /// One (scenario × policy × replicas) cell of a sweep.
 #[derive(Clone, Debug)]
@@ -47,6 +87,12 @@ pub struct SweepRow {
     pub kv_peak_tokens: usize,
     pub n_iterations: u64,
     pub per_replica_finished: Vec<usize>,
+    /// Selector name + work units — sched sweeps only; `None` keeps the
+    /// seed bench serialisation byte-identical.
+    pub selector: Option<String>,
+    pub selector_ops: Option<u64>,
+    /// Per-tenant latency breakdown — only serialised when non-empty.
+    pub per_tenant: Vec<TenantRow>,
 }
 
 impl SweepRow {
@@ -55,8 +101,54 @@ impl SweepRow {
         policy: &Policy,
         replicas: usize,
         migration: bool,
-        mut out: SimOutcome,
+        out: SimOutcome,
     ) -> SweepRow {
+        SweepRow::from_outcome_full(sc, policy, replicas, migration, out, false, false)
+    }
+
+    /// Full constructor: optionally record the scenario's selector (with
+    /// its work counter) and the per-tenant latency breakdown.
+    pub fn from_outcome_full(
+        sc: &SimScenario,
+        policy: &Policy,
+        replicas: usize,
+        migration: bool,
+        mut out: SimOutcome,
+        record_selector: bool,
+        tenant_breakdown: bool,
+    ) -> SweepRow {
+        let per_tenant = if tenant_breakdown {
+            sc.workload
+                .tenants
+                .iter()
+                .enumerate()
+                .map(|(ti, t)| {
+                    let slice = out.per_tenant.get_mut(ti);
+                    match slice {
+                        Some(s) if s.n > 0 => TenantRow {
+                            tenant: t.name.clone(),
+                            n: s.n,
+                            mean_latency_s: s.latency.mean(),
+                            p50_latency_s: s.latency.percentile(50.0),
+                            p99_latency_s: s.latency.percentile(99.0),
+                            mean_ttft_s: s.ttft.mean(),
+                        },
+                        // A tenant can miss the first n arrivals
+                        // entirely; zero rows keep the report finite.
+                        _ => TenantRow {
+                            tenant: t.name.clone(),
+                            n: 0,
+                            mean_latency_s: 0.0,
+                            p50_latency_s: 0.0,
+                            p99_latency_s: 0.0,
+                            mean_ttft_s: 0.0,
+                        },
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         SweepRow {
             scenario: sc.name.clone(),
             policy: policy.name(),
@@ -79,11 +171,22 @@ impl SweepRow {
             kv_peak_tokens: out.kv_peak_tokens,
             n_iterations: out.n_iterations,
             per_replica_finished: out.per_replica_finished,
+            selector: if record_selector {
+                Some(sc.selector.name().to_string())
+            } else {
+                None
+            },
+            selector_ops: if record_selector {
+                Some(out.selector_ops)
+            } else {
+                None
+            },
+            per_tenant,
         }
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("scenario", Json::str(&self.scenario)),
             ("policy", Json::str(&self.policy)),
             ("dispatch", Json::str(&self.dispatch)),
@@ -116,7 +219,20 @@ impl SweepRow {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(sel) = &self.selector {
+            pairs.push(("selector", Json::str(sel)));
+        }
+        if let Some(ops) = self.selector_ops {
+            pairs.push(("selector_ops", Json::Num(ops as f64)));
+        }
+        if !self.per_tenant.is_empty() {
+            pairs.push((
+                "per_tenant",
+                Json::Arr(self.per_tenant.iter().map(|t| t.to_json()).collect()),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     fn from_json(j: &Json) -> SweepRow {
@@ -153,6 +269,12 @@ impl SweepRow {
                 .iter()
                 .map(|&x| x as usize)
                 .collect(),
+            selector: j.get("selector").map(|s| s.as_str().to_string()),
+            selector_ops: j.get("selector_ops").map(|v| v.as_i64() as u64),
+            per_tenant: j
+                .get("per_tenant")
+                .map(|arr| arr.as_arr().iter().map(TenantRow::from_json).collect())
+                .unwrap_or_default(),
         }
     }
 }
@@ -160,17 +282,34 @@ impl SweepRow {
 /// One sweep's worth of rows, ready to serialise.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
+    /// [`SCHEMA_VERSION`] (bench sweeps) or [`SCHED_SCHEMA_VERSION`]
+    /// (scheduler-scale sweeps).
+    pub schema: String,
     pub rows: Vec<SweepRow>,
 }
 
 impl BenchReport {
+    pub fn new(rows: Vec<SweepRow>) -> BenchReport {
+        BenchReport {
+            schema: SCHEMA_VERSION.to_string(),
+            rows,
+        }
+    }
+
+    pub fn new_sched(rows: Vec<SweepRow>) -> BenchReport {
+        BenchReport {
+            schema: SCHED_SCHEMA_VERSION.to_string(),
+            rows,
+        }
+    }
+
     /// Deterministic serialisation: fixed top-level layout, one row
     /// object per line (row diffs stay line-local), sorted keys inside
     /// each row, trailing newline.
     pub fn to_json_string(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str(&format!("\"schema\":{},\n", Json::str(SCHEMA_VERSION).to_string()));
+        s.push_str(&format!("\"schema\":{},\n", Json::str(&self.schema).to_string()));
         s.push_str("\"rows\":[\n");
         for (i, row) in self.rows.iter().enumerate() {
             s.push_str(&row.to_json().to_string());
@@ -195,24 +334,33 @@ impl BenchReport {
     pub fn load(path: &str) -> Result<BenchReport, String> {
         let j = parse_file(path)?;
         let schema = j.at(&["schema"]).as_str();
-        if schema != SCHEMA_VERSION {
+        if schema != SCHEMA_VERSION && schema != SCHED_SCHEMA_VERSION {
             return Err(format!(
-                "schema mismatch: file is '{schema}', this binary reads '{SCHEMA_VERSION}'"
+                "schema mismatch: file is '{schema}', this binary reads \
+                 '{SCHEMA_VERSION}' or '{SCHED_SCHEMA_VERSION}'"
             ));
         }
         Ok(BenchReport {
+            schema: schema.to_string(),
             rows: j.at(&["rows"]).as_arr().iter().map(SweepRow::from_json).collect(),
         })
     }
 
-    /// Aligned console table (the `trail-serve sim` output).
+    /// Aligned console table (the `trail-serve sim` / `sched` output).
+    /// Sched sweeps get two extra columns for the selector comparison.
     pub fn render_table(&self) -> String {
-        let mut t = Table::new(&[
+        let sched = self.rows.iter().any(|r| r.selector.is_some());
+        let mut headers = vec![
             "scenario", "policy", "disp", "reps", "n", "mean_lat_s", "p50_lat_s", "p99_lat_s",
             "mean_ttft_s", "p99_ttft_s", "req/s", "preempt", "discard", "migrate", "kv_peak",
-        ]);
+        ];
+        if sched {
+            headers.push("selector");
+            headers.push("sel_ops");
+        }
+        let mut t = Table::new(&headers);
         for r in &self.rows {
-            t.row(vec![
+            let mut row = vec![
                 r.scenario.clone(),
                 r.policy.clone(),
                 r.dispatch.clone(),
@@ -228,7 +376,12 @@ impl BenchReport {
                 r.discards.to_string(),
                 r.migrations.to_string(),
                 r.kv_peak_tokens.to_string(),
-            ]);
+            ];
+            if sched {
+                row.push(r.selector.clone().unwrap_or_default());
+                row.push(r.selector_ops.map(|x| x.to_string()).unwrap_or_default());
+            }
+            t.row(row);
         }
         t.render()
     }

@@ -22,7 +22,7 @@ use anyhow::Result;
 use crate::config::Config;
 use crate::coordinator::backend::CostModel;
 use crate::coordinator::dispatch::DispatchPolicy;
-use crate::coordinator::{ClockSpec, MockBackend, Policy, ServeConfig, ServingEngine};
+use crate::coordinator::{ClockSpec, MockBackend, Policy, Selector, ServeConfig, ServingEngine};
 use crate::sim::driver::{SimDriver, SimOutcome};
 use crate::sim::report::{BenchReport, SweepRow};
 use crate::testkit::PredictorSpec;
@@ -45,6 +45,10 @@ pub struct SimScenario {
     pub cost: CostModel,
     pub predictor: PredictorSpec,
     pub max_iterations: u64,
+    /// Target-selection implementation for every engine this scenario
+    /// builds (`Indexed` default; `Reference` for the sched-bench
+    /// selector comparison).
+    pub selector: Selector,
 }
 
 impl SimScenario {
@@ -63,6 +67,7 @@ impl SimScenario {
             // a perfect oracle makes it indistinguishable from SRPT.
             predictor: PredictorSpec::noisy_oracle(0.4),
             max_iterations: 2_000_000,
+            selector: Selector::Indexed,
         }
     }
 
@@ -73,6 +78,11 @@ impl SimScenario {
 
     pub fn seed(mut self, seed: u64) -> SimScenario {
         self.seed = seed;
+        self
+    }
+
+    pub fn selector(mut self, selector: Selector) -> SimScenario {
+        self.selector = selector;
         self
     }
 
@@ -103,6 +113,7 @@ impl SimScenario {
             .map(|_| {
                 let backend = MockBackend::new(self.slots, cfg).with_cost(self.cost);
                 let mut serve = ServeConfig::new(cfg, policy.clone());
+                serve.selector = self.selector;
                 serve.clock = ClockSpec::Virtual;
                 serve.max_iterations = self.max_iterations;
                 serve.pool_tokens =
@@ -140,8 +151,16 @@ impl SimScenario {
     }
 }
 
-pub fn builtin_names() -> [&'static str; 4] {
-    ["steady", "bursty", "multi-tenant", "skewed"]
+pub fn builtin_names() -> [&'static str; 7] {
+    [
+        "steady",
+        "bursty",
+        "multi-tenant",
+        "skewed",
+        "scale-1k",
+        "scale-10k",
+        "scale-replicas",
+    ]
 }
 
 /// Builtin scenario by name (see the module docs for the regimes).
@@ -185,6 +204,36 @@ pub fn builtin(name: &str) -> Option<SimScenario> {
             s.n = 240;
             s
         }
+        // Scheduler-scale grid (BENCH_sched.json): the same ~2.5x-
+        // overload mix at 1k and 10k requests (per-replica live sets
+        // grow into the thousands at 10k — the select_targets hot-path
+        // blow-up regime the rank index exists for), plus a 128-replica
+        // fleet point where per-replica sets stay small and the full
+        // sort was never the bottleneck.
+        "scale-1k" | "scale-10k" => {
+            let mut s = SimScenario::new(
+                name,
+                TraceWorkload::new(vec![
+                    TenantProfile::steady("chat", 288.0).mu_shift(-0.3),
+                    TenantProfile::steady("batch", 72.0).mu_shift(0.7),
+                ]),
+            );
+            s.slots = 32;
+            s.seed = 777;
+            s.n = if name == "scale-1k" { 1000 } else { 10000 };
+            s
+        }
+        "scale-replicas" => {
+            let mut s =
+                SimScenario::new("scale-replicas", TraceWorkload::poisson(2100.0));
+            s.slots = 16;
+            s.pool_frac = 0.5;
+            s.seed = 777;
+            s.n = 2560;
+            // One tenant name for the breakdown rows.
+            s.workload.tenants[0].name = "fleet".into();
+            s
+        }
         _ => return None,
     };
     Some(s)
@@ -197,6 +246,9 @@ pub struct SweepConfig {
     pub policies: Vec<Policy>,
     pub replica_counts: Vec<usize>,
     pub migration: bool,
+    /// Emit `per_tenant` latency rows. Off for the pinned seed sweep
+    /// (the baseline serialisation must stay byte-identical).
+    pub tenant_breakdown: bool,
 }
 
 impl SweepConfig {
@@ -205,10 +257,14 @@ impl SweepConfig {
     /// scenario at 2 and 4 replicas, migration on.
     pub fn default_sweep() -> SweepConfig {
         SweepConfig {
-            scenarios: builtin_names().iter().map(|n| builtin(n).unwrap()).collect(),
+            scenarios: ["steady", "bursty", "multi-tenant", "skewed"]
+                .iter()
+                .map(|n| builtin(n).unwrap())
+                .collect(),
             policies: vec![Policy::Fcfs, Policy::Trail { c: 1.0 }, Policy::Trail { c: 0.8 }],
             replica_counts: vec![2, 4],
             migration: true,
+            tenant_breakdown: false,
         }
     }
 }
@@ -222,9 +278,41 @@ pub fn run_sweep(cfg: &Config, sweep: &SweepConfig) -> Result<BenchReport> {
         for &replicas in &sweep.replica_counts {
             for policy in &sweep.policies {
                 let out = sc.run_trace(cfg, policy, replicas, sweep.migration, &trace)?;
-                rows.push(SweepRow::from_outcome(sc, policy, replicas, sweep.migration, out));
+                rows.push(SweepRow::from_outcome_full(
+                    sc,
+                    policy,
+                    replicas,
+                    sweep.migration,
+                    out,
+                    false,
+                    sweep.tenant_breakdown,
+                ));
             }
         }
     }
-    Ok(BenchReport { rows })
+    Ok(BenchReport::new(rows))
+}
+
+/// The checked-in scheduler-scale grid (`benchmarks/BENCH_sched.json`):
+/// each (scenario, replicas) point under TRAIL c=0.8, once per selector
+/// on the identical trace. Reference and indexed rows must agree on
+/// every scheduling metric (the differential guarantee) and differ only
+/// in `selector_ops` — the scaling story is the op-count gap at the
+/// 10k-request point. Keep the grid in sync with python/simref.py
+/// `SCHED_GRID`.
+pub fn run_sched_sweep(cfg: &Config) -> Result<BenchReport> {
+    let policy = Policy::Trail { c: 0.8 };
+    let mut rows = Vec::new();
+    for (name, replicas) in [("scale-1k", 4usize), ("scale-10k", 4), ("scale-replicas", 128)] {
+        let base = builtin(name).expect("builtin scale scenario");
+        let trace = base.trace(cfg);
+        for selector in [Selector::Reference, Selector::Indexed] {
+            let sc = base.clone().selector(selector);
+            let out = sc.run_trace(cfg, &policy, replicas, true, &trace)?;
+            rows.push(SweepRow::from_outcome_full(
+                &sc, &policy, replicas, true, out, true, true,
+            ));
+        }
+    }
+    Ok(BenchReport::new_sched(rows))
 }

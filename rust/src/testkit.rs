@@ -32,7 +32,9 @@ use crate::config::Config;
 use crate::coordinator::backend::CostModel;
 use crate::coordinator::dispatch::{DispatchPolicy, ReplicaPool};
 use crate::coordinator::engine::OnlineJob;
-use crate::coordinator::{ClockSpec, MockBackend, Policy, ServeConfig, ServeReport, ServingEngine};
+use crate::coordinator::{
+    ClockSpec, MockBackend, Policy, Selector, ServeConfig, ServeReport, ServingEngine,
+};
 use crate::predictor::{OraclePredictor, Predictor, ProbePredictor};
 use crate::runtime::ProbeWeights;
 use crate::util::stats::Samples;
@@ -117,6 +119,9 @@ pub struct Scenario {
     pub max_iterations: u64,
     /// Engine replicas for the pool harness (`run_pool`); 1 elsewhere.
     pub replicas: usize,
+    /// Target-selection implementation (`Indexed` default; `Reference`
+    /// is the seed full-sort oracle for differential tests).
+    pub selector: Selector,
     /// Mock-backend batch slots. `None` keeps the config default
     /// (`cfg.model.batch_slots`, 8 — the regime the pinned suite numbers
     /// were measured in); set it to exercise paper-scale 100+-sequence
@@ -147,8 +152,15 @@ impl Scenario {
             },
             max_iterations: 2_000_000,
             replicas: 1,
+            selector: Selector::Indexed,
             slots: None,
         }
+    }
+
+    /// Target-selection implementation for the scenario's engines.
+    pub fn selector(mut self, selector: Selector) -> Scenario {
+        self.selector = selector;
+        self
     }
 
     pub fn n(mut self, n: usize) -> Scenario {
@@ -234,6 +246,7 @@ impl Scenario {
 
     fn serve_config(&self, cfg: &Config) -> ServeConfig {
         let mut serve = ServeConfig::new(cfg, self.policy.clone());
+        serve.selector = self.selector;
         serve.max_iterations = self.max_iterations;
         serve.pool_tokens =
             ((self.effective_slots(cfg) * cfg.model.max_seq) as f64 * self.pool_frac) as usize;

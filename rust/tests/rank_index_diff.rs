@@ -1,0 +1,268 @@
+//! Differential oracle for the incremental rank index: the seed
+//! full-sort selector (`Selector::Reference`) and the rank-index
+//! selector (`Selector::Indexed`) are driven in lockstep through the
+//! full testkit policy × load × noise × slots × pool grid, asserting
+//! byte-identical target choices, phase transitions, prediction state,
+//! KV accounting, clocks, and completions at EVERY step — not just
+//! matching end-of-run aggregates. A single mis-maintained index entry
+//! shows up here as the first diverging step with both engines'
+//! snapshots in the panic message.
+
+use trail::config::Config;
+use trail::coordinator::{MockBackend, Policy, Selector, ServingEngine};
+use trail::testkit::{Load, Scenario};
+use trail::workload::gen_requests;
+
+fn cfg() -> Config {
+    Config::load_default().expect("load_default")
+}
+
+/// Drive two engines through the identical replay workload, comparing
+/// full state after every step. Mirrors `ServingEngine::drive` over a
+/// `ReplaySource`: admit everything due, step, jump idle clocks to the
+/// next arrival.
+fn run_lockstep(cfg: &Config, scenario: &Scenario, label: &str) {
+    let specs = gen_requests(cfg, scenario.n, scenario.seed);
+    let arrivals = scenario.arrivals();
+
+    let mut reference: ServingEngine<MockBackend> = scenario
+        .clone()
+        .selector(Selector::Reference)
+        .build_engine(cfg);
+    let mut indexed: ServingEngine<MockBackend> = scenario
+        .clone()
+        .selector(Selector::Indexed)
+        .build_engine(cfg);
+
+    let mut next = 0usize;
+    let mut step_no = 0u64;
+    loop {
+        assert_eq!(
+            reference.now().to_bits(),
+            indexed.now().to_bits(),
+            "{label}: clocks diverged before step {step_no}"
+        );
+        let now = reference.now();
+        while next < arrivals.len() && arrivals[next].at <= now {
+            let a = &arrivals[next];
+            reference.admit(specs[a.idx].clone(), Some(a.at));
+            indexed.admit(specs[a.idx].clone(), Some(a.at));
+            next += 1;
+        }
+        if !reference.any_schedulable() {
+            assert!(
+                !indexed.any_schedulable(),
+                "{label}: schedulable sets diverged at step {step_no}"
+            );
+            if next >= arrivals.len() {
+                break; // drained
+            }
+            let at = arrivals[next].at;
+            reference.sync_clock(at);
+            indexed.sync_clock(at);
+            continue;
+        }
+
+        let a = reference.step().expect("reference step");
+        let b = indexed.step().expect("indexed step");
+        step_no += 1;
+
+        // Byte-identical step outcome: clock, cost, work, completions.
+        assert_eq!(
+            a.now.to_bits(),
+            b.now.to_bits(),
+            "{label}: step {step_no} clock"
+        );
+        assert_eq!(
+            a.cost.to_bits(),
+            b.cost.to_bits(),
+            "{label}: step {step_no} cost"
+        );
+        assert_eq!(a.worked, b.worked, "{label}: step {step_no} worked");
+        let fin_a: Vec<_> = a
+            .finished
+            .iter()
+            .map(|f| (f.rid, f.latency.to_bits(), f.ttft.to_bits(), f.n_tokens))
+            .collect();
+        let fin_b: Vec<_> = b
+            .finished
+            .iter()
+            .map(|f| (f.rid, f.latency.to_bits(), f.ttft.to_bits(), f.n_tokens))
+            .collect();
+        assert_eq!(fin_a, fin_b, "{label}: step {step_no} completions");
+
+        // Byte-identical target choices, in rank order.
+        assert_eq!(
+            reference.last_target_rids(),
+            indexed.last_target_rids(),
+            "{label}: step {step_no} target set"
+        );
+
+        // Full per-request state: phases, slots, prefill/KV progress,
+        // preemption/discard counters, prediction bits.
+        let snap_a = reference.request_snapshots();
+        let snap_b = indexed.request_snapshots();
+        assert_eq!(
+            snap_a, snap_b,
+            "{label}: step {step_no} request state diverged"
+        );
+
+        // KV accounting.
+        let st_a = reference.status();
+        let st_b = indexed.status();
+        assert_eq!(
+            st_a.kv_used_tokens, st_b.kv_used_tokens,
+            "{label}: step {step_no} kv tokens"
+        );
+        assert_eq!(st_a.resident, st_b.resident, "{label}: step {step_no} residents");
+        assert_eq!(st_a.live, st_b.live, "{label}: step {step_no} live");
+    }
+
+    // End-of-run aggregates (belt and braces on top of the per-step
+    // checks).
+    let st_a = reference.status();
+    let st_b = indexed.status();
+    assert_eq!(st_a.n_finished, scenario.n as u64, "{label}: reference lost requests");
+    assert_eq!(st_b.n_finished, scenario.n as u64, "{label}: indexed lost requests");
+    assert_eq!(st_a.n_iterations, st_b.n_iterations, "{label}: iteration counts");
+    assert_eq!(
+        reference.metrics.n_preemptions, indexed.metrics.n_preemptions,
+        "{label}: preemptions"
+    );
+    assert_eq!(
+        reference.metrics.n_discards, indexed.metrics.n_discards,
+        "{label}: discards"
+    );
+    assert_eq!(
+        reference.metrics.peak_mem_tokens, indexed.metrics.peak_mem_tokens,
+        "{label}: kv peak"
+    );
+}
+
+#[test]
+fn full_grid_reference_vs_indexed_lockstep() {
+    // The testkit grid from the issue: policy × load × noise × slots
+    // (× pool pressure). ~1000 scheduling decisions per cell; every one
+    // compared step-for-step.
+    let cfg = cfg();
+    let policies = [
+        Policy::Fcfs,
+        Policy::SjfPrompt,
+        Policy::Trail { c: 1.0 },
+        Policy::Trail { c: 0.8 },
+        Policy::Trail { c: 0.4 },
+    ];
+    let loads = [Load::Burst, Load::Poisson(110.0)];
+    let noises = [0.0, 0.5];
+    let slot_counts: [Option<usize>; 2] = [None, Some(32)];
+    let pool_fracs = [0.3, 0.55];
+    for policy in &policies {
+        for load in &loads {
+            for &noise in &noises {
+                for &slots in &slot_counts {
+                    for &pool_frac in &pool_fracs {
+                        let mut s = Scenario::new(policy.clone())
+                            .n(36)
+                            .load(load.clone())
+                            .noise(noise)
+                            .pool_frac(pool_frac)
+                            .seed(4242);
+                        if let Some(k) = slots {
+                            s = s.slots(k);
+                        }
+                        let label = format!(
+                            "{}/{:?}/noise{}/slots{:?}/pool{}",
+                            policy.name(),
+                            load,
+                            noise,
+                            slots,
+                            pool_frac
+                        );
+                        run_lockstep(&cfg, &s, &label);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn probe_predictor_path_is_also_equivalent() {
+    // The synthetic-probe predictor mutates predictions through the
+    // smoother (non-monotone updates) — a different rank-churn profile
+    // than the oracle. Same lockstep guarantee.
+    use trail::testkit::PredictorSpec;
+    let cfg = cfg();
+    for policy in [Policy::Trail { c: 0.8 }, Policy::SjfPrompt] {
+        let s = Scenario::new(policy.clone())
+            .n(24)
+            .load(Load::Poisson(80.0))
+            .predictor(PredictorSpec::SyntheticProbe { refine: true, seed: 1001 })
+            .pool_frac(0.4);
+        run_lockstep(&cfg, &s, &format!("probe/{}", policy.name()));
+    }
+}
+
+#[test]
+fn cosim_with_migration_is_equivalent_across_selectors() {
+    // The skewed co-sim exercises cross-replica migration (take/admit)
+    // plus discard/recompute churn on both selector paths.
+    let cfg = Config::embedded_default();
+    let policy = Policy::Trail { c: 0.8 };
+    let base = trail::sim::builtin("skewed").unwrap().n(80);
+    let trace = base.trace(&cfg);
+    let a = base
+        .clone()
+        .selector(Selector::Reference)
+        .run_trace(&cfg, &policy, 2, true, &trace)
+        .unwrap();
+    let b = base
+        .clone()
+        .selector(Selector::Indexed)
+        .run_trace(&cfg, &policy, 2, true, &trace)
+        .unwrap();
+    assert_eq!(a.n_requests, b.n_requests);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.discards, b.discards);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.kv_peak_tokens, b.kv_peak_tokens);
+    assert_eq!(a.n_iterations, b.n_iterations);
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    let mut la = a.latency;
+    let mut lb = b.latency;
+    assert_eq!(la.mean().to_bits(), lb.mean().to_bits());
+    assert_eq!(la.percentile(99.0).to_bits(), lb.percentile(99.0).to_bits());
+    assert_eq!(a.per_replica_finished, b.per_replica_finished);
+}
+
+#[test]
+fn indexed_selector_beats_reference_on_a_backlogged_queue() {
+    // The point of the index: with a deep backlog (live set ≫ batch),
+    // selector work per step is O(b log n) instead of O(n log n + n·b).
+    // One overloaded single-replica cell from the sched scenario family
+    // (~10x fewer ops at n=600 already; the checked-in BENCH_sched.json
+    // pins the full 10k-request version of this claim).
+    let cfg = Config::embedded_default();
+    let policy = Policy::Trail { c: 0.8 };
+    let base = trail::sim::builtin("scale-10k").unwrap().n(600);
+    let trace = base.trace(&cfg);
+    let r = base
+        .clone()
+        .selector(Selector::Reference)
+        .run_trace(&cfg, &policy, 1, true, &trace)
+        .unwrap();
+    let i = base
+        .clone()
+        .selector(Selector::Indexed)
+        .run_trace(&cfg, &policy, 1, true, &trace)
+        .unwrap();
+    assert_eq!(r.n_iterations, i.n_iterations, "behaviour must be identical");
+    assert_eq!(r.makespan.to_bits(), i.makespan.to_bits());
+    assert!(
+        i.selector_ops * 3 < r.selector_ops,
+        "indexed selector must do <1/3 the work on a deep backlog: \
+         indexed {} vs reference {}",
+        i.selector_ops,
+        r.selector_ops
+    );
+}

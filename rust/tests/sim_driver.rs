@@ -44,6 +44,7 @@ fn sweep_json_is_byte_identical_across_runs() {
         policies: vec![Policy::Fcfs, Policy::Trail { c: 0.8 }],
         replica_counts: vec![2],
         migration: true,
+        tenant_breakdown: false,
     };
     let a = run_sweep(&cfg, &sweep).unwrap().to_json_string();
     let b = run_sweep(&cfg, &sweep).unwrap().to_json_string();
@@ -103,6 +104,7 @@ fn report_save_load_round_trip_is_lossless() {
         policies: vec![Policy::Trail { c: 0.8 }],
         replica_counts: vec![2],
         migration: true,
+        tenant_breakdown: false,
     };
     let report = run_sweep(&cfg, &sweep).unwrap();
     let text = report.to_json_string();
@@ -122,4 +124,115 @@ fn report_save_load_round_trip_is_lossless() {
     assert_eq!(row.n, 30);
     assert!(row.mean_latency_s > 0.0);
     assert!(row.p99_latency_s >= row.p50_latency_s);
+}
+
+#[test]
+fn multi_tenant_breakdown_rows_pin_the_tenant_split() {
+    // Satellite of the rank-index PR: tenants are tagged by
+    // workload/trace.rs; `tenant_breakdown` turns the tags into
+    // per-tenant latency rows. The multi-tenant builtin mixes a short
+    // interactive tenant (chat, mu_shift -0.3), a long batch tenant
+    // (mu_shift +0.9), and an on-off background tenant — under TRAIL
+    // the long tenant must pay more latency than the short one.
+    let cfg = cfg();
+    let sweep = SweepConfig {
+        scenarios: vec![builtin("multi-tenant").unwrap().n(120)],
+        policies: vec![Policy::Trail { c: 0.8 }],
+        replica_counts: vec![2],
+        migration: true,
+        tenant_breakdown: true,
+    };
+    let report = run_sweep(&cfg, &sweep).unwrap();
+    assert_eq!(report.rows.len(), 1);
+    let row = &report.rows[0];
+    assert_eq!(row.per_tenant.len(), 3, "one row per tenant profile");
+    let names: Vec<&str> = row.per_tenant.iter().map(|t| t.tenant.as_str()).collect();
+    assert_eq!(names, vec!["chat", "batch", "background"]);
+    let total: usize = row.per_tenant.iter().map(|t| t.n).sum();
+    assert_eq!(total, 120, "tenant rows must partition the request set");
+    for t in &row.per_tenant {
+        assert!(t.n > 0, "tenant {} contributed no requests", t.tenant);
+        assert!(t.mean_latency_s.is_finite() && t.mean_latency_s > 0.0);
+        assert!(t.p99_latency_s >= t.p50_latency_s, "{}", t.tenant);
+        assert!(t.mean_ttft_s >= 0.0);
+    }
+    let chat = &row.per_tenant[0];
+    let batch = &row.per_tenant[1];
+    assert!(
+        batch.mean_latency_s > chat.mean_latency_s,
+        "long-output batch tenant ({:.3}s) must pay more than chat ({:.3}s)",
+        batch.mean_latency_s,
+        chat.mean_latency_s
+    );
+
+    // Serialisation: the breakdown travels as a per_tenant array with
+    // sorted keys, and survives a save/load round trip byte-for-byte.
+    let text = report.to_json_string();
+    assert!(text.contains("\"per_tenant\":[{"));
+    assert!(text.contains("\"tenant\":\"chat\""));
+    let path = std::env::temp_dir().join("trail_tenant_roundtrip.json");
+    let path = path.to_str().unwrap().to_string();
+    report.save(&path).unwrap();
+    let loaded = trail::sim::BenchReport::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded.to_json_string(), text);
+    assert_eq!(loaded.rows[0].per_tenant.len(), 3);
+}
+
+#[test]
+fn seed_bench_serialisation_has_no_new_columns() {
+    // The pinned benchmarks/BENCH_seed.json must stay byte-identical:
+    // the default sweep serialises no selector / selector_ops /
+    // per_tenant keys (they are sched-sweep-only).
+    let cfg = cfg();
+    let sweep = SweepConfig {
+        scenarios: vec![builtin("steady").unwrap().n(20)],
+        policies: vec![Policy::Trail { c: 0.8 }],
+        replica_counts: vec![2],
+        migration: true,
+        tenant_breakdown: false,
+    };
+    let text = run_sweep(&cfg, &sweep).unwrap().to_json_string();
+    assert!(!text.contains("selector"));
+    assert!(!text.contains("per_tenant"));
+    assert!(text.contains("\"schema\":\"trail.simlab.bench/v1\""));
+}
+
+#[test]
+fn sched_sweep_rows_pair_identical_metrics_across_selectors() {
+    // A miniature of the BENCH_sched contract: reference and indexed
+    // rows of the same (scenario, replicas) cell agree on every
+    // scheduling metric and differ only in the selector columns. The
+    // full-scale grid is exercised by `make bench-sched`.
+    use trail::coordinator::Selector;
+    let cfg = cfg();
+    let policy = Policy::Trail { c: 0.8 };
+    let base = builtin("scale-1k").unwrap().n(200);
+    let trace = base.trace(&cfg);
+    let mut rows = Vec::new();
+    for selector in [Selector::Reference, Selector::Indexed] {
+        let sc = base.clone().selector(selector);
+        let out = sc.run_trace(&cfg, &policy, 2, true, &trace).unwrap();
+        rows.push(trail::sim::SweepRow::from_outcome_full(
+            &sc, &policy, 2, true, out, true, true,
+        ));
+    }
+    let (r, i) = (&rows[0], &rows[1]);
+    assert_eq!(r.selector.as_deref(), Some("reference"));
+    assert_eq!(i.selector.as_deref(), Some("indexed"));
+    assert_eq!(r.n, i.n);
+    assert_eq!(r.n_iterations, i.n_iterations);
+    assert_eq!(r.mean_latency_s.to_bits(), i.mean_latency_s.to_bits());
+    assert_eq!(r.p99_latency_s.to_bits(), i.p99_latency_s.to_bits());
+    assert_eq!(r.makespan_s.to_bits(), i.makespan_s.to_bits());
+    assert_eq!(r.discards, i.discards);
+    assert_eq!(r.per_replica_finished, i.per_replica_finished);
+    assert_eq!(r.per_tenant.len(), i.per_tenant.len());
+    for (a, b) in r.per_tenant.iter().zip(&i.per_tenant) {
+        assert_eq!(a.tenant, b.tenant);
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.mean_latency_s.to_bits(), b.mean_latency_s.to_bits());
+    }
+    assert!(r.selector_ops.unwrap() > 0 && i.selector_ops.unwrap() > 0);
+    assert_ne!(r.selector_ops, i.selector_ops, "work counters must be per-selector");
 }
