@@ -6,7 +6,8 @@
 # when the `artifacts/` directory is absent.
 
 .PHONY: build test bench-sim bench-dispatch bench-sim-json bench-sim-diff bench-sim-refresh \
-        bench-sched bench-sched-diff bench-sched-refresh fmt artifacts clean
+        bench-sched bench-sched-diff bench-sched-refresh \
+        bench-fair bench-fair-diff bench-fair-refresh fmt artifacts clean
 
 build:
 	cargo build --release
@@ -64,6 +65,24 @@ bench-sched-diff: bench-sched
 
 bench-sched-refresh:
 	cargo run --release --bin trail-serve -- sched --out benchmarks/BENCH_sched.json
+
+# Fairness grid (docs/fairness.md): starvation guard + per-tenant
+# shares over the fair-* scenarios, plus the 128-replica dispatch x
+# fairness sweep. Run twice and `cmp` byte-for-byte — the hard
+# determinism gate for the fairness layer.
+bench-fair:
+	cargo run --release --bin trail-serve -- fair --out BENCH_fair.json
+	cargo run --release --bin trail-serve -- fair --out BENCH_fair.run2.json
+	cmp BENCH_fair.json BENCH_fair.run2.json
+	rm -f BENCH_fair.run2.json
+
+# Diff against the checked-in fairness baseline (advisory in CI, same
+# libm caveat as bench-sim-diff).
+bench-fair-diff: bench-fair
+	diff -u benchmarks/BENCH_fair.json BENCH_fair.json
+
+bench-fair-refresh:
+	cargo run --release --bin trail-serve -- fair --out benchmarks/BENCH_fair.json
 
 fmt:
 	cargo fmt

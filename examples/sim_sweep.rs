@@ -23,6 +23,7 @@ fn main() {
         replica_counts: vec![2],
         migration: true,
         tenant_breakdown: false,
+        fairness_report: false,
     };
     let report: BenchReport = run_sweep(&cfg, &sweep).expect("sweep");
     print!("{}", report.render_table());

@@ -24,10 +24,20 @@ sensitivity is libm ``exp``/``log`` in the workload generator;
 regenerate with ``make bench-sim-refresh`` / ``bench-sched-refresh``
 if a libm ever disagrees.)
 
+The fairness layer (docs/fairness.md) is mirrored too: the starvation
+guard (quantized aging levels folded into the rank key, maintained
+incrementally), per-tenant deficit shares (two-pass share-capped
+selection in BOTH selectors), the per-request wait-episode tracking
+behind ``max_starve_age_s``, and the ``trail.simlab.fair/v1`` report
+(per-tenant slowdowns, Jain's index). With neutral knobs every rank,
+schedule, and op counter is bit-identical to the fairness-free engine,
+which is how BENCH_seed/BENCH_sched stay byte-frozen.
+
 Usage:
     cd python && python3 simref.py sweep --out ../benchmarks/BENCH_seed.json
     cd python && python3 simref.py sweep --selector reference --out /tmp/x.json
     cd python && python3 simref.py sched --out ../benchmarks/BENCH_sched.json
+    cd python && python3 simref.py fair --out ../benchmarks/BENCH_fair.json
 """
 
 import math
@@ -59,8 +69,8 @@ class Req:
     __slots__ = (
         "rid", "plen", "n_out", "tenant", "phase", "slot", "prefilled",
         "generated", "kv_written", "initial_pred", "pred_remaining",
-        "arrival", "first_token_at", "finished_at", "n_preemptions",
-        "n_discards", "n_migrations",
+        "arrival", "first_token_at", "finished_at", "wait_started",
+        "starve_level", "n_preemptions", "n_discards", "n_migrations",
     )
 
     def __init__(self, rid, plen, n_out, tenant, arrival):
@@ -79,6 +89,10 @@ class Req:
         self.arrival = arrival
         self.first_token_at = None
         self.finished_at = None
+        # Fairness (rust/src/coordinator/request.rs): current wait
+        # episode start + quantized starvation-guard aging level.
+        self.wait_started = arrival
+        self.starve_level = 0
         self.n_preemptions = 0
         self.n_discards = 0
         self.n_migrations = 0
@@ -113,6 +127,55 @@ def rank(policy, r):
         locked = (not r.preemptable(policy[1])) and r.phase != WAITING
         key = r.pred_remaining
     return (0 if locked else 1, key, tie, r.rid)
+
+
+# ---------------------------------------------------------------------------
+# Fairness layer (rust/src/coordinator/fairness.rs + Policy::rank_aged)
+# ---------------------------------------------------------------------------
+
+
+class FairCfg:
+    """FairnessConfig mirror: starvation-guard quantum/boost/levels +
+    per-tenant share weights. Neutral defaults switch everything off."""
+
+    __slots__ = ("quantum", "boost", "levels", "weights")
+
+    def __init__(self, quantum=0.0, boost=0.0, levels=0, weights=()):
+        self.quantum = quantum
+        self.boost = boost
+        self.levels = levels
+        self.weights = tuple(weights)
+
+    def guard_active(self):
+        return self.quantum > 0.0 and self.boost > 0.0 and self.levels > 0
+
+    def shares_active(self):
+        return len(self.weights) > 0
+
+    def weight(self, t):
+        return self.weights[t] if t < len(self.weights) else 1.0
+
+    def mode_label(self):
+        guard, shares = self.guard_active(), self.shares_active()
+        if guard and shares:
+            return "guard+shares"
+        if guard:
+            return "guard"
+        if shares:
+            return "shares"
+        return "off"
+
+
+NEUTRAL_FAIR = FairCfg()
+
+
+def rank_fair(policy, r, fair):
+    """Policy::rank_aged — the base rank with the starvation-guard boost
+    folded into the key; bit-identical to rank() at level 0."""
+    rk = rank(policy, r)
+    if r.starve_level == 0:
+        return rk
+    return (rk[0], rk[1] - fair.boost * float(r.starve_level), rk[2], rk[3])
 
 
 def policy_preemptive(policy):
@@ -445,7 +508,7 @@ class Engine:
     refinement per token — OraclePredictor{noise, refine_exact, seed})."""
 
     def __init__(self, policy, slots, pool_tokens, noise=0.4, pred_seed=7,
-                 max_iterations=2_000_000, selector="indexed"):
+                 max_iterations=2_000_000, selector="indexed", fair=NEUTRAL_FAIR):
         self.policy = policy
         self.slots = slots
         self.kv = Kv(slots, pool_tokens)
@@ -463,6 +526,14 @@ class Engine:
         self.sched_idx = RankIndex(maxdir=False)
         self.res_idx = RankIndex(maxdir=True)
         self.sel_ops_ref = 0
+        # rid -> position in self.reqs, maintained incrementally (the
+        # Rust RidSlab: admit appends, migration swap-removes, post-step
+        # compaction fixes the suffix past the first finished request).
+        self.rid_pos = {}
+        # Fairness layer: knobs + per-tenant deficit share ledger.
+        self.fair = fair
+        self.t_live = []
+        self.t_credit = []
         # metrics
         self.lat = []
         self.ttft = []
@@ -471,6 +542,7 @@ class Engine:
         self.m_discards = 0
         self.m_migrations = 0
         self.peak_mem = 0
+        self.max_wait_age = 0.0
 
     # --- clock ---
     def sync_clock(self, at):
@@ -502,19 +574,79 @@ class Engine:
             est = max(float(req.n_out) * math.exp(self.noise * z), 1.0)
             req.initial_pred = est
             req.pred_remaining = est
+        self.sched_idx.insert(req.rid, self.rank_of(req))
+        self.rid_pos[req.rid] = len(self.reqs)
+        self.shares_on_admit(req.tenant)
         self.reqs.append(req)
-        self.sched_idx.insert(req.rid, rank(self.policy, req))
 
     def selector_ops(self):
         if self.selector == "reference":
             return self.sel_ops_ref
         return self.sched_idx.ops + self.res_idx.ops
 
+    def rank_of(self, r):
+        return rank_fair(self.policy, r, self.fair)
+
     def reindex(self, r):
-        rk = rank(self.policy, r)
+        rk = self.rank_of(r)
         self.sched_idx.update(r.rid, rk)
         if r.slot is not None:
             self.res_idx.update(r.rid, rk)
+
+    # --- fairness: tenant share ledger (coordinator/fairness.rs) ---
+    def shares_ensure(self, tenant):
+        while len(self.t_live) < tenant + 1:
+            self.t_live.append(0)
+            self.t_credit.append(0.0)
+
+    def shares_on_admit(self, tenant):
+        self.shares_ensure(tenant)
+        self.t_live[tenant] += 1
+
+    def shares_on_remove(self, tenant):
+        self.shares_ensure(tenant)
+        self.t_live[tenant] -= 1
+
+    def shares_accrue(self):
+        wsum = 0.0
+        for t in range(len(self.t_live)):
+            if self.t_live[t] > 0:
+                wsum += self.fair.weight(t)
+        if wsum <= 0.0:
+            return
+        cap = float(2 * self.slots)
+        for t in range(len(self.t_live)):
+            if self.t_live[t] == 0:
+                self.t_credit[t] = 0.0
+            else:
+                add = float(self.slots) * self.fair.weight(t) / wsum
+                self.t_credit[t] = min(self.t_credit[t] + add, cap)
+
+    def shares_can_take(self, tenant):
+        if tenant >= len(self.t_credit):
+            return True
+        return self.t_credit[tenant] >= 1.0
+
+    def shares_take(self, tenant):
+        self.shares_ensure(tenant)
+        cap = float(2 * self.slots)
+        self.t_credit[tenant] = max(self.t_credit[tenant] - 1.0, -cap)
+
+    # --- fairness: starvation guard (ServingEngine::refresh_starvation) ---
+    def refresh_starvation(self, reqs):
+        fair = self.fair
+        if not fair.guard_active():
+            return
+        now = self.now
+        q = fair.quantum
+        cap = float(fair.levels)
+        for r in reqs:
+            if r.phase == FINISHED:
+                continue
+            level = int(max(min(math.floor((now - r.wait_started) / q), cap), 0.0))
+            if level != r.starve_level:
+                r.starve_level = level
+                self.reindex(r)
 
     # --- migration (rust ServingEngine::take_migratable) ---
     def take_migratable(self):
@@ -522,7 +654,7 @@ class Engine:
         for i, r in enumerate(self.reqs):
             if r.phase == FINISHED:
                 continue
-            rk = rank(self.policy, r)
+            rk = self.rank_of(r)
             if rk[0] == 0:  # locked
                 continue
             res = r.slot is not None
@@ -539,12 +671,15 @@ class Engine:
         if pick is None:
             return None
         idx = pick[2]
-        # Vec::swap_remove
+        # Vec::swap_remove, with the rid slab fixed up for the moved tail
         if idx == len(self.reqs) - 1:
             r = self.reqs.pop()
         else:
             r = self.reqs[idx]
             self.reqs[idx] = self.reqs.pop()
+            self.rid_pos[self.reqs[idx].rid] = idx
+        del self.rid_pos[r.rid]
+        self.shares_on_remove(r.tenant)
         self.sched_idx.remove(r.rid)
         if r.slot is not None:
             self.kv.free(r.slot, r.rid)
@@ -557,8 +692,10 @@ class Engine:
         return r
 
     def admit_migrated(self, r):
+        self.sched_idx.insert(r.rid, self.rank_of(r))
+        self.rid_pos[r.rid] = len(self.reqs)
+        self.shares_on_admit(r.tenant)
         self.reqs.append(r)
-        self.sched_idx.insert(r.rid, rank(self.policy, r))
 
     # --- step (rust step/step_inner) ---
     def step(self):
@@ -567,12 +704,15 @@ class Engine:
         if self.max_iterations > 0 and self.n_iter >= self.max_iterations:
             raise RuntimeError("max_iterations exceeded — scheduler stall?")
         reqs = self.reqs
-        rid_idx = None
-        if self.selector == "indexed":
-            rid_idx = {r.rid: i for i, r in enumerate(reqs)}
+        # Starvation guard first, so eviction and selection both see
+        # aged ranks; then OOM resolution; then the per-step tenant
+        # credit accrual the share-capped selection draws from.
+        self.refresh_starvation(reqs)
         self.resolve_oom(reqs)
+        if self.fair.shares_active():
+            self.shares_accrue()
         if self.selector == "indexed":
-            target = self.select_targets_indexed(reqs, rid_idx)
+            target = self.select_targets_indexed(reqs)
         else:
             target = self.select_targets(reqs)
 
@@ -655,7 +795,21 @@ class Engine:
             r = next(r for r in reqs if r.rid == rid)
             finished.append((rid, r.finished_at - r.arrival, r.first_token_at - r.arrival, r.generated))
         self.finished_rids = []
-        self.reqs = [r for r in reqs if r.phase != FINISHED]
+        if finished:
+            # Order-preserving compaction with incremental slab
+            # maintenance (rust ServingEngine::step); steps that finish
+            # nothing skip it entirely.
+            w = 0
+            for i in range(len(reqs)):
+                r = reqs[i]
+                if r.phase == FINISHED:
+                    del self.rid_pos[r.rid]
+                else:
+                    if w != i:
+                        reqs[w] = r
+                        self.rid_pos[r.rid] = w
+                    w += 1
+            del reqs[w:]
         worked = stepped or chunks_issued > 0
         return worked, finished
 
@@ -668,6 +822,7 @@ class Engine:
                 self.res_idx.remove(r.rid)
                 r.slot = None
             self.sched_idx.remove(r.rid)
+            self.shares_on_remove(r.tenant)
             # Metrics::observe_finish
             self.n_finished += 1
             self.lat.append(r.finished_at - r.arrival)
@@ -693,19 +848,31 @@ class Engine:
                 ]
             if not cands:
                 break
-            _, r = max(cands, key=lambda t: rank(self.policy, t[1]))
-            self.kv.free(r.slot, r.rid)
-            self.res_idx.remove(r.rid)
-            r.slot = None
-            r.phase = DISCARDED
-            r.prefilled = 0
-            r.kv_written = 0
-            r.n_discards += 1
-            self.sched_idx.update(r.rid, rank(self.policy, r))
+            _, r = max(cands, key=lambda t: self.rank_of(t[1]))
+            self.discard_victim(r, in_res_idx=True)
 
-    def apply_phase_transitions(self, reqs, chosen):
+    def discard_victim(self, r, in_res_idx):
+        """ServingEngine::discard_victim: KV dropped, recompute later. A
+        share-deferred candidate can be discarded while its entry sits
+        popped-and-held by the in-flight selection; its rank is
+        invariant under the discard (only TRAIL discards mid-selection),
+        so the held entry stays valid — the index just must not be
+        updated for a rid it doesn't hold."""
+        self.kv.free(r.slot, r.rid)
+        if in_res_idx:
+            self.res_idx.remove(r.rid)
+        r.slot = None
+        r.phase = DISCARDED
+        r.prefilled = 0
+        r.kv_written = 0
+        r.n_discards += 1
+        if r.rid in self.sched_idx.live:
+            self.sched_idx.update(r.rid, self.rank_of(r))
+
+    def apply_phase_transitions(self, reqs, chosen, now):
         for i, r in enumerate(reqs):
             before = r.phase
+            level_before = r.starve_level
             if not chosen[i] and r.phase == RUNNING:
                 r.phase = PREEMPTED
                 r.n_preemptions += 1
@@ -713,40 +880,84 @@ class Engine:
                 r.phase = RUNNING if r.prefill_done() else PREFILLING
             elif chosen[i] and r.phase == PREFILLING and r.prefill_done():
                 r.phase = RUNNING
-            if r.phase != before:
+            if chosen[i]:
+                if before in (WAITING, PREEMPTED, DISCARDED):
+                    age = now - r.wait_started
+                    if age > self.max_wait_age:
+                        self.max_wait_age = age
+                r.wait_started = now
+                r.starve_level = 0
+            if r.phase != before or r.starve_level != level_before:
                 self.reindex(r)
 
     def select_targets(self, reqs):
+        shares_on = self.fair.shares_active()
         order = [i for i in range(len(reqs)) if reqs[i].phase != FINISHED]
-        order.sort(key=lambda i: rank(self.policy, reqs[i]))
+        order.sort(key=lambda i: self.rank_of(reqs[i]))
         self.sel_ops_ref += len(order)
+        now = self.now
         target = []
         chosen = [False] * len(reqs)
+        deferred = []
         for idx in order:
+            if len(target) >= self.slots:
+                break
+            if shares_on:
+                rk = self.rank_of(reqs[idx])
+                if rk[0] == 1 and not self.shares_can_take(reqs[idx].tenant):
+                    deferred.append(idx)
+                    continue
+            if self.ensure_resident(reqs, idx, chosen):
+                chosen[idx] = True
+                target.append(idx)
+                if shares_on:
+                    self.shares_take(reqs[idx].tenant)
+        # Second pass: leftover slots go to deferred candidates in rank
+        # order (work-conserving deficit round-robin).
+        for idx in deferred:
             if len(target) >= self.slots:
                 break
             if self.ensure_resident(reqs, idx, chosen):
                 chosen[idx] = True
                 target.append(idx)
-        self.apply_phase_transitions(reqs, chosen)
+                self.shares_take(reqs[idx].tenant)
+        self.apply_phase_transitions(reqs, chosen, now)
         return target
 
-    def select_targets_indexed(self, reqs, rid_idx):
+    def select_targets_indexed(self, reqs):
+        shares_on = self.fair.shares_active()
+        now = self.now
         target = []
         chosen = [False] * len(reqs)
         held = []
+        deferred = []
         while len(target) < self.slots:
             ent = self.sched_idx.pop()
             if ent is None:
                 break
-            idx = rid_idx[ent[0][3]]
-            if self.ensure_resident_indexed(reqs, idx, chosen, rid_idx):
+            idx = self.rid_pos[ent[0][3]]
+            if shares_on and ent[0][0] == 1 and not self.shares_can_take(reqs[idx].tenant):
+                deferred.append(ent)
+                continue
+            if self.ensure_resident_indexed(reqs, idx, chosen):
                 chosen[idx] = True
                 target.append(idx)
+                if shares_on:
+                    self.shares_take(reqs[idx].tenant)
             held.append(ent)
+        for ent in deferred:
+            if len(target) >= self.slots:
+                break
+            idx = self.rid_pos[ent[0][3]]
+            if self.ensure_resident_indexed(reqs, idx, chosen):
+                chosen[idx] = True
+                target.append(idx)
+                self.shares_take(reqs[idx].tenant)
         for ent in held:
             self.sched_idx.reinsert(ent)
-        self.apply_phase_transitions(reqs, chosen)
+        for ent in deferred:
+            self.sched_idx.reinsert(ent)
+        self.apply_phase_transitions(reqs, chosen, now)
         return target
 
     def ensure_resident(self, reqs, idx, chosen):
@@ -771,30 +982,23 @@ class Engine:
             ]
             if not victims:
                 return False
-            _, vreq = max(victims, key=lambda t: rank(self.policy, t[1]))
-            vr = rank(self.policy, vreq)
-            cr = rank(self.policy, reqs[idx])
+            _, vreq = max(victims, key=lambda t: self.rank_of(t[1]))
+            vr = self.rank_of(vreq)
+            cr = self.rank_of(reqs[idx])
             if not vr > cr:
                 return False
             if vr[0] == 1 and cr[0] == 1 and vr[1] - cr[1] < EVICT_MARGIN:
                 return False
-            self.kv.free(vreq.slot, vreq.rid)
-            self.res_idx.remove(vreq.rid)
-            vreq.slot = None
-            vreq.phase = DISCARDED
-            vreq.prefilled = 0
-            vreq.kv_written = 0
-            vreq.n_discards += 1
-            self.sched_idx.update(vreq.rid, rank(self.policy, vreq))
+            self.discard_victim(vreq, in_res_idx=True)
         slot = self.kv.alloc(reqs[idx].rid)
         assert slot is not None
         reqs[idx].slot = slot
         reqs[idx].prefilled = 0
         reqs[idx].kv_written = 0
-        self.res_idx.insert(reqs[idx].rid, rank(self.policy, reqs[idx]))
+        self.res_idx.insert(reqs[idx].rid, self.rank_of(reqs[idx]))
         return True
 
-    def ensure_resident_indexed(self, reqs, idx, chosen, rid_idx):
+    def ensure_resident_indexed(self, reqs, idx, chosen):
         if reqs[idx].slot is not None:
             return True
         need = min(reqs[idx].prefill_target(), MAX_SEQ)
@@ -817,12 +1021,12 @@ class Engine:
                 if e[0][0] == 0:
                     held.append(e)
                     break
-                if chosen[rid_idx[e[0][3]]]:
+                if chosen[self.rid_pos[e[0][3]]]:
                     held.append(e)
                     continue
                 victim = e
                 break
-            cr = rank(self.policy, reqs[idx])
+            cr = self.rank_of(reqs[idx])
             ok = (
                 victim is not None
                 and victim[0] > cr
@@ -840,20 +1044,15 @@ class Engine:
                 return False
             for e in held:
                 self.res_idx.reinsert(e)
-            vreq = reqs[rid_idx[victim[0][3]]]
-            self.kv.free(vreq.slot, vreq.rid)
-            vreq.slot = None
-            vreq.phase = DISCARDED
-            vreq.prefilled = 0
-            vreq.kv_written = 0
-            vreq.n_discards += 1
-            self.sched_idx.update(vreq.rid, rank(self.policy, vreq))
+            vreq = reqs[self.rid_pos[victim[0][3]]]
+            # The victim was already popped off the resident index.
+            self.discard_victim(vreq, in_res_idx=False)
         slot = self.kv.alloc(reqs[idx].rid)
         assert slot is not None
         reqs[idx].slot = slot
         reqs[idx].prefilled = 0
         reqs[idx].kv_written = 0
-        self.res_idx.insert(reqs[idx].rid, rank(self.policy, reqs[idx]))
+        self.res_idx.insert(reqs[idx].rid, self.rank_of(reqs[idx]))
         return True
 
 
@@ -949,9 +1148,9 @@ def pick_replica(dispatch, engines, rr):
 
 
 def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, noise=0.4,
-            selector="indexed"):
+            selector="indexed", fair=NEUTRAL_FAIR):
     engines = [
-        Engine(policy, slots, pool_tokens, noise=noise, selector=selector)
+        Engine(policy, slots, pool_tokens, noise=noise, selector=selector, fair=fair)
         for _ in range(replicas)
     ]
     n_total = len(trace)
@@ -966,6 +1165,7 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
     n_tenants = max((t for (_, t, _, _, _) in trace), default=-1) + 1
     tenant_lat = [[] for _ in range(n_tenants)]
     tenant_ttft = [[] for _ in range(n_tenants)]
+    tenant_slow = [[] for _ in range(n_tenants)]
 
     def rebalance(now):
         nonlocal n_migrations
@@ -1033,15 +1233,20 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
         worked, fin = engines[i].step()
         if not worked:
             stalled[i] = True
-        for (rid, l, t, _) in fin:
+        for (rid, l, t, ntok) in fin:
             finished += 1
             lat.append(l)
             ttft.append(t)
             tenant_lat[rid_tenant[rid]].append(l)
             tenant_ttft[rid_tenant[rid]].append(t)
+            tenant_slow[rid_tenant[rid]].append(l / float(ntok))
 
     assert finished == n_total, f"lost requests: {finished}/{n_total}"
     makespan = max(e.now for e in engines)
+    max_starve = 0.0
+    for e in engines:
+        if e.max_wait_age > max_starve:
+            max_starve = e.max_wait_age
     return {
         "n": finished,
         "lat": lat,
@@ -1056,6 +1261,8 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
         "sel_ops": sum(e.selector_ops() for e in engines),
         "tenant_lat": tenant_lat,
         "tenant_ttft": tenant_ttft,
+        "tenant_slow": tenant_slow,
+        "max_starve": max_starve,
     }
 
 
@@ -1106,6 +1313,36 @@ def builtin_scenarios():
             [(2100.0, 0.0, [])],
             2560, 777, "jsq", 16, 0.5, 0.4,
         ),
+        # Fairness grid (BENCH_fair.json, docs/fairness.md): two-tenant
+        # regimes where size-based scheduling starves the long tenant.
+        "fair-steady": (
+            [
+                (240.0, -0.9, []),
+                (35.0, 0.1, []),
+            ],
+            400, 4242, "jsq", 16, 0.45, 0.4,
+        ),
+        "fair-skewed": (
+            [
+                (170.0, -0.7, [(2.5, 1.0), (0.3, 2.0)]),
+                (40.0, 0.0, []),
+            ],
+            400, 4242, "rr", 16, 0.4, 0.4,
+        ),
+        "fair-adversarial": (
+            [
+                (260.0, -0.9, []),
+                (5.0, 1.3, []),
+            ],
+            400, 4242, "jsq", 16, 0.45, 0.0,
+        ),
+        "fair-fleet": (
+            [
+                (4500.0, -0.4, []),
+                (1800.0, 0.6, []),
+            ],
+            2560, 777, "jsq", 8, 0.5, 0.4,
+        ),
     }
 
 
@@ -1119,6 +1356,10 @@ def scenario_tenant_names():
         "scale-1k": ["chat", "batch"],
         "scale-10k": ["chat", "batch"],
         "scale-replicas": ["fleet"],
+        "fair-steady": ["interactive", "batch"],
+        "fair-skewed": ["flood", "longtail"],
+        "fair-adversarial": ["shorts", "longs"],
+        "fair-fleet": ["hot", "tail"],
     }
 
 
@@ -1128,6 +1369,7 @@ def scenario_tenant_names():
 
 SCHEMA = "trail.simlab.bench/v1"
 SCHED_SCHEMA = "trail.simlab.sched/v1"
+FAIR_SCHEMA = "trail.simlab.fair/v1"
 
 
 def jnum(x):
@@ -1166,6 +1408,8 @@ def row_json(row):
             sv = '"' + v + '"'
         elif isinstance(v, bool):
             sv = "true" if v else "false"
+        elif isinstance(v, dict):
+            sv = row_json(v)
         elif isinstance(v, list):
             if v and isinstance(v[0], dict):
                 sv = "[" + ",".join(row_json(x) for x in v) + "]"
@@ -1217,8 +1461,58 @@ def tenant_rows(name, out):
     return rows
 
 
+def slowdown_rows(name, out):
+    names = scenario_tenant_names()[name]
+    rows = []
+    for ti, tname in enumerate(names):
+        ls = out["tenant_slow"][ti] if ti < len(out["tenant_slow"]) else []
+        if ls:
+            rows.append({
+                "tenant": tname,
+                "n": len(ls),
+                "mean_slowdown": mean(ls),
+                "p50_slowdown": percentile(ls, 50.0),
+                "p99_slowdown": percentile(ls, 99.0),
+            })
+        else:
+            rows.append({
+                "tenant": tname,
+                "n": 0,
+                "mean_slowdown": 0.0,
+                "p50_slowdown": 0.0,
+                "p99_slowdown": 0.0,
+            })
+    return rows
+
+
+def fairness_obj(name, fair, out):
+    """FairnessRow::from_outcome — knobs + per-tenant slowdowns, Jain's
+    index over per-tenant mean slowdowns, max starvation age."""
+    pts = slowdown_rows(name, out)
+    s1 = 0.0
+    s2 = 0.0
+    k = 0
+    for row in pts:
+        if row["n"] > 0:
+            m = row["mean_slowdown"]
+            s1 += m
+            s2 += m * m
+            k += 1
+    jain = 1.0 if (k == 0 or s2 <= 0.0) else s1 * s1 / (float(k) * s2)
+    return {
+        "mode": fair.mode_label(),
+        "quantum_s": fair.quantum,
+        "aging_boost": fair.boost,
+        "max_aging_levels": fair.levels,
+        "tenant_weights": list(fair.weights),
+        "jain_slowdown": jain,
+        "max_starve_age_s": out["max_starve"],
+        "per_tenant_slowdown": pts,
+    }
+
+
 def make_row(name, policy, dispatch, replicas, migration, seed, out,
-             selector=None, tenant_breakdown=False):
+             selector=None, tenant_breakdown=False, fairness=None):
     row = {
         "scenario": name,
         "policy": policy_name(policy),
@@ -1248,6 +1542,8 @@ def make_row(name, policy, dispatch, replicas, migration, seed, out,
         row["selector_ops"] = out["sel_ops"]
     if tenant_breakdown:
         row["per_tenant"] = tenant_rows(name, out)
+    if fairness is not None:
+        row["fairness"] = fairness_obj(name, fairness, out)
     return row
 
 
@@ -1287,17 +1583,72 @@ def sched_rows():
     return rows
 
 
+# Fairness sweep (rust/src/sim/scenario.rs run_fair_sweep — keep in
+# sync): each fair scenario × fairness mode at 2 replicas, plus
+# fair-fleet at 128 replicas × dispatch policy × {off, guard+shares}.
+# Guard knobs: boost 512 = 2x the output cap, so one elapsed quantum
+# outranks every unlocked key (binary "starved" flag; gentler per-level
+# boosts churn the KV cache without bounding the tail sooner).
+FAIR_QUANTUM = 0.75
+FAIR_FLEET_QUANTUM = 0.25
+FAIR_POLICY = ("trail", 0.8)
+FAIR_SCENARIOS = ("fair-steady", "fair-skewed", "fair-adversarial")
+
+
+def fair_modes():
+    return [
+        FairCfg(),
+        FairCfg(FAIR_QUANTUM, 512.0, 2),
+        FairCfg(FAIR_QUANTUM, 512.0, 2, (1.0, 1.0)),
+    ]
+
+
+def fair_rows():
+    rows = []
+    scs = builtin_scenarios()
+    for name in FAIR_SCENARIOS:
+        tenants, n, seed, dispatch, slots, pool_frac, noise = scs[name]
+        trace = generate_trace(tenants, n, seed)
+        pool_tokens = int((slots * MAX_SEQ) * pool_frac)
+        for fair in fair_modes():
+            out = run_sim(trace, FAIR_POLICY, 2, dispatch, True, slots, pool_tokens,
+                          noise, fair=fair)
+            rows.append(make_row(name, FAIR_POLICY, dispatch, 2, True, seed, out,
+                                 tenant_breakdown=True, fairness=fair))
+    tenants, n, seed, _, slots, pool_frac, noise = scs["fair-fleet"]
+    trace = generate_trace(tenants, n, seed)
+    pool_tokens = int((slots * MAX_SEQ) * pool_frac)
+    for dispatch in ("rr", "jsq", "lpw"):
+        for fair in (FairCfg(), FairCfg(FAIR_FLEET_QUANTUM, 512.0, 2, (1.0, 1.0))):
+            out = run_sim(trace, FAIR_POLICY, 128, dispatch, True, slots, pool_tokens,
+                          noise, fair=fair)
+            rows.append(make_row("fair-fleet", FAIR_POLICY, dispatch, 128, True, seed,
+                                 out, tenant_breakdown=True, fairness=fair))
+    return rows
+
+
 DEFAULT_POLICIES = [("fcfs",), ("trail", 1.0), ("trail", 0.8)]
 
 
 def main(argv):
-    if not argv or argv[0] not in ("sweep", "sched"):
+    if not argv or argv[0] not in ("sweep", "sched", "fair"):
         print(__doc__)
         return 2
     out_path = None
     if "--out" in argv:
         out_path = argv[argv.index("--out") + 1]
-    if argv[0] == "sched":
+    if argv[0] == "fair":
+        rows = fair_rows()
+        text = report_json(rows, schema=FAIR_SCHEMA)
+        for row in rows:
+            fr = row["fairness"]
+            print(
+                f"{row['scenario']:>16} {fr['mode']:>12} {row['dispatch']:>11} "
+                f"x{row['replicas']} mean={row['mean_latency_s']:.3f}s "
+                f"p99={row['p99_latency_s']:.3f}s jain={fr['jain_slowdown']:.3f} "
+                f"starve={fr['max_starve_age_s']:.3f}s discard={row['discards']}"
+            )
+    elif argv[0] == "sched":
         rows = sched_rows()
         text = report_json(rows, schema=SCHED_SCHEMA)
         for row in rows:

@@ -39,7 +39,6 @@
 //! (KV dropped, recompute later). Requests older than ⌊C·r⌋ tokens are
 //! locked and cannot be pushed out at all.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -48,6 +47,7 @@ use anyhow::Result;
 use crate::config::Config;
 use crate::coordinator::backend::ModelBackend;
 use crate::coordinator::clock::{Clock, ClockSpec};
+use crate::coordinator::fairness::{FairnessConfig, TenantShares};
 use crate::coordinator::kv::KvManager;
 use crate::coordinator::metrics::{Metrics, MetricsSummary};
 use crate::coordinator::policy::{Policy, Rank};
@@ -108,6 +108,11 @@ pub struct ServeConfig {
     pub clock: ClockSpec,
     /// Stop after this many iterations (safety valve; 0 = unlimited).
     pub max_iterations: u64,
+    /// Fairness layer (starvation guard + per-tenant shares; see
+    /// docs/fairness.md). Neutral defaults leave the scheduler — ranks,
+    /// schedules, and selector op counters — bit-identical to the
+    /// fairness-free engine.
+    pub fairness: FairnessConfig,
 }
 
 impl ServeConfig {
@@ -120,7 +125,48 @@ impl ServeConfig {
             evict_margin: cfg.bins.width / 2.0,
             clock: ClockSpec::Wall,
             max_iterations: 0,
+            fairness: FairnessConfig::neutral(),
         }
+    }
+}
+
+/// Dense rid → position map for the engine's request vec, replacing the
+/// per-step `HashMap` rebuild the indexed selector used to pay
+/// (ROADMAP "slab keyed by rid"). Positions are maintained
+/// incrementally — admit appends, migration swap-removes, and the
+/// post-step compaction fixes only the suffix past the first finished
+/// request — so steps that finish nothing do no map work at all. rids
+/// are assigned in workload/trace order and stay dense; the slab
+/// asserts a sane bound so a pathological rid fails loudly instead of
+/// allocating the address space.
+#[derive(Debug, Default)]
+struct RidSlab {
+    pos: Vec<u32>,
+}
+
+const SLAB_NONE: u32 = u32::MAX;
+/// Upper bound on rids the dense slab will map (16M — far above any
+/// workload this engine serves; a violation is a rid-generation bug).
+const SLAB_MAX_RID: u64 = 1 << 24;
+
+impl RidSlab {
+    fn set(&mut self, rid: u64, pos: usize) {
+        assert!(rid < SLAB_MAX_RID, "RidSlab: rid {rid} out of dense range");
+        let i = rid as usize;
+        if i >= self.pos.len() {
+            self.pos.resize(i + 1, SLAB_NONE);
+        }
+        self.pos[i] = pos as u32;
+    }
+
+    fn remove(&mut self, rid: u64) {
+        self.pos[rid as usize] = SLAB_NONE;
+    }
+
+    fn get(&self, rid: u64) -> usize {
+        let p = self.pos[rid as usize];
+        debug_assert!(p != SLAB_NONE, "RidSlab: rid {rid} not mapped");
+        p as usize
     }
 }
 
@@ -268,9 +314,13 @@ pub struct ServingEngine<B: ModelBackend> {
     /// Reference-selector work counter: sort candidates + victim-scan
     /// lengths (the indexed counters live on the indexes themselves).
     sel_ops_ref: u64,
-    /// rid → position in `requests`, rebuilt per step for the indexed
-    /// selector (the vec is compacted after every step).
-    rid_idx: HashMap<u64, usize>,
+    /// rid → position in `requests`, maintained incrementally (admit /
+    /// migrate / post-step compaction) — the ROADMAP slab that replaced
+    /// the per-step hash rebuild.
+    rid_pos: RidSlab,
+    /// Per-tenant deficit credit ledger (consulted only when
+    /// `fairness.shares_active()`).
+    shares: TenantShares,
     /// rids targeted by the most recent step, rank order (diagnostics +
     /// the differential harness).
     last_target_rids: Vec<u64>,
@@ -284,6 +334,7 @@ pub struct RequestSnapshot {
     pub rid: u64,
     pub phase: Phase,
     pub slot: Option<usize>,
+    pub tenant: u32,
     pub prefilled: usize,
     pub generated: usize,
     pub kv_written: usize,
@@ -292,6 +343,8 @@ pub struct RequestSnapshot {
     pub n_migrations: u64,
     pub pred_remaining_bits: u64,
     pub initial_pred_bits: u64,
+    pub wait_started_bits: u64,
+    pub starve_level: u32,
 }
 
 impl<B: ModelBackend> ServingEngine<B> {
@@ -319,7 +372,8 @@ impl<B: ModelBackend> ServingEngine<B> {
             sched_idx: RankIndex::new_min(),
             res_idx: RankIndex::new_max(),
             sel_ops_ref: 0,
-            rid_idx: HashMap::new(),
+            rid_pos: RidSlab::default(),
+            shares: TenantShares::default(),
             last_target_rids: Vec::new(),
         }
     }
@@ -347,6 +401,7 @@ impl<B: ModelBackend> ServingEngine<B> {
                 rid: r.spec.rid,
                 phase: r.phase,
                 slot: r.slot,
+                tenant: r.tenant,
                 prefilled: r.prefilled,
                 generated: r.generated,
                 kv_written: r.kv_written,
@@ -355,17 +410,26 @@ impl<B: ModelBackend> ServingEngine<B> {
                 n_migrations: r.n_migrations,
                 pred_remaining_bits: r.pred_remaining.to_bits(),
                 initial_pred_bits: r.initial_pred.to_bits(),
+                wait_started_bits: r.wait_started.to_bits(),
+                starve_level: r.starve_level,
             })
             .collect();
         out.sort_by_key(|s| s.rid);
         out
     }
 
+    /// The rank every engine decision runs on: the policy rank with the
+    /// starvation-guard aging applied (bit-identical to `Policy::rank`
+    /// while no request carries an aging level).
+    fn rank_of(&self, r: &Request) -> Rank {
+        self.serve.policy.rank_aged(r, &self.serve.fairness)
+    }
+
     /// Refresh a request's entry in the rank indexes after a mutation of
-    /// rank-relevant state (phase / generated / predictions). No-ops
-    /// when the rank is unchanged.
+    /// rank-relevant state (phase / generated / predictions / aging
+    /// level). No-ops when the rank is unchanged.
     fn reindex(&mut self, r: &Request) {
-        let rk = self.serve.policy.rank(r);
+        let rk = self.rank_of(r);
         self.sched_idx.update(rk);
         if r.slot.is_some() {
             self.res_idx.update(rk);
@@ -399,11 +463,22 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// Admit one request. `arrival` stamps its queueing start; `None`
     /// means "now" on the engine clock (live admission). Returns the rid.
     pub fn admit(&mut self, spec: RequestSpec, arrival: Option<f64>) -> u64 {
+        self.admit_from(spec, arrival, 0)
+    }
+
+    /// Admit one request carrying a trace tenant tag (the co-sim path;
+    /// `admit` is the untagged shorthand). The tag feeds the per-tenant
+    /// share ledger and the fairness reports.
+    pub fn admit_from(&mut self, spec: RequestSpec, arrival: Option<f64>, tenant: u32) -> u64 {
         let at = arrival.unwrap_or_else(|| self.clock.now());
         let mut req = Request::new(spec, at, &self.cfg.bins);
+        req.tenant = tenant;
         self.predictor.init_request(&mut req);
         let rid = req.spec.rid;
-        self.sched_idx.insert(self.serve.policy.rank(&req));
+        let rk = self.rank_of(&req);
+        self.sched_idx.insert(rk);
+        self.rid_pos.set(rid, self.requests.len());
+        self.shares.on_admit(tenant);
         self.requests.push(req);
         self.n_admitted += 1;
         self.publish_status();
@@ -433,13 +508,12 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// on the target, exactly like a discard — the KvManager asserts
     /// make a double-free a panic, not a silent corruption.
     pub fn take_migratable(&mut self) -> Option<Request> {
-        let policy = self.serve.policy.clone();
         let mut pick: Option<(bool, Rank, usize)> = None;
         for (i, r) in self.requests.iter().enumerate() {
             if r.phase == Phase::Finished {
                 continue;
             }
-            let rank = policy.rank(r);
+            let rank = self.rank_of(r);
             if rank.locked {
                 continue;
             }
@@ -460,11 +534,18 @@ impl<B: ModelBackend> ServingEngine<B> {
         }
         let (_, _, idx) = pick?;
         let mut r = self.requests.swap_remove(idx);
+        self.rid_pos.remove(r.spec.rid);
+        // swap_remove moved the former tail into `idx` (unless the
+        // victim *was* the tail): fix its slab entry.
+        if idx < self.requests.len() {
+            self.rid_pos.set(self.requests[idx].spec.rid, idx);
+        }
         // The request is no longer this engine's: hand its admission
         // count to the target (admit_migrated re-increments there), so
         // `EngineStatus::unfinished()` stays `admitted - finished` on
         // both sides and pool-wide sums count each request once.
         self.n_admitted -= 1;
+        self.shares.on_remove(r.tenant);
         self.sched_idx.remove(r.spec.rid);
         if let Some(slot) = r.slot.take() {
             self.kv.free(slot, r.spec.rid);
@@ -490,7 +571,10 @@ impl<B: ModelBackend> ServingEngine<B> {
     pub fn admit_migrated(&mut self, req: Request) -> u64 {
         debug_assert!(req.slot.is_none(), "migrated request still holds a slot");
         let rid = req.spec.rid;
-        self.sched_idx.insert(self.serve.policy.rank(&req));
+        let rk = self.rank_of(&req);
+        self.sched_idx.insert(rk);
+        self.rid_pos.set(rid, self.requests.len());
+        self.shares.on_admit(req.tenant);
         self.requests.push(req);
         self.n_admitted += 1;
         self.metrics.n_migrated_in += 1;
@@ -549,8 +633,26 @@ impl<B: ModelBackend> ServingEngine<B> {
         let mut requests = std::mem::take(&mut self.requests);
         let result = self.step_inner(&mut requests);
         self.requests = requests;
-        if result.is_ok() {
-            self.requests.retain(|r| r.phase != Phase::Finished);
+        if let Ok(out) = &result {
+            // Order-preserving compaction of finished requests with
+            // incremental slab maintenance: a step that finished nothing
+            // (the common case) does no map work at all — the ROADMAP
+            // "slab keyed by rid" replacement for the per-step rebuild.
+            if !out.finished.is_empty() {
+                let mut w = 0usize;
+                for i in 0..self.requests.len() {
+                    if self.requests[i].phase == Phase::Finished {
+                        self.rid_pos.remove(self.requests[i].spec.rid);
+                    } else {
+                        if w != i {
+                            self.requests.swap(w, i);
+                            self.rid_pos.set(self.requests[w].spec.rid, w);
+                        }
+                        w += 1;
+                    }
+                }
+                self.requests.truncate(w);
+            }
         }
         self.publish_status();
         result
@@ -632,15 +734,14 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// the helper methods can borrow the engine mutably alongside it).
     fn step_inner(&mut self, requests: &mut Vec<Request>) -> Result<StepOutcome> {
         // ---- 2. memory pressure, then target-set selection ----
-        if self.serve.selector == Selector::Indexed {
-            // The vec is compacted after every step, so positions are
-            // only stable within one iteration.
-            self.rid_idx.clear();
-            for (i, r) in requests.iter().enumerate() {
-                self.rid_idx.insert(r.spec.rid, i);
-            }
-        }
+        // Starvation guard first, so eviction and selection both see
+        // aged ranks; then OOM resolution; then the per-step tenant
+        // credit accrual the share-capped selection draws from.
+        self.refresh_starvation(requests);
         self.resolve_oom(requests);
+        if self.serve.fairness.shares_active() {
+            self.shares.accrue(&self.serve.fairness, self.backend.slots());
+        }
         let target = match self.serve.selector {
             Selector::Indexed => self.select_targets_indexed(requests),
             Selector::Reference => self.select_targets_reference(requests),
@@ -797,8 +898,38 @@ impl<B: ModelBackend> ServingEngine<B> {
                 self.res_idx.remove(r.spec.rid);
             }
             self.sched_idx.remove(r.spec.rid);
+            self.shares.on_remove(r.tenant);
             self.metrics.observe_finish(r);
             self.finished_rids.push(r.spec.rid);
+        }
+    }
+
+    /// Starvation guard (docs/fairness.md): re-derive every unfinished
+    /// request's aging level from its current wait episode and reindex
+    /// the ones whose level changed. Levels are quantized
+    /// (⌊wait / quantum⌋, capped), so between quantum boundaries this
+    /// pass touches neither index — maintenance stays incremental and
+    /// the per-step cost with the guard on is one arithmetic check per
+    /// live request, zero index ops in the steady state. A no-op (not
+    /// even the scan) with the guard off.
+    fn refresh_starvation(&mut self, requests: &mut [Request]) {
+        let fair = &self.serve.fairness;
+        if !fair.guard_active() {
+            return;
+        }
+        let now = self.clock.now();
+        let q = fair.starvation_quantum;
+        let cap = fair.max_aging_levels as f64;
+        for i in 0..requests.len() {
+            let r = &requests[i];
+            if r.phase == Phase::Finished {
+                continue;
+            }
+            let level = (((now - r.wait_started) / q).floor()).min(cap).max(0.0) as u32;
+            if level != r.starve_level {
+                requests[i].starve_level = level;
+                self.reindex(&requests[i]);
+            }
         }
     }
 
@@ -809,28 +940,35 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// requires a victim (vLLM behaves the same way: memory pressure
     /// overrides priority).
     fn resolve_oom(&mut self, requests: &mut [Request]) {
+        // Fast path: no memory pressure, no clones (this runs every
+        // step; the config clones below only when a discard is needed).
+        if self.kv.fits(0) {
+            return;
+        }
         let policy = self.serve.policy.clone();
+        let fair = self.serve.fairness.clone();
         let c = match policy {
             Policy::Trail { c } => c,
             _ => 1.0,
         };
+        let rank = |r: &Request| policy.rank_aged(r, &fair);
         while !self.kv.fits(0) {
             let resident = |r: &Request| r.slot.is_some() && r.phase != Phase::Finished;
             let victim = requests
                 .iter()
                 .enumerate()
                 .filter(|(_, r)| resident(r) && r.preemptable(c))
-                .max_by(|(_, a), (_, z)| policy.rank(a).cmp(&policy.rank(z)))
+                .max_by(|(_, a), (_, z)| rank(a).cmp(&rank(z)))
                 .or_else(|| {
                     requests
                         .iter()
                         .enumerate()
                         .filter(|(_, r)| resident(r))
-                        .max_by(|(_, a), (_, z)| policy.rank(a).cmp(&policy.rank(z)))
+                        .max_by(|(_, a), (_, z)| rank(a).cmp(&rank(z)))
                 })
                 .map(|(i, _)| i);
             let Some(vi) = victim else { break };
-            self.discard_victim(requests, vi, &policy, true);
+            self.discard_victim(requests, vi, true);
         }
     }
 
@@ -840,10 +978,18 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// batch. A phase change can flip the `locked` rank bit (FCFS/SJF
     /// lock on start; TRAIL windows on age), so changed requests are
     /// reindexed.
-    fn apply_phase_transitions(&mut self, requests: &mut [Request], chosen: &[bool]) {
+    ///
+    /// Fairness bookkeeping rides along: every chosen request ends its
+    /// wait episode here — the episode length feeds
+    /// `Metrics::max_wait_age` when it was actually waiting (Waiting /
+    /// Preempted / Discarded), `wait_started` resets to the step clock,
+    /// and a nonzero aging level drops back to 0 (one more reindex,
+    /// folded into the phase-change one).
+    fn apply_phase_transitions(&mut self, requests: &mut [Request], chosen: &[bool], now: f64) {
         for i in 0..requests.len() {
             let r = &mut requests[i];
             let before = r.phase;
+            let level_before = r.starve_level;
             if !chosen[i] && r.phase == Phase::Running {
                 r.phase = Phase::Preempted;
                 r.n_preemptions += 1;
@@ -858,7 +1004,17 @@ impl<B: ModelBackend> ServingEngine<B> {
             } else if chosen[i] && r.phase == Phase::Prefilling && r.prefill_done() {
                 r.phase = Phase::Running;
             }
-            if requests[i].phase != before {
+            if chosen[i] {
+                if matches!(before, Phase::Waiting | Phase::Preempted | Phase::Discarded) {
+                    let age = now - r.wait_started;
+                    if age > self.metrics.max_wait_age {
+                        self.metrics.max_wait_age = age;
+                    }
+                }
+                r.wait_started = now;
+                r.starve_level = 0;
+            }
+            if requests[i].phase != before || requests[i].starve_level != level_before {
                 self.reindex(&requests[i]);
             }
         }
@@ -867,21 +1023,44 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// The seed selector, kept as the differential oracle: rank
     /// everything, fully sort, pick ≤ B targets, allocate slots, evict
     /// under pressure. Returns indices into `requests`, rank order.
+    ///
+    /// With per-tenant shares active the walk is two-pass: a non-locked
+    /// candidate whose tenant is out of credit is deferred past every
+    /// in-credit candidate, then offered the remaining slots in rank
+    /// order (work-conserving deficit round-robin — see
+    /// `coordinator::fairness`). Every taken slot is charged, locked
+    /// and deferred targets included, so over-served tenants repay in
+    /// later steps.
     fn select_targets_reference(&mut self, requests: &mut [Request]) -> Vec<usize> {
         let policy = self.serve.policy.clone();
+        let fair = self.serve.fairness.clone();
+        let shares_on = fair.shares_active();
         let b = self.backend.slots();
 
         let mut order: Vec<usize> = (0..requests.len())
             .filter(|&i| requests[i].is_schedulable())
             .collect();
-        order.sort_by(|&a, &z| policy.rank(&requests[a]).cmp(&policy.rank(&requests[z])));
+        order.sort_by(|&a, &z| {
+            policy
+                .rank_aged(&requests[a], &fair)
+                .cmp(&policy.rank_aged(&requests[z], &fair))
+        });
         self.sel_ops_ref += order.len() as u64;
 
+        let now = self.clock.now();
         let mut target: Vec<usize> = Vec::with_capacity(b);
         let mut chosen = vec![false; requests.len()];
+        let mut deferred: Vec<usize> = Vec::new();
         for &idx in &order {
             if target.len() >= b {
                 break;
+            }
+            if shares_on {
+                let r = &requests[idx];
+                if !policy.rank_aged(r, &fair).locked && !self.shares.can_take(r.tenant) {
+                    deferred.push(idx);
+                    continue;
+                }
             }
             // Non-preemptive policies never *start* a new request by
             // pushing out a resident one; they only fill free slots. The
@@ -891,9 +1070,25 @@ impl<B: ModelBackend> ServingEngine<B> {
             if self.ensure_resident_reference(requests, idx, &chosen) {
                 chosen[idx] = true;
                 target.push(idx);
+                if shares_on {
+                    self.shares.take(requests[idx].tenant, b);
+                }
             }
         }
-        self.apply_phase_transitions(requests, &chosen);
+        // Second pass: leftover slots go to deferred candidates in rank
+        // order — shares cap tenants against each other, never against
+        // an otherwise-idle batch.
+        for &idx in &deferred {
+            if target.len() >= b {
+                break;
+            }
+            if self.ensure_resident_reference(requests, idx, &chosen) {
+                chosen[idx] = true;
+                target.push(idx);
+                self.shares.take(requests[idx].tenant, b);
+            }
+        }
+        self.apply_phase_transitions(requests, &chosen, now);
         target
     }
 
@@ -905,26 +1100,51 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// the only discarding policy and its rank ignores the
     /// Running→Discarded flip).
     fn select_targets_indexed(&mut self, requests: &mut [Request]) -> Vec<usize> {
+        let shares_on = self.serve.fairness.shares_active();
         let b = self.backend.slots();
+        let now = self.clock.now();
         let mut target: Vec<usize> = Vec::with_capacity(b);
         let mut chosen = vec![false; requests.len()];
         let mut held: Vec<Entry> = Vec::new();
+        // Popped candidates whose tenant was out of credit, pop order
+        // (the share-deferral mirror of the reference walk).
+        let mut deferred: Vec<Entry> = Vec::new();
         while target.len() < b {
             let Some(ent) = self.sched_idx.pop() else { break };
-            let idx = *self
-                .rid_idx
-                .get(&ent.rank.rid)
-                .expect("popped rid present in this step's rid index");
+            let idx = self.rid_pos.get(ent.rank.rid);
+            if shares_on && !ent.rank.locked && !self.shares.can_take(requests[idx].tenant) {
+                deferred.push(ent);
+                continue;
+            }
             if self.ensure_resident_indexed(requests, idx, &chosen) {
                 chosen[idx] = true;
                 target.push(idx);
+                if shares_on {
+                    self.shares.take(requests[idx].tenant, b);
+                }
             }
             held.push(ent);
+        }
+        // Second pass over deferred candidates, pop order (identical to
+        // the reference walk over its deferred list).
+        for ent in &deferred {
+            if target.len() >= b {
+                break;
+            }
+            let idx = self.rid_pos.get(ent.rank.rid);
+            if self.ensure_resident_indexed(requests, idx, &chosen) {
+                chosen[idx] = true;
+                target.push(idx);
+                self.shares.take(requests[idx].tenant, b);
+            }
         }
         for ent in held {
             self.sched_idx.reinsert(ent);
         }
-        self.apply_phase_transitions(requests, &chosen);
+        for ent in deferred {
+            self.sched_idx.reinsert(ent);
+        }
+        self.apply_phase_transitions(requests, &chosen, now);
         target
     }
 
@@ -940,12 +1160,22 @@ impl<B: ModelBackend> ServingEngine<B> {
         if requests[idx].slot.is_some() {
             return true;
         }
+        let need_tokens = requests[idx].prefill_target().min(self.cfg.model.max_seq);
+        // Fast path: resources available — no victim search, no config
+        // clones (this runs once per selected candidate).
+        if self.kv.free_slot_available()
+            && self.kv.fits(need_tokens.min(self.cfg.model.prefill_chunk * 2))
+        {
+            self.alloc_slot(requests, idx);
+            return true;
+        }
         let policy = self.serve.policy.clone();
+        let fair = self.serve.fairness.clone();
+        let rank = |r: &Request| policy.rank_aged(r, &fair);
         let c = match policy {
             Policy::Trail { c } => c,
             _ => 1.0,
         };
-        let need_tokens = requests[idx].prefill_target().min(self.cfg.model.max_seq);
 
         loop {
             let have_slot = self.kv.free_slot_available();
@@ -968,7 +1198,7 @@ impl<B: ModelBackend> ServingEngine<B> {
                         && policy.preemptive()
                         && r.preemptable(c)
                 })
-                .max_by(|(_, a), (_, z)| policy.rank(a).cmp(&policy.rank(z)));
+                .max_by(|(_, a), (_, z)| rank(a).cmp(&rank(z)));
             let Some((vi, _)) = victim else {
                 return false;
             };
@@ -976,15 +1206,15 @@ impl<B: ModelBackend> ServingEngine<B> {
             // otherwise discarding it to admit `idx` is a priority
             // inversion — and by at least the hysteresis margin, so that
             // sub-bin prediction noise doesn't churn the KV cache.
-            let vr = policy.rank(&requests[vi]);
-            let cr = policy.rank(&requests[idx]);
+            let vr = rank(&requests[vi]);
+            let cr = rank(&requests[idx]);
             if vr.cmp(&cr) != std::cmp::Ordering::Greater {
                 return false;
             }
             if !vr.locked && !cr.locked && vr.key - cr.key < self.serve.evict_margin {
                 return false;
             }
-            self.discard_victim(requests, vi, &policy, true);
+            self.discard_victim(requests, vi, true);
         }
 
         self.alloc_slot(requests, idx);
@@ -1023,7 +1253,7 @@ impl<B: ModelBackend> ServingEngine<B> {
                     held.push(e);
                     break;
                 }
-                let vi = *self.rid_idx.get(&e.rank.rid).expect("resident rid indexed");
+                let vi = self.rid_pos.get(e.rank.rid);
                 if chosen[vi] {
                     held.push(e);
                     continue;
@@ -1031,7 +1261,7 @@ impl<B: ModelBackend> ServingEngine<B> {
                 victim = Some(e);
                 break;
             }
-            let cr = policy.rank(&requests[idx]);
+            let cr = self.rank_of(&requests[idx]);
             let ok = match &victim {
                 None => false,
                 Some(v) => {
@@ -1054,10 +1284,10 @@ impl<B: ModelBackend> ServingEngine<B> {
                 self.res_idx.reinsert(e);
             }
             let v = victim.unwrap();
-            let vi = *self.rid_idx.get(&v.rank.rid).expect("victim rid indexed");
+            let vi = self.rid_pos.get(v.rank.rid);
             // The victim was already popped off the resident index — the
             // discard must not re-remove it there.
-            self.discard_victim(requests, vi, &policy, false);
+            self.discard_victim(requests, vi, false);
         }
 
         self.alloc_slot(requests, idx);
@@ -1070,13 +1300,7 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// resident index. Under FCFS a discard unlocks the request (its
     /// rank flips); under TRAIL the rank is invariant and the update
     /// no-ops.
-    fn discard_victim(
-        &mut self,
-        requests: &mut [Request],
-        vi: usize,
-        policy: &Policy,
-        in_res_idx: bool,
-    ) {
+    fn discard_victim(&mut self, requests: &mut [Request], vi: usize, in_res_idx: bool) {
         let r = &mut requests[vi];
         let slot = r.slot.take().unwrap();
         self.kv.free(slot, r.spec.rid);
@@ -1087,8 +1311,17 @@ impl<B: ModelBackend> ServingEngine<B> {
         if in_res_idx {
             self.res_idx.remove(requests[vi].spec.rid);
         }
-        let rk = policy.rank(&requests[vi]);
-        self.sched_idx.update(rk);
+        let rk = self.rank_of(&requests[vi]);
+        // A share-deferred candidate can be discarded as a victim while
+        // its entry sits popped-and-held by the in-flight selection; its
+        // rank is invariant under the discard (only TRAIL discards
+        // mid-selection, and the Running→Discarded flip changes neither
+        // its key nor its lock nor its aging level), so the held entry
+        // stays valid and is reinserted after the target set is fixed —
+        // the index just must not be updated for a rid it doesn't hold.
+        if self.sched_idx.contains(rk.rid) {
+            self.sched_idx.update(rk);
+        }
     }
 
     /// Allocate a fresh slot for `idx` and register it as resident.
@@ -1099,6 +1332,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         let _ = self.backend.slot_reset(slot);
         requests[idx].prefilled = 0; // fresh slot ⇒ (re)prefill from 0
         requests[idx].kv_written = 0;
-        self.res_idx.insert(self.serve.policy.rank(&requests[idx]));
+        let rk = self.rank_of(&requests[idx]);
+        self.res_idx.insert(rk);
     }
 }

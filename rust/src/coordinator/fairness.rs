@@ -1,0 +1,285 @@
+//! Fairness layer over the rank machinery (docs/fairness.md).
+//!
+//! Size-based scheduling (SRPT / TRAIL) optimizes mean completion time
+//! by construction and starves the tail by construction: a long request
+//! loses every rank comparison against a steady stream of short ones,
+//! and a hot tenant with many short requests can monopolize the batch.
+//! This module adds the two standard counter-measures, both shaped so
+//! that the incremental `RankIndex` machinery (and the PR 4 equivalence
+//! story between the reference and indexed selectors) survives:
+//!
+//! * **Starvation guard** — a request that has waited longer than
+//!   `starvation_quantum` virtual seconds since it last held a target
+//!   slot gains one *aging level* per elapsed quantum (capped at
+//!   `max_aging_levels`). Each level subtracts `aging_boost` from the
+//!   rank key ([`crate::coordinator::Policy::rank_aged`]), migrating
+//!   the request toward — and past — the front of the unlocked tier.
+//!   Aging never outranks `locked` work (locks are a correctness tier,
+//!   not a priority). Levels are quantized exactly so rank changes
+//!   happen at discrete, detectable moments: the engine re-indexes a
+//!   request only when its level actually changes, which keeps index
+//!   maintenance incremental instead of per-step-per-request.
+//!
+//! * **Per-tenant weighted shares** — a deficit-round-robin credit
+//!   ledger ([`TenantShares`]) over the batch slots. Each step every
+//!   tenant with live work accrues `slots · w_t / Σw` credit (clamped);
+//!   taking a slot costs one credit. A non-locked candidate whose
+//!   tenant is out of credit is *deferred*: it only gets a slot after
+//!   every in-credit candidate has been offered one, and the spend is
+//!   still charged (credit goes negative, bounded), so an over-served
+//!   tenant pays the debt in later steps. Deferral is work-conserving —
+//!   slots never idle while any tenant has runnable work.
+//!
+//! Neutral knobs (`FairnessConfig::neutral`) switch both mechanisms off
+//! entirely: no aging levels are ever assigned, no credit is consulted,
+//! and the scheduler — including the `RankIndex` op counters pinned in
+//! `benchmarks/BENCH_sched.json` — is bit-identical to the
+//! fairness-free engine. That is what keeps `BENCH_seed.json` /
+//! `BENCH_sched.json` byte-frozen while `BENCH_fair.json` explores the
+//! knob space.
+
+/// Fairness knobs, carried in `ServeConfig` (engine) and `SimScenario`
+/// (co-sim). Mirrored line-faithfully in `python/simref.py`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FairnessConfig {
+    /// Starvation-guard quantum (virtual seconds). A request gains one
+    /// aging level per `starvation_quantum` waited since it last held a
+    /// target slot. `0.0` disables the guard.
+    pub starvation_quantum: f64,
+    /// Rank-key boost per aging level, in key units (predicted tokens
+    /// under TRAIL/SJF, arrival seconds under FCFS).
+    pub aging_boost: f64,
+    /// Cap on aging levels (bounds the total boost at
+    /// `aging_boost · max_aging_levels`). `0` disables the guard.
+    pub max_aging_levels: u32,
+    /// Per-tenant slot weights, indexed by the trace tenant tag; tenants
+    /// beyond the vector weigh 1.0. Empty disables shares.
+    pub tenant_weights: Vec<f64>,
+}
+
+impl FairnessConfig {
+    /// Everything off — the scheduler is bit-identical to the
+    /// fairness-free engine (ranks, schedules, and op counters).
+    pub fn neutral() -> FairnessConfig {
+        FairnessConfig {
+            starvation_quantum: 0.0,
+            aging_boost: 0.0,
+            max_aging_levels: 0,
+            tenant_weights: Vec::new(),
+        }
+    }
+
+    /// Starvation guard at `quantum` seconds with the benchmark boost:
+    /// 512 tokens per level — twice the embedded workload's 256-token
+    /// output cap, so ONE elapsed quantum already outranks every
+    /// unlocked key (an effectively binary "starved" flag), and the
+    /// second (final) level keeps two starved requests ordered by their
+    /// own SRPT keys rather than escalating further. Gentler per-level
+    /// boosts were measurably worse in the bench grid: they age the
+    /// whole backlog through many intermediate reorderings, churning
+    /// the KV cache (discard storms) without bounding the tail sooner.
+    pub fn guard(quantum: f64) -> FairnessConfig {
+        FairnessConfig {
+            starvation_quantum: quantum,
+            aging_boost: 512.0,
+            max_aging_levels: 2,
+            ..FairnessConfig::neutral()
+        }
+    }
+
+    /// Guard plus equal-weight shares over `n_tenants` tenants.
+    pub fn guard_with_shares(quantum: f64, n_tenants: usize) -> FairnessConfig {
+        FairnessConfig {
+            tenant_weights: vec![1.0; n_tenants],
+            ..FairnessConfig::guard(quantum)
+        }
+    }
+
+    pub fn guard_active(&self) -> bool {
+        self.starvation_quantum > 0.0 && self.aging_boost > 0.0 && self.max_aging_levels > 0
+    }
+
+    pub fn shares_active(&self) -> bool {
+        !self.tenant_weights.is_empty()
+    }
+
+    pub fn is_neutral(&self) -> bool {
+        !self.guard_active() && !self.shares_active()
+    }
+
+    /// Weight of a tenant tag (1.0 beyond the configured vector).
+    pub fn weight(&self, tenant: u32) -> f64 {
+        self.tenant_weights
+            .get(tenant as usize)
+            .copied()
+            .unwrap_or(1.0)
+    }
+
+    /// Human label for benchmark rows: which mechanisms are on.
+    pub fn mode_label(&self) -> &'static str {
+        match (self.guard_active(), self.shares_active()) {
+            (false, false) => "off",
+            (true, false) => "guard",
+            (false, true) => "shares",
+            (true, true) => "guard+shares",
+        }
+    }
+}
+
+/// Deficit-round-robin credit ledger over batch slots, one cell per
+/// tenant tag. Deterministic: accrual iterates tenants in tag order,
+/// and every operation is IEEE add/mul/div/cmp (no transcendentals), so
+/// the ledger is bit-reproducible across runs and mirrors.
+#[derive(Debug, Default)]
+pub struct TenantShares {
+    /// Live (admitted, unfinished) request count per tenant tag.
+    live: Vec<u64>,
+    /// Slot credit per tenant tag; spent at 1.0 per selected target,
+    /// clamped to ±`2·slots` so neither surplus nor debt grows without
+    /// bound.
+    credit: Vec<f64>,
+}
+
+impl TenantShares {
+    fn ensure(&mut self, tenant: u32) {
+        let need = tenant as usize + 1;
+        if self.live.len() < need {
+            self.live.resize(need, 0);
+            self.credit.resize(need, 0.0);
+        }
+    }
+
+    /// Track an admitted request (admit / migrated-admit).
+    pub fn on_admit(&mut self, tenant: u32) {
+        self.ensure(tenant);
+        self.live[tenant as usize] += 1;
+    }
+
+    /// Track a departing request (finish / migrate-out).
+    pub fn on_remove(&mut self, tenant: u32) {
+        self.ensure(tenant);
+        debug_assert!(self.live[tenant as usize] > 0, "tenant live underflow");
+        self.live[tenant as usize] -= 1;
+    }
+
+    /// Per-step credit accrual: every tenant with live work gains
+    /// `slots · w_t / Σw` (clamped at `2·slots`); an idle tenant's
+    /// credit resets to zero (classic DRR — deficits do not accumulate
+    /// across empty-queue periods).
+    pub fn accrue(&mut self, fair: &FairnessConfig, slots: usize) {
+        let mut wsum = 0.0f64;
+        for t in 0..self.live.len() {
+            if self.live[t] > 0 {
+                wsum += fair.weight(t as u32);
+            }
+        }
+        if wsum <= 0.0 {
+            return;
+        }
+        let cap = (2 * slots) as f64;
+        for t in 0..self.live.len() {
+            if self.live[t] == 0 {
+                self.credit[t] = 0.0;
+            } else {
+                let add = slots as f64 * fair.weight(t as u32) / wsum;
+                self.credit[t] = (self.credit[t] + add).min(cap);
+            }
+        }
+    }
+
+    /// Can this tenant take a slot within its share this step?
+    pub fn can_take(&self, tenant: u32) -> bool {
+        self.credit
+            .get(tenant as usize)
+            .map_or(true, |&c| c >= 1.0)
+    }
+
+    /// Charge one slot to the tenant. Also called for locked and
+    /// deferred-pass targets, driving credit negative (bounded): the
+    /// over-served tenant repays in later steps.
+    pub fn take(&mut self, tenant: u32, slots: usize) {
+        self.ensure(tenant);
+        let cap = (2 * slots) as f64;
+        self.credit[tenant as usize] = (self.credit[tenant as usize] - 1.0).max(-cap);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neutral_disables_everything() {
+        let f = FairnessConfig::neutral();
+        assert!(!f.guard_active());
+        assert!(!f.shares_active());
+        assert!(f.is_neutral());
+        assert_eq!(f.mode_label(), "off");
+        assert_eq!(f.weight(3), 1.0);
+    }
+
+    #[test]
+    fn mode_labels() {
+        assert_eq!(FairnessConfig::guard(0.5).mode_label(), "guard");
+        assert_eq!(FairnessConfig::guard_with_shares(0.5, 2).mode_label(), "guard+shares");
+        let shares_only = FairnessConfig {
+            tenant_weights: vec![2.0, 1.0],
+            ..FairnessConfig::neutral()
+        };
+        assert_eq!(shares_only.mode_label(), "shares");
+        assert_eq!(shares_only.weight(0), 2.0);
+        assert_eq!(shares_only.weight(1), 1.0);
+        assert_eq!(shares_only.weight(9), 1.0);
+    }
+
+    #[test]
+    fn credit_splits_slots_by_weight_over_live_tenants() {
+        let fair = FairnessConfig {
+            tenant_weights: vec![3.0, 1.0],
+            ..FairnessConfig::neutral()
+        };
+        let mut s = TenantShares::default();
+        s.on_admit(0);
+        s.on_admit(1);
+        s.accrue(&fair, 16);
+        // 16 · 3/4 = 12 and 16 · 1/4 = 4.
+        assert!(s.can_take(0) && s.can_take(1));
+        for _ in 0..12 {
+            s.take(0, 16);
+        }
+        assert!(!s.can_take(0), "tenant 0 exhausted its 12-slot share");
+        assert!(s.can_take(1));
+        // Tenant 1 leaves: tenant 0 owns the whole batch next step.
+        s.on_remove(1);
+        s.accrue(&fair, 16);
+        assert!(s.can_take(0));
+    }
+
+    #[test]
+    fn idle_tenant_credit_resets_and_debt_is_bounded() {
+        let fair = FairnessConfig {
+            tenant_weights: vec![1.0, 1.0],
+            ..FairnessConfig::neutral()
+        };
+        let mut s = TenantShares::default();
+        s.on_admit(0);
+        s.on_admit(1);
+        for _ in 0..100 {
+            s.accrue(&fair, 8);
+        }
+        // Surplus is clamped at 2·slots, not 100 steps of accrual.
+        for _ in 0..16 {
+            s.take(0, 8);
+        }
+        assert!(!s.can_take(0));
+        // Debt is clamped too.
+        for _ in 0..100 {
+            s.take(0, 8);
+        }
+        s.on_remove(0);
+        s.accrue(&fair, 8); // idle ⇒ reset to 0
+        s.on_admit(0);
+        s.accrue(&fair, 8); // live again ⇒ one step of accrual suffices
+        assert!(s.can_take(0));
+    }
+}

@@ -18,6 +18,12 @@ pub struct Metrics {
     /// Migration hops accumulated by requests that *finished* on this
     /// engine — summing this across replicas counts every hop once.
     pub n_request_migrations: u64,
+    /// Longest observed wait episode (virtual seconds a request spent
+    /// Waiting / Preempted / Discarded before re-entering the target
+    /// set) — the starvation-age signal the fairness bench reports
+    /// (`max_starve_age_s` in BENCH_fair.json). Tracked whether or not
+    /// the starvation guard is on, so fairness-off cells report it too.
+    pub max_wait_age: f64,
     pub total_output_tokens: u64,
     pub total_prefill_tokens: u64,
     pub wall_time: f64,

@@ -12,6 +12,7 @@ pub mod backend;
 pub mod clock;
 pub mod dispatch;
 pub mod engine;
+pub mod fairness;
 pub mod kv;
 pub mod metrics;
 pub mod policy;
@@ -28,6 +29,7 @@ pub use engine::{
     EngineStatus, FinishedRequest, OnlineDone, OnlineJob, RequestSnapshot, Selector, ServeConfig,
     ServeReport, ServingEngine, SharedStatus, StepOutcome,
 };
+pub use fairness::{FairnessConfig, TenantShares};
 pub use kv::KvManager;
 pub use metrics::Metrics;
 pub use policy::{Policy, Rank};

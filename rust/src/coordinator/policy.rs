@@ -13,6 +13,7 @@
 //!   predicted *remaining* length; once age ≥ ⌊C·r⌋ the request becomes
 //!   non-preemptable (rank −∞). `c = 1.0` degenerates to plain SPRPT.
 
+use crate::coordinator::fairness::FairnessConfig;
 use crate::coordinator::request::{Phase, Request};
 
 /// Lower sorts first. `locked` requests are non-preemptable: they sort
@@ -120,6 +121,27 @@ impl Policy {
             }
         }
     }
+
+    /// Fairness-aware rank (docs/fairness.md): the base rank with the
+    /// starvation-guard aging boost folded into the key. Each aging
+    /// level (maintained by the engine, one per elapsed
+    /// `starvation_quantum`) subtracts `aging_boost`, so a starving
+    /// request migrates toward — and past — the front of the unlocked
+    /// tier; the `locked` bit is untouched (locks are a correctness
+    /// tier, not a priority). With the guard off every level is 0 and
+    /// this returns exactly [`Policy::rank`], bit for bit.
+    pub fn rank_aged(&self, r: &Request, fair: &FairnessConfig) -> Rank {
+        let rank = self.rank(r);
+        if r.starve_level == 0 {
+            return rank;
+        }
+        Rank::new(
+            rank.locked,
+            rank.key - fair.aging_boost * r.starve_level as f64,
+            rank.tie,
+            rank.rid,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -225,6 +247,34 @@ mod tests {
         assert_eq!(ra.cmp(&rb), std::cmp::Ordering::Less);
         assert_eq!(rb.cmp(&ra), std::cmp::Ordering::Greater);
         assert_eq!(ra.cmp(&ra), std::cmp::Ordering::Equal);
+    }
+
+    #[test]
+    fn aged_rank_promotes_but_never_outranks_locked() {
+        let fair = FairnessConfig {
+            starvation_quantum: 0.5,
+            aging_boost: 64.0,
+            max_aging_levels: 8,
+            tenant_weights: vec![],
+        };
+        let p = Policy::Trail { c: 0.8 };
+        let mut starved = req(1, 0.0, 200.0);
+        let fresh = req(2, 5.0, 10.0);
+        // Level 0: aged rank is bit-identical to the base rank.
+        assert_eq!(p.rank_aged(&starved, &fair), p.rank(&starved));
+        // 4 levels: 200 - 4·64 = -56 → sorts before the short newcomer.
+        starved.starve_level = 4;
+        let rs = p.rank_aged(&starved, &fair);
+        assert_eq!(rs.key, -56.0);
+        assert_eq!(rs.cmp(&p.rank_aged(&fresh, &fair)), std::cmp::Ordering::Less);
+        // A locked request still sorts first regardless of aging.
+        let mut locked = req(3, 9.0, 30.0);
+        locked.initial_pred = 30.0;
+        locked.generated = 29;
+        locked.phase = Phase::Running;
+        let rl = p.rank_aged(&locked, &fair);
+        assert!(rl.locked);
+        assert_eq!(rl.cmp(&rs), std::cmp::Ordering::Less);
     }
 
     #[test]

@@ -37,6 +37,10 @@ pub struct Request {
     pub phase: Phase,
     /// Slot index while resident.
     pub slot: Option<usize>,
+    /// Trace tenant tag (`workload::trace::TraceEntry::tenant`); 0 for
+    /// untagged admission paths. Consulted by the per-tenant share
+    /// ledger (`coordinator::fairness::TenantShares`).
+    pub tenant: u32,
 
     // --- progress ---
     /// Prompt (+ recompute prefix) tokens already prefilled.
@@ -62,6 +66,16 @@ pub struct Request {
     pub first_token_at: Option<f64>,
     pub finished_at: Option<f64>,
 
+    // --- fairness (docs/fairness.md) ---
+    /// Start of the current wait episode: admission time, then reset to
+    /// the step clock whenever the request holds a target slot. The
+    /// starvation guard ages a request off `now - wait_started`.
+    pub wait_started: f64,
+    /// Quantized starvation-guard aging level (0 with the guard off).
+    /// Maintained by the engine; each level subtracts
+    /// `FairnessConfig::aging_boost` from the rank key.
+    pub starve_level: u32,
+
     // --- accounting ---
     pub n_preemptions: u64,
     pub n_discards: u64,
@@ -75,6 +89,7 @@ impl Request {
             spec,
             phase: Phase::Waiting,
             slot: None,
+            tenant: 0,
             prefilled: 0,
             generated: 0,
             kv_written: 0,
@@ -84,6 +99,8 @@ impl Request {
             arrival,
             first_token_at: None,
             finished_at: None,
+            wait_started: arrival,
+            starve_level: 0,
             n_preemptions: 0,
             n_discards: 0,
             n_migrations: 0,

@@ -9,6 +9,8 @@
 //!                     --replicas 2 --dispatch jsq [--mock]
 //! trail-serve sim     --scenarios steady,skewed --policies fcfs,srpt,trail \
 //!                     --replicas 2,4 --out BENCH_sim.json
+//! trail-serve sched   --out BENCH_sched.json
+//! trail-serve fair    --out BENCH_fair.json
 //! ```
 
 use std::sync::Arc;
@@ -36,9 +38,10 @@ fn main() {
         Some("server") => cmd_server(&args),
         Some("sim") => cmd_sim(&args),
         Some("sched") => cmd_sched(&args),
+        Some("fair") => cmd_fair(&args),
         _ => {
             eprintln!(
-                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched> [options]\n\
+                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair> [options]\n\
                  \n\
                  serve    — run a serving benchmark against the AOT model\n\
                  \x20        --policy fcfs|sjf|trail|srpt|trail-c<M>  (default trail)\n\
@@ -56,11 +59,18 @@ fn main() {
                  \x20        --policies fcfs,srpt,trail --replicas 2,4\n\
                  \x20        [--n <reqs>] [--seed <u64>] [--no-migration]\n\
                  \x20        [--selector indexed|reference] [--tenants]\n\
+                 \x20        [--fairness-quantum <s>] [--fairness-boost <tokens>]\n\
+                 \x20        [--fairness-levels <n>] [--fairness-weights w0,w1,..]\n\
+                 \x20        [--fairness-report]\n\
                  \x20        [--out BENCH_sim.json] [--trace-out trace.jsonl]\n\
                  sched    — scheduler-scale selector comparison (BENCH_sched.json):\n\
                  \x20        reference full-sort vs incremental rank index over the\n\
                  \x20        scale-1k / scale-10k / scale-replicas grid\n\
                  \x20        [--out BENCH_sched.json]\n\
+                 fair     — fairness grid (BENCH_fair.json, docs/fairness.md):\n\
+                 \x20        starvation guard + per-tenant shares over the fair-*\n\
+                 \x20        scenarios, plus the 128-replica dispatch x fairness\n\
+                 \x20        sweep  [--out BENCH_fair.json]\n\
                  info     — print artifact/config summary"
             );
             2
@@ -368,6 +378,60 @@ fn cmd_sim(args: &Args) -> i32 {
 
     sweep.migration = !args.has_flag("no-migration");
     sweep.tenant_breakdown = args.has_flag("tenants");
+    sweep.fairness_report = args.has_flag("fairness-report");
+
+    // Fairness knobs (docs/fairness.md) — applied to every scenario in
+    // the sweep; absent flags keep the scenario defaults (neutral for
+    // all builtins, so the pinned baseline bytes cannot move).
+    {
+        let mut fair = trail::coordinator::FairnessConfig::neutral();
+        let mut any = false;
+        let quantum = args.f64_or("fairness-quantum", 0.0);
+        let boost_given = !args.str_or("fairness-boost", "").is_empty();
+        let levels_given = !args.str_or("fairness-levels", "").is_empty();
+        if quantum > 0.0 {
+            // Boost/level defaults match FairnessConfig::guard (the
+            // validated bench knobs).
+            fair.starvation_quantum = quantum;
+            fair.aging_boost = args.f64_or("fairness-boost", 512.0);
+            fair.max_aging_levels = args.u64_or("fairness-levels", 2) as u32;
+            if !fair.guard_active() {
+                eprintln!(
+                    "--fairness-quantum {quantum} given but the guard is inert \
+                     (boost {} / levels {} — both must be > 0)",
+                    fair.aging_boost, fair.max_aging_levels
+                );
+                return 2;
+            }
+            any = true;
+        } else if boost_given || levels_given {
+            eprintln!(
+                "--fairness-boost/--fairness-levels have no effect without \
+                 --fairness-quantum > 0"
+            );
+            return 2;
+        }
+        match args.str_or("fairness-weights", "") {
+            "" => {}
+            s => {
+                for tok in s.split(',').filter(|t| !t.is_empty()) {
+                    match tok.parse::<f64>() {
+                        Ok(w) if w >= 0.0 && w.is_finite() => fair.tenant_weights.push(w),
+                        _ => {
+                            eprintln!("bad --fairness-weights entry '{tok}'");
+                            return 2;
+                        }
+                    }
+                }
+                any = true;
+            }
+        }
+        if any {
+            for sc in &mut sweep.scenarios {
+                sc.fairness = fair.clone();
+            }
+        }
+    }
     // Selector override (both implementations serve bit-identically;
     // this exists for A/B timing and the differential harness).
     match args.str_or("selector", "") {
@@ -483,6 +547,53 @@ fn cmd_sched(args: &Args) -> i32 {
             "report ({} rows, schema {}) -> {out}",
             report.rows.len(),
             trail::sim::SCHED_SCHEMA_VERSION
+        );
+    }
+    0
+}
+
+fn cmd_fair(args: &Args) -> i32 {
+    // Embedded config, like `sim`/`sched`: the checked-in
+    // BENCH_fair.json and the Python mirror pin the embedded defaults.
+    let cfg = Config::embedded_default();
+    let report = match trail::sim::run_fair_sweep(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fair sweep failed: {e}");
+            return 1;
+        }
+    };
+    print!("{}", report.render_table());
+    // The headline claim on the console: what the guard+shares mode
+    // buys on the adversarial cell, in max starvation age and Jain's
+    // index over per-tenant slowdowns.
+    let cell = |mode: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| {
+                r.scenario == "fair-adversarial"
+                    && r.fairness.as_ref().map(|f| f.mode.as_str()) == Some(mode)
+            })
+            .and_then(|r| r.fairness.as_ref())
+    };
+    if let (Some(off), Some(on)) = (cell("off"), cell("guard+shares")) {
+        println!(
+            "fair-adversarial: max starvation age {:.3}s -> {:.3}s, \
+             Jain(slowdown) {:.3} -> {:.3} with guard+shares",
+            off.max_starve_age_s, on.max_starve_age_s, off.jain_slowdown, on.jain_slowdown
+        );
+    }
+    let out = args.str_or("out", "").to_string();
+    if !out.is_empty() {
+        if let Err(e) = report.save(&out) {
+            eprintln!("write {out} failed: {e}");
+            return 1;
+        }
+        println!(
+            "report ({} rows, schema {}) -> {out}",
+            report.rows.len(),
+            trail::sim::FAIR_SCHEMA_VERSION
         );
     }
     0

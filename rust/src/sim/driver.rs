@@ -41,6 +41,11 @@ pub struct TenantOutcome {
     pub n: usize,
     pub latency: Samples,
     pub ttft: Samples,
+    /// Per-request slowdown: completion time divided by generated
+    /// tokens (seconds/token — a size-normalised latency, so short and
+    /// long requests are comparable; the fairness reports aggregate it
+    /// into per-tenant percentiles and Jain's index).
+    pub slowdown: Samples,
 }
 
 /// Aggregate outcome of one co-simulated serve (all replicas).
@@ -67,6 +72,10 @@ pub struct SimOutcome {
     /// Latency breakdown by trace tenant (ROADMAP multi-tenant
     /// fairness groundwork), tenant index order.
     pub per_tenant: Vec<TenantOutcome>,
+    /// Longest wait episode observed on any replica (see
+    /// `Metrics::max_wait_age`) — the starvation-age signal
+    /// `BENCH_fair.json` reports per cell.
+    pub max_starve_age: f64,
 }
 
 impl SimOutcome {
@@ -147,7 +156,7 @@ impl<B: ModelBackend> SimDriver<B> {
                 let idx = self.dispatch.pick(&snaps, self.rr, self.unseen_estimate);
                 self.rr += 1;
                 self.engines[idx].sync_clock(entry.at);
-                self.engines[idx].admit(entry.spec.clone(), Some(entry.at));
+                self.engines[idx].admit_from(entry.spec.clone(), Some(entry.at), entry.tenant);
                 stalled[idx] = false;
                 continue;
             }
@@ -189,6 +198,9 @@ impl<B: ModelBackend> SimDriver<B> {
                 per_tenant[tenant].n += 1;
                 per_tenant[tenant].latency.push(f.latency);
                 per_tenant[tenant].ttft.push(f.ttft);
+                per_tenant[tenant]
+                    .slowdown
+                    .push(f.latency / f.n_tokens as f64);
             }
         }
         if finished != n_total {
@@ -202,6 +214,7 @@ impl<B: ModelBackend> SimDriver<B> {
         let mut selector_ops = 0u64;
         let mut per_replica = Vec::with_capacity(self.engines.len());
         let mut makespan = 0.0f64;
+        let mut max_starve_age = 0.0f64;
         for e in &self.engines {
             let st = e.status();
             preemptions += e.metrics.n_preemptions;
@@ -211,6 +224,7 @@ impl<B: ModelBackend> SimDriver<B> {
             selector_ops += e.selector_ops();
             per_replica.push(e.metrics.n_finished);
             makespan = makespan.max(e.now());
+            max_starve_age = max_starve_age.max(e.metrics.max_wait_age);
         }
         Ok(SimOutcome {
             n_requests: finished,
@@ -225,6 +239,7 @@ impl<B: ModelBackend> SimDriver<B> {
             n_iterations: iters,
             selector_ops,
             per_tenant,
+            max_starve_age,
         })
     }
 

@@ -15,5 +15,11 @@ pub mod report;
 pub mod scenario;
 
 pub use driver::{SimDriver, SimOutcome, TenantOutcome};
-pub use report::{BenchReport, SweepRow, TenantRow, SCHED_SCHEMA_VERSION, SCHEMA_VERSION};
-pub use scenario::{builtin, builtin_names, run_sched_sweep, run_sweep, SimScenario, SweepConfig};
+pub use report::{
+    BenchReport, FairnessRow, SlowdownRow, SweepRow, TenantRow, FAIR_SCHEMA_VERSION,
+    SCHED_SCHEMA_VERSION, SCHEMA_VERSION,
+};
+pub use scenario::{
+    builtin, builtin_names, fair_modes, run_fair_sweep, run_sched_sweep, run_sweep, SimScenario,
+    SweepConfig, FAIR_FLEET_QUANTUM_S, FAIR_QUANTUM_S,
+};

@@ -24,6 +24,11 @@ pub const SCHEMA_VERSION: &str = "trail.simlab.bench/v1";
 /// Scheduler-scale reports (`BENCH_sched.json`): the bench rows plus
 /// `selector` / `selector_ops` / `per_tenant` columns.
 pub const SCHED_SCHEMA_VERSION: &str = "trail.simlab.sched/v1";
+/// Fairness reports (`BENCH_fair.json`): the bench rows plus a
+/// `fairness` section per row — the knob settings and the fairness
+/// metrics (per-tenant slowdown percentiles, Jain's index over
+/// per-tenant mean slowdowns, max starvation age). See docs/fairness.md.
+pub const FAIR_SCHEMA_VERSION: &str = "trail.simlab.fair/v1";
 
 /// Per-tenant latency row (present when a sweep runs with
 /// `tenant_breakdown`; tenant names come from the scenario's
@@ -62,6 +67,156 @@ impl TenantRow {
     }
 }
 
+/// Per-tenant slowdown slice of a fairness row (slowdown = completion
+/// time / generated tokens, seconds per token).
+#[derive(Clone, Debug)]
+pub struct SlowdownRow {
+    pub tenant: String,
+    pub n: usize,
+    pub mean_slowdown: f64,
+    pub p50_slowdown: f64,
+    pub p99_slowdown: f64,
+}
+
+impl SlowdownRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tenant", Json::str(&self.tenant)),
+            ("n", Json::Num(self.n as f64)),
+            ("mean_slowdown", Json::Num(self.mean_slowdown)),
+            ("p50_slowdown", Json::Num(self.p50_slowdown)),
+            ("p99_slowdown", Json::Num(self.p99_slowdown)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> SlowdownRow {
+        SlowdownRow {
+            tenant: j.at(&["tenant"]).as_str().to_string(),
+            n: j.at(&["n"]).as_usize(),
+            mean_slowdown: j.at(&["mean_slowdown"]).as_f64(),
+            p50_slowdown: j.at(&["p50_slowdown"]).as_f64(),
+            p99_slowdown: j.at(&["p99_slowdown"]).as_f64(),
+        }
+    }
+}
+
+/// The `fairness` section of a `BENCH_fair.json` row: the knob settings
+/// the cell ran with plus the fairness metrics they produced.
+#[derive(Clone, Debug)]
+pub struct FairnessRow {
+    /// Which mechanisms were on (`FairnessConfig::mode_label`).
+    pub mode: String,
+    pub quantum_s: f64,
+    pub aging_boost: f64,
+    pub max_aging_levels: u32,
+    pub tenant_weights: Vec<f64>,
+    /// Jain's fairness index over per-tenant mean slowdowns (1.0 =
+    /// perfectly even, 1/k = one tenant gets everything).
+    pub jain_slowdown: f64,
+    /// Longest wait episode on any replica (virtual seconds).
+    pub max_starve_age_s: f64,
+    pub per_tenant_slowdown: Vec<SlowdownRow>,
+}
+
+impl FairnessRow {
+    /// Fairness metrics of one cell: the scenario's knob settings plus
+    /// per-tenant slowdown percentiles, Jain's index over per-tenant
+    /// mean slowdowns (tenant order; tenants that served nothing are
+    /// excluded — they have no slowdown to be fair about), and the max
+    /// starvation age. Borrows the outcome, so the caller can still
+    /// hand it to `SweepRow::from_outcome_full` afterwards.
+    pub fn from_outcome(sc: &SimScenario, out: &SimOutcome) -> FairnessRow {
+        let fair = &sc.fairness;
+        let per_tenant_slowdown: Vec<SlowdownRow> = sc
+            .workload
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(ti, t)| match out.per_tenant.get(ti) {
+                Some(s) if s.n > 0 => {
+                    let mut sd = s.slowdown.clone();
+                    SlowdownRow {
+                        tenant: t.name.clone(),
+                        n: s.n,
+                        mean_slowdown: sd.mean(),
+                        p50_slowdown: sd.percentile(50.0),
+                        p99_slowdown: sd.percentile(99.0),
+                    }
+                }
+                _ => SlowdownRow {
+                    tenant: t.name.clone(),
+                    n: 0,
+                    mean_slowdown: 0.0,
+                    p50_slowdown: 0.0,
+                    p99_slowdown: 0.0,
+                },
+            })
+            .collect();
+        let mut s1 = 0.0f64;
+        let mut s2 = 0.0f64;
+        let mut k = 0usize;
+        for row in &per_tenant_slowdown {
+            if row.n > 0 {
+                s1 += row.mean_slowdown;
+                s2 += row.mean_slowdown * row.mean_slowdown;
+                k += 1;
+            }
+        }
+        let jain = if k == 0 || s2 <= 0.0 {
+            1.0
+        } else {
+            s1 * s1 / (k as f64 * s2)
+        };
+        FairnessRow {
+            mode: fair.mode_label().to_string(),
+            quantum_s: fair.starvation_quantum,
+            aging_boost: fair.aging_boost,
+            max_aging_levels: fair.max_aging_levels,
+            tenant_weights: fair.tenant_weights.clone(),
+            jain_slowdown: jain,
+            max_starve_age_s: out.max_starve_age,
+            per_tenant_slowdown,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(&self.mode)),
+            ("quantum_s", Json::Num(self.quantum_s)),
+            ("aging_boost", Json::Num(self.aging_boost)),
+            ("max_aging_levels", Json::Num(self.max_aging_levels as f64)),
+            (
+                "tenant_weights",
+                Json::Arr(self.tenant_weights.iter().map(|&w| Json::Num(w)).collect()),
+            ),
+            ("jain_slowdown", Json::Num(self.jain_slowdown)),
+            ("max_starve_age_s", Json::Num(self.max_starve_age_s)),
+            (
+                "per_tenant_slowdown",
+                Json::Arr(self.per_tenant_slowdown.iter().map(|t| t.to_json()).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> FairnessRow {
+        FairnessRow {
+            mode: j.at(&["mode"]).as_str().to_string(),
+            quantum_s: j.at(&["quantum_s"]).as_f64(),
+            aging_boost: j.at(&["aging_boost"]).as_f64(),
+            max_aging_levels: j.at(&["max_aging_levels"]).as_i64() as u32,
+            tenant_weights: j.at(&["tenant_weights"]).as_f64_vec(),
+            jain_slowdown: j.at(&["jain_slowdown"]).as_f64(),
+            max_starve_age_s: j.at(&["max_starve_age_s"]).as_f64(),
+            per_tenant_slowdown: j
+                .at(&["per_tenant_slowdown"])
+                .as_arr()
+                .iter()
+                .map(SlowdownRow::from_json)
+                .collect(),
+        }
+    }
+}
+
 /// One (scenario × policy × replicas) cell of a sweep.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
@@ -93,6 +248,9 @@ pub struct SweepRow {
     pub selector_ops: Option<u64>,
     /// Per-tenant latency breakdown — only serialised when non-empty.
     pub per_tenant: Vec<TenantRow>,
+    /// Fairness knobs + metrics — fair sweeps only; `None` keeps the
+    /// seed and sched serialisations byte-identical.
+    pub fairness: Option<FairnessRow>,
 }
 
 impl SweepRow {
@@ -182,6 +340,7 @@ impl SweepRow {
                 None
             },
             per_tenant,
+            fairness: None,
         }
     }
 
@@ -232,6 +391,9 @@ impl SweepRow {
                 Json::Arr(self.per_tenant.iter().map(|t| t.to_json()).collect()),
             ));
         }
+        if let Some(fair) = &self.fairness {
+            pairs.push(("fairness", fair.to_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -275,6 +437,7 @@ impl SweepRow {
                 .get("per_tenant")
                 .map(|arr| arr.as_arr().iter().map(TenantRow::from_json).collect())
                 .unwrap_or_default(),
+            fairness: j.get("fairness").map(FairnessRow::from_json),
         }
     }
 }
@@ -299,6 +462,13 @@ impl BenchReport {
     pub fn new_sched(rows: Vec<SweepRow>) -> BenchReport {
         BenchReport {
             schema: SCHED_SCHEMA_VERSION.to_string(),
+            rows,
+        }
+    }
+
+    pub fn new_fair(rows: Vec<SweepRow>) -> BenchReport {
+        BenchReport {
+            schema: FAIR_SCHEMA_VERSION.to_string(),
             rows,
         }
     }
@@ -334,10 +504,13 @@ impl BenchReport {
     pub fn load(path: &str) -> Result<BenchReport, String> {
         let j = parse_file(path)?;
         let schema = j.at(&["schema"]).as_str();
-        if schema != SCHEMA_VERSION && schema != SCHED_SCHEMA_VERSION {
+        if schema != SCHEMA_VERSION
+            && schema != SCHED_SCHEMA_VERSION
+            && schema != FAIR_SCHEMA_VERSION
+        {
             return Err(format!(
                 "schema mismatch: file is '{schema}', this binary reads \
-                 '{SCHEMA_VERSION}' or '{SCHED_SCHEMA_VERSION}'"
+                 '{SCHEMA_VERSION}', '{SCHED_SCHEMA_VERSION}' or '{FAIR_SCHEMA_VERSION}'"
             ));
         }
         Ok(BenchReport {
@@ -350,6 +523,7 @@ impl BenchReport {
     /// Sched sweeps get two extra columns for the selector comparison.
     pub fn render_table(&self) -> String {
         let sched = self.rows.iter().any(|r| r.selector.is_some());
+        let fair = self.rows.iter().any(|r| r.fairness.is_some());
         let mut headers = vec![
             "scenario", "policy", "disp", "reps", "n", "mean_lat_s", "p50_lat_s", "p99_lat_s",
             "mean_ttft_s", "p99_ttft_s", "req/s", "preempt", "discard", "migrate", "kv_peak",
@@ -357,6 +531,11 @@ impl BenchReport {
         if sched {
             headers.push("selector");
             headers.push("sel_ops");
+        }
+        if fair {
+            headers.push("fairness");
+            headers.push("jain");
+            headers.push("starve_s");
         }
         let mut t = Table::new(&headers);
         for r in &self.rows {
@@ -380,6 +559,20 @@ impl BenchReport {
             if sched {
                 row.push(r.selector.clone().unwrap_or_default());
                 row.push(r.selector_ops.map(|x| x.to_string()).unwrap_or_default());
+            }
+            if fair {
+                match &r.fairness {
+                    Some(fr) => {
+                        row.push(fr.mode.clone());
+                        row.push(f(fr.jain_slowdown, 3));
+                        row.push(f(fr.max_starve_age_s, 3));
+                    }
+                    None => {
+                        row.push(String::new());
+                        row.push(String::new());
+                        row.push(String::new());
+                    }
+                }
             }
             t.row(row);
         }

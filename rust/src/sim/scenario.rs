@@ -22,9 +22,11 @@ use anyhow::Result;
 use crate::config::Config;
 use crate::coordinator::backend::CostModel;
 use crate::coordinator::dispatch::DispatchPolicy;
-use crate::coordinator::{ClockSpec, MockBackend, Policy, Selector, ServeConfig, ServingEngine};
+use crate::coordinator::{
+    ClockSpec, FairnessConfig, MockBackend, Policy, Selector, ServeConfig, ServingEngine,
+};
 use crate::sim::driver::{SimDriver, SimOutcome};
-use crate::sim::report::{BenchReport, SweepRow};
+use crate::sim::report::{BenchReport, FairnessRow, SweepRow};
 use crate::testkit::PredictorSpec;
 use crate::workload::{TenantProfile, TraceEntry, TraceWorkload};
 
@@ -49,6 +51,10 @@ pub struct SimScenario {
     /// builds (`Indexed` default; `Reference` for the sched-bench
     /// selector comparison).
     pub selector: Selector,
+    /// Fairness knobs for every engine this scenario builds (neutral
+    /// default — byte-identical to the fairness-free scheduler; the
+    /// fair sweep clones a scenario once per knob setting).
+    pub fairness: FairnessConfig,
 }
 
 impl SimScenario {
@@ -68,6 +74,7 @@ impl SimScenario {
             predictor: PredictorSpec::noisy_oracle(0.4),
             max_iterations: 2_000_000,
             selector: Selector::Indexed,
+            fairness: FairnessConfig::neutral(),
         }
     }
 
@@ -83,6 +90,11 @@ impl SimScenario {
 
     pub fn selector(mut self, selector: Selector) -> SimScenario {
         self.selector = selector;
+        self
+    }
+
+    pub fn fairness(mut self, fairness: FairnessConfig) -> SimScenario {
+        self.fairness = fairness;
         self
     }
 
@@ -114,6 +126,7 @@ impl SimScenario {
                 let backend = MockBackend::new(self.slots, cfg).with_cost(self.cost);
                 let mut serve = ServeConfig::new(cfg, policy.clone());
                 serve.selector = self.selector;
+                serve.fairness = self.fairness.clone();
                 serve.clock = ClockSpec::Virtual;
                 serve.max_iterations = self.max_iterations;
                 serve.pool_tokens =
@@ -151,7 +164,7 @@ impl SimScenario {
     }
 }
 
-pub fn builtin_names() -> [&'static str; 7] {
+pub fn builtin_names() -> [&'static str; 11] {
     [
         "steady",
         "bursty",
@@ -160,6 +173,10 @@ pub fn builtin_names() -> [&'static str; 7] {
         "scale-1k",
         "scale-10k",
         "scale-replicas",
+        "fair-steady",
+        "fair-skewed",
+        "fair-adversarial",
+        "fair-fleet",
     ]
 }
 
@@ -234,6 +251,82 @@ pub fn builtin(name: &str) -> Option<SimScenario> {
             s.workload.tenants[0].name = "fleet".into();
             s
         }
+        // Fairness grid (BENCH_fair.json, docs/fairness.md): two-tenant
+        // regimes where size-based scheduling is *unfair* by
+        // construction — an interactive/short tenant that wins every
+        // rank comparison against a batch/long tenant. Rates are tuned
+        // over mock capacity so the 2-replica cells queue hard enough
+        // that the starvation guard and tenant shares visibly move the
+        // long tenant's slowdown tail without giving back much mean.
+        "fair-steady" => {
+            let mut s = SimScenario::new(
+                "fair-steady",
+                TraceWorkload::new(vec![
+                    TenantProfile::steady("interactive", 240.0).mu_shift(-0.9),
+                    TenantProfile::steady("batch", 35.0).mu_shift(0.1),
+                ]),
+            );
+            s.slots = 16;
+            s.pool_frac = 0.45;
+            s.seed = 4242;
+            s.n = 400;
+            s
+        }
+        "fair-skewed" => {
+            // A hot short-request tenant floods round-robin replicas in
+            // bursts; a mid-size tenant competes for the same slots —
+            // the monopolization regime per-tenant shares exist for.
+            let mut s = SimScenario::new(
+                "fair-skewed",
+                TraceWorkload::new(vec![
+                    TenantProfile::on_off("flood", 170.0, 2.5, 1.0, 0.3, 2.0).mu_shift(-0.7),
+                    TenantProfile::steady("longtail", 40.0),
+                ]),
+            );
+            s.slots = 16;
+            s.pool_frac = 0.4;
+            s.dispatch = DispatchPolicy::RoundRobin;
+            s.seed = 4242;
+            s.n = 400;
+            s
+        }
+        "fair-adversarial" => {
+            // Oracle predictions + a relentless stream of short jobs:
+            // pure SRPT-style starvation — the long tenant's requests
+            // lose every comparison until the stream thins, unless the
+            // starvation guard promotes them.
+            let mut s = SimScenario::new(
+                "fair-adversarial",
+                TraceWorkload::new(vec![
+                    TenantProfile::steady("shorts", 260.0).mu_shift(-0.9),
+                    TenantProfile::steady("longs", 5.0).mu_shift(1.3),
+                ]),
+            );
+            s.slots = 16;
+            s.pool_frac = 0.45;
+            s.seed = 4242;
+            s.n = 400;
+            s.predictor = PredictorSpec::Oracle { noise: 0.0, refine_exact: true, seed: 7 };
+            s
+        }
+        "fair-fleet" => {
+            // The 128-replica dispatch-policy × fairness point (ROADMAP
+            // "dispatch-policy sweeps at that scale"): a hot short
+            // tenant plus a long-tail tenant arriving fast enough that
+            // every 8-slot replica of the fleet queues ~20 requests.
+            let mut s = SimScenario::new(
+                "fair-fleet",
+                TraceWorkload::new(vec![
+                    TenantProfile::steady("hot", 4500.0).mu_shift(-0.4),
+                    TenantProfile::steady("tail", 1800.0).mu_shift(0.6),
+                ]),
+            );
+            s.slots = 8;
+            s.pool_frac = 0.5;
+            s.seed = 777;
+            s.n = 2560;
+            s
+        }
         _ => return None,
     };
     Some(s)
@@ -249,6 +342,9 @@ pub struct SweepConfig {
     /// Emit `per_tenant` latency rows. Off for the pinned seed sweep
     /// (the baseline serialisation must stay byte-identical).
     pub tenant_breakdown: bool,
+    /// Emit the `fairness` section per row (knobs + slowdown metrics).
+    /// Off for the pinned seed sweep, like `tenant_breakdown`.
+    pub fairness_report: bool,
 }
 
 impl SweepConfig {
@@ -265,6 +361,7 @@ impl SweepConfig {
             replica_counts: vec![2, 4],
             migration: true,
             tenant_breakdown: false,
+            fairness_report: false,
         }
     }
 }
@@ -278,7 +375,12 @@ pub fn run_sweep(cfg: &Config, sweep: &SweepConfig) -> Result<BenchReport> {
         for &replicas in &sweep.replica_counts {
             for policy in &sweep.policies {
                 let out = sc.run_trace(cfg, policy, replicas, sweep.migration, &trace)?;
-                rows.push(SweepRow::from_outcome_full(
+                let fair = if sweep.fairness_report {
+                    Some(FairnessRow::from_outcome(sc, &out))
+                } else {
+                    None
+                };
+                let mut row = SweepRow::from_outcome_full(
                     sc,
                     policy,
                     replicas,
@@ -286,7 +388,9 @@ pub fn run_sweep(cfg: &Config, sweep: &SweepConfig) -> Result<BenchReport> {
                     out,
                     false,
                     sweep.tenant_breakdown,
-                ));
+                );
+                row.fairness = fair;
+                rows.push(row);
             }
         }
     }
@@ -315,4 +419,71 @@ pub fn run_sched_sweep(cfg: &Config) -> Result<BenchReport> {
         }
     }
     Ok(BenchReport::new_sched(rows))
+}
+
+/// Starvation-guard quantum of the fairness bench (virtual seconds;
+/// the 2-replica fair scenarios drain in ~3–6 s, so 0.75 s is "a long
+/// wait" without being every wait). The observed max starvation age
+/// with the guard on lands at ~quantum across the whole grid — the
+/// bound the guard is for.
+pub const FAIR_QUANTUM_S: f64 = 0.75;
+/// Fleet-part quantum: the 128-replica run drains in well under 2 s,
+/// so its "long wait" is proportionally shorter.
+pub const FAIR_FLEET_QUANTUM_S: f64 = 0.25;
+
+/// Fairness-knob settings of the fair sweep, in sweep order: everything
+/// off (the unfairness baseline), the starvation guard alone, guard +
+/// equal per-tenant shares. All fair scenarios have two tenants. Keep
+/// in sync with python/simref.py `fair_modes`.
+pub fn fair_modes() -> [FairnessConfig; 3] {
+    [
+        FairnessConfig::neutral(),
+        FairnessConfig::guard(FAIR_QUANTUM_S),
+        FairnessConfig::guard_with_shares(FAIR_QUANTUM_S, 2),
+    ]
+}
+
+/// The checked-in fairness grid (`benchmarks/BENCH_fair.json`, schema
+/// `trail.simlab.fair/v1`; docs/fairness.md):
+///
+/// * each fair scenario × fairness mode at 2 replicas under TRAIL
+///   c=0.8, every mode on the identical trace — the paired comparison
+///   that shows what the guard and the shares each buy;
+/// * `fair-fleet` at 128 replicas × every dispatch policy × {off,
+///   guard+shares} — the ROADMAP "dispatch-policy sweeps at that
+///   scale" point, fairness-annotated.
+///
+/// Keep the grid in sync with python/simref.py `fair_rows`.
+pub fn run_fair_sweep(cfg: &Config) -> Result<BenchReport> {
+    let policy = Policy::Trail { c: 0.8 };
+    let mut rows = Vec::new();
+    for name in ["fair-steady", "fair-skewed", "fair-adversarial"] {
+        let base = builtin(name).expect("builtin fair scenario");
+        let trace = base.trace(cfg);
+        for fair in fair_modes() {
+            let sc = base.clone().fairness(fair);
+            let out = sc.run_trace(cfg, &policy, 2, true, &trace)?;
+            let fr = FairnessRow::from_outcome(&sc, &out);
+            let mut row = SweepRow::from_outcome_full(&sc, &policy, 2, true, out, false, true);
+            row.fairness = Some(fr);
+            rows.push(row);
+        }
+    }
+    let base = builtin("fair-fleet").expect("builtin fair-fleet");
+    let trace = base.trace(cfg);
+    for dispatch in DispatchPolicy::all() {
+        for fair in [
+            FairnessConfig::neutral(),
+            FairnessConfig::guard_with_shares(FAIR_FLEET_QUANTUM_S, 2),
+        ] {
+            let mut sc = base.clone().fairness(fair);
+            sc.dispatch = dispatch;
+            let out = sc.run_trace(cfg, &policy, 128, true, &trace)?;
+            let fr = FairnessRow::from_outcome(&sc, &out);
+            let mut row = SweepRow::from_outcome_full(&sc, &policy, 128, true, out, false, true);
+            row.fairness = Some(fr);
+            rows.push(row);
+        }
+    }
+    Ok(BenchReport::new_fair(rows))
 }

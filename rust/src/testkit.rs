@@ -33,7 +33,8 @@ use crate::coordinator::backend::CostModel;
 use crate::coordinator::dispatch::{DispatchPolicy, ReplicaPool};
 use crate::coordinator::engine::OnlineJob;
 use crate::coordinator::{
-    ClockSpec, MockBackend, Policy, Selector, ServeConfig, ServeReport, ServingEngine,
+    ClockSpec, FairnessConfig, MockBackend, Policy, Selector, ServeConfig, ServeReport,
+    ServingEngine,
 };
 use crate::predictor::{OraclePredictor, Predictor, ProbePredictor};
 use crate::runtime::ProbeWeights;
@@ -122,6 +123,9 @@ pub struct Scenario {
     /// Target-selection implementation (`Indexed` default; `Reference`
     /// is the seed full-sort oracle for differential tests).
     pub selector: Selector,
+    /// Fairness knobs (neutral default — bit-identical to the
+    /// fairness-free scheduler; see docs/fairness.md).
+    pub fairness: FairnessConfig,
     /// Mock-backend batch slots. `None` keeps the config default
     /// (`cfg.model.batch_slots`, 8 — the regime the pinned suite numbers
     /// were measured in); set it to exercise paper-scale 100+-sequence
@@ -153,6 +157,7 @@ impl Scenario {
             max_iterations: 2_000_000,
             replicas: 1,
             selector: Selector::Indexed,
+            fairness: FairnessConfig::neutral(),
             slots: None,
         }
     }
@@ -160,6 +165,12 @@ impl Scenario {
     /// Target-selection implementation for the scenario's engines.
     pub fn selector(mut self, selector: Selector) -> Scenario {
         self.selector = selector;
+        self
+    }
+
+    /// Fairness knobs for the scenario's engines.
+    pub fn fairness(mut self, fairness: FairnessConfig) -> Scenario {
+        self.fairness = fairness;
         self
     }
 
@@ -247,6 +258,7 @@ impl Scenario {
     fn serve_config(&self, cfg: &Config) -> ServeConfig {
         let mut serve = ServeConfig::new(cfg, self.policy.clone());
         serve.selector = self.selector;
+        serve.fairness = self.fairness.clone();
         serve.max_iterations = self.max_iterations;
         serve.pool_tokens =
             ((self.effective_slots(cfg) * cfg.model.max_seq) as f64 * self.pool_frac) as usize;

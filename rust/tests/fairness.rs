@@ -1,0 +1,208 @@
+//! Fairness layer: behavioural guarantees and baseline pinning
+//! (docs/fairness.md).
+//!
+//! * the starvation guard *bounds* max waiting age under an adversarial
+//!   stream of short jobs (property test over random rates/seeds — the
+//!   same regime validated cell-by-cell through the Python mirror);
+//! * per-tenant shares protect a minority tenant's slowdown and stay
+//!   work-conserving (a zero-weight tenant still completes);
+//! * with every knob at its neutral default the scheduler is
+//!   byte-identical to the fairness-free engine, and the checked-in
+//!   `BENCH_seed.json` / `BENCH_sched.json` / `BENCH_fair.json`
+//!   baselines round-trip byte-for-byte through the (extended)
+//!   serialisation code.
+
+use trail::config::Config;
+use trail::coordinator::{FairnessConfig, Policy};
+use trail::sim::{builtin, run_sweep, BenchReport, SimScenario, SweepConfig};
+use trail::util::prop;
+use trail::workload::{TenantProfile, TraceWorkload};
+
+fn cfg() -> Config {
+    Config::embedded_default()
+}
+
+/// The fair-adversarial regime with a variable short-stream rate:
+/// oracle predictions, a relentless short tenant, a sparse long tenant.
+fn adversarial(rate: f64, n: usize, seed: u64) -> SimScenario {
+    let mut s = builtin("fair-adversarial").unwrap();
+    s.workload = TraceWorkload::new(vec![
+        TenantProfile::steady("shorts", rate).mu_shift(-0.9),
+        TenantProfile::steady("longs", 5.0).mu_shift(1.3),
+    ]);
+    s.n = n;
+    s.seed = seed;
+    s
+}
+
+#[test]
+fn prop_starvation_guard_bounds_wait_age_under_adversarial_shorts() {
+    // With the guard on, the longest wait episode is bounded at roughly
+    // one quantum: the first aging level already outranks every
+    // unlocked key, so a starved request is served at the next
+    // selection with an evictable victim. Validated over the same
+    // (rate, n, seed) envelope through the Python mirror: worst guarded
+    // age 0.761 s across 76 cells, vs ~2 s unguarded at n = 300.
+    let cfg = cfg();
+    let policy = Policy::Trail { c: 0.8 };
+    let quantum = 0.75;
+    let bound = quantum + 0.25;
+    prop::check("starvation guard bounds wait age", 6, |g| {
+        let rate = g.f64_in(220.0, 300.0);
+        let n = *g.pick(&[150usize, 300]);
+        let seed = g.usize_in(1, 50_000) as u64;
+        let base = adversarial(rate, n, seed);
+        let trace = base.trace(&cfg);
+        let off = base
+            .clone()
+            .run_trace(&cfg, &policy, 2, true, &trace)
+            .map_err(|e| e.to_string())?;
+        let on = base
+            .clone()
+            .fairness(FairnessConfig::guard(quantum))
+            .run_trace(&cfg, &policy, 2, true, &trace)
+            .map_err(|e| e.to_string())?;
+        if on.max_starve_age > bound {
+            return Err(format!(
+                "guarded max wait age {:.3} exceeds bound {bound} (rate {rate:.0}, n {n}, seed {seed})",
+                on.max_starve_age
+            ));
+        }
+        if on.max_starve_age > off.max_starve_age + 1e-9 {
+            return Err(format!(
+                "guard worsened starvation: {:.3} vs {:.3} (rate {rate:.0}, n {n}, seed {seed})",
+                on.max_starve_age, off.max_starve_age
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn guard_shrinks_starvation_on_the_bench_cell() {
+    // The pinned BENCH_fair.json story, asserted directionally: on the
+    // fair-adversarial cell the unguarded max starvation age is a
+    // multiple of the guarded one.
+    let cfg = cfg();
+    let policy = Policy::Trail { c: 0.8 };
+    let base = builtin("fair-adversarial").unwrap();
+    let trace = base.trace(&cfg);
+    let off = base.clone().run_trace(&cfg, &policy, 2, true, &trace).unwrap();
+    let on = base
+        .clone()
+        .fairness(FairnessConfig::guard(0.75))
+        .run_trace(&cfg, &policy, 2, true, &trace)
+        .unwrap();
+    assert!(
+        off.max_starve_age > 2.0 * on.max_starve_age,
+        "guard must cut max starvation age at least 2x: off {:.3} vs on {:.3}",
+        off.max_starve_age,
+        on.max_starve_age
+    );
+}
+
+#[test]
+fn shares_protect_the_minority_tenant_slowdown() {
+    // fair-skewed: a bursty short-request flood vs a mid-size tenant.
+    // Equal shares must improve the protected tenant's mean slowdown
+    // (latency per generated token) vs fairness-off on the same trace.
+    let cfg = cfg();
+    let policy = Policy::Trail { c: 0.8 };
+    let base = builtin("fair-skewed").unwrap();
+    let trace = base.trace(&cfg);
+    let slowdown = |out: &trail::sim::SimOutcome, t: usize| {
+        let s = &out.per_tenant[t];
+        assert!(s.n > 0, "tenant {t} served nothing");
+        s.slowdown.clone().mean()
+    };
+    let off = base.clone().run_trace(&cfg, &policy, 2, true, &trace).unwrap();
+    let on = base
+        .clone()
+        .fairness(FairnessConfig::guard_with_shares(0.75, 2))
+        .run_trace(&cfg, &policy, 2, true, &trace)
+        .unwrap();
+    assert!(
+        slowdown(&on, 1) < slowdown(&off, 1),
+        "shares must improve the protected tenant: {:.4} vs {:.4}",
+        slowdown(&on, 1),
+        slowdown(&off, 1)
+    );
+}
+
+#[test]
+fn zero_weight_tenant_still_completes_via_work_conservation() {
+    // Deferral is work-conserving: a tenant with weight 0 is only ever
+    // served from the second selection pass, but slots never idle while
+    // it has runnable work — the run drains completely (the co-sim
+    // driver errors out on lost requests).
+    let cfg = cfg();
+    let policy = Policy::Trail { c: 0.8 };
+    let base = builtin("fair-steady").unwrap().n(120).fairness(FairnessConfig {
+        tenant_weights: vec![1.0, 0.0],
+        ..FairnessConfig::neutral()
+    });
+    let out = base.run(&cfg, &policy, 2, true).unwrap();
+    assert_eq!(out.n_requests, 120);
+    assert!(out.per_tenant[1].n > 0, "zero-weight tenant must still be served");
+}
+
+#[test]
+fn neutral_fairness_is_byte_identical_to_the_default_sweep() {
+    // The seed-pinning guarantee at sweep granularity: a sweep with the
+    // fairness struct explicitly at neutral serialises byte-identically
+    // to the stock sweep, and no `fairness` key appears.
+    let cfg = cfg();
+    let mut sweep = SweepConfig::default_sweep();
+    sweep.scenarios = vec![builtin("skewed").unwrap().n(60)];
+    sweep.replica_counts = vec![2];
+    let stock = run_sweep(&cfg, &sweep).unwrap().to_json_string();
+    let mut explicit = sweep.clone();
+    for sc in &mut explicit.scenarios {
+        sc.fairness = FairnessConfig::neutral();
+    }
+    let neutral = run_sweep(&cfg, &explicit).unwrap().to_json_string();
+    assert_eq!(stock, neutral);
+    assert!(!stock.contains("\"fairness\""), "neutral sweep must not serialise fairness");
+}
+
+#[test]
+fn checked_in_baselines_round_trip_byte_identically() {
+    // The serialisation layer grew a `fairness` section; the pinned
+    // baselines (old schemas included) must survive load → save
+    // byte-for-byte, or CI's baseline diffs would report phantom drift.
+    for path in [
+        "benchmarks/BENCH_seed.json",
+        "benchmarks/BENCH_sched.json",
+        "benchmarks/BENCH_fair.json",
+    ] {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+        let report = BenchReport::load(path).unwrap_or_else(|e| panic!("load {path}: {e}"));
+        assert_eq!(report.to_json_string(), text, "{path} must round-trip byte-identically");
+    }
+}
+
+#[test]
+fn fair_bench_rows_carry_the_fairness_section() {
+    let report = BenchReport::load("benchmarks/BENCH_fair.json").unwrap();
+    assert_eq!(report.schema, trail::sim::FAIR_SCHEMA_VERSION);
+    assert_eq!(report.rows.len(), 15, "3 scenarios x 3 modes + 3 dispatch x 2 modes");
+    for row in &report.rows {
+        let fair = row.fairness.as_ref().expect("fair row without fairness section");
+        assert!(fair.jain_slowdown > 0.0 && fair.jain_slowdown <= 1.0 + 1e-12);
+        assert_eq!(fair.per_tenant_slowdown.len(), 2, "all fair scenarios have two tenants");
+    }
+    // The headline numbers the docs cite: guard bounds starvation on
+    // the adversarial cell.
+    let starve = |mode: &str| {
+        report
+            .rows
+            .iter()
+            .find(|r| {
+                r.scenario == "fair-adversarial"
+                    && r.fairness.as_ref().map(|f| f.mode.as_str()) == Some(mode)
+            })
+            .map(|r| r.fairness.as_ref().unwrap().max_starve_age_s)
+            .expect("adversarial cell present")
+    };
+    assert!(starve("off") > 2.0 * starve("guard"));
+}

@@ -9,7 +9,7 @@
 //! snapshots in the panic message.
 
 use trail::config::Config;
-use trail::coordinator::{MockBackend, Policy, Selector, ServingEngine};
+use trail::coordinator::{FairnessConfig, MockBackend, Policy, Selector, ServingEngine};
 use trail::testkit::{Load, Scenario};
 use trail::workload::gen_requests;
 
@@ -200,6 +200,129 @@ fn probe_predictor_path_is_also_equivalent() {
             .predictor(PredictorSpec::SyntheticProbe { refine: true, seed: 1001 })
             .pool_frac(0.4);
         run_lockstep(&cfg, &s, &format!("probe/{}", policy.name()));
+    }
+}
+
+#[test]
+fn fairness_guard_lockstep_across_selectors() {
+    // The starvation guard mutates ranks outside the classic touch
+    // points (quantized aging levels assigned at quantum boundaries,
+    // reset on selection): the aged ranks must flow through the
+    // incremental indexes exactly as through the full sort. Tight
+    // quantum (50 ms ≈ tens of engine iterations) so levels churn hard.
+    let cfg = cfg();
+    let fair = FairnessConfig::guard(0.05);
+    for policy in [
+        Policy::Trail { c: 0.8 },
+        Policy::Trail { c: 1.0 },
+        Policy::SjfPrompt,
+        Policy::Fcfs,
+    ] {
+        for pool_frac in [0.3, 0.55] {
+            let s = Scenario::new(policy.clone())
+                .n(36)
+                .load(Load::Poisson(110.0))
+                .noise(0.5)
+                .pool_frac(pool_frac)
+                .fairness(fair.clone())
+                .seed(4242);
+            run_lockstep(&cfg, &s, &format!("fair-guard/{}/pool{pool_frac}", policy.name()));
+        }
+    }
+}
+
+/// Trace-driven lockstep with tenant tags: the share-capped two-pass
+/// selection (defer + second pass) must visit candidates in the same
+/// order through the popped index as through the sorted walk. Uses a
+/// fair builtin's two-tenant trace on single-replica engines so every
+/// scheduling decision is engine-local and comparable step-by-step.
+fn run_lockstep_trace(cfg: &Config, name: &str, fair: FairnessConfig) {
+    let policy = Policy::Trail { c: 0.8 };
+    let base = trail::sim::builtin(name).unwrap().n(120);
+    let trace = base.trace(cfg);
+    let mk = |sel: Selector| -> ServingEngine<MockBackend> {
+        base.clone()
+            .selector(sel)
+            .fairness(fair.clone())
+            .build_engines(cfg, &policy, 1)
+            .pop()
+            .unwrap()
+    };
+    let mut reference = mk(Selector::Reference);
+    let mut indexed = mk(Selector::Indexed);
+    let label = format!("fair-shares/{name}");
+
+    let mut next = 0usize;
+    let mut step_no = 0u64;
+    loop {
+        assert_eq!(
+            reference.now().to_bits(),
+            indexed.now().to_bits(),
+            "{label}: clocks diverged before step {step_no}"
+        );
+        let now = reference.now();
+        while next < trace.len() && trace[next].at <= now {
+            let e = &trace[next];
+            reference.admit_from(e.spec.clone(), Some(e.at), e.tenant);
+            indexed.admit_from(e.spec.clone(), Some(e.at), e.tenant);
+            next += 1;
+        }
+        if !reference.any_schedulable() {
+            assert!(!indexed.any_schedulable(), "{label}: schedulable sets diverged");
+            if next >= trace.len() {
+                break;
+            }
+            let at = trace[next].at;
+            reference.sync_clock(at);
+            indexed.sync_clock(at);
+            continue;
+        }
+        let a = reference.step().expect("reference step");
+        let b = indexed.step().expect("indexed step");
+        step_no += 1;
+        assert_eq!(a.now.to_bits(), b.now.to_bits(), "{label}: step {step_no} clock");
+        assert_eq!(a.worked, b.worked, "{label}: step {step_no} worked");
+        assert_eq!(
+            reference.last_target_rids(),
+            indexed.last_target_rids(),
+            "{label}: step {step_no} target set"
+        );
+        assert_eq!(
+            reference.request_snapshots(),
+            indexed.request_snapshots(),
+            "{label}: step {step_no} request state diverged"
+        );
+    }
+    let st_a = reference.status();
+    let st_b = indexed.status();
+    assert_eq!(st_a.n_finished, 120, "{label}: reference lost requests");
+    assert_eq!(st_b.n_finished, 120, "{label}: indexed lost requests");
+    assert_eq!(st_a.n_iterations, st_b.n_iterations, "{label}: iteration counts");
+}
+
+#[test]
+fn fairness_shares_lockstep_with_tenant_traces() {
+    let cfg = Config::embedded_default();
+    for name in ["fair-skewed", "fair-adversarial"] {
+        // Equal shares, skewed shares, and a zero-weight tenant (pure
+        // second-pass service) — with and without the guard on top.
+        run_lockstep_trace(&cfg, name, FairnessConfig::guard_with_shares(0.25, 2));
+        run_lockstep_trace(
+            &cfg,
+            name,
+            FairnessConfig {
+                tenant_weights: vec![3.0, 1.0],
+                ..FairnessConfig::neutral()
+            },
+        );
+        run_lockstep_trace(
+            &cfg,
+            name,
+            FairnessConfig {
+                tenant_weights: vec![1.0, 0.0],
+                ..FairnessConfig::neutral()
+            },
+        );
     }
 }
 

@@ -45,6 +45,7 @@ fn sweep_json_is_byte_identical_across_runs() {
         replica_counts: vec![2],
         migration: true,
         tenant_breakdown: false,
+        fairness_report: false,
     };
     let a = run_sweep(&cfg, &sweep).unwrap().to_json_string();
     let b = run_sweep(&cfg, &sweep).unwrap().to_json_string();
@@ -105,6 +106,7 @@ fn report_save_load_round_trip_is_lossless() {
         replica_counts: vec![2],
         migration: true,
         tenant_breakdown: false,
+        fairness_report: false,
     };
     let report = run_sweep(&cfg, &sweep).unwrap();
     let text = report.to_json_string();
@@ -141,6 +143,7 @@ fn multi_tenant_breakdown_rows_pin_the_tenant_split() {
         replica_counts: vec![2],
         migration: true,
         tenant_breakdown: true,
+        fairness_report: false,
     };
     let report = run_sweep(&cfg, &sweep).unwrap();
     assert_eq!(report.rows.len(), 1);
@@ -191,6 +194,7 @@ fn seed_bench_serialisation_has_no_new_columns() {
         replica_counts: vec![2],
         migration: true,
         tenant_breakdown: false,
+        fairness_report: false,
     };
     let text = run_sweep(&cfg, &sweep).unwrap().to_json_string();
     assert!(!text.contains("selector"));
