@@ -7,7 +7,8 @@
 
 .PHONY: build test bench-sim bench-dispatch bench-sim-json bench-sim-diff bench-sim-refresh \
         bench-sched bench-sched-diff bench-sched-refresh \
-        bench-fair bench-fair-diff bench-fair-refresh fmt artifacts clean
+        bench-fair bench-fair-diff bench-fair-refresh \
+        bench-prefix bench-prefix-diff bench-prefix-refresh fmt artifacts clean
 
 build:
 	cargo build --release
@@ -83,6 +84,24 @@ bench-fair-diff: bench-fair
 
 bench-fair-refresh:
 	cargo run --release --bin trail-serve -- fair --out benchmarks/BENCH_fair.json
+
+# Prefix-cache grid (docs/prefix_cache.md): agentic/RAG prefix-sharing
+# workloads x sharing factor x {least-work, affinity} dispatch. Run
+# twice and `cmp` byte-for-byte — the hard determinism gate for the
+# radix trie, refcounted charging, and cache-affinity dispatch.
+bench-prefix:
+	cargo run --release --bin trail-serve -- prefix --out BENCH_prefix.json
+	cargo run --release --bin trail-serve -- prefix --out BENCH_prefix.run2.json
+	cmp BENCH_prefix.json BENCH_prefix.run2.json
+	rm -f BENCH_prefix.run2.json
+
+# Diff against the checked-in prefix baseline (advisory in CI, same
+# libm caveat as bench-sim-diff).
+bench-prefix-diff: bench-prefix
+	diff -u benchmarks/BENCH_prefix.json BENCH_prefix.json
+
+bench-prefix-refresh:
+	cargo run --release --bin trail-serve -- prefix --out benchmarks/BENCH_prefix.json
 
 fmt:
 	cargo fmt

@@ -33,11 +33,24 @@ behind ``max_starve_age_s``, and the ``trail.simlab.fair/v1`` report
 schedule, and op counter is bit-identical to the fairness-free engine,
 which is how BENCH_seed/BENCH_sched stay byte-frozen.
 
+The prefix-sharing KV cache (docs/prefix_cache.md) is mirrored at the
+token level: the refcounted block trie with its running ``savings``
+counter (shared blocks charged once), attach-on-alloc with the
+one-chunk-short cap, prefix-aware admission need, the
+``victim_rank`` sharing bonus in every victim scan (OOM + preemption,
+both selectors), cache-affinity dispatch with exact per-replica trie
+queries, and the agentic/RAG template trace generators — so
+``benchmarks/BENCH_prefix.json`` (``trail.simlab.prefix/v1``) is pinned
+cross-language exactly like the other grids. With the prefix cache off
+(every pre-existing scenario) all of it is inert and the frozen
+baselines stay byte-identical.
+
 Usage:
     cd python && python3 simref.py sweep --out ../benchmarks/BENCH_seed.json
     cd python && python3 simref.py sweep --selector reference --out /tmp/x.json
     cd python && python3 simref.py sched --out ../benchmarks/BENCH_sched.json
     cd python && python3 simref.py fair --out ../benchmarks/BENCH_fair.json
+    cd python && python3 simref.py prefix --out ../benchmarks/BENCH_prefix.json
 """
 
 import math
@@ -64,6 +77,19 @@ COST_READOUT = 0.3e-3
 
 WAITING, PREFILLING, RUNNING, PREEMPTED, DISCARDED, FINISHED = range(6)
 
+# Prefix cache (rust/src/coordinator/kv.rs + engine.rs,
+# docs/prefix_cache.md): sharing granularity, the per-shared-token rank
+# bonus that makes cheap discards sort toward the victim end, and the
+# template-stream salt of the prefix trace generator
+# (rust/src/workload/gen.rs).
+PREFIX_BLOCK = 16
+PREFIX_VICTIM_BONUS_PER_TOKEN = 0.25
+PREFIX_TEMPLATE_SALT = 0x9E3779B97F4A7C15
+
+# Cache-affinity dispatch (rust/src/coordinator/dispatch.rs).
+AFFINITY_MIN_MATCH = PREFIX_BLOCK
+AFFINITY_QUEUE_IMBALANCE = 4
+
 
 class Req:
     __slots__ = (
@@ -71,12 +97,16 @@ class Req:
         "generated", "kv_written", "initial_pred", "pred_remaining",
         "arrival", "first_token_at", "finished_at", "wait_started",
         "starve_level", "n_preemptions", "n_discards", "n_migrations",
+        "prompt",
     )
 
-    def __init__(self, rid, plen, n_out, tenant, arrival):
+    def __init__(self, rid, plen, n_out, tenant, arrival, prompt=None):
         self.rid = rid
         self.plen = plen
         self.n_out = n_out
+        # Prompt token ids — only prefix traces carry them (the engine
+        # reads token values only through the prefix trie).
+        self.prompt = prompt
         self.tenant = tenant
         self.phase = WAITING
         self.slot = None
@@ -466,16 +496,36 @@ class RankIndex:
 
 
 class Kv:
-    """rust/src/coordinator/kv.rs"""
+    """rust/src/coordinator/kv.rs (incl. the prefix-sharing trie).
+
+    The Rust trie stores refcounted block nodes keyed by exact content
+    under a parent chain, so a node's identity is its full token prefix.
+    The mirror keys blocks by that prefix directly —
+    ``tuple(prompt[:(b+1)*PREFIX_BLOCK]) -> refcount`` — which is
+    observably identical: same match lengths, same refcounts, same
+    running ``savings``. ``alloc`` is a linear first-free scan, matching
+    the Rust min-heap's lowest-free-index order."""
 
     def __init__(self, n_slots, pool_tokens):
         self.n_slots = n_slots
         self.pool_tokens = pool_tokens
         self.slots = [None] * n_slots
         self.charged = [0] * n_slots
+        # Prefix cache state (inert unless enable_prefix_cache ran).
+        self.prefix_on = False
+        self.trie = {}                  # chain tuple -> refcount
+        self.savings = 0                # Σ (refcount-1) * PREFIX_BLOCK
+        self.prompts = [None] * n_slots
+        self.nblocks = [0] * n_slots    # published full blocks per slot
+        self.prefix_hits = 0
+        self.reused_tokens = 0
+
+    def enable_prefix_cache(self):
+        assert all(s is None for s in self.slots), "prefix cache on a non-empty pool"
+        self.prefix_on = True
 
     def used_tokens(self):
-        return sum(self.charged)
+        return sum(self.charged) - self.savings
 
     def free_slot_available(self):
         return any(s is None for s in self.slots)
@@ -488,15 +538,80 @@ class Kv:
                 return i
         return None
 
+    # --- prefix trie (KvManager::{set_prompt, shared_prefix_len,
+    #     shared_tokens} + PrefixIndex::{add_ref, drop_ref, match_len}) ---
+
+    def _block_key(self, slot, b):
+        return tuple(self.prompts[slot][: (b + 1) * PREFIX_BLOCK])
+
+    def _add_ref(self, key):
+        n = self.trie.get(key)
+        if n is None:
+            self.trie[key] = 1
+        else:
+            self.trie[key] = n + 1
+            self.savings += PREFIX_BLOCK
+
+    def _drop_ref(self, key):
+        n = self.trie[key]
+        if n > 1:
+            self.trie[key] = n - 1
+            self.savings -= PREFIX_BLOCK
+        else:
+            del self.trie[key]
+
+    def set_prompt(self, slot, rid, prompt):
+        assert self.slots[slot] == rid, "slot not owned"
+        if not self.prefix_on:
+            return
+        assert self.nblocks[slot] == 0, "set_prompt on a slot with live blocks"
+        self.prompts[slot] = list(prompt)
+
+    def shared_prefix_len(self, prompt):
+        if not self.prefix_on:
+            return 0
+        matched = 0
+        while (matched + 1) * PREFIX_BLOCK <= len(prompt):
+            if tuple(prompt[: (matched + 1) * PREFIX_BLOCK]) not in self.trie:
+                break
+            matched += 1
+        return matched * PREFIX_BLOCK
+
+    def shared_tokens(self, slot):
+        if not self.prefix_on:
+            return 0
+        n = 0
+        for b in range(self.nblocks[slot]):
+            if self.trie[self._block_key(slot, b)] >= 2:
+                n += 1
+        return n * PREFIX_BLOCK
+
+    def _sync_blocks(self, slot, tokens):
+        covered = min(tokens, len(self.prompts[slot]))
+        want = covered // PREFIX_BLOCK
+        while self.nblocks[slot] > want:
+            self.nblocks[slot] -= 1
+            self._drop_ref(self._block_key(slot, self.nblocks[slot]))
+        while self.nblocks[slot] < want:
+            self._add_ref(self._block_key(slot, self.nblocks[slot]))
+            self.nblocks[slot] += 1
+
     def charge(self, slot, rid, tokens):
         assert self.slots[slot] == rid, "slot not owned"
         assert tokens <= MAX_SEQ
         self.charged[slot] = tokens
+        if self.prefix_on:
+            self._sync_blocks(slot, tokens)
 
     def free(self, slot, rid):
         assert self.slots[slot] == rid, "slot not owned"
         self.slots[slot] = None
         self.charged[slot] = 0
+        if self.prefix_on:
+            while self.nblocks[slot] > 0:
+                self.nblocks[slot] -= 1
+                self._drop_ref(self._block_key(slot, self.nblocks[slot]))
+            self.prompts[slot] = None
 
     def fits(self, extra):
         return self.used_tokens() + extra <= self.pool_tokens
@@ -508,10 +623,13 @@ class Engine:
     refinement per token — OraclePredictor{noise, refine_exact, seed})."""
 
     def __init__(self, policy, slots, pool_tokens, noise=0.4, pred_seed=7,
-                 max_iterations=2_000_000, selector="indexed", fair=NEUTRAL_FAIR):
+                 max_iterations=2_000_000, selector="indexed", fair=NEUTRAL_FAIR,
+                 prefix_cache=False):
         self.policy = policy
         self.slots = slots
         self.kv = Kv(slots, pool_tokens)
+        if prefix_cache:
+            self.kv.enable_prefix_cache()
         self.noise = noise
         self.pred_rng = SplitMix64(pred_seed)
         self.now = 0.0
@@ -832,7 +950,51 @@ class Engine:
             self.m_migrations += r.n_migrations
             self.finished_rids.append(r.rid)
 
+    # --- prefix-aware victim ranking (ServingEngine::victim_rank) ---
+    def victim_rank(self, r, base):
+        """Bias eviction toward residents whose KV is mostly shared —
+        their discard frees little real memory but costs little to
+        redo, since the shared blocks stay attachable. Identity when
+        the prefix cache is off, so legacy benches see exact ranks."""
+        if not self.kv.prefix_on:
+            return base
+        if r.slot is None:
+            return base
+        shared = self.kv.shared_tokens(r.slot)
+        if shared == 0:
+            return base
+        return (base[0], base[1] + PREFIX_VICTIM_BONUS_PER_TOKEN * shared,
+                base[2], base[3])
+
+    def oom_victim_indexed(self, reqs):
+        """ServingEngine::oom_victim_indexed: ops-free scan of the live
+        resident-index cache (no pop machinery — selector_ops stays
+        exactly what the frozen benches recorded), preferring
+        preemptable victims, strict max by prefix-adjusted rank."""
+        c = policy_c(self.policy)
+        best_pre = None
+        best_any = None
+        for rid, (cached, _ver) in self.res_idx.live.items():
+            i = self.rid_pos[rid]
+            r = reqs[i]
+            rk = self.victim_rank(r, cached)
+            if best_any is None or rk > best_any[0]:
+                best_any = (rk, i)
+            if r.preemptable(c) and (best_pre is None or rk > best_pre[0]):
+                best_pre = (rk, i)
+        pick = best_pre if best_pre is not None else best_any
+        return None if pick is None else pick[1]
+
     def resolve_oom(self, reqs):
+        if self.kv.fits(0):
+            return
+        if self.selector == "indexed":
+            while not self.kv.fits(0):
+                vi = self.oom_victim_indexed(reqs)
+                if vi is None:
+                    break
+                self.discard_victim(reqs[vi], in_res_idx=True)
+            return
         c = policy_c(self.policy)
         while not self.kv.fits(0):
             cands = [
@@ -848,7 +1010,7 @@ class Engine:
                 ]
             if not cands:
                 break
-            _, r = max(cands, key=lambda t: self.rank_of(t[1]))
+            _, r = max(cands, key=lambda t: self.victim_rank(t[1], self.rank_of(t[1])))
             self.discard_victim(r, in_res_idx=True)
 
     def discard_victim(self, r, in_res_idx):
@@ -960,11 +1122,66 @@ class Engine:
         self.apply_phase_transitions(reqs, chosen, now)
         return target
 
+    # --- prefix-aware admission (ServingEngine::{admission_need,
+    #     attachable_prefix, alloc_slot}) ---
+    def attachable_prefix(self, r):
+        """Whole shared blocks attachable at admission, capped one token
+        short of the prefill target (rounded down to a block) so the
+        first-token readout still has work to do."""
+        if not self.kv.prefix_on:
+            return 0
+        matched = self.kv.shared_prefix_len(r.prompt)
+        cap = (r.prefill_target() - 1) // PREFIX_BLOCK * PREFIX_BLOCK
+        return min(matched, cap)
+
+    def admission_need(self, r):
+        return min(r.prefill_target() - self.attachable_prefix(r), MAX_SEQ)
+
+    def alloc_slot(self, r):
+        slot = self.kv.alloc(r.rid)
+        assert slot is not None
+        r.slot = slot
+        r.prefilled = 0
+        r.kv_written = 0
+        if self.kv.prefix_on:
+            self.kv.set_prompt(slot, r.rid, r.prompt)
+            attach = self.attachable_prefix(r)
+            if attach > 0:
+                r.prefilled = attach
+                r.kv_written = attach
+                self.kv.charge(slot, r.rid, attach)
+                self.kv.prefix_hits += 1
+                self.kv.reused_tokens += attach
+        self.res_idx.insert(r.rid, self.rank_of(r))
+
+    def preempt_victim_prefix(self, reqs, idx, chosen, c):
+        """Prefix-aware admission victim: live-cache scan with the
+        shared-token bonus, same Greater/EVICT_MARGIN gates as the pop
+        path. Only reached when the prefix cache is on."""
+        best = None
+        for rid, (cached, _ver) in self.res_idx.live.items():
+            i = self.rid_pos[rid]
+            r = reqs[i]
+            if chosen[i] or r.phase == FINISHED or not r.preemptable(c):
+                continue
+            rk = self.victim_rank(r, cached)
+            if best is None or rk > best[0]:
+                best = (rk, i)
+        if best is None:
+            return None
+        vr, vi = best
+        cr = self.rank_of(reqs[idx])
+        if not vr > cr:
+            return None
+        if vr[0] == 1 and cr[0] == 1 and vr[1] - cr[1] < EVICT_MARGIN:
+            return None
+        return vi
+
     def ensure_resident(self, reqs, idx, chosen):
         if reqs[idx].slot is not None:
             return True
         c = policy_c(self.policy)
-        need = min(reqs[idx].prefill_target(), MAX_SEQ)
+        need = self.admission_need(reqs[idx])
         while True:
             have_slot = self.kv.free_slot_available()
             have_mem = self.kv.fits(min(need, CHUNK * 2))
@@ -982,26 +1199,21 @@ class Engine:
             ]
             if not victims:
                 return False
-            _, vreq = max(victims, key=lambda t: self.rank_of(t[1]))
-            vr = self.rank_of(vreq)
+            _, vreq = max(victims, key=lambda t: self.victim_rank(t[1], self.rank_of(t[1])))
+            vr = self.victim_rank(vreq, self.rank_of(vreq))
             cr = self.rank_of(reqs[idx])
             if not vr > cr:
                 return False
             if vr[0] == 1 and cr[0] == 1 and vr[1] - cr[1] < EVICT_MARGIN:
                 return False
             self.discard_victim(vreq, in_res_idx=True)
-        slot = self.kv.alloc(reqs[idx].rid)
-        assert slot is not None
-        reqs[idx].slot = slot
-        reqs[idx].prefilled = 0
-        reqs[idx].kv_written = 0
-        self.res_idx.insert(reqs[idx].rid, self.rank_of(reqs[idx]))
+        self.alloc_slot(reqs[idx])
         return True
 
     def ensure_resident_indexed(self, reqs, idx, chosen):
         if reqs[idx].slot is not None:
             return True
-        need = min(reqs[idx].prefill_target(), MAX_SEQ)
+        need = self.admission_need(reqs[idx])
         while True:
             have_slot = self.kv.free_slot_available()
             have_mem = self.kv.fits(min(need, CHUNK * 2))
@@ -1009,6 +1221,17 @@ class Engine:
                 break
             if not policy_preemptive(self.policy):
                 return False
+            if self.kv.prefix_on:
+                # Prefix-adjusted ranks reorder victims relative to the
+                # raw index order, so the pop machinery can't serve them;
+                # scan the live cache instead (same victim the Rust
+                # preempt_victim_prefix picks).
+                c = policy_c(self.policy)
+                vi = self.preempt_victim_prefix(reqs, idx, chosen, c)
+                if vi is None:
+                    return False
+                self.discard_victim(reqs[vi], in_res_idx=True)
+                continue
             # Worst-ranked eligible victim: pop the resident max index;
             # chosen entries are skipped, a locked entry means no
             # unlocked resident remains (locked sorts last max-first).
@@ -1047,12 +1270,7 @@ class Engine:
             vreq = reqs[self.rid_pos[victim[0][3]]]
             # The victim was already popped off the resident index.
             self.discard_victim(vreq, in_res_idx=False)
-        slot = self.kv.alloc(reqs[idx].rid)
-        assert slot is not None
-        reqs[idx].slot = slot
-        reqs[idx].prefilled = 0
-        reqs[idx].kv_written = 0
-        self.res_idx.insert(reqs[idx].rid, self.rank_of(reqs[idx]))
+        self.alloc_slot(reqs[idx])
         return True
 
 
@@ -1091,6 +1309,7 @@ class TenantGen:
     off the master, so skipping token draws does not perturb anything."""
 
     def __init__(self, seed, mu_shift):
+        self.seed = seed
         self.master = SplitMix64(seed)
         self.w = replace(WORKLOAD, lognormal_mu=WORKLOAD.lognormal_mu + mu_shift)
 
@@ -1106,28 +1325,95 @@ class TenantGen:
         plen = rng.next_range(self.w.min_prompt, self.w.max_prompt)
         return plen, n_out
 
+    # --- prefix-sharing workload (WorkloadGen::{prefix_templates,
+    #     next_prefix_request}, rust/src/workload/gen.rs) ---
+
+    def prefix_templates(self, spec):
+        """Templates drawn from a salted stream derived from the tenant
+        seed — zero draws on the master, so mixing prefix and legacy
+        tenants in one trace perturbs nothing."""
+        n_templates, prefix_len = spec[0], spec[1]
+        rng = SplitMix64(self.seed ^ PREFIX_TEMPLATE_SALT)
+        lo, hi = MODEL.first_content_id, MODEL.vocab - 1
+        out = []
+        for _ in range(n_templates):
+            t = [MODEL.bos_id]
+            for _ in range(prefix_len - 1):
+                t.append(rng.next_range(lo, hi))
+            out.append(t)
+        return out
+
+    def next_prefix_request(self, spec, templates):
+        """Unlike next_request there is no observed_class draw; the
+        draw order on the child stream is output-len, share coin,
+        template index, tail length, then token draws. Response draws
+        follow on the discarded child stream — skipping them is exact."""
+        _n_templates, prefix_len, share_p, tail_min, tail_max = spec
+        rng = self.master.split()
+        z = normal_from_uniform(rng.next_f64())
+        x = math.exp(self.w.lognormal_mu + self.w.lognormal_sigma * z)
+        n = int(x + 0.5)
+        n_out = min(max(n, self.w.min_output), self.w.max_output)
+        shared = rng.next_f64() < share_p
+        t_idx = rng.next_range(0, len(templates) - 1)
+        tail_len = rng.next_range(tail_min, tail_max)
+        lo, hi = MODEL.first_content_id, MODEL.vocab - 1
+        if shared:
+            prompt = list(templates[t_idx])
+        else:
+            prompt = [MODEL.bos_id]
+            for _ in range(prefix_len - 1):
+                prompt.append(rng.next_range(lo, hi))
+        for _ in range(tail_len):
+            prompt.append(rng.next_range(lo, hi))
+        # Prompt + output must fit one slot (gen.rs clamps the same way:
+        # prefix prompts outgrow the legacy max_prompt bound).
+        n_out = max(min(n_out, MAX_SEQ - len(prompt)), 1)
+        return len(prompt), n_out, prompt
+
+
+def prefix_agentic(share_p):
+    """PrefixSpec::agentic — few long templates, short tails."""
+    return (4, 96, share_p, 16, 48)
+
+
+def prefix_rag(share_p):
+    """PrefixSpec::rag — many medium templates, longer tails."""
+    return (16, 64, share_p, 24, 64)
+
 
 def generate_trace(tenants, n, seed):
-    """tenants: list of (rate, mu_shift, phases) — phases: [(mult, dur)]."""
+    """tenants: list of (rate, mu_shift, phases) or
+    (rate, mu_shift, phases, prefix_spec) — phases: [(mult, dur)].
+    Entries are (at, tenant, rid, plen, n_out, prompt); prompt is None
+    for legacy tenants (the co-sim never reads their token values)."""
     master = SplitMix64(seed)
     streams = []
-    for (rate, mu_shift, phases) in tenants:
+    for tenant in tenants:
+        rate, mu_shift, phases = tenant[0], tenant[1], tenant[2]
+        prefix = tenant[3] if len(tenant) > 3 else None
         spec_seed = master.next_u64()
         arr_rng = SplitMix64(master.next_u64())
         times = tenant_arrivals(rate, phases, n, arr_rng)
-        streams.append([times, TenantGen(spec_seed, mu_shift), 0])
+        gen = TenantGen(spec_seed, mu_shift)
+        templates = gen.prefix_templates(prefix) if prefix is not None else None
+        streams.append([times, gen, 0, prefix, templates])
     out = []
     while len(out) < n:
         best = None
-        for ti, (times, _, pos) in enumerate(streams):
-            at = times[pos]
+        for ti, stream in enumerate(streams):
+            at = stream[0][stream[2]]
             if best is None or at < best[0]:
                 best = (at, ti)
         at, ti = best
         stream = streams[ti]
         stream[2] += 1
-        plen, n_out = stream[1].next_request()
-        out.append((at, ti, len(out), plen, n_out))  # (at, tenant, rid, plen, n_out)
+        if stream[3] is not None:
+            plen, n_out, prompt = stream[1].next_prefix_request(stream[3], stream[4])
+        else:
+            plen, n_out = stream[1].next_request()
+            prompt = None
+        out.append((at, ti, len(out), plen, n_out, prompt))
     return out
 
 
@@ -1135,11 +1421,28 @@ def generate_trace(tenants, n, seed):
 # Driver (rust/src/sim/driver.rs)
 # ---------------------------------------------------------------------------
 
-def pick_replica(dispatch, engines, rr):
+def pick_replica(dispatch, engines, rr, prompt=None):
     if dispatch == "rr":
         return rr % len(engines)
     if dispatch == "jsq":
         return min(range(len(engines)), key=lambda i: (engines[i].live(), i))
+    if dispatch == "affinity" and prompt is not None:
+        # DispatchPolicy::pick_with_affinity — the co-sim queries the
+        # engines' tries exactly; best match wins ties by shorter queue
+        # then lower index, and loses to least-work when taking it would
+        # skew queues past the imbalance guard.
+        lens = [e.kv.shared_prefix_len(prompt) for e in engines]
+        best = None
+        for i in range(len(engines)):
+            if lens[i] < AFFINITY_MIN_MATCH:
+                continue
+            key = (lens[i], -engines[i].live(), -i)
+            if best is None or key > best[0]:
+                best = (key, i)
+        if best is not None:
+            min_queued = min(e.live() for e in engines)
+            if engines[best[1]].live() <= min_queued + AFFINITY_QUEUE_IMBALANCE:
+                return best[1]
     # least-work (unseen is always 0 on the co-sim path)
     return min(
         range(len(engines)),
@@ -1148,9 +1451,10 @@ def pick_replica(dispatch, engines, rr):
 
 
 def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, noise=0.4,
-            selector="indexed", fair=NEUTRAL_FAIR):
+            selector="indexed", fair=NEUTRAL_FAIR, prefix_cache=False):
     engines = [
-        Engine(policy, slots, pool_tokens, noise=noise, selector=selector, fair=fair)
+        Engine(policy, slots, pool_tokens, noise=noise, selector=selector, fair=fair,
+               prefix_cache=prefix_cache)
         for _ in range(replicas)
     ]
     n_total = len(trace)
@@ -1161,8 +1465,8 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
     ttft = []
     finished = 0
     stalled = [False] * replicas
-    rid_tenant = {rid: tenant for (_, tenant, rid, _, _) in trace}
-    n_tenants = max((t for (_, t, _, _, _) in trace), default=-1) + 1
+    rid_tenant = {rid: tenant for (_, tenant, rid, _, _, _) in trace}
+    n_tenants = max((t for (_, t, _, _, _, _) in trace), default=-1) + 1
     tenant_lat = [[] for _ in range(n_tenants)]
     tenant_ttft = [[] for _ in range(n_tenants)]
     tenant_slow = [[] for _ in range(n_tenants)]
@@ -1210,12 +1514,12 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
                 active = (now, i)
 
         if nxt < n_total and (active is None or trace[nxt][0] <= active[0]):
-            at, tenant, rid, plen, n_out = trace[nxt]
+            at, tenant, rid, plen, n_out, prompt = trace[nxt]
             nxt += 1
-            idx = pick_replica(dispatch, engines, rr)
+            idx = pick_replica(dispatch, engines, rr, prompt)
             rr += 1
             engines[idx].sync_clock(at)
-            engines[idx].admit(Req(rid, plen, n_out, tenant, at))
+            engines[idx].admit(Req(rid, plen, n_out, tenant, at, prompt))
             stalled[idx] = False
             continue
 
@@ -1263,6 +1567,8 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
         "tenant_ttft": tenant_ttft,
         "tenant_slow": tenant_slow,
         "max_starve": max_starve,
+        "prefix_hits": sum(e.kv.prefix_hits for e in engines),
+        "reused_tokens": sum(e.kv.reused_tokens for e in engines),
     }
 
 
@@ -1516,7 +1822,8 @@ def make_row(name, policy, dispatch, replicas, migration, seed, out,
     row = {
         "scenario": name,
         "policy": policy_name(policy),
-        "dispatch": {"rr": "round-robin", "jsq": "jsq", "lpw": "least-work"}[dispatch],
+        "dispatch": {"rr": "round-robin", "jsq": "jsq", "lpw": "least-work",
+                     "affinity": "affinity"}[dispatch],
         "replicas": replicas,
         "migration": migration,
         "n": out["n"],
@@ -1627,17 +1934,66 @@ def fair_rows():
     return rows
 
 
+# Prefix-cache sweep (rust/src/sim/scenario.rs run_prefix_sweep — keep
+# in sync): each prefix scenario kind × sharing factor × dispatch
+# (least-work vs affinity) at 2 replicas, dispatch cells paired on the
+# identical trace.
+PREFIX_SCHEMA = "trail.simlab.prefix/v1"
+PREFIX_SHARES = [0.0, 0.5, 0.9]
+PREFIX_POLICY = ("trail", 0.8)
+
+
+def prefix_scenario(kind, share):
+    spec = prefix_agentic(share) if kind == "agentic" else prefix_rag(share)
+    # (tenants, n, seed, slots, pool_frac, noise) — pool sized so the
+    # share-0 baseline saturates it while shared cells run under it
+    # (see rust/src/sim/scenario.rs prefix_scenario).
+    return ([(60.0, 0.0, [], spec)], 360, 31337, 16, 0.7, 0.4)
+
+
+def prefix_rows():
+    rows = []
+    for kind in ("agentic", "rag"):
+        for share in PREFIX_SHARES:
+            tenants, n, seed, slots, pool_frac, noise = prefix_scenario(kind, share)
+            trace = generate_trace(tenants, n, seed)
+            pool_tokens = int((slots * MAX_SEQ) * pool_frac)
+            for dispatch in ("lpw", "affinity"):
+                out = run_sim(trace, PREFIX_POLICY, 2, dispatch, True, slots,
+                              pool_tokens, noise, prefix_cache=True)
+                row = make_row("prefix-" + kind, PREFIX_POLICY, dispatch, 2, True,
+                               seed, out)
+                row["prefix"] = {
+                    "share_factor": share,
+                    "prefix_hits": out["prefix_hits"],
+                    "reused_tokens": out["reused_tokens"],
+                }
+                rows.append(row)
+    return rows
+
+
 DEFAULT_POLICIES = [("fcfs",), ("trail", 1.0), ("trail", 0.8)]
 
 
 def main(argv):
-    if not argv or argv[0] not in ("sweep", "sched", "fair"):
+    if not argv or argv[0] not in ("sweep", "sched", "fair", "prefix"):
         print(__doc__)
         return 2
     out_path = None
     if "--out" in argv:
         out_path = argv[argv.index("--out") + 1]
-    if argv[0] == "fair":
+    if argv[0] == "prefix":
+        rows = prefix_rows()
+        text = report_json(rows, schema=PREFIX_SCHEMA)
+        for row in rows:
+            pr = row["prefix"]
+            print(
+                f"{row['scenario']:>14} share={pr['share_factor']:.1f} "
+                f"{row['dispatch']:>10} ttft={row['mean_ttft_s']:.3f}s "
+                f"kv_peak={row['kv_peak_tokens']} hits={pr['prefix_hits']} "
+                f"reused={pr['reused_tokens']} discard={row['discards']}"
+            )
+    elif argv[0] == "fair":
         rows = fair_rows()
         text = report_json(rows, schema=FAIR_SCHEMA)
         for row in rows:

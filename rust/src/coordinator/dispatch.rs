@@ -24,6 +24,7 @@
 //! the [`JobSink`] trait; `server::HttpServer::bind_with_sink` accepts
 //! any of them.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -42,11 +43,36 @@ use crate::coordinator::source::ChannelSource;
 /// published status lags.
 pub const DEFAULT_UNSEEN_JOB_ESTIMATE: f64 = 128.0;
 
+/// Minimum resident prefix match (tokens) for cache-affinity routing to
+/// honor the match: one whole prefix block — anything shorter attaches
+/// nothing (`KvManager::PREFIX_BLOCK` granularity), so affinity buys
+/// nothing over load balancing.
+pub const AFFINITY_MIN_MATCH: usize = crate::coordinator::kv::PREFIX_BLOCK;
+
+/// Queue-imbalance guard for cache-affinity routing: if the
+/// best-matching replica's queue exceeds the pool minimum by more than
+/// this many jobs, affinity is abandoned for this job and the pick falls
+/// back to least-predicted-work. Keeps a hot shared prefix from turning
+/// one replica into a convoy while the others idle.
+pub const AFFINITY_QUEUE_IMBALANCE: u64 = 4;
+
+/// Dispatches after which a dispatch-side affinity hint
+/// ([`AffinityTracker`]) is considered stale: the replica has since
+/// churned enough residents that the prefix is likely evicted, so the
+/// hint no longer overrides load balancing.
+pub const AFFINITY_TTL_DISPATCHES: u64 = 4096;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DispatchPolicy {
     RoundRobin,
     JoinShortestQueue,
     LeastPredictedWork,
+    /// Route to the replica holding the longest matching prompt prefix
+    /// (docs/prefix_cache.md); falls back to least-predicted-work when
+    /// no replica matches at least [`AFFINITY_MIN_MATCH`] tokens or the
+    /// best match is more than [`AFFINITY_QUEUE_IMBALANCE`] jobs above
+    /// the shortest queue.
+    CacheAffinity,
 }
 
 impl DispatchPolicy {
@@ -55,6 +81,7 @@ impl DispatchPolicy {
             DispatchPolicy::RoundRobin => "round-robin",
             DispatchPolicy::JoinShortestQueue => "jsq",
             DispatchPolicy::LeastPredictedWork => "least-work",
+            DispatchPolicy::CacheAffinity => "affinity",
         }
     }
 
@@ -65,10 +92,15 @@ impl DispatchPolicy {
             "least-work" | "lpw" | "least-predicted-work" => {
                 Some(DispatchPolicy::LeastPredictedWork)
             }
+            "affinity" | "cache-affinity" => Some(DispatchPolicy::CacheAffinity),
             _ => None,
         }
     }
 
+    /// The load-balancing policies — the frozen `BENCH_fair.json` fleet
+    /// grid iterates exactly this set, so [`DispatchPolicy::CacheAffinity`]
+    /// is deliberately *not* here (it gets its own grid in
+    /// `BENCH_prefix.json`).
     pub fn all() -> [DispatchPolicy; 3] {
         [
             DispatchPolicy::RoundRobin,
@@ -79,6 +111,9 @@ impl DispatchPolicy {
 
     /// Choose a replica. Pure and deterministic: ties break to the
     /// lowest index, round-robin is driven by the caller's counter.
+    /// Cache-affinity without match information (this overload) is just
+    /// least-predicted-work; callers with per-replica prefix match
+    /// lengths use [`DispatchPolicy::pick_with_affinity`].
     pub fn pick(&self, snaps: &[ReplicaSnapshot], rr_counter: u64, unseen_estimate: f64) -> usize {
         assert!(!snaps.is_empty(), "pick over an empty pool");
         match self {
@@ -89,7 +124,7 @@ impl DispatchPolicy {
                 .min_by_key(|(i, s)| (s.queued, *i))
                 .map(|(i, _)| i)
                 .unwrap(),
-            DispatchPolicy::LeastPredictedWork => snaps
+            DispatchPolicy::LeastPredictedWork | DispatchPolicy::CacheAffinity => snaps
                 .iter()
                 .enumerate()
                 .min_by(|(i, a), (j, b)| {
@@ -101,6 +136,42 @@ impl DispatchPolicy {
                 .map(|(i, _)| i)
                 .unwrap(),
         }
+    }
+
+    /// [`DispatchPolicy::pick`] with per-replica prompt prefix match
+    /// lengths (tokens). Only cache-affinity reads them: it routes to
+    /// the longest match ≥ [`AFFINITY_MIN_MATCH`] (ties → shorter queue,
+    /// then lowest index) unless that replica's queue is more than
+    /// [`AFFINITY_QUEUE_IMBALANCE`] jobs above the pool minimum, in
+    /// which case — like the no-match case — it load-balances via
+    /// least-predicted-work. Every other policy ignores `match_lens`.
+    pub fn pick_with_affinity(
+        &self,
+        snaps: &[ReplicaSnapshot],
+        match_lens: &[usize],
+        rr_counter: u64,
+        unseen_estimate: f64,
+    ) -> usize {
+        if *self != DispatchPolicy::CacheAffinity {
+            return self.pick(snaps, rr_counter, unseen_estimate);
+        }
+        assert_eq!(snaps.len(), match_lens.len(), "one match length per replica");
+        assert!(!snaps.is_empty(), "pick over an empty pool");
+        let min_queued = snaps.iter().map(|s| s.queued).min().unwrap();
+        let best = (0..snaps.len())
+            .filter(|&i| match_lens[i] >= AFFINITY_MIN_MATCH)
+            .max_by(|&a, &b| {
+                match_lens[a]
+                    .cmp(&match_lens[b])
+                    .then(snaps[b].queued.cmp(&snaps[a].queued))
+                    .then(b.cmp(&a))
+            });
+        if let Some(i) = best {
+            if snaps[i].queued <= min_queued + AFFINITY_QUEUE_IMBALANCE {
+                return i;
+            }
+        }
+        DispatchPolicy::LeastPredictedWork.pick(snaps, rr_counter, unseen_estimate)
     }
 }
 
@@ -136,6 +207,77 @@ impl ReplicaSnapshot {
     }
 }
 
+/// Dispatch-side prefix-affinity hints for the threaded [`ReplicaPool`].
+///
+/// The co-sim `SimDriver` queries each engine's trie synchronously for
+/// exact per-replica match lengths; the threaded pool cannot (replica
+/// state lives on its own thread), so it remembers where it last sent
+/// each leading prompt block: FNV-1a hash of the first
+/// [`AFFINITY_MIN_MATCH`] tokens → (replica, dispatch sequence). A hint
+/// older than [`AFFINITY_TTL_DISPATCHES`] dispatches is treated as
+/// evicted. This is an approximation — a collision or a stale hint costs
+/// a suboptimal route, never correctness — and is covered by the
+/// two-replica e2e in `rust/tests/dispatch_pool.rs`.
+pub struct AffinityTracker {
+    map: Mutex<HashMap<u64, (usize, u64)>>,
+    seq: AtomicU64,
+}
+
+impl AffinityTracker {
+    pub fn new() -> AffinityTracker {
+        AffinityTracker {
+            map: Mutex::new(HashMap::new()),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// FNV-1a over the first whole block; `None` for prompts too short
+    /// to ever share a block.
+    fn block_key(prompt: &[i32]) -> Option<u64> {
+        if prompt.len() < AFFINITY_MIN_MATCH {
+            return None;
+        }
+        let mut h: u64 = 0xcbf29ce484222325;
+        for t in &prompt[..AFFINITY_MIN_MATCH] {
+            for b in t.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        Some(h)
+    }
+
+    /// Per-replica match-length estimate for `prompt`: one block for the
+    /// replica a fresh hint points at, zero elsewhere.
+    pub fn match_lens(&self, prompt: &[i32], n_replicas: usize) -> Vec<usize> {
+        let mut lens = vec![0usize; n_replicas];
+        let Some(key) = Self::block_key(prompt) else { return lens };
+        let now = self.seq.load(Ordering::Relaxed);
+        let map = self.map.lock().unwrap();
+        if let Some(&(replica, at)) = map.get(&key) {
+            if replica < n_replicas && now.saturating_sub(at) <= AFFINITY_TTL_DISPATCHES {
+                lens[replica] = AFFINITY_MIN_MATCH;
+            }
+        }
+        lens
+    }
+
+    /// Record that `prompt`'s leading block was just dispatched to
+    /// `replica` (refreshing any previous hint).
+    pub fn note(&self, prompt: &[i32], replica: usize) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(key) = Self::block_key(prompt) {
+            self.map.lock().unwrap().insert(key, (replica, seq));
+        }
+    }
+}
+
+impl Default for AffinityTracker {
+    fn default() -> Self {
+        AffinityTracker::new()
+    }
+}
+
 /// Anything a front-end can hand an [`OnlineJob`] to: a single engine's
 /// channel sender, or a [`ReplicaPool`].
 pub trait JobSink: Send + Sync {
@@ -163,6 +305,9 @@ pub struct ReplicaPool {
     policy: DispatchPolicy,
     rr: AtomicU64,
     unseen_estimate: f64,
+    /// Prefix-affinity hints, consulted only under
+    /// [`DispatchPolicy::CacheAffinity`].
+    affinity: AffinityTracker,
 }
 
 impl ReplicaPool {
@@ -204,6 +349,7 @@ impl ReplicaPool {
             policy,
             rr: AtomicU64::new(0),
             unseen_estimate: DEFAULT_UNSEEN_JOB_ESTIMATE,
+            affinity: AffinityTracker::new(),
         }
     }
 
@@ -240,7 +386,15 @@ impl ReplicaPool {
     pub fn submit(&self, job: OnlineJob) -> Result<usize> {
         let snaps = self.snapshots();
         let rr = self.rr.fetch_add(1, Ordering::Relaxed);
-        let idx = self.policy.pick(&snaps, rr, self.unseen_estimate);
+        let idx = if self.policy == DispatchPolicy::CacheAffinity {
+            let lens = self.affinity.match_lens(&job.spec.prompt, snaps.len());
+            self.policy.pick_with_affinity(&snaps, &lens, rr, self.unseen_estimate)
+        } else {
+            self.policy.pick(&snaps, rr, self.unseen_estimate)
+        };
+        if self.policy == DispatchPolicy::CacheAffinity {
+            self.affinity.note(&job.spec.prompt, idx);
+        }
         let tx = self.replicas[idx]
             .tx
             .lock()
@@ -334,6 +488,76 @@ mod tests {
             assert_eq!(DispatchPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(DispatchPolicy::parse("rr"), Some(DispatchPolicy::RoundRobin));
+        assert_eq!(
+            DispatchPolicy::parse("affinity"),
+            Some(DispatchPolicy::CacheAffinity)
+        );
+        assert_eq!(DispatchPolicy::parse(DispatchPolicy::CacheAffinity.name()), {
+            Some(DispatchPolicy::CacheAffinity)
+        });
         assert_eq!(DispatchPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn all_stays_at_the_frozen_fair_grid_set() {
+        // BENCH_fair.json's fleet grid iterates all(); CacheAffinity must
+        // never leak into it or the frozen bytes move.
+        assert!(!DispatchPolicy::all().contains(&DispatchPolicy::CacheAffinity));
+    }
+
+    #[test]
+    fn affinity_routes_to_longest_match() {
+        let p = DispatchPolicy::CacheAffinity;
+        let snaps = [snap(3, 0, 100.0), snap(3, 0, 100.0), snap(3, 0, 100.0)];
+        assert_eq!(p.pick_with_affinity(&snaps, &[0, 16, 48], 0, 64.0), 2);
+        // Tie on match → shorter queue, then lowest index.
+        let snaps = [snap(5, 0, 0.0), snap(2, 0, 0.0), snap(2, 0, 0.0)];
+        assert_eq!(p.pick_with_affinity(&snaps, &[32, 32, 32], 0, 64.0), 1);
+    }
+
+    #[test]
+    fn affinity_falls_back_on_no_match_or_imbalance() {
+        let p = DispatchPolicy::CacheAffinity;
+        // Sub-block matches count as nothing: least-work fallback.
+        let snaps = [snap(2, 0, 500.0), snap(2, 0, 120.0)];
+        assert_eq!(p.pick_with_affinity(&snaps, &[8, 0], 0, 64.0), 1);
+        // Matching replica too far above the shortest queue: fallback.
+        let snaps = [snap(0, 0, 10.0), snap(AFFINITY_QUEUE_IMBALANCE + 1, 0, 900.0)];
+        assert_eq!(p.pick_with_affinity(&snaps, &[0, 64], 0, 64.0), 0);
+        // Inside the imbalance band the match still wins.
+        let snaps = [snap(0, 0, 10.0), snap(AFFINITY_QUEUE_IMBALANCE, 0, 900.0)];
+        assert_eq!(p.pick_with_affinity(&snaps, &[0, 64], 0, 64.0), 1);
+    }
+
+    #[test]
+    fn non_affinity_policies_ignore_match_lens() {
+        let snaps = [snap(4, 0, 400.0), snap(1, 0, 50.0)];
+        for p in DispatchPolicy::all() {
+            assert_eq!(
+                p.pick_with_affinity(&snaps, &[64, 0], 3, 64.0),
+                p.pick(&snaps, 3, 64.0)
+            );
+        }
+    }
+
+    #[test]
+    fn tracker_remembers_and_expires_hints() {
+        let t = AffinityTracker::new();
+        let prompt: Vec<i32> = (0..32).collect();
+        assert_eq!(t.match_lens(&prompt, 2), vec![0, 0]);
+        t.note(&prompt, 1);
+        assert_eq!(t.match_lens(&prompt, 2), vec![0, AFFINITY_MIN_MATCH]);
+        // Different leading block → no hint.
+        let other: Vec<i32> = (100..132).collect();
+        assert_eq!(t.match_lens(&other, 2), vec![0, 0]);
+        // Short prompts can never match a whole block.
+        let short: Vec<i32> = (0..8).collect();
+        t.note(&short, 0);
+        assert_eq!(t.match_lens(&short, 2), vec![0, 0]);
+        // TTL: push the dispatch sequence past the horizon.
+        for _ in 0..=AFFINITY_TTL_DISPATCHES {
+            t.note(&other, 0);
+        }
+        assert_eq!(t.match_lens(&prompt, 2), vec![0, 0]);
     }
 }

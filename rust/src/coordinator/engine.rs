@@ -113,6 +113,13 @@ pub struct ServeConfig {
     /// schedules, and selector op counters — bit-identical to the
     /// fairness-free engine.
     pub fairness: FairnessConfig,
+    /// Prefix-sharing KV cache (docs/prefix_cache.md): shared prompt
+    /// blocks are deduplicated across residents, admissions attach
+    /// already-resident prefixes instead of re-prefilling them, and
+    /// victim ranking prefers cheap (widely shared) discards. Off by
+    /// default — the engine is then bit-identical to the strict
+    /// per-request accounting model.
+    pub prefix_cache: bool,
 }
 
 impl ServeConfig {
@@ -126,9 +133,21 @@ impl ServeConfig {
             clock: ClockSpec::Wall,
             max_iterations: 0,
             fairness: FairnessConfig::neutral(),
+            prefix_cache: false,
         }
     }
 }
+
+/// Victim-rank shaping with the prefix cache on: every token a victim
+/// shares with another resident is nearly free to discard (the blocks
+/// stay resident for the co-owners and re-attach on resume), so shared
+/// tokens push a resident toward the front of the victim order. The
+/// weight is in rank-key units (predicted remaining tokens) per shared
+/// token: 0.25 lets a fully-shared 128-token template (+32 key units)
+/// outweigh typical sub-bin rank gaps without jumping policy tiers.
+/// With nothing shared the adjustment is exactly zero — victim choice
+/// is then bit-identical to the prefix-free engine.
+pub const PREFIX_VICTIM_BONUS_PER_TOKEN: f64 = 0.25;
 
 /// Dense rid → position map for the engine's request vec, replacing the
 /// per-step `HashMap` rebuild the indexed selector used to pay
@@ -354,7 +373,10 @@ impl<B: ModelBackend> ServingEngine<B> {
         backend: B,
         predictor: Box<dyn Predictor>,
     ) -> Self {
-        let kv = KvManager::new(backend.slots(), cfg.model.max_seq, serve.pool_tokens);
+        let mut kv = KvManager::new(backend.slots(), cfg.model.max_seq, serve.pool_tokens);
+        if serve.prefix_cache {
+            kv.enable_prefix_cache();
+        }
         let clock = Clock::new(serve.clock);
         Self {
             cfg: cfg.clone(),
@@ -580,6 +602,25 @@ impl<B: ModelBackend> ServingEngine<B> {
         self.metrics.n_migrated_in += 1;
         self.publish_status();
         rid
+    }
+
+    /// Longest whole-block resident prefix of `prompt` in this
+    /// replica's trie (0 when the prefix cache is off) — the affinity
+    /// dispatch signal.
+    pub fn shared_prefix_len(&self, prompt: &[i32]) -> usize {
+        self.kv.shared_prefix_len(prompt)
+    }
+
+    /// Prefix-cache counters: (admissions that attached ≥ 1 block,
+    /// tokens attached instead of recomputed, tokens currently saved by
+    /// sharing). Zeros when the cache is off.
+    pub fn prefix_stats(&self) -> (u64, u64, u64) {
+        (self.kv.prefix_hits, self.kv.reused_tokens, self.kv.shared_savings() as u64)
+    }
+
+    /// Net KV pool occupancy (shared blocks counted once).
+    pub fn kv_used(&self) -> usize {
+        self.kv.used_tokens()
     }
 
     /// Point-in-time engine view.
@@ -933,43 +974,162 @@ impl<B: ModelBackend> ServingEngine<B> {
         }
     }
 
+    /// Prefix-cache victim shaping: the policy rank with
+    /// [`PREFIX_VICTIM_BONUS_PER_TOKEN`] credited per token the resident
+    /// shares with another resident (a cheap discard sorts *worse*, i.e.
+    /// toward the victim end). Identity when the prefix cache is off or
+    /// nothing is shared.
+    fn victim_rank(kv: &KvManager, r: &Request, base: Rank) -> Rank {
+        if !kv.prefix_enabled() {
+            return base;
+        }
+        let Some(slot) = r.slot else { return base };
+        let shared = kv.shared_tokens(slot);
+        if shared == 0 {
+            return base;
+        }
+        Rank::new(
+            base.locked,
+            base.key + PREFIX_VICTIM_BONUS_PER_TOKEN * shared as f64,
+            base.tie,
+            base.rid,
+        )
+    }
+
     /// OOM handling (paper §4 setup: "discard jobs and recompute them
     /// once memory becomes available"): while the resident set exceeds
     /// the pool, discard the worst-ranked resident — preferring requests
     /// that are still preemptable; if all are locked, progress still
     /// requires a victim (vLLM behaves the same way: memory pressure
     /// overrides priority).
+    ///
+    /// The indexed selector resolves the victim from the resident
+    /// index's live rank cache — O(residents ≤ B) with no rank
+    /// recomputation — instead of the reference full scan over every
+    /// admitted request with a fresh `rank_aged` per candidate per
+    /// victim (the carried-over ROADMAP O(n) hot path). The cache is
+    /// exact because every rank-relevant mutation reindexes eagerly
+    /// (same invariant `select_targets_indexed` rests on), and the read
+    /// touches neither the `ops` counters nor the physical entry
+    /// stream, so the pinned bench bytes — victims, schedules, and
+    /// `selector_ops` — are unchanged. `rust/tests/rank_index_diff.rs`
+    /// proves the victim choice byte-identical under an OOM-pressure
+    /// lockstep grid.
     fn resolve_oom(&mut self, requests: &mut [Request]) {
         // Fast path: no memory pressure, no clones (this runs every
         // step; the config clones below only when a discard is needed).
         if self.kv.fits(0) {
             return;
         }
-        let policy = self.serve.policy.clone();
-        let fair = self.serve.fairness.clone();
-        let c = match policy {
+        let c = match self.serve.policy {
             Policy::Trail { c } => c,
             _ => 1.0,
         };
-        let rank = |r: &Request| policy.rank_aged(r, &fair);
+        if self.serve.selector == Selector::Indexed {
+            while !self.kv.fits(0) {
+                let Some(vi) = self.oom_victim_indexed(requests, c) else { break };
+                self.discard_victim(requests, vi, true);
+                self.metrics.n_oom_discards += 1;
+            }
+            return;
+        }
+        let policy = self.serve.policy.clone();
+        let fair = self.serve.fairness.clone();
         while !self.kv.fits(0) {
             let resident = |r: &Request| r.slot.is_some() && r.phase != Phase::Finished;
+            let rank = |kv: &KvManager, r: &Request| {
+                Self::victim_rank(kv, r, policy.rank_aged(r, &fair))
+            };
             let victim = requests
                 .iter()
                 .enumerate()
                 .filter(|(_, r)| resident(r) && r.preemptable(c))
-                .max_by(|(_, a), (_, z)| rank(a).cmp(&rank(z)))
+                .max_by(|(_, a), (_, z)| rank(&self.kv, a).cmp(&rank(&self.kv, z)))
                 .or_else(|| {
                     requests
                         .iter()
                         .enumerate()
                         .filter(|(_, r)| resident(r))
-                        .max_by(|(_, a), (_, z)| rank(a).cmp(&rank(z)))
+                        .max_by(|(_, a), (_, z)| rank(&self.kv, a).cmp(&rank(&self.kv, z)))
                 })
                 .map(|(i, _)| i);
             let Some(vi) = victim else { break };
             self.discard_victim(requests, vi, true);
+            self.metrics.n_oom_discards += 1;
         }
+    }
+
+    /// Worst-ranked resident from the resident index's live rank cache:
+    /// the strict maximum under the total rank order (preemptable
+    /// preferred, any resident as fallback), so the HashMap's iteration
+    /// order is irrelevant. Prefix-aware via [`Self::victim_rank`].
+    fn oom_victim_indexed(&self, requests: &[Request], c: f64) -> Option<usize> {
+        let mut best_pre: Option<(Rank, usize)> = None;
+        let mut best_any: Option<(Rank, usize)> = None;
+        for cached in self.res_idx.live_ranks() {
+            let i = self.rid_pos.get(cached.rid);
+            let r = &requests[i];
+            debug_assert!(r.slot.is_some() && r.phase != Phase::Finished);
+            debug_assert_eq!(
+                *cached,
+                self.rank_of(r),
+                "resident index rank cache stale for rid {}",
+                cached.rid
+            );
+            let rk = Self::victim_rank(&self.kv, r, *cached);
+            if best_any
+                .as_ref()
+                .map_or(true, |(b, _)| rk.cmp(b) == std::cmp::Ordering::Greater)
+            {
+                best_any = Some((rk, i));
+            }
+            if r.preemptable(c)
+                && best_pre
+                    .as_ref()
+                    .map_or(true, |(b, _)| rk.cmp(b) == std::cmp::Ordering::Greater)
+            {
+                best_pre = Some((rk, i));
+            }
+        }
+        best_pre.or(best_any).map(|(_, i)| i)
+    }
+
+    /// Prefix-mode preemption victim for the indexed admission path:
+    /// worst adjusted rank over the live rank cache, restricted to
+    /// unchosen preemptable residents, then gated by the same strict
+    /// priority-inversion and hysteresis-margin checks as the reference
+    /// scan (candidate rank unadjusted — it holds no blocks yet).
+    fn preempt_victim_prefix(
+        &self,
+        requests: &[Request],
+        idx: usize,
+        chosen: &[bool],
+        c: f64,
+    ) -> Option<usize> {
+        let mut best: Option<(Rank, usize)> = None;
+        for cached in self.res_idx.live_ranks() {
+            let i = self.rid_pos.get(cached.rid);
+            let r = &requests[i];
+            if chosen[i] || r.phase == Phase::Finished || !r.preemptable(c) {
+                continue;
+            }
+            let rk = Self::victim_rank(&self.kv, r, *cached);
+            if best
+                .as_ref()
+                .map_or(true, |(b, _)| rk.cmp(b) == std::cmp::Ordering::Greater)
+            {
+                best = Some((rk, i));
+            }
+        }
+        let (vr, vi) = best?;
+        let cr = self.rank_of(&requests[idx]);
+        if vr.cmp(&cr) != std::cmp::Ordering::Greater {
+            return None;
+        }
+        if !vr.locked && !cr.locked && vr.key - cr.key < self.serve.evict_margin {
+            return None;
+        }
+        Some(vi)
     }
 
     /// Post-selection phase transitions, shared by both selectors:
@@ -1160,7 +1320,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         if requests[idx].slot.is_some() {
             return true;
         }
-        let need_tokens = requests[idx].prefill_target().min(self.cfg.model.max_seq);
+        let need_tokens = self.admission_need(&requests[idx]);
         // Fast path: resources available — no victim search, no config
         // clones (this runs once per selected candidate).
         if self.kv.free_slot_available()
@@ -1171,7 +1331,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         }
         let policy = self.serve.policy.clone();
         let fair = self.serve.fairness.clone();
-        let rank = |r: &Request| policy.rank_aged(r, &fair);
+        let rank = |kv: &KvManager, r: &Request| Self::victim_rank(kv, r, policy.rank_aged(r, &fair));
         let c = match policy {
             Policy::Trail { c } => c,
             _ => 1.0,
@@ -1198,16 +1358,19 @@ impl<B: ModelBackend> ServingEngine<B> {
                         && policy.preemptive()
                         && r.preemptable(c)
                 })
-                .max_by(|(_, a), (_, z)| rank(a).cmp(&rank(z)));
+                .max_by(|(_, a), (_, z)| rank(&self.kv, a).cmp(&rank(&self.kv, z)));
             let Some((vi, _)) = victim else {
                 return false;
             };
             // The victim must rank strictly worse than the candidate —
             // otherwise discarding it to admit `idx` is a priority
             // inversion — and by at least the hysteresis margin, so that
-            // sub-bin prediction noise doesn't churn the KV cache.
-            let vr = rank(&requests[vi]);
-            let cr = rank(&requests[idx]);
+            // sub-bin prediction noise doesn't churn the KV cache. A
+            // widely-shared victim carries a prefix bonus on its key
+            // (`victim_rank`): its discard frees co-owned blocks for
+            // pennies, so it clears the margin more easily.
+            let vr = rank(&self.kv, &requests[vi]);
+            let cr = self.rank_of(&requests[idx]);
             if vr.cmp(&cr) != std::cmp::Ordering::Greater {
                 return false;
             }
@@ -1219,6 +1382,30 @@ impl<B: ModelBackend> ServingEngine<B> {
 
         self.alloc_slot(requests, idx);
         true
+    }
+
+    /// Pool tokens a not-yet-resident candidate still *needs*: its
+    /// prefill target less the prompt prefix it would attach from the
+    /// trie for free (whole already-resident blocks; docs/
+    /// prefix_cache.md). Exactly the prefill target with the prefix
+    /// cache off.
+    fn admission_need(&self, r: &Request) -> usize {
+        let attach = self.attachable_prefix(r);
+        (r.prefill_target() - attach).min(self.cfg.model.max_seq)
+    }
+
+    /// Whole-block resident prompt prefix `r` would attach on
+    /// allocation, capped one token short of the prefill target so a
+    /// fully-shared prompt still issues one chunk (first-token readout
+    /// rides on prefill completion). 0 with the prefix cache off.
+    fn attachable_prefix(&self, r: &Request) -> usize {
+        if !self.kv.prefix_enabled() {
+            return 0;
+        }
+        let matched = self.kv.shared_prefix_len(&r.spec.prompt);
+        let cap = r.prefill_target().saturating_sub(1) / crate::coordinator::kv::PREFIX_BLOCK
+            * crate::coordinator::kv::PREFIX_BLOCK;
+        matched.min(cap)
     }
 
     /// Indexed victim search: pop the resident max-index (worst rank
@@ -1235,7 +1422,7 @@ impl<B: ModelBackend> ServingEngine<B> {
             return true;
         }
         let policy = self.serve.policy.clone();
-        let need_tokens = requests[idx].prefill_target().min(self.cfg.model.max_seq);
+        let need_tokens = self.admission_need(&requests[idx]);
 
         loop {
             let have_slot = self.kv.free_slot_available();
@@ -1245,6 +1432,23 @@ impl<B: ModelBackend> ServingEngine<B> {
             }
             if !policy.preemptive() {
                 return false;
+            }
+            if self.kv.prefix_enabled() {
+                // Prefix mode: victim keys carry a sharing bonus that
+                // depends on the *current* trie refcounts, so the cached
+                // index ranks can't order victims — scan the live rank
+                // cache (O(residents), ops-free) and adjust on the fly.
+                // The pop machinery below stays byte-identical for every
+                // pre-prefix scenario.
+                let c = match policy {
+                    Policy::Trail { c } => c,
+                    _ => 1.0,
+                };
+                let Some(vi) = self.preempt_victim_prefix(requests, idx, chosen, c) else {
+                    return false;
+                };
+                self.discard_victim(requests, vi, true);
+                continue;
             }
             let mut held: Vec<Entry> = Vec::new();
             let mut victim: Option<Entry> = None;
@@ -1325,6 +1529,14 @@ impl<B: ModelBackend> ServingEngine<B> {
     }
 
     /// Allocate a fresh slot for `idx` and register it as resident.
+    /// With the prefix cache on, the slot's prompt is published to the
+    /// trie and any whole-block resident prefix is attached: those
+    /// tokens count as already prefilled *and* already written, so the
+    /// first chunk starts past them and the shared blocks are charged
+    /// through the refcount (net pool growth zero — they were resident
+    /// already). The attach is capped one token short of the prefill
+    /// target (`attachable_prefix`) so completion still flows through
+    /// the normal chunk → first-token path.
     fn alloc_slot(&mut self, requests: &mut [Request], idx: usize) {
         let slot = self.kv.alloc(requests[idx].spec.rid).expect("slot freed above");
         requests[idx].slot = Some(slot);
@@ -1332,6 +1544,18 @@ impl<B: ModelBackend> ServingEngine<B> {
         let _ = self.backend.slot_reset(slot);
         requests[idx].prefilled = 0; // fresh slot ⇒ (re)prefill from 0
         requests[idx].kv_written = 0;
+        if self.kv.prefix_enabled() {
+            let rid = requests[idx].spec.rid;
+            self.kv.set_prompt(slot, rid, &requests[idx].spec.prompt);
+            let attach = self.attachable_prefix(&requests[idx]);
+            if attach > 0 {
+                requests[idx].prefilled = attach;
+                requests[idx].kv_written = attach;
+                self.kv.charge(slot, rid, attach);
+                self.kv.prefix_hits += 1;
+                self.kv.reused_tokens += attach as u64;
+            }
+        }
         let rk = self.rank_of(&requests[idx]);
         self.res_idx.insert(rk);
     }

@@ -9,6 +9,134 @@
 //! limited preemption manages. When the pool (or slot set) is exhausted
 //! the engine discards the worst-ranked preempted request's cache and
 //! marks it for recompute (the paper's "discard and recompute" OOM mode).
+//!
+//! Prefix sharing (docs/prefix_cache.md): with the prefix cache enabled,
+//! a radix trie over `PREFIX_BLOCK`-token prompt blocks deduplicates
+//! shared prompt prefixes across resident requests. Each trie node is a
+//! full block keyed by its exact token content under its parent chain,
+//! refcounted by the number of resident slots charged through it.
+//! `used_tokens()` (and therefore `fits()` / `utilisation()` / the peak
+//! high-water mark) counts every shared block once: the per-slot charges
+//! still sum naively, and the trie's running `savings` counter — Σ over
+//! nodes of `(refcount − 1) · PREFIX_BLOCK` — is subtracted. With the
+//! prefix cache disabled (the default) the trie is never consulted and
+//! the accounting is bit-identical to the strict per-request model.
+
+use std::collections::HashMap;
+
+/// Sharing granularity: prompts participate in the trie in full blocks
+/// of this many tokens (= the prefill chunk size, so an attached prefix
+/// is always chunk-aligned). Partial tail blocks are always unique.
+pub const PREFIX_BLOCK: usize = 16;
+
+/// One full prompt block in the radix trie. Children are keyed by their
+/// exact block content, so lookup is collision-free by construction.
+#[derive(Clone, Debug)]
+struct PrefixNode {
+    parent: Option<usize>,
+    block: Vec<i32>,
+    /// Number of resident slots whose charge covers this block.
+    refcount: usize,
+    children: HashMap<Vec<i32>, usize>,
+}
+
+/// Radix trie of refcounted prompt blocks shared across resident slots.
+#[derive(Clone, Debug, Default)]
+struct PrefixIndex {
+    nodes: Vec<Option<PrefixNode>>,
+    free_nodes: Vec<usize>,
+    root: HashMap<Vec<i32>, usize>,
+    /// Tokens saved vs strict per-request charging:
+    /// Σ over live nodes of (refcount − 1) · PREFIX_BLOCK.
+    savings: usize,
+}
+
+impl PrefixIndex {
+    fn child_of(&self, parent: Option<usize>, block: &[i32]) -> Option<usize> {
+        let map = match parent {
+            None => &self.root,
+            Some(p) => &self.nodes[p].as_ref().expect("live parent").children,
+        };
+        map.get(block).copied()
+    }
+
+    /// Add one reference to the block `block` under `parent`, creating
+    /// the node if absent. Returns the node id.
+    fn add_ref(&mut self, parent: Option<usize>, block: &[i32]) -> usize {
+        if let Some(id) = self.child_of(parent, block) {
+            let node = self.nodes[id].as_mut().expect("live node");
+            node.refcount += 1;
+            // A second (or later) reference shares the block: every ref
+            // past the first is a whole block the pool does not pay for.
+            self.savings += PREFIX_BLOCK;
+            return id;
+        }
+        let node = PrefixNode {
+            parent,
+            block: block.to_vec(),
+            refcount: 1,
+            children: HashMap::new(),
+        };
+        let id = match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        let map = match parent {
+            None => &mut self.root,
+            Some(p) => &mut self.nodes[p].as_mut().expect("live parent").children,
+        };
+        map.insert(block.to_vec(), id);
+        id
+    }
+
+    /// Drop one reference from node `id`; removes the node at zero.
+    /// Callers release a slot's chain deepest-first, so a node never
+    /// dies while a child still points at it.
+    fn drop_ref(&mut self, id: usize) {
+        let node = self.nodes[id].as_mut().expect("live node");
+        assert!(node.refcount > 0, "prefix block over-released");
+        node.refcount -= 1;
+        if node.refcount > 0 {
+            self.savings -= PREFIX_BLOCK;
+            return;
+        }
+        let node = self.nodes[id].take().expect("live node");
+        assert!(node.children.is_empty(), "prefix block freed while its suffix blocks live");
+        let map = match node.parent {
+            None => &mut self.root,
+            Some(p) => &mut self.nodes[p].as_mut().expect("live parent").children,
+        };
+        map.remove(&node.block);
+        self.free_nodes.push(id);
+    }
+
+    fn refcount(&self, id: usize) -> usize {
+        self.nodes[id].as_ref().expect("live node").refcount
+    }
+
+    /// Longest resident prefix of `prompt`, in whole blocks, in tokens.
+    fn match_len(&self, prompt: &[i32]) -> usize {
+        let mut parent = None;
+        let mut matched = 0;
+        while (matched + 1) * PREFIX_BLOCK <= prompt.len() {
+            let block = &prompt[matched * PREFIX_BLOCK..(matched + 1) * PREFIX_BLOCK];
+            match self.child_of(parent, block) {
+                Some(id) => {
+                    parent = Some(id);
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        matched * PREFIX_BLOCK
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct KvManager {
@@ -20,9 +148,27 @@ pub struct KvManager {
     slots: Vec<Option<u64>>,
     /// Tokens currently charged per slot.
     charged: Vec<usize>,
+    /// Free slot indices as a min-heap (std::BinaryHeap is a max-heap,
+    /// so indices are stored negated-by-Reverse): `alloc` pops the
+    /// lowest free index in O(log B) instead of the old O(B) linear
+    /// scan, preserving the first-free-index order the deterministic
+    /// bench baselines were recorded under.
+    free_slots: std::collections::BinaryHeap<std::cmp::Reverse<usize>>,
     /// High-water marks (metrics).
     pub peak_tokens: usize,
     pub peak_slots: usize,
+    /// Prefix cache (docs/prefix_cache.md). `None` = strict per-request
+    /// accounting, bit-identical to the pre-prefix engine.
+    prefix: Option<PrefixIndex>,
+    /// Per-slot prompt tokens (prefix mode only; empty otherwise).
+    prompts: Vec<Vec<i32>>,
+    /// Per-slot chain of trie node ids currently referenced, root-first.
+    blocks: Vec<Vec<usize>>,
+    /// Lifetime counters (metrics): prompt tokens attached from the trie
+    /// instead of prefilled, and how many admissions hit at least one
+    /// shared block.
+    pub reused_tokens: u64,
+    pub prefix_hits: u64,
 }
 
 impl KvManager {
@@ -33,21 +179,44 @@ impl KvManager {
             pool_tokens,
             slots: vec![None; n_slots],
             charged: vec![0; n_slots],
+            free_slots: (0..n_slots).map(std::cmp::Reverse).collect(),
             peak_tokens: 0,
             peak_slots: 0,
+            prefix: None,
+            prompts: vec![Vec::new(); n_slots],
+            blocks: vec![Vec::new(); n_slots],
+            reused_tokens: 0,
+            prefix_hits: 0,
         }
     }
 
+    /// Switch on prefix-sharing accounting. Must be called before any
+    /// slot is allocated (engine construction time).
+    pub fn enable_prefix_cache(&mut self) {
+        assert!(self.used_slots() == 0, "prefix cache must be enabled on an empty pool");
+        self.prefix = Some(PrefixIndex::default());
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
     pub fn used_tokens(&self) -> usize {
-        self.charged.iter().sum()
+        let gross: usize = self.charged.iter().sum();
+        gross - self.prefix.as_ref().map_or(0, |p| p.savings)
+    }
+
+    /// Tokens the prefix trie currently saves vs strict accounting.
+    pub fn shared_savings(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.savings)
     }
 
     pub fn used_slots(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.n_slots - self.free_slots.len()
     }
 
     pub fn free_slot_available(&self) -> bool {
-        self.slots.iter().any(|s| s.is_none())
+        !self.free_slots.is_empty()
     }
 
     pub fn owner(&self, slot: usize) -> Option<u64> {
@@ -56,12 +225,41 @@ impl KvManager {
 
     /// Allocate a slot for `rid`. Returns None when all slots are taken.
     pub fn alloc(&mut self, rid: u64) -> Option<usize> {
-        let idx = self.slots.iter().position(|s| s.is_none())?;
+        let std::cmp::Reverse(idx) = self.free_slots.pop()?;
         self.slots[idx] = Some(rid);
         self.charged[idx] = 0;
         let used = self.used_slots();
         self.peak_slots = self.peak_slots.max(used);
         Some(idx)
+    }
+
+    /// Record the prompt behind a slot so `charge` can publish its full
+    /// blocks into the prefix trie. No-op with the prefix cache off.
+    pub fn set_prompt(&mut self, slot: usize, rid: u64, prompt: &[i32]) {
+        assert_eq!(self.slots[slot], Some(rid), "slot {slot} not owned by {rid}");
+        if self.prefix.is_none() {
+            return;
+        }
+        assert!(self.blocks[slot].is_empty(), "set_prompt on a slot with live blocks");
+        self.prompts[slot] = prompt.to_vec();
+    }
+
+    /// Longest prompt prefix already resident via other slots, in whole
+    /// blocks, in tokens. 0 with the prefix cache off.
+    pub fn shared_prefix_len(&self, prompt: &[i32]) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.match_len(prompt))
+    }
+
+    /// Tokens of `slot`'s charge that at least one *other* resident slot
+    /// also references (refcount ≥ 2). Discarding this slot frees
+    /// `charged − shared_tokens` pool tokens only.
+    pub fn shared_tokens(&self, slot: usize) -> usize {
+        let Some(p) = self.prefix.as_ref() else { return 0 };
+        self.blocks[slot]
+            .iter()
+            .filter(|&&id| p.refcount(id) >= 2)
+            .count()
+            * PREFIX_BLOCK
     }
 
     /// Update the token charge for a resident request (after prefill
@@ -71,8 +269,29 @@ impl KvManager {
         assert_eq!(self.slots[slot], Some(rid), "slot {slot} not owned by {rid}");
         assert!(tokens <= self.max_seq, "request overflows slot capacity");
         self.charged[slot] = tokens;
+        if self.prefix.is_some() {
+            self.sync_blocks(slot, tokens);
+        }
         let used = self.used_tokens();
         self.peak_tokens = self.peak_tokens.max(used);
+    }
+
+    /// Bring the slot's published trie chain in line with its charge:
+    /// every *full* prompt block covered by `tokens` holds a reference.
+    fn sync_blocks(&mut self, slot: usize, tokens: usize) {
+        let covered = tokens.min(self.prompts[slot].len());
+        let want = covered / PREFIX_BLOCK;
+        while self.blocks[slot].len() > want {
+            let id = self.blocks[slot].pop().expect("chain non-empty");
+            self.prefix.as_mut().expect("prefix on").drop_ref(id);
+        }
+        while self.blocks[slot].len() < want {
+            let b = self.blocks[slot].len();
+            let parent = self.blocks[slot].last().copied();
+            let block = self.prompts[slot][b * PREFIX_BLOCK..(b + 1) * PREFIX_BLOCK].to_vec();
+            let id = self.prefix.as_mut().expect("prefix on").add_ref(parent, &block);
+            self.blocks[slot].push(id);
+        }
     }
 
     /// Release a slot (completion or discard).
@@ -80,6 +299,13 @@ impl KvManager {
         assert_eq!(self.slots[slot], Some(rid), "slot {slot} not owned by {rid}");
         self.slots[slot] = None;
         self.charged[slot] = 0;
+        if let Some(p) = self.prefix.as_mut() {
+            while let Some(id) = self.blocks[slot].pop() {
+                p.drop_ref(id);
+            }
+            self.prompts[slot].clear();
+        }
+        self.free_slots.push(std::cmp::Reverse(slot));
     }
 
     /// Would charging `extra` more tokens stay within the pool?
@@ -87,9 +313,45 @@ impl KvManager {
         self.used_tokens() + extra <= self.pool_tokens
     }
 
-    /// Memory utilisation in [0,1].
+    /// Memory utilisation in [0,1]. A zero-token pool reports 0 when
+    /// empty and 1 when anything is charged — never NaN/inf, which would
+    /// poison rank and report arithmetic downstream.
     pub fn utilisation(&self) -> f64 {
+        if self.pool_tokens == 0 {
+            return if self.used_tokens() == 0 { 0.0 } else { 1.0 };
+        }
         self.used_tokens() as f64 / self.pool_tokens as f64
+    }
+
+    /// Recompute the dedup accounting from scratch and cross-check the
+    /// incremental counters (tests / debug builds).
+    #[doc(hidden)]
+    pub fn validate_prefix_accounting(&self) {
+        let Some(p) = self.prefix.as_ref() else { return };
+        // Refcounts: every slot chain contributes one ref per node.
+        let mut refs: HashMap<usize, usize> = HashMap::new();
+        for (slot, chain) in self.blocks.iter().enumerate() {
+            assert!(
+                self.slots[slot].is_some() || chain.is_empty(),
+                "free slot {slot} still holds block refs"
+            );
+            for &id in chain {
+                *refs.entry(id).or_insert(0) += 1;
+            }
+        }
+        let mut savings = 0usize;
+        let mut live_nodes = 0usize;
+        for (id, node) in p.nodes.iter().enumerate() {
+            if let Some(node) = node {
+                live_nodes += 1;
+                let expect = refs.get(&id).copied().unwrap_or(0);
+                assert_eq!(node.refcount, expect, "refcount drift on node {id}");
+                assert!(node.refcount > 0, "zero-ref node {id} kept alive");
+                savings += (node.refcount - 1) * PREFIX_BLOCK;
+            }
+        }
+        assert_eq!(refs.len(), live_nodes, "slot chain references a dead node");
+        assert_eq!(savings, p.savings, "savings counter drift");
     }
 }
 
@@ -106,6 +368,24 @@ mod tests {
         assert!(kv.alloc(12).is_none());
         kv.free(s0, 10);
         assert_eq!(kv.alloc(12), Some(s0));
+    }
+
+    #[test]
+    fn alloc_takes_lowest_free_index() {
+        // The free-slot heap must preserve the first-free-index order of
+        // the old linear scan — the deterministic bench baselines were
+        // recorded under it.
+        let mut kv = KvManager::new(4, 100, 400);
+        for rid in 0..4 {
+            assert_eq!(kv.alloc(rid), Some(rid as usize));
+        }
+        kv.free(3, 3);
+        kv.free(1, 1);
+        kv.free(2, 2);
+        assert_eq!(kv.alloc(10), Some(1));
+        assert_eq!(kv.alloc(11), Some(2));
+        assert_eq!(kv.alloc(12), Some(3));
+        assert!(kv.alloc(13).is_none());
     }
 
     #[test]
@@ -206,6 +486,104 @@ mod tests {
     }
 
     #[test]
+    fn utilisation_guards_zero_pool() {
+        // Regression: pool_tokens = 0 used to divide by zero → NaN (and
+        // +inf once anything was charged), poisoning rank and report
+        // arithmetic downstream. The guard pins the value into [0,1].
+        let mut kv = KvManager::new(1, 100, 0);
+        assert_eq!(kv.utilisation(), 0.0);
+        assert!(kv.utilisation().is_finite());
+        let s = kv.alloc(1).unwrap();
+        kv.charge(s, 1, 10); // charge() itself is not pool-gated
+        assert_eq!(kv.utilisation(), 1.0);
+        assert!(kv.utilisation().is_finite());
+    }
+
+    fn prompt_of(template: i32, shared: usize, unique_from: i32, total: usize) -> Vec<i32> {
+        // `shared` leading tokens derived only from the template id, the
+        // rest unique to `unique_from`.
+        (0..total)
+            .map(|i| {
+                if i < shared {
+                    1000 + template * 97 + i as i32
+                } else {
+                    5000 + unique_from * 131 + i as i32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shared_blocks_charged_once() {
+        let mut kv = KvManager::new(4, 320, 1280);
+        kv.enable_prefix_cache();
+        let p0 = prompt_of(0, 64, 1, 80);
+        let p1 = prompt_of(0, 64, 2, 80);
+        let s0 = kv.alloc(1).unwrap();
+        kv.set_prompt(s0, 1, &p0);
+        kv.charge(s0, 1, 80);
+        assert_eq!(kv.used_tokens(), 80);
+        assert_eq!(kv.shared_savings(), 0);
+        // Second request shares the 64-token (4-block) template prefix.
+        assert_eq!(kv.shared_prefix_len(&p1), 64);
+        let s1 = kv.alloc(2).unwrap();
+        kv.set_prompt(s1, 2, &p1);
+        kv.charge(s1, 2, 80);
+        assert_eq!(kv.used_tokens(), 80 + 80 - 64);
+        assert_eq!(kv.shared_savings(), 64);
+        assert_eq!(kv.shared_tokens(s0), 64);
+        assert_eq!(kv.shared_tokens(s1), 64);
+        kv.validate_prefix_accounting();
+        // Freeing one side keeps the blocks alive for the other.
+        kv.free(s0, 1);
+        assert_eq!(kv.used_tokens(), 80);
+        assert_eq!(kv.shared_savings(), 0);
+        assert_eq!(kv.shared_tokens(s1), 0);
+        assert_eq!(kv.shared_prefix_len(&p0), 64);
+        kv.validate_prefix_accounting();
+    }
+
+    #[test]
+    fn partial_blocks_stay_unique() {
+        let mut kv = KvManager::new(2, 320, 640);
+        kv.enable_prefix_cache();
+        let p0 = prompt_of(0, 40, 1, 40);
+        let p1 = prompt_of(0, 40, 2, 40);
+        let s0 = kv.alloc(1).unwrap();
+        kv.set_prompt(s0, 1, &p0);
+        kv.charge(s0, 1, 40);
+        // Only 2 full blocks (32 tokens) publish; the 8-token tail is
+        // never shared.
+        assert_eq!(kv.shared_prefix_len(&p1), 32);
+        let s1 = kv.alloc(2).unwrap();
+        kv.set_prompt(s1, 2, &p1);
+        kv.charge(s1, 2, 40);
+        assert_eq!(kv.used_tokens(), 40 + 40 - 32);
+        kv.validate_prefix_accounting();
+    }
+
+    #[test]
+    fn charge_growth_publishes_blocks_incrementally() {
+        let mut kv = KvManager::new(2, 320, 640);
+        kv.enable_prefix_cache();
+        let p0 = prompt_of(3, 48, 1, 60);
+        let p1 = prompt_of(3, 48, 2, 60);
+        let s0 = kv.alloc(1).unwrap();
+        kv.set_prompt(s0, 1, &p0);
+        // Chunked prefill: only fully-written blocks are published.
+        kv.charge(s0, 1, 16);
+        assert_eq!(kv.shared_prefix_len(&p1), 16);
+        kv.charge(s0, 1, 47);
+        assert_eq!(kv.shared_prefix_len(&p1), 32);
+        kv.charge(s0, 1, 60);
+        assert_eq!(kv.shared_prefix_len(&p1), 48);
+        // Decode growth past the prompt publishes nothing new.
+        kv.charge(s0, 1, 100);
+        assert_eq!(kv.shared_prefix_len(&p1), 48);
+        kv.validate_prefix_accounting();
+    }
+
+    #[test]
     fn prop_pool_respected_under_random_churn() {
         // A scheduler that only charges what fits() approved can never
         // push the pool over budget, across arbitrary alloc/charge/free
@@ -261,6 +639,84 @@ mod tests {
                 }
                 if kv.used_slots() != live.len() {
                     return Err("slot accounting out of sync".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_prefix_refcounts_match_set_semantics() {
+        // For any admit/charge-growth/shrink/free interleaving over
+        // template-shared prompts: used_tokens() equals the independent
+        // set-semantics oracle (each distinct charged prompt-prefix block
+        // counted once, plus per-slot non-shared remainders), and the
+        // trie's internal refcounts/savings stay consistent (no block
+        // freed while referenced — validate_prefix_accounting panics
+        // otherwise).
+        crate::util::prop::check("kv prefix refcounting", 40, |g| {
+            let n_slots = g.usize_in(2, 6);
+            let max_seq = 200;
+            let mut kv = KvManager::new(n_slots, max_seq, n_slots * max_seq);
+            kv.enable_prefix_cache();
+            // (slot, rid, prompt, charged)
+            let mut live: Vec<(usize, u64, Vec<i32>, usize)> = Vec::new();
+            let mut next_rid = 0u64;
+            for _ in 0..300 {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        if let Some(slot) = kv.alloc(next_rid) {
+                            let template = g.usize_in(0, 2) as i32;
+                            let shared = g.usize_in(0, 5) * 16;
+                            let total = (shared + g.usize_in(1, 40)).min(max_seq);
+                            let p = prompt_of(template, shared.min(total), next_rid as i32, total);
+                            kv.set_prompt(slot, next_rid, &p);
+                            live.push((slot, next_rid, p, 0));
+                            next_rid += 1;
+                        }
+                    }
+                    1 | 2 => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let i = g.usize_in(0, live.len() - 1);
+                        let (slot, rid, ref prompt, _) = live[i];
+                        // Growth mimics prefill/decode; occasional shrink
+                        // exercises the drop path.
+                        let want = g.usize_in(0, (prompt.len() + 30).min(max_seq));
+                        kv.charge(slot, rid, want);
+                        live[i].3 = want;
+                    }
+                    _ => {
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let i = g.usize_in(0, live.len() - 1);
+                        let (slot, rid, _, _) = live.swap_remove(i);
+                        kv.free(slot, rid);
+                    }
+                }
+                kv.validate_prefix_accounting();
+                // Set-semantics oracle: a charged full prompt block is
+                // identified by its entire token prefix up to and
+                // including itself.
+                let mut blocks: std::collections::HashSet<Vec<i32>> = Default::default();
+                let mut remainder = 0usize;
+                for &(_, _, ref prompt, charged) in &live {
+                    let covered = charged.min(prompt.len());
+                    let full = covered / PREFIX_BLOCK;
+                    for b in 0..full {
+                        blocks.insert(prompt[..(b + 1) * PREFIX_BLOCK].to_vec());
+                    }
+                    remainder += charged - full * PREFIX_BLOCK;
+                }
+                let expect = blocks.len() * PREFIX_BLOCK + remainder;
+                if kv.used_tokens() != expect {
+                    return Err(format!(
+                        "dedup accounting drift: used={} oracle={}",
+                        kv.used_tokens(),
+                        expect
+                    ));
                 }
             }
             Ok(())

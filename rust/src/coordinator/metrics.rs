@@ -11,6 +11,12 @@ pub struct Metrics {
     pub n_finished: usize,
     pub n_preemptions: u64,
     pub n_discards: u64,
+    /// Subset of `n_discards` forced by `resolve_oom` (memory pressure
+    /// after decode growth) rather than admission preemption — the
+    /// signal the OOM-pressure lockstep grid in
+    /// `rust/tests/rank_index_diff.rs` asserts is non-zero, proving the
+    /// grid actually exercises the victim scan it is differencing.
+    pub n_oom_discards: u64,
     /// Requests handed to / received from another replica (co-sim
     /// migration; see `coordinator::engine::ServingEngine::take_migratable`).
     pub n_migrated_out: u64,

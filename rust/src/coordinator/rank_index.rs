@@ -281,6 +281,16 @@ impl RankIndex {
         self.n_entries
     }
 
+    /// The live set's cached ranks, in no particular order. Reads cost
+    /// no `ops` and move no entries: `ServingEngine::resolve_oom` uses
+    /// this for its O(residents) worst-victim scan — the victim is the
+    /// unique maximum under the total rank order, so iteration order is
+    /// irrelevant, and the pop/ops streams the frozen bench baselines
+    /// pin stay untouched.
+    pub fn live_ranks(&self) -> impl Iterator<Item = &Rank> + '_ {
+        self.live.values().map(|(rank, _)| rank)
+    }
+
     fn is_live(&self, e: &Entry) -> bool {
         self.live.get(&e.rank.rid).map_or(false, |c| c.1 == e.version)
     }

@@ -39,9 +39,10 @@ fn main() {
         Some("sim") => cmd_sim(&args),
         Some("sched") => cmd_sched(&args),
         Some("fair") => cmd_fair(&args),
+        Some("prefix") => cmd_prefix(&args),
         _ => {
             eprintln!(
-                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair> [options]\n\
+                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair|prefix> [options]\n\
                  \n\
                  serve    — run a serving benchmark against the AOT model\n\
                  \x20        --policy fcfs|sjf|trail|srpt|trail-c<M>  (default trail)\n\
@@ -53,12 +54,13 @@ fn main() {
                  \x20        --lambda <ρ> --c <C> --model exp|perfect\n\
                  server   — HTTP chatbot server over a replica pool\n\
                  \x20        --addr <ip:port> --policy <p> [--mock] [--oracle]\n\
-                 \x20        --replicas <n> --dispatch rr|jsq|least-work\n\
+                 \x20        --replicas <n> --dispatch rr|jsq|least-work|affinity\n\
                  sim      — deterministic virtual-time multi-replica co-simulation\n\
                  \x20        --scenarios steady,bursty,multi-tenant,skewed\n\
                  \x20        --policies fcfs,srpt,trail --replicas 2,4\n\
                  \x20        [--n <reqs>] [--seed <u64>] [--no-migration]\n\
                  \x20        [--selector indexed|reference] [--tenants]\n\
+                 \x20        [--dispatch rr|jsq|least-work|affinity]\n\
                  \x20        [--fairness-quantum <s>] [--fairness-boost <tokens>]\n\
                  \x20        [--fairness-levels <n>] [--fairness-weights w0,w1,..]\n\
                  \x20        [--fairness-report]\n\
@@ -71,6 +73,10 @@ fn main() {
                  \x20        starvation guard + per-tenant shares over the fair-*\n\
                  \x20        scenarios, plus the 128-replica dispatch x fairness\n\
                  \x20        sweep  [--out BENCH_fair.json]\n\
+                 prefix   — prefix-cache grid (BENCH_prefix.json,\n\
+                 \x20        docs/prefix_cache.md): sharing degree x dispatch\n\
+                 \x20        (least-work vs cache-affinity) over the agentic/RAG\n\
+                 \x20        scenarios  [--out BENCH_prefix.json]\n\
                  info     — print artifact/config summary"
             );
             2
@@ -432,6 +438,22 @@ fn cmd_sim(args: &Args) -> i32 {
             }
         }
     }
+    // Dispatch override — applied to every scenario in the sweep; absent
+    // keeps the scenario defaults (so the pinned baselines cannot move).
+    match args.str_or("dispatch", "") {
+        "" => {}
+        s => match DispatchPolicy::parse(s) {
+            Some(d) => {
+                for sc in &mut sweep.scenarios {
+                    sc.dispatch = d;
+                }
+            }
+            None => {
+                eprintln!("bad --dispatch '{s}' (rr|jsq|least-work|affinity)");
+                return 2;
+            }
+        },
+    }
     // Selector override (both implementations serve bit-identically;
     // this exists for A/B timing and the differential harness).
     match args.str_or("selector", "") {
@@ -599,13 +621,60 @@ fn cmd_fair(args: &Args) -> i32 {
     0
 }
 
+fn cmd_prefix(args: &Args) -> i32 {
+    // Embedded config, like `sim`/`sched`/`fair`: the checked-in
+    // BENCH_prefix.json and the Python mirror pin the embedded defaults.
+    let cfg = Config::embedded_default();
+    let report = match trail::sim::run_prefix_sweep(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("prefix sweep failed: {e}");
+            return 1;
+        }
+    };
+    print!("{}", report.render_table());
+    // The headline claim on the console: what cache-affinity dispatch
+    // buys at the highest sharing point vs the sharing-free baseline.
+    let cell = |share: f64, dispatch: &str| {
+        report.rows.iter().find(|r| {
+            r.scenario == "prefix-agentic"
+                && r.dispatch == dispatch
+                && r.prefix.as_ref().map(|p| p.share_factor) == Some(share)
+        })
+    };
+    if let (Some(lo), Some(hi)) = (cell(0.0, "affinity"), cell(0.9, "affinity")) {
+        println!(
+            "prefix-agentic/affinity: share 0.0 -> 0.9 moves mean TTFT {:.3}s -> {:.3}s, \
+             KV peak {} -> {} tokens, reused {} tokens",
+            lo.mean_ttft_s,
+            hi.mean_ttft_s,
+            lo.kv_peak_tokens,
+            hi.kv_peak_tokens,
+            hi.prefix.as_ref().map(|p| p.reused_tokens).unwrap_or(0)
+        );
+    }
+    let out = args.str_or("out", "").to_string();
+    if !out.is_empty() {
+        if let Err(e) = report.save(&out) {
+            eprintln!("write {out} failed: {e}");
+            return 1;
+        }
+        println!(
+            "report ({} rows, schema {}) -> {out}",
+            report.rows.len(),
+            trail::sim::PREFIX_SCHEMA_VERSION
+        );
+    }
+    0
+}
+
 fn cmd_server(args: &Args) -> i32 {
     let cfg = load_cfg();
     let addr = args.str_or("addr", "127.0.0.1:8091").to_string();
     let policy = Policy::parse(args.str_or("policy", "trail")).expect("bad --policy");
     let replicas = args.usize_or("replicas", 1).max(1);
     let dispatch = DispatchPolicy::parse(args.str_or("dispatch", "rr"))
-        .expect("bad --dispatch (rr|jsq|least-work)");
+        .expect("bad --dispatch (rr|jsq|least-work|affinity)");
     let use_mock = args.has_flag("mock");
     let oracle = args.has_flag("oracle");
 

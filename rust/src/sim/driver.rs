@@ -76,6 +76,12 @@ pub struct SimOutcome {
     /// `Metrics::max_wait_age`) — the starvation-age signal
     /// `BENCH_fair.json` reports per cell.
     pub max_starve_age: f64,
+    /// Admissions that attached at least one shared prefix block,
+    /// summed over replicas (0 with the prefix cache off).
+    pub prefix_hits: u64,
+    /// Prompt tokens attached from the prefix cache instead of
+    /// recomputed, summed over replicas.
+    pub reused_tokens: u64,
 }
 
 impl SimOutcome {
@@ -153,7 +159,21 @@ impl<B: ModelBackend> SimDriver<B> {
                     .iter()
                     .map(|e| ReplicaSnapshot::from_status(&e.status()))
                     .collect();
-                let idx = self.dispatch.pick(&snaps, self.rr, self.unseen_estimate);
+                // Cache-affinity in co-sim is *exact*: the driver owns the
+                // engines, so it asks each replica's prefix trie directly
+                // (the threaded pool approximates this with an
+                // AffinityTracker; docs/prefix_cache.md).
+                let idx = if self.dispatch == DispatchPolicy::CacheAffinity {
+                    let lens: Vec<usize> = self
+                        .engines
+                        .iter()
+                        .map(|e| e.shared_prefix_len(&entry.spec.prompt))
+                        .collect();
+                    self.dispatch
+                        .pick_with_affinity(&snaps, &lens, self.rr, self.unseen_estimate)
+                } else {
+                    self.dispatch.pick(&snaps, self.rr, self.unseen_estimate)
+                };
                 self.rr += 1;
                 self.engines[idx].sync_clock(entry.at);
                 self.engines[idx].admit_from(entry.spec.clone(), Some(entry.at), entry.tenant);
@@ -215,6 +235,8 @@ impl<B: ModelBackend> SimDriver<B> {
         let mut per_replica = Vec::with_capacity(self.engines.len());
         let mut makespan = 0.0f64;
         let mut max_starve_age = 0.0f64;
+        let mut prefix_hits = 0u64;
+        let mut reused_tokens = 0u64;
         for e in &self.engines {
             let st = e.status();
             preemptions += e.metrics.n_preemptions;
@@ -225,6 +247,9 @@ impl<B: ModelBackend> SimDriver<B> {
             per_replica.push(e.metrics.n_finished);
             makespan = makespan.max(e.now());
             max_starve_age = max_starve_age.max(e.metrics.max_wait_age);
+            let (hits, reused, _) = e.prefix_stats();
+            prefix_hits += hits;
+            reused_tokens += reused;
         }
         Ok(SimOutcome {
             n_requests: finished,
@@ -240,6 +265,8 @@ impl<B: ModelBackend> SimDriver<B> {
             selector_ops,
             per_tenant,
             max_starve_age,
+            prefix_hits,
+            reused_tokens,
         })
     }
 

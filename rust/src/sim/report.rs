@@ -29,6 +29,10 @@ pub const SCHED_SCHEMA_VERSION: &str = "trail.simlab.sched/v1";
 /// metrics (per-tenant slowdown percentiles, Jain's index over
 /// per-tenant mean slowdowns, max starvation age). See docs/fairness.md.
 pub const FAIR_SCHEMA_VERSION: &str = "trail.simlab.fair/v1";
+/// Prefix-cache reports (`BENCH_prefix.json`): the bench rows plus a
+/// `prefix` section per row — sharing factor and cache counters — over
+/// the sharing-degree × dispatch-policy grid. See docs/prefix_cache.md.
+pub const PREFIX_SCHEMA_VERSION: &str = "trail.simlab.prefix/v1";
 
 /// Per-tenant latency row (present when a sweep runs with
 /// `tenant_breakdown`; tenant names come from the scenario's
@@ -217,6 +221,37 @@ impl FairnessRow {
     }
 }
 
+/// The `prefix` section of a `BENCH_prefix.json` row: the sharing
+/// factor the cell's trace was generated with plus the prefix-cache
+/// counters it produced (summed over replicas).
+#[derive(Clone, Debug)]
+pub struct PrefixRow {
+    /// `PrefixSpec::share_p` of the generating tenant.
+    pub share_factor: f64,
+    /// Admissions that attached at least one shared block.
+    pub prefix_hits: u64,
+    /// Prompt tokens attached from the cache instead of recomputed.
+    pub reused_tokens: u64,
+}
+
+impl PrefixRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("share_factor", Json::Num(self.share_factor)),
+            ("prefix_hits", Json::Num(self.prefix_hits as f64)),
+            ("reused_tokens", Json::Num(self.reused_tokens as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> PrefixRow {
+        PrefixRow {
+            share_factor: j.at(&["share_factor"]).as_f64(),
+            prefix_hits: j.at(&["prefix_hits"]).as_i64() as u64,
+            reused_tokens: j.at(&["reused_tokens"]).as_i64() as u64,
+        }
+    }
+}
+
 /// One (scenario × policy × replicas) cell of a sweep.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
@@ -251,6 +286,9 @@ pub struct SweepRow {
     /// Fairness knobs + metrics — fair sweeps only; `None` keeps the
     /// seed and sched serialisations byte-identical.
     pub fairness: Option<FairnessRow>,
+    /// Prefix-cache sharing factor + counters — prefix sweeps only;
+    /// `None` keeps every other serialisation byte-identical.
+    pub prefix: Option<PrefixRow>,
 }
 
 impl SweepRow {
@@ -341,6 +379,7 @@ impl SweepRow {
             },
             per_tenant,
             fairness: None,
+            prefix: None,
         }
     }
 
@@ -394,6 +433,9 @@ impl SweepRow {
         if let Some(fair) = &self.fairness {
             pairs.push(("fairness", fair.to_json()));
         }
+        if let Some(prefix) = &self.prefix {
+            pairs.push(("prefix", prefix.to_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -438,6 +480,7 @@ impl SweepRow {
                 .map(|arr| arr.as_arr().iter().map(TenantRow::from_json).collect())
                 .unwrap_or_default(),
             fairness: j.get("fairness").map(FairnessRow::from_json),
+            prefix: j.get("prefix").map(PrefixRow::from_json),
         }
     }
 }
@@ -469,6 +512,13 @@ impl BenchReport {
     pub fn new_fair(rows: Vec<SweepRow>) -> BenchReport {
         BenchReport {
             schema: FAIR_SCHEMA_VERSION.to_string(),
+            rows,
+        }
+    }
+
+    pub fn new_prefix(rows: Vec<SweepRow>) -> BenchReport {
+        BenchReport {
+            schema: PREFIX_SCHEMA_VERSION.to_string(),
             rows,
         }
     }
@@ -507,10 +557,12 @@ impl BenchReport {
         if schema != SCHEMA_VERSION
             && schema != SCHED_SCHEMA_VERSION
             && schema != FAIR_SCHEMA_VERSION
+            && schema != PREFIX_SCHEMA_VERSION
         {
             return Err(format!(
                 "schema mismatch: file is '{schema}', this binary reads \
-                 '{SCHEMA_VERSION}', '{SCHED_SCHEMA_VERSION}' or '{FAIR_SCHEMA_VERSION}'"
+                 '{SCHEMA_VERSION}', '{SCHED_SCHEMA_VERSION}', '{FAIR_SCHEMA_VERSION}' \
+                 or '{PREFIX_SCHEMA_VERSION}'"
             ));
         }
         Ok(BenchReport {
@@ -524,6 +576,7 @@ impl BenchReport {
     pub fn render_table(&self) -> String {
         let sched = self.rows.iter().any(|r| r.selector.is_some());
         let fair = self.rows.iter().any(|r| r.fairness.is_some());
+        let prefix = self.rows.iter().any(|r| r.prefix.is_some());
         let mut headers = vec![
             "scenario", "policy", "disp", "reps", "n", "mean_lat_s", "p50_lat_s", "p99_lat_s",
             "mean_ttft_s", "p99_ttft_s", "req/s", "preempt", "discard", "migrate", "kv_peak",
@@ -536,6 +589,11 @@ impl BenchReport {
             headers.push("fairness");
             headers.push("jain");
             headers.push("starve_s");
+        }
+        if prefix {
+            headers.push("share");
+            headers.push("hits");
+            headers.push("reused_tok");
         }
         let mut t = Table::new(&headers);
         for r in &self.rows {
@@ -566,6 +624,20 @@ impl BenchReport {
                         row.push(fr.mode.clone());
                         row.push(f(fr.jain_slowdown, 3));
                         row.push(f(fr.max_starve_age_s, 3));
+                    }
+                    None => {
+                        row.push(String::new());
+                        row.push(String::new());
+                        row.push(String::new());
+                    }
+                }
+            }
+            if prefix {
+                match &r.prefix {
+                    Some(pr) => {
+                        row.push(f(pr.share_factor, 2));
+                        row.push(pr.prefix_hits.to_string());
+                        row.push(pr.reused_tokens.to_string());
                     }
                     None => {
                         row.push(String::new());

@@ -55,6 +55,11 @@ pub struct SimScenario {
     /// default — byte-identical to the fairness-free scheduler; the
     /// fair sweep clones a scenario once per knob setting).
     pub fairness: FairnessConfig,
+    /// Enable the prefix-sharing KV cache on every engine this scenario
+    /// builds (docs/prefix_cache.md). Off — the default and every
+    /// pre-existing scenario — is byte-identical to the
+    /// per-request-charged KvManager.
+    pub prefix_cache: bool,
 }
 
 impl SimScenario {
@@ -75,6 +80,7 @@ impl SimScenario {
             max_iterations: 2_000_000,
             selector: Selector::Indexed,
             fairness: FairnessConfig::neutral(),
+            prefix_cache: false,
         }
     }
 
@@ -95,6 +101,11 @@ impl SimScenario {
 
     pub fn fairness(mut self, fairness: FairnessConfig) -> SimScenario {
         self.fairness = fairness;
+        self
+    }
+
+    pub fn prefix_cache(mut self, on: bool) -> SimScenario {
+        self.prefix_cache = on;
         self
     }
 
@@ -127,6 +138,7 @@ impl SimScenario {
                 let mut serve = ServeConfig::new(cfg, policy.clone());
                 serve.selector = self.selector;
                 serve.fairness = self.fairness.clone();
+                serve.prefix_cache = self.prefix_cache;
                 serve.clock = ClockSpec::Virtual;
                 serve.max_iterations = self.max_iterations;
                 serve.pool_tokens =
@@ -164,7 +176,7 @@ impl SimScenario {
     }
 }
 
-pub fn builtin_names() -> [&'static str; 11] {
+pub fn builtin_names() -> [&'static str; 13] {
     [
         "steady",
         "bursty",
@@ -177,7 +189,44 @@ pub fn builtin_names() -> [&'static str; 11] {
         "fair-skewed",
         "fair-adversarial",
         "fair-fleet",
+        "prefix-agentic",
+        "prefix-rag",
     ]
+}
+
+/// Default sharing factors of the `prefix-agentic` / `prefix-rag`
+/// builtins; `run_prefix_sweep` overrides them cell by cell.
+pub const PREFIX_AGENTIC_SHARE: f64 = 0.9;
+pub const PREFIX_RAG_SHARE: f64 = 0.5;
+
+/// A prefix-cache scenario at an explicit sharing factor: one tenant
+/// whose prompts are template-prefixed with probability `share`
+/// (`PrefixSpec::agentic` — few long system prompts — or
+/// `PrefixSpec::rag` — many shorter collection templates), on small
+/// replicas with a tight pool so admission queues and the prefix attach
+/// visibly moves TTFT and KV peak. Keep in sync with python/simref.py
+/// `prefix_scenario`.
+pub fn prefix_scenario(kind: &str, share: f64) -> SimScenario {
+    let (name, spec, rate) = match kind {
+        "agentic" => ("prefix-agentic", crate::workload::PrefixSpec::agentic(share), 60.0),
+        "rag" => ("prefix-rag", crate::workload::PrefixSpec::rag(share), 60.0),
+        other => panic!("unknown prefix scenario kind '{other}'"),
+    };
+    let mut s = SimScenario::new(
+        name,
+        TraceWorkload::new(vec![TenantProfile::steady(kind, rate).with_prefix(spec)]),
+    );
+    s.slots = 16;
+    // Sized so the sharing-free baseline saturates the token pool (OOM
+    // pressure exists to relieve) while the shared cells run under it —
+    // the regime where the KV-peak monotonicity claim is meaningful
+    // rather than pinned at the pool cap plus decode-overshoot jitter.
+    s.pool_frac = 0.7;
+    s.dispatch = DispatchPolicy::LeastPredictedWork;
+    s.seed = 31337;
+    s.n = 360;
+    s.prefix_cache = true;
+    s
 }
 
 /// Builtin scenario by name (see the module docs for the regimes).
@@ -309,6 +358,8 @@ pub fn builtin(name: &str) -> Option<SimScenario> {
             s.predictor = PredictorSpec::Oracle { noise: 0.0, refine_exact: true, seed: 7 };
             s
         }
+        "prefix-agentic" => prefix_scenario("agentic", PREFIX_AGENTIC_SHARE),
+        "prefix-rag" => prefix_scenario("rag", PREFIX_RAG_SHARE),
         "fair-fleet" => {
             // The 128-replica dispatch-policy × fairness point (ROADMAP
             // "dispatch-policy sweeps at that scale"): a hot short
@@ -419,6 +470,43 @@ pub fn run_sched_sweep(cfg: &Config) -> Result<BenchReport> {
         }
     }
     Ok(BenchReport::new_sched(rows))
+}
+
+/// Sharing factors of the prefix grid, ascending — the monotonicity
+/// claim (TTFT / KV peak improving with sharing under affinity) is
+/// checked across exactly these points. Keep in sync with
+/// python/simref.py `PREFIX_SHARES`.
+pub const PREFIX_SHARES: [f64; 3] = [0.0, 0.5, 0.9];
+
+/// The checked-in prefix-cache grid (`benchmarks/BENCH_prefix.json`,
+/// schema `trail.simlab.prefix/v1`; docs/prefix_cache.md): each prefix
+/// scenario kind × sharing factor × dispatch policy (plain
+/// least-predicted-work vs cache-affinity) at 2 replicas under TRAIL
+/// c=0.8, the two dispatch cells paired on the identical trace. Keep
+/// the grid in sync with python/simref.py `prefix_rows`.
+pub fn run_prefix_sweep(cfg: &Config) -> Result<BenchReport> {
+    let policy = Policy::Trail { c: 0.8 };
+    let mut rows = Vec::new();
+    for kind in ["agentic", "rag"] {
+        for &share in &PREFIX_SHARES {
+            let base = prefix_scenario(kind, share);
+            let trace = base.trace(cfg);
+            for dispatch in [DispatchPolicy::LeastPredictedWork, DispatchPolicy::CacheAffinity] {
+                let mut sc = base.clone();
+                sc.dispatch = dispatch;
+                let out = sc.run_trace(cfg, &policy, 2, true, &trace)?;
+                let pr = crate::sim::report::PrefixRow {
+                    share_factor: share,
+                    prefix_hits: out.prefix_hits,
+                    reused_tokens: out.reused_tokens,
+                };
+                let mut row = SweepRow::from_outcome_full(&sc, &policy, 2, true, out, false, false);
+                row.prefix = Some(pr);
+                rows.push(row);
+            }
+        }
+    }
+    Ok(BenchReport::new_prefix(rows))
 }
 
 /// Starvation-guard quantum of the fairness bench (virtual seconds;

@@ -31,8 +31,50 @@ impl RequestSpec {
     }
 }
 
+/// Controllable prompt-prefix sharing for agentic / RAG trace shapes
+/// (docs/prefix_cache.md): a tenant draws each prompt as one of
+/// `n_templates` fixed prefixes (probability `share_p`) followed by a
+/// unique tail, or as a fully unique prompt of the same total length.
+/// Template prefixes are derived from the tenant's spec seed alone, so
+/// the same seed always produces the same template set, and legacy
+/// (non-prefix) tenants consume exactly the RNG draws they always did.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefixSpec {
+    /// Distinct shared prefixes (agent loops: few; RAG: many).
+    pub n_templates: usize,
+    /// Template length in tokens, BOS included. Multiples of the KV
+    /// prefix block (16) share every template block.
+    pub prefix_len: usize,
+    /// Probability a request uses a template (the sharing factor).
+    pub share_p: f64,
+    /// Unique-tail length range (inclusive), tokens.
+    pub tail_min: usize,
+    pub tail_max: usize,
+}
+
+impl PrefixSpec {
+    /// Agent-loop shape: a handful of long system prompts, most
+    /// requests re-entering one of them.
+    pub fn agentic(share_p: f64) -> PrefixSpec {
+        PrefixSpec { n_templates: 4, prefix_len: 96, share_p, tail_min: 16, tail_max: 48 }
+    }
+
+    /// RAG shape: many shorter templates (one per collection), moderate
+    /// re-use per template.
+    pub fn rag(share_p: f64) -> PrefixSpec {
+        PrefixSpec { n_templates: 16, prefix_len: 64, share_p, tail_min: 24, tail_max: 64 }
+    }
+}
+
+/// Salt for the template stream: template tokens come from
+/// `SplitMix64::new(seed ^ PREFIX_TEMPLATE_SALT)`, a stream disjoint
+/// from the per-request master (which starts at `seed`), so adding
+/// templates perturbs no legacy draw.
+pub const PREFIX_TEMPLATE_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
 pub struct WorkloadGen {
     master: SplitMix64,
+    seed: u64,
     next_rid: u64,
     model: ModelConfig,
     bins: BinsConfig,
@@ -43,10 +85,82 @@ impl WorkloadGen {
     pub fn new(cfg: &Config, seed: u64) -> Self {
         Self {
             master: SplitMix64::new(seed),
+            seed,
             next_rid: 0,
             model: cfg.model.clone(),
             bins: cfg.bins.clone(),
             w: cfg.workload.clone(),
+        }
+    }
+
+    /// The tenant's fixed template prefixes under `spec`, derived from
+    /// the generator seed only (stable across however many requests
+    /// have been drawn).
+    pub fn prefix_templates(&self, spec: &PrefixSpec) -> Vec<Vec<i32>> {
+        assert!(spec.n_templates >= 1 && spec.prefix_len >= 2, "degenerate prefix spec");
+        let mut rng = SplitMix64::new(self.seed ^ PREFIX_TEMPLATE_SALT);
+        let lo = self.model.first_content_id as i64;
+        let hi = self.model.vocab as i64 - 1;
+        (0..spec.n_templates)
+            .map(|_| {
+                let mut t = Vec::with_capacity(spec.prefix_len);
+                t.push(self.model.bos_id);
+                for _ in 1..spec.prefix_len {
+                    t.push(rng.next_range(lo, hi) as i32);
+                }
+                t
+            })
+            .collect()
+    }
+
+    /// Prefix-sharing request draw (see [`PrefixSpec`]): output length
+    /// first (same sampler as [`WorkloadGen::next_request`]), then the
+    /// share coin, template index, and tail length — drawn
+    /// unconditionally so shared and unique requests of the same rid
+    /// have identical prompt lengths, keeping sharing-factor sweeps
+    /// paired on every cost-relevant dimension. Mirrored line-for-line
+    /// by python/simref.py `next_prefix_request`.
+    pub fn next_prefix_request(
+        &mut self,
+        spec: &PrefixSpec,
+        templates: &[Vec<i32>],
+    ) -> RequestSpec {
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        let mut rng = self.master.split();
+        let n_out = sample_output_len(&mut rng, &self.w);
+        let shared = rng.next_f64() < spec.share_p;
+        let t_idx = rng.next_range(0, templates.len() as i64 - 1) as usize;
+        let tail_len = rng.next_range(spec.tail_min as i64, spec.tail_max as i64) as usize;
+        let lo = self.model.first_content_id as i64;
+        let hi = self.model.vocab as i64 - 1;
+        let mut prompt = Vec::with_capacity(spec.prefix_len + tail_len);
+        if shared {
+            prompt.extend_from_slice(&templates[t_idx]);
+        } else {
+            prompt.push(self.model.bos_id);
+            for _ in 1..spec.prefix_len {
+                prompt.push(rng.next_range(lo, hi) as i32);
+            }
+        }
+        for _ in 0..tail_len {
+            prompt.push(rng.next_range(lo, hi) as i32);
+        }
+        // Prefix prompts run longer than the legacy workload's
+        // (prefix_len + tail can pass max_prompt), so the legacy
+        // invariant "max_prompt + max_output fits a slot" no longer
+        // holds for free — clamp the output so prompt + output still
+        // fits max_seq. Pure arithmetic after every draw: the child
+        // stream is unperturbed.
+        let n_out = n_out.min(self.model.max_seq - prompt.len()).max(1);
+        let response = (1..n_out)
+            .map(|j| response_token(&mut rng, (n_out - j - 1) as i64, &self.model, &self.w))
+            .collect();
+        RequestSpec {
+            rid,
+            prompt,
+            true_output_len: n_out,
+            response,
         }
     }
 
@@ -280,6 +394,50 @@ mod tests {
         let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
         // Right-skew: mean noticeably above median (log-normal signature).
         assert!(mean > median * 1.05, "mean={mean} median={median}");
+    }
+
+    #[test]
+    fn prefix_spec_controls_sharing_factor() {
+        let c = Config::embedded_default();
+        let spec = PrefixSpec::agentic(0.8);
+        let mut g = WorkloadGen::new(&c, 99);
+        let templates = g.prefix_templates(&spec);
+        assert_eq!(templates.len(), 4);
+        for t in &templates {
+            assert_eq!(t.len(), 96);
+            assert_eq!(t[0], c.model.bos_id);
+        }
+        // Templates are stable regardless of how many requests were drawn.
+        let reqs: Vec<RequestSpec> =
+            (0..400).map(|_| g.next_prefix_request(&spec, &templates)).collect();
+        assert_eq!(g.prefix_templates(&spec), templates);
+        let shared = reqs
+            .iter()
+            .filter(|r| templates.iter().any(|t| r.prompt.starts_with(t)))
+            .count();
+        let frac = shared as f64 / reqs.len() as f64;
+        assert!((0.7..=0.9).contains(&frac), "sharing fraction off: {frac}");
+        for r in &reqs {
+            assert!(r.prompt.len() >= 96 + 16 && r.prompt.len() <= 96 + 48);
+            assert_eq!(r.prompt[0], c.model.bos_id);
+            assert_eq!(r.response.len(), r.true_output_len - 1);
+        }
+    }
+
+    #[test]
+    fn prefix_share_zero_yields_unique_prompts() {
+        let c = Config::embedded_default();
+        let spec = PrefixSpec::rag(0.0);
+        let mut g = WorkloadGen::new(&c, 5);
+        let templates = g.prefix_templates(&spec);
+        let reqs: Vec<RequestSpec> =
+            (0..100).map(|_| g.next_prefix_request(&spec, &templates)).collect();
+        for r in &reqs {
+            assert!(
+                !templates.iter().any(|t| r.prompt.starts_with(t)),
+                "share_p=0 must never use a template"
+            );
+        }
     }
 
     #[test]

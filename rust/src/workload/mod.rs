@@ -8,5 +8,5 @@ pub mod gen;
 pub mod trace;
 
 pub use arrivals::{Arrival, ArrivalProcess};
-pub use gen::{gen_requests, RequestSpec, WorkloadGen};
+pub use gen::{gen_requests, PrefixSpec, RequestSpec, WorkloadGen};
 pub use trace::{RatePhase, TenantProfile, TraceEntry, TraceWorkload};

@@ -20,7 +20,7 @@
 use crate::config::Config;
 use crate::util::json::{parse, Json};
 use crate::util::rng::SplitMix64;
-use crate::workload::gen::WorkloadGen;
+use crate::workload::gen::{PrefixSpec, WorkloadGen};
 use crate::workload::{Arrival, RequestSpec};
 
 /// One arrival in a materialised trace.
@@ -52,6 +52,11 @@ pub struct TenantProfile {
     pub mu_shift: f64,
     /// Cycled modulation phases; empty = constant rate.
     pub phases: Vec<RatePhase>,
+    /// Prompt-prefix sharing shape (agentic / RAG tenants;
+    /// docs/prefix_cache.md). `None` — the default and every
+    /// pre-existing scenario — draws prompts exactly as before, so the
+    /// pinned bench traces are byte-identical.
+    pub prefix: Option<PrefixSpec>,
 }
 
 impl TenantProfile {
@@ -61,6 +66,7 @@ impl TenantProfile {
             rate,
             mu_shift: 0.0,
             phases: Vec::new(),
+            prefix: None,
         }
     }
 
@@ -75,11 +81,18 @@ impl TenantProfile {
                 RatePhase { rate_mult: hi, duration: hi_dur },
                 RatePhase { rate_mult: lo, duration: lo_dur },
             ],
+            prefix: None,
         }
     }
 
     pub fn mu_shift(mut self, mu_shift: f64) -> TenantProfile {
         self.mu_shift = mu_shift;
+        self
+    }
+
+    /// Give this tenant prefix-sharing prompts (see [`PrefixSpec`]).
+    pub fn with_prefix(mut self, prefix: PrefixSpec) -> TenantProfile {
+        self.prefix = Some(prefix);
         self
     }
 }
@@ -109,7 +122,7 @@ impl TraceWorkload {
     pub fn generate(&self, cfg: &Config, n: usize, seed: u64) -> Vec<TraceEntry> {
         assert!(!self.tenants.is_empty(), "trace workload needs >= 1 tenant");
         let mut master = SplitMix64::new(seed);
-        let mut streams: Vec<(Vec<f64>, WorkloadGen, usize)> = self
+        let mut streams: Vec<(Vec<f64>, WorkloadGen, usize, Vec<Vec<i32>>)> = self
             .tenants
             .iter()
             .map(|t| {
@@ -118,22 +131,33 @@ impl TraceWorkload {
                 let times = tenant_arrivals(t, n, &mut arr_rng);
                 let mut tcfg = cfg.clone();
                 tcfg.workload.lognormal_mu += t.mu_shift;
-                (times, WorkloadGen::new(&tcfg, spec_seed), 0usize)
+                let gen = WorkloadGen::new(&tcfg, spec_seed);
+                // Template prefixes live on a salted stream off the same
+                // spec seed — zero extra master draws, so non-prefix
+                // tenants' streams (and the pinned traces) are untouched.
+                let templates = match &t.prefix {
+                    Some(ps) => gen.prefix_templates(ps),
+                    None => Vec::new(),
+                };
+                (times, gen, 0usize, templates)
             })
             .collect();
         let mut out: Vec<TraceEntry> = Vec::with_capacity(n);
         while out.len() < n {
             let mut best: Option<(f64, usize)> = None;
-            for (ti, (times, _, pos)) in streams.iter().enumerate() {
+            for (ti, (times, _, pos, _)) in streams.iter().enumerate() {
                 let at = times[*pos];
                 if best.map_or(true, |(bat, _)| at < bat) {
                     best = Some((at, ti));
                 }
             }
             let (at, ti) = best.expect("non-empty tenant set");
-            let (_, gen, pos) = &mut streams[ti];
+            let (_, gen, pos, templates) = &mut streams[ti];
             *pos += 1;
-            let mut spec = gen.next_request();
+            let mut spec = match &self.tenants[ti].prefix {
+                Some(ps) => gen.next_prefix_request(ps, templates),
+                None => gen.next_request(),
+            };
             spec.rid = out.len() as u64;
             out.push(TraceEntry {
                 at,
@@ -312,6 +336,54 @@ mod tests {
         for e in ts.iter().chain(&tl) {
             assert!(e.spec.true_output_len <= c.workload.max_output);
             assert!(e.spec.true_output_len >= c.workload.min_output);
+        }
+    }
+
+    #[test]
+    fn prefix_tenant_shares_templates_and_stays_deterministic() {
+        let spec = PrefixSpec::agentic(0.9);
+        let w = TraceWorkload::new(vec![
+            TenantProfile::steady("agent", 40.0).with_prefix(spec)
+        ]);
+        let t1 = w.generate(&cfg(), 120, 4242);
+        let t2 = w.generate(&cfg(), 120, 4242);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.at.to_bits(), b.at.to_bits());
+            assert_eq!(a.spec.prompt, b.spec.prompt);
+        }
+        // At share_p 0.9 most prompts start with one of few templates:
+        // the modal 96-token prefix must repeat heavily.
+        use std::collections::HashMap;
+        let mut counts: HashMap<&[i32], usize> = HashMap::new();
+        for e in &t1 {
+            *counts.entry(&e.spec.prompt[..96]).or_default() += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        assert!(max >= 10, "expected heavy template re-use, max prefix count {max}");
+    }
+
+    #[test]
+    fn prefix_tenant_leaves_legacy_tenant_stream_untouched() {
+        // Adding a prefix tenant must not change another tenant's drawn
+        // specs for the same seed — template tokens come off a salted
+        // stream, not the shared master (the frozen-bench guarantee).
+        let legacy = TraceWorkload::new(vec![
+            TenantProfile::steady("a", 20.0),
+            TenantProfile::steady("b", 20.0),
+        ]);
+        let mixed = TraceWorkload::new(vec![
+            TenantProfile::steady("a", 20.0),
+            TenantProfile::steady("b", 20.0).with_prefix(PrefixSpec::rag(0.5)),
+        ]);
+        let t1 = legacy.generate(&cfg(), 100, 7);
+        let t2 = mixed.generate(&cfg(), 100, 7);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.at.to_bits(), b.at.to_bits(), "arrival stream moved");
+            if a.tenant == 0 {
+                assert_eq!(b.tenant, 0);
+                assert_eq!(a.spec.prompt, b.spec.prompt, "legacy tenant prompts moved");
+                assert_eq!(a.spec.true_output_len, b.spec.true_output_len);
+            }
         }
     }
 

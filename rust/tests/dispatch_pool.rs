@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use trail::config::Config;
 use trail::coordinator::dispatch::{DispatchPolicy, ReplicaPool, ReplicaSnapshot};
-use trail::coordinator::Policy;
+use trail::coordinator::{OnlineJob, Policy};
 use trail::server::http::post_generate;
 use trail::server::HttpServer;
 use trail::testkit::{Load, Scenario};
@@ -83,6 +83,56 @@ fn round_robin_splits_a_burst_exactly() {
         .run_pool(&cfg, DispatchPolicy::RoundRobin);
     assert_eq!(report.n_completed, 20);
     assert_eq!(report.per_replica_n, vec![5, 5, 5, 5]);
+}
+
+#[test]
+fn cache_affinity_pool_keeps_template_families_sticky() {
+    // End to end through the threaded pool: the dispatcher's affinity
+    // tracker (first-block hash hints, dispatch.rs) must keep requests
+    // that share a prompt template on the replica that already computed
+    // the template's KV, while the queue-imbalance guard stays cold —
+    // jobs run one at a time here, so queues never skew. The first
+    // request of each family falls back to least-predicted-work; every
+    // follow-up must land wherever its family landed first.
+    let cfg = cfg();
+    let scenario = Scenario::new(Policy::Trail { c: 0.8 });
+    let cfg2 = cfg.clone();
+    let pool = ReplicaPool::start(2, DispatchPolicy::CacheAffinity, move |_i| {
+        scenario.build_online_engine(&cfg2)
+    });
+
+    let mut specs = gen_requests(&cfg, 12, 77);
+    for (i, spec) in specs.iter_mut().enumerate() {
+        assert!(
+            spec.prompt.len() >= 16,
+            "generated prompt shorter than one prefix block"
+        );
+        // Two template families, distinguished by the first 16-token
+        // block — exactly the granularity the tracker hashes.
+        let fam = (i % 2) as i32;
+        for t in &mut spec.prompt[..16] {
+            *t = 100 + fam;
+        }
+    }
+
+    let mut landed: [Vec<usize>; 2] = [Vec::new(), Vec::new()];
+    for (i, spec) in specs.into_iter().enumerate() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let replica = pool.submit(OnlineJob { spec, done: tx }).expect("submit");
+        let done = rx.recv().expect("completion");
+        assert!(done.latency >= 0.0);
+        landed[i % 2].push(replica);
+    }
+    let reports = pool.join();
+    assert_eq!(reports.len(), 2);
+
+    for (fam, picks) in landed.iter().enumerate() {
+        let first = picks[0];
+        assert!(
+            picks.iter().all(|&r| r == first),
+            "family {fam} bounced between replicas: {picks:?}"
+        );
+    }
 }
 
 #[test]
