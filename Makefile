@@ -8,7 +8,8 @@
 .PHONY: build test bench-sim bench-dispatch bench-sim-json bench-sim-diff bench-sim-refresh \
         bench-sched bench-sched-diff bench-sched-refresh \
         bench-fair bench-fair-diff bench-fair-refresh \
-        bench-prefix bench-prefix-diff bench-prefix-refresh fmt artifacts clean
+        bench-prefix bench-prefix-diff bench-prefix-refresh \
+        bench-pred bench-pred-diff bench-pred-refresh fmt artifacts clean
 
 build:
 	cargo build --release
@@ -102,6 +103,25 @@ bench-prefix-diff: bench-prefix
 
 bench-prefix-refresh:
 	cargo run --release --bin trail-serve -- prefix --out benchmarks/BENCH_prefix.json
+
+# Predictor-arena grid (docs/predictors.md): probe/bucket/rank/online x
+# fcfs/trail over the pred-steady + pred-drift scenarios, with
+# Kendall-tau / inversion-rate / MAE quality columns. Run twice and
+# `cmp` byte-for-byte — the hard determinism gate for the predictor
+# subsystem (incl. the online-refresh EMA and the drift side-stream).
+bench-pred:
+	cargo run --release --bin trail-serve -- pred --out BENCH_pred.json
+	cargo run --release --bin trail-serve -- pred --out BENCH_pred.run2.json
+	cmp BENCH_pred.json BENCH_pred.run2.json
+	rm -f BENCH_pred.run2.json
+
+# Diff against the checked-in predictor baseline (advisory in CI, same
+# libm caveat as bench-sim-diff).
+bench-pred-diff: bench-pred
+	diff -u benchmarks/BENCH_pred.json BENCH_pred.json
+
+bench-pred-refresh:
+	cargo run --release --bin trail-serve -- pred --out benchmarks/BENCH_pred.json
 
 fmt:
 	cargo fmt

@@ -43,20 +43,32 @@ class BayesianSmoother:
         self.q = None
 
     def reset(self, p0: np.ndarray):
+        # A massless or non-finite row (a NaN sum fails every
+        # comparison) falls back to the uniform prior instead of leaving
+        # a poisoned state. Keep in sync with
+        # rust/src/predictor/smoothing.rs.
         self.q = np.asarray(p0, dtype=np.float64)
         s = self.q.sum()
-        if s > 0:
-            self.q /= s
+        if np.isfinite(s) and s > 0:
+            self.q = self.q / s
+        else:
+            k = max(len(self.q), 1)
+            self.q = np.full(len(self.q), 1.0 / k)
 
     def update(self, p: np.ndarray) -> np.ndarray:
         assert self.q is not None, "reset() before update()"
         prior = self.t @ self.q
         post = prior * np.asarray(p, dtype=np.float64)
         s = post.sum()
-        if s <= 1e-30:
-            # Degenerate disagreement: fall back to the raw classifier.
+        if not (np.isfinite(s) and s > 1e-30):
+            # Degenerate disagreement (or a non-finite classifier row):
+            # fall back to the raw classifier, and to uniform when that
+            # has no mass either.
             post = np.asarray(p, dtype=np.float64)
             s = post.sum()
+            if not (np.isfinite(s) and s > 1e-30):
+                post = np.ones(len(self.q))
+                s = post.sum()
         self.q = post / s
         return self.q
 

@@ -33,6 +33,20 @@ behind ``max_starve_age_s``, and the ``trail.simlab.fair/v1`` report
 schedule, and op counter is bit-identical to the fairness-free engine,
 which is how BENCH_seed/BENCH_sched stay byte-frozen.
 
+The predictor arena (docs/predictors.md) is mirrored too: every engine
+owns a pluggable predictor (``rust/src/predictor/arena.rs``) — the
+frozen oracle default (byte-identical to the pre-arena inline path, so
+every legacy baseline stays frozen), the noisy observed-class probe,
+the deterministic bucket classifier, the rank-only ordinal scorer, and
+the online-refresh variant that re-fits per-bucket posteriors from
+completions mid-run. Predictor quality (Kendall-τ-b, pairwise
+inversion rate, MAE over (initial prediction, truth) pairs in finish
+order) and the per-tenant drift knob (a salted side stream that flips
+the true output-length distribution mid-trace while the prompt-time
+observed class keeps describing the stale truth) pin
+``benchmarks/BENCH_pred.json`` (``trail.simlab.pred/v1``)
+cross-language exactly like the other grids.
+
 The prefix-sharing KV cache (docs/prefix_cache.md) is mirrored at the
 token level: the refcounted block trie with its running ``savings``
 counter (shared blocks charged once), attach-on-alloc with the
@@ -51,6 +65,7 @@ Usage:
     cd python && python3 simref.py sched --out ../benchmarks/BENCH_sched.json
     cd python && python3 simref.py fair --out ../benchmarks/BENCH_fair.json
     cd python && python3 simref.py prefix --out ../benchmarks/BENCH_prefix.json
+    cd python && python3 simref.py pred --out ../benchmarks/BENCH_pred.json
 """
 
 import math
@@ -90,6 +105,25 @@ PREFIX_TEMPLATE_SALT = 0x9E3779B97F4A7C15
 AFFINITY_MIN_MATCH = PREFIX_BLOCK
 AFFINITY_QUEUE_IMBALANCE = 4
 
+# Predictor arena (rust/src/predictor/arena.rs, docs/predictors.md):
+# the salt deriving each drifting tenant's side stream from its spec
+# seed, and the EMA weight of the online-refresh posterior.
+DRIFT_SALT = 0xD1F75A17ED570A7E
+ONLINE_ALPHA = 0.25
+
+
+def f64_round(x):
+    """Rust ``f64::round`` — half away from zero. Python's ``round()``
+    is banker's rounding and ``floor(x + 0.5)`` misrounds the double
+    just below 0.5, so the jitter quantisation needs this exact form."""
+    t = math.trunc(x)
+    d = x - t
+    if d >= 0.5:
+        return t + 1
+    if d <= -0.5:
+        return t - 1
+    return t
+
 
 class Req:
     __slots__ = (
@@ -97,16 +131,20 @@ class Req:
         "generated", "kv_written", "initial_pred", "pred_remaining",
         "arrival", "first_token_at", "finished_at", "wait_started",
         "starve_level", "n_preemptions", "n_discards", "n_migrations",
-        "prompt",
+        "prompt", "observed",
     )
 
-    def __init__(self, rid, plen, n_out, tenant, arrival, prompt=None):
+    def __init__(self, rid, plen, n_out, tenant, arrival, prompt=None,
+                 observed=0):
         self.rid = rid
         self.plen = plen
         self.n_out = n_out
         # Prompt token ids — only prefix traces carry them (the engine
         # reads token values only through the prefix trie).
         self.prompt = prompt
+        # Noisy prompt-time length class (RequestSpec::observed_class) —
+        # the only feature the arena predictors are allowed to read.
+        self.observed = observed
         self.tenant = tenant
         self.phase = WAITING
         self.slot = None
@@ -157,6 +195,191 @@ def rank(policy, r):
         locked = (not r.preemptable(policy[1])) and r.phase != WAITING
         key = r.pred_remaining
     return (0 if locked else 1, key, tie, r.rid)
+
+
+# ---------------------------------------------------------------------------
+# Predictor arena (rust/src/predictor/arena.rs)
+# ---------------------------------------------------------------------------
+#
+# Every engine owns one predictor instance (all replicas seeded alike,
+# exactly as PredictorSpec::build does in Rust). The oracle is the
+# frozen default — byte-identical to the pre-arena inline path — while
+# the arena lineup (probe / bucket / rank / online) reads only the
+# request's noisy observed class, the stale prompt-time feature that
+# mid-trace drift invalidates.
+
+
+class OraclePred:
+    """OraclePredictor{noise, refine_exact: true, seed} — multiplicative
+    log-normal noise on the true output length, exact refinement."""
+
+    name = "oracle"
+
+    def __init__(self, noise, seed):
+        self.noise = noise
+        self.rng = SplitMix64(seed)
+
+    def init_request(self, r):
+        # One normal draw per admission, in admission order (skipped
+        # entirely at noise 0 — Req.__init__ already holds the truth).
+        if self.noise != 0.0:
+            z = normal_from_uniform(self.rng.next_f64())
+            est = max(float(r.n_out) * math.exp(self.noise * z), 1.0)
+            r.initial_pred = est
+            r.pred_remaining = est
+
+    def on_token(self, r):
+        r.pred_remaining = max(float(r.n_out - r.generated), 0.0)
+
+    def observe_completion(self, r):
+        pass
+
+
+class ArenaProbePred:
+    """ArenaProbe — a frozen offline probe: log-normal noise around the
+    observed-class midpoint, static countdown refinement."""
+
+    name = "probe"
+
+    def __init__(self, noise, seed):
+        self.noise = noise
+        self.rng = SplitMix64(seed)
+
+    def init_request(self, r):
+        z = normal_from_uniform(self.rng.next_f64())
+        est = max(BINS.midpoint(r.observed) * math.exp(self.noise * z), 1.0)
+        r.initial_pred = est
+        r.pred_remaining = est
+
+    def on_token(self, r):
+        r.pred_remaining = max(r.initial_pred - float(r.generated), 0.0)
+
+    def observe_completion(self, r):
+        pass
+
+
+class BucketPred:
+    """BucketPredictor — deterministic classifier: the observed-class
+    midpoint exactly, static countdown refinement."""
+
+    name = "bucket"
+
+    def init_request(self, r):
+        est = BINS.midpoint(r.observed)
+        r.initial_pred = est
+        r.pred_remaining = est
+
+    def on_token(self, r):
+        r.pred_remaining = max(r.initial_pred - float(r.generated), 0.0)
+
+    def observe_completion(self, r):
+        pass
+
+
+class RankPred:
+    """RankOnlyPredictor — comparable ordinal scores (observed class +
+    1), never absolute lengths: Kendall-τ survives any monotone drift
+    of the truth while MAE is meaningless by construction."""
+
+    name = "rank"
+
+    def init_request(self, r):
+        est = float(r.observed + 1)
+        r.initial_pred = est
+        r.pred_remaining = est
+
+    def on_token(self, r):
+        pass
+
+    def observe_completion(self, r):
+        pass
+
+
+class OnlinePred:
+    """OnlinePredictor — per-bucket EMA posteriors re-fit from observed
+    completions mid-run (the ELIS feedback loop); buckets with zero
+    observations fall back to the midpoint instead of dividing by an
+    empty count."""
+
+    name = "online"
+
+    def __init__(self):
+        self.post = [0.0] * BINS.n_bins
+        self.seen = [False] * BINS.n_bins
+
+    def init_request(self, r):
+        b = r.observed
+        est = self.post[b] if self.seen[b] else BINS.midpoint(b)
+        r.initial_pred = est
+        r.pred_remaining = est
+
+    def on_token(self, r):
+        r.pred_remaining = max(r.initial_pred - float(r.generated), 0.0)
+
+    def observe_completion(self, r):
+        b = r.observed
+        x = float(r.n_out)
+        if self.seen[b]:
+            self.post[b] = (1.0 - ONLINE_ALPHA) * self.post[b] + ONLINE_ALPHA * x
+        else:
+            self.post[b] = x
+            self.seen[b] = True
+
+
+def build_predictor(spec, noise, seed):
+    """PredictorSpec::build — spec is None (oracle default) or a
+    ("oracle"|"probe"|"bucket"|"rank"|"online",) tuple."""
+    kind = spec[0] if spec is not None else "oracle"
+    if kind == "oracle":
+        return OraclePred(noise, seed)
+    if kind == "probe":
+        return ArenaProbePred(noise, seed)
+    if kind == "bucket":
+        return BucketPred()
+    if kind == "rank":
+        return RankPred()
+    if kind == "online":
+        return OnlinePred()
+    raise ValueError(f"unknown predictor spec {spec!r}")
+
+
+def pred_quality(pairs):
+    """(kendall_tau, inversion_rate, mae, n) over (initial prediction,
+    truth) pairs — τ-b with tie corrections, D/(C+D) over comparable
+    pairs, MAE accumulated in recorded order. Non-finite pairs are
+    dropped; fewer than two survivors yields all-zero quality. Mirrors
+    arena.rs pred_quality op for op."""
+    pts = [(p, t) for (p, t) in pairs if math.isfinite(p) and math.isfinite(t)]
+    n = len(pts)
+    if n < 2:
+        return 0.0, 0.0, 0.0, n
+    acc = 0.0
+    for (p, t) in pts:
+        acc += abs(p - t)
+    mae = acc / float(n)
+    conc = 0
+    disc = 0
+    tie_p = 0
+    tie_t = 0
+    for i in range(n):
+        pi, ti = pts[i]
+        for j in range(i + 1, n):
+            dp = pi - pts[j][0]
+            dt = ti - pts[j][1]
+            if dp == 0.0:
+                tie_p += 1
+            if dt == 0.0:
+                tie_t += 1
+            if dp != 0.0 and dt != 0.0:
+                if (dp > 0.0) == (dt > 0.0):
+                    conc += 1
+                else:
+                    disc += 1
+    n0 = n * (n - 1) // 2
+    denom = math.sqrt(float(n0 - tie_p) * float(n0 - tie_t))
+    tau = 0.0 if denom <= 0.0 else float(conc - disc) / denom
+    inv = 0.0 if conc + disc == 0 else float(disc) / float(conc + disc)
+    return tau, inv, mae, n
 
 
 # ---------------------------------------------------------------------------
@@ -624,14 +847,14 @@ class Engine:
 
     def __init__(self, policy, slots, pool_tokens, noise=0.4, pred_seed=7,
                  max_iterations=2_000_000, selector="indexed", fair=NEUTRAL_FAIR,
-                 prefix_cache=False):
+                 prefix_cache=False, predictor=None):
         self.policy = policy
         self.slots = slots
         self.kv = Kv(slots, pool_tokens)
         if prefix_cache:
             self.kv.enable_prefix_cache()
         self.noise = noise
-        self.pred_rng = SplitMix64(pred_seed)
+        self.predictor = build_predictor(predictor, noise, pred_seed)
         self.now = 0.0
         self.reqs = []
         self.finished_rids = []
@@ -661,6 +884,8 @@ class Engine:
         self.m_migrations = 0
         self.peak_mem = 0
         self.max_wait_age = 0.0
+        # Metrics::pred_pairs — (initial prediction, truth) in finish order.
+        self.pred_pairs = []
 
     # --- clock ---
     def sync_clock(self, at):
@@ -685,13 +910,10 @@ class Engine:
         return s
 
     def admit(self, req):
-        # OraclePredictor::init_request (one normal draw per admission,
-        # in admission order, from this engine's predictor stream).
-        if self.noise != 0.0:
-            z = normal_from_uniform(self.pred_rng.next_f64())
-            est = max(float(req.n_out) * math.exp(self.noise * z), 1.0)
-            req.initial_pred = est
-            req.pred_remaining = est
+        # Predictor::init_request (for the noisy predictors: one normal
+        # draw per admission, in admission order, from this engine's
+        # predictor stream).
+        self.predictor.init_request(req)
         self.sched_idx.insert(req.rid, self.rank_of(req))
         self.rid_pos[req.rid] = len(self.reqs)
         self.shares_on_admit(req.tenant)
@@ -897,7 +1119,7 @@ class Engine:
                 r = reqs[idx]
                 r.kv_written = max(r.kv_written, r.plen + r.generated - 1 + 1)
                 r.generated += 1
-                r.pred_remaining = max(float(r.n_out - r.generated), 0.0)
+                self.predictor.on_token(r)
                 self.kv.charge(r.slot, r.rid, r.kv_written)
                 self.finish_if_done(r, now)
                 if r.phase != FINISHED:
@@ -941,6 +1163,7 @@ class Engine:
                 r.slot = None
             self.sched_idx.remove(r.rid)
             self.shares_on_remove(r.tenant)
+            self.predictor.observe_completion(r)
             # Metrics::observe_finish
             self.n_finished += 1
             self.lat.append(r.finished_at - r.arrival)
@@ -948,6 +1171,7 @@ class Engine:
             self.m_preemptions += r.n_preemptions
             self.m_discards += r.n_discards
             self.m_migrations += r.n_migrations
+            self.pred_pairs.append((r.initial_pred, float(r.n_out)))
             self.finished_rids.append(r.rid)
 
     # --- prefix-aware victim ranking (ServingEngine::victim_rank) ---
@@ -1320,10 +1544,15 @@ class TenantGen:
         x = math.exp(self.w.lognormal_mu + self.w.lognormal_sigma * z)
         n = int(x + 0.5)
         n_out = min(max(n, self.w.min_output), self.w.max_output)
-        # observed_class draws one uniform (value unused here)
-        rng.next_f64()
+        # observed_class: the same single uniform the pre-arena mirror
+        # discarded — the prompt sees the true class only noisily
+        # (gen.rs observed_class, the arena predictors' sole feature).
+        cls = BINS.bin_of(float(n_out))
+        zc = normal_from_uniform(rng.next_f64())
+        obs = cls + f64_round(self.w.class_jitter_sigma * zc)
+        obs = min(max(obs, 0), BINS.n_bins - 1)
         plen = rng.next_range(self.w.min_prompt, self.w.max_prompt)
-        return plen, n_out
+        return plen, n_out, obs
 
     # --- prefix-sharing workload (WorkloadGen::{prefix_templates,
     #     next_prefix_request}, rust/src/workload/gen.rs) ---
@@ -1369,7 +1598,10 @@ class TenantGen:
         # Prompt + output must fit one slot (gen.rs clamps the same way:
         # prefix prompts outgrow the legacy max_prompt bound).
         n_out = max(min(n_out, MAX_SEQ - len(prompt)), 1)
-        return len(prompt), n_out, prompt
+        # No prompt-time jitter draw on the prefix path: the observed
+        # class is the post-clamp true bin, with zero extra draws
+        # (gen.rs next_prefix_request sets observed_class the same way).
+        return len(prompt), n_out, prompt, BINS.bin_of(float(n_out))
 
 
 def prefix_agentic(share_p):
@@ -1383,21 +1615,30 @@ def prefix_rag(share_p):
 
 
 def generate_trace(tenants, n, seed):
-    """tenants: list of (rate, mu_shift, phases) or
-    (rate, mu_shift, phases, prefix_spec) — phases: [(mult, dur)].
-    Entries are (at, tenant, rid, plen, n_out, prompt); prompt is None
-    for legacy tenants (the co-sim never reads their token values)."""
+    """tenants: list of (rate, mu_shift, phases[, prefix_spec[, drift]])
+    — phases: [(mult, dur)]; drift: (at, mu_delta, jitter_sigma) flips
+    the true output-length distribution of that (legacy) tenant's
+    requests arriving at/after `at` — a multiplicative log-normal shift
+    drawn from a salted side stream, so zero draws land on the master
+    or child streams and every pre-drift / legacy byte is untouched.
+    The prompt-time observed class keeps describing the *pre-drift*
+    truth: that stale feature is exactly what the predictor arena has
+    to survive. Entries are (at, tenant, rid, plen, n_out, prompt,
+    observed); prompt is None for legacy tenants (the co-sim never
+    reads their token values)."""
     master = SplitMix64(seed)
     streams = []
     for tenant in tenants:
         rate, mu_shift, phases = tenant[0], tenant[1], tenant[2]
         prefix = tenant[3] if len(tenant) > 3 else None
+        drift = tenant[4] if len(tenant) > 4 else None
         spec_seed = master.next_u64()
         arr_rng = SplitMix64(master.next_u64())
         times = tenant_arrivals(rate, phases, n, arr_rng)
         gen = TenantGen(spec_seed, mu_shift)
         templates = gen.prefix_templates(prefix) if prefix is not None else None
-        streams.append([times, gen, 0, prefix, templates])
+        drift_rng = SplitMix64(spec_seed ^ DRIFT_SALT) if drift is not None else None
+        streams.append([times, gen, 0, prefix, templates, drift, drift_rng])
     out = []
     while len(out) < n:
         best = None
@@ -1409,11 +1650,23 @@ def generate_trace(tenants, n, seed):
         stream = streams[ti]
         stream[2] += 1
         if stream[3] is not None:
-            plen, n_out, prompt = stream[1].next_prefix_request(stream[3], stream[4])
+            plen, n_out, prompt, obs = stream[1].next_prefix_request(stream[3], stream[4])
         else:
-            plen, n_out = stream[1].next_request()
+            plen, n_out, obs = stream[1].next_request()
             prompt = None
-        out.append((at, ti, len(out), plen, n_out, prompt))
+        drift = stream[5]
+        if drift is not None and stream[3] is None and at >= drift[0]:
+            # WorkloadGen::apply_drift — shift the already-drawn truth;
+            # the child split regenerates the response tokens in Rust
+            # (token values never reach the co-sim, so the mirror only
+            # advances the side stream).
+            rng = stream[6]
+            z = normal_from_uniform(rng.next_f64())
+            x = float(n_out) * math.exp(drift[1] + drift[2] * z)
+            w = stream[1].w
+            n_out = min(max(int(x + 0.5), w.min_output), w.max_output)
+            rng.split()
+        out.append((at, ti, len(out), plen, n_out, prompt, obs))
     return out
 
 
@@ -1451,10 +1704,10 @@ def pick_replica(dispatch, engines, rr, prompt=None):
 
 
 def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, noise=0.4,
-            selector="indexed", fair=NEUTRAL_FAIR, prefix_cache=False):
+            selector="indexed", fair=NEUTRAL_FAIR, prefix_cache=False, predictor=None):
     engines = [
         Engine(policy, slots, pool_tokens, noise=noise, selector=selector, fair=fair,
-               prefix_cache=prefix_cache)
+               prefix_cache=prefix_cache, predictor=predictor)
         for _ in range(replicas)
     ]
     n_total = len(trace)
@@ -1465,8 +1718,8 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
     ttft = []
     finished = 0
     stalled = [False] * replicas
-    rid_tenant = {rid: tenant for (_, tenant, rid, _, _, _) in trace}
-    n_tenants = max((t for (_, t, _, _, _, _) in trace), default=-1) + 1
+    rid_tenant = {e[2]: e[1] for e in trace}
+    n_tenants = max((e[1] for e in trace), default=-1) + 1
     tenant_lat = [[] for _ in range(n_tenants)]
     tenant_ttft = [[] for _ in range(n_tenants)]
     tenant_slow = [[] for _ in range(n_tenants)]
@@ -1514,12 +1767,12 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
                 active = (now, i)
 
         if nxt < n_total and (active is None or trace[nxt][0] <= active[0]):
-            at, tenant, rid, plen, n_out, prompt = trace[nxt]
+            at, tenant, rid, plen, n_out, prompt, obs = trace[nxt]
             nxt += 1
             idx = pick_replica(dispatch, engines, rr, prompt)
             rr += 1
             engines[idx].sync_clock(at)
-            engines[idx].admit(Req(rid, plen, n_out, tenant, at, prompt))
+            engines[idx].admit(Req(rid, plen, n_out, tenant, at, prompt, obs))
             stalled[idx] = False
             continue
 
@@ -1551,7 +1804,15 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
     for e in engines:
         if e.max_wait_age > max_starve:
             max_starve = e.max_wait_age
+    # Replica-index order concatenation (finish order within each
+    # engine) — the Rust driver aggregates the same way, so the MAE
+    # float-sum order matches exactly.
+    pred_pairs = []
+    for e in engines:
+        pred_pairs.extend(e.pred_pairs)
     return {
+        "predictor": engines[0].predictor.name,
+        "pred_pairs": pred_pairs,
         "n": finished,
         "lat": lat,
         "ttft": ttft,
@@ -1649,6 +1910,27 @@ def builtin_scenarios():
             ],
             2560, 777, "jsq", 8, 0.5, 0.4,
         ),
+        # Predictor-arena grid (BENCH_pred.json, docs/predictors.md):
+        # a two-tenant overloaded mix where scheduling quality hinges on
+        # telling the short tenant from the long one. The drift variant
+        # is byte-identical except tenant 0's true lengths flip (×e^1.2,
+        # ~3.3x) at t=2.5 while its prompt-time observed class keeps
+        # describing the old truth — the stale-feature regime only
+        # online refresh (and the drift-immune rank scorer) survives.
+        "pred-steady": (
+            [
+                (40.0, -0.2, []),
+                (20.0, 0.4, []),
+            ],
+            400, 2718, "jsq", 16, 0.4, 0.4,
+        ),
+        "pred-drift": (
+            [
+                (40.0, -0.2, [], None, (2.5, 1.2, 0.2)),
+                (20.0, 0.4, []),
+            ],
+            400, 2718, "jsq", 16, 0.4, 0.4,
+        ),
     }
 
 
@@ -1666,6 +1948,8 @@ def scenario_tenant_names():
         "fair-skewed": ["flood", "longtail"],
         "fair-adversarial": ["shorts", "longs"],
         "fair-fleet": ["hot", "tail"],
+        "pred-steady": ["shifting", "stable"],
+        "pred-drift": ["shifting", "stable"],
     }
 
 
@@ -1972,17 +2256,68 @@ def prefix_rows():
     return rows
 
 
+# Predictor-arena sweep (rust/src/sim/scenario.rs run_pred_sweep — keep
+# in sync): predictor × policy × scenario at 2 replicas. The fcfs rows
+# are the predictor-insensitive control — fcfs never reads predictions,
+# so its latency is identical across predictors and only the quality
+# metrics move; the trail rows show quality mapping to p99.
+PRED_SCHEMA = "trail.simlab.pred/v1"
+PRED_POLICIES = [("fcfs",), ("trail", 0.8)]
+PRED_PREDICTORS = [("probe",), ("bucket",), ("rank",), ("online",)]
+PRED_SCENARIOS = ("pred-steady", "pred-drift")
+
+
+def pred_obj(out):
+    """PredRow::from_outcome."""
+    tau, inv, mae, n = pred_quality(out["pred_pairs"])
+    return {
+        "predictor": out["predictor"],
+        "kendall_tau": tau,
+        "inversion_rate": inv,
+        "mae": mae,
+        "n_pairs": n,
+    }
+
+
+def pred_rows():
+    rows = []
+    scs = builtin_scenarios()
+    for name in PRED_SCENARIOS:
+        tenants, n, seed, dispatch, slots, pool_frac, noise = scs[name]
+        trace = generate_trace(tenants, n, seed)
+        pool_tokens = int((slots * MAX_SEQ) * pool_frac)
+        for policy in PRED_POLICIES:
+            for spec in PRED_PREDICTORS:
+                out = run_sim(trace, policy, 2, dispatch, True, slots, pool_tokens,
+                              noise, predictor=spec)
+                row = make_row(name, policy, dispatch, 2, True, seed, out)
+                row["pred"] = pred_obj(out)
+                rows.append(row)
+    return rows
+
+
 DEFAULT_POLICIES = [("fcfs",), ("trail", 1.0), ("trail", 0.8)]
 
 
 def main(argv):
-    if not argv or argv[0] not in ("sweep", "sched", "fair", "prefix"):
+    if not argv or argv[0] not in ("sweep", "sched", "fair", "prefix", "pred"):
         print(__doc__)
         return 2
     out_path = None
     if "--out" in argv:
         out_path = argv[argv.index("--out") + 1]
-    if argv[0] == "prefix":
+    if argv[0] == "pred":
+        rows = pred_rows()
+        text = report_json(rows, schema=PRED_SCHEMA)
+        for row in rows:
+            pr = row["pred"]
+            print(
+                f"{row['scenario']:>12} {row['policy']:>10} {pr['predictor']:>7} "
+                f"mean={row['mean_latency_s']:.3f}s p99={row['p99_latency_s']:.3f}s "
+                f"tau={pr['kendall_tau']:.3f} inv={pr['inversion_rate']:.3f} "
+                f"mae={pr['mae']:.1f} discard={row['discards']}"
+            )
+    elif argv[0] == "prefix":
         rows = prefix_rows()
         text = report_json(rows, schema=PREFIX_SCHEMA)
         for row in rows:

@@ -72,6 +72,22 @@ def test_smoothing_reduces_noise_mae():
     assert np.mean(ref_err) < np.mean(raw_err)
 
 
+def test_nonfinite_classifier_recovers():
+    # Regression: a NaN classifier row used to poison q — the NaN sum
+    # fails `s <= 1e-30`, so the degenerate-disagreement fallback never
+    # fired. Mirrors rust smoothing.rs `nan_classifier_row_recovers`.
+    sm = BayesianSmoother()
+    sm.reset(np.ones(BINS.n_bins) / BINS.n_bins)
+    p = np.full(BINS.n_bins, 0.1)
+    p[4] = np.nan
+    sm.update(p)
+    assert np.isfinite(sm.q).all()
+    assert abs(sm.q.sum() - 1.0) < 1e-9
+    # A non-finite reset row falls back to uniform the same way.
+    sm.reset(p)
+    assert np.allclose(sm.q, 1.0 / BINS.n_bins)
+
+
 def test_degenerate_disagreement_recovers():
     sm = BayesianSmoother()
     q0 = np.zeros(BINS.n_bins)

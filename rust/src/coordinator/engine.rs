@@ -471,6 +471,12 @@ impl<B: ModelBackend> ServingEngine<B> {
         self.clock.now()
     }
 
+    /// Name of the predictor this engine schedules on (the co-sim
+    /// driver stamps it into `SimOutcome`/BENCH_pred.json rows).
+    pub fn predictor_name(&self) -> &'static str {
+        self.predictor.name()
+    }
+
     /// Mirror every status change into `cell` (publishes once
     /// immediately). Used by `ReplicaPool` to read load cross-thread.
     pub fn set_status_cell(&mut self, cell: Arc<SharedStatus>) {
@@ -940,6 +946,9 @@ impl<B: ModelBackend> ServingEngine<B> {
             }
             self.sched_idx.remove(r.spec.rid);
             self.shares.on_remove(r.tenant);
+            // Online predictors re-fit from the completion before the
+            // metrics stamp it (predictor::arena::OnlinePredictor).
+            self.predictor.observe_completion(r);
             self.metrics.observe_finish(r);
             self.finished_rids.push(r.spec.rid);
         }

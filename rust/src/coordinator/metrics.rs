@@ -36,6 +36,11 @@ pub struct Metrics {
     pub n_iterations: u64,
     pub peak_mem_tokens: usize,
     pub peak_slots: usize,
+    /// `(initial prediction, true output length)` per finished request,
+    /// finish order — the raw material for the predictor-quality
+    /// accounting (`predictor::arena::pred_quality`; Kendall-τ /
+    /// inversion rate / MAE in BENCH_pred.json).
+    pub pred_pairs: Vec<(f64, f64)>,
 }
 
 impl Metrics {
@@ -48,6 +53,7 @@ impl Metrics {
         self.n_request_migrations += r.n_migrations;
         self.total_output_tokens += r.spec.true_output_len as u64;
         self.total_prefill_tokens += r.spec.prompt.len() as u64;
+        self.pred_pairs.push((r.initial_pred, r.spec.true_output_len as f64));
     }
 
     pub fn throughput_tok_s(&self) -> f64 {
@@ -121,6 +127,7 @@ mod tests {
                 prompt: vec![1; 8],
                 true_output_len: 10,
                 response: vec![9; 9],
+                observed_class: 0,
             };
             let mut r = Request::new(spec, i as f64, &bins);
             r.first_token_at = Some(i as f64 + 0.5);

@@ -165,6 +165,7 @@ mod tests {
             prompt: vec![1; 8],
             true_output_len: 64,
             response: vec![9; 63],
+            observed_class: 0,
         };
         let mut r = Request::new(spec, arrival, &bins());
         r.pred_remaining = pred;

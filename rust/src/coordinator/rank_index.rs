@@ -773,6 +773,7 @@ mod tests {
                     prompt: vec![1; g.usize_in(1, 8)],
                     true_output_len: 32,
                     response: vec![9; 31],
+                    observed_class: 0,
                 };
                 let mut r = Request::new(spec, g.f64_in(0.0, 4.0).floor(), &bins);
                 r.phase = *g.pick(&[

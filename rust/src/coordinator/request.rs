@@ -214,6 +214,7 @@ mod tests {
             prompt: vec![1; plen],
             true_output_len: n_out,
             response: (0..n_out.saturating_sub(1)).map(|i| 8 + i as i32 % 100).collect(),
+            observed_class: 0,
         }
     }
 

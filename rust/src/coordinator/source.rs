@@ -159,6 +159,7 @@ mod tests {
             prompt: vec![1, 2],
             true_output_len: 3,
             response: vec![8, 8],
+            observed_class: 0,
         }
     }
 

@@ -40,9 +40,10 @@ fn main() {
         Some("sched") => cmd_sched(&args),
         Some("fair") => cmd_fair(&args),
         Some("prefix") => cmd_prefix(&args),
+        Some("pred") => cmd_pred(&args),
         _ => {
             eprintln!(
-                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair|prefix> [options]\n\
+                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair|prefix|pred> [options]\n\
                  \n\
                  serve    — run a serving benchmark against the AOT model\n\
                  \x20        --policy fcfs|sjf|trail|srpt|trail-c<M>  (default trail)\n\
@@ -60,6 +61,7 @@ fn main() {
                  \x20        --policies fcfs,srpt,trail --replicas 2,4\n\
                  \x20        [--n <reqs>] [--seed <u64>] [--no-migration]\n\
                  \x20        [--selector indexed|reference] [--tenants]\n\
+                 \x20        [--predictor oracle|probe|bucket|rank|online]\n\
                  \x20        [--dispatch rr|jsq|least-work|affinity]\n\
                  \x20        [--fairness-quantum <s>] [--fairness-boost <tokens>]\n\
                  \x20        [--fairness-levels <n>] [--fairness-weights w0,w1,..]\n\
@@ -77,6 +79,11 @@ fn main() {
                  \x20        docs/prefix_cache.md): sharing degree x dispatch\n\
                  \x20        (least-work vs cache-affinity) over the agentic/RAG\n\
                  \x20        scenarios  [--out BENCH_prefix.json]\n\
+                 pred     — predictor arena grid (BENCH_pred.json,\n\
+                 \x20        docs/predictors.md): probe/bucket/rank/online x\n\
+                 \x20        fcfs/trail over the steady + drift scenarios, with\n\
+                 \x20        Kendall-tau / inversion / MAE quality columns\n\
+                 \x20        [--out BENCH_pred.json]\n\
                  info     — print artifact/config summary"
             );
             2
@@ -454,6 +461,23 @@ fn cmd_sim(args: &Args) -> i32 {
             }
         },
     }
+    // Predictor override (docs/predictors.md) — applied to every
+    // scenario in the sweep; absent keeps the scenario defaults (the
+    // noisy oracle, so the pinned baselines cannot move).
+    match args.str_or("predictor", "") {
+        "" => {}
+        s => match trail::testkit::PredictorSpec::parse(s, args.f64_or("pred-noise", 0.4)) {
+            Some(spec) => {
+                for sc in &mut sweep.scenarios {
+                    sc.predictor = spec.clone();
+                }
+            }
+            None => {
+                eprintln!("bad --predictor '{s}' (oracle|probe|bucket|rank|online)");
+                return 2;
+            }
+        },
+    }
     // Selector override (both implementations serve bit-identically;
     // this exists for A/B timing and the differential harness).
     match args.str_or("selector", "") {
@@ -663,6 +687,54 @@ fn cmd_prefix(args: &Args) -> i32 {
             "report ({} rows, schema {}) -> {out}",
             report.rows.len(),
             trail::sim::PREFIX_SCHEMA_VERSION
+        );
+    }
+    0
+}
+
+fn cmd_pred(args: &Args) -> i32 {
+    // Embedded config, like the other bench subcommands: the checked-in
+    // BENCH_pred.json and the Python mirror pin the embedded defaults.
+    let cfg = Config::embedded_default();
+    let report = match trail::sim::run_pred_sweep(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pred sweep failed: {e}");
+            return 1;
+        }
+    };
+    print!("{}", report.render_table());
+    // The headline claim on the console: under drift, what online
+    // refresh buys over the static probe when the scheduler actually
+    // consumes the predictions (trail rows).
+    let cell = |pred: &str| {
+        report.rows.iter().find(|r| {
+            r.scenario == "pred-drift"
+                && r.policy.starts_with("trail")
+                && r.pred.as_ref().map(|p| p.predictor.as_str()) == Some(pred)
+        })
+    };
+    if let (Some(probe), Some(online)) = (cell("probe"), cell("online")) {
+        let (ptau, otau) = (
+            probe.pred.as_ref().map(|p| p.kendall_tau).unwrap_or(0.0),
+            online.pred.as_ref().map(|p| p.kendall_tau).unwrap_or(0.0),
+        );
+        println!(
+            "pred-drift/trail: online refresh vs static probe moves p99 latency \
+             {:.3}s -> {:.3}s, Kendall-tau {:.3} -> {:.3}",
+            probe.p99_latency_s, online.p99_latency_s, ptau, otau
+        );
+    }
+    let out = args.str_or("out", "").to_string();
+    if !out.is_empty() {
+        if let Err(e) = report.save(&out) {
+            eprintln!("write {out} failed: {e}");
+            return 1;
+        }
+        println!(
+            "report ({} rows, schema {}) -> {out}",
+            report.rows.len(),
+            trail::sim::PRED_SCHEMA_VERSION
         );
     }
     0

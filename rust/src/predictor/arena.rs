@@ -1,0 +1,408 @@
+//! Predictor arena: pluggable length predictors + quality accounting
+//! (docs/predictors.md).
+//!
+//! "Efficient LLM Scheduling by Learning to Rank" shows size-based
+//! scheduling needs only *relative order*, and ELIS shows re-fitting
+//! predictions from observed completions keeps them useful under
+//! distribution drift. This module is the test bed for both claims:
+//! four predictors behind the [`Predictor`] trait, all reading the same
+//! single feature — `RequestSpec::observed_class`, the noisy prompt-time
+//! length class the workload generator stamps on every request. That
+//! feature is *stale by construction* under the drift scenarios
+//! (`TenantProfile::with_drift` shifts the truth mid-trace while the
+//! class keeps describing the old distribution), which is exactly the
+//! regime the arena exists to measure.
+//!
+//! * [`ArenaProbePredictor`] ("probe") — a frozen offline probe:
+//!   log-normal noise around the observed-class midpoint, static
+//!   countdown refinement. The quality floor.
+//! * [`BucketPredictor`] ("bucket") — deterministic classifier: the
+//!   midpoint exactly, no noise draw.
+//! * [`RankOnlyPredictor`] ("rank") — learning-to-rank stand-in: emits
+//!   the ordinal score `class + 1`, never an absolute length. Its MAE
+//!   is meaningless by construction, but its Kendall-τ survives any
+//!   monotone drift of the truth.
+//! * [`OnlinePredictor`] ("online") — per-bucket EMA posteriors re-fit
+//!   from completions mid-run (the ELIS feedback loop); the only
+//!   predictor whose absolute estimates track drift.
+//!
+//! Every implementation is mirrored op-for-op by `python/simref.py`
+//! (the in-image verification substrate) — change both or neither.
+
+use crate::config::BinsConfig;
+use crate::coordinator::request::Request;
+use crate::predictor::service::Predictor;
+use crate::runtime::Readout;
+use crate::util::rng::{normal_from_uniform, SplitMix64};
+
+/// Salt deriving a drifting tenant's side stream from its spec seed
+/// (`workload::trace`): zero draws land on the master or per-request
+/// child streams, so pre-drift and legacy trace bytes are untouched.
+pub const DRIFT_SALT: u64 = 0xD1F7_5A17_ED57_0A7E;
+
+/// EMA weight of the online-refresh posterior update.
+pub const ONLINE_ALPHA: f64 = 0.25;
+
+// ---------------------------------------------------------------------------
+// The four arena predictors
+// ---------------------------------------------------------------------------
+
+/// "probe" — log-normal noise around the observed-class midpoint at
+/// admission (one normal draw per admission, in admission order), then
+/// a static countdown: the offline-trained probe that never learns.
+pub struct ArenaProbePredictor {
+    noise: f64,
+    rng: SplitMix64,
+    midpoints: Vec<f64>,
+}
+
+impl ArenaProbePredictor {
+    pub fn new(noise: f64, seed: u64, bins: &BinsConfig) -> Self {
+        Self {
+            noise,
+            rng: SplitMix64::new(seed),
+            midpoints: bins.midpoints.clone(),
+        }
+    }
+}
+
+impl Predictor for ArenaProbePredictor {
+    fn init_request(&mut self, req: &mut Request) {
+        let z = normal_from_uniform(self.rng.next_f64());
+        let est = (self.midpoints[req.spec.observed_class] * (self.noise * z).exp()).max(1.0);
+        req.initial_pred = est;
+        req.pred_remaining = est;
+    }
+
+    fn on_token(&mut self, req: &mut Request, _readout: &Readout, _slot: usize) {
+        req.pred_remaining = (req.initial_pred - req.generated as f64).max(0.0);
+    }
+
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+}
+
+/// "bucket" — deterministic classifier: the observed-class midpoint
+/// exactly, static countdown refinement.
+pub struct BucketPredictor {
+    midpoints: Vec<f64>,
+}
+
+impl BucketPredictor {
+    pub fn new(bins: &BinsConfig) -> Self {
+        Self {
+            midpoints: bins.midpoints.clone(),
+        }
+    }
+}
+
+impl Predictor for BucketPredictor {
+    fn init_request(&mut self, req: &mut Request) {
+        let est = self.midpoints[req.spec.observed_class];
+        req.initial_pred = est;
+        req.pred_remaining = est;
+    }
+
+    fn on_token(&mut self, req: &mut Request, _readout: &Readout, _slot: usize) {
+        req.pred_remaining = (req.initial_pred - req.generated as f64).max(0.0);
+    }
+
+    fn name(&self) -> &'static str {
+        "bucket"
+    }
+}
+
+/// "rank" — comparable ordinal scores (`observed_class + 1`), never
+/// absolute lengths. SJF/TRAIL ranks only compare predictions with
+/// each other, so any order-preserving score schedules identically;
+/// MAE against true lengths is meaningless for this predictor.
+pub struct RankOnlyPredictor;
+
+impl Predictor for RankOnlyPredictor {
+    fn init_request(&mut self, req: &mut Request) {
+        let est = (req.spec.observed_class + 1) as f64;
+        req.initial_pred = est;
+        req.pred_remaining = est;
+    }
+
+    fn on_token(&mut self, _req: &mut Request, _readout: &Readout, _slot: usize) {}
+
+    fn name(&self) -> &'static str {
+        "rank"
+    }
+}
+
+/// "online" — per-bucket EMA posteriors re-fit from observed
+/// completions mid-run. A bucket with zero observations falls back to
+/// its midpoint instead of dividing by an empty count.
+pub struct OnlinePredictor {
+    post: Vec<f64>,
+    seen: Vec<bool>,
+    midpoints: Vec<f64>,
+}
+
+impl OnlinePredictor {
+    pub fn new(bins: &BinsConfig) -> Self {
+        Self {
+            post: vec![0.0; bins.n_bins],
+            seen: vec![false; bins.n_bins],
+            midpoints: bins.midpoints.clone(),
+        }
+    }
+}
+
+impl Predictor for OnlinePredictor {
+    fn init_request(&mut self, req: &mut Request) {
+        let b = req.spec.observed_class;
+        let est = if self.seen[b] {
+            self.post[b]
+        } else {
+            self.midpoints[b]
+        };
+        req.initial_pred = est;
+        req.pred_remaining = est;
+    }
+
+    fn on_token(&mut self, req: &mut Request, _readout: &Readout, _slot: usize) {
+        req.pred_remaining = (req.initial_pred - req.generated as f64).max(0.0);
+    }
+
+    fn observe_completion(&mut self, req: &Request) {
+        let b = req.spec.observed_class;
+        let x = req.spec.true_output_len as f64;
+        if self.seen[b] {
+            self.post[b] = (1.0 - ONLINE_ALPHA) * self.post[b] + ONLINE_ALPHA * x;
+        } else {
+            self.post[b] = x;
+            self.seen[b] = true;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "online"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quality accounting
+// ---------------------------------------------------------------------------
+
+/// `(kendall_tau, inversion_rate, mae, n)` over `(initial prediction,
+/// truth)` pairs — Kendall τ-b with tie corrections, D/(C+D) over the
+/// comparable pairs, MAE accumulated in recorded order (so the float
+/// sum matches the mirror exactly). Non-finite pairs are dropped;
+/// fewer than two survivors yields all-zero quality. O(n²), fine at
+/// bench sizes (n ≤ a few thousand).
+pub fn pred_quality(pairs: &[(f64, f64)]) -> (f64, f64, f64, usize) {
+    let pts: Vec<(f64, f64)> = pairs
+        .iter()
+        .copied()
+        .filter(|&(p, t)| p.is_finite() && t.is_finite())
+        .collect();
+    let n = pts.len();
+    if n < 2 {
+        return (0.0, 0.0, 0.0, n);
+    }
+    let mut acc = 0.0;
+    for &(p, t) in &pts {
+        acc += (p - t).abs();
+    }
+    let mae = acc / n as f64;
+    let mut conc = 0i64;
+    let mut disc = 0i64;
+    let mut tie_p = 0i64;
+    let mut tie_t = 0i64;
+    for i in 0..n {
+        let (pi, ti) = pts[i];
+        for &(pj, tj) in &pts[i + 1..] {
+            let dp = pi - pj;
+            let dt = ti - tj;
+            if dp == 0.0 {
+                tie_p += 1;
+            }
+            if dt == 0.0 {
+                tie_t += 1;
+            }
+            if dp != 0.0 && dt != 0.0 {
+                if (dp > 0.0) == (dt > 0.0) {
+                    conc += 1;
+                } else {
+                    disc += 1;
+                }
+            }
+        }
+    }
+    let n0 = (n * (n - 1) / 2) as i64;
+    let denom = (((n0 - tie_p) as f64) * ((n0 - tie_t) as f64)).sqrt();
+    let tau = if denom <= 0.0 {
+        0.0
+    } else {
+        (conc - disc) as f64 / denom
+    };
+    let inv = if conc + disc == 0 {
+        0.0
+    } else {
+        disc as f64 / (conc + disc) as f64
+    };
+    (tau, inv, mae, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::workload::RequestSpec;
+
+    fn req(observed_class: usize, n_out: usize) -> Request {
+        let cfg = Config::embedded_default();
+        let spec = RequestSpec {
+            rid: 1,
+            prompt: vec![1; 8],
+            true_output_len: n_out,
+            response: vec![9; n_out.saturating_sub(1)],
+            observed_class,
+        };
+        Request::new(spec, 0.0, &cfg.bins)
+    }
+
+    fn empty_readout() -> Readout {
+        Readout {
+            logits: vec![],
+            taps: vec![],
+            prompt_taps: vec![],
+            argmax: vec![],
+        }
+    }
+
+    #[test]
+    fn bucket_predicts_midpoint_and_counts_down() {
+        let cfg = Config::embedded_default();
+        let mut p = BucketPredictor::new(&cfg.bins);
+        let mut r = req(3, 100);
+        p.init_request(&mut r);
+        assert_eq!(r.initial_pred, cfg.bins.midpoints[3]);
+        r.generated = 10;
+        p.on_token(&mut r, &empty_readout(), 0);
+        assert_eq!(r.pred_remaining, cfg.bins.midpoints[3] - 10.0);
+        r.generated = 10_000;
+        p.on_token(&mut r, &empty_readout(), 0);
+        assert_eq!(r.pred_remaining, 0.0);
+    }
+
+    #[test]
+    fn rank_emits_ordinal_scores_and_never_refines() {
+        let mut p = RankOnlyPredictor;
+        let mut a = req(0, 5);
+        let mut b = req(7, 500);
+        p.init_request(&mut a);
+        p.init_request(&mut b);
+        assert_eq!(a.initial_pred, 1.0);
+        assert_eq!(b.initial_pred, 8.0);
+        b.generated = 400;
+        p.on_token(&mut b, &empty_readout(), 0);
+        assert_eq!(b.pred_remaining, 8.0);
+    }
+
+    #[test]
+    fn online_falls_back_to_midpoint_then_tracks_completions() {
+        let cfg = Config::embedded_default();
+        let mut p = OnlinePredictor::new(&cfg.bins);
+        let mut r = req(2, 200);
+        p.init_request(&mut r);
+        assert_eq!(r.initial_pred, cfg.bins.midpoints[2]);
+        // First completion seeds the bucket; later ones EMA toward it.
+        p.observe_completion(&req(2, 200));
+        let mut r2 = req(2, 200);
+        p.init_request(&mut r2);
+        assert_eq!(r2.initial_pred, 200.0);
+        p.observe_completion(&req(2, 100));
+        let mut r3 = req(2, 100);
+        p.init_request(&mut r3);
+        assert_eq!(r3.initial_pred, (1.0 - ONLINE_ALPHA) * 200.0 + ONLINE_ALPHA * 100.0);
+        // Other buckets stay on their midpoint fallback.
+        let mut r4 = req(5, 100);
+        p.init_request(&mut r4);
+        assert_eq!(r4.initial_pred, cfg.bins.midpoints[5]);
+    }
+
+    #[test]
+    fn probe_is_deterministic_per_seed_and_floored_at_one() {
+        let cfg = Config::embedded_default();
+        let mut p1 = ArenaProbePredictor::new(0.4, 7, &cfg.bins);
+        let mut p2 = ArenaProbePredictor::new(0.4, 7, &cfg.bins);
+        for obs in [0usize, 3, 9] {
+            let mut a = req(obs, 50);
+            let mut b = req(obs, 50);
+            p1.init_request(&mut a);
+            p2.init_request(&mut b);
+            assert_eq!(a.initial_pred, b.initial_pred);
+            assert!(a.initial_pred >= 1.0);
+        }
+    }
+
+    #[test]
+    fn quality_perfect_order() {
+        let pairs = vec![(1.0, 10.0), (2.0, 20.0), (3.0, 30.0)];
+        let (tau, inv, mae, n) = pred_quality(&pairs);
+        assert_eq!(tau, 1.0);
+        assert_eq!(inv, 0.0);
+        assert_eq!(n, 3);
+        assert!((mae - (9.0 + 18.0 + 27.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quality_reversed_order() {
+        let pairs = vec![(3.0, 10.0), (2.0, 20.0), (1.0, 30.0)];
+        let (tau, inv, _, _) = pred_quality(&pairs);
+        assert_eq!(tau, -1.0);
+        assert_eq!(inv, 1.0);
+    }
+
+    #[test]
+    fn quality_constant_predictions_all_ties() {
+        // Every prediction pair ties: no comparable pairs, τ denominator
+        // hits zero — both fall back to 0, not NaN.
+        let pairs = vec![(5.0, 10.0), (5.0, 20.0), (5.0, 30.0)];
+        let (tau, inv, mae, n) = pred_quality(&pairs);
+        assert_eq!(tau, 0.0);
+        assert_eq!(inv, 0.0);
+        assert_eq!(n, 3);
+        assert!((mae - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quality_ties_in_truth_use_tau_b_correction() {
+        // One tied truth pair out of three: n0 = 3, tie_t = 1 → denom =
+        // sqrt(3 * 2), conc = 2, disc = 0.
+        let pairs = vec![(1.0, 10.0), (2.0, 10.0), (3.0, 30.0)];
+        let (tau, inv, _, _) = pred_quality(&pairs);
+        assert!((tau - 2.0 / (3.0f64 * 2.0).sqrt()).abs() < 1e-12);
+        assert_eq!(inv, 0.0);
+    }
+
+    #[test]
+    fn quality_drops_non_finite_pairs() {
+        let pairs = vec![
+            (f64::NAN, 10.0),
+            (1.0, f64::INFINITY),
+            (1.0, 10.0),
+            (2.0, 20.0),
+        ];
+        let (tau, inv, mae, n) = pred_quality(&pairs);
+        assert_eq!(n, 2);
+        assert_eq!(tau, 1.0);
+        assert_eq!(inv, 0.0);
+        assert!((mae - 13.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quality_degenerate_inputs_are_all_zero() {
+        assert_eq!(pred_quality(&[]), (0.0, 0.0, 0.0, 0));
+        assert_eq!(pred_quality(&[(1.0, 2.0)]), (0.0, 0.0, 0.0, 1));
+        assert_eq!(
+            pred_quality(&[(f64::NAN, 2.0), (1.0, f64::NAN)]),
+            (0.0, 0.0, 0.0, 0)
+        );
+    }
+}

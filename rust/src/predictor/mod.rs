@@ -13,10 +13,15 @@
 //! Refinement is the Bayesian transition-matrix update of Appendix A
 //! (`smoothing`), applied per request per generated token.
 
+pub mod arena;
 pub mod mlp;
 pub mod service;
 pub mod smoothing;
 
+pub use arena::{
+    pred_quality, ArenaProbePredictor, BucketPredictor, OnlinePredictor, RankOnlyPredictor,
+    DRIFT_SALT, ONLINE_ALPHA,
+};
 pub use mlp::NativeMlp;
 pub use service::{OraclePredictor, Predictor, ProbePredictor};
 pub use smoothing::Smoother;

@@ -25,6 +25,12 @@ pub trait Predictor {
     /// refresh `pred_remaining` (TRAIL runs the probe + smoother here).
     fn on_token(&mut self, req: &mut Request, readout: &Readout, slot: usize);
 
+    /// Called exactly once when `req` finishes, before its metrics are
+    /// recorded: online predictors re-fit from the observed completion
+    /// here (the ELIS feedback loop — see `arena::OnlinePredictor`).
+    /// Default: ignore completions (static predictors).
+    fn observe_completion(&mut self, _req: &Request) {}
+
     fn name(&self) -> &'static str;
 }
 

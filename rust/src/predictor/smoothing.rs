@@ -18,9 +18,17 @@ pub struct Transition {
 
 impl Transition {
     pub fn new(bins: &BinsConfig) -> Self {
+        // Degenerate bin grids (zero/NaN width from an empty bucket
+        // config) would put inf/NaN on the diagonals; fall back to the
+        // one-bin-per-token drift instead.
+        let w = if bins.width.is_finite() && bins.width >= 1.0 {
+            bins.width
+        } else {
+            1.0
+        };
         Self {
-            stay: 1.0 - 1.0 / bins.width,
-            down: 1.0 / bins.width,
+            stay: 1.0 - 1.0 / w,
+            down: 1.0 / w,
             k: bins.n_bins,
         }
     }
@@ -56,16 +64,19 @@ impl Smoother {
         }
     }
 
-    /// Initialise from the first classifier output p^(0).
+    /// Initialise from the first classifier output p^(0). A row with no
+    /// mass — or with non-finite entries (a NaN sum fails every
+    /// comparison) — falls back to the uniform prior instead of leaving
+    /// a poisoned state.
     pub fn reset(&mut self, p0: &[f32]) {
         let s: f64 = p0.iter().map(|&x| x as f64).sum();
-        if s <= 0.0 {
-            let k = self.q.len() as f64;
-            self.q.iter_mut().for_each(|v| *v = 1.0 / k);
-        } else {
+        if s.is_finite() && s > 0.0 {
             for (q, &p) in self.q.iter_mut().zip(p0) {
                 *q = p as f64 / s;
             }
+        } else {
+            let k = self.q.len().max(1) as f64;
+            self.q.iter_mut().for_each(|v| *v = 1.0 / k);
         }
     }
 
@@ -77,15 +88,23 @@ impl Smoother {
             self.q[i] = self.prior[i] * p[i] as f64;
             s += self.q[i];
         }
-        if s <= 1e-30 {
-            // Degenerate disagreement — fall back to the raw classifier.
-            s = p.iter().map(|&x| x as f64).sum::<f64>().max(1e-30);
-            for (q, &pp) in self.q.iter_mut().zip(p) {
-                *q = pp as f64 / s;
-            }
-        } else {
+        if s.is_finite() && s > 1e-30 {
             let inv = 1.0 / s;
             self.q.iter_mut().for_each(|v| *v *= inv);
+        } else {
+            // Degenerate disagreement (or a non-finite classifier row,
+            // whose NaN sum fails every comparison) — fall back to the
+            // raw classifier, and to uniform when that has no mass
+            // either. Keep in sync with python/compile/smoothing.py.
+            let ps: f64 = p.iter().map(|&x| x as f64).sum();
+            if ps.is_finite() && ps > 1e-30 {
+                for (q, &pp) in self.q.iter_mut().zip(p) {
+                    *q = pp as f64 / ps;
+                }
+            } else {
+                let k = self.q.len().max(1) as f64;
+                self.q.iter_mut().for_each(|v| *v = 1.0 / k);
+            }
         }
     }
 
@@ -94,13 +113,20 @@ impl Smoother {
         self.q.iter().zip(midpoints).map(|(q, m)| q * m).sum()
     }
 
+    /// Last-max-wins argmax, NaN-proof: a poisoned entry fails every
+    /// comparison and is skipped (the old `partial_cmp().unwrap()`
+    /// panicked on the scheduler hot path instead). All-NaN or empty
+    /// posteriors answer bin 0.
     pub fn argmax_bin(&self) -> usize {
-        self.q
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for (i, &v) in self.q.iter().enumerate() {
+            if v >= best_v {
+                best = i;
+                best_v = v;
+            }
+        }
+        best
     }
 }
 
@@ -175,6 +201,42 @@ mod tests {
         let total: f64 = s.q.iter().sum();
         assert!((total - 1.0).abs() < 1e-9);
         assert!(s.q.iter().all(|&x| x.is_finite()));
+    }
+
+    #[test]
+    fn nan_classifier_row_recovers() {
+        // Regression: a NaN classifier row used to poison q (the NaN sum
+        // fails `s <= 1e-30`, skipping the fallback) and a later
+        // argmax_bin panicked on `partial_cmp().unwrap()`. Mirrors
+        // python/tests/test_smoothing.py
+        // `test_nonfinite_classifier_recovers`.
+        let b = bins();
+        let mut s = Smoother::new(&b);
+        s.reset(&[0.1; 10]);
+        let mut p = [0.1f32; 10];
+        p[4] = f32::NAN;
+        s.update(&p);
+        let total: f64 = s.q.iter().sum();
+        assert!(s.q.iter().all(|&x| x.is_finite()), "q poisoned: {:?}", s.q);
+        assert!((total - 1.0).abs() < 1e-9);
+        let _ = s.argmax_bin(); // must not panic
+        // A NaN reset row falls back to uniform the same way.
+        s.reset(&p);
+        assert!(s.q.iter().all(|&x| (x - 0.1).abs() < 1e-12));
+    }
+
+    #[test]
+    fn empty_bucket_grid_is_inert() {
+        // Zero-bin / zero-width configs must not divide by zero: every
+        // op degrades to a no-op instead of emitting inf/NaN.
+        let b = BinsConfig { n_bins: 0, max_len: 0, width: 0.0, midpoints: vec![] };
+        let t = Transition::new(&b);
+        assert!(t.stay.is_finite() && t.down.is_finite());
+        let mut s = Smoother::new(&b);
+        s.reset(&[]);
+        s.update(&[]);
+        assert_eq!(s.argmax_bin(), 0);
+        assert_eq!(s.predicted_length(&[]), 0.0);
     }
 
     #[test]

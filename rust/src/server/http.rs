@@ -222,6 +222,10 @@ fn parse_generate(body: &str, rid: u64) -> std::result::Result<RequestSpec, Stri
         prompt,
         true_output_len: max_tokens,
         response,
+        // Live requests carry no generator-side length class; bucket 0
+        // is the conservative "unknown" feature for arena predictors
+        // (the server's probe predictor never reads it).
+        observed_class: 0,
     })
 }
 
@@ -383,6 +387,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             true_output_len: 5,
             response: vec![8; 4],
+            observed_class: 0,
         };
         let (lat, ttft) = post_generate(&addr, &spec).unwrap();
         assert_eq!(lat, 0.5);

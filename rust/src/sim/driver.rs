@@ -82,6 +82,14 @@ pub struct SimOutcome {
     /// Prompt tokens attached from the prefix cache instead of
     /// recomputed, summed over replicas.
     pub reused_tokens: u64,
+    /// Name of the predictor the engines scheduled on (all replicas are
+    /// built alike; see `predictor::arena`).
+    pub predictor: String,
+    /// `(initial prediction, truth)` per finished request, concatenated
+    /// in replica-index order (finish order within each replica) — the
+    /// same order the Python mirror records, so the MAE float-sum in
+    /// `pred_quality` matches exactly.
+    pub pred_pairs: Vec<(f64, f64)>,
 }
 
 impl SimOutcome {
@@ -237,6 +245,7 @@ impl<B: ModelBackend> SimDriver<B> {
         let mut max_starve_age = 0.0f64;
         let mut prefix_hits = 0u64;
         let mut reused_tokens = 0u64;
+        let mut pred_pairs: Vec<(f64, f64)> = Vec::new();
         for e in &self.engines {
             let st = e.status();
             preemptions += e.metrics.n_preemptions;
@@ -250,6 +259,7 @@ impl<B: ModelBackend> SimDriver<B> {
             let (hits, reused, _) = e.prefix_stats();
             prefix_hits += hits;
             reused_tokens += reused;
+            pred_pairs.extend_from_slice(&e.metrics.pred_pairs);
         }
         Ok(SimOutcome {
             n_requests: finished,
@@ -267,6 +277,8 @@ impl<B: ModelBackend> SimDriver<B> {
             max_starve_age,
             prefix_hits,
             reused_tokens,
+            predictor: self.engines[0].predictor_name().to_string(),
+            pred_pairs,
         })
     }
 

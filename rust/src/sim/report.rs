@@ -33,6 +33,11 @@ pub const FAIR_SCHEMA_VERSION: &str = "trail.simlab.fair/v1";
 /// `prefix` section per row — sharing factor and cache counters — over
 /// the sharing-degree × dispatch-policy grid. See docs/prefix_cache.md.
 pub const PREFIX_SCHEMA_VERSION: &str = "trail.simlab.prefix/v1";
+/// Predictor-arena reports (`BENCH_pred.json`): the bench rows plus a
+/// `pred` section per row — the predictor name and its quality metrics
+/// (Kendall-τ, pairwise-inversion rate, MAE) — over the predictor ×
+/// policy × {steady, drift} grid. See docs/predictors.md.
+pub const PRED_SCHEMA_VERSION: &str = "trail.simlab.pred/v1";
 
 /// Per-tenant latency row (present when a sweep runs with
 /// `tenant_breakdown`; tenant names come from the scenario's
@@ -252,6 +257,59 @@ impl PrefixRow {
     }
 }
 
+/// The `pred` section of a `BENCH_pred.json` row: which predictor the
+/// cell ran with plus its quality over the cell's finished requests
+/// (`predictor::arena::pred_quality` over the (initial prediction,
+/// truth) pairs the metrics collected in finish order).
+#[derive(Clone, Debug)]
+pub struct PredRow {
+    /// `Predictor::name` of the engines' predictor.
+    pub predictor: String,
+    /// Kendall τ-b between initial predictions and true lengths.
+    pub kendall_tau: f64,
+    /// Discordant fraction of comparable (both-untied) pairs.
+    pub inversion_rate: f64,
+    /// Mean absolute error of the initial estimate, in tokens.
+    pub mae: f64,
+    /// Finished requests with finite (prediction, truth) pairs.
+    pub n_pairs: usize,
+}
+
+impl PredRow {
+    /// Quality metrics of one cell. Borrows the outcome, so the caller
+    /// can still hand it to `SweepRow::from_outcome_full` afterwards.
+    pub fn from_outcome(out: &SimOutcome) -> PredRow {
+        let (tau, inv, mae, n) = crate::predictor::pred_quality(&out.pred_pairs);
+        PredRow {
+            predictor: out.predictor.clone(),
+            kendall_tau: tau,
+            inversion_rate: inv,
+            mae,
+            n_pairs: n,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("predictor", Json::str(&self.predictor)),
+            ("kendall_tau", Json::Num(self.kendall_tau)),
+            ("inversion_rate", Json::Num(self.inversion_rate)),
+            ("mae", Json::Num(self.mae)),
+            ("n_pairs", Json::Num(self.n_pairs as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> PredRow {
+        PredRow {
+            predictor: j.at(&["predictor"]).as_str().to_string(),
+            kendall_tau: j.at(&["kendall_tau"]).as_f64(),
+            inversion_rate: j.at(&["inversion_rate"]).as_f64(),
+            mae: j.at(&["mae"]).as_f64(),
+            n_pairs: j.at(&["n_pairs"]).as_usize(),
+        }
+    }
+}
+
 /// One (scenario × policy × replicas) cell of a sweep.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
@@ -289,6 +347,9 @@ pub struct SweepRow {
     /// Prefix-cache sharing factor + counters — prefix sweeps only;
     /// `None` keeps every other serialisation byte-identical.
     pub prefix: Option<PrefixRow>,
+    /// Predictor name + quality metrics — pred sweeps only; `None`
+    /// keeps every other serialisation byte-identical.
+    pub pred: Option<PredRow>,
 }
 
 impl SweepRow {
@@ -380,6 +441,7 @@ impl SweepRow {
             per_tenant,
             fairness: None,
             prefix: None,
+            pred: None,
         }
     }
 
@@ -436,6 +498,9 @@ impl SweepRow {
         if let Some(prefix) = &self.prefix {
             pairs.push(("prefix", prefix.to_json()));
         }
+        if let Some(pred) = &self.pred {
+            pairs.push(("pred", pred.to_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -481,6 +546,7 @@ impl SweepRow {
                 .unwrap_or_default(),
             fairness: j.get("fairness").map(FairnessRow::from_json),
             prefix: j.get("prefix").map(PrefixRow::from_json),
+            pred: j.get("pred").map(PredRow::from_json),
         }
     }
 }
@@ -523,6 +589,13 @@ impl BenchReport {
         }
     }
 
+    pub fn new_pred(rows: Vec<SweepRow>) -> BenchReport {
+        BenchReport {
+            schema: PRED_SCHEMA_VERSION.to_string(),
+            rows,
+        }
+    }
+
     /// Deterministic serialisation: fixed top-level layout, one row
     /// object per line (row diffs stay line-local), sorted keys inside
     /// each row, trailing newline.
@@ -558,11 +631,12 @@ impl BenchReport {
             && schema != SCHED_SCHEMA_VERSION
             && schema != FAIR_SCHEMA_VERSION
             && schema != PREFIX_SCHEMA_VERSION
+            && schema != PRED_SCHEMA_VERSION
         {
             return Err(format!(
                 "schema mismatch: file is '{schema}', this binary reads \
-                 '{SCHEMA_VERSION}', '{SCHED_SCHEMA_VERSION}', '{FAIR_SCHEMA_VERSION}' \
-                 or '{PREFIX_SCHEMA_VERSION}'"
+                 '{SCHEMA_VERSION}', '{SCHED_SCHEMA_VERSION}', '{FAIR_SCHEMA_VERSION}', \
+                 '{PREFIX_SCHEMA_VERSION}' or '{PRED_SCHEMA_VERSION}'"
             ));
         }
         Ok(BenchReport {
@@ -577,6 +651,7 @@ impl BenchReport {
         let sched = self.rows.iter().any(|r| r.selector.is_some());
         let fair = self.rows.iter().any(|r| r.fairness.is_some());
         let prefix = self.rows.iter().any(|r| r.prefix.is_some());
+        let pred = self.rows.iter().any(|r| r.pred.is_some());
         let mut headers = vec![
             "scenario", "policy", "disp", "reps", "n", "mean_lat_s", "p50_lat_s", "p99_lat_s",
             "mean_ttft_s", "p99_ttft_s", "req/s", "preempt", "discard", "migrate", "kv_peak",
@@ -594,6 +669,12 @@ impl BenchReport {
             headers.push("share");
             headers.push("hits");
             headers.push("reused_tok");
+        }
+        if pred {
+            headers.push("predictor");
+            headers.push("tau");
+            headers.push("inv");
+            headers.push("mae");
         }
         let mut t = Table::new(&headers);
         for r in &self.rows {
@@ -640,6 +721,22 @@ impl BenchReport {
                         row.push(pr.reused_tokens.to_string());
                     }
                     None => {
+                        row.push(String::new());
+                        row.push(String::new());
+                        row.push(String::new());
+                    }
+                }
+            }
+            if pred {
+                match &r.pred {
+                    Some(pr) => {
+                        row.push(pr.predictor.clone());
+                        row.push(f(pr.kendall_tau, 3));
+                        row.push(f(pr.inversion_rate, 3));
+                        row.push(f(pr.mae, 1));
+                    }
+                    None => {
+                        row.push(String::new());
                         row.push(String::new());
                         row.push(String::new());
                         row.push(String::new());

@@ -127,8 +127,9 @@ impl SimScenario {
         assert!(replicas >= 1, "co-sim needs at least one replica");
         if self.slots != cfg.model.batch_slots {
             assert!(
-                matches!(self.predictor, PredictorSpec::Oracle { .. }),
-                "custom batch slots ({}) require the oracle predictor",
+                !matches!(self.predictor, PredictorSpec::SyntheticProbe { .. }),
+                "custom batch slots ({}) require a readout-free predictor \
+                 (oracle or an arena predictor)",
                 self.slots
             );
         }
@@ -176,7 +177,7 @@ impl SimScenario {
     }
 }
 
-pub fn builtin_names() -> [&'static str; 13] {
+pub fn builtin_names() -> [&'static str; 15] {
     [
         "steady",
         "bursty",
@@ -191,6 +192,8 @@ pub fn builtin_names() -> [&'static str; 13] {
         "fair-fleet",
         "prefix-agentic",
         "prefix-rag",
+        "pred-steady",
+        "pred-drift",
     ]
 }
 
@@ -376,6 +379,31 @@ pub fn builtin(name: &str) -> Option<SimScenario> {
             s.pool_frac = 0.5;
             s.seed = 777;
             s.n = 2560;
+            s
+        }
+        // Predictor-arena grid (BENCH_pred.json, docs/predictors.md): a
+        // two-tenant overloaded mix where scheduling quality hinges on
+        // telling the short tenant from the long one. The drift variant
+        // is byte-identical except tenant 0's true lengths flip (×e^1.2,
+        // ~3.3x) at t=2.5 while its prompt-time observed class keeps
+        // describing the old truth — the stale-feature regime only
+        // online refresh (and the drift-immune rank scorer) survives.
+        "pred-steady" | "pred-drift" => {
+            let mut shifting = TenantProfile::steady("shifting", 40.0).mu_shift(-0.2);
+            if name == "pred-drift" {
+                shifting = shifting.with_drift(2.5, 1.2, 0.2);
+            }
+            let mut s = SimScenario::new(
+                name,
+                TraceWorkload::new(vec![
+                    shifting,
+                    TenantProfile::steady("stable", 20.0).mu_shift(0.4),
+                ]),
+            );
+            s.slots = 16;
+            s.pool_frac = 0.4;
+            s.seed = 2718;
+            s.n = 400;
             s
         }
         _ => return None,
@@ -574,4 +602,39 @@ pub fn run_fair_sweep(cfg: &Config) -> Result<BenchReport> {
         }
     }
     Ok(BenchReport::new_fair(rows))
+}
+
+/// The checked-in predictor-arena grid (`benchmarks/BENCH_pred.json`,
+/// schema `trail.simlab.pred/v1`; docs/predictors.md): predictor ×
+/// policy × {steady, drift} at 2 replicas, every cell on the identical
+/// trace per scenario. The fcfs rows are the predictor-insensitive
+/// control — fcfs never reads predictions, so its latency stays put
+/// while the quality metrics move; the trail rows show prediction
+/// quality mapping to p99. Keep in sync with python/simref.py
+/// `pred_rows`.
+pub fn run_pred_sweep(cfg: &Config) -> Result<BenchReport> {
+    let policies = [Policy::Fcfs, Policy::Trail { c: 0.8 }];
+    let predictors = [
+        PredictorSpec::ArenaProbe { noise: 0.4, seed: 7 },
+        PredictorSpec::Bucket,
+        PredictorSpec::RankOnly,
+        PredictorSpec::Online,
+    ];
+    let mut rows = Vec::new();
+    for name in ["pred-steady", "pred-drift"] {
+        let base = builtin(name).expect("builtin pred scenario");
+        let trace = base.trace(cfg);
+        for policy in &policies {
+            for spec in &predictors {
+                let mut sc = base.clone();
+                sc.predictor = spec.clone();
+                let out = sc.run_trace(cfg, policy, 2, true, &trace)?;
+                let pr = crate::sim::report::PredRow::from_outcome(&out);
+                let mut row = SweepRow::from_outcome_full(&sc, policy, 2, true, out, false, false);
+                row.pred = Some(pr);
+                rows.push(row);
+            }
+        }
+    }
+    Ok(BenchReport::new_pred(rows))
 }

@@ -36,7 +36,10 @@ use crate::coordinator::{
     ClockSpec, FairnessConfig, MockBackend, Policy, Selector, ServeConfig, ServeReport,
     ServingEngine,
 };
-use crate::predictor::{OraclePredictor, Predictor, ProbePredictor};
+use crate::predictor::{
+    ArenaProbePredictor, BucketPredictor, OnlinePredictor, OraclePredictor, Predictor,
+    ProbePredictor, RankOnlyPredictor,
+};
 use crate::runtime::ProbeWeights;
 use crate::util::stats::Samples;
 use crate::workload::{gen_requests, Arrival, ArrivalProcess, RequestSpec};
@@ -67,6 +70,17 @@ pub enum PredictorSpec {
     /// `ProbePredictor` path (embedding lookup → MLP → Bayesian
     /// smoother). `refine = false` is the TRAIL-BERT static mode.
     SyntheticProbe { refine: bool, seed: u64 },
+    /// Arena "probe" (predictor::arena): log-normal noise around the
+    /// observed-class midpoint, static countdown refinement.
+    ArenaProbe { noise: f64, seed: u64 },
+    /// Arena "bucket": the observed-class midpoint exactly.
+    Bucket,
+    /// Arena "rank": ordinal scores (`observed_class + 1`), no
+    /// absolute lengths, no refinement.
+    RankOnly,
+    /// Arena "online": per-bucket EMA posteriors re-fit from observed
+    /// completions mid-run.
+    Online,
 }
 
 impl PredictorSpec {
@@ -101,6 +115,40 @@ impl PredictorSpec {
                 p.refine = *refine;
                 Box::new(p)
             }
+            PredictorSpec::ArenaProbe { noise, seed } => {
+                Box::new(ArenaProbePredictor::new(*noise, *seed, &cfg.bins))
+            }
+            PredictorSpec::Bucket => Box::new(BucketPredictor::new(&cfg.bins)),
+            PredictorSpec::RankOnly => Box::new(RankOnlyPredictor),
+            PredictorSpec::Online => Box::new(OnlinePredictor::new(&cfg.bins)),
+        }
+    }
+
+    /// Short stable name for CLI selection / report rows (matches
+    /// `Predictor::name` of the built instance).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PredictorSpec::Oracle { .. } => "oracle",
+            PredictorSpec::SyntheticProbe { refine: true, .. } => "probe-refined",
+            PredictorSpec::SyntheticProbe { refine: false, .. } => "probe-static",
+            PredictorSpec::ArenaProbe { .. } => "probe",
+            PredictorSpec::Bucket => "bucket",
+            PredictorSpec::RankOnly => "rank",
+            PredictorSpec::Online => "online",
+        }
+    }
+
+    /// Parse a `--predictor` CLI name into a spec; arena predictors use
+    /// the conventional test seed and the scenario's noise is applied
+    /// by the caller where it matters (the oracle / arena-probe paths).
+    pub fn parse(name: &str, noise: f64) -> Option<PredictorSpec> {
+        match name {
+            "oracle" => Some(PredictorSpec::noisy_oracle(noise)),
+            "probe" => Some(PredictorSpec::ArenaProbe { noise, seed: 7 }),
+            "bucket" => Some(PredictorSpec::Bucket),
+            "rank" => Some(PredictorSpec::RankOnly),
+            "online" => Some(PredictorSpec::Online),
+            _ => None,
         }
     }
 }
@@ -229,13 +277,14 @@ impl Scenario {
 
     /// Effective mock batch width for this scenario. The probe predictor
     /// indexes readout taps by `cfg.model.batch_slots`, so a custom slot
-    /// count is only valid with the oracle predictor.
+    /// count is only valid with predictors that never touch the readout
+    /// (the oracle and the whole arena lineup).
     pub fn effective_slots(&self, cfg: &Config) -> usize {
         let slots = self.slots.unwrap_or(cfg.model.batch_slots);
         if slots != cfg.model.batch_slots {
             assert!(
-                matches!(self.predictor, PredictorSpec::Oracle { .. }),
-                "custom batch slots ({slots}) require the oracle predictor: \
+                !matches!(self.predictor, PredictorSpec::SyntheticProbe { .. }),
+                "custom batch slots ({slots}) require a readout-free predictor: \
                  ProbePredictor tap indexing is tied to cfg.model.batch_slots"
             );
         }

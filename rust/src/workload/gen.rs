@@ -17,6 +17,11 @@ pub struct RequestSpec {
     /// teacher-forces these, exactly like replaying dataset responses
     /// with a fixed output length (DESIGN.md §2).
     pub response: Vec<i32>,
+    /// Noisy prompt-time length class (the generator's class-jitter
+    /// draw) — the only feature the arena predictors may read
+    /// (`predictor::arena`). Under mid-trace drift it keeps describing
+    /// the *pre-drift* truth: a stale feature by construction.
+    pub observed_class: usize,
 }
 
 impl RequestSpec {
@@ -156,11 +161,14 @@ impl WorkloadGen {
         let response = (1..n_out)
             .map(|j| response_token(&mut rng, (n_out - j - 1) as i64, &self.model, &self.w))
             .collect();
+        // No prompt-time jitter draw on the prefix path: the observed
+        // class is the post-clamp true bin, with zero extra draws.
         RequestSpec {
             rid,
             prompt,
             true_output_len: n_out,
             response,
+            observed_class: self.bins.bin_of(n_out as f64),
         }
     }
 
@@ -187,7 +195,37 @@ impl WorkloadGen {
             prompt,
             true_output_len: n_out,
             response,
+            observed_class: obs,
         }
+    }
+
+    /// Mid-trace drift (`TenantProfile::with_drift`): multiplicatively
+    /// shift an already-drawn request's true output length by
+    /// `exp(mu_delta + jitter_sigma·z)` with `z` from the tenant's
+    /// salted side stream, then regenerate the teacher-forced response
+    /// for the new length from a child split of that stream. The spec's
+    /// `observed_class` is deliberately left at the pre-drift value —
+    /// the stale feature the predictor arena has to survive. Zero draws
+    /// land on the generator's master or per-request child streams, so
+    /// every pre-drift and legacy trace byte is untouched
+    /// (python/simref.py advances the same side stream but discards the
+    /// child: token values never reach the co-sim).
+    pub fn apply_drift(
+        &self,
+        spec: &mut RequestSpec,
+        drift_rng: &mut SplitMix64,
+        mu_delta: f64,
+        jitter_sigma: f64,
+    ) {
+        let z = normal_from_uniform(drift_rng.next_f64());
+        let x = spec.true_output_len as f64 * (mu_delta + jitter_sigma * z).exp();
+        let n = (x + 0.5) as i64;
+        let n_out = (n.max(self.w.min_output as i64) as usize).min(self.w.max_output);
+        let mut child = drift_rng.split();
+        spec.response = (1..n_out)
+            .map(|j| response_token(&mut child, (n_out - j - 1) as i64, &self.model, &self.w))
+            .collect();
+        spec.true_output_len = n_out;
     }
 }
 

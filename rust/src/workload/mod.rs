@@ -9,4 +9,4 @@ pub mod trace;
 
 pub use arrivals::{Arrival, ArrivalProcess};
 pub use gen::{gen_requests, PrefixSpec, RequestSpec, WorkloadGen};
-pub use trace::{RatePhase, TenantProfile, TraceEntry, TraceWorkload};
+pub use trace::{DriftSpec, RatePhase, TenantProfile, TraceEntry, TraceWorkload};

@@ -18,6 +18,7 @@
 //! JSON file so a workload can be replayed byte-identically elsewhere.
 
 use crate::config::Config;
+use crate::predictor::arena::DRIFT_SALT;
 use crate::util::json::{parse, Json};
 use crate::util::rng::SplitMix64;
 use crate::workload::gen::{PrefixSpec, WorkloadGen};
@@ -41,6 +42,22 @@ pub struct RatePhase {
     pub duration: f64,
 }
 
+/// Mid-trace drift of a tenant's true output-length distribution
+/// (docs/predictors.md): requests arriving at or after `at` have their
+/// already-drawn length multiplied by `exp(mu_delta + jitter_sigma·z)`,
+/// with `z` from a salted side stream — the prompt-time
+/// `observed_class` keeps describing the pre-drift truth, which is
+/// exactly the stale-feature regime the predictor arena measures.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftSpec {
+    /// Virtual time (seconds) at which the flip takes effect.
+    pub at: f64,
+    /// Log-space shift of the true length (1.2 ≈ 3.3× longer).
+    pub mu_delta: f64,
+    /// Log-normal jitter sigma around the shifted length.
+    pub jitter_sigma: f64,
+}
+
 #[derive(Clone, Debug)]
 pub struct TenantProfile {
     pub name: String,
@@ -57,6 +74,10 @@ pub struct TenantProfile {
     /// pre-existing scenario — draws prompts exactly as before, so the
     /// pinned bench traces are byte-identical.
     pub prefix: Option<PrefixSpec>,
+    /// Mid-trace truth drift (legacy/non-prefix tenants only). `None`
+    /// — the default — draws nothing from the side stream, so every
+    /// pre-existing trace byte is untouched.
+    pub drift: Option<DriftSpec>,
 }
 
 impl TenantProfile {
@@ -67,6 +88,7 @@ impl TenantProfile {
             mu_shift: 0.0,
             phases: Vec::new(),
             prefix: None,
+            drift: None,
         }
     }
 
@@ -82,6 +104,7 @@ impl TenantProfile {
                 RatePhase { rate_mult: lo, duration: lo_dur },
             ],
             prefix: None,
+            drift: None,
         }
     }
 
@@ -93,6 +116,13 @@ impl TenantProfile {
     /// Give this tenant prefix-sharing prompts (see [`PrefixSpec`]).
     pub fn with_prefix(mut self, prefix: PrefixSpec) -> TenantProfile {
         self.prefix = Some(prefix);
+        self
+    }
+
+    /// Flip this tenant's true length distribution mid-trace (see
+    /// [`DriftSpec`]). Legacy/non-prefix tenants only.
+    pub fn with_drift(mut self, at: f64, mu_delta: f64, jitter_sigma: f64) -> TenantProfile {
+        self.drift = Some(DriftSpec { at, mu_delta, jitter_sigma });
         self
     }
 }
@@ -122,42 +152,54 @@ impl TraceWorkload {
     pub fn generate(&self, cfg: &Config, n: usize, seed: u64) -> Vec<TraceEntry> {
         assert!(!self.tenants.is_empty(), "trace workload needs >= 1 tenant");
         let mut master = SplitMix64::new(seed);
-        let mut streams: Vec<(Vec<f64>, WorkloadGen, usize, Vec<Vec<i32>>)> = self
-            .tenants
-            .iter()
-            .map(|t| {
-                let spec_seed = master.next_u64();
-                let mut arr_rng = SplitMix64::new(master.next_u64());
-                let times = tenant_arrivals(t, n, &mut arr_rng);
-                let mut tcfg = cfg.clone();
-                tcfg.workload.lognormal_mu += t.mu_shift;
-                let gen = WorkloadGen::new(&tcfg, spec_seed);
-                // Template prefixes live on a salted stream off the same
-                // spec seed — zero extra master draws, so non-prefix
-                // tenants' streams (and the pinned traces) are untouched.
-                let templates = match &t.prefix {
-                    Some(ps) => gen.prefix_templates(ps),
-                    None => Vec::new(),
-                };
-                (times, gen, 0usize, templates)
-            })
-            .collect();
+        let mut streams: Vec<(Vec<f64>, WorkloadGen, usize, Vec<Vec<i32>>, Option<SplitMix64>)> =
+            self.tenants
+                .iter()
+                .map(|t| {
+                    let spec_seed = master.next_u64();
+                    let mut arr_rng = SplitMix64::new(master.next_u64());
+                    let times = tenant_arrivals(t, n, &mut arr_rng);
+                    let mut tcfg = cfg.clone();
+                    tcfg.workload.lognormal_mu += t.mu_shift;
+                    let gen = WorkloadGen::new(&tcfg, spec_seed);
+                    // Template prefixes live on a salted stream off the same
+                    // spec seed — zero extra master draws, so non-prefix
+                    // tenants' streams (and the pinned traces) are untouched.
+                    let templates = match &t.prefix {
+                        Some(ps) => gen.prefix_templates(ps),
+                        None => Vec::new(),
+                    };
+                    // The drift side stream is salted off the same spec
+                    // seed: non-drifting tenants draw nothing from it,
+                    // and drifting tenants' master/child streams are
+                    // byte-identical to their non-drifting selves.
+                    let drift_rng = t.drift.map(|_| SplitMix64::new(spec_seed ^ DRIFT_SALT));
+                    (times, gen, 0usize, templates, drift_rng)
+                })
+                .collect();
         let mut out: Vec<TraceEntry> = Vec::with_capacity(n);
         while out.len() < n {
             let mut best: Option<(f64, usize)> = None;
-            for (ti, (times, _, pos, _)) in streams.iter().enumerate() {
+            for (ti, (times, _, pos, _, _)) in streams.iter().enumerate() {
                 let at = times[*pos];
                 if best.map_or(true, |(bat, _)| at < bat) {
                     best = Some((at, ti));
                 }
             }
             let (at, ti) = best.expect("non-empty tenant set");
-            let (_, gen, pos, templates) = &mut streams[ti];
+            let (_, gen, pos, templates, drift_rng) = &mut streams[ti];
             *pos += 1;
-            let mut spec = match &self.tenants[ti].prefix {
+            let tenant = &self.tenants[ti];
+            let mut spec = match &tenant.prefix {
                 Some(ps) => gen.next_prefix_request(ps, templates),
                 None => gen.next_request(),
             };
+            if let (Some(d), Some(rng), None) = (&tenant.drift, drift_rng.as_mut(), &tenant.prefix)
+            {
+                if at >= d.at {
+                    gen.apply_drift(&mut spec, rng, d.mu_delta, d.jitter_sigma);
+                }
+            }
             spec.rid = out.len() as u64;
             out.push(TraceEntry {
                 at,
@@ -234,6 +276,7 @@ fn entry_to_json(e: &TraceEntry) -> Json {
         ("prompt", arr_i32(&e.spec.prompt)),
         ("true_output_len", Json::Num(e.spec.true_output_len as f64)),
         ("response", arr_i32(&e.spec.response)),
+        ("observed_class", Json::Num(e.spec.observed_class as f64)),
     ])
 }
 
@@ -246,6 +289,14 @@ fn entry_from_json(j: &Json) -> TraceEntry {
             prompt: j.at(&["prompt"]).as_i64_vec().iter().map(|&x| x as i32).collect(),
             true_output_len: j.at(&["true_output_len"]).as_usize(),
             response: j.at(&["response"]).as_i64_vec().iter().map(|&x| x as i32).collect(),
+            // Traces saved before the predictor arena carry no class;
+            // fall back to the (post-drift) true bin rather than 0 so
+            // arena replays of old files stay sane.
+            observed_class: j.get("observed_class").map(|v| v.as_usize()).unwrap_or_else(|| {
+                crate::config::Config::embedded_default()
+                    .bins
+                    .bin_of(j.at(&["true_output_len"]).as_f64())
+            }),
         },
     }
 }
@@ -388,6 +439,73 @@ mod tests {
     }
 
     #[test]
+    fn drift_leaves_pre_drift_and_other_tenant_bytes_untouched() {
+        // The drift side stream is salted off the spec seed: switching
+        // drift on must not move arrivals, prompts, observed classes,
+        // or any pre-drift / other-tenant truth (the frozen-bench
+        // guarantee, mirrored by python/simref.py generate_trace).
+        let base = TraceWorkload::new(vec![
+            TenantProfile::steady("a", 20.0),
+            TenantProfile::steady("b", 20.0).mu_shift(0.4),
+        ]);
+        let drifted = TraceWorkload::new(vec![
+            TenantProfile::steady("a", 20.0).with_drift(1.0, 1.2, 0.2),
+            TenantProfile::steady("b", 20.0).mu_shift(0.4),
+        ]);
+        let t1 = base.generate(&cfg(), 150, 7);
+        let t2 = drifted.generate(&cfg(), 150, 7);
+        let mut flipped = 0usize;
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.at.to_bits(), b.at.to_bits(), "arrival stream moved");
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.spec.prompt, b.spec.prompt, "prompt stream moved");
+            assert_eq!(
+                a.spec.observed_class, b.spec.observed_class,
+                "the observed class must stay the stale pre-drift feature"
+            );
+            if a.tenant == 1 || a.at < 1.0 {
+                assert_eq!(
+                    a.spec.true_output_len, b.spec.true_output_len,
+                    "pre-drift / other-tenant truth moved"
+                );
+                assert_eq!(a.spec.response, b.spec.response);
+            } else if a.spec.true_output_len != b.spec.true_output_len {
+                flipped += 1;
+                assert_eq!(
+                    b.spec.response.len(),
+                    b.spec.true_output_len - 1,
+                    "drift must regenerate the teacher-forced response"
+                );
+            }
+        }
+        assert!(flipped >= 10, "drift never flipped a length ({flipped})");
+    }
+
+    #[test]
+    fn drift_lengthens_post_flip_outputs() {
+        let w = TraceWorkload::new(vec![
+            TenantProfile::steady("d", 30.0).with_drift(2.0, 1.2, 0.2)
+        ]);
+        let t = w.generate(&cfg(), 300, 2718);
+        let mean = |xs: &[usize]| xs.iter().sum::<usize>() as f64 / xs.len().max(1) as f64;
+        let pre: Vec<usize> = t.iter().filter(|e| e.at < 2.0).map(|e| e.spec.true_output_len).collect();
+        let post: Vec<usize> =
+            t.iter().filter(|e| e.at >= 2.0).map(|e| e.spec.true_output_len).collect();
+        assert!(!pre.is_empty() && !post.is_empty());
+        assert!(
+            mean(&post) > mean(&pre) * 2.0,
+            "mu_delta 1.2 must ~3.3x the truth: pre {} post {}",
+            mean(&pre),
+            mean(&post)
+        );
+        let c = cfg();
+        for e in &t {
+            assert!(e.spec.true_output_len <= c.workload.max_output);
+            assert!(e.spec.true_output_len >= c.workload.min_output);
+        }
+    }
+
+    #[test]
     fn jsonl_round_trip_is_exact() {
         let w = TraceWorkload::new(vec![
             TenantProfile::steady("a", 25.0),
@@ -407,6 +525,7 @@ mod tests {
             assert_eq!(a.spec.prompt, b.spec.prompt);
             assert_eq!(a.spec.true_output_len, b.spec.true_output_len);
             assert_eq!(a.spec.response, b.spec.response);
+            assert_eq!(a.spec.observed_class, b.spec.observed_class);
         }
     }
 

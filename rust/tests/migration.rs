@@ -18,6 +18,7 @@ fn spec(rid: u64, plen: usize, n_out: usize) -> RequestSpec {
         prompt: vec![9; plen],
         true_output_len: n_out,
         response: vec![8; n_out.saturating_sub(1)],
+        observed_class: 0,
     }
 }
 

@@ -25,6 +25,7 @@ fn random_request(g: &mut Gen, cfg: &Config, rid: u64) -> Request {
         prompt: vec![1; plen],
         true_output_len: n_out,
         response: vec![9; n_out.saturating_sub(1)],
+        observed_class: 0,
     };
     let mut r = Request::new(spec, g.f64_in(0.0, 50.0), &cfg.bins);
     r.phase = *g.pick(&[

@@ -1,0 +1,128 @@
+//! Predictor-arena integration guarantees (docs/predictors.md):
+//!
+//! 1. the refactored default (oracle-through-the-`Predictor`-trait)
+//!    path is byte-identical run over run across the testkit
+//!    policy × load × noise grid — the `observe_completion` hook and
+//!    the `pred_pairs` accounting added for the arena must not perturb
+//!    a single scheduling decision;
+//! 2. under FCFS with a generous pool (no OOM-pressure victim scans,
+//!    which *do* read `initial_pred`), every predictor in the lineup
+//!    serves bit-identically — the scheduler genuinely never consults
+//!    predictions on that path;
+//! 3. every arena predictor drives a full serve to completion and
+//!    reports its own name.
+
+use trail::config::Config;
+use trail::coordinator::Policy;
+use trail::testkit::{Load, PredictorSpec, Scenario};
+
+fn cfg() -> Config {
+    Config::load_default().expect("load_default")
+}
+
+fn policies() -> Vec<Policy> {
+    vec![Policy::Fcfs, Policy::Trail { c: 1.0 }, Policy::Trail { c: 0.8 }]
+}
+
+fn loads() -> Vec<Load> {
+    vec![Load::Burst, Load::Poisson(70.0), Load::Poisson(110.0)]
+}
+
+#[test]
+fn default_predictor_grid_is_byte_stable() {
+    let cfg = cfg();
+    for policy in policies() {
+        for load in loads() {
+            for noise in [0.0, 0.4, 0.8] {
+                let s = Scenario::new(policy.clone())
+                    .n(40)
+                    .load(load.clone())
+                    .noise(noise);
+                let a = s.run(&cfg);
+                let b = s.run(&cfg);
+                let cell = format!("{} / {:?} / noise {noise}", policy.name(), load);
+                assert_eq!(a.summary.n, b.summary.n, "{cell}");
+                assert_eq!(a.n_iterations, b.n_iterations, "{cell}");
+                assert_eq!(
+                    a.summary.mean_latency.to_bits(),
+                    b.summary.mean_latency.to_bits(),
+                    "{cell}"
+                );
+                assert_eq!(
+                    a.summary.mean_ttft.to_bits(),
+                    b.summary.mean_ttft.to_bits(),
+                    "{cell}"
+                );
+                assert_eq!(a.wall_time.to_bits(), b.wall_time.to_bits(), "{cell}");
+                assert_eq!(a.summary.preemptions, b.summary.preemptions, "{cell}");
+                assert_eq!(a.summary.discards, b.summary.discards, "{cell}");
+                assert_eq!(
+                    a.summary.peak_mem_tokens, b.summary.peak_mem_tokens,
+                    "{cell}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fcfs_without_oom_pressure_is_predictor_invariant() {
+    // FCFS ranks by arrival alone and a 0.9 pool fraction at moderate
+    // load leaves the OOM victim scan (the one FCFS-path consumer of
+    // `initial_pred`) idle — so swapping the entire predictor lineup
+    // must not move a single bit of the serve.
+    let cfg = cfg();
+    let base = Scenario::new(Policy::Fcfs)
+        .n(40)
+        .load(Load::Poisson(70.0))
+        .pool_frac(0.9);
+    let specs = [
+        PredictorSpec::oracle(),
+        PredictorSpec::noisy_oracle(0.8),
+        PredictorSpec::ArenaProbe { noise: 0.4, seed: 7 },
+        PredictorSpec::Bucket,
+        PredictorSpec::RankOnly,
+        PredictorSpec::Online,
+    ];
+    let reference = base.clone().predictor(specs[0].clone()).run(&cfg);
+    assert_eq!(reference.summary.preemptions, 0);
+    assert_eq!(reference.summary.discards, 0);
+    for spec in &specs[1..] {
+        let rep = base.clone().predictor(spec.clone()).run(&cfg);
+        let cell = format!("predictor {}", spec.label());
+        assert_eq!(rep.summary.n, reference.summary.n, "{cell}");
+        assert_eq!(rep.n_iterations, reference.n_iterations, "{cell}");
+        assert_eq!(
+            rep.summary.mean_latency.to_bits(),
+            reference.summary.mean_latency.to_bits(),
+            "{cell}"
+        );
+        assert_eq!(
+            rep.summary.mean_ttft.to_bits(),
+            reference.summary.mean_ttft.to_bits(),
+            "{cell}"
+        );
+        assert_eq!(rep.wall_time.to_bits(), reference.wall_time.to_bits(), "{cell}");
+    }
+}
+
+#[test]
+fn arena_lineup_serves_to_completion_under_trail() {
+    let cfg = cfg();
+    for spec in [
+        PredictorSpec::ArenaProbe { noise: 0.4, seed: 7 },
+        PredictorSpec::Bucket,
+        PredictorSpec::RankOnly,
+        PredictorSpec::Online,
+    ] {
+        let label = spec.label();
+        let rep = Scenario::new(Policy::Trail { c: 0.8 })
+            .n(32)
+            .load(Load::Poisson(110.0))
+            .predictor(spec)
+            .run(&cfg);
+        assert_eq!(rep.summary.n, 32, "{label}");
+        assert!(rep.summary.mean_latency.is_finite(), "{label}");
+        assert_eq!(rep.predictor, label);
+    }
+}
