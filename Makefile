@@ -9,7 +9,9 @@
         bench-sched bench-sched-diff bench-sched-refresh \
         bench-fair bench-fair-diff bench-fair-refresh \
         bench-prefix bench-prefix-diff bench-prefix-refresh \
-        bench-pred bench-pred-diff bench-pred-refresh fmt artifacts clean
+        bench-pred bench-pred-diff bench-pred-refresh \
+        bench-obs bench-obs-diff bench-obs-refresh bench-freeze bench-freeze-mirror \
+        fmt artifacts clean
 
 build:
 	cargo build --release
@@ -122,6 +124,60 @@ bench-pred-diff: bench-pred
 
 bench-pred-refresh:
 	cargo run --release --bin trail-serve -- pred --out benchmarks/BENCH_pred.json
+
+# Flight-recorder grid (docs/observability.md): scale-1k x
+# {fcfs, trail-c0.8} at 2 replicas with tracing + phase timing on. Run
+# twice and `cmp` both the report and the rendered trace byte-for-byte
+# — the hard determinism gate for the recorder itself (event order,
+# line format, FNV fingerprint).
+bench-obs:
+	cargo run --release --bin trail-serve -- obs --out BENCH_obs.json --trace-jsonl trace_obs.jsonl --timings-json timings_obs.json
+	cargo run --release --bin trail-serve -- obs --out BENCH_obs.run2.json --trace-jsonl trace_obs.run2.jsonl
+	cmp BENCH_obs.json BENCH_obs.run2.json
+	cmp trace_obs.jsonl trace_obs.run2.jsonl
+	rm -f BENCH_obs.run2.json trace_obs.run2.jsonl
+
+# Diff against the checked-in flight-recorder baseline (advisory in CI,
+# same libm caveat as bench-sim-diff).
+bench-obs-diff: bench-obs
+	diff -u benchmarks/BENCH_obs.json BENCH_obs.json
+
+bench-obs-refresh:
+	cargo run --release --bin trail-serve -- obs --out benchmarks/BENCH_obs.json
+
+# Baseline freeze (docs/observability.md): regenerate every checked-in
+# BENCH baseline with the recorder *disabled* and fail on any byte
+# drift. This is the zero-cost-when-disabled gate — landing the
+# observability layer must not move a single frozen byte.
+bench-freeze:
+	cargo run --release --bin trail-serve -- sim --out /tmp/FREEZE_seed.json
+	cmp /tmp/FREEZE_seed.json benchmarks/BENCH_seed.json
+	cargo run --release --bin trail-serve -- sched --out /tmp/FREEZE_sched.json
+	cmp /tmp/FREEZE_sched.json benchmarks/BENCH_sched.json
+	cargo run --release --bin trail-serve -- fair --out /tmp/FREEZE_fair.json
+	cmp /tmp/FREEZE_fair.json benchmarks/BENCH_fair.json
+	cargo run --release --bin trail-serve -- prefix --out /tmp/FREEZE_prefix.json
+	cmp /tmp/FREEZE_prefix.json benchmarks/BENCH_prefix.json
+	cargo run --release --bin trail-serve -- pred --out /tmp/FREEZE_pred.json
+	cmp /tmp/FREEZE_pred.json benchmarks/BENCH_pred.json
+	rm -f /tmp/FREEZE_*.json
+
+# Same freeze gate through the dependency-free Python mirror — the
+# in-image verification substrate when cargo is unavailable.
+bench-freeze-mirror:
+	cd python && python3 simref.py sweep --out /tmp/FREEZE_seed.json > /dev/null
+	cmp /tmp/FREEZE_seed.json benchmarks/BENCH_seed.json
+	cd python && python3 simref.py sched --out /tmp/FREEZE_sched.json > /dev/null
+	cmp /tmp/FREEZE_sched.json benchmarks/BENCH_sched.json
+	cd python && python3 simref.py fair --out /tmp/FREEZE_fair.json > /dev/null
+	cmp /tmp/FREEZE_fair.json benchmarks/BENCH_fair.json
+	cd python && python3 simref.py prefix --out /tmp/FREEZE_prefix.json > /dev/null
+	cmp /tmp/FREEZE_prefix.json benchmarks/BENCH_prefix.json
+	cd python && python3 simref.py pred --out /tmp/FREEZE_pred.json > /dev/null
+	cmp /tmp/FREEZE_pred.json benchmarks/BENCH_pred.json
+	cd python && python3 simref.py obs --out /tmp/FREEZE_obs.json > /dev/null
+	cmp /tmp/FREEZE_obs.json benchmarks/BENCH_obs.json
+	rm -f /tmp/FREEZE_*.json
 
 fmt:
 	cargo fmt

@@ -59,6 +59,17 @@ cross-language exactly like the other grids. With the prefix cache off
 (every pre-existing scenario) all of it is inert and the frozen
 baselines stay byte-identical.
 
+The flight recorder (docs/observability.md) is mirrored too: the
+request-lifecycle + scheduler-decision trace (every emission site at
+the same virtual timestamp with the same per-replica sequence numbers,
+rendered line-identical to ``rust/src/obs/trace.rs``), the
+deterministic phase counters with their cost-model virtual totals, the
+FNV-1a trace fingerprint, and the ``trail.simlab.obs/v1`` report
+(``benchmarks/BENCH_obs.json``). With obs off (the default everywhere)
+every emission helper is a no-op and all frozen baselines stay
+byte-identical — that freeze is what ``make bench-freeze-mirror``
+regenerates and checks.
+
 Usage:
     cd python && python3 simref.py sweep --out ../benchmarks/BENCH_seed.json
     cd python && python3 simref.py sweep --selector reference --out /tmp/x.json
@@ -66,10 +77,13 @@ Usage:
     cd python && python3 simref.py fair --out ../benchmarks/BENCH_fair.json
     cd python && python3 simref.py prefix --out ../benchmarks/BENCH_prefix.json
     cd python && python3 simref.py pred --out ../benchmarks/BENCH_pred.json
+    cd python && python3 simref.py obs --out ../benchmarks/BENCH_obs.json \
+        --trace-jsonl /tmp/trace.jsonl --timings-json /tmp/timings.json
 """
 
 import math
 import sys
+import time
 from dataclasses import replace
 
 from compile.config import BINS, MODEL, WORKLOAD
@@ -840,6 +854,204 @@ class Kv:
         return self.used_tokens() + extra <= self.pool_tokens
 
 
+# ---------------------------------------------------------------------------
+# Flight recorder (rust/src/obs/{trace,timing}.rs — byte-format mirror)
+# ---------------------------------------------------------------------------
+#
+# Events are (t, rep, seq, rid, kind, payload) tuples; sorting the merged
+# multi-replica stream by (t, rep, seq) is the same total order
+# `obs::sort_events` uses, and `event_line` renders the same compact
+# sorted-key JSON bytes as `TraceEvent::to_line` (bools travel as 0/1
+# numbers so both writers agree). Wall-clock timing mirrors the
+# PhaseTimer shape for `--timings-json` but is never byte-compared —
+# only counts and cost-model virtual totals are pinned.
+
+TRACE_SCHEMA = "trail.trace/v1"
+TIMING_SCHEMA = "trail.timing/v1"
+
+U64_MASK = (1 << 64) - 1
+
+# obs::PHASE_ORDER — canonical phase order for reports.
+PHASE_ORDER = [
+    "select_targets", "ensure_resident", "resolve_oom", "rank_index",
+    "dispatch", "prefill", "decode", "readout", "step",
+]
+
+
+def fnv1a64(data):
+    """FNV-1a 64 over bytes (obs::fnv1a64 — the trace fingerprint)."""
+    h = 0xcbf29ce484222325
+    for b in data:
+        h = ((h ^ b) * 0x100000001b3) & U64_MASK
+    return h
+
+
+def event_line(ev):
+    """TraceEvent::to_line — one compact JSON object, lexicographically
+    sorted keys (Rust renders through a BTreeMap)."""
+    t, rep, seq, rid, kind, payload = ev
+    fields = dict(payload)
+    fields["t"] = t
+    fields["rep"] = rep
+    fields["seq"] = seq
+    fields["rid"] = rid
+    parts = []
+    for k in sorted(fields.keys() | {"kind"}):
+        if k == "kind":
+            parts.append('"kind":"' + kind + '"')
+        else:
+            parts.append('"' + k + '":' + jnum(fields[k]))
+    return "{" + ",".join(parts) + "}"
+
+
+def sort_events(events):
+    """obs::sort_events — (t, rep, seq) total order (all t finite)."""
+    events.sort(key=lambda e: (e[0], e[1], e[2]))
+
+
+def render_trace(events, cell=None):
+    """obs::render_trace — schema header line (tagged with the grid cell
+    when given), then one event per line, all newline-terminated."""
+    if cell is None:
+        header = '{"schema":"' + TRACE_SCHEMA + '"}'
+    else:
+        header = '{"cell":"' + cell + '","schema":"' + TRACE_SCHEMA + '"}'
+    lines = [header]
+    lines.extend(event_line(ev) for ev in events)
+    return "\n".join(lines) + "\n"
+
+
+def new_phase_counts():
+    """obs::PhaseCounts::default — deterministic per-phase call counters."""
+    return {
+        "select_targets": 0, "ensure_resident": 0, "resolve_oom": 0,
+        "prefill_chunks": 0, "decode_steps": 0, "decode_slot_steps": 0,
+        "readouts": 0, "rank_index_ops": 0, "dispatch": 0, "steps": 0,
+    }
+
+
+def merge_phase_counts(acc, other):
+    for k in acc:
+        acc[k] += other[k]
+
+
+def phase_rows(counts):
+    """PhaseCounts::phases under CostModel::default() — (name, calls,
+    virtual_s) in PHASE_ORDER. Scheduling phases are bookkeeping (no
+    backend call), virtual total 0 by construction; backend phases
+    derive theirs exactly the way the virtual clock charged them."""
+    return [
+        ("select_targets", counts["select_targets"], 0.0),
+        ("ensure_resident", counts["ensure_resident"], 0.0),
+        ("resolve_oom", counts["resolve_oom"], 0.0),
+        ("rank_index", counts["rank_index_ops"], 0.0),
+        ("dispatch", counts["dispatch"], 0.0),
+        ("prefill", counts["prefill_chunks"],
+         float(counts["prefill_chunks"]) * COST_PREFILL_CHUNK),
+        ("decode", counts["decode_steps"],
+         float(counts["decode_steps"]) * COST_DECODE_STEP
+         + float(counts["decode_slot_steps"]) * COST_DECODE_PER_SLOT),
+        ("readout", counts["readouts"],
+         float(counts["readouts"]) * COST_READOUT),
+        ("step", counts["steps"], 0.0),
+    ]
+
+
+class TimingStats:
+    """obs::TimingStats — wall-clock span aggregates. Structural mirror
+    only: wall time is never byte-compared (it would break the frozen
+    reports), it just makes `--timings-json` and the <5% self-overhead
+    acceptance bound checkable from the mirror too."""
+
+    def __init__(self):
+        self.spans = {}            # name -> [calls, inclusive_s, self_s]
+        self.n_spans = 0
+        self.overhead_per_span = 0.0
+
+    def merge(self, other):
+        for name, (c, incl, slf) in other.spans.items():
+            e = self.spans.setdefault(name, [0, 0.0, 0.0])
+            e[0] += c
+            e[1] += incl
+            e[2] += slf
+        self.n_spans += other.n_spans
+        self.overhead_per_span = max(self.overhead_per_span,
+                                     other.overhead_per_span)
+
+    def overhead_s(self):
+        return float(self.n_spans) * self.overhead_per_span
+
+    def total_wall_s(self):
+        if "step" in self.spans:
+            return self.spans["step"][1]
+        return sum(v[2] for v in self.spans.values())
+
+    def overhead_frac(self):
+        total = self.total_wall_s()
+        return self.overhead_s() / total if total > 0.0 else 0.0
+
+
+class PhaseTimer:
+    """obs::PhaseTimer — hierarchical wall timer; a child's inclusive
+    time is subtracted from the parent's self time. Constructing one
+    calibrates the per-span overhead on the spot."""
+
+    def __init__(self):
+        n = 4096
+        t0 = time.perf_counter()
+        for _ in range(n):
+            s = time.perf_counter()
+            _ = time.perf_counter() - s
+        per_span = (time.perf_counter() - t0) / float(n)
+        self.stack = []            # [phase, start, child_seconds]
+        self._stats = TimingStats()
+        self._stats.overhead_per_span = per_span
+
+    def enter(self, phase):
+        self.stack.append([phase, time.perf_counter(), 0.0])
+
+    def exit(self):
+        if not self.stack:
+            return
+        phase, start, child_s = self.stack.pop()
+        incl = time.perf_counter() - start
+        slf = max(incl - child_s, 0.0)
+        e = self._stats.spans.setdefault(phase, [0, 0.0, 0.0])
+        e[0] += 1
+        e[1] += incl
+        e[2] += slf
+        self._stats.n_spans += 1
+        if self.stack:
+            self.stack[-1][2] += incl
+
+    def stats(self):
+        out = TimingStats()
+        out.merge(self._stats)
+        return out
+
+
+def timing_report_text(counts, stats=None):
+    """obs::timing_report_json rendered to text — deterministic phase
+    rows (calls + virtual totals) joined with wall measurements when a
+    timer ran, sorted-key JSON + newline."""
+    rows = []
+    for name, calls, vt in phase_rows(counts):
+        wall_calls, wall_s, self_s = (0, 0.0, 0.0)
+        if stats is not None and name in stats.spans:
+            wall_calls, wall_s, self_s = stats.spans[name]
+        rows.append({
+            "name": name, "calls": calls, "virtual_s": vt,
+            "wall_calls": wall_calls, "wall_s": wall_s, "self_s": self_s,
+        })
+    doc = {"schema": TIMING_SCHEMA, "phases": rows}
+    if stats is not None:
+        doc["total_wall_s"] = stats.total_wall_s()
+        doc["overhead_s"] = stats.overhead_s()
+        doc["overhead_frac"] = stats.overhead_frac()
+        doc["n_spans"] = stats.n_spans
+    return row_json(doc) + "\n"
+
+
 class Engine:
     """Virtual-clock ServingEngine<MockBackend> with the oracle predictor
     (multiplicative log-normal noise on the initial estimate, exact
@@ -847,7 +1059,7 @@ class Engine:
 
     def __init__(self, policy, slots, pool_tokens, noise=0.4, pred_seed=7,
                  max_iterations=2_000_000, selector="indexed", fair=NEUTRAL_FAIR,
-                 prefix_cache=False, predictor=None):
+                 prefix_cache=False, predictor=None, obs=None):
         self.policy = policy
         self.slots = slots
         self.kv = Kv(slots, pool_tokens)
@@ -886,6 +1098,60 @@ class Engine:
         self.max_wait_age = 0.0
         # Metrics::pred_pairs — (initial prediction, truth) in finish order.
         self.pred_pairs = []
+        # Flight recorder (rust obs::EngineObs): obs is None or a
+        # (trace, timing, replica) tuple; inert (no state at all, every
+        # helper a no-op) unless trace or timing is on — exactly the
+        # `serve.obs.enabled()` gate in the Rust engine.
+        self.obs = None
+        if obs is not None and (obs[0] or obs[1]):
+            self.obs = {
+                "trace_on": obs[0],
+                "replica": obs[2],
+                "seq": 0,
+                "events": [],
+                "counts": new_phase_counts(),
+                "timer": PhaseTimer() if obs[1] else None,
+            }
+
+    # --- flight recorder (no-ops when obs is inert) ---
+    def tracing(self):
+        return self.obs is not None and self.obs["trace_on"]
+
+    def trace(self, t, rid, kind, payload=None):
+        o = self.obs
+        if o is not None and o["trace_on"]:
+            o["events"].append((t, o["replica"], o["seq"], rid, kind,
+                                payload if payload is not None else {}))
+            o["seq"] += 1
+
+    def obs_count(self, key, n=1):
+        if self.obs is not None:
+            self.obs["counts"][key] += n
+
+    def obs_enter(self, phase):
+        if self.obs is not None and self.obs["timer"] is not None:
+            self.obs["timer"].enter(phase)
+
+    def obs_exit(self):
+        if self.obs is not None and self.obs["timer"] is not None:
+            self.obs["timer"].exit()
+
+    def take_trace(self):
+        if self.obs is None:
+            return []
+        events = self.obs["events"]
+        self.obs["events"] = []
+        return events
+
+    def phase_counts(self):
+        if self.obs is None:
+            return new_phase_counts()
+        return dict(self.obs["counts"])
+
+    def timing_stats(self):
+        if self.obs is not None and self.obs["timer"] is not None:
+            return self.obs["timer"].stats()
+        return None
 
     # --- clock ---
     def sync_clock(self, at):
@@ -914,6 +1180,9 @@ class Engine:
         # draw per admission, in admission order, from this engine's
         # predictor stream).
         self.predictor.init_request(req)
+        self.trace(req.arrival, req.rid, "admit", {
+            "tenant": req.tenant, "prompt": req.plen,
+            "predicted": req.initial_pred})
         self.sched_idx.insert(req.rid, self.rank_of(req))
         self.rid_pos[req.rid] = len(self.reqs)
         self.shares_on_admit(req.tenant)
@@ -928,6 +1197,7 @@ class Engine:
         return rank_fair(self.policy, r, self.fair)
 
     def reindex(self, r):
+        self.obs_count("rank_index_ops")
         rk = self.rank_of(r)
         self.sched_idx.update(r.rid, rk)
         if r.slot is not None:
@@ -1029,9 +1299,11 @@ class Engine:
         r.kv_written = 0
         r.phase = WAITING if r.generated == 0 else DISCARDED
         r.n_migrations += 1
+        self.trace(self.now, r.rid, "migrate_out")
         return r
 
     def admit_migrated(self, r):
+        self.trace(self.now, r.rid, "migrate_in")
         self.sched_idx.insert(r.rid, self.rank_of(r))
         self.rid_pos[r.rid] = len(self.reqs)
         self.shares_on_admit(r.tenant)
@@ -1044,19 +1316,27 @@ class Engine:
         if self.max_iterations > 0 and self.n_iter >= self.max_iterations:
             raise RuntimeError("max_iterations exceeded — scheduler stall?")
         reqs = self.reqs
+        self.obs_enter("step")
         # Starvation guard first, so eviction and selection both see
         # aged ranks; then OOM resolution; then the per-step tenant
         # credit accrual the share-capped selection draws from.
         self.refresh_starvation(reqs)
+        self.obs_enter("resolve_oom")
         self.resolve_oom(reqs)
+        self.obs_exit()
+        self.obs_count("resolve_oom")
         if self.fair.shares_active():
             self.shares_accrue()
+        self.obs_enter("select_targets")
         if self.selector == "indexed":
             target = self.select_targets_indexed(reqs)
         else:
             target = self.select_targets(reqs)
+        self.obs_exit()
+        self.obs_count("select_targets")
 
         # ---- prefill budget ----
+        self.obs_enter("prefill")
         prefill_done_now = []
         budget = PREFILL_CHUNKS_PER_ITER
         chunks_issued = 0
@@ -1081,6 +1361,8 @@ class Engine:
             self.kv.charge(r.slot, r.rid, r.kv_written)
             if r.prefill_done():
                 prefill_done_now.append(idx)
+        self.obs_exit()
+        self.obs_count("prefill_chunks", chunks_issued)
 
         # ---- decode ----
         decoding = []
@@ -1094,12 +1376,19 @@ class Engine:
             ):
                 decoding.append(idx)
         if decoding:
+            self.obs_enter("decode")
             self.pending_cost += COST_DECODE_STEP + COST_DECODE_PER_SLOT * len(decoding)
+            self.obs_exit()
+            self.obs_count("decode_steps")
+            self.obs_count("decode_slot_steps", len(decoding))
 
         # ---- readout + clock ----
         stepped = bool(decoding) or bool(prefill_done_now)
         if stepped:
+            self.obs_enter("readout")
             self.pending_cost += COST_READOUT
+            self.obs_exit()
+            self.obs_count("readouts")
         cost = self.pending_cost
         self.pending_cost = 0.0
         self.now += cost
@@ -1108,10 +1397,14 @@ class Engine:
         if stepped:
             for idx in prefill_done_now:
                 r = reqs[idx]
-                if r.generated == 0:
+                first = r.generated == 0
+                if first:
                     r.generated = 1
                     r.first_token_at = now
                 self.kv.charge(r.slot, r.rid, r.kv_written)
+                self.trace(now, r.rid, "prefill_done")
+                if first:
+                    self.trace(now, r.rid, "first_token")
                 self.finish_if_done(r, now)
                 if r.phase != FINISHED:
                     self.reindex(r)
@@ -1135,6 +1428,10 @@ class Engine:
             r = next(r for r in reqs if r.rid == rid)
             finished.append((rid, r.finished_at - r.arrival, r.first_token_at - r.arrival, r.generated))
         self.finished_rids = []
+        # The step span closes where Rust `step_inner` returns: the
+        # post-step compaction below is outside it.
+        self.obs_exit()
+        self.obs_count("steps")
         if finished:
             # Order-preserving compaction with incremental slab
             # maintenance (rust ServingEngine::step); steps that finish
@@ -1173,6 +1470,11 @@ class Engine:
             self.m_migrations += r.n_migrations
             self.pred_pairs.append((r.initial_pred, float(r.n_out)))
             self.finished_rids.append(r.rid)
+            self.trace(now, r.rid, "finish", {
+                "latency": r.finished_at - r.arrival,
+                "ttft": (r.first_token_at - r.arrival)
+                        if r.first_token_at is not None else 0.0,
+                "toks": r.generated})
 
     # --- prefix-aware victim ranking (ServingEngine::victim_rank) ---
     def victim_rank(self, r, base):
@@ -1217,7 +1519,7 @@ class Engine:
                 vi = self.oom_victim_indexed(reqs)
                 if vi is None:
                     break
-                self.discard_victim(reqs[vi], in_res_idx=True)
+                self.discard_victim(reqs[vi], in_res_idx=True, oom=True)
             return
         c = policy_c(self.policy)
         while not self.kv.fits(0):
@@ -1235,15 +1537,16 @@ class Engine:
             if not cands:
                 break
             _, r = max(cands, key=lambda t: self.victim_rank(t[1], self.rank_of(t[1])))
-            self.discard_victim(r, in_res_idx=True)
+            self.discard_victim(r, in_res_idx=True, oom=True)
 
-    def discard_victim(self, r, in_res_idx):
+    def discard_victim(self, r, in_res_idx, oom=False):
         """ServingEngine::discard_victim: KV dropped, recompute later. A
         share-deferred candidate can be discarded while its entry sits
         popped-and-held by the in-flight selection; its rank is
         invariant under the discard (only TRAIL discards mid-selection),
         so the held entry stays valid — the index just must not be
-        updated for a rid it doesn't hold."""
+        updated for a rid it doesn't hold. `oom` tags the trace event:
+        pool exhaustion vs an admission-time eviction decision."""
         self.kv.free(r.slot, r.rid)
         if in_res_idx:
             self.res_idx.remove(r.rid)
@@ -1254,14 +1557,17 @@ class Engine:
         r.n_discards += 1
         if r.rid in self.sched_idx.live:
             self.sched_idx.update(r.rid, self.rank_of(r))
+        self.trace(self.now, r.rid, "discard", {"oom": 1 if oom else 0})
 
     def apply_phase_transitions(self, reqs, chosen, now):
         for i, r in enumerate(reqs):
             before = r.phase
             level_before = r.starve_level
+            preempted = False
             if not chosen[i] and r.phase == RUNNING:
                 r.phase = PREEMPTED
                 r.n_preemptions += 1
+                preempted = True
             elif chosen[i] and r.phase in (PREEMPTED, WAITING, DISCARDED):
                 r.phase = RUNNING if r.prefill_done() else PREFILLING
             elif chosen[i] and r.phase == PREFILLING and r.prefill_done():
@@ -1275,6 +1581,8 @@ class Engine:
                 r.starve_level = 0
             if r.phase != before or r.starve_level != level_before:
                 self.reindex(r)
+            if preempted:
+                self.trace(now, r.rid, "preempt")
 
     def select_targets(self, reqs):
         shares_on = self.fair.shares_active()
@@ -1367,6 +1675,7 @@ class Engine:
         r.slot = slot
         r.prefilled = 0
         r.kv_written = 0
+        attached = 0
         if self.kv.prefix_on:
             self.kv.set_prompt(slot, r.rid, r.prompt)
             attach = self.attachable_prefix(r)
@@ -1376,7 +1685,16 @@ class Engine:
                 self.kv.charge(slot, r.rid, attach)
                 self.kv.prefix_hits += 1
                 self.kv.reused_tokens += attach
-        self.res_idx.insert(r.rid, self.rank_of(r))
+                attached = attach
+        rk = self.rank_of(r)
+        self.res_idx.insert(r.rid, rk)
+        if self.tracing():
+            credit = (self.t_credit[r.tenant]
+                      if r.tenant < len(self.t_credit) else 0.0)
+            self.trace(self.now, r.rid, "sched_alloc", {
+                "key": rk[1], "locked": 1 if rk[0] == 0 else 0,
+                "starve": r.starve_level, "credit": credit,
+                "attach": attached})
 
     def preempt_victim_prefix(self, reqs, idx, chosen, c):
         """Prefix-aware admission victim: live-cache scan with the
@@ -1402,6 +1720,7 @@ class Engine:
         return vi
 
     def ensure_resident(self, reqs, idx, chosen):
+        self.obs_count("ensure_resident")
         if reqs[idx].slot is not None:
             return True
         c = policy_c(self.policy)
@@ -1430,11 +1749,14 @@ class Engine:
                 return False
             if vr[0] == 1 and cr[0] == 1 and vr[1] - cr[1] < EVICT_MARGIN:
                 return False
+            self.trace(self.now, reqs[idx].rid, "sched_evict", {
+                "key": cr[1], "vrid": vreq.rid, "vkey": vr[1]})
             self.discard_victim(vreq, in_res_idx=True)
         self.alloc_slot(reqs[idx])
         return True
 
     def ensure_resident_indexed(self, reqs, idx, chosen):
+        self.obs_count("ensure_resident")
         if reqs[idx].slot is not None:
             return True
         need = self.admission_need(reqs[idx])
@@ -1454,6 +1776,11 @@ class Engine:
                 vi = self.preempt_victim_prefix(reqs, idx, chosen, c)
                 if vi is None:
                     return False
+                if self.tracing():
+                    vkey = self.victim_rank(reqs[vi], self.rank_of(reqs[vi]))[1]
+                    key = self.rank_of(reqs[idx])[1]
+                    self.trace(self.now, reqs[idx].rid, "sched_evict", {
+                        "key": key, "vrid": reqs[vi].rid, "vkey": vkey})
                 self.discard_victim(reqs[vi], in_res_idx=True)
                 continue
             # Worst-ranked eligible victim: pop the resident max index;
@@ -1492,6 +1819,8 @@ class Engine:
             for e in held:
                 self.res_idx.reinsert(e)
             vreq = reqs[self.rid_pos[victim[0][3]]]
+            self.trace(self.now, reqs[idx].rid, "sched_evict", {
+                "key": cr[1], "vrid": victim[0][3], "vkey": victim[0][1]})
             # The victim was already popped off the resident index.
             self.discard_victim(vreq, in_res_idx=False)
         self.alloc_slot(reqs[idx])
@@ -1704,11 +2033,15 @@ def pick_replica(dispatch, engines, rr, prompt=None):
 
 
 def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, noise=0.4,
-            selector="indexed", fair=NEUTRAL_FAIR, prefix_cache=False, predictor=None):
+            selector="indexed", fair=NEUTRAL_FAIR, prefix_cache=False, predictor=None,
+            obs=None):
+    # obs = (trace_on, timing_on); each engine gets its replica index
+    # stamped so merged events sort the same way the Rust driver's do.
     engines = [
         Engine(policy, slots, pool_tokens, noise=noise, selector=selector, fair=fair,
-               prefix_cache=prefix_cache, predictor=predictor)
-        for _ in range(replicas)
+               prefix_cache=prefix_cache, predictor=predictor,
+               obs=(obs[0], obs[1], i) if obs is not None else None)
+        for i in range(replicas)
     ]
     n_total = len(trace)
     nxt = 0
@@ -1810,7 +2143,26 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
     pred_pairs = []
     for e in engines:
         pred_pairs.extend(e.pred_pairs)
+    # Flight recorder: concatenate per-engine traces in replica-index
+    # order, then virtual-time sort — mirrors SimDriver::finish_obs.
+    trace_events = []
+    counts = new_phase_counts()
+    timing = None
+    for e in engines:
+        trace_events.extend(e.take_trace())
+        merge_phase_counts(counts, e.phase_counts())
+        ts = e.timing_stats()
+        if ts is not None:
+            if timing is None:
+                timing = ts
+            else:
+                timing.merge(ts)
+    counts["dispatch"] += rr
+    sort_events(trace_events)
     return {
+        "trace_events": trace_events,
+        "phase_counts": counts,
+        "timing": timing,
         "predictor": engines[0].predictor.name,
         "pred_pairs": pred_pairs,
         "n": finished,
@@ -1968,8 +2320,38 @@ def jnum(x):
     if x == math.trunc(x) and abs(x) < 1e15:
         return str(int(x))
     r = repr(x)
-    assert "e" not in r and "E" not in r, f"exponent formatting diverges from Rust: {r}"
+    if "e" in r or "E" in r:
+        # Python repr() switches to scientific notation below 1e-4;
+        # Rust's Display never does. The mantissa digits are the same
+        # shortest-roundtrip string, so rewriting to positional form
+        # reproduces Rust's bytes exactly.
+        r = dec_positional(r)
     return r
+
+
+def dec_positional(r):
+    neg = r.startswith("-")
+    if neg:
+        r = r[1:]
+    mant, _, exp = r.lower().partition("e")
+    exp = int(exp)
+    if "." in mant:
+        ip, fp = mant.split(".")
+    else:
+        ip, fp = mant, ""
+    digits = (ip + fp).lstrip("0") or "0"
+    # Decimal point position counted from the left of `digits`.
+    lead_zeros = len(ip) - len(ip.lstrip("0"))
+    point = len(ip) - lead_zeros + exp
+    if digits == "0":
+        out = "0"
+    elif point <= 0:
+        out = "0." + "0" * (-point) + digits
+    elif point >= len(digits):
+        out = digits + "0" * (point - len(digits))
+    else:
+        out = digits[:point] + "." + digits[point:]
+    return ("-" if neg else "") + out
 
 
 def mean(xs):
@@ -2296,17 +2678,101 @@ def pred_rows():
     return rows
 
 
+# Flight-recorder sweep (rust/src/sim/scenario.rs run_obs_sweep — keep
+# in sync): scale-1k × {fcfs, trail-c0.8} at 2 replicas with tracing
+# and the phase timer on, every cell on the identical trace. The pinned
+# bytes are pure virtual-time data: event counts by kind, the trace FNV
+# fingerprint, phase calls + virtual totals, p99 tails. Wall-clock
+# spans feed `--timings-json` only and never enter the report.
+OBS_SCHEMA = "trail.simlab.obs/v1"
+OBS_POLICIES = [("fcfs",), ("trail", 0.8)]
+
+
+def obs_obj(out, trace_text):
+    """ObsRow::from_outcome — event histogram, trace fingerprint, and
+    the hot-loop phase table for one traced cell."""
+    by_kind = {}
+    for ev in out["trace_events"]:
+        by_kind[ev[4]] = by_kind.get(ev[4], 0) + 1
+    return {
+        "events": by_kind,
+        "n_events": len(out["trace_events"]),
+        "p99_latency_s": percentile(out["lat"], 99.0),
+        "p99_ttft_s": percentile(out["ttft"], 99.0),
+        "phases": [
+            {"name": name, "calls": calls, "virtual_s": virtual_s}
+            for name, calls, virtual_s in phase_rows(out["phase_counts"])
+        ],
+        "trace_fnv": "%016x" % fnv1a64(trace_text.encode()),
+    }
+
+
+def obs_rows():
+    """Returns (rows, traces, phase_counts, timing): the report rows
+    plus the artifacts behind them — per-cell rendered trace texts in
+    grid order, merged phase counts, and merged wall spans."""
+    scs = builtin_scenarios()
+    tenants, n, seed, dispatch, slots, pool_frac, noise = scs["scale-1k"]
+    trace = generate_trace(tenants, n, seed)
+    pool_tokens = int((slots * MAX_SEQ) * pool_frac)
+    rows = []
+    traces = []
+    counts = new_phase_counts()
+    timing = None
+    for policy in OBS_POLICIES:
+        out = run_sim(trace, policy, 2, dispatch, True, slots, pool_tokens,
+                      noise, obs=(True, True))
+        cell = "scale-1k/" + policy_name(policy) + "/r2"
+        text = render_trace(out["trace_events"], cell=cell)
+        merge_phase_counts(counts, out["phase_counts"])
+        if out["timing"] is not None:
+            if timing is None:
+                timing = out["timing"]
+            else:
+                timing.merge(out["timing"])
+        row = make_row("scale-1k", policy, dispatch, 2, True, seed, out)
+        row["obs"] = obs_obj(out, text)
+        rows.append(row)
+        traces.append((cell, text))
+    return rows, traces, counts, timing
+
+
 DEFAULT_POLICIES = [("fcfs",), ("trail", 1.0), ("trail", 0.8)]
 
 
 def main(argv):
-    if not argv or argv[0] not in ("sweep", "sched", "fair", "prefix", "pred"):
+    if not argv or argv[0] not in ("sweep", "sched", "fair", "prefix", "pred", "obs"):
         print(__doc__)
         return 2
     out_path = None
     if "--out" in argv:
         out_path = argv[argv.index("--out") + 1]
-    if argv[0] == "pred":
+    if argv[0] == "obs":
+        rows, traces, counts, timing = obs_rows()
+        text = report_json(rows, schema=OBS_SCHEMA)
+        for row in rows:
+            ob = row["obs"]
+            print(
+                f"{row['scenario']:>10} {row['policy']:>10} x{row['replicas']} "
+                f"events={ob['n_events']} fnv={ob['trace_fnv']} "
+                f"p99={ob['p99_latency_s']:.3f}s discard={row['discards']}"
+            )
+        if timing is not None:
+            print(
+                f"timer overhead: {timing.overhead_frac() * 100.0:.2f}% of "
+                f"{timing.total_wall_s():.4f}s step wall time ({timing.n_spans} spans)"
+            )
+        if "--trace-jsonl" in argv:
+            tj = argv[argv.index("--trace-jsonl") + 1]
+            with open(tj, "w") as f:
+                f.write("".join(t for _, t in traces))
+            print(f"trace events ({len(traces)} cells) -> {tj}")
+        if "--timings-json" in argv:
+            tp = argv[argv.index("--timings-json") + 1]
+            with open(tp, "w") as f:
+                f.write(timing_report_text(counts, timing))
+            print(f"phase timings -> {tp}")
+    elif argv[0] == "pred":
         rows = pred_rows()
         text = report_json(rows, schema=PRED_SCHEMA)
         for row in rows:

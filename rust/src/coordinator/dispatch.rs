@@ -278,10 +278,51 @@ impl Default for AffinityTracker {
     }
 }
 
+/// One replica's observability gauges as seen from the pool side — the
+/// payload behind the HTTP `/metrics` and `/healthz` surfaces. Values
+/// come from the replica's [`SharedStatus`] cell (published by the
+/// engine after every admission/step) plus the pool's own dispatch
+/// counter, so reading them never touches the engine thread.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaMetrics {
+    /// Jobs dispatched to the replica and not yet finished.
+    pub queued: u64,
+    /// Jobs dispatched by the pool since start (monotone counter).
+    pub dispatched: u64,
+    /// Jobs the replica has finished (monotone counter).
+    pub finished: u64,
+    /// Requests admitted and not yet finished, engine-side.
+    pub live: usize,
+    /// Requests currently holding KV residency.
+    pub resident: usize,
+    /// KV tokens in use.
+    pub kv_used_tokens: usize,
+    /// KV pool capacity in tokens.
+    pub kv_pool_tokens: usize,
+    /// Summed predicted remaining output tokens over the live set.
+    pub pred_remaining: f64,
+    /// Preemptions so far (monotone counter).
+    pub n_preemptions: u64,
+    /// OOM discard-and-requeue events so far (monotone counter).
+    pub n_discards: u64,
+    /// Worst queueing age observed so far (seconds).
+    pub max_wait_age: f64,
+    /// Prompt tokens served from the shared prefix cache (monotone).
+    pub reused_tokens: u64,
+}
+
 /// Anything a front-end can hand an [`OnlineJob`] to: a single engine's
 /// channel sender, or a [`ReplicaPool`].
 pub trait JobSink: Send + Sync {
     fn submit(&self, job: OnlineJob) -> Result<()>;
+
+    /// Per-replica gauges for the `/metrics` / `/healthz` surfaces.
+    /// Sinks without a pool-side view (a bare engine channel) report
+    /// nothing; [`ReplicaPool`] overrides this from its `SharedStatus`
+    /// cells.
+    fn replica_metrics(&self) -> Vec<ReplicaMetrics> {
+        Vec::new()
+    }
 }
 
 impl JobSink for SyncSender<OnlineJob> {
@@ -441,6 +482,29 @@ impl ReplicaPool {
 impl JobSink for ReplicaPool {
     fn submit(&self, job: OnlineJob) -> Result<()> {
         ReplicaPool::submit(self, job).map(|_| ())
+    }
+
+    fn replica_metrics(&self) -> Vec<ReplicaMetrics> {
+        self.replicas
+            .iter()
+            .map(|r| {
+                let dispatched = r.dispatched.load(Ordering::Relaxed);
+                ReplicaMetrics {
+                    queued: dispatched.saturating_sub(r.status.finished()),
+                    dispatched,
+                    finished: r.status.finished(),
+                    live: r.status.live(),
+                    resident: r.status.resident(),
+                    kv_used_tokens: r.status.kv_used_tokens(),
+                    kv_pool_tokens: r.status.kv_pool_tokens(),
+                    pred_remaining: r.status.pred_remaining(),
+                    n_preemptions: r.status.n_preemptions(),
+                    n_discards: r.status.n_discards(),
+                    max_wait_age: r.status.max_wait_age(),
+                    reused_tokens: r.status.reused_tokens(),
+                }
+            })
+            .collect()
     }
 }
 

@@ -54,6 +54,7 @@ use crate::coordinator::policy::{Policy, Rank};
 use crate::coordinator::rank_index::{Entry, RankIndex};
 use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::source::{Admission, ChannelSource, ReplaySource, RequestSource};
+use crate::obs::{ObsConfig, PhaseCounts, PhaseTimer, TimingStats, TraceEvent, TraceKind};
 use crate::predictor::Predictor;
 use crate::workload::{Arrival, RequestSpec};
 
@@ -120,6 +121,13 @@ pub struct ServeConfig {
     /// default — the engine is then bit-identical to the strict
     /// per-request accounting model.
     pub prefix_cache: bool,
+    /// Flight recorder (docs/observability.md): request-lifecycle +
+    /// scheduler-decision tracing and phase timing. Inert by default —
+    /// the engine then allocates no observability state at all, and the
+    /// checked-in BENCH baselines are byte-identical either way (the
+    /// recorder observes; it never perturbs RNG draws, float ops, or
+    /// work counters).
+    pub obs: ObsConfig,
 }
 
 impl ServeConfig {
@@ -134,8 +142,21 @@ impl ServeConfig {
             max_iterations: 0,
             fairness: FairnessConfig::neutral(),
             prefix_cache: false,
+            obs: ObsConfig::default(),
         }
     }
+}
+
+/// Per-engine flight-recorder state (`Some` iff `ObsConfig::enabled`).
+/// Events are buffered here in emission order and drained by the
+/// driver/caller (`take_trace`), which merges and sorts across replicas.
+struct EngineObs {
+    cfg: ObsConfig,
+    /// Per-replica emission sequence — the intra-timestamp tiebreak.
+    seq: u64,
+    events: Vec<TraceEvent>,
+    counts: PhaseCounts,
+    timer: Option<PhaseTimer>,
 }
 
 /// Victim-rank shaping with the prefix cache on: every token a victim
@@ -270,6 +291,15 @@ pub struct SharedStatus {
     resident: AtomicUsize,
     kv_used_tokens: AtomicUsize,
     pred_remaining_bits: AtomicU64,
+    // Per-replica observability gauges (the `/metrics` surface): the
+    // engine publishes these alongside the load signals above, so a
+    // cross-thread scraper sees preemption/discard pressure and prefix
+    // reuse without touching the engine.
+    kv_pool_tokens: AtomicUsize,
+    n_preemptions: AtomicU64,
+    n_discards: AtomicU64,
+    max_wait_age_bits: AtomicU64,
+    reused_tokens: AtomicU64,
 }
 
 impl SharedStatus {
@@ -280,6 +310,22 @@ impl SharedStatus {
         self.resident.store(st.resident, Ordering::Relaxed);
         self.kv_used_tokens.store(st.kv_used_tokens, Ordering::Relaxed);
         self.pred_remaining_bits.store(st.pred_remaining_sum.to_bits(), Ordering::Relaxed);
+        self.kv_pool_tokens.store(st.kv_pool_tokens, Ordering::Relaxed);
+    }
+
+    /// Publish the metrics-derived gauges (engine-side; rides on every
+    /// `publish_status`).
+    pub fn publish_counters(
+        &self,
+        n_preemptions: u64,
+        n_discards: u64,
+        max_wait_age: f64,
+        reused_tokens: u64,
+    ) {
+        self.n_preemptions.store(n_preemptions, Ordering::Relaxed);
+        self.n_discards.store(n_discards, Ordering::Relaxed);
+        self.max_wait_age_bits.store(max_wait_age.to_bits(), Ordering::Relaxed);
+        self.reused_tokens.store(reused_tokens, Ordering::Relaxed);
     }
 
     pub fn admitted(&self) -> u64 {
@@ -304,6 +350,26 @@ impl SharedStatus {
 
     pub fn pred_remaining(&self) -> f64 {
         f64::from_bits(self.pred_remaining_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn kv_pool_tokens(&self) -> usize {
+        self.kv_pool_tokens.load(Ordering::Relaxed)
+    }
+
+    pub fn n_preemptions(&self) -> u64 {
+        self.n_preemptions.load(Ordering::Relaxed)
+    }
+
+    pub fn n_discards(&self) -> u64 {
+        self.n_discards.load(Ordering::Relaxed)
+    }
+
+    pub fn max_wait_age(&self) -> f64 {
+        f64::from_bits(self.max_wait_age_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn reused_tokens(&self) -> u64 {
+        self.reused_tokens.load(Ordering::Relaxed)
     }
 }
 
@@ -343,6 +409,9 @@ pub struct ServingEngine<B: ModelBackend> {
     /// rids targeted by the most recent step, rank order (diagnostics +
     /// the differential harness).
     last_target_rids: Vec<u64>,
+    /// Flight recorder (`None` unless `serve.obs` enables something —
+    /// the zero-cost-when-disabled contract is this Option).
+    obs: Option<EngineObs>,
 }
 
 /// Point-in-time per-request view for differential tests: two engines
@@ -378,6 +447,21 @@ impl<B: ModelBackend> ServingEngine<B> {
             kv.enable_prefix_cache();
         }
         let clock = Clock::new(serve.clock);
+        let obs = if serve.obs.enabled() {
+            Some(EngineObs {
+                cfg: serve.obs.clone(),
+                seq: 0,
+                events: Vec::new(),
+                counts: PhaseCounts::default(),
+                timer: if serve.obs.timing {
+                    Some(PhaseTimer::new())
+                } else {
+                    None
+                },
+            })
+        } else {
+            None
+        };
         Self {
             cfg: cfg.clone(),
             serve,
@@ -397,7 +481,92 @@ impl<B: ModelBackend> ServingEngine<B> {
             rid_pos: RidSlab::default(),
             shares: TenantShares::default(),
             last_target_rids: Vec::new(),
+            obs,
         }
+    }
+
+    // ---- flight recorder (no-ops when `serve.obs` is inert) ----
+
+    /// Is event recording on? (Gates the few sites whose payloads cost
+    /// something to compute.)
+    #[inline]
+    fn tracing(&self) -> bool {
+        self.obs.as_ref().map_or(false, |o| o.cfg.trace)
+    }
+
+    /// Record one trace event at virtual time `t`.
+    #[inline]
+    fn trace(&mut self, t: f64, rid: u64, kind: TraceKind) {
+        if let Some(o) = self.obs.as_mut() {
+            if o.cfg.trace {
+                o.events.push(TraceEvent {
+                    t,
+                    rep: o.cfg.replica,
+                    seq: o.seq,
+                    rid,
+                    kind,
+                });
+                o.seq += 1;
+            }
+        }
+    }
+
+    /// Bump a deterministic phase counter.
+    #[inline]
+    fn obs_count(&mut self, f: impl FnOnce(&mut PhaseCounts)) {
+        if let Some(o) = self.obs.as_mut() {
+            f(&mut o.counts);
+        }
+    }
+
+    /// Open a wall-clock timing span (timer enabled only).
+    #[inline]
+    fn obs_enter(&mut self, phase: &'static str) {
+        if let Some(o) = self.obs.as_mut() {
+            if let Some(t) = o.timer.as_mut() {
+                t.enter(phase);
+            }
+        }
+    }
+
+    /// Close the innermost timing span.
+    #[inline]
+    fn obs_exit(&mut self) {
+        if let Some(o) = self.obs.as_mut() {
+            if let Some(t) = o.timer.as_mut() {
+                t.exit();
+            }
+        }
+    }
+
+    /// Drain the buffered trace events (empty when tracing is off). The
+    /// caller owns merging/sorting across replicas (`obs::sort_events`).
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        self.obs
+            .as_mut()
+            .map(|o| std::mem::take(&mut o.events))
+            .unwrap_or_default()
+    }
+
+    /// Deterministic per-phase call counters (zeros when obs is off).
+    pub fn phase_counts(&self) -> PhaseCounts {
+        self.obs.as_ref().map(|o| o.counts).unwrap_or_default()
+    }
+
+    /// Wall-clock phase timings (`Some` only when `obs.timing`).
+    pub fn timing_stats(&self) -> Option<TimingStats> {
+        self.obs
+            .as_ref()
+            .and_then(|o| o.timer.as_ref())
+            .map(|t| t.stats())
+    }
+
+    /// Folded flamegraph stacks (`profiling` feature + timing enabled).
+    pub fn folded_stacks(&self) -> Option<String> {
+        self.obs
+            .as_ref()
+            .and_then(|o| o.timer.as_ref())
+            .and_then(|t| t.folded_text())
     }
 
     /// Work performed by the active selector (see `docs/scheduler.md`
@@ -451,6 +620,7 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// rank-relevant state (phase / generated / predictions / aging
     /// level). No-ops when the rank is unchanged.
     fn reindex(&mut self, r: &Request) {
+        self.obs_count(|c| c.rank_index_ops += 1);
         let rk = self.rank_of(r);
         self.sched_idx.update(rk);
         if r.slot.is_some() {
@@ -503,6 +673,15 @@ impl<B: ModelBackend> ServingEngine<B> {
         req.tenant = tenant;
         self.predictor.init_request(&mut req);
         let rid = req.spec.rid;
+        self.trace(
+            at,
+            rid,
+            TraceKind::Admit {
+                tenant,
+                prompt: req.spec.prompt.len() as u64,
+                predicted: req.initial_pred,
+            },
+        );
         let rk = self.rank_of(&req);
         self.sched_idx.insert(rk);
         self.rid_pos.set(rid, self.requests.len());
@@ -588,6 +767,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         };
         r.n_migrations += 1;
         self.metrics.n_migrated_out += 1;
+        self.trace(self.clock.now(), r.spec.rid, TraceKind::MigrateOut);
         self.publish_status();
         Some(r)
     }
@@ -599,6 +779,7 @@ impl<B: ModelBackend> ServingEngine<B> {
     pub fn admit_migrated(&mut self, req: Request) -> u64 {
         debug_assert!(req.slot.is_none(), "migrated request still holds a slot");
         let rid = req.spec.rid;
+        self.trace(self.clock.now(), rid, TraceKind::MigrateIn);
         let rk = self.rank_of(&req);
         self.sched_idx.insert(rk);
         self.rid_pos.set(rid, self.requests.len());
@@ -659,6 +840,12 @@ impl<B: ModelBackend> ServingEngine<B> {
     fn publish_status(&self) {
         if let Some(cell) = &self.status_cell {
             cell.publish(&self.status());
+            cell.publish_counters(
+                self.metrics.n_preemptions as u64,
+                self.metrics.n_discards as u64,
+                self.metrics.max_wait_age,
+                self.kv.reused_tokens,
+            );
         }
     }
 
@@ -677,9 +864,12 @@ impl<B: ModelBackend> ServingEngine<B> {
         if self.serve.max_iterations > 0 && self.n_iter >= self.serve.max_iterations {
             anyhow::bail!("max_iterations exceeded ({}) — scheduler stall?", self.n_iter);
         }
+        self.obs_enter("step");
         let mut requests = std::mem::take(&mut self.requests);
         let result = self.step_inner(&mut requests);
         self.requests = requests;
+        self.obs_exit();
+        self.obs_count(|c| c.steps += 1);
         if let Ok(out) = &result {
             // Order-preserving compaction of finished requests with
             // incremental slab maintenance: a step that finished nothing
@@ -785,19 +975,26 @@ impl<B: ModelBackend> ServingEngine<B> {
         // aged ranks; then OOM resolution; then the per-step tenant
         // credit accrual the share-capped selection draws from.
         self.refresh_starvation(requests);
+        self.obs_enter("resolve_oom");
         self.resolve_oom(requests);
+        self.obs_exit();
+        self.obs_count(|c| c.resolve_oom += 1);
         if self.serve.fairness.shares_active() {
             self.shares.accrue(&self.serve.fairness, self.backend.slots());
         }
+        self.obs_enter("select_targets");
         let target = match self.serve.selector {
             Selector::Indexed => self.select_targets_indexed(requests),
             Selector::Reference => self.select_targets_reference(requests),
         };
+        self.obs_exit();
+        self.obs_count(|c| c.select_targets += 1);
         self.last_target_rids.clear();
         self.last_target_rids
             .extend(target.iter().map(|&i| requests[i].spec.rid));
 
         // ---- 3. prefill budget ----
+        self.obs_enter("prefill");
         let mut prefill_done_now: Vec<usize> = Vec::new();
         let mut budget = self.serve.prefill_chunks_per_iter;
         let mut chunks_issued = 0usize;
@@ -833,6 +1030,8 @@ impl<B: ModelBackend> ServingEngine<B> {
                 prefill_done_now.push(idx);
             }
         }
+        self.obs_exit();
+        self.obs_count(|c| c.prefill_chunks += chunks_issued as u64);
 
         // ---- 4. decode step ----
         let b = self.backend.slots();
@@ -858,13 +1057,24 @@ impl<B: ModelBackend> ServingEngine<B> {
             }
         }
         if !decoding.is_empty() {
+            self.obs_enter("decode");
             self.backend.decode_step(&tokens, &pos, &active)?;
+            self.obs_exit();
+            let n_active = decoding.len() as u64;
+            self.obs_count(|c| {
+                c.decode_steps += 1;
+                c.decode_slot_steps += n_active;
+            });
         }
 
         // ---- 5. readout + bookkeeping ----
         let stepped = !decoding.is_empty() || !prefill_done_now.is_empty();
         let readout = if stepped {
-            Some(self.backend.read()?)
+            self.obs_enter("readout");
+            let r = self.backend.read()?;
+            self.obs_exit();
+            self.obs_count(|c| c.readouts += 1);
+            Some(r)
         } else {
             None
         };
@@ -877,14 +1087,20 @@ impl<B: ModelBackend> ServingEngine<B> {
             for idx in prefill_done_now {
                 let r = &mut requests[idx];
                 let slot = r.slot.unwrap();
-                if r.generated == 0 {
+                let rid = r.spec.rid;
+                let first = r.generated == 0;
+                if first {
                     // Initial prefill → first token (TTFT, like vLLM).
                     r.generated = 1;
                     r.first_token_at = Some(now);
                 }
                 // Recompute prefill: tokens were already produced;
                 // nothing to stamp.
-                self.kv.charge(slot, r.spec.rid, r.resident_tokens());
+                self.kv.charge(slot, rid, r.resident_tokens());
+                self.trace(now, rid, TraceKind::PrefillDone);
+                if first {
+                    self.trace(now, rid, TraceKind::FirstToken);
+                }
                 self.finish_if_done(&mut requests[idx], now);
                 // `generated` may have crossed the preemption window.
                 if requests[idx].phase != Phase::Finished {
@@ -951,6 +1167,15 @@ impl<B: ModelBackend> ServingEngine<B> {
             self.predictor.observe_completion(r);
             self.metrics.observe_finish(r);
             self.finished_rids.push(r.spec.rid);
+            self.trace(
+                now,
+                r.spec.rid,
+                TraceKind::Finish {
+                    latency: r.latency().unwrap_or(0.0),
+                    ttft: r.ttft().unwrap_or(0.0),
+                    toks: r.generated as u64,
+                },
+            );
         }
     }
 
@@ -1037,7 +1262,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         if self.serve.selector == Selector::Indexed {
             while !self.kv.fits(0) {
                 let Some(vi) = self.oom_victim_indexed(requests, c) else { break };
-                self.discard_victim(requests, vi, true);
+                self.discard_victim(requests, vi, true, true);
                 self.metrics.n_oom_discards += 1;
             }
             return;
@@ -1063,7 +1288,7 @@ impl<B: ModelBackend> ServingEngine<B> {
                 })
                 .map(|(i, _)| i);
             let Some(vi) = victim else { break };
-            self.discard_victim(requests, vi, true);
+            self.discard_victim(requests, vi, true, true);
             self.metrics.n_oom_discards += 1;
         }
     }
@@ -1159,9 +1384,11 @@ impl<B: ModelBackend> ServingEngine<B> {
             let r = &mut requests[i];
             let before = r.phase;
             let level_before = r.starve_level;
+            let mut preempted = false;
             if !chosen[i] && r.phase == Phase::Running {
                 r.phase = Phase::Preempted;
                 r.n_preemptions += 1;
+                preempted = true;
             } else if chosen[i]
                 && matches!(r.phase, Phase::Preempted | Phase::Waiting | Phase::Discarded)
             {
@@ -1185,6 +1412,9 @@ impl<B: ModelBackend> ServingEngine<B> {
             }
             if requests[i].phase != before || requests[i].starve_level != level_before {
                 self.reindex(&requests[i]);
+            }
+            if preempted {
+                self.trace(now, requests[i].spec.rid, TraceKind::Preempt);
             }
         }
     }
@@ -1236,7 +1466,10 @@ impl<B: ModelBackend> ServingEngine<B> {
             // rank ordering already encodes that via `locked`, but a
             // waiting request must not grab resources a resident one
             // needs: handled below by slot availability.
-            if self.ensure_resident_reference(requests, idx, &chosen) {
+            self.obs_enter("ensure_resident");
+            let ok = self.ensure_resident_reference(requests, idx, &chosen);
+            self.obs_exit();
+            if ok {
                 chosen[idx] = true;
                 target.push(idx);
                 if shares_on {
@@ -1251,7 +1484,10 @@ impl<B: ModelBackend> ServingEngine<B> {
             if target.len() >= b {
                 break;
             }
-            if self.ensure_resident_reference(requests, idx, &chosen) {
+            self.obs_enter("ensure_resident");
+            let ok = self.ensure_resident_reference(requests, idx, &chosen);
+            self.obs_exit();
+            if ok {
                 chosen[idx] = true;
                 target.push(idx);
                 self.shares.take(requests[idx].tenant, b);
@@ -1285,7 +1521,10 @@ impl<B: ModelBackend> ServingEngine<B> {
                 deferred.push(ent);
                 continue;
             }
-            if self.ensure_resident_indexed(requests, idx, &chosen) {
+            self.obs_enter("ensure_resident");
+            let ok = self.ensure_resident_indexed(requests, idx, &chosen);
+            self.obs_exit();
+            if ok {
                 chosen[idx] = true;
                 target.push(idx);
                 if shares_on {
@@ -1301,7 +1540,10 @@ impl<B: ModelBackend> ServingEngine<B> {
                 break;
             }
             let idx = self.rid_pos.get(ent.rank.rid);
-            if self.ensure_resident_indexed(requests, idx, &chosen) {
+            self.obs_enter("ensure_resident");
+            let ok = self.ensure_resident_indexed(requests, idx, &chosen);
+            self.obs_exit();
+            if ok {
                 chosen[idx] = true;
                 target.push(idx);
                 self.shares.take(requests[idx].tenant, b);
@@ -1326,6 +1568,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         idx: usize,
         chosen: &[bool],
     ) -> bool {
+        self.obs_count(|c| c.ensure_resident += 1);
         if requests[idx].slot.is_some() {
             return true;
         }
@@ -1386,7 +1629,16 @@ impl<B: ModelBackend> ServingEngine<B> {
             if !vr.locked && !cr.locked && vr.key - cr.key < self.serve.evict_margin {
                 return false;
             }
-            self.discard_victim(requests, vi, true);
+            self.trace(
+                self.clock.now(),
+                requests[idx].spec.rid,
+                TraceKind::SchedEvict {
+                    key: cr.key,
+                    vrid: requests[vi].spec.rid,
+                    vkey: vr.key,
+                },
+            );
+            self.discard_victim(requests, vi, true, false);
         }
 
         self.alloc_slot(requests, idx);
@@ -1427,6 +1679,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         idx: usize,
         chosen: &[bool],
     ) -> bool {
+        self.obs_count(|c| c.ensure_resident += 1);
         if requests[idx].slot.is_some() {
             return true;
         }
@@ -1456,7 +1709,22 @@ impl<B: ModelBackend> ServingEngine<B> {
                 let Some(vi) = self.preempt_victim_prefix(requests, idx, chosen, c) else {
                     return false;
                 };
-                self.discard_victim(requests, vi, true);
+                if self.tracing() {
+                    let vkey =
+                        Self::victim_rank(&self.kv, &requests[vi], self.rank_of(&requests[vi]))
+                            .key;
+                    let key = self.rank_of(&requests[idx]).key;
+                    self.trace(
+                        self.clock.now(),
+                        requests[idx].spec.rid,
+                        TraceKind::SchedEvict {
+                            key,
+                            vrid: requests[vi].spec.rid,
+                            vkey,
+                        },
+                    );
+                }
+                self.discard_victim(requests, vi, true, false);
                 continue;
             }
             let mut held: Vec<Entry> = Vec::new();
@@ -1498,9 +1766,18 @@ impl<B: ModelBackend> ServingEngine<B> {
             }
             let v = victim.unwrap();
             let vi = self.rid_pos.get(v.rank.rid);
+            self.trace(
+                self.clock.now(),
+                requests[idx].spec.rid,
+                TraceKind::SchedEvict {
+                    key: cr.key,
+                    vrid: v.rank.rid,
+                    vkey: v.rank.key,
+                },
+            );
             // The victim was already popped off the resident index — the
             // discard must not re-remove it there.
-            self.discard_victim(requests, vi, false);
+            self.discard_victim(requests, vi, false, false);
         }
 
         self.alloc_slot(requests, idx);
@@ -1510,10 +1787,11 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// Discard a resident victim: KV dropped, recompute later; both
     /// indexes kept coherent. `in_res_idx` is false only on the indexed
     /// victim path, where the caller already popped the entry off the
-    /// resident index. Under FCFS a discard unlocks the request (its
-    /// rank flips); under TRAIL the rank is invariant and the update
-    /// no-ops.
-    fn discard_victim(&mut self, requests: &mut [Request], vi: usize, in_res_idx: bool) {
+    /// resident index. `oom` tags the trace event: pool exhaustion
+    /// (`resolve_oom`) vs an admission-time eviction decision. Under
+    /// FCFS a discard unlocks the request (its rank flips); under TRAIL
+    /// the rank is invariant and the update no-ops.
+    fn discard_victim(&mut self, requests: &mut [Request], vi: usize, in_res_idx: bool, oom: bool) {
         let r = &mut requests[vi];
         let slot = r.slot.take().unwrap();
         self.kv.free(slot, r.spec.rid);
@@ -1535,6 +1813,11 @@ impl<B: ModelBackend> ServingEngine<B> {
         if self.sched_idx.contains(rk.rid) {
             self.sched_idx.update(rk);
         }
+        self.trace(
+            self.clock.now(),
+            requests[vi].spec.rid,
+            TraceKind::Discard { oom },
+        );
     }
 
     /// Allocate a fresh slot for `idx` and register it as resident.
@@ -1553,6 +1836,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         let _ = self.backend.slot_reset(slot);
         requests[idx].prefilled = 0; // fresh slot ⇒ (re)prefill from 0
         requests[idx].kv_written = 0;
+        let mut attached = 0usize;
         if self.kv.prefix_enabled() {
             let rid = requests[idx].spec.rid;
             self.kv.set_prompt(slot, rid, &requests[idx].spec.prompt);
@@ -1563,9 +1847,24 @@ impl<B: ModelBackend> ServingEngine<B> {
                 self.kv.charge(slot, rid, attach);
                 self.kv.prefix_hits += 1;
                 self.kv.reused_tokens += attach as u64;
+                attached = attach;
             }
         }
         let rk = self.rank_of(&requests[idx]);
         self.res_idx.insert(rk);
+        if self.tracing() {
+            let credit = self.shares.credit(requests[idx].tenant);
+            self.trace(
+                self.clock.now(),
+                requests[idx].spec.rid,
+                TraceKind::SchedAlloc {
+                    key: rk.key,
+                    locked: rk.locked,
+                    starve: requests[idx].starve_level,
+                    credit,
+                    attach: attached as u64,
+                },
+            );
+        }
     }
 }

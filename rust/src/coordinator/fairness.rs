@@ -194,6 +194,13 @@ impl TenantShares {
             .map_or(true, |&c| c >= 1.0)
     }
 
+    /// Current credit of a tenant tag (0.0 for never-seen tenants).
+    /// Read-only observability tap: the flight recorder stamps it into
+    /// `sched_alloc` trace events.
+    pub fn credit(&self, tenant: u32) -> f64 {
+        self.credit.get(tenant as usize).copied().unwrap_or(0.0)
+    }
+
     /// Charge one slot to the tenant. Also called for locked and
     /// deferred-pass targets, driving credit negative (bounded): the
     /// over-served tenant repays in later steps.

@@ -76,9 +76,11 @@ impl Metrics {
             mean_latency: self.latency.mean(),
             median_latency: self.latency.median(),
             p95_latency: self.latency.percentile(95.0),
+            p99_latency: self.latency.percentile(99.0),
             mean_ttft: self.ttft.mean(),
             median_ttft: self.ttft.median(),
             p95_ttft: self.ttft.percentile(95.0),
+            p99_ttft: self.ttft.percentile(99.0),
             throughput_req_s: self.throughput_req_s(),
             throughput_tok_s: self.throughput_tok_s(),
             preemptions: self.n_preemptions,
@@ -95,9 +97,13 @@ pub struct MetricsSummary {
     pub mean_latency: f64,
     pub median_latency: f64,
     pub p95_latency: f64,
+    /// Tail percentiles for the obs report only: frozen baseline rows
+    /// (`BENCH_*.json`) never serialize them, so their bytes stay put.
+    pub p99_latency: f64,
     pub mean_ttft: f64,
     pub median_ttft: f64,
     pub p95_ttft: f64,
+    pub p99_ttft: f64,
     pub throughput_req_s: f64,
     pub throughput_tok_s: f64,
     pub preemptions: u64,

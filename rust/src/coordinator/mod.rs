@@ -24,7 +24,7 @@ pub use backend::{MockBackend, ModelBackend};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use clock::{Clock, ClockSpec};
-pub use dispatch::{DispatchPolicy, JobSink, ReplicaPool, ReplicaSnapshot};
+pub use dispatch::{DispatchPolicy, JobSink, ReplicaMetrics, ReplicaPool, ReplicaSnapshot};
 pub use engine::{
     EngineStatus, FinishedRequest, OnlineDone, OnlineJob, RequestSnapshot, Selector, ServeConfig,
     ServeReport, ServingEngine, SharedStatus, StepOutcome,

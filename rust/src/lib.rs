@@ -7,6 +7,7 @@
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;
+pub mod obs;
 pub mod predictor;
 pub mod qtheory;
 pub mod runtime;

@@ -41,9 +41,10 @@ fn main() {
         Some("fair") => cmd_fair(&args),
         Some("prefix") => cmd_prefix(&args),
         Some("pred") => cmd_pred(&args),
+        Some("obs") => cmd_obs(&args),
         _ => {
             eprintln!(
-                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair|prefix|pred> [options]\n\
+                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair|prefix|pred|obs> [options]\n\
                  \n\
                  serve    — run a serving benchmark against the AOT model\n\
                  \x20        --policy fcfs|sjf|trail|srpt|trail-c<M>  (default trail)\n\
@@ -67,6 +68,7 @@ fn main() {
                  \x20        [--fairness-levels <n>] [--fairness-weights w0,w1,..]\n\
                  \x20        [--fairness-report]\n\
                  \x20        [--out BENCH_sim.json] [--trace-out trace.jsonl]\n\
+                 \x20        [--trace-jsonl events.jsonl] [--timings-json timings.json]\n\
                  sched    — scheduler-scale selector comparison (BENCH_sched.json):\n\
                  \x20        reference full-sort vs incremental rank index over the\n\
                  \x20        scale-1k / scale-10k / scale-replicas grid\n\
@@ -84,6 +86,11 @@ fn main() {
                  \x20        fcfs/trail over the steady + drift scenarios, with\n\
                  \x20        Kendall-tau / inversion / MAE quality columns\n\
                  \x20        [--out BENCH_pred.json]\n\
+                 obs      — flight-recorder grid (BENCH_obs.json,\n\
+                 \x20        docs/observability.md): scale-1k x fcfs/trail with\n\
+                 \x20        request-lifecycle tracing + phase timing on\n\
+                 \x20        [--out BENCH_obs.json] [--trace-jsonl events.jsonl]\n\
+                 \x20        [--timings-json timings.json]\n\
                  info     — print artifact/config summary"
             );
             2
@@ -536,14 +543,49 @@ fn cmd_sim(args: &Args) -> i32 {
         println!("trace[{}] ({} entries) -> {trace_out}", sweep.scenarios[0].name, trace.len());
     }
 
-    let report = match trail::sim::run_sweep(&cfg, &sweep) {
+    // Flight-recorder taps (docs/observability.md): either flag turns
+    // the recorder on for every scenario in the sweep. Pure observation
+    // — the report rows (and the pinned baseline bytes) are identical
+    // with the recorder on or off.
+    let trace_jsonl = args.str_or("trace-jsonl", "").to_string();
+    let timings_json = args.str_or("timings-json", "").to_string();
+    if !trace_jsonl.is_empty() || !timings_json.is_empty() {
+        for sc in &mut sweep.scenarios {
+            sc.obs.trace = !trace_jsonl.is_empty();
+            sc.obs.timing = !timings_json.is_empty();
+        }
+    }
+
+    let obs_out = match trail::sim::run_sweep_obs(&cfg, &sweep) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("sim failed: {e}");
             return 1;
         }
     };
+    let report = &obs_out.report;
     print!("{}", report.render_table());
+
+    if !trace_jsonl.is_empty() {
+        let text: String = obs_out.traces.iter().map(|(_, t)| t.as_str()).collect();
+        if let Err(e) = std::fs::write(&trace_jsonl, &text) {
+            eprintln!("write {trace_jsonl} failed: {e}");
+            return 1;
+        }
+        println!("trace events ({} cells) -> {trace_jsonl}", obs_out.traces.len());
+    }
+    if !timings_json.is_empty() {
+        let doc = trail::obs::timing_report_json(
+            &obs_out.phase_counts,
+            &obs_out.cost,
+            obs_out.timing.as_ref(),
+        );
+        if let Err(e) = std::fs::write(&timings_json, format!("{}\n", doc.to_string())) {
+            eprintln!("write {timings_json} failed: {e}");
+            return 1;
+        }
+        println!("phase timings -> {timings_json}");
+    }
 
     let out = args.str_or("out", "").to_string();
     if !out.is_empty() {
@@ -735,6 +777,74 @@ fn cmd_pred(args: &Args) -> i32 {
             "report ({} rows, schema {}) -> {out}",
             report.rows.len(),
             trail::sim::PRED_SCHEMA_VERSION
+        );
+    }
+    0
+}
+
+fn cmd_obs(args: &Args) -> i32 {
+    // Embedded config, like the other bench subcommands: the checked-in
+    // BENCH_obs.json and the Python mirror pin the embedded defaults.
+    let cfg = Config::embedded_default();
+    let out = match trail::sim::run_obs_sweep(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("obs sweep failed: {e}");
+            return 1;
+        }
+    };
+    print!("{}", out.report.render_table());
+    // The phase-timing table on the console: deterministic call counts
+    // and virtual totals, joined with wall self-time when measured.
+    let mut t = Table::new(&["phase", "calls", "virtual_s", "wall_s", "self_s"]);
+    for (name, calls, vt) in out.phase_counts.phases(&out.cost) {
+        let (wall, slf) = out
+            .timing
+            .as_ref()
+            .and_then(|s| s.spans.get(name).copied())
+            .map(|(_, incl, s)| (f(incl, 4), f(s, 4)))
+            .unwrap_or_default();
+        t.row(vec![name.to_string(), calls.to_string(), f(vt, 4), wall, slf]);
+    }
+    print!("{}", t.render());
+    if let Some(ts) = &out.timing {
+        println!(
+            "timer overhead: {:.2}% of {:.4}s step wall time ({} spans)",
+            ts.overhead_frac() * 100.0,
+            ts.total_wall_s(),
+            ts.n_spans
+        );
+    }
+
+    let trace_jsonl = args.str_or("trace-jsonl", "").to_string();
+    if !trace_jsonl.is_empty() {
+        let text: String = out.traces.iter().map(|(_, t)| t.as_str()).collect();
+        if let Err(e) = std::fs::write(&trace_jsonl, &text) {
+            eprintln!("write {trace_jsonl} failed: {e}");
+            return 1;
+        }
+        println!("trace events ({} cells) -> {trace_jsonl}", out.traces.len());
+    }
+    let timings_json = args.str_or("timings-json", "").to_string();
+    if !timings_json.is_empty() {
+        let doc =
+            trail::obs::timing_report_json(&out.phase_counts, &out.cost, out.timing.as_ref());
+        if let Err(e) = std::fs::write(&timings_json, format!("{}\n", doc.to_string())) {
+            eprintln!("write {timings_json} failed: {e}");
+            return 1;
+        }
+        println!("phase timings -> {timings_json}");
+    }
+    let path = args.str_or("out", "").to_string();
+    if !path.is_empty() {
+        if let Err(e) = out.report.save(&path) {
+            eprintln!("write {path} failed: {e}");
+            return 1;
+        }
+        println!(
+            "report ({} rows, schema {}) -> {path}",
+            out.report.rows.len(),
+            trail::sim::OBS_SCHEMA_VERSION
         );
     }
     0

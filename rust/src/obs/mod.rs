@@ -1,0 +1,60 @@
+//! Flight recorder: deterministic, zero-cost-when-disabled observability.
+//!
+//! Three pillars (docs/observability.md):
+//!
+//! - [`trace`] — schema-versioned request-lifecycle + scheduler-decision
+//!   `TraceEvent` stream behind a `TraceSink` (ring buffer / JSONL),
+//!   emitted in virtual-time order so traces are run-twice
+//!   byte-identical.
+//! - [`timing`] — deterministic `PhaseCounts` (per-phase call counts and
+//!   virtual-time totals derived from the `CostModel`) plus a wall-clock
+//!   hierarchical `PhaseTimer` with self-overhead accounting
+//!   (`--timings-json`), and a folded-stacks flamegraph hook behind the
+//!   `profiling` cargo feature.
+//! - [`registry`] — counters/gauges/histograms rendered as Prometheus
+//!   exposition text for the HTTP `GET /metrics` surface.
+//!
+//! Everything here is inert unless explicitly enabled: the engine holds
+//! `Option<EngineObs>` (None by default), no RNG draw, float operation,
+//! or work counter is perturbed by observation, and the five checked-in
+//! BENCH baselines regenerate byte-identically with observability off.
+
+pub mod registry;
+pub mod timing;
+pub mod trace;
+
+pub use registry::{Histogram, MetricsRegistry};
+pub use timing::{
+    timing_report_json, PhaseCounts, PhaseTimer, TimingStats, PHASE_ORDER, TIMING_SCHEMA_VERSION,
+};
+pub use trace::{
+    fnv1a64, render_trace, sort_events, JsonlSink, RingSink, TraceEvent, TraceKind, TraceSink,
+    TRACE_SCHEMA_VERSION,
+};
+
+/// Per-engine observability switches. Default is fully inert.
+#[derive(Clone, Debug, Default)]
+pub struct ObsConfig {
+    /// Record request-lifecycle + scheduler-decision trace events.
+    pub trace: bool,
+    /// Run the wall-clock `PhaseTimer` over the engine hot loop.
+    pub timing: bool,
+    /// Replica index stamped on every event (`rep` field).
+    pub replica: u32,
+}
+
+impl ObsConfig {
+    /// Anything to observe at all? (`None` engine state otherwise.)
+    pub fn enabled(&self) -> bool {
+        self.trace || self.timing
+    }
+
+    /// Trace-only preset for replica `i`.
+    pub fn tracing(replica: u32) -> ObsConfig {
+        ObsConfig {
+            trace: true,
+            timing: false,
+            replica,
+        }
+    }
+}

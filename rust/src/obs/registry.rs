@@ -1,0 +1,227 @@
+//! Counters / gauges / histograms with Prometheus text exposition.
+//!
+//! A tiny pull-model registry: the HTTP layer rebuilds it from live
+//! state (`ServerStats`, per-replica `SharedStatus` snapshots) on every
+//! `GET /metrics`, renders exposition format 0.0.4 text, and throws it
+//! away. Names are stored fully qualified with labels baked in
+//! (`trail_queue_depth{replica="0"}`); BTreeMap keys give a stable
+//! rendering order.
+
+use std::collections::BTreeMap;
+
+/// Cumulative histogram with explicit upper bounds (Prometheus
+/// `le`-bucket convention; `+Inf` is implicit via `count`).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len()],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// Rebuild a histogram from externally-tracked cumulative state
+    /// (e.g. the HTTP layer's atomic bucket counters), for pull-model
+    /// exporters that keep live counts outside the registry. `counts`
+    /// must already be cumulative in the `le` sense.
+    pub fn from_parts(bounds: &[f64], counts: Vec<u64>, sum: f64, count: u64) -> Histogram {
+        assert_eq!(bounds.len(), counts.len(), "one count per bound");
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts,
+            sum,
+            count,
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        for (i, &b) in self.bounds.iter().enumerate() {
+            if x <= b {
+                self.counts[i] += 1;
+            }
+        }
+        self.sum += x;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Pull-model metrics registry.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, (u64, &'static str)>,
+    gauges: BTreeMap<String, (f64, &'static str)>,
+    histograms: BTreeMap<String, (Histogram, &'static str)>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Set a counter sample. `name` may carry labels
+    /// (`foo{replica="0"}`); `help` is keyed by the bare family name.
+    pub fn counter(&mut self, name: &str, value: u64, help: &'static str) {
+        self.counters.insert(name.to_string(), (value, help));
+    }
+
+    pub fn gauge(&mut self, name: &str, value: f64, help: &'static str) {
+        self.gauges.insert(name.to_string(), (value, help));
+    }
+
+    pub fn histogram(&mut self, name: &str, h: Histogram, help: &'static str) {
+        self.histograms.insert(name.to_string(), (h, help));
+    }
+
+    /// Prometheus text exposition (format 0.0.4). `# HELP`/`# TYPE`
+    /// lines are emitted once per metric family, in sorted name order.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_family = String::new();
+        let mut header = |out: &mut String, name: &str, kind: &str, help: &str, last: &mut String| {
+            let family = family_of(name);
+            if *last != family {
+                out.push_str(&format!("# HELP {family} {help}\n"));
+                out.push_str(&format!("# TYPE {family} {kind}\n"));
+                *last = family;
+            }
+        };
+        for (name, (v, help)) in &self.counters {
+            header(&mut out, name, "counter", help, &mut last_family);
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, (v, help)) in &self.gauges {
+            header(&mut out, name, "gauge", help, &mut last_family);
+            out.push_str(&format!("{name} {}\n", fmt_f64(*v)));
+        }
+        for (name, (h, help)) in &self.histograms {
+            let family = family_of(name);
+            let labels = labels_of(name);
+            out.push_str(&format!("# HELP {family} {help}\n"));
+            out.push_str(&format!("# TYPE {family} histogram\n"));
+            for (i, &b) in h.bounds.iter().enumerate() {
+                out.push_str(&format!(
+                    "{family}_bucket{{{}le=\"{}\"}} {}\n",
+                    labels_prefix(&labels),
+                    fmt_f64(b),
+                    h.counts[i]
+                ));
+            }
+            out.push_str(&format!(
+                "{family}_bucket{{{}le=\"+Inf\"}} {}\n",
+                labels_prefix(&labels),
+                h.count
+            ));
+            out.push_str(&format!(
+                "{family}_sum{} {}\n",
+                wrap_labels(&labels),
+                fmt_f64(h.sum)
+            ));
+            out.push_str(&format!("{family}_count{} {}\n", wrap_labels(&labels), h.count));
+        }
+        out
+    }
+}
+
+fn family_of(name: &str) -> String {
+    match name.find('{') {
+        Some(i) => name[..i].to_string(),
+        None => name.to_string(),
+    }
+}
+
+fn labels_of(name: &str) -> String {
+    match (name.find('{'), name.rfind('}')) {
+        (Some(i), Some(j)) if j > i => name[i + 1..j].to_string(),
+        _ => String::new(),
+    }
+}
+
+fn labels_prefix(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{labels},")
+    }
+}
+
+fn wrap_labels(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+fn fmt_f64(x: f64) -> String {
+    if x.is_finite() && x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_counters_and_gauges_sorted() {
+        let mut r = MetricsRegistry::new();
+        r.gauge("trail_queue_depth{replica=\"1\"}", 3.0, "queued jobs");
+        r.gauge("trail_queue_depth{replica=\"0\"}", 5.0, "queued jobs");
+        r.counter("trail_requests_total", 42, "requests served");
+        let text = r.render_prometheus();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "# HELP trail_requests_total requests served");
+        assert_eq!(lines[1], "# TYPE trail_requests_total counter");
+        assert_eq!(lines[2], "trail_requests_total 42");
+        assert_eq!(lines[3], "# HELP trail_queue_depth queued jobs");
+        assert_eq!(lines[4], "# TYPE trail_queue_depth gauge");
+        // Samples of one family share a single HELP/TYPE header.
+        assert_eq!(lines[5], "trail_queue_depth{replica=\"0\"} 5");
+        assert_eq!(lines[6], "trail_queue_depth{replica=\"1\"} 3");
+        assert_eq!(lines.len(), 7);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let mut h = Histogram::new(&[0.1, 1.0, 10.0]);
+        for x in [0.05, 0.5, 0.5, 5.0, 50.0] {
+            h.observe(x);
+        }
+        let mut r = MetricsRegistry::new();
+        r.histogram("trail_latency_seconds", h, "request latency");
+        let text = r.render_prometheus();
+        assert!(text.contains("trail_latency_seconds_bucket{le=\"0.1\"} 1\n"));
+        assert!(text.contains("trail_latency_seconds_bucket{le=\"1\"} 3\n"));
+        assert!(text.contains("trail_latency_seconds_bucket{le=\"10\"} 4\n"));
+        assert!(text.contains("trail_latency_seconds_bucket{le=\"+Inf\"} 5\n"));
+        assert!(text.contains("trail_latency_seconds_count 5\n"));
+        assert!(text.contains("trail_latency_seconds_sum 56.0"));
+    }
+
+    #[test]
+    fn labelled_histogram_keeps_labels_on_every_series() {
+        let mut h = Histogram::new(&[1.0]);
+        h.observe(0.5);
+        let mut r = MetricsRegistry::new();
+        r.histogram("trail_ttft_seconds{replica=\"2\"}", h, "ttft");
+        let text = r.render_prometheus();
+        assert!(text.contains("trail_ttft_seconds_bucket{replica=\"2\",le=\"1\"} 1\n"));
+        assert!(text.contains("trail_ttft_seconds_sum{replica=\"2\"} 0.5\n"));
+        assert!(text.contains("trail_ttft_seconds_count{replica=\"2\"} 1\n"));
+    }
+}

@@ -1,0 +1,383 @@
+//! Phase-timing: deterministic call counts + virtual totals, and a
+//! wall-clock hierarchical timer with self-overhead accounting.
+//!
+//! Two layers on purpose. `PhaseCounts` is pure bookkeeping — how many
+//! times each hot-loop phase ran — and its virtual-time totals are
+//! *derived* (count × `CostModel` term), so they are byte-deterministic
+//! and safe to pin in BENCH_obs.json. `PhaseTimer` measures wall time
+//! (`Instant`), which is never byte-stable: it goes only to
+//! `--timings-json`, with a calibrated per-span overhead estimate so the
+//! <5% self-overhead acceptance bound is checkable from the report
+//! itself. The `profiling` cargo feature adds a folded-stacks dump
+//! (flamegraph.pl / inferno input — the axiograph idiom).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::coordinator::backend::CostModel;
+use crate::util::json::Json;
+
+/// Schema tag for `--timings-json` output.
+pub const TIMING_SCHEMA_VERSION: &str = "trail.timing/v1";
+
+/// Canonical phase order for reports (tables, JSON rows).
+pub const PHASE_ORDER: [&str; 9] = [
+    "select_targets",
+    "ensure_resident",
+    "resolve_oom",
+    "rank_index",
+    "dispatch",
+    "prefill",
+    "decode",
+    "readout",
+    "step",
+];
+
+/// Deterministic per-phase call counters for one engine (or a merged
+/// fleet). Virtual totals come from [`PhaseCounts::phases`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseCounts {
+    /// Target-selection passes (one per engine iteration).
+    pub select_targets: u64,
+    /// Residency-admission passes.
+    pub ensure_resident: u64,
+    /// OOM-resolution passes.
+    pub resolve_oom: u64,
+    /// Prefill chunks issued to the backend.
+    pub prefill_chunks: u64,
+    /// Decode iterations issued.
+    pub decode_steps: u64,
+    /// Sum over decode iterations of active slots (the per-slot cost
+    /// multiplier).
+    pub decode_slot_steps: u64,
+    /// Backend readouts.
+    pub readouts: u64,
+    /// Rank-index maintenance operations (reindex calls).
+    pub rank_index_ops: u64,
+    /// Dispatch decisions routed (driver/pool side).
+    pub dispatch: u64,
+    /// Engine `step()` iterations.
+    pub steps: u64,
+}
+
+impl PhaseCounts {
+    pub fn merge(&mut self, o: &PhaseCounts) {
+        self.select_targets += o.select_targets;
+        self.ensure_resident += o.ensure_resident;
+        self.resolve_oom += o.resolve_oom;
+        self.prefill_chunks += o.prefill_chunks;
+        self.decode_steps += o.decode_steps;
+        self.decode_slot_steps += o.decode_slot_steps;
+        self.readouts += o.readouts;
+        self.rank_index_ops += o.rank_index_ops;
+        self.dispatch += o.dispatch;
+        self.steps += o.steps;
+    }
+
+    /// `(phase, calls, virtual_s)` rows in [`PHASE_ORDER`]. Scheduling
+    /// phases are bookkeeping (no backend call), so their virtual total
+    /// is 0 by construction; backend phases derive theirs from the cost
+    /// model exactly the way the virtual clock charged them.
+    pub fn phases(&self, cost: &CostModel) -> Vec<(&'static str, u64, f64)> {
+        vec![
+            ("select_targets", self.select_targets, 0.0),
+            ("ensure_resident", self.ensure_resident, 0.0),
+            ("resolve_oom", self.resolve_oom, 0.0),
+            ("rank_index", self.rank_index_ops, 0.0),
+            ("dispatch", self.dispatch, 0.0),
+            (
+                "prefill",
+                self.prefill_chunks,
+                self.prefill_chunks as f64 * cost.prefill_chunk,
+            ),
+            (
+                "decode",
+                self.decode_steps,
+                self.decode_steps as f64 * cost.decode_step
+                    + self.decode_slot_steps as f64 * cost.decode_per_slot,
+            ),
+            ("readout", self.readouts, self.readouts as f64 * cost.readout),
+            ("step", self.steps, 0.0),
+        ]
+    }
+
+    /// Deterministic JSON rows (`[{calls, name, virtual_s}, …]`) for
+    /// BENCH_obs — wall time deliberately excluded.
+    pub fn phase_rows_json(&self, cost: &CostModel) -> Json {
+        Json::Arr(
+            self.phases(cost)
+                .into_iter()
+                .map(|(name, calls, vt)| {
+                    Json::obj(vec![
+                        ("name", Json::str(name)),
+                        ("calls", Json::Num(calls as f64)),
+                        ("virtual_s", Json::Num(vt)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Aggregated wall-clock measurements from one or more `PhaseTimer`s.
+#[derive(Clone, Debug, Default)]
+pub struct TimingStats {
+    /// phase -> (calls, inclusive seconds, self seconds).
+    pub spans: BTreeMap<&'static str, (u64, f64, f64)>,
+    /// Total spans measured (for overhead estimation).
+    pub n_spans: u64,
+    /// Calibrated cost of one enter/exit pair, seconds.
+    pub overhead_per_span: f64,
+}
+
+impl TimingStats {
+    pub fn merge(&mut self, o: &TimingStats) {
+        for (&name, &(c, incl, slf)) in &o.spans {
+            let e = self.spans.entry(name).or_insert((0, 0.0, 0.0));
+            e.0 += c;
+            e.1 += incl;
+            e.2 += slf;
+        }
+        self.n_spans += o.n_spans;
+        self.overhead_per_span = self.overhead_per_span.max(o.overhead_per_span);
+    }
+
+    /// Estimated timer self-overhead, seconds.
+    pub fn overhead_s(&self) -> f64 {
+        self.n_spans as f64 * self.overhead_per_span
+    }
+
+    /// Wall total: inclusive time of the root `step` span (falls back
+    /// to the sum of self times if no step span was recorded).
+    pub fn total_wall_s(&self) -> f64 {
+        match self.spans.get("step") {
+            Some((_, incl, _)) => *incl,
+            None => self.spans.values().map(|(_, _, slf)| slf).sum(),
+        }
+    }
+
+    /// Overhead as a fraction of total step wall time (the <5%
+    /// acceptance bound).
+    pub fn overhead_frac(&self) -> f64 {
+        let total = self.total_wall_s();
+        if total > 0.0 {
+            self.overhead_s() / total
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Hierarchical wall-clock phase timer. `enter`/`exit` pairs nest; a
+/// child's inclusive time is subtracted from the parent's self time.
+/// Constructing one calibrates the per-span overhead on the spot.
+pub struct PhaseTimer {
+    stack: Vec<(&'static str, Instant, f64)>, // (phase, start, child seconds)
+    stats: TimingStats,
+    #[cfg(feature = "profiling")]
+    folded: BTreeMap<String, f64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> PhaseTimer {
+        // Calibrate: time N no-op spans. Instant::now is ~20ns on
+        // mainstream hardware, so this costs microseconds at startup.
+        const N: u32 = 4096;
+        let t0 = Instant::now();
+        for _ in 0..N {
+            let s = Instant::now();
+            std::hint::black_box(s.elapsed());
+        }
+        let per_span = t0.elapsed().as_secs_f64() / N as f64;
+        PhaseTimer {
+            stack: Vec::with_capacity(8),
+            stats: TimingStats {
+                spans: BTreeMap::new(),
+                n_spans: 0,
+                overhead_per_span: per_span,
+            },
+            #[cfg(feature = "profiling")]
+            folded: BTreeMap::new(),
+        }
+    }
+
+    pub fn enter(&mut self, phase: &'static str) {
+        self.stack.push((phase, Instant::now(), 0.0));
+    }
+
+    pub fn exit(&mut self) {
+        let Some((phase, start, child_s)) = self.stack.pop() else {
+            return;
+        };
+        let incl = start.elapsed().as_secs_f64();
+        let slf = (incl - child_s).max(0.0);
+        let e = self.stats.spans.entry(phase).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += incl;
+        e.2 += slf;
+        self.stats.n_spans += 1;
+        if let Some(parent) = self.stack.last_mut() {
+            parent.2 += incl;
+        }
+        #[cfg(feature = "profiling")]
+        {
+            let mut key = String::new();
+            for (name, _, _) in &self.stack {
+                key.push_str(name);
+                key.push(';');
+            }
+            key.push_str(phase);
+            *self.folded.entry(key).or_insert(0.0) += slf;
+        }
+    }
+
+    /// Snapshot the accumulated stats (timer keeps running).
+    pub fn stats(&self) -> TimingStats {
+        self.stats.clone()
+    }
+
+    /// Folded-stacks text (`a;b 123` in integer microseconds of self
+    /// time per stack) for flamegraph.pl / inferno — `Some` only when
+    /// built with the `profiling` feature.
+    pub fn folded_text(&self) -> Option<String> {
+        #[cfg(feature = "profiling")]
+        {
+            let mut out = String::new();
+            for (stack, secs) in &self.folded {
+                out.push_str(stack);
+                out.push(' ');
+                out.push_str(&format!("{}", (secs * 1e6) as u64));
+                out.push('\n');
+            }
+            return Some(out);
+        }
+        #[cfg(not(feature = "profiling"))]
+        None
+    }
+}
+
+impl Default for PhaseTimer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `--timings-json` document: deterministic phase rows (calls + virtual
+/// totals) joined with wall measurements when a timer ran.
+pub fn timing_report_json(
+    counts: &PhaseCounts,
+    cost: &CostModel,
+    stats: Option<&TimingStats>,
+) -> Json {
+    let phases = Json::Arr(
+        counts
+            .phases(cost)
+            .into_iter()
+            .map(|(name, calls, vt)| {
+                let (wall_calls, wall_s, self_s) = stats
+                    .and_then(|s| s.spans.get(name).copied())
+                    .unwrap_or((0, 0.0, 0.0));
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("calls", Json::Num(calls as f64)),
+                    ("virtual_s", Json::Num(vt)),
+                    ("wall_calls", Json::Num(wall_calls as f64)),
+                    ("wall_s", Json::Num(wall_s)),
+                    ("self_s", Json::Num(self_s)),
+                ])
+            })
+            .collect(),
+    );
+    let mut pairs = vec![
+        ("schema", Json::str(TIMING_SCHEMA_VERSION)),
+        ("phases", phases),
+    ];
+    if let Some(s) = stats {
+        pairs.push(("total_wall_s", Json::Num(s.total_wall_s())));
+        pairs.push(("overhead_s", Json::Num(s.overhead_s())));
+        pairs.push(("overhead_frac", Json::Num(s.overhead_frac())));
+        pairs.push(("n_spans", Json::Num(s.n_spans as f64)));
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_totals_follow_the_cost_model() {
+        let counts = PhaseCounts {
+            prefill_chunks: 10,
+            decode_steps: 4,
+            decode_slot_steps: 12,
+            readouts: 4,
+            ..PhaseCounts::default()
+        };
+        let cost = CostModel {
+            decode_step: 1.0e-3,
+            decode_per_slot: 0.5e-3,
+            prefill_chunk: 2.0e-3,
+            readout: 0.25e-3,
+        };
+        let rows = counts.phases(&cost);
+        let get = |n: &str| rows.iter().find(|(p, _, _)| *p == n).copied().unwrap();
+        assert!((get("prefill").2 - 0.02).abs() < 1e-12);
+        assert!((get("decode").2 - (4.0e-3 + 6.0e-3)).abs() < 1e-12);
+        assert!((get("readout").2 - 1.0e-3).abs() < 1e-12);
+        assert_eq!(get("select_targets").2, 0.0);
+    }
+
+    #[test]
+    fn merge_sums_counts() {
+        let mut a = PhaseCounts {
+            select_targets: 3,
+            dispatch: 1,
+            ..PhaseCounts::default()
+        };
+        let b = PhaseCounts {
+            select_targets: 2,
+            rank_index_ops: 7,
+            ..PhaseCounts::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.select_targets, 5);
+        assert_eq!(a.rank_index_ops, 7);
+        assert_eq!(a.dispatch, 1);
+    }
+
+    #[test]
+    fn timer_nests_and_attributes_self_time() {
+        let mut t = PhaseTimer::new();
+        t.enter("step");
+        t.enter("select_targets");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.exit();
+        t.exit();
+        let s = t.stats();
+        let (calls, step_incl, step_self) = s.spans["step"];
+        assert_eq!(calls, 1);
+        let (_, sel_incl, _) = s.spans["select_targets"];
+        assert!(step_incl >= sel_incl);
+        // Parent self time excludes the child's inclusive time.
+        assert!(step_self <= step_incl - sel_incl + 1e-3);
+        assert_eq!(s.n_spans, 2);
+        assert!(s.overhead_per_span > 0.0);
+        assert!(s.overhead_frac() < 1.0);
+    }
+
+    #[test]
+    fn unbalanced_exit_is_a_noop() {
+        let mut t = PhaseTimer::new();
+        t.exit();
+        assert_eq!(t.stats().n_spans, 0);
+    }
+
+    #[test]
+    fn timing_report_has_all_phases() {
+        let counts = PhaseCounts::default();
+        let j = timing_report_json(&counts, &CostModel::default(), None);
+        assert_eq!(j.at(&["schema"]).as_str(), TIMING_SCHEMA_VERSION);
+        assert_eq!(j.at(&["phases"]).as_arr().len(), PHASE_ORDER.len());
+    }
+}

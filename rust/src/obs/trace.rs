@@ -1,0 +1,378 @@
+//! Request-lifecycle + scheduler-decision trace events.
+//!
+//! Every event is stamped `(t, rep, seq)`: virtual time, replica index,
+//! and a per-replica emission sequence number. Sorting the merged
+//! multi-replica stream by that triple is a total order (virtual times
+//! are finite, ties break by replica then emission order), which is what
+//! makes `--trace-jsonl` run-twice byte-identical. Events render as one
+//! compact JSON object per line with lexicographically sorted keys —
+//! byte-compatible with the `python/simref.py` mirror. Booleans are
+//! rendered as 0/1 numbers so both writers agree on bytes.
+
+use std::collections::VecDeque;
+use std::io::Write;
+
+use crate::util::json::Json;
+
+/// Schema tag written as the first line of every JSONL trace.
+pub const TRACE_SCHEMA_VERSION: &str = "trail.trace/v1";
+
+/// One observation. `rid` is the engine request id the event is about
+/// (for `SchedEvict` it is the *candidate* being made resident; the
+/// victim is in the payload).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual time of the event (engine clock).
+    pub t: f64,
+    /// Replica index (`ObsConfig::replica`).
+    pub rep: u32,
+    /// Per-replica emission sequence — the intra-timestamp tiebreak.
+    pub seq: u64,
+    pub rid: u64,
+    pub kind: TraceKind,
+}
+
+/// Event payloads. Lifecycle events mirror the request state machine;
+/// `SchedAlloc`/`SchedEvict` record *why* the scheduler picked what it
+/// picked (rank keys, aging level, tenant credit, prefix-attach length).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceKind {
+    /// Request admitted: tenant, prompt length, initial prediction.
+    Admit {
+        tenant: u32,
+        prompt: u64,
+        predicted: f64,
+    },
+    /// Prompt fully prefilled.
+    PrefillDone,
+    /// First output token produced.
+    FirstToken,
+    /// Running -> Preempted (slot taken away, KV kept).
+    Preempt,
+    /// KV evicted (work lost); `oom` = forced by pool exhaustion rather
+    /// than an admission-time eviction decision.
+    Discard { oom: bool },
+    /// Handed to another replica by the migration policy.
+    MigrateOut,
+    /// Received from another replica.
+    MigrateIn,
+    /// Request completed.
+    Finish { latency: f64, ttft: f64, toks: u64 },
+    /// Scheduler decision: the request won a batch slot. `key` is its
+    /// rank key at selection, `locked` the limited-preemption lock bit,
+    /// `starve` the quantized aging level, `credit` the tenant's deficit
+    /// credit, `attach` the prefix-cache tokens attached at admission.
+    SchedAlloc {
+        key: f64,
+        locked: bool,
+        starve: u32,
+        credit: f64,
+        attach: u64,
+    },
+    /// Scheduler decision: residency for `rid` (rank `key`) was paid for
+    /// by evicting `vrid` (rank `vkey`) — the losing side of the
+    /// comparison, straight from `ensure_resident`.
+    SchedEvict { key: f64, vrid: u64, vkey: f64 },
+}
+
+impl TraceKind {
+    /// Stable event-kind label (the JSONL `kind` field).
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceKind::Admit { .. } => "admit",
+            TraceKind::PrefillDone => "prefill_done",
+            TraceKind::FirstToken => "first_token",
+            TraceKind::Preempt => "preempt",
+            TraceKind::Discard { .. } => "discard",
+            TraceKind::MigrateOut => "migrate_out",
+            TraceKind::MigrateIn => "migrate_in",
+            TraceKind::Finish { .. } => "finish",
+            TraceKind::SchedAlloc { .. } => "sched_alloc",
+            TraceKind::SchedEvict { .. } => "sched_evict",
+        }
+    }
+}
+
+impl TraceEvent {
+    /// Event as a JSON object (BTreeMap => sorted keys; the mirror sorts
+    /// its dict keys the same way).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("t", Json::Num(self.t)),
+            ("rep", Json::Num(self.rep as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("rid", Json::Num(self.rid as f64)),
+            ("kind", Json::str(self.kind.label())),
+        ];
+        match &self.kind {
+            TraceKind::Admit {
+                tenant,
+                prompt,
+                predicted,
+            } => {
+                pairs.push(("tenant", Json::Num(*tenant as f64)));
+                pairs.push(("prompt", Json::Num(*prompt as f64)));
+                pairs.push(("predicted", Json::Num(*predicted)));
+            }
+            TraceKind::Discard { oom } => {
+                pairs.push(("oom", Json::Num(if *oom { 1.0 } else { 0.0 })));
+            }
+            TraceKind::Finish { latency, ttft, toks } => {
+                pairs.push(("latency", Json::Num(*latency)));
+                pairs.push(("ttft", Json::Num(*ttft)));
+                pairs.push(("toks", Json::Num(*toks as f64)));
+            }
+            TraceKind::SchedAlloc {
+                key,
+                locked,
+                starve,
+                credit,
+                attach,
+            } => {
+                pairs.push(("key", Json::Num(*key)));
+                pairs.push(("locked", Json::Num(if *locked { 1.0 } else { 0.0 })));
+                pairs.push(("starve", Json::Num(*starve as f64)));
+                pairs.push(("credit", Json::Num(*credit)));
+                pairs.push(("attach", Json::Num(*attach as f64)));
+            }
+            TraceKind::SchedEvict { key, vrid, vkey } => {
+                pairs.push(("key", Json::Num(*key)));
+                pairs.push(("vrid", Json::Num(*vrid as f64)));
+                pairs.push(("vkey", Json::Num(*vkey)));
+            }
+            TraceKind::PrefillDone
+            | TraceKind::FirstToken
+            | TraceKind::Preempt
+            | TraceKind::MigrateOut
+            | TraceKind::MigrateIn => {}
+        }
+        Json::obj(pairs)
+    }
+
+    /// One compact JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// Sort a merged multi-replica stream into the canonical total order.
+pub fn sort_events(events: &mut [TraceEvent]) {
+    events.sort_by(|a, b| {
+        a.t.total_cmp(&b.t)
+            .then(a.rep.cmp(&b.rep))
+            .then(a.seq.cmp(&b.seq))
+    });
+}
+
+/// Render a full trace: schema header line, then one event per line.
+/// `cell` (when given) tags the header with the scenario/policy cell the
+/// trace came from, so concatenated multi-cell traces stay parseable.
+pub fn render_trace(events: &[TraceEvent], cell: Option<&str>) -> String {
+    let mut out = String::new();
+    let header = match cell {
+        Some(c) => Json::obj(vec![
+            ("schema", Json::str(TRACE_SCHEMA_VERSION)),
+            ("cell", Json::str(c)),
+        ]),
+        None => Json::obj(vec![("schema", Json::str(TRACE_SCHEMA_VERSION))]),
+    };
+    out.push_str(&header.to_string());
+    out.push('\n');
+    for ev in events {
+        out.push_str(&ev.to_line());
+        out.push('\n');
+    }
+    out
+}
+
+/// FNV-1a 64-bit over arbitrary bytes — the trace fingerprint pinned in
+/// BENCH_obs.json (same constants as `AffinityTracker::block_key`).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Where finished events go. Engines buffer internally; sinks are the
+/// delivery side — a bounded ring for live introspection, JSONL for
+/// files/pipes.
+pub trait TraceSink {
+    fn emit(&mut self, ev: &TraceEvent);
+}
+
+/// Keep the last `cap` events (drop-oldest). The live / in-memory sink.
+pub struct RingSink {
+    cap: usize,
+    buf: VecDeque<TraceEvent>,
+    /// Total events ever emitted (incl. dropped).
+    pub n_emitted: u64,
+}
+
+impl RingSink {
+    pub fn new(cap: usize) -> RingSink {
+        RingSink {
+            cap: cap.max(1),
+            buf: VecDeque::new(),
+            n_emitted: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Drain the buffered events oldest-first.
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        self.buf.drain(..).collect()
+    }
+}
+
+impl TraceSink for RingSink {
+    fn emit(&mut self, ev: &TraceEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(ev.clone());
+        self.n_emitted += 1;
+    }
+}
+
+/// Write each event as one JSON line to any `io::Write` (file, pipe).
+/// Writes the schema header on construction.
+pub struct JsonlSink<W: Write> {
+    out: W,
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(mut out: W) -> std::io::Result<JsonlSink<W>> {
+        let header = Json::obj(vec![("schema", Json::str(TRACE_SCHEMA_VERSION))]);
+        writeln!(out, "{}", header.to_string())?;
+        Ok(JsonlSink { out })
+    }
+
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+impl<W: Write> TraceSink for JsonlSink<W> {
+    fn emit(&mut self, ev: &TraceEvent) {
+        // Sink errors are non-fatal for the engine; the caller flushes
+        // and surfaces IO failures at close time.
+        let _ = writeln!(self.out, "{}", ev.to_line());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, rep: u32, seq: u64, kind: TraceKind) -> TraceEvent {
+        TraceEvent {
+            t,
+            rep,
+            seq,
+            rid: 7,
+            kind,
+        }
+    }
+
+    #[test]
+    fn event_lines_have_sorted_keys_and_numeric_bools() {
+        let e = ev(
+            0.5,
+            1,
+            3,
+            TraceKind::SchedAlloc {
+                key: 42.0,
+                locked: true,
+                starve: 2,
+                credit: -0.25,
+                attach: 64,
+            },
+        );
+        let line = e.to_line();
+        assert_eq!(
+            line,
+            r#"{"attach":64,"credit":-0.25,"key":42,"kind":"sched_alloc","locked":1,"rep":1,"rid":7,"seq":3,"starve":2,"t":0.5}"#
+        );
+    }
+
+    #[test]
+    fn sort_is_total_by_time_replica_seq() {
+        let mut evs = vec![
+            ev(1.0, 1, 0, TraceKind::Preempt),
+            ev(1.0, 0, 5, TraceKind::Preempt),
+            ev(0.5, 2, 9, TraceKind::Preempt),
+            ev(1.0, 0, 2, TraceKind::Preempt),
+        ];
+        sort_events(&mut evs);
+        let order: Vec<(f64, u32, u64)> = evs.iter().map(|e| (e.t, e.rep, e.seq)).collect();
+        assert_eq!(order, vec![(0.5, 2, 9), (1.0, 0, 2), (1.0, 0, 5), (1.0, 1, 0)]);
+    }
+
+    #[test]
+    fn render_is_stable_and_hashable() {
+        let evs = vec![
+            ev(0.0, 0, 0, TraceKind::Admit {
+                tenant: 0,
+                prompt: 12,
+                predicted: 34.5,
+            }),
+            ev(0.1, 0, 1, TraceKind::Finish {
+                latency: 0.1,
+                ttft: 0.05,
+                toks: 8,
+            }),
+        ];
+        let a = render_trace(&evs, Some("scale-1k/fcfs"));
+        let b = render_trace(&evs, Some("scale-1k/fcfs"));
+        assert_eq!(a, b);
+        assert!(a.starts_with(r#"{"cell":"scale-1k/fcfs","schema":"trail.trace/v1"}"#));
+        assert_eq!(fnv1a64(a.as_bytes()), fnv1a64(b.as_bytes()));
+        assert_ne!(fnv1a64(a.as_bytes()), fnv1a64(b[1..].as_bytes()));
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn ring_sink_drops_oldest() {
+        let mut ring = RingSink::new(2);
+        for i in 0..5u64 {
+            ring.emit(&ev(i as f64, 0, i, TraceKind::Preempt));
+        }
+        assert_eq!(ring.n_emitted, 5);
+        let kept = ring.drain();
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[0].seq, 3);
+        assert_eq!(kept[1].seq, 4);
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn jsonl_sink_writes_header_and_lines() {
+        let mut sink = JsonlSink::new(Vec::new()).unwrap();
+        sink.emit(&ev(0.25, 0, 0, TraceKind::FirstToken));
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], r#"{"schema":"trail.trace/v1"}"#);
+        assert_eq!(
+            lines[1],
+            r#"{"kind":"first_token","rep":0,"rid":7,"seq":0,"t":0.25}"#
+        );
+    }
+}

@@ -7,8 +7,12 @@
 //!   -> {"rid": 7, "n_tokens": 64, "latency_s": 0.12, "ttft_s": 0.03}
 //!   -> 400 {"error": …} on malformed JSON / missing fields
 //! GET  /stats     -> {"completed": …, "mean_latency_s": …, …}
-//! GET  /healthz   -> {"ok": true}
+//! GET  /healthz   -> {"ok": true, "uptime_s": …, "replicas": [{"replica": 0, "queued": …, "live": …}, …]}
+//! GET  /metrics   -> Prometheus text exposition (docs/observability.md)
 //! ```
+//!
+//! A wrong method on a known route answers `405 Method Not Allowed`
+//! (only unknown paths get 404).
 //!
 //! Requests are forwarded into a [`JobSink`]: either a single engine's
 //! channel (`ServingEngine::run_online` on one thread — iteration-level
@@ -22,23 +26,67 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::dispatch::JobSink;
+use crate::coordinator::dispatch::{JobSink, ReplicaMetrics};
 use crate::coordinator::engine::{OnlineDone, OnlineJob};
+use crate::obs::{Histogram, MetricsRegistry};
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 use crate::workload::RequestSpec;
+
+/// `le` bucket bounds (seconds) for the latency/TTFT histograms
+/// surfaced at `GET /metrics`.
+pub const LATENCY_BUCKETS: [f64; 8] = [0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 30.0];
 
 #[derive(Debug, Default)]
 pub struct ServerStats {
     pub completed: AtomicU64,
     pub total_latency_us: AtomicU64,
     pub total_ttft_us: AtomicU64,
+    /// Cumulative `le`-bucket counts over [`LATENCY_BUCKETS`].
+    latency_buckets: [AtomicU64; LATENCY_BUCKETS.len()],
+    ttft_buckets: [AtomicU64; LATENCY_BUCKETS.len()],
 }
 
 impl ServerStats {
+    /// Record one completed request: counters plus histogram buckets.
+    pub fn record(&self, latency_s: f64, ttft_s: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.total_latency_us.fetch_add((latency_s * 1e6) as u64, Ordering::Relaxed);
+        self.total_ttft_us.fetch_add((ttft_s * 1e6) as u64, Ordering::Relaxed);
+        for (i, &b) in LATENCY_BUCKETS.iter().enumerate() {
+            if latency_s <= b {
+                self.latency_buckets[i].fetch_add(1, Ordering::Relaxed);
+            }
+            if ttft_s <= b {
+                self.ttft_buckets[i].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn snapshot_histogram(&self, buckets: &[AtomicU64], sum_us: u64) -> Histogram {
+        Histogram::from_parts(
+            &LATENCY_BUCKETS,
+            buckets.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            sum_us as f64 / 1e6,
+            self.completed.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn latency_histogram(&self) -> Histogram {
+        self.snapshot_histogram(
+            &self.latency_buckets,
+            self.total_latency_us.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn ttft_histogram(&self) -> Histogram {
+        self.snapshot_histogram(&self.ttft_buckets, self.total_ttft_us.load(Ordering::Relaxed))
+    }
+
     pub fn to_json(&self) -> Json {
         let n = self.completed.load(Ordering::Relaxed);
         let lat = self.total_latency_us.load(Ordering::Relaxed) as f64 / 1e6;
@@ -58,6 +106,8 @@ pub struct HttpServer {
     stats: Arc<ServerStats>,
     next_rid: AtomicU64,
     stop: Arc<AtomicBool>,
+    /// Bind time, for `/healthz` `uptime_s`.
+    started: Instant,
 }
 
 impl HttpServer {
@@ -84,6 +134,7 @@ impl HttpServer {
             stats: Arc::new(ServerStats::default()),
             next_rid: AtomicU64::new(1),
             stop: Arc::new(AtomicBool::new(false)),
+            started: Instant::now(),
         })
     }
 
@@ -110,23 +161,109 @@ impl HttpServer {
             let sink = Arc::clone(&self.sink);
             let stats = Arc::clone(&self.stats);
             let rid = self.next_rid.fetch_add(1, Ordering::Relaxed);
+            let started = self.started;
             self.pool.execute(move || {
-                let _ = handle_connection(stream, sink, stats, rid);
+                let _ = handle_connection(stream, sink, stats, rid, started);
             });
         }
     }
 }
+
+/// Per-replica health summary for `/healthz`: queue depth plus live set
+/// size, one object per replica (empty for single-engine sinks, which
+/// have no pool-side view).
+fn healthz_json(sink: &dyn JobSink, uptime_s: f64) -> Json {
+    let replicas = sink
+        .replica_metrics()
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            Json::obj(vec![
+                ("replica", Json::num(i as f64)),
+                ("queued", Json::num(m.queued as f64)),
+                ("live", Json::num(m.live as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("replicas", Json::Arr(replicas)),
+        ("uptime_s", Json::num(uptime_s)),
+    ])
+}
+
+/// Build the `GET /metrics` exposition from live server state: request
+/// counters + latency/TTFT histograms from [`ServerStats`], and one
+/// gauge/counter set per replica from the sink's [`ReplicaMetrics`].
+fn render_metrics(stats: &ServerStats, reps: &[ReplicaMetrics], uptime_s: f64) -> String {
+    let mut r = MetricsRegistry::new();
+    r.counter(
+        "trail_requests_completed_total",
+        stats.completed.load(Ordering::Relaxed),
+        "requests completed by the serving engine(s)",
+    );
+    r.gauge("trail_uptime_seconds", uptime_s, "seconds since the server bound its socket");
+    r.histogram(
+        "trail_request_latency_seconds",
+        stats.latency_histogram(),
+        "end-to-end request latency",
+    );
+    r.histogram(
+        "trail_request_ttft_seconds",
+        stats.ttft_histogram(),
+        "time to first token",
+    );
+    for (i, m) in reps.iter().enumerate() {
+        let l = |name: &str| format!("{name}{{replica=\"{i}\"}}");
+        r.gauge(&l("trail_queue_depth"), m.queued as f64, "jobs dispatched and not yet finished");
+        r.gauge(&l("trail_live_requests"), m.live as f64, "requests admitted and not yet finished");
+        r.gauge(&l("trail_resident_requests"), m.resident as f64, "requests holding KV residency");
+        r.gauge(&l("trail_kv_used_tokens"), m.kv_used_tokens as f64, "KV cache tokens in use");
+        r.gauge(&l("trail_kv_pool_tokens"), m.kv_pool_tokens as f64, "KV cache pool capacity in tokens");
+        r.gauge(
+            &l("trail_pred_remaining_tokens"),
+            m.pred_remaining,
+            "predicted remaining output tokens over the live set",
+        );
+        r.gauge(
+            &l("trail_max_wait_age_seconds"),
+            m.max_wait_age,
+            "worst queueing age observed so far",
+        );
+        r.counter(&l("trail_dispatched_total"), m.dispatched, "jobs dispatched to the replica");
+        r.counter(&l("trail_finished_total"), m.finished, "jobs finished by the replica");
+        r.counter(&l("trail_preemptions_total"), m.n_preemptions, "scheduler preemptions");
+        r.counter(&l("trail_discards_total"), m.n_discards, "OOM discard-and-requeue events");
+        r.counter(
+            &l("trail_prefix_reused_tokens_total"),
+            m.reused_tokens,
+            "prompt tokens served from the shared prefix cache",
+        );
+    }
+    r.render_prometheus()
+}
+
+/// Routes the server knows about (method-independent), for the
+/// 404-vs-405 distinction.
+const KNOWN_ROUTES: [&str; 4] = ["/generate", "/healthz", "/metrics", "/stats"];
 
 fn handle_connection(
     mut stream: TcpStream,
     sink: Arc<dyn JobSink>,
     stats: Arc<ServerStats>,
     rid: u64,
+    started: Instant,
 ) -> Result<()> {
     let (method, path, body) = read_request(&mut stream)?;
     match (method.as_str(), path.as_str()) {
         ("GET", "/healthz") => {
-            respond(&mut stream, 200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            let uptime = started.elapsed().as_secs_f64();
+            respond(&mut stream, 200, &healthz_json(sink.as_ref(), uptime))
+        }
+        ("GET", "/metrics") => {
+            let uptime = started.elapsed().as_secs_f64();
+            let text = render_metrics(&stats, &sink.replica_metrics(), uptime);
+            respond_raw(&mut stream, 200, "text/plain; version=0.0.4", &text)
         }
         ("GET", "/stats") => respond(&mut stream, 200, &stats.to_json()),
         ("POST", "/generate") => {
@@ -160,13 +297,7 @@ fn handle_connection(
                     )
                 }
             };
-            stats.completed.fetch_add(1, Ordering::Relaxed);
-            stats
-                .total_latency_us
-                .fetch_add((done.latency * 1e6) as u64, Ordering::Relaxed);
-            stats
-                .total_ttft_us
-                .fetch_add((done.ttft * 1e6) as u64, Ordering::Relaxed);
+            stats.record(done.latency, done.ttft);
             respond(
                 &mut stream,
                 200,
@@ -178,6 +309,13 @@ fn handle_connection(
                 ]),
             )
         }
+        // A known route with the wrong verb is a method error, not a
+        // missing resource.
+        (_, p) if KNOWN_ROUTES.contains(&p) => respond(
+            &mut stream,
+            405,
+            &Json::obj(vec![("error", Json::str("method not allowed"))]),
+        ),
         _ => respond(
             &mut stream,
             404,
@@ -290,17 +428,21 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
 }
 
 fn respond(stream: &mut TcpStream, code: u16, body: &Json) -> Result<()> {
-    let body = body.to_string();
+    respond_raw(stream, code, "application/json", &body.to_string())
+}
+
+fn respond_raw(stream: &mut TcpStream, code: u16, content_type: &str, body: &str) -> Result<()> {
     let status = match code {
         200 => "200 OK",
         400 => "400 Bad Request",
         404 => "404 Not Found",
+        405 => "405 Method Not Allowed",
         413 => "413 Payload Too Large",
         503 => "503 Service Unavailable",
         _ => "500 Internal Server Error",
     };
     let msg = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
     stream.write_all(msg.as_bytes())?;
@@ -351,6 +493,15 @@ pub fn get_stats(addr: &str) -> Result<Json> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn raw_get(addr: &str, path: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let msg = format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
+        stream.write_all(msg.as_bytes()).unwrap();
+        let mut buf = String::new();
+        BufReader::new(stream).read_to_string(&mut buf).unwrap();
+        buf
+    }
 
     fn raw_post(addr: &str, path: &str, body: &str) -> String {
         let mut stream = TcpStream::connect(addr).unwrap();
@@ -433,6 +584,120 @@ mod tests {
             "{\"prompt\": [1, 2], \"max_tokens\": 1e18}",
         );
         assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&addr);
+        srv.join().unwrap();
+    }
+
+    /// Job sink with a canned two-replica metrics view, for exercising
+    /// the `/metrics` and `/healthz` surfaces without engine threads.
+    struct FakeSink;
+
+    impl JobSink for FakeSink {
+        fn submit(&self, _job: OnlineJob) -> Result<()> {
+            Err(anyhow!("fake sink accepts no jobs"))
+        }
+
+        fn replica_metrics(&self) -> Vec<ReplicaMetrics> {
+            vec![
+                ReplicaMetrics {
+                    queued: 3,
+                    dispatched: 10,
+                    finished: 7,
+                    live: 2,
+                    resident: 1,
+                    kv_used_tokens: 640,
+                    kv_pool_tokens: 4096,
+                    pred_remaining: 96.5,
+                    n_preemptions: 4,
+                    n_discards: 1,
+                    max_wait_age: 0.25,
+                    reused_tokens: 128,
+                    ..Default::default()
+                },
+                ReplicaMetrics {
+                    queued: 1,
+                    dispatched: 5,
+                    finished: 4,
+                    live: 1,
+                    ..Default::default()
+                },
+            ]
+        }
+    }
+
+    #[test]
+    fn wrong_method_on_known_route_is_405_not_404() {
+        let (server, _job_rx) = HttpServer::bind("127.0.0.1:0", 2).unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let srv = std::thread::spawn(move || server.serve());
+
+        // Known routes with the wrong verb: 405.
+        let resp = raw_get(&addr, "/generate");
+        assert!(resp.starts_with("HTTP/1.1 405"), "got: {resp}");
+        for path in ["/healthz", "/stats", "/metrics"] {
+            let resp = raw_post(&addr, path, "{}");
+            assert!(resp.starts_with("HTTP/1.1 405"), "POST {path} got: {resp}");
+        }
+        // Unknown paths stay 404.
+        let resp = raw_get(&addr, "/nope");
+        assert!(resp.starts_with("HTTP/1.1 404"), "got: {resp}");
+
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&addr);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn healthz_reports_uptime_and_replica_depths() {
+        let server = HttpServer::bind_with_sink("127.0.0.1:0", 2, Arc::new(FakeSink)).unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let srv = std::thread::spawn(move || server.serve());
+
+        let resp = raw_get(&addr, "/healthz");
+        assert!(resp.starts_with("HTTP/1.1 200"), "got: {resp}");
+        let json_start = resp.find("\r\n\r\n").map(|i| i + 4).unwrap();
+        let j = parse(&resp[json_start..]).unwrap();
+        assert!(matches!(j.at(&["ok"]), Json::Bool(true)));
+        assert!(j.at(&["uptime_s"]).as_f64() >= 0.0);
+        let reps = j.at(&["replicas"]).as_arr();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0].at(&["queued"]).as_usize(), 3);
+        assert_eq!(reps[1].at(&["queued"]).as_usize(), 1);
+        assert_eq!(reps[1].at(&["live"]).as_usize(), 1);
+
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&addr);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_prometheus_text() {
+        let server = HttpServer::bind_with_sink("127.0.0.1:0", 2, Arc::new(FakeSink)).unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        server.stats().record(0.5, 0.03);
+        let srv = std::thread::spawn(move || server.serve());
+
+        let resp = raw_get(&addr, "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200"), "got: {resp}");
+        assert!(resp.contains("Content-Type: text/plain; version=0.0.4"), "got: {resp}");
+        assert!(resp.contains("trail_requests_completed_total 1\n"));
+        // Per-replica gauges and counters carry the replica label.
+        assert!(resp.contains("trail_queue_depth{replica=\"0\"} 3\n"));
+        assert!(resp.contains("trail_queue_depth{replica=\"1\"} 1\n"));
+        assert!(resp.contains("trail_preemptions_total{replica=\"0\"} 4\n"));
+        assert!(resp.contains("trail_pred_remaining_tokens{replica=\"0\"} 96.5\n"));
+        // Latency histogram: 0.5 lands in the le=0.5 bucket cumulatively.
+        assert!(resp.contains("trail_request_latency_seconds_bucket{le=\"0.5\"} 1\n"));
+        assert!(resp.contains("trail_request_latency_seconds_bucket{le=\"0.1\"} 0\n"));
+        assert!(resp.contains("trail_request_latency_seconds_count 1\n"));
+        assert!(resp.contains("trail_request_ttft_seconds_bucket{le=\"0.05\"} 1\n"));
+        // HELP/TYPE headers present once per family.
+        assert_eq!(resp.matches("# TYPE trail_queue_depth gauge").count(), 1);
 
         stop.store(true, Ordering::Relaxed);
         let _ = TcpStream::connect(&addr);

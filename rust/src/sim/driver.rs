@@ -31,6 +31,7 @@ use anyhow::Result;
 use crate::coordinator::backend::ModelBackend;
 use crate::coordinator::dispatch::{DispatchPolicy, ReplicaSnapshot, DEFAULT_UNSEEN_JOB_ESTIMATE};
 use crate::coordinator::engine::ServingEngine;
+use crate::obs::{sort_events, PhaseCounts, TimingStats, TraceEvent};
 use crate::util::stats::Samples;
 use crate::workload::TraceEntry;
 
@@ -90,6 +91,17 @@ pub struct SimOutcome {
     /// same order the Python mirror records, so the MAE float-sum in
     /// `pred_quality` matches exactly.
     pub pred_pairs: Vec<(f64, f64)>,
+    /// Flight-recorder event stream, drained from every replica and
+    /// merged in `(virtual time, replica, sequence)` order. Empty
+    /// unless tracing was enabled (`SimScenario::obs`).
+    pub trace_events: Vec<TraceEvent>,
+    /// Hot-loop phase call counts merged over replicas, plus the
+    /// driver's own dispatch decisions (`dispatch` field). All engine
+    /// counts are zero with obs off.
+    pub phase_counts: PhaseCounts,
+    /// Wall-clock phase spans merged over replicas (`None` with the
+    /// phase timer off). Never serialized into frozen baselines.
+    pub timing: Option<TimingStats>,
 }
 
 impl SimOutcome {
@@ -246,7 +258,10 @@ impl<B: ModelBackend> SimDriver<B> {
         let mut prefix_hits = 0u64;
         let mut reused_tokens = 0u64;
         let mut pred_pairs: Vec<(f64, f64)> = Vec::new();
-        for e in &self.engines {
+        let mut trace_events: Vec<TraceEvent> = Vec::new();
+        let mut phase_counts = PhaseCounts::default();
+        let mut timing: Option<TimingStats> = None;
+        for e in &mut self.engines {
             let st = e.status();
             preemptions += e.metrics.n_preemptions;
             discards += e.metrics.n_discards;
@@ -260,7 +275,18 @@ impl<B: ModelBackend> SimDriver<B> {
             prefix_hits += hits;
             reused_tokens += reused;
             pred_pairs.extend_from_slice(&e.metrics.pred_pairs);
+            trace_events.append(&mut e.take_trace());
+            phase_counts.merge(&e.phase_counts());
+            if let Some(ts) = e.timing_stats() {
+                match &mut timing {
+                    Some(t) => t.merge(&ts),
+                    None => timing = Some(ts),
+                }
+            }
         }
+        // The driver owns dispatch: one decision per trace arrival.
+        phase_counts.dispatch += self.rr;
+        sort_events(&mut trace_events);
         Ok(SimOutcome {
             n_requests: finished,
             latency,
@@ -279,6 +305,9 @@ impl<B: ModelBackend> SimDriver<B> {
             reused_tokens,
             predictor: self.engines[0].predictor_name().to_string(),
             pred_pairs,
+            trace_events,
+            phase_counts,
+            timing,
         })
     }
 

@@ -38,6 +38,14 @@ pub const PREFIX_SCHEMA_VERSION: &str = "trail.simlab.prefix/v1";
 /// (Kendall-τ, pairwise-inversion rate, MAE) — over the predictor ×
 /// policy × {steady, drift} grid. See docs/predictors.md.
 pub const PRED_SCHEMA_VERSION: &str = "trail.simlab.pred/v1";
+/// Flight-recorder reports (`BENCH_obs.json`): the bench rows plus an
+/// `obs` section per row — per-kind trace event counts, the FNV-1a
+/// fingerprint of the rendered trace, the hot-loop phase table (call
+/// counts + virtual-time totals), and the p99 tails. The only report
+/// family that serialises observability data; every frozen baseline
+/// above stays byte-identical with obs on or off. See
+/// docs/observability.md.
+pub const OBS_SCHEMA_VERSION: &str = "trail.simlab.obs/v1";
 
 /// Per-tenant latency row (present when a sweep runs with
 /// `tenant_breakdown`; tenant names come from the scenario's
@@ -310,6 +318,119 @@ impl PredRow {
     }
 }
 
+/// One phase of the `obs` section's hot-loop table: call count plus the
+/// virtual-time total the cost model attributes to it.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub name: String,
+    pub calls: u64,
+    pub virtual_s: f64,
+}
+
+impl PhaseRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("calls", Json::Num(self.calls as f64)),
+            ("virtual_s", Json::Num(self.virtual_s)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> PhaseRow {
+        PhaseRow {
+            name: j.at(&["name"]).as_str().to_string(),
+            calls: j.at(&["calls"]).as_i64() as u64,
+            virtual_s: j.at(&["virtual_s"]).as_f64(),
+        }
+    }
+}
+
+/// The `obs` section of a `BENCH_obs.json` row: what the flight
+/// recorder saw in one cell. Everything here is virtual-time or
+/// count-valued — wall-clock timing never enters a pinned report (it
+/// would break byte determinism).
+#[derive(Clone, Debug)]
+pub struct ObsRow {
+    /// Trace events by kind label (`TraceKind::label`), label order.
+    pub events: Vec<(String, u64)>,
+    pub n_events: u64,
+    /// FNV-1a 64 fingerprint of the rendered trace text, `{:016x}` hex
+    /// — the run-twice identity check compares this one string.
+    pub trace_fnv: String,
+    /// Hot-loop phase table (`PhaseCounts::phases`), `PHASE_ORDER`.
+    pub phases: Vec<PhaseRow>,
+    pub p99_latency_s: f64,
+    pub p99_ttft_s: f64,
+}
+
+impl ObsRow {
+    /// Build the section from a traced outcome and its rendered trace
+    /// text. Borrows the outcome so the caller can still hand it to
+    /// `SweepRow::from_outcome_full` afterwards.
+    pub fn from_outcome(
+        out: &SimOutcome,
+        cost: &crate::coordinator::backend::CostModel,
+        trace_text: &str,
+    ) -> ObsRow {
+        let mut by_kind: std::collections::BTreeMap<&'static str, u64> =
+            std::collections::BTreeMap::new();
+        for e in &out.trace_events {
+            *by_kind.entry(e.kind.label()).or_insert(0) += 1;
+        }
+        let mut lat = out.latency.clone();
+        let mut ttft = out.ttft.clone();
+        ObsRow {
+            events: by_kind.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            n_events: out.trace_events.len() as u64,
+            trace_fnv: format!("{:016x}", crate::obs::fnv1a64(trace_text)),
+            phases: out
+                .phase_counts
+                .phases(cost)
+                .into_iter()
+                .map(|(name, calls, virtual_s)| PhaseRow {
+                    name: name.to_string(),
+                    calls,
+                    virtual_s,
+                })
+                .collect(),
+            p99_latency_s: lat.percentile(99.0),
+            p99_ttft_s: ttft.percentile(99.0),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "events",
+                Json::obj(self.events.iter().map(|(k, v)| (k.as_str(), Json::Num(*v as f64))).collect()),
+            ),
+            ("n_events", Json::Num(self.n_events as f64)),
+            ("p99_latency_s", Json::Num(self.p99_latency_s)),
+            ("p99_ttft_s", Json::Num(self.p99_ttft_s)),
+            (
+                "phases",
+                Json::Arr(self.phases.iter().map(|p| p.to_json()).collect()),
+            ),
+            ("trace_fnv", Json::str(&self.trace_fnv)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> ObsRow {
+        let events = match j.at(&["events"]) {
+            Json::Obj(m) => m.iter().map(|(k, v)| (k.clone(), v.as_i64() as u64)).collect(),
+            _ => Vec::new(),
+        };
+        ObsRow {
+            events,
+            n_events: j.at(&["n_events"]).as_i64() as u64,
+            trace_fnv: j.at(&["trace_fnv"]).as_str().to_string(),
+            phases: j.at(&["phases"]).as_arr().iter().map(PhaseRow::from_json).collect(),
+            p99_latency_s: j.at(&["p99_latency_s"]).as_f64(),
+            p99_ttft_s: j.at(&["p99_ttft_s"]).as_f64(),
+        }
+    }
+}
+
 /// One (scenario × policy × replicas) cell of a sweep.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
@@ -350,6 +471,9 @@ pub struct SweepRow {
     /// Predictor name + quality metrics — pred sweeps only; `None`
     /// keeps every other serialisation byte-identical.
     pub pred: Option<PredRow>,
+    /// Flight-recorder event counts + phase table — obs sweeps only;
+    /// `None` keeps every other serialisation byte-identical.
+    pub obs: Option<ObsRow>,
 }
 
 impl SweepRow {
@@ -442,6 +566,7 @@ impl SweepRow {
             fairness: None,
             prefix: None,
             pred: None,
+            obs: None,
         }
     }
 
@@ -501,6 +626,9 @@ impl SweepRow {
         if let Some(pred) = &self.pred {
             pairs.push(("pred", pred.to_json()));
         }
+        if let Some(obs) = &self.obs {
+            pairs.push(("obs", obs.to_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -547,6 +675,7 @@ impl SweepRow {
             fairness: j.get("fairness").map(FairnessRow::from_json),
             prefix: j.get("prefix").map(PrefixRow::from_json),
             pred: j.get("pred").map(PredRow::from_json),
+            obs: j.get("obs").map(ObsRow::from_json),
         }
     }
 }
@@ -596,6 +725,13 @@ impl BenchReport {
         }
     }
 
+    pub fn new_obs(rows: Vec<SweepRow>) -> BenchReport {
+        BenchReport {
+            schema: OBS_SCHEMA_VERSION.to_string(),
+            rows,
+        }
+    }
+
     /// Deterministic serialisation: fixed top-level layout, one row
     /// object per line (row diffs stay line-local), sorted keys inside
     /// each row, trailing newline.
@@ -632,11 +768,12 @@ impl BenchReport {
             && schema != FAIR_SCHEMA_VERSION
             && schema != PREFIX_SCHEMA_VERSION
             && schema != PRED_SCHEMA_VERSION
+            && schema != OBS_SCHEMA_VERSION
         {
             return Err(format!(
                 "schema mismatch: file is '{schema}', this binary reads \
                  '{SCHEMA_VERSION}', '{SCHED_SCHEMA_VERSION}', '{FAIR_SCHEMA_VERSION}', \
-                 '{PREFIX_SCHEMA_VERSION}' or '{PRED_SCHEMA_VERSION}'"
+                 '{PREFIX_SCHEMA_VERSION}', '{PRED_SCHEMA_VERSION}' or '{OBS_SCHEMA_VERSION}'"
             ));
         }
         Ok(BenchReport {
@@ -652,6 +789,7 @@ impl BenchReport {
         let fair = self.rows.iter().any(|r| r.fairness.is_some());
         let prefix = self.rows.iter().any(|r| r.prefix.is_some());
         let pred = self.rows.iter().any(|r| r.pred.is_some());
+        let obs = self.rows.iter().any(|r| r.obs.is_some());
         let mut headers = vec![
             "scenario", "policy", "disp", "reps", "n", "mean_lat_s", "p50_lat_s", "p99_lat_s",
             "mean_ttft_s", "p99_ttft_s", "req/s", "preempt", "discard", "migrate", "kv_peak",
@@ -675,6 +813,10 @@ impl BenchReport {
             headers.push("tau");
             headers.push("inv");
             headers.push("mae");
+        }
+        if obs {
+            headers.push("events");
+            headers.push("trace_fnv");
         }
         let mut t = Table::new(&headers);
         for r in &self.rows {
@@ -738,6 +880,18 @@ impl BenchReport {
                     None => {
                         row.push(String::new());
                         row.push(String::new());
+                        row.push(String::new());
+                        row.push(String::new());
+                    }
+                }
+            }
+            if obs {
+                match &r.obs {
+                    Some(or) => {
+                        row.push(or.n_events.to_string());
+                        row.push(or.trace_fnv.clone());
+                    }
+                    None => {
                         row.push(String::new());
                         row.push(String::new());
                     }

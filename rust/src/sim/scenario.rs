@@ -25,8 +25,9 @@ use crate::coordinator::dispatch::DispatchPolicy;
 use crate::coordinator::{
     ClockSpec, FairnessConfig, MockBackend, Policy, Selector, ServeConfig, ServingEngine,
 };
+use crate::obs::ObsConfig;
 use crate::sim::driver::{SimDriver, SimOutcome};
-use crate::sim::report::{BenchReport, FairnessRow, SweepRow};
+use crate::sim::report::{BenchReport, FairnessRow, ObsRow, SweepRow};
 use crate::testkit::PredictorSpec;
 use crate::workload::{TenantProfile, TraceEntry, TraceWorkload};
 
@@ -60,6 +61,12 @@ pub struct SimScenario {
     /// pre-existing scenario — is byte-identical to the
     /// per-request-charged KvManager.
     pub prefix_cache: bool,
+    /// Flight-recorder knobs for every engine this scenario builds
+    /// (docs/observability.md). `replica` is stamped per engine by
+    /// `build_engines`; the default (everything off) is byte-identical
+    /// to the recorder-free engine — that is what keeps the frozen
+    /// baselines frozen.
+    pub obs: ObsConfig,
 }
 
 impl SimScenario {
@@ -81,6 +88,7 @@ impl SimScenario {
             selector: Selector::Indexed,
             fairness: FairnessConfig::neutral(),
             prefix_cache: false,
+            obs: ObsConfig::default(),
         }
     }
 
@@ -109,6 +117,11 @@ impl SimScenario {
         self
     }
 
+    pub fn obs(mut self, obs: ObsConfig) -> SimScenario {
+        self.obs = obs;
+        self
+    }
+
     /// Materialise this scenario's arrival trace.
     pub fn trace(&self, cfg: &Config) -> Vec<TraceEntry> {
         self.workload.generate(cfg, self.n, self.seed)
@@ -134,12 +147,16 @@ impl SimScenario {
             );
         }
         (0..replicas)
-            .map(|_| {
+            .map(|i| {
                 let backend = MockBackend::new(self.slots, cfg).with_cost(self.cost);
                 let mut serve = ServeConfig::new(cfg, policy.clone());
                 serve.selector = self.selector;
                 serve.fairness = self.fairness.clone();
                 serve.prefix_cache = self.prefix_cache;
+                serve.obs = ObsConfig {
+                    replica: i as u32,
+                    ..self.obs.clone()
+                };
                 serve.clock = ClockSpec::Virtual;
                 serve.max_iterations = self.max_iterations;
                 serve.pool_tokens =
@@ -448,12 +465,43 @@ impl SweepConfig {
 /// Run the grid; each scenario's trace is generated once and shared by
 /// every (policy, replicas) cell so comparisons are paired.
 pub fn run_sweep(cfg: &Config, sweep: &SweepConfig) -> Result<BenchReport> {
+    Ok(run_sweep_obs(cfg, sweep)?.report)
+}
+
+/// [`run_sweep`] plus the flight-recorder artifacts: per-cell rendered
+/// traces (for scenarios with `obs.trace` on) and phase counts / wall
+/// timing merged over every cell — the `trail-serve sim --trace-jsonl`
+/// / `--timings-json` path. With obs off on every scenario this is
+/// exactly `run_sweep` (the report rows never carry an `obs` section
+/// here, so the pinned `BENCH_seed.json` bytes are identical either
+/// way).
+pub fn run_sweep_obs(cfg: &Config, sweep: &SweepConfig) -> Result<ObsSweepOutput> {
     let mut rows = Vec::new();
+    let mut traces = Vec::new();
+    let mut phase_counts = crate::obs::PhaseCounts::default();
+    let mut timing: Option<crate::obs::TimingStats> = None;
+    let cost = sweep
+        .scenarios
+        .first()
+        .map(|sc| sc.cost)
+        .unwrap_or_default();
     for sc in &sweep.scenarios {
         let trace = sc.trace(cfg);
         for &replicas in &sweep.replica_counts {
             for policy in &sweep.policies {
                 let out = sc.run_trace(cfg, policy, replicas, sweep.migration, &trace)?;
+                if sc.obs.trace {
+                    let cell = format!("{}/{}/r{replicas}", sc.name, policy.name());
+                    let text = crate::obs::render_trace(&out.trace_events, Some(&cell));
+                    traces.push((cell, text));
+                }
+                phase_counts.merge(&out.phase_counts);
+                if let Some(ts) = &out.timing {
+                    match &mut timing {
+                        Some(t) => t.merge(ts),
+                        None => timing = Some(ts.clone()),
+                    }
+                }
                 let fair = if sweep.fairness_report {
                     Some(FairnessRow::from_outcome(sc, &out))
                 } else {
@@ -473,7 +521,13 @@ pub fn run_sweep(cfg: &Config, sweep: &SweepConfig) -> Result<BenchReport> {
             }
         }
     }
-    Ok(BenchReport::new(rows))
+    Ok(ObsSweepOutput {
+        report: BenchReport::new(rows),
+        traces,
+        phase_counts,
+        timing,
+        cost,
+    })
 }
 
 /// The checked-in scheduler-scale grid (`benchmarks/BENCH_sched.json`):
@@ -602,6 +656,68 @@ pub fn run_fair_sweep(cfg: &Config) -> Result<BenchReport> {
         }
     }
     Ok(BenchReport::new_fair(rows))
+}
+
+/// Output of the flight-recorder sweep: the pinned report plus the
+/// artifacts that back it — the per-cell rendered traces (what the
+/// `trace_fnv` column fingerprints; `--trace-jsonl` concatenates them)
+/// and the merged phase counts / wall-clock spans (`--timings-json`).
+pub struct ObsSweepOutput {
+    pub report: BenchReport,
+    /// `(cell label, rendered trace text)` in grid order; each text is
+    /// a complete JSONL stream whose header carries the cell label.
+    pub traces: Vec<(String, String)>,
+    /// Phase call counts merged over every cell.
+    pub phase_counts: crate::obs::PhaseCounts,
+    /// Wall-clock phase spans merged over every cell.
+    pub timing: Option<crate::obs::TimingStats>,
+    /// Cost model the virtual phase totals derive from (the first
+    /// scenario's — all cells of a grid share one cost model).
+    pub cost: CostModel,
+}
+
+/// The checked-in flight-recorder grid (`benchmarks/BENCH_obs.json`,
+/// schema `trail.simlab.obs/v1`; docs/observability.md): `scale-1k` ×
+/// {fcfs, trail-c0.8} at 2 replicas with tracing and the phase timer
+/// on. The pinned bytes are pure virtual-time data (event counts, the
+/// trace FNV fingerprint, phase calls + virtual totals, p99 tails);
+/// wall-clock spans ride along in `ObsSweepOutput` but never enter the
+/// report. Keep in sync with python/simref.py `obs_rows`.
+pub fn run_obs_sweep(cfg: &Config) -> Result<ObsSweepOutput> {
+    let policies = [Policy::Fcfs, Policy::Trail { c: 0.8 }];
+    let replicas = 2usize;
+    let base = builtin("scale-1k")
+        .expect("builtin scale-1k")
+        .obs(ObsConfig { trace: true, timing: true, replica: 0 });
+    let trace = base.trace(cfg);
+    let mut rows = Vec::new();
+    let mut traces = Vec::new();
+    let mut phase_counts = crate::obs::PhaseCounts::default();
+    let mut timing: Option<crate::obs::TimingStats> = None;
+    for policy in &policies {
+        let out = base.run_trace(cfg, policy, replicas, true, &trace)?;
+        let cell = format!("{}/{}/r{replicas}", base.name, policy.name());
+        let text = crate::obs::render_trace(&out.trace_events, Some(&cell));
+        let or = ObsRow::from_outcome(&out, &base.cost, &text);
+        phase_counts.merge(&out.phase_counts);
+        if let Some(ts) = &out.timing {
+            match &mut timing {
+                Some(t) => t.merge(ts),
+                None => timing = Some(ts.clone()),
+            }
+        }
+        let mut row = SweepRow::from_outcome_full(&base, policy, replicas, true, out, false, false);
+        row.obs = Some(or);
+        rows.push(row);
+        traces.push((cell, text));
+    }
+    Ok(ObsSweepOutput {
+        report: BenchReport::new_obs(rows),
+        traces,
+        phase_counts,
+        timing,
+        cost: base.cost,
+    })
 }
 
 /// The checked-in predictor-arena grid (`benchmarks/BENCH_pred.json`,

@@ -36,6 +36,7 @@ use crate::coordinator::{
     ClockSpec, FairnessConfig, MockBackend, Policy, Selector, ServeConfig, ServeReport,
     ServingEngine,
 };
+use crate::obs::{sort_events, ObsConfig, PhaseCounts, TraceEvent};
 use crate::predictor::{
     ArenaProbePredictor, BucketPredictor, OnlinePredictor, OraclePredictor, Predictor,
     ProbePredictor, RankOnlyPredictor,
@@ -180,6 +181,10 @@ pub struct Scenario {
     /// batches (the sim subsystem defaults to 128). The KV pool budget
     /// scales with the effective slot count.
     pub slots: Option<usize>,
+    /// Observability switches for the scenario's engines (default off —
+    /// the observed run is bit-identical to the unobserved one; see
+    /// docs/observability.md).
+    pub obs: ObsConfig,
 }
 
 impl Scenario {
@@ -207,7 +212,15 @@ impl Scenario {
             selector: Selector::Indexed,
             fairness: FairnessConfig::neutral(),
             slots: None,
+            obs: ObsConfig::default(),
         }
+    }
+
+    /// Observability switches (tracing / phase timing) for the
+    /// scenario's engines.
+    pub fn obs(mut self, obs: ObsConfig) -> Scenario {
+        self.obs = obs;
+        self
     }
 
     /// Target-selection implementation for the scenario's engines.
@@ -311,6 +324,7 @@ impl Scenario {
         serve.max_iterations = self.max_iterations;
         serve.pool_tokens =
             ((self.effective_slots(cfg) * cfg.model.max_seq) as f64 * self.pool_frac) as usize;
+        serve.obs = self.obs.clone();
         serve
     }
 
@@ -343,6 +357,25 @@ impl Scenario {
     /// Serve the scenario to completion on the virtual clock.
     pub fn run(&self, cfg: &Config) -> ServeReport {
         self.run_detailed(cfg).0
+    }
+
+    /// Serve on the virtual clock with the flight recorder forced on
+    /// (`ObsConfig::tracing(0)` unless the scenario already enables
+    /// something); returns the report plus the time-ordered trace and
+    /// deterministic phase counts. Virtual clock only — `run_pool`'s
+    /// wall-clock engines are not byte-reproducible.
+    pub fn run_traced(&self, cfg: &Config) -> (ServeReport, Vec<TraceEvent>, PhaseCounts) {
+        let mut s = self.clone();
+        if !s.obs.enabled() {
+            s.obs = ObsConfig::tracing(0);
+        }
+        let specs = gen_requests(cfg, s.n, s.seed);
+        let arrivals = s.arrivals();
+        let mut engine = s.build_engine(cfg);
+        let report = engine.run(specs, arrivals).expect("scenario serve");
+        let mut events = engine.take_trace();
+        sort_events(&mut events);
+        (report, events, engine.phase_counts())
     }
 
     /// Like `run`, but hands back the mock backend for call-count /

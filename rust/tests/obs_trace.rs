@@ -1,0 +1,157 @@
+//! Flight-recorder integration tests (docs/observability.md):
+//!
+//! 1. Run-twice byte-identity — the rendered trace of a virtual-clock
+//!    scenario is the same byte string on every run, across a
+//!    policy × load × pool-fraction grid.
+//! 2. Event conservation — every admitted request has exactly one
+//!    terminal `finish`, and the preempt/discard/migrate event counts in
+//!    the trace reconcile exactly with the engine's `Metrics` counters.
+//! 3. Zero cost when disabled — observing a run does not change its
+//!    outcome (same iterations, latencies, preemption counts).
+
+use std::collections::HashMap;
+
+use trail::config::Config;
+use trail::coordinator::Policy;
+use trail::obs::{fnv1a64, render_trace, ObsConfig, TraceKind};
+use trail::testkit::{Load, Scenario};
+
+fn cfg() -> Config {
+    Config::load_default().expect("load_default")
+}
+
+/// The determinism grid: enough variety to cover preemption, OOM
+/// discard, and aging paths without taking seconds.
+fn grid() -> Vec<Scenario> {
+    let mut cells = Vec::new();
+    for policy in [Policy::Fcfs, Policy::SjfPrompt, Policy::Trail { c: 0.8 }] {
+        for load in [Load::Burst, Load::Poisson(110.0)] {
+            for pool_frac in [0.35, 0.55] {
+                cells.push(
+                    Scenario::new(policy.clone())
+                        .n(40)
+                        .load(load.clone())
+                        .pool_frac(pool_frac)
+                        .noise(0.4),
+                );
+            }
+        }
+    }
+    cells
+}
+
+#[test]
+fn traces_are_run_twice_byte_identical_across_grid() {
+    let cfg = cfg();
+    for (i, s) in grid().iter().enumerate() {
+        let (_, ev_a, _) = s.run_traced(&cfg);
+        let (_, ev_b, _) = s.run_traced(&cfg);
+        let cell = format!("grid-{i}");
+        let a = render_trace(&ev_a, Some(&cell));
+        let b = render_trace(&ev_b, Some(&cell));
+        assert_eq!(a, b, "trace bytes drifted for grid cell {i}: {s:?}");
+        assert_eq!(fnv1a64(a.as_bytes()), fnv1a64(b.as_bytes()));
+        // Sorted order is genuinely total: (t, rep, seq) strictly
+        // increases line over line.
+        for w in ev_a.windows(2) {
+            let ka = (w[0].t, w[0].rep, w[0].seq);
+            let kb = (w[1].t, w[1].rep, w[1].seq);
+            assert!(ka < kb || (w[0].t == w[1].t && (w[0].rep, w[0].seq) < (w[1].rep, w[1].seq)));
+        }
+    }
+}
+
+#[test]
+fn every_admit_has_exactly_one_finish_and_counters_reconcile() {
+    let cfg = cfg();
+    // Tight pool + burst: forces preemptions and OOM discards so the
+    // conservation claim is tested where it can actually fail.
+    for s in [
+        Scenario::new(Policy::Trail { c: 0.8 })
+            .n(48)
+            .load(Load::Burst)
+            .pool_frac(0.3)
+            .noise(0.4),
+        Scenario::new(Policy::Fcfs).n(40).load(Load::Poisson(120.0)).pool_frac(0.35),
+    ] {
+        let (report, events, counts) = s.run_traced(&cfg);
+        let mut admits: HashMap<u64, u64> = HashMap::new();
+        let mut finishes: HashMap<u64, u64> = HashMap::new();
+        let mut n_preempt = 0u64;
+        let mut n_discard = 0u64;
+        let mut n_migrate = 0u64;
+        for e in &events {
+            match &e.kind {
+                TraceKind::Admit { .. } => *admits.entry(e.rid).or_insert(0) += 1,
+                TraceKind::Finish { .. } => *finishes.entry(e.rid).or_insert(0) += 1,
+                TraceKind::Preempt => n_preempt += 1,
+                TraceKind::Discard { .. } => n_discard += 1,
+                TraceKind::MigrateOut | TraceKind::MigrateIn => n_migrate += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(admits.len(), report.summary.n, "one admit per request");
+        assert_eq!(finishes.len(), report.summary.n, "one finish per request");
+        for (rid, n) in &admits {
+            assert_eq!(*n, 1, "rid {rid} admitted {n} times");
+            assert_eq!(finishes.get(rid), Some(&1), "rid {rid} must finish exactly once");
+        }
+        assert_eq!(n_preempt, report.summary.preemptions, "preempt events == Metrics");
+        assert_eq!(n_discard, report.summary.discards, "discard events == Metrics");
+        assert_eq!(n_migrate, report.summary.migrations, "single engine never migrates");
+        // Deterministic phase counts see the same run the trace does.
+        assert_eq!(counts.steps, report.n_iterations);
+        assert!(counts.decode_steps > 0 && counts.prefill_chunks > 0);
+    }
+}
+
+#[test]
+fn observation_is_zero_cost_on_the_observed_run() {
+    let cfg = cfg();
+    let s = Scenario::new(Policy::Trail { c: 0.8 })
+        .n(40)
+        .load(Load::Poisson(100.0))
+        .pool_frac(0.4)
+        .noise(0.4);
+    let bare = s.run(&cfg);
+    let (traced, events, _) = s.clone().obs(ObsConfig { trace: true, timing: true, replica: 0 }).run_traced(&cfg);
+    assert_eq!(bare.n_iterations, traced.n_iterations);
+    assert_eq!(bare.summary.preemptions, traced.summary.preemptions);
+    assert_eq!(bare.summary.discards, traced.summary.discards);
+    assert!((bare.summary.mean_latency - traced.summary.mean_latency).abs() < 1e-15);
+    assert!((bare.summary.p99_latency - traced.summary.p99_latency).abs() < 1e-15);
+    assert!(!events.is_empty());
+}
+
+#[test]
+fn sched_decision_events_carry_rank_context() {
+    let cfg = cfg();
+    let s = Scenario::new(Policy::Trail { c: 0.8 })
+        .n(48)
+        .load(Load::Burst)
+        .pool_frac(0.3)
+        .noise(0.4);
+    let (_, events, _) = s.run_traced(&cfg);
+    let allocs: Vec<_> = events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::SchedAlloc { .. }))
+        .collect();
+    assert!(!allocs.is_empty(), "burst under a tight pool must allocate slots");
+    for e in &allocs {
+        if let TraceKind::SchedAlloc { key, .. } = e.kind {
+            assert!(key.is_finite());
+        }
+    }
+    // A 0.3 pool under burst load must evict: the decision log records
+    // winner and victim with their rank keys.
+    let evicts: Vec<_> = events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::SchedEvict { .. }))
+        .collect();
+    for e in &evicts {
+        if let TraceKind::SchedEvict { key, vrid, vkey } = e.kind {
+            assert!(key.is_finite() && vkey.is_finite());
+            assert_ne!(vrid, e.rid, "a request never evicts itself");
+        }
+    }
+}
