@@ -10,7 +10,9 @@
         bench-fair bench-fair-diff bench-fair-refresh \
         bench-prefix bench-prefix-diff bench-prefix-refresh \
         bench-pred bench-pred-diff bench-pred-refresh \
-        bench-obs bench-obs-diff bench-obs-refresh bench-freeze bench-freeze-mirror \
+        bench-obs bench-obs-diff bench-obs-refresh \
+        bench-scale bench-scale-diff bench-scale-refresh bench-scale-mirror \
+        bench-freeze bench-freeze-mirror \
         fmt artifacts clean
 
 build:
@@ -145,6 +147,34 @@ bench-obs-diff: bench-obs
 bench-obs-refresh:
 	cargo run --release --bin trail-serve -- obs --out benchmarks/BENCH_obs.json
 
+# Parallel-driver scale grid (docs/simlab.md): scale-10k (epoch mode,
+# JSQ dispatch) + scale-100k (sharded mode, round-robin) x the
+# {1, 2, 4, 8}-worker ladder at 8 replicas. The report rows are
+# worker-invariant by construction (byte-identity is the whole point of
+# the parallel driver); wall-clock speedups land in timings_scale.json,
+# never in the frozen report. Run twice and `cmp` byte-for-byte.
+bench-scale:
+	cargo run --release --bin trail-serve -- scale --out BENCH_scale.json --timings-json timings_scale.json
+	cargo run --release --bin trail-serve -- scale --out BENCH_scale.run2.json
+	cmp BENCH_scale.json BENCH_scale.run2.json
+	rm -f BENCH_scale.run2.json
+
+# Diff against the checked-in scale baseline (advisory in CI, same
+# libm caveat as bench-sim-diff).
+bench-scale-diff: bench-scale
+	diff -u benchmarks/BENCH_scale.json BENCH_scale.json
+
+bench-scale-refresh:
+	cargo run --release --bin trail-serve -- scale --out benchmarks/BENCH_scale.json
+
+# Same grid through the Python mirror (one serial run per scenario —
+# the mirror has no parallel driver, which is exactly why the rows
+# must be worker-invariant).
+bench-scale-mirror:
+	cd python && python3 simref.py scale --out /tmp/MIRROR_scale.json > /dev/null
+	cmp /tmp/MIRROR_scale.json benchmarks/BENCH_scale.json
+	rm -f /tmp/MIRROR_scale.json
+
 # Baseline freeze (docs/observability.md): regenerate every checked-in
 # BENCH baseline with the recorder *disabled* and fail on any byte
 # drift. This is the zero-cost-when-disabled gate — landing the
@@ -160,6 +190,8 @@ bench-freeze:
 	cmp /tmp/FREEZE_prefix.json benchmarks/BENCH_prefix.json
 	cargo run --release --bin trail-serve -- pred --out /tmp/FREEZE_pred.json
 	cmp /tmp/FREEZE_pred.json benchmarks/BENCH_pred.json
+	cargo run --release --bin trail-serve -- scale --out /tmp/FREEZE_scale.json
+	cmp /tmp/FREEZE_scale.json benchmarks/BENCH_scale.json
 	rm -f /tmp/FREEZE_*.json
 
 # Same freeze gate through the dependency-free Python mirror — the
@@ -177,6 +209,8 @@ bench-freeze-mirror:
 	cmp /tmp/FREEZE_pred.json benchmarks/BENCH_pred.json
 	cd python && python3 simref.py obs --out /tmp/FREEZE_obs.json > /dev/null
 	cmp /tmp/FREEZE_obs.json benchmarks/BENCH_obs.json
+	cd python && python3 simref.py scale --out /tmp/FREEZE_scale.json > /dev/null
+	cmp /tmp/FREEZE_scale.json benchmarks/BENCH_scale.json
 	rm -f /tmp/FREEZE_*.json
 
 fmt:

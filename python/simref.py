@@ -70,6 +70,14 @@ every emission helper is a no-op and all frozen baselines stay
 byte-identical — that freeze is what ``make bench-freeze-mirror``
 regenerates and checks.
 
+The scale grid (docs/simlab.md) is mirrored too: the
+``trail.simlab.scale/v1`` report (``benchmarks/BENCH_scale.json``) —
+scale scenarios × worker counts at 8 replicas, migration off. The Rust
+parallel driver is byte-identical to its serial event loop (that is the
+whole contract), and this mirror *is* that serial loop, so one serial
+run per scenario regenerates every worker row; only the ``workers``
+field varies across them.
+
 Usage:
     cd python && python3 simref.py sweep --out ../benchmarks/BENCH_seed.json
     cd python && python3 simref.py sweep --selector reference --out /tmp/x.json
@@ -79,6 +87,7 @@ Usage:
     cd python && python3 simref.py pred --out ../benchmarks/BENCH_pred.json
     cd python && python3 simref.py obs --out ../benchmarks/BENCH_obs.json \
         --trace-jsonl /tmp/trace.jsonl --timings-json /tmp/timings.json
+    cd python && python3 simref.py scale --out ../benchmarks/BENCH_scale.json
 """
 
 import math
@@ -2129,7 +2138,9 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
             ttft.append(t)
             tenant_lat[rid_tenant[rid]].append(l)
             tenant_ttft[rid_tenant[rid]].append(t)
-            tenant_slow[rid_tenant[rid]].append(l / float(ntok))
+            # max(ntok, 1): a zero-token completion must not poison the
+            # slowdown percentiles with NaN/inf (mirrors record_finish).
+            tenant_slow[rid_tenant[rid]].append(l / float(max(ntok, 1)))
 
     assert finished == n_total, f"lost requests: {finished}/{n_total}"
     makespan = max(e.now for e in engines)
@@ -2228,6 +2239,24 @@ def builtin_scenarios():
             ],
             10000, 777, "jsq", 32, 0.55, 0.4,
         ),
+        # Million-request points (BENCH_scale.json): the same overload
+        # mix under round-robin dispatch — the Rust driver's sharded
+        # parallel path. scale-1m is on-demand only; the pinned baseline
+        # stops at 100k so this mirror can regenerate it in-image.
+        "scale-100k": (
+            [
+                (288.0, -0.3, []),
+                (72.0, 0.7, []),
+            ],
+            100000, 777, "rr", 32, 0.55, 0.4,
+        ),
+        "scale-1m": (
+            [
+                (288.0, -0.3, []),
+                (72.0, 0.7, []),
+            ],
+            1000000, 777, "rr", 32, 0.55, 0.4,
+        ),
         "scale-replicas": (
             [(2100.0, 0.0, [])],
             2560, 777, "jsq", 16, 0.5, 0.4,
@@ -2295,6 +2324,8 @@ def scenario_tenant_names():
         "skewed": ["heavy", "light"],
         "scale-1k": ["chat", "batch"],
         "scale-10k": ["chat", "batch"],
+        "scale-100k": ["chat", "batch"],
+        "scale-1m": ["chat", "batch"],
         "scale-replicas": ["fleet"],
         "fair-steady": ["interactive", "batch"],
         "fair-skewed": ["flood", "longtail"],
@@ -2737,11 +2768,53 @@ def obs_rows():
     return rows, traces, counts, timing
 
 
+# Scale sweep (rust/src/sim/scenario.rs run_scale_sweep — keep in
+# sync): each scale scenario × worker count at 8 replicas under TRAIL
+# c=0.8, migration off, phase counters on. Every pinned field except
+# `scale.workers` is worker-invariant — the Rust parallel driver is
+# byte-identical to its serial loop, which this mirror *is* — so one
+# serial run per scenario regenerates all four worker rows.
+SCALE_SCHEMA = "trail.simlab.scale/v1"
+SCALE_WORKERS = [1, 2, 4, 8]
+SCALE_REPLICAS = 8
+SCALE_SCENARIOS = ("scale-10k", "scale-100k")
+SCALE_POLICY = ("trail", 0.8)
+
+
+def scale_obj(out, workers):
+    """ScaleRow::from_outcome — the worker count plus the phase table."""
+    return {
+        "workers": workers,
+        "phases": [
+            {"name": name, "calls": calls, "virtual_s": virtual_s}
+            for name, calls, virtual_s in phase_rows(out["phase_counts"])
+        ],
+    }
+
+
+def scale_rows(scenario_names=SCALE_SCENARIOS):
+    rows = []
+    scs = builtin_scenarios()
+    for name in scenario_names:
+        tenants, n, seed, dispatch, slots, pool_frac, noise = scs[name]
+        trace = generate_trace(tenants, n, seed)
+        pool_tokens = int((slots * MAX_SEQ) * pool_frac)
+        out = run_sim(trace, SCALE_POLICY, SCALE_REPLICAS, dispatch, False, slots,
+                      pool_tokens, noise, obs=(False, True))
+        for w in SCALE_WORKERS:
+            row = make_row(name, SCALE_POLICY, dispatch, SCALE_REPLICAS, False,
+                           seed, out)
+            row["scale"] = scale_obj(out, w)
+            rows.append(row)
+    return rows
+
+
 DEFAULT_POLICIES = [("fcfs",), ("trail", 1.0), ("trail", 0.8)]
 
 
 def main(argv):
-    if not argv or argv[0] not in ("sweep", "sched", "fair", "prefix", "pred", "obs"):
+    if not argv or argv[0] not in ("sweep", "sched", "fair", "prefix", "pred", "obs",
+                                   "scale"):
         print(__doc__)
         return 2
     out_path = None
@@ -2772,6 +2845,22 @@ def main(argv):
             with open(tp, "w") as f:
                 f.write(timing_report_text(counts, timing))
             print(f"phase timings -> {tp}")
+    elif argv[0] == "scale":
+        names = SCALE_SCENARIOS
+        if "--scenarios" in argv:
+            names = tuple(
+                s for s in argv[argv.index("--scenarios") + 1].split(",") if s
+            )
+        rows = scale_rows(names)
+        text = report_json(rows, schema=SCALE_SCHEMA)
+        for row in rows:
+            sr = row["scale"]
+            print(
+                f"{row['scenario']:>12} workers={sr['workers']} x{row['replicas']} "
+                f"n={row['n']} mean={row['mean_latency_s']:.3f}s "
+                f"p99={row['p99_latency_s']:.3f}s req/s={row['throughput_req_s']:.2f} "
+                f"discard={row['discards']}"
+            )
     elif argv[0] == "pred":
         rows = pred_rows()
         text = report_json(rows, schema=PRED_SCHEMA)

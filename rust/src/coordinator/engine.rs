@@ -412,6 +412,34 @@ pub struct ServingEngine<B: ModelBackend> {
     /// Flight recorder (`None` unless `serve.obs` enables something —
     /// the zero-cost-when-disabled contract is this Option).
     obs: Option<EngineObs>,
+    /// Reused per-step buffers (see [`StepScratch`]): after warm-up,
+    /// a step that finishes nothing performs no heap allocation.
+    scratch: StepScratch,
+}
+
+/// Per-step working buffers, owned by the engine and recycled across
+/// iterations via the same `mem::take` discipline as `requests` — the
+/// million-request sim spends most of its wall clock inside `step()`,
+/// and these were ~9 fresh `Vec`s per iteration. `clear()` + `resize`
+/// keep the capacity; contents never survive a step.
+#[derive(Debug, Default)]
+struct StepScratch {
+    /// Selected target set, rank order (indices into `requests`).
+    target: Vec<usize>,
+    /// Per-request chosen flags for the in-flight selection.
+    chosen: Vec<bool>,
+    /// Popped-but-not-deferred index entries awaiting reinsertion.
+    held: Vec<Entry>,
+    /// Share-deferred index entries, pop order.
+    deferred: Vec<Entry>,
+    /// Targets whose prefill completed this iteration.
+    prefill_done_now: Vec<usize>,
+    /// Targets decoding this iteration.
+    decoding: Vec<usize>,
+    /// Per-slot decode inputs (token / position / active mask).
+    tokens: Vec<i32>,
+    pos: Vec<i32>,
+    active: Vec<f32>,
 }
 
 /// Point-in-time per-request view for differential tests: two engines
@@ -482,6 +510,7 @@ impl<B: ModelBackend> ServingEngine<B> {
             shares: TenantShares::default(),
             last_target_rids: Vec::new(),
             obs,
+            scratch: StepScratch::default(),
         }
     }
 
@@ -866,7 +895,9 @@ impl<B: ModelBackend> ServingEngine<B> {
         }
         self.obs_enter("step");
         let mut requests = std::mem::take(&mut self.requests);
-        let result = self.step_inner(&mut requests);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let result = self.step_inner(&mut requests, &mut scratch);
+        self.scratch = scratch;
         self.requests = requests;
         self.obs_exit();
         self.obs_count(|c| c.steps += 1);
@@ -967,9 +998,14 @@ impl<B: ModelBackend> ServingEngine<B> {
         }
     }
 
-    /// Steps 2–6 on a request set temporarily moved out of `self` (so
-    /// the helper methods can borrow the engine mutably alongside it).
-    fn step_inner(&mut self, requests: &mut Vec<Request>) -> Result<StepOutcome> {
+    /// Steps 2–6 on a request set (and scratch buffers) temporarily
+    /// moved out of `self`, so the helper methods can borrow the engine
+    /// mutably alongside them.
+    fn step_inner(
+        &mut self,
+        requests: &mut Vec<Request>,
+        scratch: &mut StepScratch,
+    ) -> Result<StepOutcome> {
         // ---- 2. memory pressure, then target-set selection ----
         // Starvation guard first, so eviction and selection both see
         // aged ranks; then OOM resolution; then the per-step tenant
@@ -983,22 +1019,28 @@ impl<B: ModelBackend> ServingEngine<B> {
             self.shares.accrue(&self.serve.fairness, self.backend.slots());
         }
         self.obs_enter("select_targets");
-        let target = match self.serve.selector {
-            Selector::Indexed => self.select_targets_indexed(requests),
-            Selector::Reference => self.select_targets_reference(requests),
-        };
+        match self.serve.selector {
+            Selector::Indexed => self.select_targets_indexed(requests, scratch),
+            Selector::Reference => {
+                // The oracle selector keeps its own (allocating) walk;
+                // only its result lands in the scratch target set.
+                let target = self.select_targets_reference(requests);
+                scratch.target.clear();
+                scratch.target.extend_from_slice(&target);
+            }
+        }
         self.obs_exit();
         self.obs_count(|c| c.select_targets += 1);
         self.last_target_rids.clear();
         self.last_target_rids
-            .extend(target.iter().map(|&i| requests[i].spec.rid));
+            .extend(scratch.target.iter().map(|&i| requests[i].spec.rid));
 
         // ---- 3. prefill budget ----
         self.obs_enter("prefill");
-        let mut prefill_done_now: Vec<usize> = Vec::new();
+        scratch.prefill_done_now.clear();
         let mut budget = self.serve.prefill_chunks_per_iter;
         let mut chunks_issued = 0usize;
-        for &idx in &target {
+        for &idx in &scratch.target {
             if budget == 0 {
                 break;
             }
@@ -1027,7 +1069,7 @@ impl<B: ModelBackend> ServingEngine<B> {
             }
             self.kv.charge(slot, r.spec.rid, r.resident_tokens());
             if r.prefill_done() {
-                prefill_done_now.push(idx);
+                scratch.prefill_done_now.push(idx);
             }
         }
         self.obs_exit();
@@ -1035,11 +1077,14 @@ impl<B: ModelBackend> ServingEngine<B> {
 
         // ---- 4. decode step ----
         let b = self.backend.slots();
-        let mut tokens = vec![self.cfg.model.pad_id; b];
-        let mut pos = vec![0i32; b];
-        let mut active = vec![0f32; b];
-        let mut decoding: Vec<usize> = Vec::new();
-        for &idx in &target {
+        scratch.tokens.clear();
+        scratch.tokens.resize(b, self.cfg.model.pad_id);
+        scratch.pos.clear();
+        scratch.pos.resize(b, 0);
+        scratch.active.clear();
+        scratch.active.resize(b, 0.0);
+        scratch.decoding.clear();
+        for &idx in &scratch.target {
             let r = &requests[idx];
             // Ready to decode: fully prefilled *before* this iteration
             // (requests whose prefill completed now get their first
@@ -1047,20 +1092,21 @@ impl<B: ModelBackend> ServingEngine<B> {
             if r.phase == Phase::Running
                 && r.prefill_done()
                 && r.generated >= 1
-                && !prefill_done_now.contains(&idx)
+                && !scratch.prefill_done_now.contains(&idx)
             {
                 let slot = r.slot.unwrap();
-                tokens[slot] = r.next_decode_token();
-                pos[slot] = r.next_decode_pos() as i32;
-                active[slot] = 1.0;
-                decoding.push(idx);
+                scratch.tokens[slot] = r.next_decode_token();
+                scratch.pos[slot] = r.next_decode_pos() as i32;
+                scratch.active[slot] = 1.0;
+                scratch.decoding.push(idx);
             }
         }
-        if !decoding.is_empty() {
+        if !scratch.decoding.is_empty() {
             self.obs_enter("decode");
-            self.backend.decode_step(&tokens, &pos, &active)?;
+            self.backend
+                .decode_step(&scratch.tokens, &scratch.pos, &scratch.active)?;
             self.obs_exit();
-            let n_active = decoding.len() as u64;
+            let n_active = scratch.decoding.len() as u64;
             self.obs_count(|c| {
                 c.decode_steps += 1;
                 c.decode_slot_steps += n_active;
@@ -1068,7 +1114,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         }
 
         // ---- 5. readout + bookkeeping ----
-        let stepped = !decoding.is_empty() || !prefill_done_now.is_empty();
+        let stepped = !scratch.decoding.is_empty() || !scratch.prefill_done_now.is_empty();
         let readout = if stepped {
             self.obs_enter("readout");
             let r = self.backend.read()?;
@@ -1084,7 +1130,7 @@ impl<B: ModelBackend> ServingEngine<B> {
         let now = self.clock.advance(cost);
 
         if let Some(readout) = readout {
-            for idx in prefill_done_now {
+            for &idx in &scratch.prefill_done_now {
                 let r = &mut requests[idx];
                 let slot = r.slot.unwrap();
                 let rid = r.spec.rid;
@@ -1107,7 +1153,7 @@ impl<B: ModelBackend> ServingEngine<B> {
                     self.reindex(&requests[idx]);
                 }
             }
-            for idx in decoding {
+            for &idx in &scratch.decoding {
                 let r = &mut requests[idx];
                 let slot = r.slot.unwrap();
                 // This step wrote KV at next_decode_pos (pre-increment).
@@ -1127,22 +1173,22 @@ impl<B: ModelBackend> ServingEngine<B> {
         self.metrics.peak_mem_tokens = self.metrics.peak_mem_tokens.max(self.kv.used_tokens());
         self.n_iter += 1;
 
-        let finished: Vec<FinishedRequest> = self
-            .finished_rids
-            .drain(..)
-            .map(|rid| {
-                let r = requests
-                    .iter()
-                    .find(|r| r.spec.rid == rid)
-                    .expect("finished rid tracked");
-                FinishedRequest {
-                    rid,
-                    latency: r.latency().unwrap_or(0.0),
-                    ttft: r.ttft().unwrap_or(0.0),
-                    n_tokens: r.generated,
-                }
-            })
-            .collect();
+        // O(1) per finish through the rid slab: `finish_if_done` never
+        // removes a position — only `step()`'s post-compaction does,
+        // after this runs. `with_capacity(0)` keeps the finish-nothing
+        // path allocation-free.
+        let mut finished: Vec<FinishedRequest> = Vec::with_capacity(self.finished_rids.len());
+        for k in 0..self.finished_rids.len() {
+            let rid = self.finished_rids[k];
+            let r = &requests[self.rid_pos.get(rid)];
+            finished.push(FinishedRequest {
+                rid,
+                latency: r.latency().unwrap_or(0.0),
+                ttft: r.ttft().unwrap_or(0.0),
+                n_tokens: r.generated,
+            });
+        }
+        self.finished_rids.clear();
 
         Ok(StepOutcome {
             now,
@@ -1504,59 +1550,59 @@ impl<B: ModelBackend> ServingEngine<B> {
     /// in-selection discards never change a victim's rank — TRAIL is
     /// the only discarding policy and its rank ignores the
     /// Running→Discarded flip).
-    fn select_targets_indexed(&mut self, requests: &mut [Request]) -> Vec<usize> {
+    fn select_targets_indexed(&mut self, requests: &mut [Request], scratch: &mut StepScratch) {
         let shares_on = self.serve.fairness.shares_active();
         let b = self.backend.slots();
         let now = self.clock.now();
-        let mut target: Vec<usize> = Vec::with_capacity(b);
-        let mut chosen = vec![false; requests.len()];
-        let mut held: Vec<Entry> = Vec::new();
+        scratch.target.clear();
+        scratch.chosen.clear();
+        scratch.chosen.resize(requests.len(), false);
+        scratch.held.clear();
         // Popped candidates whose tenant was out of credit, pop order
         // (the share-deferral mirror of the reference walk).
-        let mut deferred: Vec<Entry> = Vec::new();
-        while target.len() < b {
+        scratch.deferred.clear();
+        while scratch.target.len() < b {
             let Some(ent) = self.sched_idx.pop() else { break };
             let idx = self.rid_pos.get(ent.rank.rid);
             if shares_on && !ent.rank.locked && !self.shares.can_take(requests[idx].tenant) {
-                deferred.push(ent);
+                scratch.deferred.push(ent);
                 continue;
             }
             self.obs_enter("ensure_resident");
-            let ok = self.ensure_resident_indexed(requests, idx, &chosen);
+            let ok = self.ensure_resident_indexed(requests, idx, &scratch.chosen);
             self.obs_exit();
             if ok {
-                chosen[idx] = true;
-                target.push(idx);
+                scratch.chosen[idx] = true;
+                scratch.target.push(idx);
                 if shares_on {
                     self.shares.take(requests[idx].tenant, b);
                 }
             }
-            held.push(ent);
+            scratch.held.push(ent);
         }
         // Second pass over deferred candidates, pop order (identical to
         // the reference walk over its deferred list).
-        for ent in &deferred {
-            if target.len() >= b {
+        for di in 0..scratch.deferred.len() {
+            if scratch.target.len() >= b {
                 break;
             }
-            let idx = self.rid_pos.get(ent.rank.rid);
+            let idx = self.rid_pos.get(scratch.deferred[di].rank.rid);
             self.obs_enter("ensure_resident");
-            let ok = self.ensure_resident_indexed(requests, idx, &chosen);
+            let ok = self.ensure_resident_indexed(requests, idx, &scratch.chosen);
             self.obs_exit();
             if ok {
-                chosen[idx] = true;
-                target.push(idx);
+                scratch.chosen[idx] = true;
+                scratch.target.push(idx);
                 self.shares.take(requests[idx].tenant, b);
             }
         }
-        for ent in held {
+        for ent in scratch.held.drain(..) {
             self.sched_idx.reinsert(ent);
         }
-        for ent in deferred {
+        for ent in scratch.deferred.drain(..) {
             self.sched_idx.reinsert(ent);
         }
-        self.apply_phase_transitions(requests, &chosen, now);
-        target
+        self.apply_phase_transitions(requests, &scratch.chosen, now);
     }
 
     /// Make `idx` resident (slot + pool room), discarding worse-ranked

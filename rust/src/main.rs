@@ -42,9 +42,10 @@ fn main() {
         Some("prefix") => cmd_prefix(&args),
         Some("pred") => cmd_pred(&args),
         Some("obs") => cmd_obs(&args),
+        Some("scale") => cmd_scale(&args),
         _ => {
             eprintln!(
-                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair|prefix|pred|obs> [options]\n\
+                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair|prefix|pred|obs|scale> [options]\n\
                  \n\
                  serve    — run a serving benchmark against the AOT model\n\
                  \x20        --policy fcfs|sjf|trail|srpt|trail-c<M>  (default trail)\n\
@@ -69,6 +70,7 @@ fn main() {
                  \x20        [--fairness-report]\n\
                  \x20        [--out BENCH_sim.json] [--trace-out trace.jsonl]\n\
                  \x20        [--trace-jsonl events.jsonl] [--timings-json timings.json]\n\
+                 \x20        [--workers <n>]\n\
                  sched    — scheduler-scale selector comparison (BENCH_sched.json):\n\
                  \x20        reference full-sort vs incremental rank index over the\n\
                  \x20        scale-1k / scale-10k / scale-replicas grid\n\
@@ -91,6 +93,12 @@ fn main() {
                  \x20        request-lifecycle tracing + phase timing on\n\
                  \x20        [--out BENCH_obs.json] [--trace-jsonl events.jsonl]\n\
                  \x20        [--timings-json timings.json]\n\
+                 scale    — parallel-driver scale grid (BENCH_scale.json,\n\
+                 \x20        docs/simlab.md): scale scenarios x worker counts at 8\n\
+                 \x20        replicas; rows are worker-invariant (parallel ==\n\
+                 \x20        serial byte-for-byte), wall speedup goes to the\n\
+                 \x20        timings file  [--scenarios scale-10k,scale-100k]\n\
+                 \x20        [--out BENCH_scale.json] [--timings-json timings.json]\n\
                  info     — print artifact/config summary"
             );
             2
@@ -523,12 +531,28 @@ fn cmd_sim(args: &Args) -> i32 {
             }
         },
     };
+    // Worker-thread override for the parallel driver (docs/simlab.md).
+    // Byte-identity makes this safe on every cell: migration-on cells
+    // just fall back to the serial loop.
+    let workers_override = match args.str_or("workers", "") {
+        "" => None,
+        s => match s.parse::<usize>() {
+            Ok(v) if v >= 1 => Some(v),
+            _ => {
+                eprintln!("bad --workers '{s}' (want an integer >= 1)");
+                return 2;
+            }
+        },
+    };
     for sc in &mut sweep.scenarios {
         if let Some(n) = n_override {
             sc.n = n;
         }
         if let Some(seed) = seed_override {
             sc.seed = seed;
+        }
+        if let Some(w) = workers_override {
+            sc.workers = w;
         }
     }
 
@@ -593,7 +617,8 @@ fn cmd_sim(args: &Args) -> i32 {
             eprintln!("write {out} failed: {e}");
             return 1;
         }
-        println!("report ({} rows, schema {}) -> {out}", report.rows.len(), trail::sim::SCHEMA_VERSION);
+        let schema = trail::sim::SCHEMA_VERSION;
+        println!("report ({} rows, schema {schema}) -> {out}", report.rows.len());
     }
     0
 }
@@ -845,6 +870,98 @@ fn cmd_obs(args: &Args) -> i32 {
             "report ({} rows, schema {}) -> {path}",
             out.report.rows.len(),
             trail::sim::OBS_SCHEMA_VERSION
+        );
+    }
+    0
+}
+
+fn cmd_scale(args: &Args) -> i32 {
+    // Embedded config, like the other bench subcommands: the checked-in
+    // BENCH_scale.json and the Python mirror pin the embedded defaults.
+    let cfg = Config::embedded_default();
+    let names_arg = args.str_or("scenarios", "").to_string();
+    let names: Vec<&str> = if names_arg.is_empty() {
+        trail::sim::SCALE_SCENARIOS.to_vec()
+    } else {
+        names_arg.split(',').filter(|s| !s.is_empty()).collect()
+    };
+    if names.is_empty() {
+        eprintln!("scale needs at least one scenario");
+        return 2;
+    }
+    let out = match trail::sim::run_scale_sweep(&cfg, &names) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("scale sweep failed: {e}");
+            return 1;
+        }
+    };
+    print!("{}", out.report.render_table());
+    // Wall-clock scaling on the console: requests per second of wall
+    // time per worker count, speedup vs each scenario's 1-worker cell.
+    // None of this enters the pinned report (wall time is never
+    // byte-stable); the JSON copy goes to --timings-json for CI.
+    let mut t = Table::new(&["scenario", "workers", "n", "wall_s", "req/s_wall", "speedup"]);
+    for cw in &out.cell_walls {
+        let base = out
+            .cell_walls
+            .iter()
+            .find(|c| c.scenario == cw.scenario && c.workers == 1)
+            .map(|c| c.wall_s)
+            .unwrap_or(cw.wall_s);
+        t.row(vec![
+            cw.scenario.clone(),
+            cw.workers.to_string(),
+            cw.n.to_string(),
+            f(cw.wall_s, 3),
+            f(cw.n as f64 / cw.wall_s.max(1e-9), 1),
+            f(base / cw.wall_s.max(1e-9), 2),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let timings_json = args.str_or("timings-json", "").to_string();
+    if !timings_json.is_empty() {
+        use trail::util::json::Json;
+        let cells = Json::Arr(
+            out.cell_walls
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("scenario", Json::str(&c.scenario)),
+                        ("workers", Json::Num(c.workers as f64)),
+                        ("n", Json::Num(c.n as f64)),
+                        ("wall_s", Json::Num(c.wall_s)),
+                        ("req_per_s_wall", Json::Num(c.n as f64 / c.wall_s.max(1e-9))),
+                    ])
+                })
+                .collect(),
+        );
+        let mut pairs = vec![
+            ("schema", Json::str(trail::obs::TIMING_SCHEMA_VERSION)),
+            ("cells", cells),
+            ("phases", out.phase_counts.phase_rows_json(&out.cost)),
+        ];
+        if let Some(ts) = &out.timing {
+            pairs.push(("total_wall_s", Json::Num(ts.total_wall_s())));
+        }
+        let doc = Json::obj(pairs);
+        if let Err(e) = std::fs::write(&timings_json, format!("{}\n", doc.to_string())) {
+            eprintln!("write {timings_json} failed: {e}");
+            return 1;
+        }
+        println!("scale timings -> {timings_json}");
+    }
+    let path = args.str_or("out", "").to_string();
+    if !path.is_empty() {
+        if let Err(e) = out.report.save(&path) {
+            eprintln!("write {path} failed: {e}");
+            return 1;
+        }
+        println!(
+            "report ({} rows, schema {}) -> {path}",
+            out.report.rows.len(),
+            trail::sim::SCALE_SCHEMA_VERSION
         );
     }
     0

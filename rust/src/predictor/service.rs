@@ -16,7 +16,11 @@ use crate::runtime::probe_weights::ProbeWeights;
 use crate::runtime::Readout;
 use crate::util::rng::SplitMix64;
 
-pub trait Predictor {
+/// `Send` so a `ServingEngine` (which boxes its predictor) can move to
+/// a worker thread — both the threaded `ReplicaPool` and the sharded
+/// `sim::SimDriver` rely on it. Every implementation is plain owned
+/// data (weight vectors, per-bucket EMAs, a seeded RNG).
+pub trait Predictor: Send {
     /// Called at admission: set `initial_pred` / `pred_remaining` (and
     /// reset the smoother) from prompt-only information.
     fn init_request(&mut self, req: &mut Request);

@@ -26,7 +26,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -99,6 +99,12 @@ impl ServerStats {
     }
 }
 
+/// Default per-connection socket timeout: a client that connects and
+/// then stalls mid-request (or never reads its response) must not pin a
+/// handler thread forever — with a `ThreadPool` of N workers, N stalled
+/// sockets would otherwise wedge the whole server.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
 pub struct HttpServer {
     listener: TcpListener,
     pool: ThreadPool,
@@ -108,6 +114,8 @@ pub struct HttpServer {
     stop: Arc<AtomicBool>,
     /// Bind time, for `/healthz` `uptime_s`.
     started: Instant,
+    /// Per-connection read/write deadline (see [`DEFAULT_IO_TIMEOUT`]).
+    io_timeout: Duration,
 }
 
 impl HttpServer {
@@ -135,7 +143,14 @@ impl HttpServer {
             next_rid: AtomicU64::new(1),
             stop: Arc::new(AtomicBool::new(false)),
             started: Instant::now(),
+            io_timeout: DEFAULT_IO_TIMEOUT,
         })
+    }
+
+    /// Override the per-connection socket timeout (tests use a short
+    /// one to exercise the 408 path without waiting ten seconds).
+    pub fn set_io_timeout(&mut self, timeout: Duration) {
+        self.io_timeout = timeout;
     }
 
     pub fn local_addr(&self) -> String {
@@ -162,8 +177,9 @@ impl HttpServer {
             let stats = Arc::clone(&self.stats);
             let rid = self.next_rid.fetch_add(1, Ordering::Relaxed);
             let started = self.started;
+            let io_timeout = self.io_timeout;
             self.pool.execute(move || {
-                let _ = handle_connection(stream, sink, stats, rid, started);
+                let _ = handle_connection(stream, sink, stats, rid, started, io_timeout);
             });
         }
     }
@@ -247,14 +263,47 @@ fn render_metrics(stats: &ServerStats, reps: &[ReplicaMetrics], uptime_s: f64) -
 /// 404-vs-405 distinction.
 const KNOWN_ROUTES: [&str; 4] = ["/generate", "/healthz", "/metrics", "/stats"];
 
+/// Did this transport error come from the socket deadline expiring?
+/// Unix reports `WouldBlock` for a timed-out blocking read; Windows
+/// reports `TimedOut` — treat both as the client stalling.
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    })
+}
+
 fn handle_connection(
     mut stream: TcpStream,
     sink: Arc<dyn JobSink>,
     stats: Arc<ServerStats>,
     rid: u64,
     started: Instant,
+    io_timeout: Duration,
 ) -> Result<()> {
-    let (method, path, body) = read_request(&mut stream)?;
+    // Arm the deadline before touching the socket: every read below
+    // (request line, headers, body) and every response write inherits
+    // it, so a stalled or dead-slow client releases this worker thread
+    // after `io_timeout` instead of holding it indefinitely.
+    stream.set_read_timeout(Some(io_timeout))?;
+    stream.set_write_timeout(Some(io_timeout))?;
+    let (method, path, body) = match read_request(&mut stream) {
+        Ok(parts) => parts,
+        Err(e) if is_timeout(&e) => {
+            // Best-effort 408 — the peer may still be reading even
+            // though it stopped writing; if the write also times out
+            // the error below stands either way.
+            let _ = respond(
+                &mut stream,
+                408,
+                &Json::obj(vec![("error", Json::str("request timed out"))]),
+            );
+            return Err(e);
+        }
+        Err(e) => return Err(e),
+    };
     match (method.as_str(), path.as_str()) {
         ("GET", "/healthz") => {
             let uptime = started.elapsed().as_secs_f64();
@@ -437,6 +486,7 @@ fn respond_raw(stream: &mut TcpStream, code: u16, content_type: &str, body: &str
         400 => "400 Bad Request",
         404 => "404 Not Found",
         405 => "405 Method Not Allowed",
+        408 => "408 Request Timeout",
         413 => "413 Payload Too Large",
         503 => "503 Service Unavailable",
         _ => "500 Internal Server Error",
@@ -644,6 +694,41 @@ mod tests {
         // Unknown paths stay 404.
         let resp = raw_get(&addr, "/nope");
         assert!(resp.starts_with("HTTP/1.1 404"), "got: {resp}");
+
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(&addr);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn stalled_client_gets_408_and_frees_the_worker() {
+        let (mut server, _job_rx) = HttpServer::bind("127.0.0.1:0", 1).unwrap();
+        server.set_io_timeout(Duration::from_millis(100));
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let srv = std::thread::spawn(move || server.serve());
+
+        // Open a connection, send half a request, then stall. The
+        // server must answer 408 after the deadline instead of parking
+        // its (only) worker thread on the read forever.
+        let mut slow = TcpStream::connect(&addr).unwrap();
+        slow.write_all(b"POST /generate HTTP/1.1\r\nContent-Le").unwrap();
+        let mut buf = String::new();
+        BufReader::new(slow).read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 408"), "got: {buf}");
+        assert!(buf.contains("request timed out"), "got: {buf}");
+
+        // A connection that sends *nothing* hits the same deadline on
+        // the request line itself.
+        let silent = TcpStream::connect(&addr).unwrap();
+        let mut buf = String::new();
+        BufReader::new(silent).read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 408"), "got: {buf}");
+
+        // The single worker was released both times: a well-formed
+        // request on the same server still gets served.
+        let resp = raw_get(&addr, "/stats");
+        assert!(resp.starts_with("HTTP/1.1 200"), "got: {resp}");
 
         stop.store(true, Ordering::Relaxed);
         let _ = TcpStream::connect(&addr);

@@ -3,8 +3,8 @@
 //! `ReplicaPool` (the online path) runs one thread per engine on the
 //! wall clock — every multi-replica number it produces is scheduling
 //! noise. `SimDriver` replaces it for offline runs: all replicas live on
-//! one thread and one shared *virtual* timeline, and the driver
-//! interleaves their `step()` calls in virtual-time order:
+//! one shared *virtual* timeline, and the driver interleaves their
+//! `step()` calls in virtual-time order:
 //!
 //! 1. the next event is either the earliest pending trace arrival or the
 //!    lowest engine clock among replicas with schedulable work (ties
@@ -22,9 +22,46 @@
 //! donor must either have busy residents or at least two waiting
 //! requests, so a just-migrated request never ping-pongs straight back.
 //!
-//! Everything is sequential and seeded: identical `(engines, dispatch,
-//! trace)` inputs produce bit-identical outcomes, which is what lets
-//! `sim::report` pin benchmark JSON byte-for-byte.
+//! Everything is seeded: identical `(engines, dispatch, trace)` inputs
+//! produce bit-identical outcomes, which is what lets `sim::report` pin
+//! benchmark JSON byte-for-byte.
+//!
+//! ## Parallel execution (`workers > 1`)
+//!
+//! Replicas interact only at dispatch/migration events, and with
+//! migration off the serial loop executes worked steps in strict
+//! `(t_pre, replica)` order: a step at clock `t_pre` runs only after
+//! every arrival with `at <= t_pre` has been admitted (the arrival
+//! branch fires first otherwise) and before any other replica's clock
+//! falls below `t_pre` (clocks are monotone and the scan always picks
+//! the minimum, lowest index first). So it is enough to record every
+//! finish as `(t_pre, replica, seq)` while replicas run concurrently
+//! and do ONE global sort at the end — the merged stream reproduces the
+//! serial driver's sample push order bit-for-bit. Two modes exploit
+//! that (see docs/simlab.md):
+//!
+//! * **Sharded** (round-robin dispatch): `DispatchPolicy::pick` reads
+//!   only the snapshot *count* under round-robin, so arrival `k` is
+//!   pre-assigned to replica `k % R` and every replica replays its own
+//!   arrival stream to completion on a worker thread with zero
+//!   synchronization. This is the `scale-100k` / `scale-1m` path.
+//! * **Epoch** (JSQ / least-work / cache-affinity): between consecutive
+//!   arrivals, all replicas advance in parallel until their clocks
+//!   reach the arrival time (a deterministic virtual-time barrier);
+//!   the arrival itself is then dispatched serially over snapshots
+//!   identical to the serial driver's, because each replica has
+//!   executed exactly the steps with `t_pre` below the arrival.
+//!
+//! With migration enabled the driver falls back to the serial loop: a
+//! rebalance pulls the receiver's clock forward while the donor's state
+//! changes mid-timeline, coupling replicas between arrivals in a way
+//! the end-of-run merge order cannot reproduce. `rust/tests/
+//! parallel_diff.rs` pins parallel == serial across a policy × scenario
+//! × replicas × workers grid.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
 
 use anyhow::Result;
 
@@ -113,12 +150,68 @@ impl SimOutcome {
     }
 }
 
+/// One request finish recorded off the serial path. `(t, replica, seq)`
+/// is the serial step order (module docs), so a single global sort
+/// reproduces the serial driver's `Samples` push order exactly.
+#[derive(Clone, Copy, Debug)]
+struct FinishRec {
+    /// Engine clock *before* the step that finished the request.
+    t: f64,
+    replica: usize,
+    /// Per-replica finish sequence (monotone over the replica's steps).
+    seq: u64,
+    rid: u64,
+    latency: f64,
+    ttft: f64,
+    n_tokens: usize,
+}
+
+/// Record one finished request into the outcome accumulators — the one
+/// place every execution mode pushes samples, so the float push order
+/// (and the zero-token slowdown guard) cannot drift between modes.
+fn record_finish(
+    latency: &mut Samples,
+    ttft: &mut Samples,
+    per_tenant: &mut [TenantOutcome],
+    rid_tenant: &HashMap<u64, u32>,
+    lat: f64,
+    tt: f64,
+    rid: u64,
+    n_tokens: usize,
+) {
+    latency.push(lat);
+    ttft.push(tt);
+    let t = &mut per_tenant[rid_tenant[&rid] as usize];
+    t.n += 1;
+    t.latency.push(lat);
+    t.ttft.push(tt);
+    // A degenerate finish can report zero generated tokens; guard the
+    // division so the slowdown sample stays finite instead of feeding
+    // NaN/inf into the percentile sort.
+    t.slowdown.push(lat / n_tokens.max(1) as f64);
+}
+
+/// An all-zero snapshot vector for policies that never read snapshot
+/// contents (round-robin reads only the count).
+fn zero_snaps(n: usize) -> Vec<ReplicaSnapshot> {
+    vec![
+        ReplicaSnapshot {
+            queued: 0,
+            unseen: 0,
+            pred_remaining: 0.0,
+        };
+        n
+    ]
+}
+
 /// N engines co-simulated on one shared virtual timeline.
 pub struct SimDriver<B: ModelBackend> {
     engines: Vec<ServingEngine<B>>,
     dispatch: DispatchPolicy,
     migration: bool,
     unseen_estimate: f64,
+    /// Worker threads for the parallel modes (1 = serial loop).
+    workers: usize,
     rr: u64,
     n_migrations: u64,
 }
@@ -132,32 +225,51 @@ impl<B: ModelBackend> SimDriver<B> {
             dispatch,
             migration,
             unseen_estimate: DEFAULT_UNSEEN_JOB_ESTIMATE,
+            workers: 1,
             rr: 0,
             n_migrations: 0,
         }
+    }
+
+    /// Worker threads for `run_with_workers` (clamped to the replica
+    /// count at run time; ≤ 1 keeps the serial loop).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
     }
 
     pub fn n_replicas(&self) -> usize {
         self.engines.len()
     }
 
-    /// Serve a time-sorted trace to completion; consumes the driver's
-    /// engine state (a driver is single-use, like one benchmark run).
+    /// Serve a time-sorted trace to completion on the serial event loop;
+    /// consumes the driver's engine state (a driver is single-use, like
+    /// one benchmark run). The parallel modes are proven byte-identical
+    /// to this path — it stays the reference implementation.
     pub fn run(&mut self, trace: &[TraceEntry]) -> Result<SimOutcome> {
         let n_total = trace.len();
+        let n_rep = self.engines.len();
         let mut next = 0usize;
         let mut latency = Samples::new();
         let mut ttft = Samples::new();
         let mut finished = 0usize;
-        let rid_tenant: std::collections::HashMap<u64, u32> =
-            trace.iter().map(|e| (e.spec.rid, e.tenant)).collect();
+        let rid_tenant: HashMap<u64, u32> = trace.iter().map(|e| (e.spec.rid, e.tenant)).collect();
         let n_tenants = trace.iter().map(|e| e.tenant + 1).max().unwrap_or(0) as usize;
         let mut per_tenant: Vec<TenantOutcome> =
             (0..n_tenants).map(|_| TenantOutcome::default()).collect();
+        // Snapshot cache: round-robin dispatch never reads snapshot
+        // contents, so it skips `status()` entirely; the other policies
+        // recompute a replica's snapshot only after something changed it
+        // (step / admit / migration). Byte-identical to a per-arrival
+        // full rebuild because `from_status` is a pure function of
+        // engine state.
+        let rr_dispatch = self.dispatch == DispatchPolicy::RoundRobin;
+        let mut snaps = zero_snaps(n_rep);
+        let mut dirty = vec![true; n_rep];
         // A replica whose step was a no-op (memory-blocked) cannot make
         // progress until an admission or migration changes its state;
         // exclude it from the event loop until then.
-        let mut stalled = vec![false; self.engines.len()];
+        let mut stalled = vec![false; n_rep];
         loop {
             let mut active: Option<(f64, usize)> = None;
             for (i, e) in self.engines.iter().enumerate() {
@@ -174,11 +286,14 @@ impl<B: ModelBackend> SimDriver<B> {
             if next < n_total && active.map_or(true, |(t, _)| trace[next].at <= t) {
                 let entry = &trace[next];
                 next += 1;
-                let snaps: Vec<ReplicaSnapshot> = self
-                    .engines
-                    .iter()
-                    .map(|e| ReplicaSnapshot::from_status(&e.status()))
-                    .collect();
+                if !rr_dispatch {
+                    for (i, d) in dirty.iter_mut().enumerate() {
+                        if *d {
+                            snaps[i] = ReplicaSnapshot::from_status(&self.engines[i].status());
+                            *d = false;
+                        }
+                    }
+                }
                 // Cache-affinity in co-sim is *exact*: the driver owns the
                 // engines, so it asks each replica's prefix trie directly
                 // (the threaded pool approximates this with an
@@ -198,6 +313,7 @@ impl<B: ModelBackend> SimDriver<B> {
                 self.engines[idx].sync_clock(entry.at);
                 self.engines[idx].admit_from(entry.spec.clone(), Some(entry.at), entry.tenant);
                 stalled[idx] = false;
+                dirty[idx] = true;
                 continue;
             }
 
@@ -212,6 +328,7 @@ impl<B: ModelBackend> SimDriver<B> {
                         .map(|e| e.now())
                         .fold(0.0f64, f64::max);
                     if self.migration && self.rebalance(now, &mut stalled) {
+                        dirty.fill(true);
                         continue;
                     }
                     anyhow::bail!(
@@ -224,25 +341,42 @@ impl<B: ModelBackend> SimDriver<B> {
 
             // ---- drain rebalancing, then one step ----
             if self.migration && self.rebalance(now, &mut stalled) {
+                dirty.fill(true);
                 continue; // the event order may have changed
             }
             let outcome = self.engines[i].step()?;
             if !outcome.worked {
                 stalled[i] = true;
             }
+            dirty[i] = true;
             for f in &outcome.finished {
                 finished += 1;
-                latency.push(f.latency);
-                ttft.push(f.ttft);
-                let tenant = rid_tenant[&f.rid] as usize;
-                per_tenant[tenant].n += 1;
-                per_tenant[tenant].latency.push(f.latency);
-                per_tenant[tenant].ttft.push(f.ttft);
-                per_tenant[tenant]
-                    .slowdown
-                    .push(f.latency / f.n_tokens as f64);
+                record_finish(
+                    &mut latency,
+                    &mut ttft,
+                    &mut per_tenant,
+                    &rid_tenant,
+                    f.latency,
+                    f.ttft,
+                    f.rid,
+                    f.n_tokens,
+                );
             }
         }
+        self.collect_outcome(finished, n_total, latency, ttft, per_tenant)
+    }
+
+    /// Shared tail of every execution mode: validate completion, sum the
+    /// per-engine metrics in replica-index order, stamp the driver's
+    /// dispatch count, and merge+sort the flight-recorder streams.
+    fn collect_outcome(
+        &mut self,
+        finished: usize,
+        n_total: usize,
+        latency: Samples,
+        ttft: Samples,
+        per_tenant: Vec<TenantOutcome>,
+    ) -> Result<SimOutcome> {
         if finished != n_total {
             anyhow::bail!("co-sim lost requests: {finished} finished of {n_total}");
         }
@@ -311,6 +445,42 @@ impl<B: ModelBackend> SimDriver<B> {
         })
     }
 
+    /// Sort the concurrently-recorded finishes into the serial push
+    /// order and build the outcome (module docs: the serial worked-step
+    /// sequence is strictly ordered by `(t_pre, replica)`, and `seq`
+    /// preserves the within-replica finish order).
+    fn merge_finishes(
+        &mut self,
+        mut recs: Vec<FinishRec>,
+        trace: &[TraceEntry],
+        n_total: usize,
+    ) -> Result<SimOutcome> {
+        recs.sort_by(|a, b| {
+            a.t.total_cmp(&b.t)
+                .then(a.replica.cmp(&b.replica))
+                .then(a.seq.cmp(&b.seq))
+        });
+        let rid_tenant: HashMap<u64, u32> = trace.iter().map(|e| (e.spec.rid, e.tenant)).collect();
+        let n_tenants = trace.iter().map(|e| e.tenant + 1).max().unwrap_or(0) as usize;
+        let mut per_tenant: Vec<TenantOutcome> =
+            (0..n_tenants).map(|_| TenantOutcome::default()).collect();
+        let mut latency = Samples::new();
+        let mut ttft = Samples::new();
+        for r in &recs {
+            record_finish(
+                &mut latency,
+                &mut ttft,
+                &mut per_tenant,
+                &rid_tenant,
+                r.latency,
+                r.ttft,
+                r.rid,
+                r.n_tokens,
+            );
+        }
+        self.collect_outcome(recs.len(), n_total, latency, ttft, per_tenant)
+    }
+
     /// Move admitted-but-waiting work onto drained replicas. Returns true
     /// if anything moved. One request per drained replica per call;
     /// donors are tried from the largest non-resident backlog down (a
@@ -355,5 +525,396 @@ impl<B: ModelBackend> SimDriver<B> {
             }
         }
         moved
+    }
+}
+
+/// Per-replica worker state for the epoch mode. Exactly one worker
+/// touches a shard during an epoch and only the dispatching thread
+/// touches it between barriers, so the mutex is uncontended — it exists
+/// to satisfy the borrow checker, not to arbitrate.
+struct Shard<B: ModelBackend> {
+    engine: ServingEngine<B>,
+    stalled: bool,
+    /// Engine state changed since its snapshot was last taken.
+    dirty: bool,
+    seq: u64,
+    recs: Vec<FinishRec>,
+    err: Option<anyhow::Error>,
+}
+
+/// Advance one replica until its clock reaches `until`, it stalls, or
+/// it runs out of schedulable work — exactly the steps the serial loop
+/// would execute for it before the event at `until` (worked steps
+/// strictly advance the clock, so this always terminates).
+fn advance_shard<B: ModelBackend>(sh: &mut Shard<B>, replica: usize, until: f64) {
+    while !sh.stalled && sh.err.is_none() && sh.engine.any_schedulable() && sh.engine.now() < until
+    {
+        let t_pre = sh.engine.now();
+        match sh.engine.step() {
+            Err(e) => {
+                sh.err = Some(e);
+                return;
+            }
+            Ok(out) => {
+                sh.dirty = true;
+                if !out.worked {
+                    sh.stalled = true;
+                }
+                for f in &out.finished {
+                    sh.recs.push(FinishRec {
+                        t: t_pre,
+                        replica,
+                        seq: sh.seq,
+                        rid: f.rid,
+                        latency: f.latency,
+                        ttft: f.ttft,
+                        n_tokens: f.n_tokens,
+                    });
+                    sh.seq += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Run one replica's entire timeline against its pre-assigned arrival
+/// stream (sharded mode). The local admit-vs-step order mirrors the
+/// serial loop: an arrival at `a` lands after every step with
+/// `t_pre < a` and before any step with `t_pre >= a`.
+fn run_replica_shard<B: ModelBackend>(
+    e: &mut ServingEngine<B>,
+    trace: &[TraceEntry],
+    arrivals: &[usize],
+    replica: usize,
+    recs: &mut Vec<FinishRec>,
+) -> Result<()> {
+    let mut next = 0usize;
+    let mut stalled = false;
+    let mut seq = 0u64;
+    loop {
+        let can_step = !stalled && e.any_schedulable();
+        if next < arrivals.len() && (!can_step || trace[arrivals[next]].at <= e.now()) {
+            let entry = &trace[arrivals[next]];
+            next += 1;
+            e.sync_clock(entry.at);
+            e.admit_from(entry.spec.clone(), Some(entry.at), entry.tenant);
+            stalled = false;
+            continue;
+        }
+        if !can_step {
+            if e.any_schedulable() {
+                anyhow::bail!(
+                    "co-sim stalled: requests pending but no replica can make progress \
+                     (KV pool too small for any admission?)"
+                );
+            }
+            break;
+        }
+        let t_pre = e.now();
+        let out = e.step()?;
+        if !out.worked {
+            stalled = true;
+        }
+        for f in &out.finished {
+            recs.push(FinishRec {
+                t: t_pre,
+                replica,
+                seq,
+                rid: f.rid,
+                latency: f.latency,
+                ttft: f.ttft,
+                n_tokens: f.n_tokens,
+            });
+            seq += 1;
+        }
+    }
+    Ok(())
+}
+
+impl<B: ModelBackend + Send> SimDriver<B> {
+    /// Serve the trace using up to `workers` threads, byte-identical to
+    /// [`SimDriver::run`]. Falls back to the serial loop when a single
+    /// worker (or replica) makes parallelism pointless, and when
+    /// migration is on — rebalancing couples replicas between arrivals
+    /// in a way the end-of-run merge order cannot reproduce, so the
+    /// worker knob is ignored there (docs/simlab.md).
+    pub fn run_with_workers(&mut self, trace: &[TraceEntry]) -> Result<SimOutcome> {
+        let workers = self.workers.min(self.engines.len());
+        if workers <= 1 || self.migration || trace.is_empty() {
+            return self.run(trace);
+        }
+        if self.dispatch == DispatchPolicy::RoundRobin {
+            self.run_sharded(trace, workers)
+        } else {
+            self.run_epoch(trace, workers)
+        }
+    }
+
+    /// Round-robin sharded mode: arrival `k` goes to replica `k % R`
+    /// (exactly what the serial `pick` computes), so replicas never
+    /// exchange information and each runs to completion on its worker
+    /// with zero synchronization.
+    fn run_sharded(&mut self, trace: &[TraceEntry], workers: usize) -> Result<SimOutcome> {
+        let n_total = trace.len();
+        let n_rep = self.engines.len();
+        let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); n_rep];
+        for k in 0..n_total {
+            assigned[k % n_rep].push(k);
+        }
+        let chunk = (n_rep + workers - 1) / workers;
+        let results: Vec<Result<Vec<FinishRec>>> = std::thread::scope(|s| {
+            let assigned = &assigned;
+            let mut handles = Vec::new();
+            for (ci, engines) in self.engines.chunks_mut(chunk).enumerate() {
+                let base = ci * chunk;
+                handles.push(s.spawn(move || -> Result<Vec<FinishRec>> {
+                    let mut recs: Vec<FinishRec> = Vec::new();
+                    for (off, e) in engines.iter_mut().enumerate() {
+                        run_replica_shard(e, trace, &assigned[base + off], base + off, &mut recs)?;
+                    }
+                    Ok(recs)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sharded sim worker panicked"))
+                .collect()
+        });
+        let mut all: Vec<FinishRec> = Vec::with_capacity(n_total);
+        for r in results {
+            all.extend(r?);
+        }
+        // One dispatch decision per arrival, same as the serial loop.
+        self.rr = n_total as u64;
+        self.merge_finishes(all, trace, n_total)
+    }
+
+    /// Epoch-barrier mode for snapshot-reading policies: all replicas
+    /// advance in parallel to each arrival's virtual time, then the
+    /// arrival is dispatched serially over snapshots identical to the
+    /// serial driver's (each replica has executed exactly the steps
+    /// with `t_pre` below the arrival time, and no later ones).
+    fn run_epoch(&mut self, trace: &[TraceEntry], workers: usize) -> Result<SimOutcome> {
+        let n_total = trace.len();
+        let n_rep = self.engines.len();
+        let chunk = (n_rep + workers - 1) / workers;
+        let shards: Vec<Mutex<Shard<B>>> = std::mem::take(&mut self.engines)
+            .into_iter()
+            .map(|engine| {
+                Mutex::new(Shard {
+                    engine,
+                    stalled: false,
+                    dirty: true,
+                    seq: 0,
+                    recs: Vec::new(),
+                    err: None,
+                })
+            })
+            .collect();
+        // Workers + the dispatching thread rendezvous twice per epoch:
+        // once to open it (target time published), once to close it
+        // (every assigned clock at/past the target). `done` ends the
+        // pool after the final drain epoch.
+        let barrier = Barrier::new(workers + 1);
+        let target = AtomicU64::new(0);
+        let done = AtomicBool::new(false);
+
+        std::thread::scope(|s| {
+            for wi in 0..workers {
+                let shards = &shards;
+                let barrier = &barrier;
+                let target = &target;
+                let done = &done;
+                s.spawn(move || loop {
+                    barrier.wait();
+                    if done.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let until = f64::from_bits(target.load(Ordering::Acquire));
+                    let lo = wi * chunk;
+                    for rep in lo..(lo + chunk).min(n_rep) {
+                        let mut sh = shards[rep].lock().expect("shard poisoned");
+                        advance_shard(&mut sh, rep, until);
+                    }
+                    barrier.wait();
+                });
+            }
+
+            let epoch = |until: f64| {
+                target.store(until.to_bits(), Ordering::Release);
+                barrier.wait();
+                barrier.wait();
+            };
+            let mut snaps = zero_snaps(n_rep);
+            for entry in trace {
+                epoch(entry.at);
+                for (i, m) in shards.iter().enumerate() {
+                    let mut sh = m.lock().expect("shard poisoned");
+                    if sh.dirty {
+                        snaps[i] = ReplicaSnapshot::from_status(&sh.engine.status());
+                        sh.dirty = false;
+                    }
+                }
+                let idx = if self.dispatch == DispatchPolicy::CacheAffinity {
+                    let lens: Vec<usize> = shards
+                        .iter()
+                        .map(|m| {
+                            m.lock()
+                                .expect("shard poisoned")
+                                .engine
+                                .shared_prefix_len(&entry.spec.prompt)
+                        })
+                        .collect();
+                    self.dispatch
+                        .pick_with_affinity(&snaps, &lens, self.rr, self.unseen_estimate)
+                } else {
+                    self.dispatch.pick(&snaps, self.rr, self.unseen_estimate)
+                };
+                self.rr += 1;
+                let mut sh = shards[idx].lock().expect("shard poisoned");
+                sh.engine.sync_clock(entry.at);
+                sh.engine
+                    .admit_from(entry.spec.clone(), Some(entry.at), entry.tenant);
+                sh.stalled = false;
+                sh.dirty = true;
+            }
+            // Final drain, then release the pool.
+            epoch(f64::INFINITY);
+            done.store(true, Ordering::Release);
+            barrier.wait();
+        });
+
+        let mut all: Vec<FinishRec> = Vec::with_capacity(n_total);
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut any_left = false;
+        self.engines = shards
+            .into_iter()
+            .map(|m| {
+                let mut sh = m.into_inner().expect("shard poisoned");
+                all.append(&mut sh.recs);
+                if first_err.is_none() {
+                    first_err = sh.err.take();
+                }
+                any_left |= sh.engine.any_schedulable();
+                sh.engine
+            })
+            .collect();
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if any_left {
+            anyhow::bail!(
+                "co-sim stalled: requests pending but no replica can make progress \
+                 (KV pool too small for any admission?)"
+            );
+        }
+        self.merge_finishes(all, trace, n_total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::{MockBackend, Policy};
+    use crate::workload::gen_requests;
+
+    fn engines(policy: &Policy, n: usize) -> Vec<ServingEngine<MockBackend>> {
+        let cfg = Config::embedded_default();
+        crate::sim::builtin("steady").unwrap().build_engines(&cfg, policy, n)
+    }
+
+    /// `rebalance` loops until no replica is idle: with TWO drained
+    /// replicas and one backlogged donor, a single call must feed both
+    /// (one request each) and clear every stalled flag it touched —
+    /// receiver and donor alike.
+    #[test]
+    fn rebalance_feeds_every_simultaneously_idle_replica() {
+        let cfg = Config::embedded_default();
+        let policy = Policy::Trail { c: 0.8 };
+        let mut d = SimDriver::new(engines(&policy, 3), DispatchPolicy::RoundRobin, true);
+        for spec in gen_requests(&cfg, 4, 2024) {
+            d.engines[0].admit_from(spec, Some(0.0), 0);
+        }
+        let mut stalled = vec![true; 3];
+        assert!(d.rebalance(0.0, &mut stalled), "idle replicas must attract work");
+        assert_eq!(d.n_migrations, 2, "one request per idle replica per call");
+        assert_eq!(d.engines[0].status().live, 2, "donor keeps the rest");
+        assert_eq!(d.engines[1].status().live, 1);
+        assert_eq!(d.engines[2].status().live, 1);
+        assert_eq!(stalled, vec![false; 3], "receiver AND donor stall flags reset");
+    }
+
+    /// Donor fall-through: the donor with the LARGEST backlog holds only
+    /// policy-locked work (`take_migratable` yields nothing for it), so
+    /// the rebalance must move on to the next donor instead of leaving
+    /// the idle replica starved. Locked work is cooked by migrating
+    /// started requests out of a TRAIL engine (phase `Discarded`,
+    /// `generated > 0`) into an SJF donor — SJF locks anything that ever
+    /// started, resident or not.
+    #[test]
+    fn rebalance_falls_through_a_donor_with_only_locked_work() {
+        let cfg = Config::embedded_default();
+        let sjf = Policy::SjfPrompt;
+        let mut d = SimDriver::new(engines(&sjf, 3), DispatchPolicy::RoundRobin, true);
+
+        // Cook three started-then-discarded requests in a TRAIL scratch
+        // engine (TRAIL keeps young requests preemptable, so
+        // take_migratable can extract them mid-flight).
+        let trail = Policy::Trail { c: 0.8 };
+        let mut scratch = engines(&trail, 1).pop().unwrap();
+        let long: Vec<_> = gen_requests(&cfg, 24, 909)
+            .into_iter()
+            .filter(|s| s.true_output_len >= 4)
+            .take(3)
+            .collect();
+        assert_eq!(long.len(), 3, "seed 909 must yield three >=4-token requests");
+        for spec in long {
+            scratch.admit_from(spec, Some(0.0), 0);
+            // Step until the first token lands (taking earlier would
+            // reset prefill), then pull the request out mid-flight.
+            while scratch.request_snapshots()[0].generated == 0 {
+                scratch.step().expect("scratch step");
+            }
+            let req = scratch
+                .take_migratable()
+                .expect("a lone young TRAIL request stays migratable");
+            assert!(req.generated > 0, "cooked request must have started");
+            d.engines[0].admit_migrated(req);
+        }
+        d.n_migrations = 0; // the cooking above is not under test
+
+        // Engine 1: two plain waiting requests — movable, but a SMALLER
+        // backlog than the locked donor, so it is tried second.
+        for spec in gen_requests(&cfg, 2, 77) {
+            d.engines[1].admit_from(spec, Some(0.0), 0);
+        }
+
+        let mut stalled = vec![false; 3];
+        assert!(d.rebalance(0.0, &mut stalled), "engine 2 is idle and must be fed");
+        assert_eq!(d.n_migrations, 1);
+        assert_eq!(
+            d.engines[0].status().live,
+            3,
+            "locked donor must be left untouched"
+        );
+        assert_eq!(d.engines[1].status().live, 1, "fall-through donor gave one up");
+        assert_eq!(d.engines[2].status().live, 1, "idle replica was fed");
+    }
+
+    /// A donor must keep either busy residents or further waiting work:
+    /// with a single waiting request and nothing resident anywhere, the
+    /// rebalance must refuse to move it (it would just ping-pong).
+    #[test]
+    fn rebalance_never_ping_pongs_a_lone_request() {
+        let cfg = Config::embedded_default();
+        let policy = Policy::Trail { c: 0.8 };
+        let mut d = SimDriver::new(engines(&policy, 2), DispatchPolicy::RoundRobin, true);
+        let spec = gen_requests(&cfg, 1, 5).pop().unwrap();
+        d.engines[0].admit_from(spec, Some(0.0), 0);
+        let mut stalled = vec![false; 2];
+        assert!(!d.rebalance(0.0, &mut stalled), "a lone waiting request must stay put");
+        assert_eq!(d.n_migrations, 0);
+        assert_eq!(d.engines[0].status().live, 1);
     }
 }

@@ -46,6 +46,16 @@ pub const PRED_SCHEMA_VERSION: &str = "trail.simlab.pred/v1";
 /// above stays byte-identical with obs on or off. See
 /// docs/observability.md.
 pub const OBS_SCHEMA_VERSION: &str = "trail.simlab.obs/v1";
+/// Scale reports (`BENCH_scale.json`): the bench rows plus a `scale`
+/// section per row — the worker count the cell ran with and the
+/// hot-loop phase table. Every field except `workers` is
+/// worker-invariant (the parallel driver is byte-identical to serial),
+/// so CI's serial-vs-parallel gate strips `workers` and asserts the
+/// rows are equal. Throughput here is requests per second *of
+/// simulated time* (`throughput_req_s`); wall-clock speedup is
+/// measured separately via `--timings-json` and never pinned. See
+/// docs/simlab.md.
+pub const SCALE_SCHEMA_VERSION: &str = "trail.simlab.scale/v1";
 
 /// Per-tenant latency row (present when a sweep runs with
 /// `tenant_breakdown`; tenant names come from the scenario's
@@ -431,6 +441,60 @@ impl ObsRow {
     }
 }
 
+/// The `scale` section of a `BENCH_scale.json` row: the worker count
+/// the cell was run with plus the hot-loop phase table (virtual-time,
+/// so worker-invariant by the byte-identity contract).
+#[derive(Clone, Debug)]
+pub struct ScaleRow {
+    /// `SimScenario::workers` for this cell. The only field in the
+    /// whole row that varies across the worker sweep.
+    pub workers: usize,
+    /// Hot-loop phase table (`PhaseCounts::phases`), `PHASE_ORDER`.
+    pub phases: Vec<PhaseRow>,
+}
+
+impl ScaleRow {
+    /// Build the section from an outcome with timing counters enabled.
+    /// Borrows the outcome so the caller can still hand it to
+    /// `SweepRow::from_outcome_full` afterwards.
+    pub fn from_outcome(
+        out: &SimOutcome,
+        cost: &crate::coordinator::backend::CostModel,
+        workers: usize,
+    ) -> ScaleRow {
+        ScaleRow {
+            workers,
+            phases: out
+                .phase_counts
+                .phases(cost)
+                .into_iter()
+                .map(|(name, calls, virtual_s)| PhaseRow {
+                    name: name.to_string(),
+                    calls,
+                    virtual_s,
+                })
+                .collect(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::Num(self.workers as f64)),
+            (
+                "phases",
+                Json::Arr(self.phases.iter().map(|p| p.to_json()).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> ScaleRow {
+        ScaleRow {
+            workers: j.at(&["workers"]).as_usize(),
+            phases: j.at(&["phases"]).as_arr().iter().map(PhaseRow::from_json).collect(),
+        }
+    }
+}
+
 /// One (scenario × policy × replicas) cell of a sweep.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
@@ -474,6 +538,9 @@ pub struct SweepRow {
     /// Flight-recorder event counts + phase table — obs sweeps only;
     /// `None` keeps every other serialisation byte-identical.
     pub obs: Option<ObsRow>,
+    /// Worker count + phase table — scale sweeps only; `None` keeps
+    /// every other serialisation byte-identical.
+    pub scale: Option<ScaleRow>,
 }
 
 impl SweepRow {
@@ -567,6 +634,7 @@ impl SweepRow {
             prefix: None,
             pred: None,
             obs: None,
+            scale: None,
         }
     }
 
@@ -629,6 +697,9 @@ impl SweepRow {
         if let Some(obs) = &self.obs {
             pairs.push(("obs", obs.to_json()));
         }
+        if let Some(scale) = &self.scale {
+            pairs.push(("scale", scale.to_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -676,6 +747,7 @@ impl SweepRow {
             prefix: j.get("prefix").map(PrefixRow::from_json),
             pred: j.get("pred").map(PredRow::from_json),
             obs: j.get("obs").map(ObsRow::from_json),
+            scale: j.get("scale").map(ScaleRow::from_json),
         }
     }
 }
@@ -732,6 +804,13 @@ impl BenchReport {
         }
     }
 
+    pub fn new_scale(rows: Vec<SweepRow>) -> BenchReport {
+        BenchReport {
+            schema: SCALE_SCHEMA_VERSION.to_string(),
+            rows,
+        }
+    }
+
     /// Deterministic serialisation: fixed top-level layout, one row
     /// object per line (row diffs stay line-local), sorted keys inside
     /// each row, trailing newline.
@@ -769,11 +848,13 @@ impl BenchReport {
             && schema != PREFIX_SCHEMA_VERSION
             && schema != PRED_SCHEMA_VERSION
             && schema != OBS_SCHEMA_VERSION
+            && schema != SCALE_SCHEMA_VERSION
         {
             return Err(format!(
                 "schema mismatch: file is '{schema}', this binary reads \
                  '{SCHEMA_VERSION}', '{SCHED_SCHEMA_VERSION}', '{FAIR_SCHEMA_VERSION}', \
-                 '{PREFIX_SCHEMA_VERSION}', '{PRED_SCHEMA_VERSION}' or '{OBS_SCHEMA_VERSION}'"
+                 '{PREFIX_SCHEMA_VERSION}', '{PRED_SCHEMA_VERSION}', '{OBS_SCHEMA_VERSION}' \
+                 or '{SCALE_SCHEMA_VERSION}'"
             ));
         }
         Ok(BenchReport {
@@ -790,6 +871,7 @@ impl BenchReport {
         let prefix = self.rows.iter().any(|r| r.prefix.is_some());
         let pred = self.rows.iter().any(|r| r.pred.is_some());
         let obs = self.rows.iter().any(|r| r.obs.is_some());
+        let scale = self.rows.iter().any(|r| r.scale.is_some());
         let mut headers = vec![
             "scenario", "policy", "disp", "reps", "n", "mean_lat_s", "p50_lat_s", "p99_lat_s",
             "mean_ttft_s", "p99_ttft_s", "req/s", "preempt", "discard", "migrate", "kv_peak",
@@ -817,6 +899,10 @@ impl BenchReport {
         if obs {
             headers.push("events");
             headers.push("trace_fnv");
+        }
+        if scale {
+            headers.push("workers");
+            headers.push("sim_steps");
         }
         let mut t = Table::new(&headers);
         for r in &self.rows {
@@ -890,6 +976,24 @@ impl BenchReport {
                     Some(or) => {
                         row.push(or.n_events.to_string());
                         row.push(or.trace_fnv.clone());
+                    }
+                    None => {
+                        row.push(String::new());
+                        row.push(String::new());
+                    }
+                }
+            }
+            if scale {
+                match &r.scale {
+                    Some(sr) => {
+                        row.push(sr.workers.to_string());
+                        let steps = sr
+                            .phases
+                            .iter()
+                            .find(|p| p.name == "step")
+                            .map(|p| p.calls)
+                            .unwrap_or(0);
+                        row.push(steps.to_string());
                     }
                     None => {
                         row.push(String::new());

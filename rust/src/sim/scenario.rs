@@ -27,7 +27,7 @@ use crate::coordinator::{
 };
 use crate::obs::ObsConfig;
 use crate::sim::driver::{SimDriver, SimOutcome};
-use crate::sim::report::{BenchReport, FairnessRow, ObsRow, SweepRow};
+use crate::sim::report::{BenchReport, FairnessRow, ObsRow, ScaleRow, SweepRow};
 use crate::testkit::PredictorSpec;
 use crate::workload::{TenantProfile, TraceEntry, TraceWorkload};
 
@@ -67,6 +67,12 @@ pub struct SimScenario {
     /// to the recorder-free engine — that is what keeps the frozen
     /// baselines frozen.
     pub obs: ObsConfig,
+    /// Worker threads for the parallel driver
+    /// (`SimDriver::run_with_workers`; docs/simlab.md). 1 — the default
+    /// and every pre-existing scenario — is the serial event loop; any
+    /// value is byte-identical to it, so this knob only ever buys wall
+    /// clock.
+    pub workers: usize,
 }
 
 impl SimScenario {
@@ -89,6 +95,7 @@ impl SimScenario {
             fairness: FairnessConfig::neutral(),
             prefix_cache: false,
             obs: ObsConfig::default(),
+            workers: 1,
         }
     }
 
@@ -119,6 +126,11 @@ impl SimScenario {
 
     pub fn obs(mut self, obs: ObsConfig) -> SimScenario {
         self.obs = obs;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> SimScenario {
+        self.workers = workers;
         self
     }
 
@@ -189,12 +201,13 @@ impl SimScenario {
         trace: &[TraceEntry],
     ) -> Result<SimOutcome> {
         let engines = self.build_engines(cfg, policy, replicas);
-        let mut driver = SimDriver::new(engines, self.dispatch, migration);
-        driver.run(trace)
+        let mut driver =
+            SimDriver::new(engines, self.dispatch, migration).with_workers(self.workers);
+        driver.run_with_workers(trace)
     }
 }
 
-pub fn builtin_names() -> [&'static str; 15] {
+pub fn builtin_names() -> [&'static str; 17] {
     [
         "steady",
         "bursty",
@@ -202,6 +215,8 @@ pub fn builtin_names() -> [&'static str; 15] {
         "skewed",
         "scale-1k",
         "scale-10k",
+        "scale-100k",
+        "scale-1m",
         "scale-replicas",
         "fair-steady",
         "fair-skewed",
@@ -307,6 +322,27 @@ pub fn builtin(name: &str) -> Option<SimScenario> {
             s.slots = 32;
             s.seed = 777;
             s.n = if name == "scale-1k" { 1000 } else { 10000 };
+            s
+        }
+        // Million-request points (BENCH_scale.json, docs/simlab.md):
+        // the same overload mix under round-robin dispatch — the
+        // sharded parallel-driver path, where replicas run with zero
+        // synchronization and the worker knob buys near-linear wall
+        // clock. `scale-1m` is on-demand only (`trail-serve scale
+        // --scenarios scale-1m`); the pinned baseline stops at 100k so
+        // the Python mirror can regenerate it in-image.
+        "scale-100k" | "scale-1m" => {
+            let mut s = SimScenario::new(
+                name,
+                TraceWorkload::new(vec![
+                    TenantProfile::steady("chat", 288.0).mu_shift(-0.3),
+                    TenantProfile::steady("batch", 72.0).mu_shift(0.7),
+                ]),
+            );
+            s.slots = 32;
+            s.seed = 777;
+            s.dispatch = DispatchPolicy::RoundRobin;
+            s.n = if name == "scale-100k" { 100_000 } else { 1_000_000 };
             s
         }
         "scale-replicas" => {
@@ -527,6 +563,7 @@ pub fn run_sweep_obs(cfg: &Config, sweep: &SweepConfig) -> Result<ObsSweepOutput
         phase_counts,
         timing,
         cost,
+        cell_walls: Vec::new(),
     })
 }
 
@@ -674,6 +711,20 @@ pub struct ObsSweepOutput {
     /// Cost model the virtual phase totals derive from (the first
     /// scenario's — all cells of a grid share one cost model).
     pub cost: CostModel,
+    /// Per-cell wall clock, grid order — scale sweeps only (empty
+    /// elsewhere). Wall time is never pinned; this rides out through
+    /// `--timings-json` so CI can compute the speedup curve.
+    pub cell_walls: Vec<CellWall>,
+}
+
+/// One scale cell's wall-clock measurement (`--timings-json` `cells`).
+#[derive(Clone, Debug)]
+pub struct CellWall {
+    pub scenario: String,
+    pub workers: usize,
+    /// Requests the cell served.
+    pub n: usize,
+    pub wall_s: f64,
 }
 
 /// The checked-in flight-recorder grid (`benchmarks/BENCH_obs.json`,
@@ -717,6 +768,79 @@ pub fn run_obs_sweep(cfg: &Config) -> Result<ObsSweepOutput> {
         phase_counts,
         timing,
         cost: base.cost,
+        cell_walls: Vec::new(),
+    })
+}
+
+/// Worker counts of the scale grid, ascending; the wall-clock speedup
+/// claim is measured between the first and last points. Keep in sync
+/// with python/simref.py `SCALE_WORKERS`.
+pub const SCALE_WORKERS: [usize; 4] = [1, 2, 4, 8];
+/// Replica count of every scale cell — enough shards that 8 workers
+/// all hold work. Keep in sync with python/simref.py `SCALE_REPLICAS`.
+pub const SCALE_REPLICAS: usize = 8;
+/// Default scenarios of the pinned scale grid. `scale-1m` is
+/// deliberately absent: the baseline must stay regenerable by the
+/// Python mirror in CI-scale time. Keep in sync with python/simref.py
+/// `SCALE_SCENARIOS`.
+pub const SCALE_SCENARIOS: [&str; 2] = ["scale-10k", "scale-100k"];
+
+/// The checked-in scale grid (`benchmarks/BENCH_scale.json`, schema
+/// `trail.simlab.scale/v1`; docs/simlab.md): each scale scenario ×
+/// worker count at [`SCALE_REPLICAS`] replicas under TRAIL c=0.8,
+/// migration off (the parallel driver's regime), phase counters on.
+/// Every pinned field except `scale.workers` is worker-invariant — the
+/// parallel driver is byte-identical to serial — so CI strips `workers`
+/// and asserts the rows agree; wall-clock speedup rides out through
+/// `--timings-json` only. The default grid is `scale-10k` +
+/// `scale-100k`; `scale-1m` runs on demand (`trail-serve scale
+/// --scenarios scale-1m`). Keep in sync with python/simref.py
+/// `scale_rows`.
+pub fn run_scale_sweep(cfg: &Config, scenario_names: &[&str]) -> Result<ObsSweepOutput> {
+    let policy = Policy::Trail { c: 0.8 };
+    let mut rows = Vec::new();
+    let mut phase_counts = crate::obs::PhaseCounts::default();
+    let mut timing: Option<crate::obs::TimingStats> = None;
+    let mut cost = CostModel::default();
+    let mut cell_walls = Vec::new();
+    for name in scenario_names {
+        let Some(base) = builtin(name) else {
+            anyhow::bail!("unknown scale scenario '{name}'");
+        };
+        let base = base.obs(ObsConfig { trace: false, timing: true, replica: 0 });
+        cost = base.cost;
+        let trace = base.trace(cfg);
+        for &w in &SCALE_WORKERS {
+            let sc = base.clone().workers(w);
+            let t0 = std::time::Instant::now();
+            let out = sc.run_trace(cfg, &policy, SCALE_REPLICAS, false, &trace)?;
+            cell_walls.push(CellWall {
+                scenario: sc.name.clone(),
+                workers: w,
+                n: out.n_requests,
+                wall_s: t0.elapsed().as_secs_f64(),
+            });
+            let sr = ScaleRow::from_outcome(&out, &sc.cost, w);
+            phase_counts.merge(&out.phase_counts);
+            if let Some(ts) = &out.timing {
+                match &mut timing {
+                    Some(t) => t.merge(ts),
+                    None => timing = Some(ts.clone()),
+                }
+            }
+            let mut row =
+                SweepRow::from_outcome_full(&sc, &policy, SCALE_REPLICAS, false, out, false, false);
+            row.scale = Some(sr);
+            rows.push(row);
+        }
+    }
+    Ok(ObsSweepOutput {
+        report: BenchReport::new_scale(rows),
+        traces: Vec::new(),
+        phase_counts,
+        timing,
+        cost,
+        cell_walls,
     })
 }
 

@@ -82,7 +82,10 @@ impl Samples {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): a single NaN sample
+            // (e.g. a zero-token slowdown upstream) must not panic the
+            // whole report — same total-order fix Rank received.
+            self.xs.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
@@ -187,6 +190,20 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!((s.percentile(90.0) - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_percentiles() {
+        let mut s = Samples::new();
+        s.push(2.0);
+        s.push(f64::NAN);
+        s.push(1.0);
+        s.push(f64::INFINITY);
+        // total_cmp orders NaN after +inf; sorting must not unwind and
+        // the finite end of the distribution stays meaningful.
+        assert!((s.min() - 1.0).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!(s.max().is_nan());
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Differential oracle for the parallel co-sim driver: the serial
+//! event loop (`SimDriver::run`, workers = 1) and the two parallel
+//! modes — round-robin sharding and the epoch virtual-time barrier —
+//! are driven over identical traces across a dispatch × scheduling
+//! policy × scenario × replicas × workers grid, asserting bit-identical
+//! outcomes down to float bit patterns, sample push order, merged
+//! flight-recorder streams, and the serialized benchmark row. The
+//! `(t, replica, seq)` end-of-run merge (sim/driver.rs module docs) is
+//! the whole correctness story for parallel mode; this file is its
+//! proof obligation.
+
+use trail::config::Config;
+use trail::coordinator::{DispatchPolicy, Policy};
+use trail::obs::ObsConfig;
+use trail::sim::{builtin, BenchReport, SimOutcome, SimScenario, SweepRow};
+
+fn cfg() -> Config {
+    Config::embedded_default()
+}
+
+/// Serialize one outcome exactly as the frozen baselines do.
+fn row_json(sc: &SimScenario, policy: &Policy, replicas: usize, out: SimOutcome) -> String {
+    let row = SweepRow::from_outcome_full(sc, policy, replicas, false, out, false, true);
+    BenchReport::new(vec![row]).to_json_string()
+}
+
+/// Every observable field, floats compared by bit pattern. Sample means
+/// and percentiles pin the *push order*, not just the multiset: a merge
+/// that reorders two finishes produces the same set of floats but a
+/// different non-associative running sum.
+fn assert_outcomes_identical(a: &mut SimOutcome, b: &mut SimOutcome, label: &str) {
+    assert_eq!(a.n_requests, b.n_requests, "{label}: n_requests");
+    assert_eq!(a.preemptions, b.preemptions, "{label}: preemptions");
+    assert_eq!(a.discards, b.discards, "{label}: discards");
+    assert_eq!(a.migrations, b.migrations, "{label}: migrations");
+    assert_eq!(a.kv_peak_tokens, b.kv_peak_tokens, "{label}: kv peak");
+    assert_eq!(a.per_replica_finished, b.per_replica_finished, "{label}: per-replica split");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{label}: makespan");
+    assert_eq!(a.n_iterations, b.n_iterations, "{label}: iterations");
+    assert_eq!(a.selector_ops, b.selector_ops, "{label}: selector ops");
+    assert_eq!(a.max_starve_age.to_bits(), b.max_starve_age.to_bits(), "{label}: starve age");
+    assert_eq!(a.prefix_hits, b.prefix_hits, "{label}: prefix hits");
+    assert_eq!(a.reused_tokens, b.reused_tokens, "{label}: reused tokens");
+    assert_eq!(a.predictor, b.predictor, "{label}: predictor");
+    let pairs = |o: &SimOutcome| -> Vec<(u64, u64)> {
+        o.pred_pairs.iter().map(|(p, t)| (p.to_bits(), t.to_bits())).collect()
+    };
+    assert_eq!(pairs(a), pairs(b), "{label}: pred pairs");
+    assert_eq!(
+        a.latency.mean().to_bits(),
+        b.latency.mean().to_bits(),
+        "{label}: latency mean (push order)"
+    );
+    assert_eq!(a.ttft.mean().to_bits(), b.ttft.mean().to_bits(), "{label}: ttft mean");
+    for q in [50.0, 90.0, 99.0] {
+        assert_eq!(
+            a.latency.percentile(q).to_bits(),
+            b.latency.percentile(q).to_bits(),
+            "{label}: latency p{q}"
+        );
+    }
+    assert_eq!(a.per_tenant.len(), b.per_tenant.len(), "{label}: tenant count");
+    for (i, (ta, tb)) in a.per_tenant.iter_mut().zip(b.per_tenant.iter_mut()).enumerate() {
+        assert_eq!(ta.n, tb.n, "{label}: tenant {i} n");
+        assert_eq!(
+            ta.latency.mean().to_bits(),
+            tb.latency.mean().to_bits(),
+            "{label}: tenant {i} latency"
+        );
+        assert_eq!(
+            ta.slowdown.mean().to_bits(),
+            tb.slowdown.mean().to_bits(),
+            "{label}: tenant {i} slowdown"
+        );
+    }
+    assert_eq!(a.trace_events, b.trace_events, "{label}: merged trace streams");
+    assert_eq!(a.phase_counts, b.phase_counts, "{label}: phase counts");
+}
+
+/// The grid from the issue: every parallel mode (sharded via
+/// round-robin, epoch via the snapshot-reading policies) × scheduling
+/// policy × scenario shape × replica count × worker count, each cell
+/// compared field-by-field AND as the serialized report row.
+#[test]
+fn parallel_matches_serial_across_the_grid() {
+    let cfg = cfg();
+    let dispatches = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::LeastPredictedWork,
+        DispatchPolicy::CacheAffinity,
+    ];
+    let policies = [Policy::Fcfs, Policy::Trail { c: 0.8 }];
+    for scenario_name in ["steady", "skewed"] {
+        for dispatch in dispatches {
+            for policy in &policies {
+                for replicas in [2usize, 3] {
+                    let mut base = builtin(scenario_name).unwrap().n(60);
+                    base.dispatch = dispatch;
+                    let trace = base.trace(&cfg);
+                    for workers in [2usize, 4] {
+                        let label = format!(
+                            "{scenario_name}/{dispatch:?}/{}/r{replicas}/w{workers}",
+                            policy.name()
+                        );
+                        let par = base.clone().workers(workers);
+                        let mut a = par.run_trace(&cfg, policy, replicas, false, &trace).unwrap();
+                        let mut b = base.run_trace(&cfg, policy, replicas, false, &trace).unwrap();
+                        assert_outcomes_identical(&mut a, &mut b, &label);
+                        // Byte-for-byte at the report layer, where the
+                        // frozen baselines live.
+                        assert_eq!(
+                            row_json(&par, policy, replicas, a),
+                            row_json(&base, policy, replicas, b),
+                            "{label}: serialized rows differ"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Flight recorder + phase timing on: the per-replica event streams
+/// recorded on worker threads must merge into exactly the serial
+/// driver's `(t, replica, seq)` order.
+#[test]
+fn parallel_merges_trace_events_identically_with_obs_on() {
+    let cfg = cfg();
+    let obs = ObsConfig {
+        trace: true,
+        timing: false,
+        replica: 0,
+    };
+    for (dispatch, name) in [
+        (DispatchPolicy::RoundRobin, "sharded"),
+        (DispatchPolicy::JoinShortestQueue, "epoch"),
+    ] {
+        let mut base = builtin("bursty").unwrap().n(80).obs(obs.clone());
+        base.dispatch = dispatch;
+        let trace = base.trace(&cfg);
+        let policy = Policy::Trail { c: 0.8 };
+        let mut serial = base.run_trace(&cfg, &policy, 3, false, &trace).unwrap();
+        let mut par = base
+            .clone()
+            .workers(3)
+            .run_trace(&cfg, &policy, 3, false, &trace)
+            .unwrap();
+        assert!(
+            !serial.trace_events.is_empty(),
+            "{name}: obs run must record events or the comparison is vacuous"
+        );
+        assert_outcomes_identical(&mut par, &mut serial, &format!("obs/{name}"));
+    }
+}
+
+/// Migration couples replicas between arrivals, so `run_with_workers`
+/// must ignore the worker knob and take the serial loop — same bits,
+/// and the migration machinery actually fires.
+#[test]
+fn migration_on_falls_back_to_the_serial_loop() {
+    let cfg = cfg();
+    let policy = Policy::Trail { c: 0.8 };
+    let base = builtin("skewed").unwrap().n(80);
+    let trace = base.trace(&cfg);
+    let mut serial = base.run_trace(&cfg, &policy, 2, true, &trace).unwrap();
+    let mut par = base
+        .clone()
+        .workers(8)
+        .run_trace(&cfg, &policy, 2, true, &trace)
+        .unwrap();
+    assert!(serial.migrations > 0, "skewed round-robin must migrate");
+    assert_outcomes_identical(&mut par, &mut serial, "migration-fallback");
+}
+
+/// The scale builtins themselves (truncated to test size): the exact
+/// scenario shapes the BENCH_scale grid runs, sharded mode at the full
+/// worker ladder.
+#[test]
+fn scale_builtins_parallel_equivalence_at_test_size() {
+    let cfg = cfg();
+    let policy = Policy::Trail { c: 0.8 };
+    for name in ["scale-100k", "scale-1m"] {
+        let base = builtin(name).unwrap().n(300);
+        let trace = base.trace(&cfg);
+        let mut serial = base.run_trace(&cfg, &policy, 8, false, &trace).unwrap();
+        for workers in trail::sim::SCALE_WORKERS {
+            let mut par = base
+                .clone()
+                .workers(workers)
+                .run_trace(&cfg, &policy, 8, false, &trace)
+                .unwrap();
+            assert_outcomes_identical(&mut par, &mut serial, &format!("{name}/w{workers}"));
+        }
+    }
+}
+
+/// More workers than replicas, and a single-replica "parallel" run:
+/// the clamp and serial fallback must both hold the bits.
+#[test]
+fn worker_clamp_and_single_replica_edge_cases() {
+    let cfg = cfg();
+    let policy = Policy::Fcfs;
+    let base = builtin("steady").unwrap().n(40);
+    let trace = base.trace(&cfg);
+    for (replicas, workers) in [(2usize, 16usize), (1, 8)] {
+        let mut serial = base.run_trace(&cfg, &policy, replicas, false, &trace).unwrap();
+        let mut par = base
+            .clone()
+            .workers(workers)
+            .run_trace(&cfg, &policy, replicas, false, &trace)
+            .unwrap();
+        assert_outcomes_identical(&mut par, &mut serial, &format!("clamp/r{replicas}/w{workers}"));
+    }
+}
