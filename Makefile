@@ -12,6 +12,7 @@
         bench-pred bench-pred-diff bench-pred-refresh \
         bench-obs bench-obs-diff bench-obs-refresh \
         bench-scale bench-scale-diff bench-scale-refresh bench-scale-mirror \
+        bench-fleet bench-fleet-diff bench-fleet-refresh bench-fleet-mirror \
         bench-freeze bench-freeze-mirror \
         fmt artifacts clean
 
@@ -175,6 +176,34 @@ bench-scale-mirror:
 	cmp /tmp/MIRROR_scale.json benchmarks/BENCH_scale.json
 	rm -f /tmp/MIRROR_scale.json
 
+# Fleet chaos grid (docs/fleet.md): {steady, diurnal, flash-crowd} x
+# failure rate {0, 0.4} x autoscaler {off, on} on a 6-replica
+# heterogeneous fleet — crash/recovery with redispatch, graceful-drain
+# scale-down, stale dispatch snapshots, SLO-class admission control.
+# Run twice and `cmp` byte-for-byte — the hard determinism gate for the
+# whole fleet-dynamics event stream.
+bench-fleet:
+	cargo run --release --bin trail-serve -- fleet --out BENCH_fleet.json
+	cargo run --release --bin trail-serve -- fleet --out BENCH_fleet.run2.json
+	cmp BENCH_fleet.json BENCH_fleet.run2.json
+	rm -f BENCH_fleet.run2.json
+
+# Diff against the checked-in chaos-grid baseline (advisory in CI, same
+# libm caveat as bench-sim-diff).
+bench-fleet-diff: bench-fleet
+	diff -u benchmarks/BENCH_fleet.json BENCH_fleet.json
+
+bench-fleet-refresh:
+	cargo run --release --bin trail-serve -- fleet --out benchmarks/BENCH_fleet.json
+
+# Same grid through the Python mirror — the in-image verification
+# substrate when cargo is unavailable (this is also how the checked-in
+# baseline was generated; see docs/fleet.md).
+bench-fleet-mirror:
+	cd python && python3 simref.py fleet --out /tmp/MIRROR_fleet.json > /dev/null
+	cmp /tmp/MIRROR_fleet.json benchmarks/BENCH_fleet.json
+	rm -f /tmp/MIRROR_fleet.json
+
 # Baseline freeze (docs/observability.md): regenerate every checked-in
 # BENCH baseline with the recorder *disabled* and fail on any byte
 # drift. This is the zero-cost-when-disabled gate — landing the
@@ -192,6 +221,8 @@ bench-freeze:
 	cmp /tmp/FREEZE_pred.json benchmarks/BENCH_pred.json
 	cargo run --release --bin trail-serve -- scale --out /tmp/FREEZE_scale.json
 	cmp /tmp/FREEZE_scale.json benchmarks/BENCH_scale.json
+	cargo run --release --bin trail-serve -- fleet --out /tmp/FREEZE_fleet.json
+	cmp /tmp/FREEZE_fleet.json benchmarks/BENCH_fleet.json
 	rm -f /tmp/FREEZE_*.json
 
 # Same freeze gate through the dependency-free Python mirror — the
@@ -211,6 +242,8 @@ bench-freeze-mirror:
 	cmp /tmp/FREEZE_obs.json benchmarks/BENCH_obs.json
 	cd python && python3 simref.py scale --out /tmp/FREEZE_scale.json > /dev/null
 	cmp /tmp/FREEZE_scale.json benchmarks/BENCH_scale.json
+	cd python && python3 simref.py fleet --out /tmp/FREEZE_fleet.json > /dev/null
+	cmp /tmp/FREEZE_fleet.json benchmarks/BENCH_fleet.json
 	rm -f /tmp/FREEZE_*.json
 
 fmt:

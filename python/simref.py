@@ -70,6 +70,19 @@ every emission helper is a no-op and all frozen baselines stay
 byte-identical — that freeze is what ``make bench-freeze-mirror``
 regenerates and checks.
 
+The fleet-dynamics layer (docs/fleet.md) is mirrored too: the seeded
+crash/recovery event stream interleaved with arrivals and steps on the
+shared virtual timeline (``SimDriver::run_fleet``), graceful drain for
+scale-down, the queue-depth autoscaler with its boot delay,
+per-replica hardware-generation cost multipliers
+(``CostModel::scaled``), ``stale_s``-epoch dispatch snapshots, and
+SLO-class admission control (batch shed/degrade). Everything is a pure
+function of the fleet config — crash times precomputed from one
+SplitMix64 stream — so the ``trail.simlab.fleet/v1`` chaos grid
+(``benchmarks/BENCH_fleet.json``) is run-twice byte-identical, and the
+inert default config serves any trace byte-identically to the plain
+serial loop, which is what keeps the eight pre-fleet baselines frozen.
+
 The scale grid (docs/simlab.md) is mirrored too: the
 ``trail.simlab.scale/v1`` report (``benchmarks/BENCH_scale.json``) —
 scale scenarios × worker counts at 8 replicas, migration off. The Rust
@@ -88,6 +101,7 @@ Usage:
     cd python && python3 simref.py obs --out ../benchmarks/BENCH_obs.json \
         --trace-jsonl /tmp/trace.jsonl --timings-json /tmp/timings.json
     cd python && python3 simref.py scale --out ../benchmarks/BENCH_scale.json
+    cd python && python3 simref.py fleet --out ../benchmarks/BENCH_fleet.json
 """
 
 import math
@@ -1068,9 +1082,17 @@ class Engine:
 
     def __init__(self, policy, slots, pool_tokens, noise=0.4, pred_seed=7,
                  max_iterations=2_000_000, selector="indexed", fair=NEUTRAL_FAIR,
-                 prefix_cache=False, predictor=None, obs=None):
+                 prefix_cache=False, predictor=None, obs=None, cost_mult=1.0):
         self.policy = policy
         self.slots = slots
+        # CostModel::scaled — heterogeneous hardware generations scale
+        # every cost constant once at construction (docs/fleet.md). The
+        # default 1.0 is bit-identical to the unscaled constants, which
+        # is what keeps every pre-fleet baseline byte-frozen.
+        self.c_decode_step = COST_DECODE_STEP * cost_mult
+        self.c_decode_slot = COST_DECODE_PER_SLOT * cost_mult
+        self.c_prefill = COST_PREFILL_CHUNK * cost_mult
+        self.c_readout = COST_READOUT * cost_mult
         self.kv = Kv(slots, pool_tokens)
         if prefix_cache:
             self.kv.enable_prefix_cache()
@@ -1318,6 +1340,33 @@ class Engine:
         self.shares_on_admit(r.tenant)
         self.reqs.append(r)
 
+    # --- crash teardown (rust ServingEngine::take_all_for_crash) ---
+    def take_all_for_crash(self):
+        """Drain *every* unfinished request, in vector order, exactly as
+        take_migratable strips one — KV freed, prefill progress zeroed,
+        phase reset for recomputation elsewhere. Unlike migration no
+        migrate_out events are traced and no migrated-out counters move:
+        the replica is dead, not cooperating (docs/fleet.md)."""
+        out = []
+        reqs = self.reqs
+        self.reqs = []
+        for r in reqs:
+            if r.phase == FINISHED:
+                continue
+            self.shares_on_remove(r.tenant)
+            self.sched_idx.remove(r.rid)
+            del self.rid_pos[r.rid]
+            if r.slot is not None:
+                self.kv.free(r.slot, r.rid)
+                self.res_idx.remove(r.rid)
+                r.slot = None
+            r.prefilled = 0
+            r.kv_written = 0
+            r.phase = WAITING if r.generated == 0 else DISCARDED
+            r.n_migrations += 1
+            out.append(r)
+        return out
+
     # --- step (rust step/step_inner) ---
     def step(self):
         if not self.any_schedulable():
@@ -1361,7 +1410,7 @@ class Engine:
                 nvalid = min(tokens_len - start, CHUNK)
                 if not self.kv.fits(nvalid):
                     break
-                self.pending_cost += COST_PREFILL_CHUNK
+                self.pending_cost += self.c_prefill
                 r.prefilled += nvalid
                 r.kv_written = r.prefilled
                 self.kv.charge(r.slot, r.rid, r.kv_written)
@@ -1386,7 +1435,7 @@ class Engine:
                 decoding.append(idx)
         if decoding:
             self.obs_enter("decode")
-            self.pending_cost += COST_DECODE_STEP + COST_DECODE_PER_SLOT * len(decoding)
+            self.pending_cost += self.c_decode_step + self.c_decode_slot * len(decoding)
             self.obs_exit()
             self.obs_count("decode_steps")
             self.obs_count("decode_slot_steps", len(decoding))
@@ -1395,7 +1444,7 @@ class Engine:
         stepped = bool(decoding) or bool(prefill_done_now)
         if stepped:
             self.obs_enter("readout")
-            self.pending_cost += COST_READOUT
+            self.pending_cost += self.c_readout
             self.obs_exit()
             self.obs_count("readouts")
         cost = self.pending_cost
@@ -2197,6 +2246,437 @@ def run_sim(trace, policy, replicas, dispatch, migration, slots, pool_tokens, no
 
 
 # ---------------------------------------------------------------------------
+# Fleet dynamics (rust/src/sim/fleet.rs + SimDriver::run_fleet —
+# docs/fleet.md; keep every rule in sync!)
+# ---------------------------------------------------------------------------
+
+SLO_INTERACTIVE = 0
+SLO_BATCH = 1
+
+
+def default_fleet():
+    """FleetConfig::default — inert: serves any trace byte-identically
+    to the plain serial driver loop (no crashes, no scaling, fresh
+    snapshots, every tenant interactive, homogeneous cost)."""
+    return {
+        "seed": 0xF1EE7,
+        "failure_rate": 0.0,
+        "horizon_s": 60.0,
+        "recovery_s": 2.0,
+        "redispatch": True,
+        "autoscaler": False,
+        "min_replicas": 1,
+        "max_replicas": 0,
+        "initial_up": 0,
+        "boot_delay_s": 0.5,
+        "check_interval_s": 0.25,
+        "up_backlog": 8.0,
+        "down_backlog": 1.0,
+        "stale_s": 0.0,
+        "slo_classes": [],
+        "shed_queue": 0,
+        "degrade_queue": 0,
+        "degrade_cap": 24,
+        "cost_mults": [],
+    }
+
+
+def fleet_class_of(fleet, tenant):
+    """FleetConfig::class_of — clamped to the two known classes;
+    missing entries are interactive."""
+    classes = fleet["slo_classes"]
+    if tenant >= len(classes):
+        return SLO_INTERACTIVE
+    return min(classes[tenant], SLO_BATCH)
+
+
+def crash_schedule(seed, failure_rate, horizon_s):
+    """fleet::crash_schedule — (time, target draw) pairs on
+    [0, horizon_s); Exp(rate) gaps off one SplitMix64 stream, victim
+    drawn at fire time from the draw modulo the up set."""
+    out = []
+    if failure_rate <= 0.0 or horizon_s <= 0.0:
+        return out
+    rng = SplitMix64(seed)
+    t = 0.0
+    while True:
+        t += -math.log(1.0 - rng.next_f64()) / failure_rate
+        if t >= horizon_s:
+            return out
+        out.append((t, rng.next_u64()))
+
+
+def pick_active(dispatch, snaps, active, rr):
+    """DispatchPolicy::pick_active — dispatch over the up, non-draining
+    sub-pool from (possibly stale) snapshots `(queued, pred_remaining)`.
+    Round-robin cycles the active set; JSQ/least-work break ties by
+    global index (unseen is always 0 on the co-sim path, so estimated
+    work is the published prediction mass). Cache-affinity is rejected
+    by run_fleet_sim before this is ever reached."""
+    if dispatch == "rr":
+        return active[rr % len(active)]
+    if dispatch == "jsq":
+        return min(active, key=lambda i: (snaps[i][0], i))
+    return min(active, key=lambda i: (snaps[i][1], snaps[i][0], i))
+
+
+def run_fleet_sim(trace, policy, replicas, dispatch, slots, pool_tokens, fleet,
+                  noise=0.4):
+    """SimDriver::run_fleet — the serial event loop of run_sim extended
+    with a third event source, the seeded fleet stream (crashes,
+    boot/recovery completions, autoscaler ticks), interleaved with
+    arrivals and engine steps in virtual-time order.
+
+    Event interleaving: at equal times, fleet events fire before
+    arrivals, which fire before steps; within the fleet stream,
+    boot/recovery completions beat crashes beat autoscaler ticks, ties
+    breaking to the lowest replica index. Conservation holds on exit:
+    finished + shed + lost == arrivals."""
+    if dispatch == "affinity":
+        raise RuntimeError("cache-affinity dispatch is not supported under fleet dynamics")
+    cost_mults = fleet["cost_mults"]
+    engines = [
+        Engine(policy, slots, pool_tokens, noise=noise,
+               cost_mult=(cost_mults[i % len(cost_mults)] if cost_mults else 1.0))
+        for i in range(replicas)
+    ]
+    n_rep = replicas
+    n_total = len(trace)
+    nxt = 0
+    rr = 0
+    n_migrations = 0
+    lat = []
+    ttft = []
+    finished = 0
+    stalled = [False] * n_rep
+    rid_tenant = {e[2]: e[1] for e in trace}
+    n_tenants = max((e[1] for e in trace), default=-1) + 1
+    tenant_lat = [[] for _ in range(n_tenants)]
+    tenant_ttft = [[] for _ in range(n_tenants)]
+    tenant_slow = [[] for _ in range(n_tenants)]
+    # Per-SLO-class latency pools for the interactive/batch p99 the
+    # chaos grid pivots on.
+    class_lat = [[], []]
+
+    initial_up = n_rep if fleet["initial_up"] == 0 else min(fleet["initial_up"], n_rep)
+    max_replicas = n_rep if fleet["max_replicas"] == 0 else min(fleet["max_replicas"], n_rep)
+    min_replicas = min(max(fleet["min_replicas"], 1), max_replicas)
+    up = [i < initial_up for i in range(n_rep)]
+    draining = [False] * n_rep
+    # Pending in-service transitions: (completion time, is_recovery)
+    # per replica (autoscaler boots and crash recoveries).
+    pending = [None] * n_rep
+    crashes_sched = crash_schedule(fleet["seed"], fleet["failure_rate"], fleet["horizon_s"])
+    crash_ptr = 0
+    tick_k = 0
+
+    n_crashes = 0
+    recoveries = 0
+    redispatched = 0
+    lost = 0
+    scale_ups = 0
+    scale_downs = 0
+    shed = 0
+    degraded = 0
+    up_now = initial_up
+    up_min = up_now
+    up_max = up_now
+
+    # Propagated load signals (stale_s > 0): dispatch reads these,
+    # bulk-refreshed from engine truth once per stale_s epoch. All
+    # replicas start empty, so zeros are the t = 0 truth.
+    stale_s = fleet["stale_s"]
+    published = [(0, 0.0)] * n_rep
+    last_epoch = [-1]
+
+    def refresh_published(t):
+        # Only up replicas publish — a down replica's last snapshot
+        # goes stale with it, exactly like a real status plane.
+        if stale_s <= 0.0:
+            return
+        epoch = math.floor(t / stale_s)
+        if epoch == last_epoch[0]:
+            return
+        last_epoch[0] = epoch
+        for i in range(n_rep):
+            if up[i]:
+                published[i] = (engines[i].live(), engines[i].pred_sum())
+
+    def fleet_snaps():
+        # Fresh mode recomputes per call, matching the serial loop's
+        # semantics byte-for-byte (the snapshot read is pure).
+        if stale_s > 0.0:
+            return list(published)
+        return [(e.live(), e.pred_sum()) for e in engines]
+
+    while True:
+        active = None
+        for i, e in enumerate(engines):
+            if not up[i] or stalled[i] or not e.any_schedulable():
+                continue
+            now = e.now
+            if active is None or now < active[0]:
+                active = (now, i)
+        t_arr = trace[nxt][0] if nxt < n_total else None
+        # Down replicas never hold work (crash strips everything; drain
+        # completion requires an empty live set), so this is the
+        # whole-fleet completion check.
+        if t_arr is None and not any(
+            up[i] and engines[i].any_schedulable() for i in range(n_rep)
+        ):
+            break
+
+        # ---- next fleet event: (time, kind priority, replica) ----
+        # `hard` events (boot/recovery completions, crashes) are a
+        # finite stream and may fire even when everything is stalled;
+        # autoscaler ticks recur forever and may not.
+        fev_hard = None
+        for i, p in enumerate(pending):
+            if p is not None:
+                k = (p[0], 0, i)
+                if fev_hard is None or k < fev_hard:
+                    fev_hard = k
+        if crash_ptr < len(crashes_sched):
+            k = (crashes_sched[crash_ptr][0], 1, 0)
+            if fev_hard is None or k < fev_hard:
+                fev_hard = k
+        fev = fev_hard
+        if fleet["autoscaler"]:
+            k = ((tick_k + 1) * fleet["check_interval_s"], 2, 0)
+            if fev is None or k < fev:
+                fev = k
+
+        mask = [i for i in range(n_rep) if up[i] and not draining[i]]
+        if t_arr is None and active is None:
+            # Work remains but every up engine is memory-stalled: only
+            # a hard fleet event can change anything.
+            if fev_hard is None:
+                raise RuntimeError("co-sim stalled")
+            chosen = fev_hard
+        elif fev is not None:
+            tf = fev[0]
+            due = (t_arr is None or tf <= t_arr) and (active is None or tf <= active[0])
+            if due:
+                chosen = fev
+            elif not mask and nxt < n_total:
+                # Arrival into a total blackout: pull the next hard
+                # event forward (the request waits at the door for the
+                # boot/recovery) rather than dropping it.
+                chosen = fev_hard
+            else:
+                chosen = None
+        else:
+            chosen = None
+
+        if chosen is not None:
+            tf, kind, r = chosen
+            if kind == 0:
+                # ---- boot / recovery completion ----
+                _, is_recovery = pending[r]
+                pending[r] = None
+                up[r] = True
+                stalled[r] = False
+                engines[r].sync_clock(tf)
+                # A fresh replica announces itself: its published
+                # snapshot is re-read immediately.
+                published[r] = (engines[r].live(), engines[r].pred_sum())
+                if is_recovery:
+                    recoveries += 1
+                up_now += 1
+                up_max = max(up_max, up_now)
+            elif kind == 1:
+                # ---- crash ----
+                draw = crashes_sched[crash_ptr][1]
+                crash_ptr += 1
+                cands = [i for i in range(n_rep) if up[i]]
+                if len(cands) <= 1:
+                    # Never kill the last replica in service.
+                    continue
+                victim = cands[draw % len(cands)]
+                up[victim] = False
+                draining[victim] = False
+                stalled[victim] = False
+                n_crashes += 1
+                up_now -= 1
+                up_min = min(up_min, up_now)
+                orphans = engines[victim].take_all_for_crash()
+                mask_c = [i for i in range(n_rep) if up[i] and not draining[i]]
+                if fleet["redispatch"] and mask_c:
+                    refresh_published(tf)
+                    for req in orphans:
+                        snaps = fleet_snaps()
+                        tgt = pick_active(dispatch, snaps, mask_c, rr)
+                        rr += 1
+                        engines[tgt].sync_clock(tf)
+                        engines[tgt].admit_migrated(req)
+                        stalled[tgt] = False
+                        redispatched += 1
+                else:
+                    lost += len(orphans)
+                if fleet["recovery_s"] > 0.0:
+                    pending[victim] = (tf + fleet["recovery_s"], True)
+            else:
+                # ---- autoscaler tick ----
+                tick_k += 1
+                refresh_published(tf)
+                snaps = fleet_snaps()
+                backlog = sum(snaps[i][0] for i in mask)
+                per = backlog / max(len(mask), 1)
+                pending_boots = sum(1 for p in pending if p is not None)
+                if (not mask or per >= fleet["up_backlog"]) and \
+                        up_now + pending_boots < max_replicas:
+                    r2 = next(
+                        (i for i in range(n_rep) if not up[i] and pending[i] is None),
+                        None,
+                    )
+                    if r2 is not None:
+                        pending[r2] = (tf + fleet["boot_delay_s"], False)
+                        scale_ups += 1
+                elif per <= fleet["down_backlog"] and len(mask) > min_replicas \
+                        and pending_boots == 0:
+                    # Drain the highest-index dispatchable replica —
+                    # with ascending cost_mults that is the slowest
+                    # hardware generation.
+                    r2 = mask[-1]
+                    draining[r2] = True
+                    scale_downs += 1
+                # Drain pump: move every migratable request off
+                # draining replicas; locked work finishes locally and
+                # the replica leaves service at the first tick that
+                # sees it empty.
+                for r2 in range(n_rep):
+                    if not draining[r2]:
+                        continue
+                    mask2 = [i for i in range(n_rep) if up[i] and not draining[i]]
+                    if mask2:
+                        while True:
+                            req = engines[r2].take_migratable()
+                            if req is None:
+                                break
+                            snaps2 = fleet_snaps()
+                            tgt = pick_active(dispatch, snaps2, mask2, rr)
+                            rr += 1
+                            engines[tgt].sync_clock(tf)
+                            engines[tgt].admit_migrated(req)
+                            stalled[tgt] = False
+                            stalled[r2] = False
+                            n_migrations += 1
+                    if engines[r2].live() == 0:
+                        draining[r2] = False
+                        up[r2] = False
+                        up_now -= 1
+                        up_min = min(up_min, up_now)
+            continue
+
+        # ---- arrivals due before the next step ----
+        if nxt < n_total and (active is None or trace[nxt][0] <= active[0]):
+            at, tenant, rid, plen, n_out, prompt, obs = trace[nxt]
+            nxt += 1
+            if not mask:
+                # Total blackout with nothing pending (chosen would
+                # have pulled a hard event forward otherwise): the
+                # request has no door to wait at.
+                lost += 1
+                continue
+            refresh_published(at)
+            snaps = fleet_snaps()
+            if fleet_class_of(fleet, tenant) == SLO_BATCH:
+                # SLO admission control reads the same (possibly
+                # stale) depth signal dispatch does.
+                depth = sum(snaps[i][0] for i in mask)
+                if fleet["shed_queue"] > 0 and depth >= fleet["shed_queue"]:
+                    shed += 1
+                    continue
+                cap = max(fleet["degrade_cap"], 1)
+                if fleet["degrade_queue"] > 0 and depth >= fleet["degrade_queue"] \
+                        and n_out > cap:
+                    n_out = cap
+                    degraded += 1
+            idx = pick_active(dispatch, snaps, mask, rr)
+            rr += 1
+            engines[idx].sync_clock(at)
+            engines[idx].admit(Req(rid, plen, n_out, tenant, at, prompt, obs))
+            stalled[idx] = False
+            continue
+
+        # ---- one step of the earliest up replica ----
+        now, i = active
+        worked, fin = engines[i].step()
+        if not worked:
+            stalled[i] = True
+        for (rid, l, t, ntok) in fin:
+            finished += 1
+            lat.append(l)
+            ttft.append(t)
+            tenant_lat[rid_tenant[rid]].append(l)
+            tenant_ttft[rid_tenant[rid]].append(t)
+            tenant_slow[rid_tenant[rid]].append(l / float(max(ntok, 1)))
+            class_lat[fleet_class_of(fleet, rid_tenant[rid])].append(l)
+
+    # Conservation: every arrival is finished, shed, or lost — nothing
+    # double-counted, nothing silently dropped.
+    expected = n_total - shed - lost
+    assert finished == expected, (
+        f"fleet accounting broke: {finished} finished + {shed} shed + "
+        f"{lost} lost != {n_total} arrivals"
+    )
+    makespan = max(e.now for e in engines)
+    max_starve = 0.0
+    for e in engines:
+        if e.max_wait_age > max_starve:
+            max_starve = e.max_wait_age
+    pred_pairs = []
+    for e in engines:
+        pred_pairs.extend(e.pred_pairs)
+    counts = new_phase_counts()
+    counts["dispatch"] += rr
+    return {
+        "trace_events": [],
+        "phase_counts": counts,
+        "timing": None,
+        "predictor": engines[0].predictor.name,
+        "pred_pairs": pred_pairs,
+        "n": finished,
+        "lat": lat,
+        "ttft": ttft,
+        "preemptions": sum(e.m_preemptions for e in engines),
+        "discards": sum(e.m_discards for e in engines),
+        "migrations": n_migrations,
+        "kv_peak": max(e.peak_mem for e in engines),
+        "per_replica": [e.n_finished for e in engines],
+        "makespan": makespan,
+        "iters": sum(e.n_iter for e in engines),
+        "sel_ops": sum(e.selector_ops() for e in engines),
+        "tenant_lat": tenant_lat,
+        "tenant_ttft": tenant_ttft,
+        "tenant_slow": tenant_slow,
+        "max_starve": max_starve,
+        "prefix_hits": sum(e.kv.prefix_hits for e in engines),
+        "reused_tokens": sum(e.kv.reused_tokens for e in engines),
+        # FleetOutcome — the `fleet` section of a BENCH_fleet.json row.
+        "fleet": {
+            "arrivals": n_total,
+            "crashes": n_crashes,
+            "recoveries": recoveries,
+            "redispatched": redispatched,
+            "lost": lost,
+            "scale_ups": scale_ups,
+            "scale_downs": scale_downs,
+            "shed": shed,
+            "degraded": degraded,
+            "up_min": up_min,
+            "up_max": up_max,
+            "interactive_p99_s": percentile(class_lat[0], 99.0) if class_lat[0] else 0.0,
+            "batch_p99_s": percentile(class_lat[1], 99.0) if class_lat[1] else 0.0,
+            "autoscaler": fleet["autoscaler"],
+            "failure_rate": fleet["failure_rate"],
+            "boot_delay_s": fleet["boot_delay_s"],
+            "stale_s": fleet["stale_s"],
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
 # Scenarios (rust/src/sim/scenario.rs builtins — keep in sync!)
 # ---------------------------------------------------------------------------
 
@@ -2312,6 +2792,37 @@ def builtin_scenarios():
             ],
             400, 2718, "jsq", 16, 0.4, 0.4,
         ),
+        # Fleet chaos grid (BENCH_fleet.json, docs/fleet.md): a hot
+        # interactive tenant (steady / diurnal / flash-crowd arrivals)
+        # plus a steady batch tenant — on a 6-replica fleet of small
+        # slots, 4 in service at t=0 and two cold spares on slower
+        # hardware. The diurnal phases mirror TenantProfile::diurnal
+        # (period 2 s over six graded steps); the flash phases mirror
+        # TenantProfile::flash_crowd (baseline 1 s, 3x spike for 1 s,
+        # baseline forever).
+        "fleet-steady": (
+            [
+                (180.0, -0.3, []),
+                (40.0, 0.8, []),
+            ],
+            600, 606, "jsq", 16, 0.5, 0.4,
+        ),
+        "fleet-diurnal": (
+            [
+                (150.0, -0.3, [(0.5, 2.0 / 6.0), (0.8, 2.0 / 6.0),
+                               (1.3, 2.0 / 6.0), (1.6, 2.0 / 6.0),
+                               (1.3, 2.0 / 6.0), (0.8, 2.0 / 6.0)]),
+                (40.0, 0.8, []),
+            ],
+            600, 606, "jsq", 16, 0.5, 0.4,
+        ),
+        "fleet-flash": (
+            [
+                (120.0, -0.3, [(1.0, 1.0), (3.0, 1.0), (1.0, 1e9)]),
+                (40.0, 0.8, []),
+            ],
+            600, 606, "jsq", 16, 0.5, 0.4,
+        ),
     }
 
 
@@ -2333,6 +2844,9 @@ def scenario_tenant_names():
         "fair-fleet": ["hot", "tail"],
         "pred-steady": ["shifting", "stable"],
         "pred-drift": ["shifting", "stable"],
+        "fleet-steady": ["interactive", "batch"],
+        "fleet-diurnal": ["interactive", "batch"],
+        "fleet-flash": ["interactive", "batch"],
     }
 
 
@@ -2809,12 +3323,78 @@ def scale_rows(scenario_names=SCALE_SCENARIOS):
     return rows
 
 
+# Fleet chaos sweep (rust/src/sim/scenario.rs run_fleet_sweep — keep in
+# sync): each fleet scenario × failure rate {0, FLEET_FAILURE_RATE} ×
+# autoscaler {off, on} at FLEET_REPLICAS replicas under TRAIL c=0.8,
+# every cell of a scenario on the identical trace (and the failure
+# cells on the identical crash schedule), so the autoscaler-on vs -off
+# comparison is paired. Migration stays off — fleet dynamics owns
+# request movement.
+FLEET_SCHEMA = "trail.simlab.fleet/v1"
+FLEET_REPLICAS = 6
+FLEET_FAILURE_RATE = 0.4
+FLEET_SCENARIOS = ("fleet-steady", "fleet-diurnal", "fleet-flash")
+FLEET_POLICY = ("trail", 0.8)
+
+
+def chaos_fleet():
+    """scenario.rs chaos_fleet — the chaos grid's fleet regime: crash
+    recovery in 2 s, redispatch on, a backlog autoscaler over 4..=6
+    replicas with a 0.75 s boot, 50 ms-stale dispatch snapshots,
+    batch-class admission control, and two slow-generation spares. The
+    sweep flips failure_rate and autoscaler per cell."""
+    fl = default_fleet()
+    fl.update({
+        "seed": 1337,
+        "failure_rate": 0.0,
+        "horizon_s": 30.0,
+        "recovery_s": 2.0,
+        "redispatch": True,
+        "autoscaler": False,
+        "min_replicas": 3,
+        "max_replicas": 0,
+        "initial_up": 4,
+        "boot_delay_s": 0.75,
+        "check_interval_s": 0.25,
+        "up_backlog": 6.0,
+        "down_backlog": 1.0,
+        "stale_s": 0.05,
+        "slo_classes": [0, 1],
+        "shed_queue": 48,
+        "degrade_queue": 32,
+        "degrade_cap": 24,
+        "cost_mults": [1.0, 1.0, 1.0, 1.0, 1.35, 1.35],
+    })
+    return fl
+
+
+def fleet_rows():
+    rows = []
+    scs = builtin_scenarios()
+    for name in FLEET_SCENARIOS:
+        tenants, n, seed, dispatch, slots, pool_frac, noise = scs[name]
+        trace = generate_trace(tenants, n, seed)
+        pool_tokens = int((slots * MAX_SEQ) * pool_frac)
+        for failure_rate in (0.0, FLEET_FAILURE_RATE):
+            for autoscaler in (False, True):
+                fl = chaos_fleet()
+                fl["failure_rate"] = failure_rate
+                fl["autoscaler"] = autoscaler
+                out = run_fleet_sim(trace, FLEET_POLICY, FLEET_REPLICAS, dispatch,
+                                    slots, pool_tokens, fl, noise)
+                row = make_row(name, FLEET_POLICY, dispatch, FLEET_REPLICAS, False,
+                               seed, out, tenant_breakdown=True)
+                row["fleet"] = out["fleet"]
+                rows.append(row)
+    return rows
+
+
 DEFAULT_POLICIES = [("fcfs",), ("trail", 1.0), ("trail", 0.8)]
 
 
 def main(argv):
     if not argv or argv[0] not in ("sweep", "sched", "fair", "prefix", "pred", "obs",
-                                   "scale"):
+                                   "scale", "fleet"):
         print(__doc__)
         return 2
     out_path = None
@@ -2860,6 +3440,19 @@ def main(argv):
                 f"n={row['n']} mean={row['mean_latency_s']:.3f}s "
                 f"p99={row['p99_latency_s']:.3f}s req/s={row['throughput_req_s']:.2f} "
                 f"discard={row['discards']}"
+            )
+    elif argv[0] == "fleet":
+        rows = fleet_rows()
+        text = report_json(rows, schema=FLEET_SCHEMA)
+        for row in rows:
+            fr = row["fleet"]
+            scaler = "on" if fr["autoscaler"] else "off"
+            print(
+                f"{row['scenario']:>14} fail={fr['failure_rate']:.2f} "
+                f"scaler={scaler:>3} crash={fr['crashes']} lost={fr['lost']} "
+                f"shed={fr['shed']} up={fr['up_min']}-{fr['up_max']} "
+                f"int_p99={fr['interactive_p99_s']:.3f}s "
+                f"bat_p99={fr['batch_p99_s']:.3f}s discard={row['discards']}"
             )
     elif argv[0] == "pred":
         rows = pred_rows()

@@ -48,6 +48,19 @@ impl CostModel {
     pub fn decode_cost(&self, n_active: usize) -> f64 {
         self.decode_step + self.decode_per_slot * n_active as f64
     }
+
+    /// The same model on a slower (mult > 1) or faster (mult < 1)
+    /// hardware generation: every term scaled once by one multiplier.
+    /// `scaled(1.0)` multiplies each field by exactly 1.0, which is
+    /// bit-identical under IEEE — homogeneous fleets stay byte-frozen.
+    pub fn scaled(&self, mult: f64) -> CostModel {
+        CostModel {
+            decode_step: self.decode_step * mult,
+            decode_per_slot: self.decode_per_slot * mult,
+            prefill_chunk: self.prefill_chunk * mult,
+            readout: self.readout * mult,
+        }
+    }
 }
 
 pub trait ModelBackend {

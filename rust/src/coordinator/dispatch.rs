@@ -173,6 +173,49 @@ impl DispatchPolicy {
         }
         DispatchPolicy::LeastPredictedWork.pick(snaps, rr_counter, unseen_estimate)
     }
+
+    /// [`DispatchPolicy::pick`] restricted to a live subset of the pool
+    /// (the fleet co-sim path, where crashed/draining replicas must not
+    /// receive work). `active` lists the eligible replica indices in
+    /// ascending order; the return value is a *global* replica index
+    /// drawn from it. Semantics per policy match `pick` over the
+    /// sub-pool: round-robin cycles the active set, JSQ/least-work break
+    /// ties by global index (so the fresh-fleet special case `active ==
+    /// 0..n` picks exactly what `pick` picks). Cache-affinity is not
+    /// supported here — the fleet scenarios run with the prefix cache
+    /// off, and an affinity pick over a masked pool has no meaningful
+    /// hint stream to read.
+    pub fn pick_active(
+        &self,
+        snaps: &[ReplicaSnapshot],
+        active: &[usize],
+        rr_counter: u64,
+        unseen_estimate: f64,
+    ) -> usize {
+        assert!(!active.is_empty(), "pick_active over an empty live set");
+        match self {
+            DispatchPolicy::RoundRobin => active[(rr_counter % active.len() as u64) as usize],
+            DispatchPolicy::JoinShortestQueue => active
+                .iter()
+                .copied()
+                .min_by_key(|&i| (snaps[i].queued, i))
+                .unwrap(),
+            DispatchPolicy::LeastPredictedWork => active
+                .iter()
+                .copied()
+                .min_by(|&i, &j| {
+                    snaps[i]
+                        .estimated_work(unseen_estimate)
+                        .total_cmp(&snaps[j].estimated_work(unseen_estimate))
+                        .then(snaps[i].queued.cmp(&snaps[j].queued))
+                        .then(i.cmp(&j))
+                })
+                .unwrap(),
+            DispatchPolicy::CacheAffinity => {
+                panic!("cache-affinity dispatch is not supported under fleet dynamics")
+            }
+        }
+    }
 }
 
 /// Pool-side view of one replica at dispatch time.

@@ -820,6 +820,43 @@ impl<B: ModelBackend> ServingEngine<B> {
         rid
     }
 
+    /// Crash teardown: drain *every* unfinished request, in vector
+    /// order, exactly as `take_migratable` strips one — KV freed,
+    /// prefill progress zeroed, phase reset for recomputation elsewhere.
+    /// Unlike migration no `MigrateOut` events are traced and no
+    /// migrated-out counters move: the replica is dead, not
+    /// cooperating, and the fleet driver records the crash itself.
+    /// Refcount-0 prefix-trie blocks are freed with their slots; the
+    /// trie itself survives only in the sense that a future recovery
+    /// restarts this engine object with whatever the live slots rebuild.
+    pub fn take_all_for_crash(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        for mut r in std::mem::take(&mut self.requests) {
+            if r.phase == Phase::Finished {
+                continue;
+            }
+            self.n_admitted -= 1;
+            self.shares.on_remove(r.tenant);
+            self.sched_idx.remove(r.spec.rid);
+            self.rid_pos.remove(r.spec.rid);
+            if let Some(slot) = r.slot.take() {
+                self.kv.free(slot, r.spec.rid);
+                self.res_idx.remove(r.spec.rid);
+            }
+            r.prefilled = 0;
+            r.kv_written = 0;
+            r.phase = if r.generated == 0 {
+                Phase::Waiting
+            } else {
+                Phase::Discarded
+            };
+            r.n_migrations += 1;
+            out.push(r);
+        }
+        self.publish_status();
+        out
+    }
+
     /// Longest whole-block resident prefix of `prompt` in this
     /// replica's trie (0 when the prefix cache is off) — the affinity
     /// dispatch signal.

@@ -43,9 +43,10 @@ fn main() {
         Some("pred") => cmd_pred(&args),
         Some("obs") => cmd_obs(&args),
         Some("scale") => cmd_scale(&args),
+        Some("fleet") => cmd_fleet(&args),
         _ => {
             eprintln!(
-                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair|prefix|pred|obs|scale> [options]\n\
+                "usage: trail-serve <info|serve|simulate|theory|server|sim|sched|fair|prefix|pred|obs|scale|fleet> [options]\n\
                  \n\
                  serve    — run a serving benchmark against the AOT model\n\
                  \x20        --policy fcfs|sjf|trail|srpt|trail-c<M>  (default trail)\n\
@@ -99,6 +100,11 @@ fn main() {
                  \x20        serial byte-for-byte), wall speedup goes to the\n\
                  \x20        timings file  [--scenarios scale-10k,scale-100k]\n\
                  \x20        [--out BENCH_scale.json] [--timings-json timings.json]\n\
+                 fleet    — chaos grid (BENCH_fleet.json, docs/fleet.md):\n\
+                 \x20        fleet scenarios x failure rate x autoscaler with\n\
+                 \x20        crash/recovery, drain scale-down, stale dispatch\n\
+                 \x20        snapshots, and SLO admission control\n\
+                 \x20        [--out BENCH_fleet.json]\n\
                  info     — print artifact/config summary"
             );
             2
@@ -870,6 +876,49 @@ fn cmd_obs(args: &Args) -> i32 {
             "report ({} rows, schema {}) -> {path}",
             out.report.rows.len(),
             trail::sim::OBS_SCHEMA_VERSION
+        );
+    }
+    0
+}
+
+fn cmd_fleet(args: &Args) -> i32 {
+    // Embedded config, like the other bench subcommands: the checked-in
+    // BENCH_fleet.json and the Python mirror pin the embedded defaults.
+    let cfg = Config::embedded_default();
+    let report = match trail::sim::run_fleet_sweep(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fleet sweep failed: {e}");
+            return 1;
+        }
+    };
+    print!("{}", report.render_table());
+    // Headline: does the autoscaler hold the interactive p99 when a
+    // flash crowd lands on top of crash injection? Compare the two
+    // fleet-flash failure cells (identical trace + crash schedule).
+    let cell = |autoscaler: bool| {
+        report.rows.iter().find_map(|r| {
+            let fl = r.fleet.as_ref()?;
+            (r.scenario == "fleet-flash" && fl.failure_rate > 0.0 && fl.autoscaler == autoscaler)
+                .then_some(fl.interactive_p99_s)
+        })
+    };
+    if let (Some(off), Some(on)) = (cell(false), cell(true)) {
+        println!(
+            "flash crowd + failures: interactive p99 {:.3}s (autoscaler off) -> {:.3}s (on)",
+            off, on
+        );
+    }
+    let path = args.str_or("out", "").to_string();
+    if !path.is_empty() {
+        if let Err(e) = report.save(&path) {
+            eprintln!("write {path} failed: {e}");
+            return 1;
+        }
+        println!(
+            "report ({} rows, schema {}) -> {path}",
+            report.rows.len(),
+            trail::sim::FLEET_SCHEMA_VERSION
         );
     }
     0

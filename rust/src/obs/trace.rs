@@ -73,6 +73,17 @@ pub enum TraceKind {
     /// by evicting `vrid` (rank `vkey`) — the losing side of the
     /// comparison, straight from `ensure_resident`.
     SchedEvict { key: f64, vrid: u64, vkey: f64 },
+    /// Fleet event: `replica` left service (crash, or drain completion).
+    ReplicaDown { replica: u32 },
+    /// Fleet event: `replica` entered service (boot or recovery done).
+    ReplicaUp { replica: u32 },
+    /// Fleet event: the autoscaler scheduled a boot of `replica`.
+    ScaleUp { replica: u32 },
+    /// Fleet event: the autoscaler started draining `replica`.
+    ScaleDown { replica: u32 },
+    /// Admission control shed request `rid` (SLO batch class) at the
+    /// door: never admitted, never finished.
+    Shed { tenant: u32 },
 }
 
 impl TraceKind {
@@ -89,6 +100,11 @@ impl TraceKind {
             TraceKind::Finish { .. } => "finish",
             TraceKind::SchedAlloc { .. } => "sched_alloc",
             TraceKind::SchedEvict { .. } => "sched_evict",
+            TraceKind::ReplicaDown { .. } => "replica_down",
+            TraceKind::ReplicaUp { .. } => "replica_up",
+            TraceKind::ScaleUp { .. } => "scale_up",
+            TraceKind::ScaleDown { .. } => "scale_down",
+            TraceKind::Shed { .. } => "shed",
         }
     }
 }
@@ -139,6 +155,15 @@ impl TraceEvent {
                 pairs.push(("key", Json::Num(*key)));
                 pairs.push(("vrid", Json::Num(*vrid as f64)));
                 pairs.push(("vkey", Json::Num(*vkey)));
+            }
+            TraceKind::ReplicaDown { replica }
+            | TraceKind::ReplicaUp { replica }
+            | TraceKind::ScaleUp { replica }
+            | TraceKind::ScaleDown { replica } => {
+                pairs.push(("replica", Json::Num(*replica as f64)));
+            }
+            TraceKind::Shed { tenant } => {
+                pairs.push(("tenant", Json::Num(*tenant as f64)));
             }
             TraceKind::PrefillDone
             | TraceKind::FirstToken
@@ -303,6 +328,27 @@ mod tests {
             line,
             r#"{"attach":64,"credit":-0.25,"key":42,"kind":"sched_alloc","locked":1,"rep":1,"rid":7,"seq":3,"starve":2,"t":0.5}"#
         );
+    }
+
+    #[test]
+    fn fleet_event_lines_pin_their_format() {
+        let down = ev(1.25, 6, 0, TraceKind::ReplicaDown { replica: 3 });
+        assert_eq!(
+            down.to_line(),
+            r#"{"kind":"replica_down","rep":6,"replica":3,"rid":7,"seq":0,"t":1.25}"#
+        );
+        let shed = ev(2.0, 6, 1, TraceKind::Shed { tenant: 1 });
+        assert_eq!(
+            shed.to_line(),
+            r#"{"kind":"shed","rep":6,"rid":7,"seq":1,"t":2,"tenant":1}"#
+        );
+        for (kind, label) in [
+            (TraceKind::ReplicaUp { replica: 0 }, "replica_up"),
+            (TraceKind::ScaleUp { replica: 5 }, "scale_up"),
+            (TraceKind::ScaleDown { replica: 5 }, "scale_down"),
+        ] {
+            assert_eq!(kind.label(), label);
+        }
     }
 
     #[test]

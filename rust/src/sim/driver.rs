@@ -68,7 +68,8 @@ use anyhow::Result;
 use crate::coordinator::backend::ModelBackend;
 use crate::coordinator::dispatch::{DispatchPolicy, ReplicaSnapshot, DEFAULT_UNSEEN_JOB_ESTIMATE};
 use crate::coordinator::engine::ServingEngine;
-use crate::obs::{sort_events, PhaseCounts, TimingStats, TraceEvent};
+use crate::obs::{sort_events, PhaseCounts, TimingStats, TraceEvent, TraceKind};
+use crate::sim::fleet::{crash_schedule, FleetConfig, FleetOutcome, SLO_BATCH};
 use crate::util::stats::Samples;
 use crate::workload::TraceEntry;
 
@@ -139,6 +140,9 @@ pub struct SimOutcome {
     /// Wall-clock phase spans merged over replicas (`None` with the
     /// phase timer off). Never serialized into frozen baselines.
     pub timing: Option<TimingStats>,
+    /// Fleet-dynamics counters — `run_fleet` serves only; `None` on
+    /// every other execution path (docs/fleet.md).
+    pub fleet: Option<FleetOutcome>,
 }
 
 impl SimOutcome {
@@ -204,6 +208,84 @@ fn zero_snaps(n: usize) -> Vec<ReplicaSnapshot> {
     ]
 }
 
+/// Refresh the propagated load signals from engine truth if virtual
+/// time `t` has crossed into a new `stale_s` epoch. Only up replicas
+/// publish (a down replica's last snapshot goes stale with it, exactly
+/// like a real status plane). No-op when staleness is disabled. Keep in
+/// sync with python/simref.py `refresh_published`.
+fn refresh_published<B: ModelBackend>(
+    engines: &[ServingEngine<B>],
+    up: &[bool],
+    stale_s: f64,
+    t: f64,
+    published: &mut [ReplicaSnapshot],
+    last_epoch: &mut i64,
+) {
+    if stale_s <= 0.0 {
+        return;
+    }
+    let epoch = (t / stale_s).floor() as i64;
+    if epoch == *last_epoch {
+        return;
+    }
+    *last_epoch = epoch;
+    for (i, e) in engines.iter().enumerate() {
+        if up[i] {
+            published[i] = ReplicaSnapshot::from_status(&e.status());
+        }
+    }
+}
+
+/// The load signals dispatch decides from: the propagated (possibly
+/// stale) snapshots when a staleness delay is configured, fresh engine
+/// truth otherwise. Fresh mode recomputes per call, matching the serial
+/// loop's dirty-cache semantics byte-for-byte (`from_status` is pure).
+fn fleet_snaps<B: ModelBackend>(
+    engines: &[ServingEngine<B>],
+    stale_s: f64,
+    published: &[ReplicaSnapshot],
+) -> Vec<ReplicaSnapshot> {
+    if stale_s > 0.0 {
+        published.to_vec()
+    } else {
+        engines
+            .iter()
+            .map(|e| ReplicaSnapshot::from_status(&e.status()))
+            .collect()
+    }
+}
+
+/// Append one fleet event under the driver's pseudo-replica index with
+/// its own monotone `seq` (the global `(t, rep, seq)` sort keeps the
+/// merged stream deterministic).
+fn emit_fleet(
+    events: &mut Vec<TraceEvent>,
+    seq: &mut u64,
+    rep: u32,
+    t: f64,
+    rid: u64,
+    kind: TraceKind,
+) {
+    events.push(TraceEvent {
+        t,
+        rep,
+        seq: *seq,
+        rid,
+        kind,
+    });
+    *seq += 1;
+}
+
+/// p99 over one SLO class's finish latencies; 0 when the class saw none
+/// (`percentile` on an empty pool is undefined).
+fn class_p99(s: &mut Samples) -> f64 {
+    if s.is_empty() {
+        0.0
+    } else {
+        s.percentile(99.0)
+    }
+}
+
 /// N engines co-simulated on one shared virtual timeline.
 pub struct SimDriver<B: ModelBackend> {
     engines: Vec<ServingEngine<B>>,
@@ -214,6 +296,11 @@ pub struct SimDriver<B: ModelBackend> {
     workers: usize,
     rr: u64,
     n_migrations: u64,
+    /// Fleet events (`replica_down` / `scale_up` / `shed` …) emitted by
+    /// `run_fleet` under the driver's own pseudo-replica index
+    /// (`engines.len()`); merged into the outcome's trace stream by
+    /// `collect_outcome`. Always empty outside fleet runs.
+    fleet_events: Vec<TraceEvent>,
 }
 
 impl<B: ModelBackend> SimDriver<B> {
@@ -228,6 +315,7 @@ impl<B: ModelBackend> SimDriver<B> {
             workers: 1,
             rr: 0,
             n_migrations: 0,
+            fleet_events: Vec::new(),
         }
     }
 
@@ -366,6 +454,459 @@ impl<B: ModelBackend> SimDriver<B> {
         self.collect_outcome(finished, n_total, latency, ttft, per_tenant)
     }
 
+    /// Serve a trace under fleet dynamics (docs/fleet.md): the serial
+    /// event loop of [`SimDriver::run`] extended with a third event
+    /// source — the seeded fleet stream (crashes, boot/recovery
+    /// completions, autoscaler ticks) interleaved with arrivals and
+    /// engine steps in virtual-time order. Serial only: fleet events
+    /// couple replicas mid-timeline exactly like migration does, so the
+    /// worker knob is ignored. With the default (inert) config this is
+    /// byte-identical to `run` — pinned by `rust/tests/fleet.rs`.
+    ///
+    /// Event interleaving: at equal times, fleet events fire before
+    /// arrivals, which fire before steps; within the fleet stream,
+    /// boot/recovery completions beat crashes beat autoscaler ticks,
+    /// ties breaking to the lowest replica index. Keep every rule in
+    /// sync with python/simref.py `run_fleet_sim`.
+    pub fn run_fleet(&mut self, trace: &[TraceEntry], fleet: &FleetConfig) -> Result<SimOutcome> {
+        if self.migration {
+            anyhow::bail!("fleet dynamics owns request movement; run with migration off");
+        }
+        if self.dispatch == DispatchPolicy::CacheAffinity {
+            anyhow::bail!("cache-affinity dispatch is not supported under fleet dynamics");
+        }
+        let n_total = trace.len();
+        let n_rep = self.engines.len();
+        let mut next = 0usize;
+        let mut latency = Samples::new();
+        let mut ttft = Samples::new();
+        let mut finished = 0usize;
+        let rid_tenant: HashMap<u64, u32> = trace.iter().map(|e| (e.spec.rid, e.tenant)).collect();
+        let n_tenants = trace.iter().map(|e| e.tenant + 1).max().unwrap_or(0) as usize;
+        let mut per_tenant: Vec<TenantOutcome> =
+            (0..n_tenants).map(|_| TenantOutcome::default()).collect();
+        // Per-SLO-class latency pools for the interactive/batch p99 the
+        // chaos grid pivots on (push order is finish order; percentile
+        // sorts, so order never shows in the pinned bytes).
+        let mut class_lat = [Samples::new(), Samples::new()];
+
+        let initial_up = if fleet.initial_up == 0 {
+            n_rep
+        } else {
+            fleet.initial_up.min(n_rep)
+        };
+        let max_replicas = if fleet.max_replicas == 0 {
+            n_rep
+        } else {
+            fleet.max_replicas.min(n_rep)
+        };
+        let min_replicas = fleet.min_replicas.clamp(1, max_replicas);
+        let mut up: Vec<bool> = (0..n_rep).map(|i| i < initial_up).collect();
+        let mut draining = vec![false; n_rep];
+        // Pending in-service transitions: `(completion time, is_recovery)`
+        // per replica (autoscaler boots and crash recoveries).
+        let mut pending: Vec<Option<(f64, bool)>> = vec![None; n_rep];
+        let crashes_sched = crash_schedule(fleet.seed, fleet.failure_rate, fleet.horizon_s);
+        let mut crash_ptr = 0usize;
+        let mut tick_k: u64 = 0;
+        let mut stalled = vec![false; n_rep];
+
+        let mut n_crashes = 0u64;
+        let mut recoveries = 0u64;
+        let mut redispatched = 0u64;
+        let mut lost = 0u64;
+        let mut scale_ups = 0u64;
+        let mut scale_downs = 0u64;
+        let mut shed = 0u64;
+        let mut degraded = 0u64;
+        let mut up_now = initial_up;
+        let mut up_min = up_now;
+        let mut up_max = up_now;
+
+        // Propagated load signals (stale_s > 0): dispatch reads these,
+        // bulk-refreshed from engine truth once per stale_s epoch. All
+        // replicas start empty, so zeros are the t = 0 truth.
+        let mut published = zero_snaps(n_rep);
+        let mut last_epoch: i64 = -1;
+        let mut fleet_seq = 0u64;
+        let drv_rep = n_rep as u32;
+
+        loop {
+            let mut active: Option<(f64, usize)> = None;
+            for (i, e) in self.engines.iter().enumerate() {
+                if !up[i] || stalled[i] || !e.any_schedulable() {
+                    continue;
+                }
+                let now = e.now();
+                if active.map_or(true, |(t, _)| now < t) {
+                    active = Some((now, i));
+                }
+            }
+            let t_arr = if next < n_total { Some(trace[next].at) } else { None };
+            // Down replicas never hold work (crash strips everything;
+            // drain completion requires an empty live set), so this is
+            // the whole-fleet completion check.
+            if t_arr.is_none()
+                && !self
+                    .engines
+                    .iter()
+                    .enumerate()
+                    .any(|(i, e)| up[i] && e.any_schedulable())
+            {
+                break;
+            }
+
+            // ---- next fleet event: (time, kind priority, replica) ----
+            // `hard` events (boot/recovery completions, crashes) are a
+            // finite stream and may fire even when everything is
+            // stalled; autoscaler ticks recur forever and may not (they
+            // cannot unstick a memory-stalled engine, so firing them
+            // with no other event source would loop without progress).
+            let mut fev_hard: Option<(f64, u8, usize)> = None;
+            for (i, p) in pending.iter().enumerate() {
+                if let Some((t, _)) = p {
+                    if fev_hard.map_or(true, |f| (*t, 0u8, i) < f) {
+                        fev_hard = Some((*t, 0, i));
+                    }
+                }
+            }
+            if crash_ptr < crashes_sched.len() {
+                let (t, _) = crashes_sched[crash_ptr];
+                if fev_hard.map_or(true, |f| (t, 1u8, 0usize) < f) {
+                    fev_hard = Some((t, 1, 0));
+                }
+            }
+            let mut fev = fev_hard;
+            if fleet.autoscaler {
+                let t = (tick_k + 1) as f64 * fleet.check_interval_s;
+                if fev.map_or(true, |f| (t, 2u8, 0usize) < f) {
+                    fev = Some((t, 2, 0));
+                }
+            }
+
+            let mask: Vec<usize> = (0..n_rep).filter(|&i| up[i] && !draining[i]).collect();
+            let chosen = if t_arr.is_none() && active.is_none() {
+                // Work remains but every up engine is memory-stalled:
+                // only a hard fleet event can change anything.
+                if fev_hard.is_none() {
+                    anyhow::bail!(
+                        "co-sim stalled: requests pending but no replica can make progress \
+                         (KV pool too small for any admission?)"
+                    );
+                }
+                fev_hard
+            } else if let Some((tf, _, _)) = fev {
+                let due = t_arr.map_or(true, |ta| tf <= ta)
+                    && active.map_or(true, |(t, _)| tf <= t);
+                if due {
+                    fev
+                } else if mask.is_empty() && next < n_total {
+                    // Arrival into a total blackout: pull the next hard
+                    // event forward (the request waits at the door for
+                    // the boot/recovery) rather than dropping it.
+                    fev_hard
+                } else {
+                    None
+                }
+            } else {
+                None
+            };
+
+            if let Some((tf, kind, r)) = chosen {
+                match kind {
+                    0 => {
+                        // ---- boot / recovery completion ----
+                        let (_, is_recovery) = pending[r].take().expect("pending transition");
+                        up[r] = true;
+                        stalled[r] = false;
+                        self.engines[r].sync_clock(tf);
+                        // A fresh replica announces itself: its published
+                        // snapshot is re-read immediately (real fleets
+                        // gossip membership faster than load).
+                        published[r] = ReplicaSnapshot::from_status(&self.engines[r].status());
+                        if is_recovery {
+                            recoveries += 1;
+                        }
+                        up_now += 1;
+                        up_max = up_max.max(up_now);
+                        emit_fleet(
+                            &mut self.fleet_events,
+                            &mut fleet_seq,
+                            drv_rep,
+                            tf,
+                            0,
+                            TraceKind::ReplicaUp { replica: r as u32 },
+                        );
+                    }
+                    1 => {
+                        // ---- crash ----
+                        let (_, draw) = crashes_sched[crash_ptr];
+                        crash_ptr += 1;
+                        let cands: Vec<usize> = (0..n_rep).filter(|&i| up[i]).collect();
+                        if cands.len() <= 1 {
+                            // Never kill the last replica in service.
+                            continue;
+                        }
+                        let victim = cands[(draw % cands.len() as u64) as usize];
+                        up[victim] = false;
+                        draining[victim] = false;
+                        stalled[victim] = false;
+                        n_crashes += 1;
+                        up_now -= 1;
+                        up_min = up_min.min(up_now);
+                        emit_fleet(
+                            &mut self.fleet_events,
+                            &mut fleet_seq,
+                            drv_rep,
+                            tf,
+                            0,
+                            TraceKind::ReplicaDown { replica: victim as u32 },
+                        );
+                        let orphans = self.engines[victim].take_all_for_crash();
+                        let mask: Vec<usize> =
+                            (0..n_rep).filter(|&i| up[i] && !draining[i]).collect();
+                        if fleet.redispatch && !mask.is_empty() {
+                            refresh_published(
+                                &self.engines,
+                                &up,
+                                fleet.stale_s,
+                                tf,
+                                &mut published,
+                                &mut last_epoch,
+                            );
+                            for req in orphans {
+                                let snaps =
+                                    fleet_snaps(&self.engines, fleet.stale_s, &published);
+                                let tgt = self.dispatch.pick_active(
+                                    &snaps,
+                                    &mask,
+                                    self.rr,
+                                    self.unseen_estimate,
+                                );
+                                self.rr += 1;
+                                self.engines[tgt].sync_clock(tf);
+                                self.engines[tgt].admit_migrated(req);
+                                stalled[tgt] = false;
+                                redispatched += 1;
+                            }
+                        } else {
+                            lost += orphans.len() as u64;
+                        }
+                        if fleet.recovery_s > 0.0 {
+                            pending[victim] = Some((tf + fleet.recovery_s, true));
+                        }
+                    }
+                    _ => {
+                        // ---- autoscaler tick ----
+                        tick_k += 1;
+                        refresh_published(
+                            &self.engines,
+                            &up,
+                            fleet.stale_s,
+                            tf,
+                            &mut published,
+                            &mut last_epoch,
+                        );
+                        let snaps = fleet_snaps(&self.engines, fleet.stale_s, &published);
+                        let backlog: u64 = mask.iter().map(|&i| snaps[i].queued).sum();
+                        let per = backlog as f64 / mask.len().max(1) as f64;
+                        let pending_boots = pending.iter().filter(|p| p.is_some()).count();
+                        if (mask.is_empty() || per >= fleet.up_backlog)
+                            && up_now + pending_boots < max_replicas
+                        {
+                            if let Some(r) =
+                                (0..n_rep).find(|&i| !up[i] && pending[i].is_none())
+                            {
+                                pending[r] = Some((tf + fleet.boot_delay_s, false));
+                                scale_ups += 1;
+                                emit_fleet(
+                                    &mut self.fleet_events,
+                                    &mut fleet_seq,
+                                    drv_rep,
+                                    tf,
+                                    0,
+                                    TraceKind::ScaleUp { replica: r as u32 },
+                                );
+                            }
+                        } else if per <= fleet.down_backlog
+                            && mask.len() > min_replicas
+                            && pending_boots == 0
+                        {
+                            // Drain the highest-index dispatchable
+                            // replica — with ascending `cost_mults`
+                            // that is the slowest hardware generation.
+                            let r = *mask.last().expect("non-empty mask");
+                            draining[r] = true;
+                            scale_downs += 1;
+                            emit_fleet(
+                                &mut self.fleet_events,
+                                &mut fleet_seq,
+                                drv_rep,
+                                tf,
+                                0,
+                                TraceKind::ScaleDown { replica: r as u32 },
+                            );
+                        }
+                        // Drain pump: move every migratable request off
+                        // draining replicas; locked work finishes
+                        // locally and the replica leaves service at the
+                        // first tick that sees it empty.
+                        for r in 0..n_rep {
+                            if !draining[r] {
+                                continue;
+                            }
+                            let mask2: Vec<usize> =
+                                (0..n_rep).filter(|&i| up[i] && !draining[i]).collect();
+                            if !mask2.is_empty() {
+                                while let Some(req) = self.engines[r].take_migratable() {
+                                    let snaps =
+                                        fleet_snaps(&self.engines, fleet.stale_s, &published);
+                                    let tgt = self.dispatch.pick_active(
+                                        &snaps,
+                                        &mask2,
+                                        self.rr,
+                                        self.unseen_estimate,
+                                    );
+                                    self.rr += 1;
+                                    self.engines[tgt].sync_clock(tf);
+                                    self.engines[tgt].admit_migrated(req);
+                                    stalled[tgt] = false;
+                                    stalled[r] = false;
+                                    self.n_migrations += 1;
+                                }
+                            }
+                            if self.engines[r].status().live == 0 {
+                                draining[r] = false;
+                                up[r] = false;
+                                up_now -= 1;
+                                up_min = up_min.min(up_now);
+                                emit_fleet(
+                                    &mut self.fleet_events,
+                                    &mut fleet_seq,
+                                    drv_rep,
+                                    tf,
+                                    0,
+                                    TraceKind::ReplicaDown { replica: r as u32 },
+                                );
+                            }
+                        }
+                    }
+                }
+                continue;
+            }
+
+            // ---- arrivals due before the next step ----
+            if next < n_total && active.map_or(true, |(t, _)| trace[next].at <= t) {
+                let entry = &trace[next];
+                next += 1;
+                if mask.is_empty() {
+                    // Total blackout with nothing pending (chosen would
+                    // have pulled a hard event forward otherwise): the
+                    // request has no door to wait at.
+                    lost += 1;
+                    continue;
+                }
+                let at = entry.at;
+                refresh_published(
+                    &self.engines,
+                    &up,
+                    fleet.stale_s,
+                    at,
+                    &mut published,
+                    &mut last_epoch,
+                );
+                let snaps = fleet_snaps(&self.engines, fleet.stale_s, &published);
+                let mut spec = entry.spec.clone();
+                if fleet.class_of(entry.tenant) == SLO_BATCH {
+                    // SLO admission control reads the same (possibly
+                    // stale) depth signal dispatch does.
+                    let depth: u64 = mask.iter().map(|&i| snaps[i].queued).sum();
+                    if fleet.shed_queue > 0 && depth >= fleet.shed_queue {
+                        shed += 1;
+                        emit_fleet(
+                            &mut self.fleet_events,
+                            &mut fleet_seq,
+                            drv_rep,
+                            at,
+                            spec.rid,
+                            TraceKind::Shed { tenant: entry.tenant },
+                        );
+                        continue;
+                    }
+                    let cap = fleet.degrade_cap.max(1);
+                    if fleet.degrade_queue > 0
+                        && depth >= fleet.degrade_queue
+                        && spec.true_output_len > cap
+                    {
+                        spec.true_output_len = cap;
+                        spec.response.truncate(cap - 1);
+                        degraded += 1;
+                    }
+                }
+                let idx = self
+                    .dispatch
+                    .pick_active(&snaps, &mask, self.rr, self.unseen_estimate);
+                self.rr += 1;
+                self.engines[idx].sync_clock(at);
+                self.engines[idx].admit_from(spec, Some(at), entry.tenant);
+                stalled[idx] = false;
+                continue;
+            }
+
+            // ---- one step of the earliest up replica ----
+            let (_, i) = active.expect("stalled/blackout cases handled above");
+            let outcome = self.engines[i].step()?;
+            if !outcome.worked {
+                stalled[i] = true;
+            }
+            for f in &outcome.finished {
+                finished += 1;
+                record_finish(
+                    &mut latency,
+                    &mut ttft,
+                    &mut per_tenant,
+                    &rid_tenant,
+                    f.latency,
+                    f.ttft,
+                    f.rid,
+                    f.n_tokens,
+                );
+                class_lat[fleet.class_of(rid_tenant[&f.rid]) as usize].push(f.latency);
+            }
+        }
+
+        // Conservation: every arrival is finished, shed, or lost —
+        // nothing double-counted, nothing silently dropped.
+        let expected = n_total - shed as usize - lost as usize;
+        if finished != expected {
+            anyhow::bail!(
+                "fleet accounting broke: {finished} finished + {shed} shed + {lost} lost \
+                 != {n_total} arrivals"
+            );
+        }
+        let mut out = self.collect_outcome(finished, expected, latency, ttft, per_tenant)?;
+        out.fleet = Some(FleetOutcome {
+            arrivals: n_total,
+            crashes: n_crashes,
+            recoveries,
+            redispatched,
+            lost,
+            scale_ups,
+            scale_downs,
+            shed,
+            degraded,
+            up_min,
+            up_max,
+            interactive_p99_s: class_p99(&mut class_lat[0]),
+            batch_p99_s: class_p99(&mut class_lat[1]),
+            autoscaler: fleet.autoscaler,
+            failure_rate: fleet.failure_rate,
+            boot_delay_s: fleet.boot_delay_s,
+            stale_s: fleet.stale_s,
+        });
+        Ok(out)
+    }
+
     /// Shared tail of every execution mode: validate completion, sum the
     /// per-engine metrics in replica-index order, stamp the driver's
     /// dispatch count, and merge+sort the flight-recorder streams.
@@ -420,6 +961,10 @@ impl<B: ModelBackend> SimDriver<B> {
         }
         // The driver owns dispatch: one decision per trace arrival.
         phase_counts.dispatch += self.rr;
+        // Fleet events ride under the driver's pseudo-replica index —
+        // appended after every engine stream (Python mirror order), then
+        // the one global sort puts the merged stream in canonical order.
+        trace_events.append(&mut std::mem::take(&mut self.fleet_events));
         sort_events(&mut trace_events);
         Ok(SimOutcome {
             n_requests: finished,
@@ -442,6 +987,7 @@ impl<B: ModelBackend> SimDriver<B> {
             trace_events,
             phase_counts,
             timing,
+            fleet: None,
         })
     }
 

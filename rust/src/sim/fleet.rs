@@ -1,0 +1,245 @@
+//! Fleet dynamics for the co-simulation: seeded crash/recovery,
+//! autoscaling, heterogeneous replicas, stale dispatch snapshots, and
+//! SLO-class admission control (docs/fleet.md).
+//!
+//! The paper's M/G/1 analysis assumes one fixed, healthy server; the
+//! ROADMAP north-star is a production fleet where replicas die, boot
+//! late, run on mixed hardware generations, and are dispatched to from
+//! propagation-delayed load signals. [`FleetConfig`] describes that
+//! regime declaratively; `SimDriver::run_fleet` interleaves the derived
+//! event stream with arrivals and engine steps on the shared virtual
+//! timeline. Everything is a pure function of the config (crash times
+//! precomputed from one `SplitMix64` stream), so chaos runs stay
+//! run-twice byte-identical — the property every `BENCH_*.json`
+//! baseline is built on.
+//!
+//! The default config is inert: no crashes, no autoscaler, no staleness,
+//! no admission control, homogeneous cost — `run_fleet` under it serves
+//! the trace exactly like the serial `run` loop (pinned by
+//! `rust/tests/fleet.rs`), which is what keeps the eight pre-fleet
+//! baselines frozen.
+
+use crate::util::rng::SplitMix64;
+
+/// Interactive SLO class (never shed, never degraded).
+pub const SLO_INTERACTIVE: u8 = 0;
+/// Batch SLO class (sheddable / degradable under backlog).
+pub const SLO_BATCH: u8 = 1;
+
+/// Declarative description of one fleet-dynamics regime. All times are
+/// virtual seconds on the co-sim timeline.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Seed of the crash schedule's `SplitMix64` stream (independent of
+    /// the workload seed, so failure patterns can vary on a fixed trace).
+    pub seed: u64,
+    /// Poisson crash intensity (crashes/second over the whole fleet);
+    /// 0 disables crash injection.
+    pub failure_rate: f64,
+    /// Crash times are precomputed on `[0, horizon_s)`; arrivals past
+    /// the horizon see a crash-free fleet.
+    pub horizon_s: f64,
+    /// Crash → back-in-service delay; 0 means a crashed replica never
+    /// recovers on its own (the autoscaler may still boot it).
+    pub recovery_s: f64,
+    /// Re-dispatch a dead replica's in-flight requests through the
+    /// migration path (prefill progress lost, recomputed at the
+    /// receiver); false counts them as lost.
+    pub redispatch: bool,
+    pub autoscaler: bool,
+    /// Scale-down floor (up, non-draining replicas).
+    pub min_replicas: usize,
+    /// Scale-up ceiling; 0 means every built replica.
+    pub max_replicas: usize,
+    /// Replicas in service at t = 0 (lowest indices); 0 means all.
+    pub initial_up: usize,
+    /// Scale-up decision → replica in service (cold-start time).
+    pub boot_delay_s: f64,
+    /// Autoscaler evaluation period.
+    pub check_interval_s: f64,
+    /// Scale up when live requests per up replica reach this.
+    pub up_backlog: f64,
+    /// Scale down (drain the highest-index replica) at or below this.
+    pub down_backlog: f64,
+    /// Dispatch-snapshot propagation delay: load signals refresh only on
+    /// `stale_s` epoch boundaries. 0 = fresh truth (today's behavior;
+    /// liveness is always fresh either way).
+    pub stale_s: f64,
+    /// SLO class per workload tenant index ([`SLO_INTERACTIVE`] /
+    /// [`SLO_BATCH`]); missing entries are interactive.
+    pub slo_classes: Vec<u8>,
+    /// Shed batch-class arrivals while total live depth (over
+    /// dispatchable replicas) is at or above this; 0 disables.
+    pub shed_queue: u64,
+    /// Degrade batch-class arrivals (cap their output length) at or
+    /// above this depth; 0 disables.
+    pub degrade_queue: u64,
+    /// Output-token cap applied to degraded batch requests.
+    pub degrade_cap: usize,
+    /// Per-replica hardware-generation cost multipliers, cycled over the
+    /// replica index (`mults[i % len]` through `CostModel::scaled`);
+    /// empty = homogeneous fleet.
+    pub cost_mults: Vec<f64>,
+}
+
+impl Default for FleetConfig {
+    /// Inert: serves any trace byte-identically to the plain serial
+    /// driver loop (no crashes, no scaling, fresh snapshots, every
+    /// tenant interactive, homogeneous cost).
+    fn default() -> FleetConfig {
+        FleetConfig {
+            seed: 0xF1EE7,
+            failure_rate: 0.0,
+            horizon_s: 60.0,
+            recovery_s: 2.0,
+            redispatch: true,
+            autoscaler: false,
+            min_replicas: 1,
+            max_replicas: 0,
+            initial_up: 0,
+            boot_delay_s: 0.5,
+            check_interval_s: 0.25,
+            up_backlog: 8.0,
+            down_backlog: 1.0,
+            stale_s: 0.0,
+            slo_classes: Vec::new(),
+            shed_queue: 0,
+            degrade_queue: 0,
+            degrade_cap: 24,
+            cost_mults: Vec::new(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// SLO class of a workload tenant (clamped to the two known classes).
+    pub fn class_of(&self, tenant: u32) -> u8 {
+        self.slo_classes
+            .get(tenant as usize)
+            .copied()
+            .unwrap_or(SLO_INTERACTIVE)
+            .min(SLO_BATCH)
+    }
+}
+
+/// Precomputed crash stream: `(time, target draw)` pairs on
+/// `[0, horizon_s)`. Inter-crash gaps are Exp(rate) off one `SplitMix64`
+/// stream; the `u64` draw picks the victim *at fire time* (`draw %
+/// up_candidates.len()`), so the same schedule adapts to whatever
+/// replicas are alive when the crash lands. Keep in sync with
+/// python/simref.py `crash_schedule`.
+pub fn crash_schedule(seed: u64, failure_rate: f64, horizon_s: f64) -> Vec<(f64, u64)> {
+    let mut out = Vec::new();
+    if failure_rate <= 0.0 || horizon_s <= 0.0 {
+        return out;
+    }
+    let mut rng = SplitMix64::new(seed);
+    let mut t = 0.0f64;
+    loop {
+        t += -(1.0 - rng.next_f64()).ln() / failure_rate;
+        if t >= horizon_s {
+            return out;
+        }
+        out.push((t, rng.next_u64()));
+    }
+}
+
+/// Fleet-level counters of one `run_fleet` serve, echoing the knobs a
+/// chaos-grid row is keyed by. `finished + shed + lost == arrivals` is
+/// asserted by the driver (conservation).
+#[derive(Clone, Debug, Default)]
+pub struct FleetOutcome {
+    /// Trace arrivals offered (finished + shed + lost).
+    pub arrivals: usize,
+    pub crashes: u64,
+    /// Crashed replicas that came back after `recovery_s`.
+    pub recoveries: u64,
+    /// In-flight requests moved off dead replicas.
+    pub redispatched: u64,
+    /// Requests dropped: in-flight on a dead replica with redispatch
+    /// off (or no live receiver), or arriving into a total blackout.
+    pub lost: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Batch-class arrivals shed at the door.
+    pub shed: u64,
+    /// Batch-class arrivals admitted with a capped output length.
+    pub degraded: u64,
+    /// Fewest replicas simultaneously in service.
+    pub up_min: usize,
+    /// Most replicas simultaneously in service.
+    pub up_max: usize,
+    /// p99 latency over interactive-class finishes (0 if none).
+    pub interactive_p99_s: f64,
+    /// p99 latency over batch-class finishes (0 if none).
+    pub batch_p99_s: f64,
+    // Config echo, so report rows carry their cell key.
+    pub autoscaler: bool,
+    pub failure_rate: f64,
+    pub boot_delay_s: f64,
+    pub stale_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_schedule_is_deterministic_sorted_and_bounded() {
+        let a = crash_schedule(1337, 0.5, 40.0);
+        let b = crash_schedule(1337, 0.5, 40.0);
+        assert_eq!(a.len(), b.len());
+        for ((ta, da), (tb, db)) in a.iter().zip(&b) {
+            assert_eq!(ta.to_bits(), tb.to_bits());
+            assert_eq!(da, db);
+        }
+        assert!(!a.is_empty(), "rate 0.5 over 40s must produce crashes");
+        for w in a.windows(2) {
+            assert!(w[0].0 < w[1].0, "crash times must be strictly increasing");
+        }
+        for (t, _) in &a {
+            assert!(*t > 0.0 && *t < 40.0);
+        }
+    }
+
+    #[test]
+    fn crash_schedule_rate_scales_count() {
+        let slow = crash_schedule(7, 0.1, 100.0).len();
+        let fast = crash_schedule(7, 1.0, 100.0).len();
+        assert!(
+            fast > slow * 3,
+            "10x the rate must produce far more crashes ({slow} vs {fast})"
+        );
+    }
+
+    #[test]
+    fn zero_rate_or_horizon_is_empty() {
+        assert!(crash_schedule(7, 0.0, 100.0).is_empty());
+        assert!(crash_schedule(7, 0.5, 0.0).is_empty());
+    }
+
+    #[test]
+    fn default_config_is_inert() {
+        let f = FleetConfig::default();
+        assert_eq!(f.failure_rate, 0.0);
+        assert!(!f.autoscaler);
+        assert_eq!(f.stale_s, 0.0);
+        assert_eq!(f.shed_queue, 0);
+        assert_eq!(f.degrade_queue, 0);
+        assert!(f.cost_mults.is_empty());
+        assert_eq!(f.initial_up, 0, "0 = every replica in service");
+        assert_eq!(f.class_of(0), SLO_INTERACTIVE);
+    }
+
+    #[test]
+    fn class_of_clamps_and_defaults() {
+        let f = FleetConfig {
+            slo_classes: vec![0, 1, 7],
+            ..FleetConfig::default()
+        };
+        assert_eq!(f.class_of(0), SLO_INTERACTIVE);
+        assert_eq!(f.class_of(1), SLO_BATCH);
+        assert_eq!(f.class_of(2), SLO_BATCH, "unknown classes clamp to batch");
+        assert_eq!(f.class_of(9), SLO_INTERACTIVE, "missing entries are interactive");
+    }
+}

@@ -11,18 +11,22 @@
 //! `benchmarks/BENCH_seed.json`.
 
 pub mod driver;
+pub mod fleet;
 pub mod report;
 pub mod scenario;
 
 pub use driver::{SimDriver, SimOutcome, TenantOutcome};
+pub use fleet::{crash_schedule, FleetConfig, FleetOutcome, SLO_BATCH, SLO_INTERACTIVE};
 pub use report::{
-    BenchReport, FairnessRow, ObsRow, PhaseRow, PredRow, PrefixRow, ScaleRow, SlowdownRow,
-    SweepRow, TenantRow, FAIR_SCHEMA_VERSION, OBS_SCHEMA_VERSION, PREFIX_SCHEMA_VERSION,
-    PRED_SCHEMA_VERSION, SCALE_SCHEMA_VERSION, SCHED_SCHEMA_VERSION, SCHEMA_VERSION,
+    BenchReport, FairnessRow, FleetRow, ObsRow, PhaseRow, PredRow, PrefixRow, ScaleRow,
+    SlowdownRow, SweepRow, TenantRow, FAIR_SCHEMA_VERSION, FLEET_SCHEMA_VERSION,
+    OBS_SCHEMA_VERSION, PREFIX_SCHEMA_VERSION, PRED_SCHEMA_VERSION, SCALE_SCHEMA_VERSION,
+    SCHED_SCHEMA_VERSION, SCHEMA_VERSION,
 };
 pub use scenario::{
-    builtin, builtin_names, fair_modes, prefix_scenario, run_fair_sweep, run_obs_sweep,
-    run_pred_sweep, run_prefix_sweep, run_scale_sweep, run_sched_sweep, run_sweep, run_sweep_obs,
-    CellWall, ObsSweepOutput, SimScenario, SweepConfig, FAIR_FLEET_QUANTUM_S, FAIR_QUANTUM_S,
-    PREFIX_SHARES, SCALE_REPLICAS, SCALE_SCENARIOS, SCALE_WORKERS,
+    builtin, builtin_names, chaos_fleet, fair_modes, prefix_scenario, run_fair_sweep,
+    run_fleet_sweep, run_obs_sweep, run_pred_sweep, run_prefix_sweep, run_scale_sweep,
+    run_sched_sweep, run_sweep, run_sweep_obs, CellWall, ObsSweepOutput, SimScenario, SweepConfig,
+    FAIR_FLEET_QUANTUM_S, FAIR_QUANTUM_S, FLEET_FAILURE_RATE, FLEET_REPLICAS, PREFIX_SHARES,
+    SCALE_REPLICAS, SCALE_SCENARIOS, SCALE_WORKERS,
 };

@@ -56,6 +56,13 @@ pub const OBS_SCHEMA_VERSION: &str = "trail.simlab.obs/v1";
 /// measured separately via `--timings-json` and never pinned. See
 /// docs/simlab.md.
 pub const SCALE_SCHEMA_VERSION: &str = "trail.simlab.scale/v1";
+/// Fleet-dynamics reports (`BENCH_fleet.json`): the bench rows plus a
+/// `fleet` section per row — the chaos cell's key (failure rate,
+/// autoscaler, boot delay, staleness) and its counters (crashes,
+/// recoveries, redispatched/lost requests, scale actions, shed/degraded
+/// admissions, up-replica extremes, per-SLO-class p99). See
+/// docs/fleet.md for the field-by-field schema.
+pub const FLEET_SCHEMA_VERSION: &str = "trail.simlab.fleet/v1";
 
 /// Per-tenant latency row (present when a sweep runs with
 /// `tenant_breakdown`; tenant names come from the scenario's
@@ -495,6 +502,99 @@ impl ScaleRow {
     }
 }
 
+/// The `fleet` section of a `BENCH_fleet.json` row: the chaos cell's
+/// key knobs plus the fleet-dynamics counters of the serve
+/// (docs/fleet.md). Conservation holds per row: `arrivals` = finished +
+/// `shed` + `lost`, with finished = the row's `n`.
+#[derive(Clone, Debug)]
+pub struct FleetRow {
+    pub arrivals: usize,
+    pub crashes: u64,
+    pub recoveries: u64,
+    pub redispatched: u64,
+    pub lost: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub shed: u64,
+    pub degraded: u64,
+    pub up_min: usize,
+    pub up_max: usize,
+    pub interactive_p99_s: f64,
+    pub batch_p99_s: f64,
+    pub autoscaler: bool,
+    pub failure_rate: f64,
+    pub boot_delay_s: f64,
+    pub stale_s: f64,
+}
+
+impl FleetRow {
+    pub fn from_outcome(fl: &crate::sim::fleet::FleetOutcome) -> FleetRow {
+        FleetRow {
+            arrivals: fl.arrivals,
+            crashes: fl.crashes,
+            recoveries: fl.recoveries,
+            redispatched: fl.redispatched,
+            lost: fl.lost,
+            scale_ups: fl.scale_ups,
+            scale_downs: fl.scale_downs,
+            shed: fl.shed,
+            degraded: fl.degraded,
+            up_min: fl.up_min,
+            up_max: fl.up_max,
+            interactive_p99_s: fl.interactive_p99_s,
+            batch_p99_s: fl.batch_p99_s,
+            autoscaler: fl.autoscaler,
+            failure_rate: fl.failure_rate,
+            boot_delay_s: fl.boot_delay_s,
+            stale_s: fl.stale_s,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("autoscaler", Json::Bool(self.autoscaler)),
+            ("batch_p99_s", Json::Num(self.batch_p99_s)),
+            ("boot_delay_s", Json::Num(self.boot_delay_s)),
+            ("crashes", Json::Num(self.crashes as f64)),
+            ("degraded", Json::Num(self.degraded as f64)),
+            ("failure_rate", Json::Num(self.failure_rate)),
+            ("interactive_p99_s", Json::Num(self.interactive_p99_s)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("recoveries", Json::Num(self.recoveries as f64)),
+            ("redispatched", Json::Num(self.redispatched as f64)),
+            ("scale_downs", Json::Num(self.scale_downs as f64)),
+            ("scale_ups", Json::Num(self.scale_ups as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("stale_s", Json::Num(self.stale_s)),
+            ("up_max", Json::Num(self.up_max as f64)),
+            ("up_min", Json::Num(self.up_min as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> FleetRow {
+        FleetRow {
+            arrivals: j.at(&["arrivals"]).as_usize(),
+            crashes: j.at(&["crashes"]).as_i64() as u64,
+            recoveries: j.at(&["recoveries"]).as_i64() as u64,
+            redispatched: j.at(&["redispatched"]).as_i64() as u64,
+            lost: j.at(&["lost"]).as_i64() as u64,
+            scale_ups: j.at(&["scale_ups"]).as_i64() as u64,
+            scale_downs: j.at(&["scale_downs"]).as_i64() as u64,
+            shed: j.at(&["shed"]).as_i64() as u64,
+            degraded: j.at(&["degraded"]).as_i64() as u64,
+            up_min: j.at(&["up_min"]).as_usize(),
+            up_max: j.at(&["up_max"]).as_usize(),
+            interactive_p99_s: j.at(&["interactive_p99_s"]).as_f64(),
+            batch_p99_s: j.at(&["batch_p99_s"]).as_f64(),
+            autoscaler: matches!(j.at(&["autoscaler"]), Json::Bool(true)),
+            failure_rate: j.at(&["failure_rate"]).as_f64(),
+            boot_delay_s: j.at(&["boot_delay_s"]).as_f64(),
+            stale_s: j.at(&["stale_s"]).as_f64(),
+        }
+    }
+}
+
 /// One (scenario × policy × replicas) cell of a sweep.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
@@ -541,6 +641,9 @@ pub struct SweepRow {
     /// Worker count + phase table — scale sweeps only; `None` keeps
     /// every other serialisation byte-identical.
     pub scale: Option<ScaleRow>,
+    /// Chaos-cell key + fleet-dynamics counters — fleet sweeps only;
+    /// `None` keeps every other serialisation byte-identical.
+    pub fleet: Option<FleetRow>,
 }
 
 impl SweepRow {
@@ -635,6 +738,7 @@ impl SweepRow {
             pred: None,
             obs: None,
             scale: None,
+            fleet: None,
         }
     }
 
@@ -700,6 +804,9 @@ impl SweepRow {
         if let Some(scale) = &self.scale {
             pairs.push(("scale", scale.to_json()));
         }
+        if let Some(fleet) = &self.fleet {
+            pairs.push(("fleet", fleet.to_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -748,6 +855,7 @@ impl SweepRow {
             pred: j.get("pred").map(PredRow::from_json),
             obs: j.get("obs").map(ObsRow::from_json),
             scale: j.get("scale").map(ScaleRow::from_json),
+            fleet: j.get("fleet").map(FleetRow::from_json),
         }
     }
 }
@@ -811,6 +919,13 @@ impl BenchReport {
         }
     }
 
+    pub fn new_fleet(rows: Vec<SweepRow>) -> BenchReport {
+        BenchReport {
+            schema: FLEET_SCHEMA_VERSION.to_string(),
+            rows,
+        }
+    }
+
     /// Deterministic serialisation: fixed top-level layout, one row
     /// object per line (row diffs stay line-local), sorted keys inside
     /// each row, trailing newline.
@@ -849,12 +964,13 @@ impl BenchReport {
             && schema != PRED_SCHEMA_VERSION
             && schema != OBS_SCHEMA_VERSION
             && schema != SCALE_SCHEMA_VERSION
+            && schema != FLEET_SCHEMA_VERSION
         {
             return Err(format!(
                 "schema mismatch: file is '{schema}', this binary reads \
                  '{SCHEMA_VERSION}', '{SCHED_SCHEMA_VERSION}', '{FAIR_SCHEMA_VERSION}', \
-                 '{PREFIX_SCHEMA_VERSION}', '{PRED_SCHEMA_VERSION}', '{OBS_SCHEMA_VERSION}' \
-                 or '{SCALE_SCHEMA_VERSION}'"
+                 '{PREFIX_SCHEMA_VERSION}', '{PRED_SCHEMA_VERSION}', '{OBS_SCHEMA_VERSION}', \
+                 '{SCALE_SCHEMA_VERSION}' or '{FLEET_SCHEMA_VERSION}'"
             ));
         }
         Ok(BenchReport {
@@ -872,6 +988,7 @@ impl BenchReport {
         let pred = self.rows.iter().any(|r| r.pred.is_some());
         let obs = self.rows.iter().any(|r| r.obs.is_some());
         let scale = self.rows.iter().any(|r| r.scale.is_some());
+        let fleet = self.rows.iter().any(|r| r.fleet.is_some());
         let mut headers = vec![
             "scenario", "policy", "disp", "reps", "n", "mean_lat_s", "p50_lat_s", "p99_lat_s",
             "mean_ttft_s", "p99_ttft_s", "req/s", "preempt", "discard", "migrate", "kv_peak",
@@ -903,6 +1020,16 @@ impl BenchReport {
         if scale {
             headers.push("workers");
             headers.push("sim_steps");
+        }
+        if fleet {
+            headers.push("fail/s");
+            headers.push("scaler");
+            headers.push("crash");
+            headers.push("lost");
+            headers.push("shed");
+            headers.push("up");
+            headers.push("int_p99");
+            headers.push("bat_p99");
         }
         let mut t = Table::new(&headers);
         for r in &self.rows {
@@ -998,6 +1125,25 @@ impl BenchReport {
                     None => {
                         row.push(String::new());
                         row.push(String::new());
+                    }
+                }
+            }
+            if fleet {
+                match &r.fleet {
+                    Some(fr) => {
+                        row.push(f(fr.failure_rate, 2));
+                        row.push(if fr.autoscaler { "on" } else { "off" }.to_string());
+                        row.push(fr.crashes.to_string());
+                        row.push(fr.lost.to_string());
+                        row.push(fr.shed.to_string());
+                        row.push(format!("{}-{}", fr.up_min, fr.up_max));
+                        row.push(f(fr.interactive_p99_s, 3));
+                        row.push(f(fr.batch_p99_s, 3));
+                    }
+                    None => {
+                        for _ in 0..8 {
+                            row.push(String::new());
+                        }
                     }
                 }
             }

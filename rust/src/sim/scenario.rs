@@ -27,7 +27,8 @@ use crate::coordinator::{
 };
 use crate::obs::ObsConfig;
 use crate::sim::driver::{SimDriver, SimOutcome};
-use crate::sim::report::{BenchReport, FairnessRow, ObsRow, ScaleRow, SweepRow};
+use crate::sim::fleet::FleetConfig;
+use crate::sim::report::{BenchReport, FairnessRow, FleetRow, ObsRow, ScaleRow, SweepRow};
 use crate::testkit::PredictorSpec;
 use crate::workload::{TenantProfile, TraceEntry, TraceWorkload};
 
@@ -73,6 +74,11 @@ pub struct SimScenario {
     /// value is byte-identical to it, so this knob only ever buys wall
     /// clock.
     pub workers: usize,
+    /// Fleet-dynamics regime (docs/fleet.md). `None` — the default and
+    /// every pre-fleet scenario — serves through the ordinary driver
+    /// paths with homogeneous engines; `Some` routes the serve through
+    /// `SimDriver::run_fleet` and applies `cost_mults` per replica.
+    pub fleet: Option<FleetConfig>,
 }
 
 impl SimScenario {
@@ -96,6 +102,7 @@ impl SimScenario {
             prefix_cache: false,
             obs: ObsConfig::default(),
             workers: 1,
+            fleet: None,
         }
     }
 
@@ -134,6 +141,11 @@ impl SimScenario {
         self
     }
 
+    pub fn fleet(mut self, fleet: FleetConfig) -> SimScenario {
+        self.fleet = Some(fleet);
+        self
+    }
+
     /// Materialise this scenario's arrival trace.
     pub fn trace(&self, cfg: &Config) -> Vec<TraceEntry> {
         self.workload.generate(cfg, self.n, self.seed)
@@ -158,9 +170,22 @@ impl SimScenario {
                 self.slots
             );
         }
+        // Heterogeneous hardware generations: cycle the fleet config's
+        // cost multipliers over the replica index. `scaled(1.0)` (and
+        // the empty default) is bit-identical to the homogeneous cost.
+        let mults = self
+            .fleet
+            .as_ref()
+            .map(|f| f.cost_mults.as_slice())
+            .unwrap_or(&[]);
         (0..replicas)
             .map(|i| {
-                let backend = MockBackend::new(self.slots, cfg).with_cost(self.cost);
+                let cost = if mults.is_empty() {
+                    self.cost
+                } else {
+                    self.cost.scaled(mults[i % mults.len()])
+                };
+                let backend = MockBackend::new(self.slots, cfg).with_cost(cost);
                 let mut serve = ServeConfig::new(cfg, policy.clone());
                 serve.selector = self.selector;
                 serve.fairness = self.fairness.clone();
@@ -203,11 +228,14 @@ impl SimScenario {
         let engines = self.build_engines(cfg, policy, replicas);
         let mut driver =
             SimDriver::new(engines, self.dispatch, migration).with_workers(self.workers);
+        if let Some(fleet) = &self.fleet {
+            return driver.run_fleet(trace, fleet);
+        }
         driver.run_with_workers(trace)
     }
 }
 
-pub fn builtin_names() -> [&'static str; 17] {
+pub fn builtin_names() -> [&'static str; 20] {
     [
         "steady",
         "bursty",
@@ -226,6 +254,9 @@ pub fn builtin_names() -> [&'static str; 17] {
         "prefix-rag",
         "pred-steady",
         "pred-drift",
+        "fleet-steady",
+        "fleet-diurnal",
+        "fleet-flash",
     ]
 }
 
@@ -459,9 +490,115 @@ pub fn builtin(name: &str) -> Option<SimScenario> {
             s.n = 400;
             s
         }
+        // Chaos grid (BENCH_fleet.json, docs/fleet.md): two SLO-classed
+        // tenants — interactive (class 0, short) + batch (class 1, long)
+        // — on a 6-replica fleet of small slots, 4 in service at t=0 and
+        // two cold spares on slower hardware. Rates are tuned so 4
+        // replicas run hot (the autoscaler has a reason to exist) and 6
+        // comfortably clear. The sweep overrides failure_rate /
+        // autoscaler per cell on the identical trace.
+        "fleet-steady" | "fleet-diurnal" | "fleet-flash" => {
+            let interactive = match name {
+                "fleet-steady" => TenantProfile::steady("interactive", 180.0),
+                "fleet-diurnal" => TenantProfile::diurnal("interactive", 150.0, 2.0),
+                _ => TenantProfile::flash_crowd("interactive", 120.0, 1.0, 3.0, 1.0),
+            };
+            let mut s = SimScenario::new(
+                name,
+                TraceWorkload::new(vec![
+                    interactive.mu_shift(-0.3),
+                    TenantProfile::steady("batch", 40.0).mu_shift(0.8),
+                ]),
+            );
+            s.slots = 16;
+            s.pool_frac = 0.5;
+            s.seed = 606;
+            s.n = 600;
+            s.fleet = Some(chaos_fleet());
+            s
+        }
         _ => return None,
     };
     Some(s)
+}
+
+/// Replica count of every chaos cell: 4 in service at t = 0 plus two
+/// cold spares on slower hardware. Keep in sync with python/simref.py
+/// `FLEET_REPLICAS`.
+pub const FLEET_REPLICAS: usize = 6;
+/// Crash intensity of the failure-injected chaos cells (crashes/s over
+/// the fleet). Keep in sync with python/simref.py `FLEET_FAILURE_RATE`.
+pub const FLEET_FAILURE_RATE: f64 = 0.4;
+
+/// The chaos grid's fleet regime (docs/fleet.md): crash recovery in
+/// 2 s, redispatch on, a backlog autoscaler over 4..=6 replicas with a
+/// 0.75 s boot, 50 ms-stale dispatch snapshots, batch-class admission
+/// control, and two slow-generation spares. The sweep flips
+/// `failure_rate` and `autoscaler` per cell. Keep in sync with
+/// python/simref.py `chaos_fleet`.
+pub fn chaos_fleet() -> FleetConfig {
+    FleetConfig {
+        seed: 1337,
+        failure_rate: 0.0,
+        horizon_s: 30.0,
+        recovery_s: 2.0,
+        redispatch: true,
+        autoscaler: false,
+        min_replicas: 3,
+        max_replicas: 0,
+        initial_up: 4,
+        boot_delay_s: 0.75,
+        check_interval_s: 0.25,
+        up_backlog: 6.0,
+        down_backlog: 1.0,
+        stale_s: 0.05,
+        slo_classes: vec![0, 1],
+        shed_queue: 48,
+        degrade_queue: 32,
+        degrade_cap: 24,
+        cost_mults: vec![1.0, 1.0, 1.0, 1.0, 1.35, 1.35],
+    }
+}
+
+/// The checked-in chaos grid (`benchmarks/BENCH_fleet.json`, schema
+/// `trail.simlab.fleet/v1`; docs/fleet.md): each fleet scenario ×
+/// failure rate {0, [`FLEET_FAILURE_RATE`]} × autoscaler {off, on} at
+/// [`FLEET_REPLICAS`] replicas under TRAIL c=0.8, every cell of a
+/// scenario on the identical trace (and the failure cells on the
+/// identical crash schedule), so the autoscaler-on vs -off comparison
+/// is paired. Migration stays off — fleet dynamics owns request
+/// movement. Keep in sync with python/simref.py `fleet_rows`.
+pub fn run_fleet_sweep(cfg: &Config) -> Result<BenchReport> {
+    let policy = Policy::Trail { c: 0.8 };
+    let mut rows = Vec::new();
+    for name in ["fleet-steady", "fleet-diurnal", "fleet-flash"] {
+        let base = builtin(name).expect("builtin fleet scenario");
+        let trace = base.trace(cfg);
+        for failure_rate in [0.0, FLEET_FAILURE_RATE] {
+            for autoscaler in [false, true] {
+                let mut sc = base.clone();
+                let fleet = sc.fleet.as_mut().expect("fleet scenario has a fleet config");
+                fleet.failure_rate = failure_rate;
+                fleet.autoscaler = autoscaler;
+                let out = sc.run_trace(cfg, &policy, FLEET_REPLICAS, false, &trace)?;
+                let fr = FleetRow::from_outcome(
+                    out.fleet.as_ref().expect("run_fleet stamps the fleet outcome"),
+                );
+                let mut row = SweepRow::from_outcome_full(
+                    &sc,
+                    &policy,
+                    FLEET_REPLICAS,
+                    false,
+                    out,
+                    false,
+                    true,
+                );
+                row.fleet = Some(fr);
+                rows.push(row);
+            }
+        }
+    }
+    Ok(BenchReport::new_fleet(rows))
 }
 
 /// What `run_sweep` runs: scenarios × policies × replica counts.

@@ -108,6 +108,44 @@ impl TenantProfile {
         }
     }
 
+    /// Diurnal tenant: a smooth trough→peak→trough daily cycle
+    /// compressed into `period_s` seconds (six graded steps around the
+    /// base rate), cycling for the whole trace. The fleet autoscaler's
+    /// bread-and-butter input (docs/fleet.md).
+    pub fn diurnal(name: &str, rate: f64, period_s: f64) -> TenantProfile {
+        let step = period_s / 6.0;
+        TenantProfile {
+            name: name.to_string(),
+            rate,
+            mu_shift: 0.0,
+            phases: [0.5, 0.8, 1.3, 1.6, 1.3, 0.8]
+                .iter()
+                .map(|&m| RatePhase { rate_mult: m, duration: step })
+                .collect(),
+            prefix: None,
+            drift: None,
+        }
+    }
+
+    /// Flash-crowd tenant: baseline rate until `at`, a `mult`× spike for
+    /// `dur` seconds, then baseline forever (the terminal phase is long
+    /// enough to never cycle back into the spike). The chaos grid's
+    /// worst case when it lands on top of crash injection.
+    pub fn flash_crowd(name: &str, rate: f64, at: f64, mult: f64, dur: f64) -> TenantProfile {
+        TenantProfile {
+            name: name.to_string(),
+            rate,
+            mu_shift: 0.0,
+            phases: vec![
+                RatePhase { rate_mult: 1.0, duration: at },
+                RatePhase { rate_mult: mult, duration: dur },
+                RatePhase { rate_mult: 1.0, duration: 1e9 },
+            ],
+            prefix: None,
+            drift: None,
+        }
+    }
+
     pub fn mu_shift(mut self, mu_shift: f64) -> TenantProfile {
         self.mu_shift = mu_shift;
         self
@@ -366,6 +404,42 @@ mod tests {
             let cycle_pos = e.at % 2.0;
             assert!(cycle_pos <= 1.0 + 1e-9, "arrival in the off phase: {}", e.at);
         }
+    }
+
+    #[test]
+    fn diurnal_peak_outpaces_trough() {
+        // 6 graded phases over a 12s period: the 1.6x peak third of the
+        // cycle must collect visibly more arrivals than the 0.5x trough.
+        let w = TraceWorkload::new(vec![TenantProfile::diurnal("d", 20.0, 12.0)]);
+        let t = w.generate(&cfg(), 400, 17);
+        let (mut trough, mut peak) = (0usize, 0usize);
+        for e in &t {
+            let pos = e.at % 12.0;
+            if pos < 2.0 {
+                trough += 1;
+            } else if (6.0..8.0).contains(&pos) {
+                peak += 1;
+            }
+        }
+        assert!(
+            peak as f64 > trough as f64 * 2.0,
+            "peak phase must dominate trough: {peak} vs {trough}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_spikes_once_then_returns_to_baseline() {
+        let w = TraceWorkload::new(vec![TenantProfile::flash_crowd("f", 10.0, 4.0, 5.0, 2.0)]);
+        let t = w.generate(&cfg(), 300, 23);
+        let count = |lo: f64, hi: f64| t.iter().filter(|e| e.at >= lo && e.at < hi).count();
+        let before = count(0.0, 4.0) as f64 / 4.0;
+        let spike = count(4.0, 6.0) as f64 / 2.0;
+        let after = count(6.0, 10.0) as f64 / 4.0;
+        assert!(spike > before * 2.5, "spike must spike: {spike}/s vs {before}/s");
+        assert!(
+            after < spike / 2.5,
+            "rate must fall back after the spike: {after}/s vs {spike}/s"
+        );
     }
 
     #[test]

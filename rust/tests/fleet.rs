@@ -1,0 +1,224 @@
+//! Fleet-dynamics integration: chaos-grid determinism, inert-fleet
+//! bit-equality with the plain co-sim path, crash conservation,
+//! snapshot staleness, autoscaler recovery, heterogeneous hardware,
+//! and the merged fleet event stream. Everything is hermetic (embedded
+//! config, mock backend, virtual clocks); expected numbers come from
+//! the line-faithful python/simref.py mirror.
+
+use trail::config::Config;
+use trail::coordinator::Policy;
+use trail::obs::TraceKind;
+use trail::sim::{builtin, run_fleet_sweep, FleetConfig, FLEET_FAILURE_RATE, FLEET_REPLICAS};
+
+fn cfg() -> Config {
+    Config::embedded_default()
+}
+
+fn policy() -> Policy {
+    Policy::Trail { c: 0.8 }
+}
+
+#[test]
+fn chaos_grid_json_is_byte_identical_across_runs() {
+    let cfg = cfg();
+    let a = run_fleet_sweep(&cfg).unwrap().to_json_string();
+    let b = run_fleet_sweep(&cfg).unwrap().to_json_string();
+    assert_eq!(a, b, "chaos grid must be deterministic");
+    assert!(a.contains("\"schema\":\"trail.simlab.fleet/v1\""));
+    // 3 scenarios x failure {0, 0.4} x autoscaler {off, on}.
+    assert_eq!(a.matches("\"fleet\":{").count(), 12);
+}
+
+#[test]
+fn inert_fleet_config_matches_the_plain_cosim_path_exactly() {
+    // The default FleetConfig injects nothing (no crashes, no
+    // autoscaler, no staleness, no admission control, initial_up
+    // covering the whole fleet) — run_fleet must then reproduce the
+    // plain serial loop bit-for-bit, which is what keeps every
+    // pre-fleet baseline frozen.
+    let cfg = cfg();
+    let policy = policy();
+    let plain_sc = builtin("steady").unwrap().n(80);
+    let trace = plain_sc.trace(&cfg);
+    let plain = plain_sc.run_trace(&cfg, &policy, 3, false, &trace).unwrap();
+
+    let mut fleet_sc = builtin("steady").unwrap().n(80);
+    fleet_sc.fleet = Some(FleetConfig::default());
+    let fleet = fleet_sc.run_trace(&cfg, &policy, 3, false, &trace).unwrap();
+
+    assert!(plain.fleet.is_none());
+    let fo = fleet.fleet.as_ref().expect("run_fleet stamps the outcome");
+    assert_eq!(fo.crashes, 0);
+    assert_eq!(fo.lost + fo.shed + fo.degraded, 0);
+
+    assert_eq!(plain.n_requests, fleet.n_requests);
+    assert_eq!(plain.per_replica_finished, fleet.per_replica_finished);
+    assert_eq!(plain.preemptions, fleet.preemptions);
+    assert_eq!(plain.discards, fleet.discards);
+    assert_eq!(plain.n_iterations, fleet.n_iterations);
+    assert_eq!(plain.selector_ops, fleet.selector_ops);
+    assert_eq!(plain.kv_peak_tokens, fleet.kv_peak_tokens);
+    assert_eq!(plain.latency.mean().to_bits(), fleet.latency.mean().to_bits());
+    assert_eq!(plain.ttft.mean().to_bits(), fleet.ttft.mean().to_bits());
+    assert_eq!(plain.makespan.to_bits(), fleet.makespan.to_bits());
+}
+
+#[test]
+fn crash_storm_without_redispatch_conserves_every_arrival() {
+    // failure_rate 2.0 over a 30 s horizon fires a crash storm; with
+    // redispatch off every in-flight request at a dead replica is
+    // counted lost, and the driver's conservation check must still
+    // balance: finished + shed + lost == arrivals.
+    let cfg = cfg();
+    let policy = policy();
+    let mut sc = builtin("fleet-steady").unwrap();
+    {
+        let fl = sc.fleet.as_mut().unwrap();
+        fl.failure_rate = 2.0;
+        fl.redispatch = false;
+        fl.recovery_s = 0.5;
+    }
+    let out = sc.run(&cfg, &policy, FLEET_REPLICAS, false).unwrap();
+    let fo = out.fleet.as_ref().unwrap();
+    assert!(fo.crashes > 0, "storm must actually crash replicas");
+    assert!(fo.lost > 0, "no redispatch => in-flight work is lost");
+    assert!(fo.recoveries > 0, "recovery_s > 0 brings replicas back");
+    assert!(fo.up_min < fo.up_max);
+    assert_eq!(
+        out.n_requests as u64 + fo.shed + fo.lost,
+        fo.arrivals as u64,
+        "fleet accounting broke"
+    );
+}
+
+#[test]
+fn crash_and_recovery_events_land_in_the_merged_trace() {
+    // Fleet lifecycle events are driver-emitted (under the pseudo
+    // replica index n_rep) even with per-engine tracing off, so a
+    // chaos run always explains itself.
+    let cfg = cfg();
+    let policy = policy();
+    let mut sc = builtin("fleet-steady").unwrap();
+    sc.fleet.as_mut().unwrap().failure_rate = 2.0;
+    let out = sc.run(&cfg, &policy, FLEET_REPLICAS, false).unwrap();
+    let downs = out
+        .trace_events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::ReplicaDown { .. }))
+        .count() as u64;
+    let ups = out
+        .trace_events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::ReplicaUp { .. }))
+        .count() as u64;
+    let fo = out.fleet.as_ref().unwrap();
+    assert_eq!(downs, fo.crashes + fo.scale_downs);
+    assert_eq!(ups, fo.recoveries + fo.scale_ups);
+    assert!(downs > 0);
+    assert!(out
+        .trace_events
+        .iter()
+        .all(|e| e.rep == FLEET_REPLICAS as u32));
+}
+
+#[test]
+fn autoscaler_recovers_interactive_p99_under_flash_crowd_failures() {
+    // The headline chaos-grid comparison: fleet-flash at failure rate
+    // 0.4, autoscaler off vs on, on the identical trace and crash
+    // schedule. Scaling out the cold spares must pull interactive p99
+    // back down.
+    let cfg = cfg();
+    let policy = policy();
+    let base = builtin("fleet-flash").unwrap();
+    let trace = base.trace(&cfg);
+    let run_cell = |autoscaler: bool| {
+        let mut sc = base.clone();
+        let fl = sc.fleet.as_mut().unwrap();
+        fl.failure_rate = FLEET_FAILURE_RATE;
+        fl.autoscaler = autoscaler;
+        sc.run_trace(&cfg, &policy, FLEET_REPLICAS, false, &trace)
+            .unwrap()
+    };
+    let off = run_cell(false);
+    let on = run_cell(true);
+    let off_p99 = off.fleet.as_ref().unwrap().interactive_p99_s;
+    let on_fo = on.fleet.as_ref().unwrap();
+    assert!(on_fo.scale_ups > 0, "flash crowd must trigger scale-up");
+    assert!(
+        on_fo.interactive_p99_s < off_p99,
+        "autoscaler on ({} s) must beat off ({} s)",
+        on_fo.interactive_p99_s,
+        off_p99
+    );
+}
+
+#[test]
+fn stale_snapshots_change_dispatch_and_delay_zero_is_lockstep() {
+    // stale_s > 0 quantises the dispatcher's view of replica state to
+    // epoch boundaries — under jsq at chaos-grid load the decisions
+    // must actually diverge from fresh snapshots. stale_s = 0 is the
+    // fresh path and two runs of it stay in lockstep.
+    let cfg = cfg();
+    let policy = policy();
+    let base = builtin("fleet-steady").unwrap();
+    let trace = base.trace(&cfg);
+    let run_stale = |stale_s: f64| {
+        let mut sc = base.clone();
+        let fl = sc.fleet.as_mut().unwrap();
+        fl.failure_rate = 0.0;
+        fl.stale_s = stale_s;
+        sc.run_trace(&cfg, &policy, FLEET_REPLICAS, false, &trace)
+            .unwrap()
+    };
+    let fresh_a = run_stale(0.0);
+    let fresh_b = run_stale(0.0);
+    let stale = run_stale(0.05);
+    assert_eq!(fresh_a.per_replica_finished, fresh_b.per_replica_finished);
+    assert_eq!(
+        fresh_a.latency.mean().to_bits(),
+        fresh_b.latency.mean().to_bits()
+    );
+    assert_ne!(
+        fresh_a.per_replica_finished, stale.per_replica_finished,
+        "50 ms staleness must change at least one jsq decision"
+    );
+}
+
+#[test]
+fn heterogeneous_cost_multipliers_slow_the_fleet() {
+    // cost_mults scale every cost constant per replica; a uniformly
+    // 2x-slower fleet must take longer, and mult 1.0 must be
+    // bit-identical to the empty (homogeneous) default.
+    let cfg = cfg();
+    let policy = policy();
+    let base = builtin("fleet-steady").unwrap();
+    let trace = base.trace(&cfg);
+    let run_mults = |mults: Vec<f64>| {
+        let mut sc = base.clone();
+        let fl = sc.fleet.as_mut().unwrap();
+        fl.failure_rate = 0.0;
+        fl.cost_mults = mults;
+        sc.run_trace(&cfg, &policy, FLEET_REPLICAS, false, &trace)
+            .unwrap()
+    };
+    let homo = run_mults(vec![]);
+    let unit = run_mults(vec![1.0]);
+    let slow = run_mults(vec![2.0]);
+    assert_eq!(homo.makespan.to_bits(), unit.makespan.to_bits());
+    assert_eq!(homo.per_replica_finished, unit.per_replica_finished);
+    assert!(
+        slow.makespan > homo.makespan,
+        "2x cost must stretch the makespan ({} vs {})",
+        slow.makespan,
+        homo.makespan
+    );
+}
+
+#[test]
+fn fleet_rejects_migration_and_affinity_dispatch() {
+    let cfg = cfg();
+    let policy = policy();
+    let sc = builtin("fleet-steady").unwrap();
+    let err = sc.run(&cfg, &policy, FLEET_REPLICAS, true).unwrap_err();
+    assert!(err.to_string().contains("migration"));
+}

@@ -58,9 +58,12 @@ fn every_scenario_policy_cell_completes() {
     let cfg = cfg();
     for name in builtin_names() {
         let sc = builtin(name).unwrap().n(40);
+        // Fleet dynamics owns request movement — its scenarios run with
+        // migration off (run_fleet rejects the combination).
+        let migration = sc.fleet.is_none();
         for policy in [Policy::Fcfs, Policy::Trail { c: 1.0 }, Policy::Trail { c: 0.8 }] {
             for replicas in [1usize, 3] {
-                let out = sc.run(&cfg, &policy, replicas, true).unwrap();
+                let out = sc.run(&cfg, &policy, replicas, migration).unwrap();
                 assert_eq!(
                     out.n_requests, 40,
                     "{name}/{}/{replicas} lost requests",
